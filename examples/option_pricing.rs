@@ -1,0 +1,49 @@
+//! Monte-Carlo option pricing end-to-end (paper Sec. 6, Fig. 9): prices a
+//! ladder of strikes on the AOT Pallas tile path and checks every price
+//! against the Black–Scholes closed form.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example option_pricing
+//! ```
+
+use thundering::apps::{black_scholes_call, option_pricing};
+use thundering::runtime::executor::TileExecutor;
+use thundering::runtime::BsParams;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts =
+        std::env::var("THUNDERING_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let guard = TileExecutor::spawn(artifacts, 4)?;
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+    let draws = 1u64 << 24;
+
+    // Strike ladder around the money.
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>10}",
+        "strike", "MC (pjrt)", "closed form", "|err|", "time (s)"
+    );
+    for strike in [80.0f32, 90.0, 100.0, 110.0, 120.0] {
+        let params = BsParams { k: strike, ..Default::default() };
+        let run = option_pricing::run_pjrt(&guard.executor, draws, 42, params)?;
+        let closed = black_scholes_call(100.0, strike as f64, 0.05, 0.2, 1.0);
+        println!(
+            "{:>8.1} {:>12.4} {:>12.4} {:>10.2e} {:>10.4}",
+            strike,
+            run.result,
+            closed,
+            (run.result - closed).abs(),
+            run.seconds
+        );
+    }
+
+    // Native engine cross-check at the money.
+    let native = option_pricing::run_native(threads, draws, 42, BsParams::default())?;
+    println!(
+        "\nnative engine: {:.4} ({} draws in {:.3}s, {:.1} Mdraw/s)",
+        native.result,
+        native.draws,
+        native.seconds,
+        native.draws_per_sec() / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Quality report: run the MiniCrush battery (Table 2's engine) on
+//! ThundeRiNG and the comparator set, single-stream and interleaved.
+//!
+//! ```sh
+//! cargo run --release --example quality_report [-- --scale standard]
+//! ```
+
+use thundering::report;
+use thundering::stats::Scale;
+use thundering::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["scale", "cap"])?;
+    let scale = Scale::parse(args.get_or("scale", "quick"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scale (quick|standard|deep)"))?;
+    let cap = args.get_u64("cap", 1 << 24)?;
+
+    // Per-generator detailed battery for the flagship.
+    print!("{}", report::quality_one("thundering", scale)?);
+    println!();
+
+    // The full Table 2 protocol.
+    print!("{}", report::table2(scale, cap)?);
+    Ok(())
+}

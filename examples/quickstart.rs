@@ -1,0 +1,50 @@
+//! Quickstart: create a MISRN coordinator, register streams, fetch numbers.
+//!
+//! Runs on the native engine by default; pass `--pjrt` (with `make
+//! artifacts` done) to serve from the AOT Pallas tiles instead.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [-- --pjrt]
+//! ```
+
+use thundering::coordinator::{Config, Coordinator, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let engine = if use_pjrt {
+        Engine::Pjrt {
+            artifacts_dir: std::env::var("THUNDERING_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".into()),
+        }
+    } else {
+        Engine::Native
+    };
+
+    // 128 independent streams in two state-sharing groups of 64.
+    let coordinator = Coordinator::new(
+        Config { engine, group_width: 64, rows_per_tile: 1024, ..Default::default() },
+        128,
+    )?;
+
+    println!("engine artifact: {:?}", coordinator.artifact());
+
+    // Every stream is an independent, crush-resistant sequence.
+    for stream in [0u64, 1, 64, 127] {
+        let spec = coordinator.spec(stream).unwrap();
+        let mut buf = [0u32; 8];
+        coordinator.fetch(stream, &mut buf)?;
+        println!("stream {:>3} (h = {:#018x}): {:?}", stream, spec.h, buf);
+    }
+
+    // Monte-Carlo-style consumption: one whole group advancing in lockstep.
+    let block = coordinator.fetch_group_block(1, 1024)?;
+    let mean = block.iter().map(|&v| v as f64).sum::<f64>() / block.len() as f64;
+    println!(
+        "group block: {} numbers, mean/2^32 = {:.4} (expect ~0.5)",
+        block.len(),
+        mean / 2f64.powi(32)
+    );
+
+    println!("metrics: {}", coordinator.metrics());
+    Ok(())
+}

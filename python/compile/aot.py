@@ -1,0 +1,123 @@
+"""AOT compile path: lower every Layer-2 graph to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+Rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; the Rust binary is self-contained afterwards.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import params as P  # noqa: E402
+
+# (kind, block, p, tiles) for every artifact we ship. Tile variants give the
+# Rust coordinator a small menu of shapes to route batches onto.
+ARTIFACTS = [
+    ("thundering", 256, 64, 1),
+    ("thundering", 1024, 64, 1),
+    ("thundering", 256, 256, 1),
+    ("thundering", 1024, 256, 1),
+    ("thundering_scan", 1024, 64, 8),
+    ("thundering_scan", 1024, 256, 8),
+    ("lcg_only", 1024, 64, 1),
+    ("philox", 1024, 64, 1),
+    ("pi", 1024, 256, 1),
+    ("bs", 1024, 256, 1),
+]
+
+
+def build_fn(kind: str, block: int, p: int, tiles: int):
+    if kind == "thundering":
+        return model.thundering_tile_fn(block, p)
+    if kind == "thundering_scan":
+        return model.thundering_scan_fn(block, p, tiles)
+    if kind == "lcg_only":
+        return model.lcg_only_tile_fn(block, p)
+    if kind == "philox":
+        return model.philox_tile_fn(block, p)
+    if kind == "pi":
+        return model.pi_tile_fn(block, p)
+    if kind == "bs":
+        return model.bs_tile_fn(block, p)
+    raise ValueError(kind)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def artifact_name(kind: str, block: int, p: int, tiles: int) -> str:
+    if kind == "thundering_scan":
+        return f"thundering_scan_b{block}_p{p}_t{tiles}"
+    if kind in ("pi", "bs"):
+        return f"{kind}_tile"
+    return f"{kind}_b{block}_p{p}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "lcg": {"a": str(P.LCG_A), "c": str(P.LCG_C), "m_bits": 64},
+        "xorshift128": {
+            "seed": list(P.XS128_SEED),
+            "substream_stride_log2": 64,
+        },
+        "leaf": {
+            "golden": str(P.LEAF_GOLDEN),
+            "note": "h_i = 2*(i*golden mod 2^63); even per Hull-Dobell, spread per DESIGN.md",
+        },
+        "output": "xsh_rr_64_32 XOR xorshift128",
+        "artifacts": {},
+    }
+
+    for kind, block, p, tiles in ARTIFACTS:
+        name = artifact_name(kind, block, p, tiles)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        fn = build_fn(kind, block, p, tiles)
+        lowered = jax.jit(fn).lower(*model.example_args(kind, block, p))
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "kind": kind,
+            "block": block,
+            "p": p,
+            "tiles": tiles,
+            "rows": block * tiles,
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Compile-time parameter derivation for ThundeRiNG.
+
+Everything in this module runs at trace/compile time with plain Python
+integers (the analogue of the paper's compile-time derivation of advance-i
+recurrence parameters, Brown 1994, and of the leaf constants h_i, Sec. 3.3).
+Nothing here ends up on the request path: the outputs are baked into the HLO
+as constants or handed to the Rust coordinator through the manifest.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Root LCG parameters (paper Sec. 5.1.2).
+#
+# m = 2^64, a = 6364136223846793005. The paper prints c = 54, but Sec. 3.3
+# requires the root increment to be odd (Hull-Dobell; the leaf increments
+# l*m + c - a*h inherit oddness from c when h is even). 54 is even, so we
+# treat it as a typo and use 55. See DESIGN.md Sec. 2.
+# ---------------------------------------------------------------------------
+M64 = 1 << 64
+MASK64 = M64 - 1
+LCG_A = 6364136223846793005
+LCG_C = 55
+
+XS128_PERIOD = (1 << 128) - 1
+# Paper: xorshift128 substreams spaced >= 2^63 apart guarantee non-overlap
+# for up to 2^64 streams; we use a 2^64 stride.
+XS128_STRIDE = 1 << 64
+
+
+def lcg_advance(k: int, a: int = LCG_A, c: int = LCG_C, m: int = M64):
+    """Parameters (a_k, c_k) of the advance-k recurrence.
+
+    x_{n+k} = a_k * x_n + c_k  (mod m), derived with Brown's O(log k)
+    square-and-multiply on the affine map (a, c).
+    """
+    a_k, c_k = 1, 0
+    a_cur, c_cur = a % m, c % m
+    k = int(k)
+    while k > 0:
+        if k & 1:
+            a_k, c_k = (a_cur * a_k) % m, (a_cur * c_k + c_cur) % m
+        # square the affine map: (a,c) o (a,c) = (a^2, a*c + c)
+        a_cur, c_cur = (a_cur * a_cur) % m, (a_cur * c_cur + c_cur) % m
+        k >>= 1
+    return a_k, c_k
+
+
+def lcg_block_constants(block: int, a: int = LCG_A, c: int = LCG_C):
+    """Vectors A[j], C[j] with x_{n+1+j} = A[j]*x_n + C[j], j in [0, block).
+
+    This is the widened form of the paper's advance-6 interleave: the root
+    multiply happens once per *block* as a vector op, constant w.r.t. the
+    number of streams p.
+    """
+    A = np.empty(block, dtype=np.uint64)
+    C = np.empty(block, dtype=np.uint64)
+    a_k, c_k = a % M64, c % M64  # advance-1
+    for j in range(block):
+        A[j] = a_k
+        C[j] = c_k
+        a_k, c_k = (a * a_k) % M64, (a * c_k + c) % M64
+    return A, C
+
+
+# Golden-ratio multiplier for the leaf schedule (odd, so i -> i*GOLDEN is a
+# bijection mod 2^63).
+LEAF_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def leaf_h(i: int) -> int:
+    """Leaf constant of stream i: h_i = 2 * (i * GOLDEN mod 2^63).
+
+    Sec. 3.3 requires h even (so the induced leaf increment stays odd and
+    Hull-Dobell guarantees a full period) and distinct. We additionally
+    *spread* the h_i across the full 64-bit space: clustered constants
+    (e.g. 0,2,4,...) leave the leaf states nearly identical in the bits the
+    XSH-RR permutation samples, so the permuted-LCG component cancels
+    between streams and the burden falls entirely on the decorrelator —
+    measurably weakening inter-stream quality (see DESIGN.md Sec. 2).
+    Multiplication by an odd constant mod 2^63 is a bijection, so h_i are
+    distinct for all i < 2^63.
+    """
+    return ((i * LEAF_GOLDEN) % (1 << 63)) * 2
+
+
+def leaf_increments(p: int, first_stream: int = 0):
+    """(p,) uint64 leaf constants for streams first_stream..first_stream+p."""
+    h = np.array([leaf_h(first_stream + i) for i in range(p)], dtype=np.uint64)
+    assert np.all(h % np.uint64(2) == np.uint64(0))
+    assert len(set(h.tolist())) == p
+    return h
+
+
+# ---------------------------------------------------------------------------
+# xorshift128 (Marsaglia 2003) — the decorrelator. 4 x 32-bit state.
+# Substream spacing via F2-linear jump-ahead: the step map is linear over
+# GF(2)^128, so jumping k steps is multiplication by the k-th power of the
+# 128x128 transition matrix. Computed here once at compile time.
+# ---------------------------------------------------------------------------
+XS_MASK32 = 0xFFFFFFFF
+
+
+def xs128_step_int(s: int) -> int:
+    """One xorshift128 step on the state packed as a 128-bit int
+    (x = bits 0..31, y = 32..63, z = 64..95, w = 96..127)."""
+    x = s & XS_MASK32
+    y = (s >> 32) & XS_MASK32
+    z = (s >> 64) & XS_MASK32
+    w = (s >> 96) & XS_MASK32
+    t = (x ^ ((x << 11) & XS_MASK32)) & XS_MASK32
+    new_w = (w ^ (w >> 19) ^ t ^ (t >> 8)) & XS_MASK32
+    return y | (z << 32) | (w << 64) | (new_w << 96)
+
+
+def _xs128_matrix() -> list[int]:
+    """Transition matrix as 128 column images: mat[i] = step(e_i)."""
+    return [xs128_step_int(1 << i) for i in range(128)]
+
+
+def _mat_vec(mat: list[int], v: int) -> int:
+    r = 0
+    i = 0
+    while v:
+        if v & 1:
+            r ^= mat[i]
+        v >>= 1
+        i += 1
+    return r
+
+
+def _mat_mul(m2: list[int], m1: list[int]) -> list[int]:
+    """(m2 o m1): apply m1 then m2."""
+    return [_mat_vec(m2, m1[i]) for i in range(128)]
+
+
+_JUMP_CACHE: dict[int, list[int]] = {}
+
+
+def xs128_jump_matrix(k: int) -> list[int]:
+    """Matrix of the k-step map (cached per power of two)."""
+    mat = [1 << i for i in range(128)]  # identity
+    sq = _xs128_matrix()
+    bit = 0
+    while (1 << bit) <= k:
+        if k & (1 << bit):
+            if bit not in _JUMP_CACHE:
+                # build power-of-two matrices up to `bit`
+                cur = _xs128_matrix()
+                _JUMP_CACHE[0] = cur
+                for b in range(1, bit + 1):
+                    cur = _JUMP_CACHE.get(b) or _mat_mul(_JUMP_CACHE[b - 1], _JUMP_CACHE[b - 1])
+                    _JUMP_CACHE[b] = cur
+            mat = _mat_mul(_JUMP_CACHE[bit], mat)
+        bit += 1
+    del sq
+    return mat
+
+
+def xs128_jump(state4: tuple[int, int, int, int], k: int) -> tuple[int, int, int, int]:
+    """Jump a (x, y, z, w) state k steps ahead."""
+    x, y, z, w = state4
+    s = (x & XS_MASK32) | ((y & XS_MASK32) << 32) | ((z & XS_MASK32) << 64) | ((w & XS_MASK32) << 96)
+    s = _mat_vec(xs128_jump_matrix(k), s)
+    return (
+        s & XS_MASK32,
+        (s >> 32) & XS_MASK32,
+        (s >> 64) & XS_MASK32,
+        (s >> 96) & XS_MASK32,
+    )
+
+
+# Fixed global xorshift seed; per-stream states are substreams of this one
+# master sequence (paper Sec. 3.2.3 / 5.1.2).
+XS128_SEED = (0x6C078965, 0x9908B0DF, 0x9D2C5680, 0xEFC60000)
+
+
+def splitmix64(seed: int):
+    """splitmix64 — used only to derive auxiliary seeds deterministically."""
+    z = (seed + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def xs128_stream_states(p: int, first_stream: int = 0) -> np.ndarray:
+    """(4, p) uint32 array of decorrelator states for p consecutive streams.
+
+    Stream i sits XS128_STRIDE * (first_stream + i) steps into the master
+    xorshift128 sequence — guaranteed non-overlapping substreams.
+    """
+    out = np.empty((4, p), dtype=np.uint32)
+    base = xs128_jump(XS128_SEED, (XS128_STRIDE * first_stream) % XS128_PERIOD)
+    stride_mat = xs128_jump_matrix(XS128_STRIDE % XS128_PERIOD)
+    s = (base[0]) | (base[1] << 32) | (base[2] << 64) | (base[3] << 96)
+    for i in range(p):
+        out[0, i] = s & XS_MASK32
+        out[1, i] = (s >> 32) & XS_MASK32
+        out[2, i] = (s >> 64) & XS_MASK32
+        out[3, i] = (s >> 96) & XS_MASK32
+        s = _mat_vec(stride_mat, s)
+    return out

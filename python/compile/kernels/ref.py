@@ -1,0 +1,150 @@
+"""Pure-numpy correctness oracle for every kernel.
+
+Scalar-faithful (python-int / numpy-loop) semantics — intentionally slow and
+obvious. pytest checks the Pallas kernels against these bit-for-bit; the Rust
+known-answer vectors are generated from these too.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import params as P
+
+MASK64 = P.MASK64
+MASK32 = 0xFFFFFFFF
+
+
+def lcg_step(x: int, a: int = P.LCG_A, c: int = P.LCG_C) -> int:
+    return (a * x + c) & MASK64
+
+
+def xsh_rr(w: int) -> int:
+    """PCG XSH-RR 64->32 output permutation (O'Neill 2014; paper Sec. 3.4)."""
+    xored = (((w >> 18) ^ w) >> 27) & MASK32
+    rot = (w >> 59) & 31
+    return ((xored >> rot) | (xored << ((32 - rot) & 31))) & MASK32
+
+
+def xs128_step(s: tuple[int, int, int, int]):
+    """One xorshift128 step; returns (new_state, output)."""
+    x, y, z, w = s
+    t = (x ^ ((x << 11) & MASK32)) & MASK32
+    new_w = (w ^ (w >> 19) ^ t ^ (t >> 8)) & MASK32
+    return (y, z, w, new_w), new_w
+
+
+def thundering_tile_ref(root: int, h: np.ndarray, xs: np.ndarray, block: int):
+    """Reference for the ThundeRiNG tile kernel.
+
+    Args:
+      root: current root state (python int, < 2^64)
+      h:    (p,) uint64 leaf constants
+      xs:   (4, p) uint32 decorrelator states
+    Returns:
+      out   (block, p) uint32 random numbers
+      root' next root state (int)
+      xs'   (4, p) uint32 next decorrelator states
+    """
+    p = h.shape[0]
+    out = np.empty((block, p), dtype=np.uint32)
+    xs_s = [tuple(int(xs[k, i]) for k in range(4)) for i in range(p)]
+    x = int(root)
+    for n in range(block):
+        x = lcg_step(x)
+        for i in range(p):
+            w = (x + int(h[i])) & MASK64
+            u = xsh_rr(w)
+            xs_s[i], k_out = xs128_step(xs_s[i])
+            out[n, i] = (u ^ k_out) & MASK32
+    xs_next = np.array([[xs_s[i][k] for i in range(p)] for k in range(4)], dtype=np.uint32)
+    return out, x, xs_next
+
+
+def lcg_only_tile_ref(root: int, h: np.ndarray, block: int):
+    """Ablation: leaf LCG streams, high-32-bit truncation output (no
+    permutation, no decorrelation) — the 'LCG Baseline' column of Tables 3/4."""
+    p = h.shape[0]
+    out = np.empty((block, p), dtype=np.uint32)
+    x = int(root)
+    for n in range(block):
+        x = lcg_step(x)
+        for i in range(p):
+            w = (x + int(h[i])) & MASK64
+            out[n, i] = (w >> 32) & MASK32
+    return out, x
+
+
+def uniforms_f32(u32: np.ndarray) -> np.ndarray:
+    """u32 -> f32 in [0, 1) using the top 24 bits (exactly representable)."""
+    return ((u32 >> np.uint32(8)).astype(np.float32)) * np.float32(2.0**-24)
+
+
+def pi_tile_ref(root: int, h: np.ndarray, xs: np.ndarray, block: int):
+    """Reference for the pi-estimation tile: rows 2n are x-coords, rows 2n+1
+    are y-coords; returns in-circle count over block//2 * p draws."""
+    out, root2, xs2 = thundering_tile_ref(root, h, xs, block)
+    u = uniforms_f32(out[0::2, :])
+    v = uniforms_f32(out[1::2, :])
+    hits = int(np.sum((u * u + v * v) < np.float32(1.0)))
+    return hits, root2, xs2
+
+
+def box_muller(u1: np.ndarray, u2: np.ndarray):
+    """z = sqrt(-2 ln u1') cos(2 pi u2), u1' shifted away from 0."""
+    u1 = np.maximum(u1, np.float32(2.0**-24)).astype(np.float32)
+    r = np.sqrt(np.float32(-2.0) * np.log(u1)).astype(np.float32)
+    return (r * np.cos(np.float32(2.0 * np.pi) * u2)).astype(np.float32)
+
+
+def bs_tile_ref(root: int, h: np.ndarray, xs: np.ndarray, block: int,
+                s0: float, k: float, r: float, sigma: float, t: float):
+    """Reference for the Black-Scholes MC option-pricing tile: returns the
+    sum of discounted call payoffs over block//2 * p terminal-price draws."""
+    out, root2, xs2 = thundering_tile_ref(root, h, xs, block)
+    u1 = uniforms_f32(out[0::2, :])
+    u2 = uniforms_f32(out[1::2, :])
+    z = box_muller(u1, u2)
+    s0, k, r, sigma, t = (np.float32(v) for v in (s0, k, r, sigma, t))
+    st = (s0 * np.exp((r - np.float32(0.5) * sigma * sigma) * t
+                      + sigma * np.sqrt(t) * z)).astype(np.float32)
+    payoff = np.maximum(st - k, np.float32(0.0)) * np.exp(-r * t)
+    return float(np.sum(payoff.astype(np.float32))), root2, xs2
+
+
+# ---------------------------------------------------------------------------
+# Philox4x32-10 (Salmon et al. 2011) — the multistream comparator baseline.
+# ---------------------------------------------------------------------------
+PHILOX_M0 = 0xD2511F53
+PHILOX_M1 = 0xCD9E8D57
+PHILOX_W0 = 0x9E3779B9
+PHILOX_W1 = 0xBB67AE85
+
+
+def philox4x32_10(ctr: tuple[int, int, int, int], key: tuple[int, int]):
+    c0, c1, c2, c3 = ctr
+    k0, k1 = key
+    for _ in range(10):
+        p0 = PHILOX_M0 * c0
+        p1 = PHILOX_M1 * c2
+        h0, l0 = (p0 >> 32) & MASK32, p0 & MASK32
+        h1, l1 = (p1 >> 32) & MASK32, p1 & MASK32
+        c0, c1, c2, c3 = (h1 ^ c1 ^ k0) & MASK32, l1, (h0 ^ c3 ^ k1) & MASK32, l0
+        k0 = (k0 + PHILOX_W0) & MASK32
+        k1 = (k1 + PHILOX_W1) & MASK32
+    return c0, c1, c2, c3
+
+
+def philox_tile_ref(ctr_base: int, key: tuple[int, int], block: int, p: int):
+    """(block, p) uint32 tile: stream i uses key (key0 + i, key1); rows map
+    to consecutive counters, 4 outputs per counter."""
+    assert block % 4 == 0
+    out = np.empty((block, p), dtype=np.uint32)
+    for i in range(p):
+        ki = ((key[0] + i) & MASK32, key[1])
+        for n in range(block // 4):
+            c = ctr_base + n
+            r = philox4x32_10((c & MASK32, (c >> 32) & MASK32, 0, 0), ki)
+            for j in range(4):
+                out[4 * n + j, i] = r[j]
+    return out

@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: the ThundeRiNG tile generator.
+
+One kernel invocation produces a (block, p) tile of uint32 random numbers —
+`p` independent streams advanced `block` steps — plus the carried state
+(next root state, next decorrelator states). The Layer-3 Rust coordinator
+threads the state across successive invocations, exactly like the FPGA's
+registers carry it across cycles.
+
+Hardware-adaptation notes (DESIGN.md Sec. 3):
+  * The root-state recurrence is evaluated as one *vector* multiply per block
+    using compile-time jump-ahead constants A[j], C[j] (x_{n+1+j} =
+    A[j]*x_n + C[j]) — the widened form of the paper's advance-6 interleave.
+    Multiplication cost is therefore constant w.r.t. p, the paper's
+    "one multiplier for any number of instances" claim restated for a
+    vector machine.
+  * Leaf transition, XSH-RR permutation, and xorshift128 decorrelation are
+    pure lane-wise VPU ops (add/shift/xor/rotate) — no MXU usage, the
+    analogue of SOUs consuming LUT/FF only.
+  * The xorshift128 decorrelator is stepped with a lax.scan over rows —
+    mirroring the FPGA pipeline's one-output-per-cycle LFSR — with all p
+    lanes advancing in parallel.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls; the
+real-TPU mapping is estimated analytically in DESIGN.md / EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import params as P
+
+
+def _rotr32(v, r):
+    """Bitwise right-rotate of uint32 lanes by per-lane amounts r in [0, 32)."""
+    r = r & jnp.uint32(31)
+    return (v >> r) | (v << ((jnp.uint32(32) - r) & jnp.uint32(31)))
+
+
+def xsh_rr(w):
+    """PCG XSH-RR 64->32 output permutation on uint64 lanes (Sec. 3.4)."""
+    xored = (((w >> jnp.uint64(18)) ^ w) >> jnp.uint64(27)).astype(jnp.uint32)
+    rot = (w >> jnp.uint64(59)).astype(jnp.uint32)
+    return _rotr32(xored, rot)
+
+
+def xs128_rows(xs0, block: int):
+    """Advance p parallel xorshift128 decorrelators `block` steps.
+
+    xs0: (4, p) uint32. Returns (ks: (block, p) uint32 outputs,
+    xs': (4, p) uint32 final states).
+    """
+    def body(s, _):
+        x, y, z, w = s
+        t = x ^ (x << jnp.uint32(11))
+        new_w = w ^ (w >> jnp.uint32(19)) ^ t ^ (t >> jnp.uint32(8))
+        return (y, z, w, new_w), new_w
+
+    s0 = (xs0[0], xs0[1], xs0[2], xs0[3])
+    # unroll=4 measured 3.3x faster than unroll=1 on the XLA-CPU while-loop
+    # (EXPERIMENTS.md §Perf L1); the recurrence itself is inherently
+    # sequential (each step's w feeds the x lane four steps later), so
+    # unrolling only amortizes loop overhead — 4 matches the state depth.
+    s_fin, ks = jax.lax.scan(body, s0, None, length=block, unroll=4)
+    return ks, jnp.stack(s_fin)
+
+
+def _thundering_kernel(a_ref, c_ref, root_ref, h_ref, xs_ref,
+                       out_ref, root2_ref, xs2_ref, *, block: int):
+    root = root_ref[0]
+    # Root transition: one vector multiply per block (shared across all p
+    # streams — the state-sharing mechanism). A/C are compile-time jump-ahead
+    # constants (Pallas requires array constants to flow in as inputs).
+    xblock = a_ref[...] * root + c_ref[...]                 # u64[block]
+    # Leaf transition: w[n, i] = x_n + h_i (outer add, VPU only).
+    w = xblock[:, None] + h_ref[...][None, :]               # u64[block, p]
+    u = xsh_rr(w)                                           # u32[block, p]
+    # Decorrelation: XOR with the xorshift128 substream outputs.
+    ks, xs_fin = xs128_rows(xs_ref[...], block)
+    out_ref[...] = u ^ ks
+    root2_ref[0] = xblock[block - 1]
+    xs2_ref[...] = xs_fin
+
+
+@functools.lru_cache(maxsize=None)
+def make_thundering_tile(block: int, p: int):
+    """Build the jit-able tile function f(root, h, xs) -> (out, root', xs')."""
+    A_np, C_np = P.lcg_block_constants(block)
+
+    kernel = functools.partial(_thundering_kernel, block=block)
+    call = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((block, p), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint64),
+            jax.ShapeDtypeStruct((4, p), jnp.uint32),
+        ],
+        interpret=True,
+    )
+
+    def tile(root, h, xs):
+        out, root2, xs2 = call(jnp.asarray(A_np), jnp.asarray(C_np), root, h, xs)
+        return out, root2, xs2
+
+    return tile
+
+
+def make_lcg_only_tile(block: int, p: int):
+    """Ablation tile: raw leaf LCG streams with high-32 truncation (no
+    permutation / decorrelation). Used by quality-ablation artifacts."""
+    A_np, C_np = P.lcg_block_constants(block)
+
+    def kernel(a_ref, c_ref, root_ref, h_ref, out_ref, root2_ref):
+        xblock = a_ref[...] * root_ref[0] + c_ref[...]
+        w = xblock[:, None] + h_ref[...][None, :]
+        out_ref[...] = (w >> jnp.uint64(32)).astype(jnp.uint32)
+        root2_ref[0] = xblock[block - 1]
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((block, p), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint64),
+        ],
+        interpret=True,
+    )
+
+    def tile(root, h):
+        return call(jnp.asarray(A_np), jnp.asarray(C_np), root, h)
+
+    return tile

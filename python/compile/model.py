@@ -1,0 +1,146 @@
+"""Layer-2 JAX graphs — the computations that get AOT-lowered to HLO.
+
+Each exported function composes the Layer-1 Pallas kernels with plain-jnp
+glue (uniform conversion, Box-Muller, reductions). Python never runs at
+request time: these graphs are lowered once by aot.py and executed from the
+Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import params as P  # noqa: E402
+from .kernels.philox import make_philox_tile  # noqa: E402
+from .kernels.thundering import make_lcg_only_tile, make_thundering_tile  # noqa: E402
+
+TWO_PI = 6.283185307179586
+
+
+def uniforms_f32(u32):
+    """uint32 -> f32 in [0, 1): top 24 bits, exactly representable."""
+    return (u32 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def box_muller(u1, u2):
+    u1 = jnp.maximum(u1, jnp.float32(2.0**-24))
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(TWO_PI) * u2)
+
+
+def thundering_tile_fn(block: int, p: int):
+    """(root u64[1], h u64[p], xs u32[4,p]) -> (out u32[block,p], root', xs')."""
+    tile = make_thundering_tile(block, p)
+
+    def fn(root, h, xs):
+        return tuple(tile(root, h, xs))
+
+    return fn
+
+
+def thundering_scan_fn(block: int, p: int, tiles: int):
+    """Multi-tile variant: scans the tile kernel `tiles` times, returning a
+    (tiles*block, p) batch. Amortizes PJRT dispatch on the Rust hot path."""
+    tile = make_thundering_tile(block, p)
+
+    def fn(root, h, xs):
+        def body(carry, _):
+            root, xs = carry
+            out, root2, xs2 = tile(root, h, xs)
+            return (root2, xs2), out
+
+        (root2, xs2), outs = jax.lax.scan(body, (root, xs), None, length=tiles)
+        return outs.reshape(tiles * block, p), root2, xs2
+
+    return fn
+
+
+def lcg_only_tile_fn(block: int, p: int):
+    """Ablation graph (no permutation / decorrelation)."""
+    tile = make_lcg_only_tile(block, p)
+
+    def fn(root, h):
+        return tuple(tile(root, h))
+
+    return fn
+
+
+def philox_tile_fn(block: int, p: int):
+    """(ctr u64[1], key u32[2]) -> out u32[block,p]."""
+    tile = make_philox_tile(block, p)
+
+    def fn(ctr, key):
+        return (tile(ctr, key),)
+
+    return fn
+
+
+def pi_tile_fn(block: int, p: int):
+    """Monte-Carlo pi tile: block//2 * p draws; returns the in-circle count.
+
+    (root, h, xs) -> (hits u32[], root', xs')
+    """
+    tile = make_thundering_tile(block, p)
+
+    def fn(root, h, xs):
+        out, root2, xs2 = tile(root, h, xs)
+        u = uniforms_f32(out[0::2, :])
+        v = uniforms_f32(out[1::2, :])
+        hits = jnp.sum(
+            (u * u + v * v < jnp.float32(1.0)).astype(jnp.uint32), dtype=jnp.uint32
+        )
+        return hits, root2, xs2
+
+    return fn
+
+
+def bs_tile_fn(block: int, p: int):
+    """Black-Scholes MC option-pricing tile: block//2 * p terminal prices.
+
+    (root, h, xs, params f32[5]=(s0,k,r,sigma,t)) ->
+        (payoff_sum f32[], root', xs')
+    """
+    tile = make_thundering_tile(block, p)
+
+    def fn(root, h, xs, params):
+        s0, k, r, sigma, t = (params[i] for i in range(5))
+        out, root2, xs2 = tile(root, h, xs)
+        u1 = uniforms_f32(out[0::2, :])
+        u2 = uniforms_f32(out[1::2, :])
+        z = box_muller(u1, u2)
+        st = s0 * jnp.exp((r - jnp.float32(0.5) * sigma * sigma) * t
+                          + sigma * jnp.sqrt(t) * z)
+        payoff = jnp.maximum(st - k, jnp.float32(0.0)) * jnp.exp(-r * t)
+        return jnp.sum(payoff), root2, xs2
+
+    return fn
+
+
+def example_args(kind: str, block: int, p: int):
+    """ShapeDtypeStructs used by aot.py to lower each graph."""
+    root = jax.ShapeDtypeStruct((1,), jnp.uint64)
+    h = jax.ShapeDtypeStruct((p,), jnp.uint64)
+    xs = jax.ShapeDtypeStruct((4, p), jnp.uint32)
+    if kind in ("thundering", "thundering_scan", "pi"):
+        return (root, h, xs)
+    if kind == "bs":
+        return (root, h, xs, jax.ShapeDtypeStruct((5,), jnp.float32))
+    if kind == "lcg_only":
+        return (root, h)
+    if kind == "philox":
+        return (root, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    raise ValueError(kind)
+
+
+def initial_state(p: int, first_stream: int = 0, seed: int = 42):
+    """Concrete initial (root, h, xs) matching the manifest parameters."""
+    import numpy as np
+
+    root = np.array([P.splitmix64(seed)], dtype=np.uint64)
+    h = P.leaf_increments(p, first_stream=first_stream)
+    xs = P.xs128_stream_states(p, first_stream=first_stream)
+    return root, h, xs

@@ -1,0 +1,137 @@
+"""Pallas kernels vs the pure-numpy oracle (ref.py) — bit-exact checks,
+with hypothesis sweeping shapes and seeds."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import params as P
+from compile.kernels import ref
+from compile.kernels.philox import make_philox_tile
+from compile.kernels.thundering import make_lcg_only_tile, make_thundering_tile
+
+
+def run_thundering(block, p, seed=42, first_stream=0):
+    root = np.array([P.splitmix64(seed)], dtype=np.uint64)
+    h = P.leaf_increments(p, first_stream=first_stream)
+    xs = P.xs128_stream_states(p, first_stream=first_stream)
+    tile = make_thundering_tile(block, p)
+    out, root2, xs2 = jax.jit(tile)(root, h, xs)
+    r_out, r_root2, r_xs2 = ref.thundering_tile_ref(int(root[0]), h, xs, block)
+    return (np.asarray(out), int(root2[0]), np.asarray(xs2)), (r_out, r_root2, r_xs2)
+
+
+class TestThunderingTile:
+    def test_default_shape_bit_exact(self):
+        (out, root2, xs2), (r_out, r_root2, r_xs2) = run_thundering(32, 8)
+        np.testing.assert_array_equal(out, r_out)
+        assert root2 == r_root2
+        np.testing.assert_array_equal(xs2, r_xs2)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        block=st.sampled_from([1, 2, 8, 33, 64]),
+        p=st.sampled_from([1, 2, 5, 16]),
+        seed=st.integers(0, 2**32),
+    )
+    def test_shape_sweep_bit_exact(self, block, p, seed):
+        (out, root2, xs2), (r_out, r_root2, r_xs2) = run_thundering(block, p, seed)
+        np.testing.assert_array_equal(out, r_out)
+        assert root2 == r_root2
+        np.testing.assert_array_equal(xs2, r_xs2)
+
+    def test_offset_streams_bit_exact(self):
+        (out, root2, xs2), (r_out, r_root2, r_xs2) = run_thundering(16, 4, first_stream=100)
+        np.testing.assert_array_equal(out, r_out)
+
+    def test_state_threading_continues_sequence(self):
+        """Two block-B calls == one block-2B call."""
+        p, b = 4, 8
+        root = np.array([P.splitmix64(1)], dtype=np.uint64)
+        h = P.leaf_increments(p)
+        xs = P.xs128_stream_states(p)
+        tile = jax.jit(make_thundering_tile(b, p))
+        out1, root1, xs1 = tile(root, h, xs)
+        out2, root2, xs2 = tile(root1, h, xs1)
+        big = jax.jit(make_thundering_tile(2 * b, p))
+        out_big, root_big, xs_big = big(root, h, xs)
+        np.testing.assert_array_equal(np.vstack([out1, out2]), np.asarray(out_big))
+        assert int(root2[0]) == int(root_big[0])
+        np.testing.assert_array_equal(np.asarray(xs2), np.asarray(xs_big))
+
+    def test_output_dtypes(self):
+        tile = make_thundering_tile(4, 2)
+        out, root2, xs2 = jax.jit(tile)(
+            np.array([1], dtype=np.uint64),
+            P.leaf_increments(2),
+            P.xs128_stream_states(2),
+        )
+        assert out.dtype == np.uint32
+        assert root2.dtype == np.uint64
+        assert xs2.dtype == np.uint32
+
+
+class TestLcgOnlyTile:
+    @settings(max_examples=8, deadline=None)
+    @given(block=st.sampled_from([1, 4, 16]), p=st.sampled_from([1, 3, 8]))
+    def test_bit_exact(self, block, p):
+        root = np.array([P.splitmix64(9)], dtype=np.uint64)
+        h = P.leaf_increments(p)
+        tile = make_lcg_only_tile(block, p)
+        out, root2 = jax.jit(tile)(root, h)
+        r_out, r_root2 = ref.lcg_only_tile_ref(int(root[0]), h, block)
+        np.testing.assert_array_equal(np.asarray(out), r_out)
+        assert int(root2[0]) == r_root2
+
+
+class TestPhiloxTile:
+    def test_known_answer(self):
+        # Random123 vector: ctr=0 key=0.
+        assert ref.philox4x32_10((0, 0, 0, 0), (0, 0)) == (
+            0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8,
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        block=st.sampled_from([4, 8, 32]),
+        p=st.sampled_from([1, 2, 7]),
+        ctr=st.integers(0, 2**40),
+        k0=st.integers(0, 2**32 - 1),
+    )
+    def test_bit_exact(self, block, p, ctr, k0):
+        tile = make_philox_tile(block, p)
+        out = jax.jit(tile)(
+            np.array([ctr], dtype=np.uint64), np.array([k0, 99], dtype=np.uint32)
+        )
+        r = ref.philox_tile_ref(ctr, (k0, 99), block, p)
+        np.testing.assert_array_equal(np.asarray(out), r)
+
+
+class TestStatisticalSanity:
+    """Cheap distributional checks on the kernel output (the heavy battery
+    lives in the Rust stats module)."""
+
+    @pytest.fixture(scope="class")
+    def big_tile(self):
+        (out, _, _), _ = run_thundering(1024, 16)
+        return out
+
+    def test_mean_near_half(self, big_tile):
+        u = big_tile.astype(np.float64) / 2**32
+        assert abs(u.mean() - 0.5) < 0.01
+
+    def test_bit_balance(self, big_tile):
+        bits = np.unpackbits(big_tile.view(np.uint8))
+        assert abs(bits.mean() - 0.5) < 0.005
+
+    def test_streams_uncorrelated(self, big_tile):
+        u = big_tile.astype(np.float64)
+        c = np.corrcoef(u.T)
+        off = c[~np.eye(c.shape[0], dtype=bool)]
+        assert np.abs(off).max() < 0.12  # 1024 samples -> ~3/sqrt(n) bound
+
+    def test_no_duplicate_columns(self, big_tile):
+        cols = {tuple(big_tile[:, i].tolist()) for i in range(big_tile.shape[1])}
+        assert len(cols) == big_tile.shape[1]

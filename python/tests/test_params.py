@@ -1,0 +1,120 @@
+"""Tests for compile-time parameter derivation (params.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import params as P
+
+MASK64 = P.MASK64
+
+
+class TestLcgAdvance:
+    def test_identity(self):
+        assert P.lcg_advance(0) == (1, 0)
+
+    def test_single_step(self):
+        assert P.lcg_advance(1) == (P.LCG_A, P.LCG_C)
+
+    @pytest.mark.parametrize("k", [2, 3, 6, 7, 64, 1000, 65537])
+    def test_jump_equals_steps(self, k):
+        x = 0xDEADBEEF
+        for _ in range(k):
+            x = (P.LCG_A * x + P.LCG_C) & MASK64
+        a_k, c_k = P.lcg_advance(k)
+        assert (a_k * 0xDEADBEEF + c_k) & MASK64 == x
+
+    @given(j=st.integers(0, 10_000), k=st.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_composition(self, j, k):
+        """advance(j) o advance(k) == advance(j + k)."""
+        aj, cj = P.lcg_advance(j)
+        ak, ck = P.lcg_advance(k)
+        ajk, cjk = P.lcg_advance(j + k)
+        # compose: x -> aj*(ak*x + ck) + cj
+        assert (aj * ak) & MASK64 == ajk
+        assert (aj * ck + cj) & MASK64 == cjk
+
+    def test_block_constants_match_advance(self):
+        A, C = P.lcg_block_constants(32)
+        for j in range(32):
+            a_k, c_k = P.lcg_advance(j + 1)
+            assert int(A[j]) == a_k
+            assert int(C[j]) == c_k
+
+
+class TestLeafIncrements:
+    def test_even_and_distinct(self):
+        h = P.leaf_increments(100)
+        assert all(v % 2 == 0 for v in h.tolist())
+        assert len(set(h.tolist())) == 100
+
+    def test_first_stream_offset(self):
+        h = P.leaf_increments(4, first_stream=10)
+        assert h.tolist() == [P.leaf_h(10 + i) for i in range(4)]
+
+    def test_leaf_h_spread(self):
+        """Leaf constants must differ in the high bits XSH-RR samples —
+        clustered constants weaken inter-stream quality (DESIGN.md Sec. 2)."""
+        hs = [P.leaf_h(i) for i in range(16)]
+        high = {h >> 32 for h in hs}
+        assert len(high) == 16
+
+    def test_hull_dobell_parity(self):
+        """Leaf increment c - a*h must be odd for even h (Sec. 3.3)."""
+        for h in P.leaf_increments(64).tolist():
+            leaf_c = (P.LCG_C - P.LCG_A * h) & MASK64
+            assert leaf_c % 2 == 1
+
+
+class TestXorshiftJump:
+    def _steps(self, s, k):
+        si = s[0] | (s[1] << 32) | (s[2] << 64) | (s[3] << 96)
+        for _ in range(k):
+            si = P.xs128_step_int(si)
+        return (
+            si & 0xFFFFFFFF,
+            (si >> 32) & 0xFFFFFFFF,
+            (si >> 64) & 0xFFFFFFFF,
+            (si >> 96) & 0xFFFFFFFF,
+        )
+
+    @pytest.mark.parametrize("k", [0, 1, 2, 7, 63, 64, 257])
+    def test_jump_equals_steps(self, k):
+        assert P.xs128_jump(P.XS128_SEED, k) == self._steps(P.XS128_SEED, k)
+
+    @given(st.integers(1, 2**32 - 1), st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_jump_equals_steps_random_state(self, lo, hi):
+        s = (lo, hi, lo ^ hi or 1, (lo + hi) & 0xFFFFFFFF)
+        assert P.xs128_jump(s, 13) == self._steps(s, 13)
+
+    def test_jump_composes(self):
+        a = P.xs128_jump(P.xs128_jump(P.XS128_SEED, 1000), 234)
+        assert a == P.xs128_jump(P.XS128_SEED, 1234)
+
+    def test_stream_states_distinct(self):
+        xs = P.xs128_stream_states(32)
+        cols = {tuple(xs[:, i].tolist()) for i in range(32)}
+        assert len(cols) == 32
+
+    def test_stream_states_match_direct_jump(self):
+        xs = P.xs128_stream_states(4, first_stream=2)
+        for i in range(4):
+            expect = P.xs128_jump(P.XS128_SEED, ((2 + i) << 64) % P.XS128_PERIOD)
+            assert tuple(xs[:, i].tolist()) == expect
+
+    def test_nonzero_states(self):
+        xs = P.xs128_stream_states(16)
+        assert (xs.astype(np.uint64).sum(axis=0) > 0).all()
+
+
+class TestSplitmix:
+    def test_known_vector(self):
+        # Canonical splitmix64 sequence from seed 0 starts 0xE220A8397B1DCDAF.
+        assert P.splitmix64(0) == 0xE220A8397B1DCDAF
+        assert P.splitmix64(42) == 13679457532755275413
+
+    def test_different_seeds_differ(self):
+        assert P.splitmix64(1) != P.splitmix64(2)

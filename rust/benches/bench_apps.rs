@@ -1,0 +1,52 @@
+//! Application benches — the measured core of Figs. 8/9: π estimation and
+//! option pricing on PJRT (AOT tiles) and native engines.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_apps`
+
+use thundering::apps::{option_pricing, pi};
+use thundering::runtime::executor::TileExecutor;
+use thundering::runtime::BsParams;
+use thundering::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::from_env();
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+    let draws: u64 = 1 << 24;
+
+    println!("# native engine ({draws} draws/iter, {threads} threads)");
+    b.run("pi/native", draws, || {
+        black_box(pi::run_native(threads, draws, 42).unwrap());
+    });
+    b.run("bs/native", draws, || {
+        black_box(option_pricing::run_native(threads, draws, 42, BsParams::default()).unwrap());
+    });
+
+    let art = std::env::var("THUNDERING_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    if !std::path::Path::new(&art).join("manifest.json").exists() {
+        eprintln!("skipping PJRT app benches (no artifacts)");
+        return;
+    }
+    let guard = TileExecutor::spawn(art, 4).unwrap();
+
+    println!("\n# PJRT AOT tile engine ({draws} draws/iter)");
+    b.run("pi/pjrt", draws, || {
+        black_box(pi::run_pjrt(&guard.executor, draws, 42).unwrap());
+    });
+    b.run("bs/pjrt", draws, || {
+        black_box(
+            option_pricing::run_pjrt(&guard.executor, draws, 42, BsParams::default()).unwrap(),
+        );
+    });
+
+    println!("\n# scalar single-stream baselines (2^22 draws/iter)");
+    let small = 1u64 << 22;
+    b.run("pi/scalar-thundering", small, || {
+        let mut g = thundering::prng::ThunderingStream::new(42, 0);
+        black_box(pi::run_scalar(&mut g, small));
+    });
+    b.run("pi/scalar-philox", small, || {
+        let mut g = thundering::prng::Philox4x32::new([7, 99]);
+        black_box(pi::run_scalar(&mut g, small));
+    });
+}

@@ -1,0 +1,101 @@
+//! Coordinator-path benches: fetch hit/miss, group blocks, multi-client
+//! scaling — the L3 hot path (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench bench_coordinator`
+
+use std::sync::Arc;
+
+use thundering::coordinator::{Config, Coordinator, Engine};
+use thundering::util::bench::{black_box, Bench};
+
+fn native(streams: u64, width: usize, rows: usize) -> Coordinator {
+    Coordinator::new(
+        Config {
+            engine: Engine::Native,
+            group_width: width,
+            rows_per_tile: rows,
+            lag_window: u64::MAX / 2,
+            ..Default::default()
+        },
+        streams,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("# single-stream fetch (chunk = 4096 numbers)");
+    {
+        let c = native(64, 64, 1024);
+        let mut buf = vec![0u32; 4096];
+        b.run("fetch/native-64wide", 4096, || {
+            c.fetch(0, &mut buf).unwrap();
+            black_box(&buf);
+        });
+    }
+
+    println!("\n# group block (1024 rows x 64 streams = 65536 numbers)");
+    {
+        let c = native(64, 64, 1024);
+        b.run("fetch_block/native", 65536, || {
+            black_box(c.fetch_group_block(0, 1024).unwrap());
+        });
+    }
+
+    println!("\n# misaligned fetch (exercises buffering + pruning)");
+    {
+        let c = native(64, 64, 1024);
+        let mut buf = vec![0u32; 1000]; // intentionally != tile multiple
+        b.run("fetch/misaligned-1000", 1000, || {
+            c.fetch(1, &mut buf).unwrap();
+            black_box(&buf);
+        });
+    }
+
+    println!("\n# concurrent clients (8 threads x 64k numbers each)");
+    {
+        let c = Arc::new(native(512, 64, 1024));
+        b.run("fetch/concurrent-8", 8 * 65536, || {
+            let handles: Vec<_> = (0..8u64)
+                .map(|k| {
+                    let c = c.clone();
+                    std::thread::spawn(move || {
+                        let mut buf = vec![0u32; 65536];
+                        c.fetch(k * 64, &mut buf).unwrap();
+                        black_box(&buf);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    // PJRT path if artifacts exist.
+    let art = std::env::var("THUNDERING_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    if std::path::Path::new(&art).join("manifest.json").exists() {
+        println!("\n# PJRT-backed coordinator");
+        let c = Coordinator::new(
+            Config {
+                engine: Engine::Pjrt { artifacts_dir: art },
+                group_width: 64,
+                rows_per_tile: 1024,
+                lag_window: u64::MAX / 2,
+                ..Default::default()
+            },
+            64,
+        )
+        .unwrap();
+        b.run("fetch_block/pjrt", 65536, || {
+            black_box(c.fetch_group_block(0, 1024).unwrap());
+        });
+        let mut buf = vec![0u32; 4096];
+        b.run("fetch/pjrt-4096", 4096, || {
+            c.fetch(0, &mut buf).unwrap();
+            black_box(&buf);
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! FPGA-model benches: cycle-level fabric simulation rate and full-sweep
+//! report generation (Figs. 4/5/6, Table 5).
+//!
+//! Run: `cargo bench --bench bench_fpga_model`
+
+use thundering::fpga::resources::ResourceModel;
+use thundering::fpga::rsgu::{Rsgu, RsguDesign};
+use thundering::fpga::sou::Fabric;
+use thundering::fpga::throughput::{optimistic_scaling, thundering_throughput};
+use thundering::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::from_env();
+
+    println!("# cycle-level RSGU simulation (states/iter)");
+    b.run("rsgu/advance6_64k_states", 1 << 16, || {
+        let mut r = Rsgu::new(RsguDesign::Advance6, 42);
+        black_box(r.run(1 << 16));
+    });
+    b.run("rsgu/naive_8k_states", 1 << 13, || {
+        let mut r = Rsgu::new(RsguDesign::NaiveDsp, 42);
+        black_box(r.run(1 << 13));
+    });
+
+    println!("\n# cycle-level fabric simulation (output events/iter)");
+    for n_sou in [16usize, 64, 256] {
+        let cycles = 4096u64;
+        let mut fab = Fabric::new(42, n_sou);
+        let _ = fab.run(256); // warm the chain
+        b.run(&format!("fabric/{n_sou}sou_4k_cycles"), cycles * n_sou as u64, || {
+            black_box(fab.run(cycles));
+        });
+    }
+
+    println!("\n# analytic sweeps (rows/iter)");
+    let m = ResourceModel::default();
+    b.run("model/fig5_sweep_2048pts", 2048, || {
+        for n in 1..=2048u64 {
+            black_box(m.fig5_row(n));
+        }
+    });
+    b.run("model/fig6_sweep_2048pts", 2048, || {
+        for n in 1..=2048u64 {
+            black_box(thundering_throughput(&m, n));
+        }
+    });
+    b.run("model/table5", 6, || {
+        black_box(optimistic_scaling(&thundering::fpga::U250));
+    });
+}

@@ -1,0 +1,90 @@
+//! Generator benches: scalar throughput of every algorithm (Table 1's
+//! cost column, measured), the state-sharing batch engine across widths
+//! (Fig. 7's CPU core), and jump-ahead costs.
+//!
+//! Run: `cargo bench --bench bench_generators` (BENCH_ITERS=n to adjust).
+
+use thundering::prng::mrg32k3a::Mrg32k3aFamily;
+use thundering::prng::philox::PhiloxFamily;
+use thundering::prng::tausworthe::LutSrFamily;
+use thundering::prng::thundering::ThunderingFamily;
+use thundering::prng::xoroshiro::XoroshiroFamily;
+use thundering::prng::{
+    Lcg64, Mt19937, PcgXshRs64, Prng32, SplitMix64, StreamFamily, ThunderingBatch,
+    ThunderingStream,
+};
+use thundering::util::bench::{black_box, Bench};
+
+const N: usize = 1 << 22; // words per measurement
+
+fn bench_scalar(b: &Bench, name: &str, gen: &mut dyn Prng32) {
+    let mut acc = 0u32;
+    b.run(&format!("scalar/{name}"), N as u64, || {
+        for _ in 0..N {
+            acc ^= gen.next_u32();
+        }
+        black_box(acc);
+    });
+}
+
+fn main() {
+    let b = Bench::from_env();
+    println!("# scalar generator throughput ({N} words/iter)");
+    bench_scalar(&b, "thundering", &mut ThunderingStream::new(42, 0));
+    bench_scalar(&b, "splitmix64", &mut SplitMix64::new(42));
+    bench_scalar(&b, "lcg64", &mut Lcg64::new(42));
+    bench_scalar(&b, "pcg_xsh_rs_64", &mut PcgXshRs64::new(42, 0));
+    bench_scalar(&b, "xoroshiro128**", &mut XoroshiroFamily { seed: 7 }.stream(0));
+    bench_scalar(&b, "philox4x32", &mut PhiloxFamily { base_key: [7, 99] }.stream(0));
+    bench_scalar(&b, "mrg32k3a", &mut Mrg32k3aFamily { seed: 7 }.stream(0));
+    bench_scalar(&b, "mt19937", &mut Mt19937::new(5489));
+    bench_scalar(&b, "lut-sr", &mut LutSrFamily { seed: 7 }.stream(0));
+
+    println!("\n# state-sharing batch engine (rows x width = {N} numbers/iter)");
+    for width in [16usize, 64, 256, 1024] {
+        let rows = N / width;
+        let mut batch = ThunderingBatch::new(42, width, 0);
+        let mut buf = vec![0u32; N];
+        b.run(&format!("batch/width{width}"), N as u64, || {
+            batch.fill_rows(rows, &mut buf);
+            black_box(&buf);
+        });
+    }
+
+    println!("\n# multistream scalar engines at width 64 (comparison point)");
+    {
+        let fam = ThunderingFamily::new(42);
+        let mut streams: Vec<ThunderingStream> = (0..64).map(|i| fam.stream(i)).collect();
+        let rows = N / 64;
+        let mut buf = vec![0u32; N];
+        b.run("multistream/thundering-64-scalar", N as u64, || {
+            for r in 0..rows {
+                for (i, s) in streams.iter_mut().enumerate() {
+                    buf[r * 64 + i] = s.next_u32();
+                }
+            }
+            black_box(&buf);
+        });
+    }
+
+    println!("\n# jump-ahead (per jump)");
+    b.run("jump/lcg_2^40", 1, || {
+        black_box(thundering::prng::lcg::lcg_jump(
+            black_box(12345),
+            1 << 40,
+            thundering::prng::LCG_A,
+            thundering::prng::LCG_C,
+        ));
+    });
+    b.run("jump/xs128_2^64", 1, || {
+        black_box(thundering::prng::xorshift::xs128_jump(
+            black_box([1, 2, 3, 4]),
+            1u128 << 64,
+        ));
+    });
+    b.run("jump/stream_jump_2^32", 1, || {
+        let mut s = ThunderingStream::new(42, 0);
+        s.jump(1 << 32);
+        black_box(s.root_state());
+    });
+}

@@ -1,0 +1,54 @@
+//! Statistical-battery benches: per-test costs at battery sizes. The
+//! battery dominates the Table 2 runtime, so these locate its hot spots.
+//!
+//! Run: `cargo bench --bench bench_stats`
+
+use thundering::prng::SplitMix64;
+use thundering::stats::{birthday, corr, freq, hwd, lincomp, rank, serial};
+use thundering::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::from_env();
+    println!("# battery test costs (items = samples consumed)");
+    b.run("stats/monobit_1M", 1 << 20, || {
+        let mut g = SplitMix64::new(1);
+        black_box(freq::monobit(&mut g, 1 << 20));
+    });
+    b.run("stats/serial_m8_256k", 1 << 18, || {
+        let mut g = SplitMix64::new(2);
+        black_box(serial::serial(&mut g, 8, 1 << 18));
+    });
+    b.run("stats/poker_m4_256k", 1 << 18, || {
+        let mut g = SplitMix64::new(3);
+        black_box(serial::poker(&mut g, 4, 1 << 18));
+    });
+    b.run("stats/collision_64k", 1 << 16, || {
+        let mut g = SplitMix64::new(4);
+        black_box(serial::collision(&mut g, 24, 1 << 16));
+    });
+    b.run("stats/birthday_2k_x4", (2048 * 4) as u64, || {
+        let mut g = SplitMix64::new(5);
+        black_box(birthday::birthday_spacings(&mut g, 2048, 28, 4));
+    });
+    b.run("stats/rank64_256mats", (64 * 64 * 256 / 32) as u64, || {
+        let mut g = SplitMix64::new(6);
+        black_box(rank::matrix_rank(&mut g, 64, 256));
+    });
+    b.run("stats/rank256_16mats", (256 * 256 * 16 / 32) as u64, || {
+        let mut g = SplitMix64::new(7);
+        black_box(rank::matrix_rank(&mut g, 256, 16));
+    });
+    b.run("stats/berlekamp_massey_4k", 4096, || {
+        let mut g = SplitMix64::new(8);
+        black_box(lincomp::linear_complexity(&mut g, 0, 4096));
+    });
+    b.run("stats/hwd_multilag_256k", 1 << 18, || {
+        let mut g = SplitMix64::new(9);
+        black_box(hwd::hwd_multilag(&mut g, 1 << 18, 4));
+    });
+    b.run("stats/correlations_16k", (3 * 16384) as u64, || {
+        let mut a = SplitMix64::new(10);
+        let mut bgen = SplitMix64::new(11);
+        black_box(corr::correlations(&mut a, &mut bgen, 1 << 14));
+    });
+}

@@ -1,0 +1,81 @@
+//! Tile-execution benches: every AOT artifact through the PJRT runtime vs
+//! the native batch engine at the same shape — the L2/L3 boundary cost
+//! (dispatch + marshalling + execute). Feeds EXPERIMENTS.md §Perf.
+//!
+//! Run: `make artifacts && cargo bench --bench bench_tiles`
+
+use thundering::prng::ThunderingBatch;
+use thundering::runtime::{BsParams, Runtime, TileState};
+use thundering::util::bench::{black_box, Bench};
+
+fn artifacts_dir() -> String {
+    std::env::var("THUNDERING_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn main() {
+    let b = Bench::from_env();
+    let rt = match Runtime::new(artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping tile benches (no artifacts): {e:#}");
+            return;
+        }
+    };
+
+    println!("# PJRT tile execution (numbers/iter = rows*p)");
+    let mut names = rt.names_of_kind("thundering");
+    names.extend(rt.names_of_kind("thundering_scan"));
+    names.sort();
+    for name in &names {
+        let exe = rt.load(name).unwrap();
+        let (rows, p) = (exe.info.rows, exe.info.p);
+        let mut state = TileState::new(42, p, 0);
+        let mut out = vec![0u32; rows * p];
+        b.run(&format!("pjrt/{name}"), (rows * p) as u64, || {
+            exe.run_thundering(&mut state, &mut out).unwrap();
+            black_box(&out);
+        });
+    }
+
+    println!("\n# native batch engine at matching shapes");
+    for name in &names {
+        let exe = rt.load(name).unwrap();
+        let (rows, p) = (exe.info.rows, exe.info.p);
+        let mut batch = ThunderingBatch::new(42, p, 0);
+        let mut out = vec![0u32; rows * p];
+        b.run(&format!("native/{name}"), (rows * p) as u64, || {
+            batch.fill_rows(rows, &mut out);
+            black_box(&out);
+        });
+    }
+
+    println!("\n# baseline + app tiles");
+    if let Ok(exe) = rt.load("philox_b1024_p64") {
+        let (rows, p) = (exe.info.rows, exe.info.p);
+        let mut out = vec![0u32; rows * p];
+        let mut ctr = 0u64;
+        b.run("pjrt/philox_b1024_p64", (rows * p) as u64, || {
+            exe.run_philox(ctr, [7, 99], &mut out).unwrap();
+            ctr += (rows / 4) as u64;
+            black_box(&out);
+        });
+    }
+    if let Ok(exe) = rt.load("pi_tile") {
+        let p = exe.info.p;
+        let draws = (exe.info.rows / 2 * p) as u64;
+        let mut state = TileState::new(42, p, 0);
+        b.run("pjrt/pi_tile", draws, || {
+            black_box(exe.run_pi(&mut state).unwrap());
+        });
+    }
+    if let Ok(exe) = rt.load("bs_tile") {
+        let p = exe.info.p;
+        let draws = (exe.info.rows / 2 * p) as u64;
+        let mut state = TileState::new(42, p, 0);
+        let params = BsParams::default();
+        b.run("pjrt/bs_tile", draws, || {
+            black_box(exe.run_bs(&mut state, &params).unwrap());
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Case-study applications (paper Sec. 6): Monte-Carlo π estimation and
+//! Black–Scholes option pricing, each runnable on three engines:
+//!
+//! * `Pjrt` — the AOT Pallas app tiles (`pi_tile` / `bs_tile`) executed on
+//!   the PJRT device thread: the *measured* end-to-end path on this host.
+//! * `Native` — multi-threaded pure-Rust state-sharing engine (the CPU
+//!   port of Fig. 7).
+//! * models — FPGA/GPU analytic profiles for the Fig. 8/9 & Table 7
+//!   projections ([`gpu_model`]).
+
+pub mod gpu_model;
+pub mod option_pricing;
+pub mod pi;
+
+use anyhow::Result;
+
+/// Execution engines for the app drivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppEngine {
+    /// AOT HLO tiles via PJRT (measured).
+    Pjrt,
+    /// Native multi-threaded Rust (measured).
+    Native,
+}
+
+/// A measured app run.
+#[derive(Debug, Clone)]
+pub struct AppRun {
+    pub engine: &'static str,
+    pub draws: u64,
+    pub result: f64,
+    pub seconds: f64,
+}
+
+impl AppRun {
+    pub fn draws_per_sec(&self) -> f64 {
+        self.draws as f64 / self.seconds
+    }
+}
+
+/// Black–Scholes closed form (call) — the accuracy oracle for the MC runs.
+pub fn black_scholes_call(s0: f64, k: f64, r: f64, sigma: f64, t: f64) -> f64 {
+    let d1 = ((s0 / k).ln() + (r + 0.5 * sigma * sigma) * t) / (sigma * t.sqrt());
+    let d2 = d1 - sigma * t.sqrt();
+    s0 * phi(d1) - k * (-r * t).exp() * phi(d2)
+}
+
+fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    1.0 - crate::stats::special::erfc(x)
+}
+
+/// Spawn `threads` workers over `draws` total work items, each worker
+/// running `f(worker_index, draws_for_worker) -> partial`, summing results.
+pub fn parallel_sum<F>(threads: usize, draws: u64, f: F) -> Result<f64>
+where
+    F: Fn(usize, u64) -> f64 + Sync,
+{
+    let per = draws / threads as u64;
+    let extra = draws % threads as u64;
+    let total = std::sync::Mutex::new(0.0f64);
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..threads {
+            let n = per + if (w as u64) < extra { 1 } else { 0 };
+            let f = &f;
+            let total = &total;
+            handles.push(s.spawn(move || {
+                let part = f(w, n);
+                *total.lock().unwrap() += part;
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        Ok(())
+    })?;
+    Ok(total.into_inner().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn black_scholes_reference_value() {
+        // The classic (100, 100, 0.05, 0.2, 1y) call ≈ 10.4506.
+        let v = black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
+        assert!((v - 10.4506).abs() < 1e-3, "{v}");
+    }
+
+    #[test]
+    fn parallel_sum_partitions_work() {
+        let total = parallel_sum(4, 1003, |_, n| n as f64).unwrap();
+        assert_eq!(total, 1003.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Monte-Carlo Black–Scholes option pricing (paper Sec. 6.1): simulate
+//! terminal prices under GBM, average discounted call payoffs. Each draw
+//! consumes two 32-bit random numbers (Box–Muller).
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::AppRun;
+use crate::prng::ThunderingBatch;
+use crate::runtime::executor::TileExecutor;
+use crate::runtime::{BsParams, TileState};
+
+/// Run on the AOT `bs_tile` artifact via the PJRT device thread.
+pub fn run_pjrt(
+    executor: &TileExecutor,
+    draws: u64,
+    seed: u64,
+    params: BsParams,
+) -> Result<AppRun> {
+    let t0 = Instant::now();
+    let (sum, actual_draws) = executor
+        .call(move |rt| -> Result<(f64, u64)> {
+            let exe = rt.load("bs_tile")?;
+            let p = exe.info.p;
+            let draws_per_tile = (exe.info.rows / 2) as u64 * p as u64;
+            let tiles = draws.div_ceil(draws_per_tile);
+            let mut state = TileState::new(seed, p, 0);
+            let mut sum = 0f64;
+            for _ in 0..tiles {
+                sum += exe.run_bs(&mut state, &params)? as f64;
+            }
+            Ok((sum, tiles * draws_per_tile))
+        })
+        .context("bs tile execution")??;
+    Ok(AppRun {
+        engine: "pjrt",
+        draws: actual_draws,
+        result: sum / actual_draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Native multi-threaded run (state-sharing batch engine).
+pub fn run_native(threads: usize, draws: u64, seed: u64, params: BsParams) -> Result<AppRun> {
+    const P: usize = 64;
+    const ROWS: usize = 1024;
+    let t0 = Instant::now();
+    let (s0, k, r, sigma, t) =
+        (params.s0 as f64, params.k as f64, params.r as f64, params.sigma as f64, params.t as f64);
+    let drift = (r - 0.5 * sigma * sigma) * t;
+    let vol = sigma * t.sqrt();
+    let disc = (-r * t).exp();
+    let sum = super::parallel_sum(threads, draws, |w, n| {
+        let mut batch =
+            ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
+        let mut buf = vec![0u32; ROWS * P];
+        let mut acc = 0f64;
+        let mut remaining = n;
+        while remaining > 0 {
+            batch.fill_rows(ROWS, &mut buf);
+            let draws_here = (buf.len() / 2).min(remaining as usize);
+            for pair in buf.chunks_exact(2).take(draws_here) {
+                let u1 = ((pair[0] >> 8) as f64 * (1.0 / 16_777_216.0)).max(5.96e-8);
+                let u2 = (pair[1] >> 8) as f64 * (1.0 / 16_777_216.0);
+                let z = (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+                let st = s0 * (drift + vol * z).exp();
+                acc += (st - k).max(0.0) * disc;
+            }
+            remaining -= draws_here as u64;
+        }
+        acc
+    })?;
+    Ok(AppRun {
+        engine: "native",
+        draws,
+        result: sum / draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::black_scholes_call;
+
+    #[test]
+    fn native_price_near_closed_form() {
+        let params = BsParams::default();
+        let run = run_native(2, 400_000, 42, params).unwrap();
+        let expect = black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
+        assert!((run.result - expect).abs() < 0.15, "{} vs {expect}", run.result);
+    }
+
+    #[test]
+    fn respects_parameters() {
+        // Deep in-the-money call: price ≈ s0 - k·e^{-rt}.
+        let params = BsParams { s0: 200.0, k: 100.0, r: 0.05, sigma: 0.2, t: 1.0 };
+        let run = run_native(2, 200_000, 1, params).unwrap();
+        let expect = black_scholes_call(200.0, 100.0, 0.05, 0.2, 1.0);
+        assert!((run.result - expect).abs() < 0.5, "{} vs {expect}", run.result);
+    }
+}

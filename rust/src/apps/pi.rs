@@ -1,0 +1,117 @@
+//! Monte-Carlo π estimation (paper Sec. 6.1): draw points in the unit
+//! square, count those inside the quarter circle; π ≈ 4·hits/draws. Each
+//! draw consumes two 32-bit random numbers.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::AppRun;
+use crate::prng::{Prng32, ThunderingBatch};
+use crate::runtime::executor::TileExecutor;
+use crate::runtime::TileState;
+
+/// Run on the AOT `pi_tile` artifact via the PJRT device thread.
+/// `draws` is rounded up to a whole number of tiles.
+pub fn run_pjrt(executor: &TileExecutor, draws: u64, seed: u64) -> Result<AppRun> {
+    let t0 = Instant::now();
+    let (hits, actual_draws) = executor
+        .call(move |rt| -> Result<(u64, u64)> {
+            let exe = rt.load("pi_tile")?;
+            let p = exe.info.p;
+            let draws_per_tile = (exe.info.rows / 2) as u64 * p as u64;
+            let tiles = draws.div_ceil(draws_per_tile);
+            let mut state = TileState::new(seed, p, 0);
+            let mut hits = 0u64;
+            for _ in 0..tiles {
+                hits += exe.run_pi(&mut state)? as u64;
+            }
+            Ok((hits, tiles * draws_per_tile))
+        })
+        .context("pi tile execution")??;
+    Ok(AppRun {
+        engine: "pjrt",
+        draws: actual_draws,
+        result: 4.0 * hits as f64 / actual_draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Native multi-threaded run using the state-sharing batch engine — the
+/// CPU port measured in Fig. 7. Each thread owns a group of streams.
+pub fn run_native(threads: usize, draws: u64, seed: u64) -> Result<AppRun> {
+    const P: usize = 64;
+    const ROWS: usize = 1024;
+    let t0 = Instant::now();
+    let hits = super::parallel_sum(threads, draws, |w, n| {
+        let mut batch =
+            ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
+        let mut buf = vec![0u32; ROWS * P];
+        let mut hits = 0u64;
+        let mut remaining = n;
+        while remaining > 0 {
+            batch.fill_rows(ROWS, &mut buf);
+            let draws_here = (buf.len() / 2).min(remaining as usize);
+            for pair in buf.chunks_exact(2).take(draws_here) {
+                let x = (pair[0] >> 8) as f32 * (1.0 / 16_777_216.0);
+                let y = (pair[1] >> 8) as f32 * (1.0 / 16_777_216.0);
+                if x * x + y * y < 1.0 {
+                    hits += 1;
+                }
+            }
+            remaining -= draws_here as u64;
+        }
+        hits as f64
+    })?;
+    Ok(AppRun {
+        engine: "native",
+        draws,
+        result: 4.0 * hits / draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Single-threaded scalar baseline with an arbitrary generator (for the
+/// generator-comparison benches).
+pub fn run_scalar(gen: &mut dyn Prng32, draws: u64) -> AppRun {
+    let t0 = Instant::now();
+    let mut hits = 0u64;
+    for _ in 0..draws {
+        let x = gen.next_f32();
+        let y = gen.next_f32();
+        if x * x + y * y < 1.0 {
+            hits += 1;
+        }
+    }
+    AppRun {
+        engine: "scalar",
+        draws,
+        result: 4.0 * hits as f64 / draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_estimates_pi() {
+        let run = run_native(2, 400_000, 42).unwrap();
+        assert!((run.result - std::f64::consts::PI).abs() < 0.02, "{}", run.result);
+    }
+
+    #[test]
+    fn scalar_estimates_pi() {
+        let mut g = crate::prng::ThunderingStream::new(7, 0);
+        let run = run_scalar(&mut g, 200_000);
+        assert!((run.result - std::f64::consts::PI).abs() < 0.03, "{}", run.result);
+    }
+
+    #[test]
+    fn native_deterministic_given_seed_and_threads() {
+        let a = run_native(3, 100_000, 9).unwrap();
+        let b = run_native(3, 100_000, 9).unwrap();
+        assert_eq!(a.result, b.result);
+    }
+}

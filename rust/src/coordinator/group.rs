@@ -1,0 +1,376 @@
+//! A stream group: `width` consecutive streams that share one root-state
+//! recurrence — the software form of the paper's state sharing (Sec. 3.3).
+//!
+//! State sharing means all streams of a group *advance together* (on the
+//! FPGA they march in lockstep with the daisy chain). Clients may consume
+//! streams at different rates within a bounded **lag window**: generated
+//! rows are buffered until every stream has passed them. A fetch that
+//! would stretch the window beyond its bound is rejected with
+//! [`FetchError::LagWindowExceeded`] — the coordinator's backpressure
+//! point (the alternative is unbounded buffering).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::prng::ThunderingBatch;
+use crate::runtime::executor::TileExecutor;
+use crate::runtime::TileState;
+
+/// How a group generates its tiles.
+pub enum GroupBackend {
+    /// Native Rust engine (no artifacts needed; used for tests, CPU
+    /// baselines, and as a fallback).
+    Native(ThunderingBatch),
+    /// AOT tile executable on the PJRT device thread.
+    Pjrt { executor: TileExecutor, artifact: String, state: TileState },
+}
+
+impl GroupBackend {
+    /// Generate `rows` into `out` (len = rows × width). Buffers are
+    /// caller-owned and pooled — the hot loop never allocates (§Perf L3).
+    fn generate_into(&mut self, rows: usize, out: &mut [u32], metrics: &Metrics) -> Result<()> {
+        debug_assert_eq!(out.len(), rows * self.width());
+        let t0 = Instant::now();
+        let result = match self {
+            GroupBackend::Native(batch) => {
+                batch.fill_rows(rows, out);
+                Ok(())
+            }
+            GroupBackend::Pjrt { executor, artifact, state } => {
+                let name = artifact.clone();
+                let mut st = state.clone();
+                // The device thread fills a transfer buffer; we move it
+                // back and copy once. (out itself cannot cross the channel
+                // without lifetime gymnastics; the single copy is ~5% of
+                // tile cost.)
+                let result: Result<(TileState, Vec<u32>)> = executor.call(move |rt| {
+                    let exe = rt.load(&name)?;
+                    anyhow::ensure!(
+                        exe.info.rows == rows && exe.info.p == st.width(),
+                        "artifact shape mismatch: {}x{} vs requested {rows}",
+                        exe.info.rows,
+                        exe.info.p
+                    );
+                    let mut buf = vec![0u32; rows * st.width()];
+                    exe.run_thundering(&mut st, &mut buf)?;
+                    Ok((st, buf))
+                })?;
+                let (st, buf) = result?;
+                *state = st;
+                out.copy_from_slice(&buf);
+                Ok(())
+            }
+        };
+        metrics.add(&metrics.backend_ns, t0.elapsed().as_nanos() as u64);
+        result
+    }
+
+    fn width(&self) -> usize {
+        match self {
+            GroupBackend::Native(b) => b.width(),
+            GroupBackend::Pjrt { state, .. } => state.width(),
+        }
+    }
+}
+
+/// Fetch failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FetchError {
+    /// The requested advance would exceed the group's lag window.
+    LagWindowExceeded { lead: u64, window: u64 },
+    /// Backend failure (artifact error, device thread gone).
+    Backend(String),
+}
+
+impl std::fmt::Display for FetchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FetchError::LagWindowExceeded { lead, window } => {
+                write!(f, "stream lead {lead} exceeds lag window {window}")
+            }
+            FetchError::Backend(e) => write!(f, "backend: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FetchError {}
+
+/// Buffered, lockstep-advancing stream group.
+pub struct StreamGroup {
+    pub first_stream: u64,
+    width: usize,
+    rows_per_tile: usize,
+    backend: GroupBackend,
+    /// Absolute row index of the first buffered row.
+    base_row: u64,
+    /// Buffered tiles, each `rows_per_tile * width` row-major.
+    tiles: VecDeque<Vec<u32>>,
+    /// Per-stream absolute row cursor (next row to deliver).
+    cursors: Vec<u64>,
+    /// Max allowed (max_cursor − min_cursor).
+    lag_window: u64,
+    /// Recycled tile buffers (pruned tiles return here; generation reuses).
+    pool: Vec<Vec<u32>>,
+}
+
+impl StreamGroup {
+    pub fn new(
+        first_stream: u64,
+        backend: GroupBackend,
+        rows_per_tile: usize,
+        lag_window: u64,
+    ) -> Self {
+        let width = backend.width();
+        Self {
+            first_stream,
+            width,
+            rows_per_tile,
+            backend,
+            base_row: 0,
+            tiles: VecDeque::new(),
+            cursors: vec![0; width],
+            lag_window,
+            pool: Vec::new(),
+        }
+    }
+
+    fn take_buffer(&mut self) -> Vec<u32> {
+        self.pool
+            .pop()
+            .unwrap_or_else(|| vec![0u32; self.rows_per_tile * self.width])
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Rows currently buffered.
+    pub fn buffered_rows(&self) -> u64 {
+        self.tiles.len() as u64 * self.rows_per_tile as u64
+    }
+
+    /// Highest generated absolute row (exclusive).
+    fn generated_through(&self) -> u64 {
+        self.base_row + self.buffered_rows()
+    }
+
+    /// Fetch `out.len()` numbers from local stream `lane`, advancing its
+    /// cursor. Generates tiles on demand; prunes rows all streams passed.
+    pub fn fetch(
+        &mut self,
+        lane: usize,
+        out: &mut [u32],
+        metrics: &Metrics,
+    ) -> std::result::Result<(), FetchError> {
+        assert!(lane < self.width);
+        let n = out.len() as u64;
+        let target = self.cursors[lane] + n;
+
+        // Backpressure: would this stream run too far ahead of the slowest?
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        if target - min_cursor > self.lag_window {
+            metrics.add(&metrics.lag_rejections, 1);
+            return Err(FetchError::LagWindowExceeded {
+                lead: target - min_cursor,
+                window: self.lag_window,
+            });
+        }
+
+        // Generate until the target row is buffered.
+        let mut missed = false;
+        while self.generated_through() < target {
+            missed = true;
+            let mut tile = self.take_buffer();
+            self.backend
+                .generate_into(self.rows_per_tile, &mut tile, metrics)
+                .map_err(|e| FetchError::Backend(format!("{e:#}")))?;
+            metrics.add(&metrics.tiles_executed, 1);
+            metrics.add(&metrics.rows_generated, self.rows_per_tile as u64);
+            self.tiles.push_back(tile);
+        }
+        metrics.add(if missed { &metrics.fetch_misses } else { &metrics.fetch_hits }, 1);
+
+        // Copy the column slice, one tile-resident strided run at a time
+        // (hoists the div/mod out of the per-element loop: ~3x on the
+        // fetch path, EXPERIMENTS.md §Perf L3).
+        let mut cursor = self.cursors[lane];
+        let mut written = 0usize;
+        while written < out.len() {
+            let rel = (cursor - self.base_row) as usize;
+            let (t, r0) = (rel / self.rows_per_tile, rel % self.rows_per_tile);
+            let take = (self.rows_per_tile - r0).min(out.len() - written);
+            let tile = &self.tiles[t];
+            let mut idx = r0 * self.width + lane;
+            for slot in out[written..written + take].iter_mut() {
+                *slot = tile[idx];
+                idx += self.width;
+            }
+            written += take;
+            cursor += take as u64;
+        }
+        self.cursors[lane] = cursor;
+        metrics.add(&metrics.numbers_delivered, n);
+
+        // Prune tiles every stream has fully consumed (buffers recycle).
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        while !self.tiles.is_empty() && self.base_row + self.rows_per_tile as u64 <= min_cursor {
+            let buf = self.tiles.pop_front().unwrap();
+            if self.pool.len() < 8 {
+                self.pool.push(buf);
+            }
+            self.base_row += self.rows_per_tile as u64;
+        }
+        Ok(())
+    }
+
+    /// Fetch one full row-block for ALL streams (the uniform-consumption
+    /// fast path used by the Monte-Carlo apps): returns `rows × width`
+    /// numbers row-major, advancing every cursor together.
+    pub fn fetch_block(
+        &mut self,
+        rows: usize,
+        metrics: &Metrics,
+    ) -> std::result::Result<Vec<u32>, FetchError> {
+        // Fast path: aligned, nothing buffered, uniform cursors — generate
+        // straight into the output (zero intermediate buffering).
+        let uniform = self.cursors.iter().all(|&c| c == self.cursors[0]);
+        if uniform && self.tiles.is_empty() && rows % self.rows_per_tile == 0 {
+            let mut out = vec![0u32; rows * self.width];
+            for chunk in out.chunks_mut(self.rows_per_tile * self.width) {
+                self.backend
+                    .generate_into(self.rows_per_tile, chunk, metrics)
+                    .map_err(|e| FetchError::Backend(format!("{e:#}")))?;
+                metrics.add(&metrics.tiles_executed, 1);
+                metrics.add(&metrics.rows_generated, self.rows_per_tile as u64);
+            }
+            for c in self.cursors.iter_mut() {
+                *c += rows as u64;
+            }
+            self.base_row += rows as u64;
+            metrics.add(&metrics.numbers_delivered, (rows * self.width) as u64);
+            return Ok(out);
+        }
+        // Slow path: per-lane fetch into a transposed buffer.
+        let mut out = vec![0u32; rows * self.width];
+        let mut lane_buf = vec![0u32; rows];
+        for lane in 0..self.width {
+            self.fetch(lane, &mut lane_buf, metrics)?;
+            for (r, &v) in lane_buf.iter().enumerate() {
+                out[r * self.width + lane] = v;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{splitmix64, Prng32, ThunderingStream};
+
+    fn native_group(width: usize, rows_per_tile: usize, lag: u64) -> StreamGroup {
+        let batch = ThunderingBatch::new(splitmix64(42), width, 0);
+        StreamGroup::new(0, GroupBackend::Native(batch), rows_per_tile, lag)
+    }
+
+    #[test]
+    fn fetch_matches_scalar_stream() {
+        let m = Metrics::default();
+        let mut g = native_group(4, 8, 1024);
+        let mut buf = vec![0u32; 20];
+        g.fetch(2, &mut buf, &m).unwrap();
+        let mut s = ThunderingStream::new(splitmix64(42), 2);
+        let expect: Vec<u32> = (0..20).map(|_| s.next_u32()).collect();
+        assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn interleaved_fetches_preserve_order() {
+        let m = Metrics::default();
+        let mut g = native_group(3, 4, 1024);
+        let mut got = vec![Vec::new(); 3];
+        // Fetch in a scattered pattern.
+        for (lane, n) in [(0usize, 5usize), (1, 3), (0, 2), (2, 9), (1, 6), (0, 1)] {
+            let mut buf = vec![0u32; n];
+            g.fetch(lane, &mut buf, &m).unwrap();
+            got[lane].extend_from_slice(&buf);
+        }
+        for lane in 0..3 {
+            let mut s = ThunderingStream::new(splitmix64(42), lane as u64);
+            let expect: Vec<u32> = (0..got[lane].len()).map(|_| s.next_u32()).collect();
+            assert_eq!(got[lane], expect, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn lag_window_enforced() {
+        let m = Metrics::default();
+        let mut g = native_group(2, 4, 16);
+        let mut buf = vec![0u32; 16];
+        g.fetch(0, &mut buf, &m).unwrap(); // lane 0 at 16, lane 1 at 0
+        let mut buf2 = vec![0u32; 1];
+        let err = g.fetch(0, &mut buf2, &m).unwrap_err();
+        assert!(matches!(err, FetchError::LagWindowExceeded { .. }));
+        // Catching up lane 1 releases the window.
+        let mut buf3 = vec![0u32; 16];
+        g.fetch(1, &mut buf3, &m).unwrap();
+        assert!(g.fetch(0, &mut buf2, &m).is_ok());
+        assert_eq!(m.snapshot().lag_rejections, 1);
+    }
+
+    #[test]
+    fn pruning_bounds_buffer() {
+        let m = Metrics::default();
+        let mut g = native_group(2, 4, 64);
+        let mut buf = vec![0u32; 40];
+        g.fetch(0, &mut buf, &m).unwrap();
+        g.fetch(1, &mut buf, &m).unwrap();
+        // Both cursors at 40 -> everything consumable is pruned.
+        assert!(g.buffered_rows() <= 4);
+    }
+
+    #[test]
+    fn fetch_block_matches_batch() {
+        let m = Metrics::default();
+        let mut g = native_group(4, 8, 1024);
+        let block = g.fetch_block(16, &m).unwrap();
+        let mut batch = ThunderingBatch::new(splitmix64(42), 4, 0);
+        assert_eq!(block, batch.tile(16));
+    }
+
+    #[test]
+    fn fetch_block_after_partial_fetch_stays_consistent() {
+        let m = Metrics::default();
+        let mut g = native_group(2, 4, 1024);
+        let mut buf = vec![0u32; 3];
+        g.fetch(0, &mut buf, &m).unwrap(); // misalign cursors
+        let block = g.fetch_block(8, &m).unwrap();
+        // lane 0 rows must continue from row 3; lane 1 from row 0.
+        let mut s0 = ThunderingStream::new(splitmix64(42), 0);
+        for _ in 0..3 {
+            s0.next_u32();
+        }
+        let mut s1 = ThunderingStream::new(splitmix64(42), 1);
+        for r in 0..8 {
+            assert_eq!(block[r * 2], s0.next_u32(), "lane0 row {r}");
+            assert_eq!(block[r * 2 + 1], s1.next_u32(), "lane1 row {r}");
+        }
+    }
+
+    #[test]
+    fn metrics_counting() {
+        let m = Metrics::default();
+        let mut g = native_group(2, 8, 1024);
+        let mut buf = vec![0u32; 8];
+        g.fetch(0, &mut buf, &m).unwrap();
+        g.fetch(1, &mut buf, &m).unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.tiles_executed, 1);
+        assert_eq!(s.numbers_delivered, 16);
+        assert_eq!(s.fetch_misses, 1);
+        assert_eq!(s.fetch_hits, 1);
+    }
+}

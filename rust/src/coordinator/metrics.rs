@@ -1,0 +1,67 @@
+//! Lock-free service metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Tile executions dispatched to the backend.
+    pub tiles_executed: AtomicU64,
+    /// Rows (per-stream outputs × group width) generated.
+    pub rows_generated: AtomicU64,
+    /// 32-bit numbers delivered to clients.
+    pub numbers_delivered: AtomicU64,
+    /// Fetches that had to wait for a tile execution.
+    pub fetch_misses: AtomicU64,
+    /// Fetches served entirely from buffered rows.
+    pub fetch_hits: AtomicU64,
+    /// Fetches rejected because a stream lagged beyond the window.
+    pub lag_rejections: AtomicU64,
+    /// Total nanoseconds spent inside backend execution.
+    pub backend_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            tiles_executed: self.tiles_executed.load(Ordering::Relaxed),
+            rows_generated: self.rows_generated.load(Ordering::Relaxed),
+            numbers_delivered: self.numbers_delivered.load(Ordering::Relaxed),
+            fetch_misses: self.fetch_misses.load(Ordering::Relaxed),
+            fetch_hits: self.fetch_hits.load(Ordering::Relaxed),
+            lag_rejections: self.lag_rejections.load(Ordering::Relaxed),
+            backend_ns: self.backend_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub tiles_executed: u64,
+    pub rows_generated: u64,
+    pub numbers_delivered: u64,
+    pub fetch_misses: u64,
+    pub fetch_hits: u64,
+    pub lag_rejections: u64,
+    pub backend_ns: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tiles={} rows={} delivered={} hits={} misses={} lag_rejects={} backend={:.3}s",
+            self.tiles_executed,
+            self.rows_generated,
+            self.numbers_delivered,
+            self.fetch_hits,
+            self.fetch_misses,
+            self.lag_rejections,
+            self.backend_ns as f64 / 1e9,
+        )
+    }
+}

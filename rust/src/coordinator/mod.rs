@@ -1,0 +1,313 @@
+//! Layer-3 coordinator — the MISRN service.
+//!
+//! Shape of the system (vLLM-router-like, adapted to generation):
+//!
+//! ```text
+//!  clients ──fetch(stream, n)──▶ Coordinator ──┬─ group 0 (streams 0..p)
+//!                                              ├─ group 1 (streams p..2p)
+//!                                              │    ...each: TileState +
+//!                                              │    row buffer + cursors
+//!                                              ▼
+//!                                   TileExecutor (device thread)
+//!                                     └─ PJRT CPU: AOT HLO tiles
+//! ```
+//!
+//! * the **registry** hands out stream identities under the paper's
+//!   constraints (even distinct `h`, non-overlapping xorshift substreams);
+//! * each **group** shares one root recurrence across `p` streams (state
+//!   sharing, Sec. 3.3) and advances in lockstep with a bounded lag window;
+//! * the **device thread** owns the PJRT client (not `Send`) and executes
+//!   tile artifacts in submission order — the daisy chain's software twin.
+
+pub mod group;
+pub mod metrics;
+pub mod registry;
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use group::{FetchError, GroupBackend, StreamGroup};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{StreamRegistry, StreamSpec};
+
+use crate::prng::ThunderingBatch;
+use crate::runtime::executor::{TileExecutor, TileExecutorGuard};
+use crate::runtime::TileState;
+
+/// Which engine generates tiles.
+#[derive(Debug, Clone)]
+pub enum Engine {
+    /// Pure-Rust scalar engine (no artifacts required).
+    Native,
+    /// AOT Pallas tiles on the PJRT CPU client. The artifact is chosen per
+    /// group width from the manifest.
+    Pjrt { artifacts_dir: String },
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub engine: Engine,
+    /// Streams per group (must match an artifact width for PJRT).
+    pub group_width: usize,
+    /// Rows generated per tile execution.
+    pub rows_per_tile: usize,
+    /// Max lead (rows) of the fastest stream over the slowest in a group.
+    pub lag_window: u64,
+    /// Device-queue depth (backpressure bound for in-flight tiles).
+    pub queue_depth: usize,
+    /// Root seed; group g is seeded with splitmix64(root_seed ^ g).
+    pub root_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            engine: Engine::Native,
+            group_width: 64,
+            rows_per_tile: 1024,
+            lag_window: 1 << 16,
+            queue_depth: 4,
+            root_seed: 42,
+        }
+    }
+}
+
+/// The MISRN coordinator service.
+pub struct Coordinator {
+    config: Config,
+    registry: Mutex<StreamRegistry>,
+    groups: Vec<Mutex<StreamGroup>>,
+    metrics: Metrics,
+    executor: Option<TileExecutor>,
+    _executor_guard: Option<TileExecutorGuard>,
+    /// Artifact name used for PJRT groups (resolved once).
+    artifact: Option<String>,
+}
+
+impl Coordinator {
+    /// Create a coordinator serving `n_streams` streams.
+    pub fn new(config: Config, n_streams: u64) -> Result<Self> {
+        anyhow::ensure!(config.group_width > 0 && config.rows_per_tile > 0);
+        anyhow::ensure!(
+            n_streams % config.group_width as u64 == 0,
+            "n_streams must be a multiple of group_width"
+        );
+
+        let (executor, guard, artifact) = match &config.engine {
+            Engine::Native => (None, None, None),
+            Engine::Pjrt { artifacts_dir } => {
+                let guard = TileExecutor::spawn(artifacts_dir.clone(), config.queue_depth)?;
+                let executor = guard.executor.clone();
+                // Resolve the artifact matching (rows_per_tile, group_width).
+                let rows = config.rows_per_tile;
+                let width = config.group_width;
+                let name = executor
+                    .call(move |rt| {
+                        let name = rt
+                            .manifest
+                            .select_thundering(rows, width)
+                            .filter(|(_, info)| info.p == width && info.rows == rows)
+                            .map(|(n, _)| n.to_string())
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "no thundering artifact with p={width} rows={rows}; \
+                                     available: {:?}",
+                                    rt.manifest.artifacts.keys().collect::<Vec<_>>()
+                                )
+                            })?;
+                        // Eager compile: the PJRT compile of the artifact
+                        // (~100 ms) must not land on the first request's
+                        // latency (§Perf L3: p99 fix).
+                        rt.load(&name)?;
+                        Ok::<String, anyhow::Error>(name)
+                    })?
+                    .context("selecting artifact")?;
+                (Some(executor), Some(guard), Some(name))
+            }
+        };
+
+        let mut registry = StreamRegistry::new();
+        registry.register(n_streams)?;
+
+        let n_groups = (n_streams / config.group_width as u64) as usize;
+        let mut groups = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let first = g as u64 * config.group_width as u64;
+            let seed = crate::prng::splitmix64(config.root_seed ^ g as u64);
+            let backend = match (&config.engine, &executor, &artifact) {
+                (Engine::Native, _, _) => GroupBackend::Native(ThunderingBatch::new(
+                    seed,
+                    config.group_width,
+                    first,
+                )),
+                (Engine::Pjrt { .. }, Some(exec), Some(name)) => GroupBackend::Pjrt {
+                    executor: exec.clone(),
+                    artifact: name.clone(),
+                    state: TileState::new(seed, config.group_width, first),
+                },
+                _ => bail!("inconsistent engine setup"),
+            };
+            groups.push(Mutex::new(StreamGroup::new(
+                first,
+                backend,
+                config.rows_per_tile,
+                config.lag_window,
+            )));
+        }
+
+        Ok(Self {
+            config,
+            registry: Mutex::new(registry),
+            groups,
+            metrics: Metrics::default(),
+            executor,
+            _executor_guard: guard,
+            artifact,
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    pub fn n_streams(&self) -> u64 {
+        self.groups.len() as u64 * self.config.group_width as u64
+    }
+
+    pub fn artifact(&self) -> Option<&str> {
+        self.artifact.as_deref()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn spec(&self, stream: u64) -> Option<StreamSpec> {
+        self.registry.lock().unwrap().get(stream).cloned()
+    }
+
+    fn locate(&self, stream: u64) -> Result<(usize, usize)> {
+        let g = (stream / self.config.group_width as u64) as usize;
+        if g >= self.groups.len() {
+            bail!("stream {stream} not registered (have {})", self.n_streams());
+        }
+        Ok((g, (stream % self.config.group_width as u64) as usize))
+    }
+
+    /// Fill `out` with the next numbers of `stream`.
+    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<()> {
+        let (g, lane) = self.locate(stream)?;
+        let mut group = self.groups[g].lock().unwrap();
+        group.fetch(lane, out, &self.metrics).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Fetch `rows` synchronized rows for a whole group (row-major
+    /// `rows × group_width`) — the Monte-Carlo fast path.
+    pub fn fetch_group_block(&self, group: usize, rows: usize) -> Result<Vec<u32>> {
+        let g = self
+            .groups
+            .get(group)
+            .ok_or_else(|| anyhow!("group {group} out of range"))?;
+        g.lock().unwrap().fetch_block(rows, &self.metrics).map_err(|e| anyhow!("{e}"))
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The device executor, when running on PJRT (used by apps that submit
+    /// their own tile programs, e.g. pi/option pricing).
+    pub fn executor(&self) -> Option<&TileExecutor> {
+        self.executor.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{splitmix64, Prng32, ThunderingStream};
+
+    #[test]
+    fn native_fetch_matches_scalar() {
+        let c = Coordinator::new(Config::default(), 128).unwrap();
+        let mut buf = vec![0u32; 100];
+        c.fetch(70, &mut buf).unwrap();
+        // Stream 70 lives in group 1, seeded splitmix64(42 ^ 1).
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 70);
+        let expect: Vec<u32> = (0..100).map(|_| s.next_u32()).collect();
+        assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn unknown_stream_rejected() {
+        let c = Coordinator::new(Config::default(), 64).unwrap();
+        let mut buf = vec![0u32; 4];
+        assert!(c.fetch(64, &mut buf).is_err());
+    }
+
+    #[test]
+    fn misaligned_stream_count_rejected() {
+        assert!(Coordinator::new(Config::default(), 63).is_err());
+    }
+
+    #[test]
+    fn group_block_shape() {
+        let c = Coordinator::new(
+            Config { group_width: 16, rows_per_tile: 8, ..Default::default() },
+            32,
+        )
+        .unwrap();
+        let block = c.fetch_group_block(1, 24).unwrap();
+        assert_eq!(block.len(), 24 * 16);
+        assert_eq!(c.metrics().tiles_executed, 3);
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let c = Coordinator::new(
+            Config { group_width: 4, rows_per_tile: 4, ..Default::default() },
+            8,
+        )
+        .unwrap();
+        let mut a = vec![0u32; 8];
+        let mut b = vec![0u32; 8];
+        c.fetch(0, &mut a).unwrap();
+        c.fetch(4, &mut b).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn concurrent_fetches_consistent() {
+        use std::sync::Arc;
+        let c = Arc::new(
+            Coordinator::new(
+                Config { group_width: 8, rows_per_tile: 64, ..Default::default() },
+                64,
+            )
+            .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let stream = t * 8 + (t % 8);
+                let mut buf = vec![0u32; 257];
+                let mut all = Vec::new();
+                for _ in 0..4 {
+                    c.fetch(stream, &mut buf).unwrap();
+                    all.extend_from_slice(&buf);
+                }
+                (stream, all)
+            }));
+        }
+        for h in handles {
+            let (stream, got) = h.join().unwrap();
+            let g = stream / 8;
+            let mut s = ThunderingStream::new(splitmix64(42 ^ g), stream);
+            let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+            assert_eq!(got, expect, "stream {stream}");
+        }
+    }
+}

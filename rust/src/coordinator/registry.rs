@@ -1,0 +1,126 @@
+//! Stream registry: allocates stream identities and their generator
+//! parameters (leaf constant + decorrelator substream), enforcing the
+//! paper's constraints — h even and distinct (Hull–Dobell, Sec. 3.3),
+//! xorshift substreams non-overlapping (Sec. 3.2.3).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::prng::thundering::leaf_h;
+use crate::prng::xorshift::Xs128SubstreamAlloc;
+
+/// Immutable identity of one registered stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamSpec {
+    pub id: u64,
+    /// Leaf constant (even, unique).
+    pub h: u64,
+    /// Decorrelator state at stream origin (substream id·2^64 of master).
+    pub xs_origin: [u32; 4],
+}
+
+/// Allocates contiguous stream-id ranges and materializes their specs.
+pub struct StreamRegistry {
+    next_id: u64,
+    specs: BTreeMap<u64, StreamSpec>,
+    /// Amortized substream walker, positioned at `next_id`.
+    alloc: Xs128SubstreamAlloc,
+    /// Hard cap (the paper: up to 2^63 uncorrelated sequences).
+    capacity: u64,
+}
+
+impl StreamRegistry {
+    pub fn new() -> Self {
+        Self::with_capacity(1 << 62)
+    }
+
+    pub fn with_capacity(capacity: u64) -> Self {
+        Self {
+            next_id: 0,
+            specs: BTreeMap::new(),
+            alloc: Xs128SubstreamAlloc::new(),
+            capacity,
+        }
+    }
+
+    /// Register `n` new streams; returns their specs in id order.
+    pub fn register(&mut self, n: u64) -> Result<Vec<StreamSpec>> {
+        if self.next_id.saturating_add(n) > self.capacity {
+            bail!("registry capacity exceeded ({} + {n} > {})", self.next_id, self.capacity);
+        }
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let (id, xs) = self.alloc.next_substream();
+            debug_assert_eq!(id, self.next_id);
+            let spec = StreamSpec { id, h: leaf_h(id), xs_origin: xs };
+            debug_assert_eq!(spec.h % 2, 0, "Hull-Dobell: h must be even");
+            self.specs.insert(id, spec.clone());
+            out.push(spec);
+            self.next_id += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&StreamSpec> {
+        self.specs.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+impl Default for StreamRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::xorshift::xs128_stream_state;
+
+    #[test]
+    fn registers_unique_even_h() {
+        let mut r = StreamRegistry::new();
+        let specs = r.register(256).unwrap();
+        let mut hs: Vec<u64> = specs.iter().map(|s| s.h).collect();
+        assert!(hs.iter().all(|h| h % 2 == 0));
+        hs.sort_unstable();
+        hs.dedup();
+        assert_eq!(hs.len(), 256, "h must be distinct");
+    }
+
+    #[test]
+    fn xs_origins_match_direct_jump() {
+        let mut r = StreamRegistry::new();
+        let specs = r.register(5).unwrap();
+        for s in &specs {
+            assert_eq!(s.xs_origin, xs128_stream_state(s.id), "stream {}", s.id);
+        }
+    }
+
+    #[test]
+    fn sequential_ids() {
+        let mut r = StreamRegistry::new();
+        let a = r.register(3).unwrap();
+        let b = r.register(2).unwrap();
+        assert_eq!(a.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.iter().map(|s| s.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut r = StreamRegistry::with_capacity(4);
+        assert!(r.register(3).is_ok());
+        assert!(r.register(2).is_err());
+        assert!(r.register(1).is_ok());
+    }
+}

@@ -1,0 +1,25 @@
+//! FPGA substrate model — the stand-in for the paper's Alveo U250 testbed
+//! (repro band 0/5: no FPGA hardware here; see DESIGN.md §2).
+//!
+//! Three sub-models, each calibrated to the paper's published numbers:
+//!
+//! * [`rsgu`] / [`sou`] — *cycle-level* simulation of the root-state
+//!   generation unit (6-cycle DSP MAC latency hidden by advance-6
+//!   interleaving, Fig. 4) and the SOU daisy chain (Sec. 4.3). These
+//!   validate the architecture's timing claims (one state per cycle,
+//!   daisy-chain latency) and produce bit-exact outputs against the
+//!   reference engine.
+//! * [`resources`] — per-unit LUT/FF/DSP/BRAM cost model + the
+//!   frequency-vs-utilization curve (Fig. 5).
+//! * [`throughput`] — Tb/s as a function of instance count (Fig. 6), plus
+//!   the optimistic-scaling comparisons of Table 5 and the power model of
+//!   Table 7.
+
+pub mod power;
+pub mod resources;
+pub mod rsgu;
+pub mod sou;
+pub mod throughput;
+
+pub use resources::{FpgaPart, ResourceModel, ResourceUsage, U250};
+pub use throughput::{optimistic_scaling, thundering_throughput, ScalingRow};

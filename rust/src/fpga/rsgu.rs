@@ -1,0 +1,248 @@
+//! Cycle-level simulation of the Root State Generation Unit (Sec. 4.2,
+//! Fig. 4): the 64-bit MAC on DSP48E2s has a 6-cycle latency, which would
+//! stall a naive recursive design to one state per 6 cycles. ThundeRiNG
+//! instead runs 6 interleaved *advance-6* generators, each producing every
+//! 6th state, merged round-robin — one state per cycle after pipeline fill.
+//!
+//! The simulator models the MAC as a 6-stage shift pipeline and reproduces
+//! the timing diagrams of Fig. 4 exactly; outputs are checked bit-for-bit
+//! against the scalar LCG.
+
+use crate::prng::lcg::{lcg_advance_params, lcg_jump, LCG_A, LCG_C};
+
+/// DSP48E2 MAC latency in cycles (Fig. 4a).
+pub const MAC_LATENCY: usize = 6;
+
+/// An in-flight MAC operation.
+#[derive(Clone, Copy, Debug)]
+struct MacOp {
+    result: u64,
+    remaining: usize,
+}
+
+/// One pipelined state generator running the advance-k recurrence.
+struct StateGen {
+    a_k: u64,
+    c_k: u64,
+    /// State most recently *issued* into the MAC.
+    issued: u64,
+    pipeline: Option<MacOp>,
+}
+
+impl StateGen {
+    /// Naive generator: state register holds `start_state`; the first MAC
+    /// (computing the next state) issues on the first cycle.
+    fn new(start_state: u64, k: u64) -> Self {
+        let (a_k, c_k) = lcg_advance_params(k, LCG_A, LCG_C);
+        Self { a_k, c_k, issued: start_state, pipeline: None }
+    }
+
+    /// Primed generator (the advance-6 design): `first_output` was computed
+    /// offline with Brown's parameters (Sec. 4.2 — compile-time O(log i))
+    /// and preloaded; it flows through the MAC pipeline and retires after
+    /// MAC_LATENCY cycles, hiding the fill.
+    fn primed(first_output: u64, k: u64) -> Self {
+        let (a_k, c_k) = lcg_advance_params(k, LCG_A, LCG_C);
+        Self {
+            a_k,
+            c_k,
+            issued: first_output,
+            pipeline: Some(MacOp { result: first_output, remaining: MAC_LATENCY }),
+        }
+    }
+
+    /// Advance one cycle; returns a completed state if the MAC retired one.
+    fn tick(&mut self) -> Option<u64> {
+        let mut out = None;
+        if let Some(op) = &mut self.pipeline {
+            op.remaining -= 1;
+            if op.remaining == 0 {
+                out = Some(op.result);
+                self.pipeline = None;
+            }
+        }
+        if self.pipeline.is_none() {
+            // Issue the next MAC: full 6-cycle latency, single op in flight
+            // per generator (the true-dependency constraint of Sec. 4.2).
+            let next = self.issued.wrapping_mul(self.a_k).wrapping_add(self.c_k);
+            self.pipeline = Some(MacOp { result: next, remaining: MAC_LATENCY });
+            self.issued = next;
+        }
+        out
+    }
+}
+
+/// RSGU design variants compared in Fig. 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RsguDesign {
+    /// Fig. 4(a): single generator, stalls on the 6-cycle MAC.
+    NaiveDsp,
+    /// Fig. 4(b): single-cycle LUT MAC, but the long combinational path
+    /// caps the clock (modelled in `effective_rate`).
+    LutMac,
+    /// Fig. 4(c): six interleaved advance-6 generators (the paper's design).
+    Advance6,
+}
+
+/// Cycle-level RSGU simulator.
+pub struct Rsgu {
+    design: RsguDesign,
+    gens: Vec<StateGen>,
+    /// Round-robin merge cursor.
+    next_gen: usize,
+    /// For LutMac: current state (retires every cycle).
+    lut_state: u64,
+    pub cycles: u64,
+    /// Completed-but-unmerged outputs per generator (FIFO depth 1 suffices:
+    /// retirement is round-robin aligned).
+    ready: Vec<Option<u64>>,
+}
+
+impl Rsgu {
+    pub fn new(design: RsguDesign, seed: u64) -> Self {
+        let gens: Vec<StateGen> = match design {
+            RsguDesign::NaiveDsp => vec![StateGen::new(seed, 1)],
+            RsguDesign::LutMac => Vec::new(),
+            RsguDesign::Advance6 => (0..MAC_LATENCY as u64)
+                // Generator g is preloaded with x_{g+1} (computed offline)
+                // and strides 6: it produces x_{g+1}, x_{g+7}, x_{g+13}, ...
+                .map(|g| {
+                    StateGen::primed(lcg_jump(seed, g + 1, LCG_A, LCG_C), MAC_LATENCY as u64)
+                })
+                .collect(),
+        };
+        let n = gens.len();
+        Self { design, gens, next_gen: 0, lut_state: seed, cycles: 0, ready: vec![None; n] }
+    }
+
+    /// Advance one clock cycle; returns the root state merged out this
+    /// cycle, if any.
+    pub fn tick(&mut self) -> Option<u64> {
+        self.cycles += 1;
+        match self.design {
+            RsguDesign::LutMac => {
+                self.lut_state = self.lut_state.wrapping_mul(LCG_A).wrapping_add(LCG_C);
+                Some(self.lut_state)
+            }
+            RsguDesign::NaiveDsp => self.gens[0].tick(),
+            RsguDesign::Advance6 => {
+                for (g, gen) in self.gens.iter_mut().enumerate() {
+                    if let Some(v) = gen.tick() {
+                        debug_assert!(self.ready[g].is_none(), "merge FIFO overflow");
+                        self.ready[g] = Some(v);
+                    }
+                }
+                // Merge in original sequence order: generator g holds
+                // x_{g+6k}, so round-robin over g reconstructs x_1, x_2, ...
+                if let Some(v) = self.ready[self.next_gen].take() {
+                    self.next_gen = (self.next_gen + 1) % self.gens.len();
+                    Some(v)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Run until `n` states are produced; returns (states, cycles taken).
+    pub fn run(&mut self, n: usize) -> (Vec<u64>, u64) {
+        let start = self.cycles;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if let Some(v) = self.tick() {
+                out.push(v);
+            }
+            assert!(
+                self.cycles - start < (n as u64 + 64) * 8,
+                "RSGU stalled: {} states in {} cycles",
+                out.len(),
+                self.cycles - start
+            );
+        }
+        (out, self.cycles - start)
+    }
+
+    /// Steady-state states per cycle (Fig. 4 comparison), including the
+    /// frequency penalty of the LUT-MAC variant.
+    pub fn effective_rate(design: RsguDesign) -> f64 {
+        match design {
+            // 1 state / 6 cycles at full DSP frequency.
+            RsguDesign::NaiveDsp => 1.0 / MAC_LATENCY as f64,
+            // 1 state / cycle but the combinational 64-bit MAC path caps
+            // the clock at roughly 1/3 of the DSP pipeline frequency
+            // (Sec. 4.2: "runs at a much lower frequency").
+            RsguDesign::LutMac => 1.0 / 3.0,
+            // 1 state / cycle at full frequency.
+            RsguDesign::Advance6 => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::lcg::lcg_step;
+
+    fn reference(seed: u64, n: usize) -> Vec<u64> {
+        let mut x = seed;
+        (0..n)
+            .map(|_| {
+                x = lcg_step(x);
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn advance6_produces_states_in_order() {
+        let mut r = Rsgu::new(RsguDesign::Advance6, 42);
+        let (states, _) = r.run(100);
+        assert_eq!(states, reference(42, 100));
+    }
+
+    #[test]
+    fn advance6_one_state_per_cycle_steady() {
+        let mut r = Rsgu::new(RsguDesign::Advance6, 7);
+        let (_, warm_cycles) = r.run(6); // pipeline fill
+        assert!(warm_cycles <= 2 * MAC_LATENCY as u64);
+        let (_, cycles) = r.run(600);
+        assert_eq!(cycles, 600, "steady state must merge one state per cycle");
+    }
+
+    #[test]
+    fn naive_dsp_six_cycles_per_state() {
+        let mut r = Rsgu::new(RsguDesign::NaiveDsp, 42);
+        let (states, cycles) = r.run(50);
+        assert_eq!(states, reference(42, 50));
+        assert!(cycles >= 50 * MAC_LATENCY as u64, "{cycles}");
+    }
+
+    #[test]
+    fn lut_mac_one_per_cycle() {
+        let mut r = Rsgu::new(RsguDesign::LutMac, 42);
+        let (states, cycles) = r.run(50);
+        assert_eq!(states, reference(42, 50));
+        assert_eq!(cycles, 50);
+    }
+
+    #[test]
+    fn effective_rates_ordered_as_fig4() {
+        let adv = Rsgu::effective_rate(RsguDesign::Advance6);
+        let lut = Rsgu::effective_rate(RsguDesign::LutMac);
+        let naive = Rsgu::effective_rate(RsguDesign::NaiveDsp);
+        assert!(adv > lut && lut > naive);
+    }
+
+    #[test]
+    fn pipeline_fill_latency_is_mac_latency() {
+        let mut r = Rsgu::new(RsguDesign::Advance6, 1);
+        let mut first_at = 0u64;
+        for c in 1..=20u64 {
+            if r.tick().is_some() {
+                first_at = c;
+                break;
+            }
+        }
+        assert_eq!(first_at, MAC_LATENCY as u64);
+    }
+}

@@ -1,0 +1,28 @@
+//! ThundeRiNG reproduction — Rust + JAX + Pallas (AOT via xla/PJRT).
+//!
+//! ThundeRiNG (Tan et al., ICS '21) generates **m**ultiple **i**ndependent
+//! **s**equences of **r**andom **n**umbers (MISRN) by sharing a single LCG
+//! root-state transition across many cheap per-stream "sequence output
+//! units" (leaf add + XSH-RR permutation + xorshift128 decorrelation).
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas tile kernels (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 2** — JAX graphs composing the kernels
+//!   (`python/compile/model.py`).
+//! * **Layer 3** — this crate: stream registry, request router/batcher,
+//!   PJRT runtime, statistical-quality battery, FPGA substrate model, and
+//!   the paper's two case-study applications.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! kernels once; everything else is this self-contained binary.
+
+pub mod apps;
+pub mod coordinator;
+pub mod fpga;
+pub mod prng;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,276 @@
+//! `thundering` — Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   generate     stream numbers from the coordinator to stdout/devnull
+//!   quality      run the MiniCrush battery on one generator
+//!   report       regenerate a paper table/figure (or `all`)
+//!   pi           Monte-Carlo pi estimation (pjrt | native)
+//!   bs           Monte-Carlo option pricing (pjrt | native)
+//!   throughput   measure coordinator serving throughput on this host
+//!   fpga-model   print the FPGA model design point for n instances
+
+use std::io::Write;
+
+use anyhow::{bail, Result};
+
+use thundering::apps;
+use thundering::coordinator::{Config, Coordinator, Engine};
+use thundering::fpga::resources::ResourceModel;
+use thundering::fpga::throughput::thundering_throughput;
+use thundering::report;
+use thundering::runtime::executor::TileExecutor;
+use thundering::stats::Scale;
+use thundering::util::cli::Args;
+
+const VALUE_OPTS: &[&str] = &[
+    "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
+    "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile",
+];
+
+fn main() {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let args = match Args::parse(argv, VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "quality" => cmd_quality(&args),
+        "report" => cmd_report(&args),
+        "pi" => cmd_pi(&args),
+        "bs" => cmd_bs(&args),
+        "throughput" => cmd_throughput(&args),
+        "fpga-model" => cmd_fpga_model(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "thundering — ThundeRiNG (ICS'21) reproduction\n\n\
+         USAGE: thundering <command> [options]\n\n\
+         COMMANDS:\n  \
+         generate    --streams N --count N [--stream I] [--engine native|pjrt] [--artifacts DIR] [--out hex|none]\n  \
+         quality     --gen NAME [--scale quick|standard|deep]\n  \
+         report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
+         pi          --draws N [--engine pjrt|native] [--artifacts DIR] [--threads N]\n  \
+         bs          --draws N [--engine pjrt|native] [--artifacts DIR] [--threads N]\n  \
+         throughput  --streams N --rows N [--engine native|pjrt] [--artifacts DIR]\n  \
+         fpga-model  --n INSTANCES"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get("artifacts")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("THUNDERING_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn engine(args: &Args, default_native: bool) -> Result<Engine> {
+    match args.get_or("engine", if default_native { "native" } else { "pjrt" }) {
+        "native" => Ok(Engine::Native),
+        "pjrt" => Ok(Engine::Pjrt { artifacts_dir: artifacts_dir(args) }),
+        other => bail!("unknown engine {other:?} (native|pjrt)"),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let streams = args.get_u64("streams", 64)?;
+    let count = args.get_usize("count", 1024)?;
+    let stream = args.get_u64("stream", 0)?;
+    let config = Config {
+        engine: engine(args, true)?,
+        group_width: args.get_usize("group-width", 64)?,
+        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
+        lag_window: u64::MAX / 2, // single consumer
+        root_seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let c = Coordinator::new(config, streams)?;
+    let mut buf = vec![0u32; count];
+    c.fetch(stream, &mut buf)?;
+    match args.get_or("out", "hex") {
+        "hex" => {
+            let stdout = std::io::stdout();
+            let mut w = stdout.lock();
+            for chunk in buf.chunks(8) {
+                for v in chunk {
+                    write!(w, "{v:08x} ")?;
+                }
+                writeln!(w)?;
+            }
+        }
+        "none" => {}
+        other => bail!("unknown --out {other:?}"),
+    }
+    eprintln!("metrics: {}", c.metrics());
+    Ok(())
+}
+
+fn cmd_quality(args: &Args) -> Result<()> {
+    let name = args.get_or("gen", "thundering");
+    let scale = Scale::parse(args.get_or("scale", "quick"))
+        .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
+    print!("{}", report::quality_one(name, scale)?);
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.flag("quick");
+    let scale = if quick { Scale::Quick } else { Scale::Standard };
+    let art = artifacts_dir(args);
+    let art_opt =
+        std::path::Path::new(&art).join("manifest.json").exists().then_some(art.as_str());
+    let out = match which {
+        "table1" => report::table1()?,
+        "table2" => report::table2(scale, if quick { 1 << 24 } else { 1 << 28 })?,
+        "table3" => report::table3(if quick { 100 } else { 1000 }, 1 << 14)?,
+        "table4" => report::table4(if quick { 1 << 22 } else { 1 << 26 })?,
+        "table5" => report::table5()?,
+        "table6" => report::table6()?,
+        "table7" => report::table7()?,
+        "fig5" => report::fig5()?,
+        "fig6" => report::fig6()?,
+        "fig7" => report::fig7(if quick { 8 } else { 12 }, 1 << 16)?,
+        "fig8" | "fig9" => {
+            let guard = match art_opt {
+                Some(dir) => Some(TileExecutor::spawn(dir.to_string(), 4)?),
+                None => None,
+            };
+            report::fig8_or_9(
+                which,
+                guard.as_ref().map(|g| &g.executor),
+                if quick { &[20, 22, 24] } else { &[20, 22, 24, 26, 28] },
+            )?
+        }
+        "all" => report::run_all(art_opt, quick)?,
+        other => bail!("unknown report {other:?}"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_pi(args: &Args) -> Result<()> {
+    let draws = args.get_u64("draws", 1 << 24)?;
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8),
+    )?;
+    let run = match args.get_or("engine", "pjrt") {
+        "pjrt" => {
+            let guard = TileExecutor::spawn(artifacts_dir(args), 4)?;
+            apps::pi::run_pjrt(&guard.executor, draws, args.get_u64("seed", 42)?)?
+        }
+        "native" => apps::pi::run_native(threads, draws, args.get_u64("seed", 42)?)?,
+        other => bail!("unknown engine {other:?}"),
+    };
+    println!(
+        "pi({} draws, {}) = {:.6}  |err| = {:.2e}  time = {:.4}s  rate = {}",
+        run.draws,
+        run.engine,
+        run.result,
+        (run.result - std::f64::consts::PI).abs(),
+        run.seconds,
+        thundering::util::fmt_rate(run.draws_per_sec()),
+    );
+    Ok(())
+}
+
+fn cmd_bs(args: &Args) -> Result<()> {
+    let draws = args.get_u64("draws", 1 << 24)?;
+    let threads = args.get_usize(
+        "threads",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8),
+    )?;
+    let params = thundering::runtime::BsParams::default();
+    let run = match args.get_or("engine", "pjrt") {
+        "pjrt" => {
+            let guard = TileExecutor::spawn(artifacts_dir(args), 4)?;
+            apps::option_pricing::run_pjrt(
+                &guard.executor,
+                draws,
+                args.get_u64("seed", 42)?,
+                params,
+            )?
+        }
+        "native" => {
+            apps::option_pricing::run_native(threads, draws, args.get_u64("seed", 42)?, params)?
+        }
+        other => bail!("unknown engine {other:?}"),
+    };
+    let closed = apps::black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
+    println!(
+        "call({} draws, {}) = {:.4}  closed-form = {:.4}  |err| = {:.2e}  time = {:.4}s  rate = {}",
+        run.draws,
+        run.engine,
+        run.result,
+        closed,
+        (run.result - closed).abs(),
+        run.seconds,
+        thundering::util::fmt_rate(run.draws_per_sec()),
+    );
+    Ok(())
+}
+
+fn cmd_throughput(args: &Args) -> Result<()> {
+    let streams = args.get_u64("streams", 256)?;
+    let rows = args.get_usize("rows", 1 << 16)?;
+    let config = Config {
+        engine: engine(args, true)?,
+        group_width: args.get_usize("group-width", 64)?,
+        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
+        ..Default::default()
+    };
+    let rows_per_tile = config.rows_per_tile;
+    let c = Coordinator::new(config, streams)?;
+    let t0 = std::time::Instant::now();
+    let mut total = 0u64;
+    for g in 0..c.n_groups() {
+        let rows_aligned = (rows - rows % rows_per_tile).max(rows_per_tile);
+        let block = c.fetch_group_block(g, rows_aligned)?;
+        total += block.len() as u64;
+        std::hint::black_box(&block);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s)\nmetrics: {}",
+        thundering::util::fmt_rate(total as f64 / secs),
+        total as f64 * 32.0 / secs / 1e12,
+        c.metrics()
+    );
+    Ok(())
+}
+
+fn cmd_fpga_model(args: &Args) -> Result<()> {
+    let n = args.get_u64("n", 2048)?;
+    let m = ResourceModel::default();
+    let r = m.fig5_row(n);
+    println!(
+        "n={} LUT={:.2}% FF={:.2}% DSP={:.2}% BRAM={:.2}% f={:.0}MHz thr={:.2}Tb/s",
+        n,
+        r.lut_pct,
+        r.ff_pct,
+        r.dsp_pct,
+        r.bram_pct,
+        r.freq_mhz,
+        thundering_throughput(&m, n)
+    );
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Scalar PRNG implementations — ThundeRiNG core and every comparator the
+//! paper evaluates against (Table 1).
+//!
+//! These power (a) the statistical-quality battery (`crate::stats`), (b) the
+//! CPU baselines of Fig. 7, (c) known-answer cross-checks against the Python
+//! oracle (`python/compile/kernels/ref.py`), and (d) the native fallback
+//! path of the coordinator.
+
+pub mod lcg;
+pub mod mrg32k3a;
+pub mod mt19937;
+pub mod pcg;
+pub mod philox;
+pub mod tausworthe;
+pub mod thundering;
+pub mod xoroshiro;
+pub mod xorshift;
+
+pub use lcg::{Lcg64, LCG_A, LCG_C};
+pub use pcg::{PcgXshRr64, PcgXshRs64};
+pub use mrg32k3a::Mrg32k3a;
+pub use mt19937::Mt19937;
+pub use philox::Philox4x32;
+pub use tausworthe::LutSr;
+pub use thundering::{ThunderingBatch, ThunderingStream};
+pub use xoroshiro::Xoroshiro128StarStar;
+pub use xorshift::Xorshift128;
+
+/// A generator of 32-bit uniform random words — the common output unit the
+/// paper normalizes all throughput comparisons to (Sec. 5.1.4).
+pub trait Prng32: Send {
+    fn next_u32(&mut self) -> u32;
+
+    /// Short stable identifier used in reports and CLI flags.
+    fn name(&self) -> &'static str;
+
+    /// Fill a buffer; overridable for batch-structured generators.
+    fn fill_u32(&mut self, buf: &mut [u32]) {
+        for v in buf.iter_mut() {
+            *v = self.next_u32();
+        }
+    }
+
+    /// Next f32 uniform in [0, 1) from the top 24 bits (matches the Layer-2
+    /// `uniforms_f32` conversion bit-for-bit).
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Next f64 uniform in [0, 1) built from 53 bits across two outputs.
+    fn next_f64(&mut self) -> f64 {
+        let hi = (self.next_u32() >> 6) as u64; // 26 bits
+        let lo = (self.next_u32() >> 5) as u64; // 27 bits
+        ((hi << 27) | lo) as f64 * (1.0 / 9_007_199_254_740_992.0)
+    }
+}
+
+/// A family of independent streams (multistream or substream): the unit the
+/// MISRN evaluation works over.
+pub trait StreamFamily {
+    type Stream: Prng32;
+
+    /// The `i`-th independent stream of the family.
+    fn stream(&self, i: u64) -> Self::Stream;
+
+    fn family_name(&self) -> &'static str;
+}
+
+impl Prng32 for Box<dyn Prng32> {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (**self).next_u32()
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// splitmix64 — deterministic seed derivation (same constants as the Python
+/// side's `params.splitmix64`).
+#[inline]
+pub fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A splitmix64 sequence starting from `seed` (handy for seeding batteries).
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+impl Prng32 for SplitMix64 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    fn name(&self) -> &'static str {
+        "splitmix64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix64_known_answer() {
+        // Reference values from the canonical splitmix64 (Vigna).
+        let mut s = SplitMix64::new(0);
+        assert_eq!(s.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(s.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(s.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn splitmix64_pure_matches_python_params() {
+        // params.splitmix64(42) on the Python side.
+        assert_eq!(splitmix64(42), 13679457532755275413);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut s = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let v = s.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut s = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let v = s.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,356 @@
+//! ThundeRiNG core — scalar (per-stream) and batch (state-sharing) forms.
+//!
+//! A ThundeRiNG stream couples three pieces (paper Sec. 3):
+//!   1. root LCG transition  `x' = a·x + c (mod 2^64)`      (shared)
+//!   2. leaf transition      `w  = x' + h_i (mod 2^64)`     (per stream)
+//!   3. output               `xsh_rr(w) XOR xorshift128_i`  (per stream)
+//!
+//! [`ThunderingStream`] owns a private copy of the root recurrence — the
+//! form used for statistical testing and as a drop-in `Prng32`.
+//! [`ThunderingBatch`] is the CPU port of the paper's *state-sharing*
+//! mechanism (Sec. 3.3 / Fig. 7): one root multiply per step feeds `p`
+//! streams whose per-stream work is add/rotate/xor only.
+
+use super::lcg::{lcg_jump, lcg_step, LCG_A, LCG_C};
+use super::xorshift::{xs128_stream_state, Xorshift128, Xs128SubstreamAlloc};
+use super::{Prng32, StreamFamily};
+
+/// PCG XSH-RR 64→32 output permutation (O'Neill 2014; paper Sec. 3.4).
+#[inline]
+pub fn xsh_rr(w: u64) -> u32 {
+    let xored = (((w >> 18) ^ w) >> 27) as u32;
+    let rot = (w >> 59) as u32;
+    xored.rotate_right(rot)
+}
+
+/// Golden-ratio multiplier for the leaf schedule (odd ⇒ `i ↦ i·GOLDEN` is a
+/// bijection mod 2^63).
+pub const LEAF_GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Leaf constant for stream `i`: `h_i = 2·(i·GOLDEN mod 2^63)`.
+///
+/// Sec. 3.3 requires `h` even (so the induced leaf increment `l·m + c − a·h`
+/// stays odd and Hull–Dobell gives the full 2^64 period) and distinct. We
+/// additionally *spread* the constants across the 64-bit space: clustered
+/// h (0,2,4,…) leave leaf states identical in the bits XSH-RR samples, so
+/// the permuted-LCG component cancels between streams and inter-stream
+/// quality degrades measurably (caught by our interleaved matrix-rank test;
+/// see DESIGN.md Sec. 2). Distinct for all i < 2^63 by bijectivity.
+#[inline]
+pub fn leaf_h(i: u64) -> u64 {
+    (i.wrapping_mul(LEAF_GOLDEN) & ((1 << 63) - 1)) * 2
+}
+
+/// One independent ThundeRiNG sequence.
+#[derive(Clone, Debug)]
+pub struct ThunderingStream {
+    root: u64,
+    h: u64,
+    xs: Xorshift128,
+}
+
+impl ThunderingStream {
+    /// Stream `i` of the canonical family (root seeded from `root_seed`,
+    /// decorrelator = substream `i` of the master xorshift128 sequence).
+    pub fn new(root_seed: u64, i: u64) -> Self {
+        Self {
+            root: root_seed,
+            h: leaf_h(i),
+            xs: Xorshift128::new(xs128_stream_state(i)),
+        }
+    }
+
+    /// Construct from explicit raw state (used by the coordinator registry
+    /// and the artifact cross-check tests).
+    pub fn from_parts(root: u64, h: u64, xs_state: [u32; 4]) -> Self {
+        Self { root, h, xs: Xorshift128::new(xs_state) }
+    }
+
+    /// Jump the root recurrence `k` steps (decorrelator follows: it emits
+    /// one word per root step, so it jumps `k` too).
+    pub fn jump(&mut self, k: u64) {
+        self.root = lcg_jump(self.root, k, LCG_A, LCG_C);
+        let jumped = super::xorshift::xs128_jump(self.xs.state(), k as u128);
+        self.xs = Xorshift128::new(jumped);
+    }
+
+    pub fn root_state(&self) -> u64 {
+        self.root
+    }
+
+    pub fn xs_state(&self) -> [u32; 4] {
+        self.xs.state()
+    }
+}
+
+impl Prng32 for ThunderingStream {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.root = lcg_step(self.root);
+        let w = self.root.wrapping_add(self.h);
+        xsh_rr(w) ^ self.xs.next_u32()
+    }
+
+    fn name(&self) -> &'static str {
+        "thundering"
+    }
+}
+
+/// The canonical stream family (fixed root seed per family).
+pub struct ThunderingFamily {
+    pub root_seed: u64,
+}
+
+impl ThunderingFamily {
+    pub fn new(root_seed: u64) -> Self {
+        Self { root_seed }
+    }
+}
+
+impl StreamFamily for ThunderingFamily {
+    type Stream = ThunderingStream;
+
+    fn stream(&self, i: u64) -> ThunderingStream {
+        ThunderingStream::new(self.root_seed, i)
+    }
+
+    fn family_name(&self) -> &'static str {
+        "thundering"
+    }
+}
+
+/// Ablation variants for Tables 3/4 (Sec. 5.2.2/5.2.3): which of the two
+/// quality mechanisms are enabled on top of the raw leaf LCG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ablation {
+    /// Raw LCG with high-32 truncation — the "LCG Baseline" column.
+    LcgBaseline,
+    /// Truncation output XOR decorrelator — "LCG + Decorrelation".
+    Decorrelation,
+    /// XSH-RR permutation only — "LCG + Permutation".
+    Permutation,
+    /// Permutation + decorrelation — full ThundeRiNG.
+    Full,
+}
+
+impl Ablation {
+    pub const ALL: [Ablation; 4] =
+        [Ablation::LcgBaseline, Ablation::Decorrelation, Ablation::Permutation, Ablation::Full];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Ablation::LcgBaseline => "LCG Baseline",
+            Ablation::Decorrelation => "LCG + Decorrelation",
+            Ablation::Permutation => "LCG + Permutation",
+            Ablation::Full => "ThundeRiNG",
+        }
+    }
+}
+
+/// A stream with a configurable ablation (quality experiments only).
+#[derive(Clone, Debug)]
+pub struct AblatedStream {
+    root: u64,
+    h: u64,
+    xs: Xorshift128,
+    mode: Ablation,
+}
+
+impl AblatedStream {
+    /// All ablation columns share the production (spread) leaf schedule so
+    /// each column isolates exactly one mechanism. Truncation still leaks
+    /// the shared root state: streams whose `h` values nearly agree in the
+    /// top 32 bits are almost perfectly correlated (Table 3's ≈0.998
+    /// baseline — the max over random pairs finds such a pair), which is
+    /// what the permutation and decorrelator must fix.
+    pub fn new(root_seed: u64, i: u64, mode: Ablation) -> Self {
+        Self {
+            root: root_seed,
+            h: leaf_h(i),
+            xs: Xorshift128::new(xs128_stream_state(i)),
+            mode,
+        }
+    }
+}
+
+impl Prng32 for AblatedStream {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.root = lcg_step(self.root);
+        let w = self.root.wrapping_add(self.h);
+        match self.mode {
+            Ablation::LcgBaseline => (w >> 32) as u32,
+            Ablation::Decorrelation => ((w >> 32) as u32) ^ self.xs.next_u32(),
+            Ablation::Permutation => xsh_rr(w),
+            Ablation::Full => xsh_rr(w) ^ self.xs.next_u32(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "thundering-ablated"
+    }
+}
+
+/// State-sharing batch generator: the CPU port evaluated in Fig. 7.
+///
+/// Per step: **one** root multiply, then `p` lanes of add/rotate/xor. The
+/// output is row-major `(step, stream)` — identical layout to the Pallas
+/// tile kernel, so tile outputs can be cross-checked bit-for-bit.
+pub struct ThunderingBatch {
+    root: u64,
+    h: Vec<u64>,
+    xs: Vec<[u32; 4]>,
+}
+
+impl ThunderingBatch {
+    /// Batch over streams `first_stream .. first_stream + p`.
+    pub fn new(root_seed: u64, p: usize, first_stream: u64) -> Self {
+        let h = (0..p as u64).map(|i| leaf_h(first_stream + i)).collect();
+        let mut alloc = Xs128SubstreamAlloc::starting_at(first_stream);
+        let xs = (0..p).map(|_| alloc.next_substream().1).collect();
+        Self { root: root_seed, h, xs }
+    }
+
+    pub fn from_parts(root: u64, h: Vec<u64>, xs: Vec<[u32; 4]>) -> Self {
+        assert_eq!(h.len(), xs.len());
+        Self { root, h, xs }
+    }
+
+    pub fn width(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn root_state(&self) -> u64 {
+        self.root
+    }
+
+    pub fn xs_states(&self) -> &[[u32; 4]] {
+        &self.xs
+    }
+
+    /// Generate `rows` steps into `out` (len = rows·p, row-major).
+    pub fn fill_rows(&mut self, rows: usize, out: &mut [u32]) {
+        let p = self.h.len();
+        assert_eq!(out.len(), rows * p);
+        let mut root = self.root;
+        for r in 0..rows {
+            root = lcg_step(root); // the single shared multiply
+            let row = &mut out[r * p..(r + 1) * p];
+            for i in 0..p {
+                let w = root.wrapping_add(self.h[i]);
+                let [x, y, z, wst] = self.xs[i];
+                let t = x ^ (x << 11);
+                let new_w = wst ^ (wst >> 19) ^ t ^ (t >> 8);
+                self.xs[i] = [y, z, wst, new_w];
+                row[i] = xsh_rr(w) ^ new_w;
+            }
+        }
+        self.root = root;
+    }
+
+    /// Convenience: allocate and fill a rows×p tile.
+    pub fn tile(&mut self, rows: usize) -> Vec<u32> {
+        let mut out = vec![0u32; rows * self.width()];
+        self.fill_rows(rows, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_matches_scalar_streams() {
+        let p = 5;
+        let mut batch = ThunderingBatch::new(999, p, 0);
+        let tile = batch.tile(16);
+        for i in 0..p as u64 {
+            let mut s = ThunderingStream::new(999, i);
+            for n in 0..16 {
+                assert_eq!(tile[n * p + i as usize], s.next_u32(), "row {n} stream {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_offset_streams_match() {
+        let p = 3;
+        let first = 100;
+        let mut batch = ThunderingBatch::new(7, p, first);
+        let tile = batch.tile(8);
+        for i in 0..p as u64 {
+            let mut s = ThunderingStream::new(7, first + i);
+            for n in 0..8 {
+                assert_eq!(tile[n * p + i as usize], s.next_u32());
+            }
+        }
+    }
+
+    #[test]
+    fn stream_jump_equals_steps() {
+        let mut a = ThunderingStream::new(1, 3);
+        let mut b = ThunderingStream::new(1, 3);
+        for _ in 0..1000 {
+            a.next_u32();
+        }
+        b.jump(1000);
+        assert_eq!(a.root_state(), b.root_state());
+        assert_eq!(a.xs_state(), b.xs_state());
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn ablation_full_equals_stream() {
+        let mut a = AblatedStream::new(5, 2, Ablation::Full);
+        let mut s = ThunderingStream::new(5, 2);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), s.next_u32());
+        }
+    }
+
+    #[test]
+    fn distinct_streams_differ() {
+        let mut a = ThunderingStream::new(5, 0);
+        let mut b = ThunderingStream::new(5, 1);
+        let va: Vec<u32> = (0..64).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..64).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn xsh_rr_matches_python_oracle() {
+        // Values from python ref.xsh_rr.
+        assert_eq!(xsh_rr(0), 0);
+        assert_eq!(xsh_rr(1), 0);
+        assert_eq!(xsh_rr(0x0123_4567_89AB_CDEF), 0x2468_A5EB);
+        assert_eq!(xsh_rr(u64::MAX), 0xFFF0_0001);
+        assert_eq!(xsh_rr(LCG_A), 0xE4C1_4788);
+    }
+
+    #[test]
+    fn tile_matches_python_oracle() {
+        // ref.thundering_tile_ref(splitmix64(42), leaf_increments(3),
+        //                         xs128_stream_states(3), block=4)
+        let mut batch = ThunderingBatch::new(crate::prng::splitmix64(42), 3, 0);
+        let tile = batch.tile(4);
+        let expect: [[u32; 3]; 4] = [
+            [1809276457, 2686675365, 2526150499],
+            [3112793216, 1350836975, 2822947974],
+            [58361432, 3945535257, 822360324],
+            [4212462168, 877762472, 1272071769],
+        ];
+        for (n, row) in expect.iter().enumerate() {
+            assert_eq!(&tile[n * 3..(n + 1) * 3], row, "row {n}");
+        }
+        assert_eq!(batch.root_state(), 7030683312385911417);
+        assert_eq!(
+            batch.xs_states(),
+            &[
+                [3218796604, 1669865808, 2632967159, 1140209258],
+                [619393879, 400817959, 3090803142, 2029957035],
+                [4218822855, 3535613949, 334045908, 4104671856],
+            ]
+        );
+    }
+}

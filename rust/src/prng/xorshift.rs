@@ -1,0 +1,255 @@
+//! xorshift128 (Marsaglia 2003) — ThundeRiNG's decorrelator — plus the
+//! F2-linear jump-ahead used to carve guaranteed-non-overlapping substreams
+//! (paper Sec. 3.2.3: substream spacing ≥ 2^63; we stride 2^64).
+//!
+//! The 128-bit state is packed into a `u128` (x = bits 0..32, y = 32..64,
+//! z = 64..96, w = 96..128), which makes the GF(2) linear algebra plain
+//! integer xor/shift work. Mirrors `python/compile/kernels/params.py`.
+
+/// Master seed shared with the Python side (`params.XS128_SEED`).
+pub const XS128_SEED: [u32; 4] = [0x6C07_8965, 0x9908_B0DF, 0x9D2C_5680, 0xEFC6_0000];
+
+/// Substream stride: streams sit 2^64 steps apart in the master sequence.
+pub const XS128_STRIDE_LOG2: u32 = 64;
+
+const M32: u128 = 0xFFFF_FFFF;
+
+/// One xorshift128 step on the packed state; the generator output is the
+/// new `w` lane (top 32 bits).
+#[inline]
+pub fn xs128_step_packed(s: u128) -> u128 {
+    let x = (s & M32) as u32;
+    let w = ((s >> 96) & M32) as u32;
+    let t = x ^ (x << 11);
+    let new_w = w ^ (w >> 19) ^ t ^ (t >> 8);
+    (s >> 32) | ((new_w as u128) << 96)
+}
+
+#[inline]
+pub fn pack(s: [u32; 4]) -> u128 {
+    (s[0] as u128) | ((s[1] as u128) << 32) | ((s[2] as u128) << 64) | ((s[3] as u128) << 96)
+}
+
+#[inline]
+pub fn unpack(s: u128) -> [u32; 4] {
+    [
+        (s & M32) as u32,
+        ((s >> 32) & M32) as u32,
+        ((s >> 64) & M32) as u32,
+        ((s >> 96) & M32) as u32,
+    ]
+}
+
+/// 128×128 GF(2) matrix, stored as 128 column images (`mat[i] = M·e_i`).
+#[derive(Clone)]
+pub struct F2Matrix(pub Box<[u128; 128]>);
+
+impl F2Matrix {
+    pub fn identity() -> Self {
+        let mut m = Box::new([0u128; 128]);
+        for (i, col) in m.iter_mut().enumerate() {
+            *col = 1u128 << i;
+        }
+        Self(m)
+    }
+
+    /// Matrix of the single-step map.
+    pub fn step_matrix() -> Self {
+        let mut m = Box::new([0u128; 128]);
+        for (i, col) in m.iter_mut().enumerate() {
+            *col = xs128_step_packed(1u128 << i);
+        }
+        Self(m)
+    }
+
+    #[inline]
+    pub fn mul_vec(&self, mut v: u128) -> u128 {
+        let mut r = 0u128;
+        let mut i = 0usize;
+        while v != 0 {
+            if v & 1 == 1 {
+                r ^= self.0[i];
+            }
+            v >>= 1;
+            i += 1;
+        }
+        r
+    }
+
+    /// `self ∘ other`: apply `other` first.
+    pub fn compose(&self, other: &F2Matrix) -> F2Matrix {
+        let mut m = Box::new([0u128; 128]);
+        for i in 0..128 {
+            m[i] = self.mul_vec(other.0[i]);
+        }
+        F2Matrix(m)
+    }
+}
+
+/// Matrix of the `k`-step map (square-and-multiply over the 192-bit-capable
+/// exponent; `k` may exceed 2^64, so it is a u128).
+pub fn xs128_jump_matrix(k: u128) -> F2Matrix {
+    let mut result = F2Matrix::identity();
+    let mut sq = F2Matrix::step_matrix();
+    let mut k = k;
+    while k > 0 {
+        if k & 1 == 1 {
+            result = sq.compose(&result);
+        }
+        k >>= 1;
+        if k > 0 {
+            sq = sq.compose(&sq);
+        }
+    }
+    result
+}
+
+/// Jump a state `k` steps ahead.
+pub fn xs128_jump(state: [u32; 4], k: u128) -> [u32; 4] {
+    unpack(xs128_jump_matrix(k).mul_vec(pack(state)))
+}
+
+/// Initial decorrelator state for stream `i`: `i · 2^64` steps into the
+/// master sequence. For bulk allocation prefer [`Xs128SubstreamAlloc`].
+pub fn xs128_stream_state(i: u64) -> [u32; 4] {
+    xs128_jump(XS128_SEED, (i as u128) << XS128_STRIDE_LOG2)
+}
+
+/// Amortized substream allocator: builds the stride matrix once and walks
+/// consecutive stream states with one mat-vec each (the coordinator's
+/// registry uses this when registering whole stream ranges).
+pub struct Xs128SubstreamAlloc {
+    stride: F2Matrix,
+    next_state: u128,
+    next_index: u64,
+}
+
+impl Xs128SubstreamAlloc {
+    pub fn new() -> Self {
+        Self::starting_at(0)
+    }
+
+    pub fn starting_at(first_stream: u64) -> Self {
+        let stride = xs128_jump_matrix(1u128 << XS128_STRIDE_LOG2);
+        let base = xs128_jump_matrix((first_stream as u128) << XS128_STRIDE_LOG2)
+            .mul_vec(pack(XS128_SEED));
+        Self { stride, next_state: base, next_index: first_stream }
+    }
+
+    /// (stream_index, state) of the next substream.
+    pub fn next_substream(&mut self) -> (u64, [u32; 4]) {
+        let out = (self.next_index, unpack(self.next_state));
+        self.next_state = self.stride.mul_vec(self.next_state);
+        self.next_index += 1;
+        out
+    }
+}
+
+impl Default for Xs128SubstreamAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The xorshift128 generator itself (also a Table 1 baseline, "xorwow"-
+/// adjacent quality class: crushable alone, which is fine — the decorrelator
+/// only needs weak self-correlation, Sec. 3.2.3).
+#[derive(Clone, Debug)]
+pub struct Xorshift128 {
+    s: [u32; 4],
+}
+
+impl Xorshift128 {
+    pub fn new(seed: [u32; 4]) -> Self {
+        assert!(seed.iter().any(|&v| v != 0), "xorshift128 state must be nonzero");
+        Self { s: seed }
+    }
+
+    pub fn from_master(stream: u64) -> Self {
+        Self::new(xs128_stream_state(stream))
+    }
+
+    pub fn state(&self) -> [u32; 4] {
+        self.s
+    }
+}
+
+impl super::Prng32 for Xorshift128 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let [x, y, z, w] = self.s;
+        let t = x ^ (x << 11);
+        let new_w = w ^ (w >> 19) ^ t ^ (t >> 8);
+        self.s = [y, z, w, new_w];
+        new_w
+    }
+
+    fn name(&self) -> &'static str {
+        "xorshift128"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng32;
+
+    #[test]
+    fn step_packed_matches_struct() {
+        let mut g = Xorshift128::new(XS128_SEED);
+        let mut s = pack(XS128_SEED);
+        for _ in 0..100 {
+            s = xs128_step_packed(s);
+            let out = g.next_u32();
+            assert_eq!(unpack(s), g.state());
+            assert_eq!(out, unpack(s)[3]);
+        }
+    }
+
+    #[test]
+    fn jump_equals_k_steps() {
+        for &k in &[0u128, 1, 2, 7, 63, 64, 1000] {
+            let mut s = pack(XS128_SEED);
+            for _ in 0..k {
+                s = xs128_step_packed(s);
+            }
+            assert_eq!(xs128_jump(XS128_SEED, k), unpack(s), "k={k}");
+        }
+    }
+
+    #[test]
+    fn jump_composes() {
+        let a = xs128_jump(xs128_jump(XS128_SEED, 12345), 678);
+        let b = xs128_jump(XS128_SEED, 13023);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn substream_alloc_matches_direct_jump() {
+        let mut alloc = Xs128SubstreamAlloc::new();
+        for i in 0..4u64 {
+            let (idx, st) = alloc.next_substream();
+            assert_eq!(idx, i);
+            assert_eq!(st, xs128_stream_state(i));
+        }
+    }
+
+    #[test]
+    fn substream_states_match_python_oracle() {
+        // params.xs128_stream_states(3) on the Python side.
+        let expect: [[u32; 4]; 3] = [
+            [1812433253, 2567483615, 2636928640, 4022730752],
+            [3820377946, 723714846, 1535017340, 1974908476],
+            [581007133, 2549596838, 3531760380, 3527851021],
+        ];
+        for (i, e) in expect.iter().enumerate() {
+            assert_eq!(xs128_stream_state(i as u64), *e, "stream {i}");
+        }
+    }
+
+    #[test]
+    fn nonzero_state_required() {
+        let r = std::panic::catch_unwind(|| Xorshift128::new([0; 4]));
+        assert!(r.is_err());
+    }
+}

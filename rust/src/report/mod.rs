@@ -1,0 +1,517 @@
+//! Report generators — one function per table/figure of the paper's
+//! evaluation (Sec. 5 & 6). Each prints the same rows/series the paper
+//! reports; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod table;
+
+use anyhow::Result;
+
+use crate::apps::gpu_model::{FPGA_BS, FPGA_PI, P100_BS, P100_GEN, P100_PI};
+use crate::fpga::power::{efficiency_ratio, PowerModel, GPU_BS, GPU_PI};
+use crate::fpga::resources::ResourceModel;
+use crate::fpga::throughput::{
+    optimal_throughput, optimistic_scaling, thundering_gsamples, thundering_throughput,
+    CURAND_P100,
+};
+use crate::prng::mrg32k3a::Mrg32k3aFamily;
+use crate::prng::philox::PhiloxFamily;
+use crate::prng::tausworthe::LutSrFamily;
+use crate::prng::thundering::{Ablation, AblatedStream, ThunderingFamily};
+use crate::prng::xoroshiro::XoroshiroFamily;
+use crate::prng::{
+    PcgXshRs64, Prng32, SplitMix64, StreamFamily, ThunderingBatch, ThunderingStream,
+};
+use crate::stats::{doubling_drive, mini_crush, Interleaved, Scale};
+use table::{f2, f5, s, sci, Table};
+
+/// Algorithms compared in Table 2 (the crush-class comparison set).
+fn table2_generators() -> Vec<(&'static str, Box<dyn Fn(u64) -> Box<dyn Prng32>>)> {
+    vec![
+        ("xoroshiro128**", Box::new(|i| Box::new(XoroshiroFamily { seed: 7 }.stream(i)))),
+        ("philox4x32", Box::new(|i| Box::new(PhiloxFamily { base_key: [7, 99] }.stream(i)))),
+        ("pcg_xsh_rs_64", Box::new(|i| Box::new(PcgXshRs64::new(42, i)))),
+        ("mrg32k3a", Box::new(|i| Box::new(Mrg32k3aFamily { seed: 7 }.stream(i)))),
+        ("lut-sr", Box::new(|i| Box::new(LutSrFamily { seed: 7 }.stream(i)))),
+        ("thundering", Box::new(|i| Box::new(ThunderingFamily::new(42).stream(i)))),
+    ]
+}
+
+/// Table 2 — statistical testing (MiniCrush battery + doubling driver),
+/// intra-stream (single sequence) and inter-stream (8-way interleave).
+pub fn table2(scale: Scale, doubling_cap: u64) -> Result<String> {
+    let mut t = Table::new(
+        "Table 2 — statistical quality (MiniCrush = BigCrush stand-in, \
+         doubling driver = PractRand stand-in)",
+        &["algorithm", "intra battery", "intra doubling", "inter battery", "inter doubling"],
+    );
+    for (name, make) in table2_generators() {
+        let mut single = make(0);
+        let intra = mini_crush(single.as_mut(), scale);
+        let intra_doubling = doubling_drive(|| make(0), doubling_cap);
+        let mut inter = Interleaved::new((0..8).map(&make).collect());
+        let inter_rep = mini_crush(&mut inter, scale);
+        let inter_doubling = doubling_drive(
+            || Box::new(Interleaved::new((0..8).map(&make).collect())),
+            doubling_cap,
+        );
+        t.row(&[
+            s(name),
+            intra.summary(),
+            intra_doubling.label(),
+            inter_rep.summary(),
+            inter_doubling.label(),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 3 — max pairwise correlation over `pairs` random stream pairs,
+/// for the four ablation columns.
+pub fn table3(pairs: usize, n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Table 3 — pairwise correlation (max |coef| over random pairs)",
+        &["technique", "pearson", "spearman", "kendall"],
+    );
+    let mut pick_rng = SplitMix64::new(1234);
+    for mode in Ablation::ALL {
+        let mut pick = || {
+            let i = pick_rng.next_u64() % 4096;
+            let mut j = pick_rng.next_u64() % 4096;
+            if i == j {
+                j = (j + 1) % 4096;
+            }
+            (i, j)
+        };
+        let maxc = crate::stats::corr::max_pairwise(
+            |i| Box::new(AblatedStream::new(42, i, mode)) as Box<dyn Prng32>,
+            pairs,
+            n,
+            &mut pick,
+        );
+        t.row(&[s(mode.label()), f5(maxc.pearson), f5(maxc.spearman), f5(maxc.kendall)]);
+    }
+    Ok(t.render())
+}
+
+/// Table 4 — Hamming-weight dependency: #outputs before detection on an
+/// 8-way interleaved stream, per ablation (capped).
+pub fn table4(cap: u64) -> Result<String> {
+    let mut t = Table::new(
+        "Table 4 — Hamming-weight dependency (outputs before detection; higher is better)",
+        &["technique", "detection threshold"],
+    );
+    for mode in Ablation::ALL {
+        let thr = crate::stats::hwd::hwd_detection_threshold(
+            || {
+                Box::new(Interleaved::new(
+                    (0..8).map(|i| AblatedStream::new(42, i, mode)).collect(),
+                ))
+            },
+            cap,
+        );
+        let label = if thr >= cap { format!("> {:.2e}", cap as f64) } else { format!("{:.2e}", thr as f64) };
+        t.row(&[s(mode.label()), label]);
+    }
+    Ok(t.render())
+}
+
+/// Figure 5 — resources + frequency vs #SOU instances.
+pub fn fig5() -> Result<String> {
+    let m = ResourceModel::default();
+    let mut t = Table::new(
+        "Figure 5 — resource consumption and clock frequency vs #SOU (FPGA model)",
+        &["n_sou", "LUT %", "FF %", "DSP %", "BRAM %", "freq MHz"],
+    );
+    for shift in 0..=11 {
+        let n = 1u64 << shift;
+        let r = m.fig5_row(n);
+        t.row(&[s(n), f2(r.lut_pct), f2(r.ff_pct), f2(r.dsp_pct), f2(r.bram_pct), f2(r.freq_mhz)]);
+    }
+    Ok(t.render())
+}
+
+/// Figure 6 — throughput vs #SOU instances (model + optimal line).
+pub fn fig6() -> Result<String> {
+    let m = ResourceModel::default();
+    let mut t = Table::new(
+        "Figure 6 — throughput vs #SOU (FPGA model; optimal = 550 MHz, no sag)",
+        &["n_sou", "modelled Tb/s", "optimal Tb/s"],
+    );
+    for shift in 0..=11 {
+        let n = 1u64 << shift;
+        t.row(&[s(n), f2(thundering_throughput(&m, n)), f2(optimal_throughput(n))]);
+    }
+    Ok(t.render())
+}
+
+/// Table 5 — comparison with FPGA works (measured + optimistic scaling).
+pub fn table5() -> Result<String> {
+    let rows = optimistic_scaling(&crate::fpga::U250);
+    let base = rows[0].throughput_tbps;
+    let mut t = Table::new(
+        "Table 5 — FPGA designs: measured + optimistic scaling (model)",
+        &["PRNG", "quality", "freq MHz", "max #ins", "BRAM %", "DSP %", "Tb/s", "ThundeRiNG speedup"],
+    );
+    for r in rows {
+        t.row(&[
+            s(r.name),
+            s(r.quality),
+            f2(r.freq_mhz),
+            s(r.max_instances),
+            f2(r.bram_pct),
+            f2(r.dsp_pct),
+            f2(r.throughput_tbps),
+            format!("{:.2}x", base / r.throughput_tbps),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 6 — vs cuRAND on the P100 (published constants) with our FPGA
+/// model at 2048 instances.
+pub fn table6() -> Result<String> {
+    let m = ResourceModel::default();
+    let ours = thundering_gsamples(&m, 2048);
+    let mut t = Table::new(
+        "Table 6 — GPU (cuRAND on P100, published) vs ThundeRiNG FPGA model",
+        &["algorithm", "BigCrush", "GSample/s", "Tb/s", "ThundeRiNG speedup"],
+    );
+    t.row(&[
+        s("ThundeRiNG (FPGA model, 2048 ins)"),
+        s("Pass"),
+        f2(ours),
+        f2(ours * 32.0 / 1000.0),
+        s("1.00x"),
+    ]);
+    for g in CURAND_P100 {
+        t.row(&[
+            s(g.name),
+            s(g.bigcrush),
+            f2(g.gsamples),
+            f2(g.gsamples * 32.0 / 1000.0),
+            format!("{:.2}x", ours / g.gsamples),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Figure 7 — ThundeRiNG ported to CPU (measured here) vs multistream CPU
+/// baseline (measured) vs GPU model, across instance counts.
+pub fn fig7(max_log2: u32, rows_per_round: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Figure 7 — CPU/GPU ports (GSample/s): state-sharing CPU port measured on this host",
+        &["instances", "thundering CPU (measured)", "philox CPU (measured)", "P100 model"],
+    );
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+    for shift in 0..=max_log2 {
+        let n = 1usize << shift;
+        let thr_t = measure_thundering_cpu(n, threads, rows_per_round);
+        let thr_p = measure_philox_cpu(n, threads, rows_per_round);
+        // GPU model: rate ramps with parallelism; instances scale the
+        // utilized fraction of the P100's peak.
+        let gpu = P100_GEN.peak_rate * (n as f64 / 4096.0).min(1.0) / 1e9;
+        t.row(&[s(n), f2(thr_t / 1e9), f2(thr_p / 1e9), f2(gpu)]);
+    }
+    Ok(t.render())
+}
+
+/// Measured: state-sharing batch engine, `n` streams over `threads`.
+/// Stream/substream *setup* (the 2^64 xorshift jump matrices) happens once
+/// outside the timed region — only generation is measured.
+fn measure_thundering_cpu(n: usize, threads: usize, rows: usize) -> f64 {
+    let threads = threads.min(n);
+    let per = n / threads;
+    // Untimed setup.
+    let mut engines: Vec<(ThunderingBatch, Vec<u32>)> = (0..threads)
+        .map(|w| {
+            let width = if w == threads - 1 { n - per * (threads - 1) } else { per };
+            let b = ThunderingBatch::new(
+                crate::prng::splitmix64(w as u64),
+                width.max(1),
+                (w * per) as u64,
+            );
+            let buf = vec![0u32; rows * width.max(1)];
+            (b, buf)
+        })
+        .collect();
+    let rounds = 4;
+    let t0 = std::time::Instant::now();
+    let total: u64 = std::thread::scope(|sc| {
+        let handles: Vec<_> = engines
+            .iter_mut()
+            .map(|(b, buf)| {
+                sc.spawn(move || {
+                    let mut out = 0u64;
+                    for _ in 0..rounds {
+                        b.fill_rows(rows, buf);
+                        std::hint::black_box(&buf);
+                        out += buf.len() as u64;
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Measured: independent Philox multistream over `threads` (setup untimed).
+fn measure_philox_cpu(n: usize, threads: usize, rows: usize) -> f64 {
+    let threads = threads.min(n);
+    let per = n / threads;
+    let mut engines: Vec<Vec<crate::prng::Philox4x32>> = (0..threads)
+        .map(|w| {
+            let width = if w == threads - 1 { n - per * (threads - 1) } else { per };
+            (0..width.max(1))
+                .map(|i| crate::prng::Philox4x32::stream([7, 99], (w * per + i) as u32))
+                .collect()
+        })
+        .collect();
+    let rounds = 4;
+    let t0 = std::time::Instant::now();
+    let total: u64 = std::thread::scope(|sc| {
+        let handles: Vec<_> = engines
+            .iter_mut()
+            .map(|gens| {
+                sc.spawn(move || {
+                    let mut out = 0u64;
+                    for _ in 0..rounds {
+                        for g in gens.iter_mut() {
+                            let mut acc = 0u32;
+                            for _ in 0..rows {
+                                acc ^= g.next_u32();
+                            }
+                            std::hint::black_box(acc);
+                            out += rows as u64;
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Figures 8/9 — app execution time vs draws: measured PJRT + native, plus
+/// FPGA/GPU model projections.
+pub fn fig8_or_9(
+    which: &str,
+    executor: Option<&crate::runtime::executor::TileExecutor>,
+    draw_shifts: &[u32],
+) -> Result<String> {
+    let is_pi = which == "fig8";
+    let (fpga, gpu) = if is_pi { (FPGA_PI, P100_PI) } else { (FPGA_BS, P100_BS) };
+    let title = if is_pi {
+        "Figure 8 — pi estimation: execution time vs #draws"
+    } else {
+        "Figure 9 — MC option pricing: execution time vs #draws"
+    };
+    let mut t = Table::new(
+        title,
+        &[
+            "draws",
+            "host PJRT (s)",
+            "host native (s)",
+            "FPGA model (s)",
+            "GPU model (s)",
+            "model speedup",
+        ],
+    );
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
+    for &shift in draw_shifts {
+        let draws = 1u64 << shift;
+        let samples = draws * 2; // both apps consume 2 numbers per draw
+        let host_pjrt = match executor {
+            Some(exec) => {
+                let run = if is_pi {
+                    crate::apps::pi::run_pjrt(exec, draws, 42)?
+                } else {
+                    crate::apps::option_pricing::run_pjrt(
+                        exec,
+                        draws,
+                        42,
+                        crate::runtime::BsParams::default(),
+                    )?
+                };
+                format!("{:.4}", run.seconds)
+            }
+            None => s("-"),
+        };
+        let native = if is_pi {
+            crate::apps::pi::run_native(threads, draws, 42)?
+        } else {
+            crate::apps::option_pricing::run_native(
+                threads,
+                draws,
+                42,
+                crate::runtime::BsParams::default(),
+            )?
+        };
+        let f_t = fpga.exec_time(samples);
+        let g_t = gpu.exec_time(samples);
+        t.row(&[
+            sci(draws as f64),
+            host_pjrt,
+            format!("{:.4}", native.seconds),
+            format!("{:.6}", f_t),
+            format!("{:.6}", g_t),
+            format!("{:.2}x", g_t / f_t),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 7 — application throughput + power efficiency, FPGA model vs GPU.
+pub fn table7() -> Result<String> {
+    let power = PowerModel::default();
+    let mut t = Table::new(
+        "Table 7 — application throughput & power efficiency (models; see EXPERIMENTS.md)",
+        &["metric", "pi: FPGA", "pi: GPU", "bs: FPGA", "bs: GPU"],
+    );
+    let pi_f_rate = FPGA_PI.rate() / 1e9;
+    let bs_f_rate = FPGA_BS.rate() / 1e9;
+    t.row(&[s("frequency (MHz)"), f2(FPGA_PI.freq_mhz), s(1190), f2(FPGA_BS.freq_mhz), s(1190)]);
+    t.row(&[s("instances"), s(FPGA_PI.instances), s("-"), s(FPGA_BS.instances), s("-")]);
+    t.row(&[s("throughput (GSample/s)"), f2(pi_f_rate), f2(GPU_PI.gsamples), f2(bs_f_rate), f2(GPU_BS.gsamples)]);
+    let pi_w = power.watts(0.70, FPGA_PI.freq_mhz);
+    let bs_w = power.watts(0.49, FPGA_BS.freq_mhz);
+    t.row(&[s("power (W)"), f2(pi_w), f2(GPU_PI.watts), f2(bs_w), f2(GPU_BS.watts)]);
+    t.row(&[
+        s("throughput speedup"),
+        format!("{:.2}x", pi_f_rate / GPU_PI.gsamples),
+        s("1x"),
+        format!("{:.2}x", bs_f_rate / GPU_BS.gsamples),
+        s("1x"),
+    ]);
+    t.row(&[
+        s("power efficiency"),
+        format!("{:.2}x", efficiency_ratio(pi_f_rate, pi_w, &GPU_PI)),
+        s("1x"),
+        format!("{:.2}x", efficiency_ratio(bs_f_rate, bs_w, &GPU_BS)),
+        s("1x"),
+    ]);
+    Ok(t.render())
+}
+
+/// Table 1 (survey) — measured structural properties of our implementations.
+pub fn table1() -> Result<String> {
+    let mut t = Table::new(
+        "Table 1 — algorithm survey (structural properties of our implementations)",
+        &["algorithm", "state bits", "mults per 32-bit output (n streams)", "multi-seq method"],
+    );
+    t.row(&[s("thundering"), s(192), s("1 / block (shared)"), s("multistream")]);
+    t.row(&[s("philox4x32"), s(256), s("1.5n"), s("multistream")]);
+    t.row(&[s("mrg32k3a"), s(384), s("2n"), s("substream")]);
+    t.row(&[s("xoroshiro128**"), s(128), s("1n"), s("substream")]);
+    t.row(&[s("pcg_xsh_rs_64"), s(64), s("1n"), s("multistream")]);
+    t.row(&[s("lcg64"), s(64), s("1n"), s("multistream")]);
+    t.row(&[s("mt19937"), s(19937), s("0"), s("substream (reseed)")]);
+    t.row(&[s("lut-sr (lfsr113)"), s(113), s("0"), s("substream (reseed)")]);
+    Ok(t.render())
+}
+
+/// Quick single-stream sanity block used by the CLI `quality` command.
+pub fn quality_one(name: &str, scale: Scale) -> Result<String> {
+    let mut gen: Box<dyn Prng32> = match name {
+        "thundering" => Box::new(ThunderingStream::new(42, 0)),
+        "xoroshiro128**" | "xoroshiro" => Box::new(XoroshiroFamily { seed: 7 }.stream(0)),
+        "philox" | "philox4x32" => Box::new(PhiloxFamily { base_key: [7, 99] }.stream(0)),
+        "pcg" | "pcg_xsh_rs_64" => Box::new(PcgXshRs64::new(42, 0)),
+        "mrg32k3a" => Box::new(Mrg32k3aFamily { seed: 7 }.stream(0)),
+        "lut-sr" | "lutsr" => Box::new(LutSrFamily { seed: 7 }.stream(0)),
+        "mt19937" => Box::new(crate::prng::Mt19937::new(5489)),
+        "lcg64" => Box::new(crate::prng::Lcg64::new(42)),
+        other => anyhow::bail!("unknown generator {other:?}"),
+    };
+    let rep = mini_crush(gen.as_mut(), scale);
+    let mut t = Table::new(
+        &format!("MiniCrush — {name} ({:?})", scale),
+        &["test", "p-value", "verdict", "detail"],
+    );
+    for r in &rep.results {
+        t.row(&[s(&r.name), sci(r.p_value), s(r.verdict()), s(&r.detail)]);
+    }
+    Ok(format!("{}\nsummary: {}\n", t.render(), rep.summary()))
+}
+
+/// All reports in paper order. `quick` trades depth for runtime.
+pub fn run_all(artifacts_dir: Option<&str>, quick: bool) -> Result<String> {
+    let scale = if quick { Scale::Quick } else { Scale::Standard };
+    let doubling_cap = if quick { 1 << 24 } else { 1 << 28 };
+    let (pairs, corr_n) = if quick { (100, 1 << 12) } else { (1000, 1 << 14) };
+    let hwd_cap = if quick { 1 << 22 } else { 1 << 26 };
+    let draw_shifts: &[u32] = if quick { &[20, 22, 24] } else { &[20, 22, 24, 26, 28] };
+
+    let guard = match artifacts_dir {
+        Some(dir) => Some(crate::runtime::executor::TileExecutor::spawn(dir.to_string(), 4)?),
+        None => None,
+    };
+    let executor = guard.as_ref().map(|g| &g.executor);
+
+    let mut out = String::new();
+    out.push_str(&table1()?);
+    out.push('\n');
+    out.push_str(&table2(scale, doubling_cap)?);
+    out.push('\n');
+    out.push_str(&table3(pairs, corr_n)?);
+    out.push('\n');
+    out.push_str(&table4(hwd_cap)?);
+    out.push('\n');
+    out.push_str(&fig5()?);
+    out.push('\n');
+    out.push_str(&fig6()?);
+    out.push('\n');
+    out.push_str(&table5()?);
+    out.push('\n');
+    out.push_str(&table6()?);
+    out.push('\n');
+    out.push_str(&fig7(if quick { 8 } else { 12 }, if quick { 1 << 14 } else { 1 << 18 })?);
+    out.push('\n');
+    out.push_str(&fig8_or_9("fig8", executor, draw_shifts)?);
+    out.push('\n');
+    out.push_str(&fig8_or_9("fig9", executor, draw_shifts)?);
+    out.push('\n');
+    out.push_str(&table7()?);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_fig6_render() {
+        let a = fig5().unwrap();
+        assert!(a.contains("n_sou"));
+        let b = fig6().unwrap();
+        assert!(b.contains("optimal"));
+    }
+
+    #[test]
+    fn table5_table6_table7_render() {
+        assert!(table5().unwrap().contains("ThundeRiNG"));
+        assert!(table6().unwrap().contains("cuRAND"));
+        assert!(table7().unwrap().contains("power efficiency"));
+    }
+
+    #[test]
+    fn table3_small_scale_shape() {
+        // Tiny scale: baseline correlation high (max over pairs finds a
+        // near-aligned h pair), full near 0.
+        let rendered = table3(64, 1 << 10).unwrap();
+        let lines: Vec<&str> = rendered.lines().collect();
+        let baseline = lines.iter().find(|l| l.contains("LCG Baseline")).unwrap();
+        let full = lines.iter().find(|l| l.contains("ThundeRiNG")).unwrap();
+        let first_num = |l: &str| -> f64 {
+            l.split_whitespace()
+                .filter_map(|w| w.parse::<f64>().ok())
+                .next()
+                .unwrap()
+        };
+        assert!(first_num(baseline) > 0.5, "{baseline}");
+        assert!(first_num(full) < 0.2, "{full}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Dedicated device-thread executor.
+//!
+//! `PjRtClient` is not `Send`, so one OS thread owns the [`Runtime`] and
+//! everything else talks to it through a job channel. Jobs are `Send`
+//! closures over `&Runtime`; results come back on per-job channels. The
+//! coordinator's batcher sits in front of this, so the device thread sees
+//! an ordered stream of tile executions — the same discipline as the
+//! paper's daisy chain delivering one root state per cycle.
+
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::Runtime;
+
+type Job = Box<dyn FnOnce(&Runtime) + Send>;
+
+/// Handle to the device thread. Cloning shares the same thread/queue.
+#[derive(Clone)]
+pub struct TileExecutor {
+    tx: SyncSender<Job>,
+}
+
+/// Owns the join handle; the device thread exits when every
+/// [`TileExecutor`] clone is dropped.
+pub struct TileExecutorGuard {
+    pub executor: TileExecutor,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TileExecutor {
+    /// Spawn a device thread over `artifacts_dir`. `queue_depth` bounds the
+    /// number of queued jobs (backpressure: `submit` blocks when full,
+    /// `try_submit` refuses).
+    pub fn spawn(artifacts_dir: String, queue_depth: usize) -> Result<TileExecutorGuard> {
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&artifacts_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    job(&rt);
+                }
+            })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => return Err(anyhow!("device thread failed to start: {msg}")),
+            Err(_) => return Err(anyhow!("device thread died during startup")),
+        }
+        Ok(TileExecutorGuard { executor: TileExecutor { tx }, handle: Some(handle) })
+    }
+
+    /// Submit a job; returns a receiver for its result. Blocks if the
+    /// device queue is full (the backpressure point).
+    pub fn submit<R, F>(&self, f: F) -> Receiver<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Runtime) -> R + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move |rt| {
+            let _ = tx.send(f(rt));
+        });
+        // The only send error is a closed device thread; surfaced on recv.
+        let _ = self.tx.send(job);
+        rx
+    }
+
+    /// Non-blocking submit: returns Err(()) when the queue is full or the
+    /// device thread is gone.
+    pub fn try_submit<R, F>(&self, f: F) -> std::result::Result<Receiver<R>, ()>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Runtime) -> R + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move |rt| {
+            let _ = tx.send(f(rt));
+        });
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => Err(()),
+        }
+    }
+
+    /// Submit and block for the result.
+    pub fn call<R, F>(&self, f: F) -> Result<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Runtime) -> R + Send + 'static,
+    {
+        self.submit(f)
+            .recv()
+            .map_err(|_| anyhow!("device thread terminated before completing the job"))
+    }
+}
+
+impl TileExecutorGuard {
+    /// Drop all executor clones you hold, then call this to join the device
+    /// thread.
+    pub fn join(mut self) {
+        let (tx, _rx) = mpsc::sync_channel::<Job>(1);
+        self.executor.tx = tx; // release our hold on the real channel
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TileExecutorGuard {
+    fn drop(&mut self) {
+        // Detach: the device thread exits on its own when the last
+        // TileExecutor clone drops. Joining here could deadlock if clones
+        // outlive the guard.
+        let _ = self.handle.take();
+    }
+}

@@ -1,0 +1,182 @@
+//! artifacts/manifest.json — the contract between the AOT compile path
+//! (python/compile/aot.py) and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub lcg_a: u64,
+    pub lcg_c: u64,
+    pub lcg_m_bits: u32,
+    pub xs_seed: [u32; 4],
+    pub xs_stride_log2: u32,
+    pub leaf_golden: u64,
+    pub output_desc: String,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub kind: String,
+    pub block: usize,
+    pub p: usize,
+    pub tiles: usize,
+    /// Total output rows per invocation (= block * tiles).
+    pub rows: usize,
+    pub file: String,
+    pub sha256: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let lcg = v.req("lcg")?;
+        let xs = v.req("xorshift128")?;
+        let seed_arr = xs.req("seed")?.as_arr().ok_or_else(|| anyhow!("bad seed"))?;
+        if seed_arr.len() != 4 {
+            bail!("xorshift seed must have 4 words");
+        }
+        let mut xs_seed = [0u32; 4];
+        for (i, s) in seed_arr.iter().enumerate() {
+            xs_seed[i] = s.as_u64().ok_or_else(|| anyhow!("bad seed word"))? as u32;
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("bad artifacts"))? {
+            let info = ArtifactInfo {
+                kind: a.req("kind")?.as_str().ok_or_else(|| anyhow!("bad kind"))?.into(),
+                block: a.req("block")?.as_usize().ok_or_else(|| anyhow!("bad block"))?,
+                p: a.req("p")?.as_usize().ok_or_else(|| anyhow!("bad p"))?,
+                tiles: a.req("tiles")?.as_usize().ok_or_else(|| anyhow!("bad tiles"))?,
+                rows: a.req("rows")?.as_usize().ok_or_else(|| anyhow!("bad rows"))?,
+                file: a.req("file")?.as_str().ok_or_else(|| anyhow!("bad file"))?.into(),
+                sha256: a
+                    .get("sha256")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or_default()
+                    .into(),
+            };
+            artifacts.insert(name.clone(), info);
+        }
+        let m = Manifest {
+            lcg_a: lcg.req("a")?.as_u64().ok_or_else(|| anyhow!("bad lcg.a"))?,
+            lcg_c: lcg.req("c")?.as_u64().ok_or_else(|| anyhow!("bad lcg.c"))?,
+            lcg_m_bits: lcg.req("m_bits")?.as_u64().ok_or_else(|| anyhow!("bad m_bits"))? as u32,
+            xs_seed,
+            xs_stride_log2: xs.req("substream_stride_log2")?.as_u64().unwrap_or(64) as u32,
+            leaf_golden: v.req("leaf")?.req("golden")?.as_u64().unwrap_or(0),
+            output_desc: v
+                .get("output")
+                .and_then(|s| s.as_str())
+                .unwrap_or_default()
+                .into(),
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.lcg_a != crate::prng::LCG_A || self.lcg_c != crate::prng::LCG_C {
+            bail!(
+                "manifest LCG params ({}, {}) do not match this binary ({}, {}) \
+                 — artifacts and binary are out of sync; re-run `make artifacts`",
+                self.lcg_a,
+                self.lcg_c,
+                crate::prng::LCG_A,
+                crate::prng::LCG_C
+            );
+        }
+        if self.xs_seed != crate::prng::xorshift::XS128_SEED {
+            bail!("manifest xorshift seed mismatch");
+        }
+        if self.leaf_golden != crate::prng::thundering::LEAF_GOLDEN {
+            bail!("manifest leaf schedule mismatch — re-run `make artifacts`");
+        }
+        for (name, info) in &self.artifacts {
+            if info.rows != info.block * info.tiles {
+                bail!("artifact {name}: rows != block*tiles");
+            }
+            if info.p == 0 || info.rows == 0 {
+                bail!("artifact {name}: degenerate shape");
+            }
+        }
+        Ok(())
+    }
+
+    /// Pick the best thundering artifact for a requested (rows, streams)
+    /// workload: prefer p <= streams (widest), then closest rows.
+    pub fn select_thundering(&self, rows: usize, streams: usize) -> Option<(&str, &ArtifactInfo)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == "thundering" || a.kind == "thundering_scan")
+            .map(|(n, a)| (n.as_str(), a))
+            .min_by_key(|(_, a)| {
+                let width_gap =
+                    if a.p <= streams { (streams - a.p) * 2 } else { (a.p - streams) * 1000 };
+                let row_gap = a.rows.abs_diff(rows);
+                width_gap * 1_000_000 + row_gap
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_text() -> &'static str {
+        r#"{
+            "lcg": {"a": "6364136223846793005", "c": "55", "m_bits": 64},
+            "xorshift128": {"seed": [1812433253, 2567483615, 2636928640, 4022730752],
+                            "substream_stride_log2": 64},
+            "leaf": {"golden": "11400714819323198485", "note": ""},
+            "output": "xsh_rr_64_32 XOR xorshift128",
+            "artifacts": {
+                "thundering_b256_p64": {"kind": "thundering", "block": 256, "p": 64,
+                    "tiles": 1, "rows": 256, "file": "x.hlo.txt", "sha256": "", "bytes": 1},
+                "thundering_b1024_p256": {"kind": "thundering", "block": 1024, "p": 256,
+                    "tiles": 1, "rows": 1024, "file": "y.hlo.txt", "sha256": "", "bytes": 1}
+            }
+        }"#
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json_text(sample_text()).unwrap();
+        assert_eq!(m.lcg_a, crate::prng::LCG_A);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts["thundering_b256_p64"].rows, 256);
+    }
+
+    #[test]
+    fn select_prefers_fitting_width() {
+        let m = Manifest::from_json_text(sample_text()).unwrap();
+        let (name, _) = m.select_thundering(1024, 300).unwrap();
+        assert_eq!(name, "thundering_b1024_p256");
+        let (name, _) = m.select_thundering(256, 64).unwrap();
+        assert_eq!(name, "thundering_b256_p64");
+    }
+
+    #[test]
+    fn rejects_bad_lcg() {
+        let bad = sample_text().replace("\"55\"", "\"54\"");
+        assert!(Manifest::from_json_text(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_rows() {
+        let bad = sample_text().replace("\"rows\": 256", "\"rows\": 999");
+        assert!(Manifest::from_json_text(&bad).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange format is HLO *text* (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so all device interaction is
+//! confined to whichever thread builds the [`Runtime`]; cross-thread access
+//! goes through [`executor::TileExecutor`], which owns a dedicated device
+//! thread — the software analogue of the paper's single RSGU feeding many
+//! SOUs.
+
+pub mod executor;
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+pub use manifest::{ArtifactInfo, Manifest};
+
+/// Carried generator state for one tile executable: the Layer-3 side of the
+/// daisy chain — root state + per-stream decorrelator states, threaded
+/// through successive tile invocations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileState {
+    pub root: u64,
+    pub h: Vec<u64>,
+    pub xs: Vec<[u32; 4]>,
+}
+
+impl TileState {
+    /// Canonical state for streams `first_stream .. first_stream+p`.
+    pub fn new(root_seed: u64, p: usize, first_stream: u64) -> Self {
+        let batch = crate::prng::ThunderingBatch::new(root_seed, p, first_stream);
+        Self {
+            root: batch.root_state(),
+            h: (0..p as u64)
+                .map(|i| crate::prng::thundering::leaf_h(first_stream + i))
+                .collect(),
+            xs: batch.xs_states().to_vec(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.h.len()
+    }
+
+    fn xs_flat(&self) -> Vec<u32> {
+        // (4, p) row-major: lane k of every stream, then lane k+1 ...
+        let p = self.xs.len();
+        let mut flat = vec![0u32; 4 * p];
+        for (i, s) in self.xs.iter().enumerate() {
+            for k in 0..4 {
+                flat[k * p + i] = s[k];
+            }
+        }
+        flat
+    }
+
+    fn set_xs_flat(&mut self, flat: &[u32]) {
+        let p = self.xs.len();
+        debug_assert_eq!(flat.len(), 4 * p);
+        for i in 0..p {
+            for k in 0..4 {
+                self.xs[i][k] = flat[k * p + i];
+            }
+        }
+    }
+}
+
+/// One loaded tile executable plus its shape metadata.
+pub struct TileExe {
+    pub name: String,
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TileExe {
+    /// Execute a thundering tile: fills `out` (rows*p, row-major) and
+    /// advances `state` in place.
+    pub fn run_thundering(&self, state: &mut TileState, out: &mut [u32]) -> Result<()> {
+        let p = self.info.p;
+        let rows = self.info.rows;
+        ensure!(state.width() == p, "state width {} != artifact p {p}", state.width());
+        ensure!(out.len() == rows * p, "out len {} != {}", out.len(), rows * p);
+
+        let results = self.exe.execute::<xla::Literal>(&self.thundering_inputs(state)?)?;
+        let tuple = results[0][0].to_literal_sync()?.to_tuple()?;
+        let [out_lit, root_lit, xs_lit]: [xla::Literal; 3] = tuple
+            .try_into()
+            .map_err(|_| anyhow!("artifact {}: expected 3-tuple output", self.name))?;
+
+        // copy_raw_to writes straight into the caller's buffer — one copy
+        // instead of to_vec's allocate+copy (§Perf L3).
+        out_lit.copy_raw_to(out)?;
+        state.root = root_lit.to_vec::<u64>()?[0];
+        state.set_xs_flat(&xs_lit.to_vec::<u32>()?);
+        Ok(())
+    }
+
+    fn thundering_inputs(&self, state: &TileState) -> Result<[xla::Literal; 3]> {
+        let p = self.info.p as i64;
+        Ok([
+            xla::Literal::vec1(&[state.root]),
+            xla::Literal::vec1(&state.h),
+            xla::Literal::vec1(&state.xs_flat()).reshape(&[4, p])?,
+        ])
+    }
+
+    /// Execute the pi tile: returns the in-circle hit count for
+    /// rows/2 * p draws; advances `state`.
+    pub fn run_pi(&self, state: &mut TileState) -> Result<u32> {
+        let results = self.exe.execute::<xla::Literal>(&self.thundering_inputs(state)?)?;
+        let tuple = results[0][0].to_literal_sync()?.to_tuple()?;
+        let [hits_lit, root_lit, xs_lit]: [xla::Literal; 3] =
+            tuple.try_into().map_err(|_| anyhow!("pi tile: expected 3-tuple"))?;
+        state.root = root_lit.to_vec::<u64>()?[0];
+        state.set_xs_flat(&xs_lit.to_vec::<u32>()?);
+        Ok(hits_lit.get_first_element::<u32>()?)
+    }
+
+    /// Execute the Black–Scholes tile: returns the discounted-payoff sum
+    /// over rows/2 * p draws; advances `state`.
+    pub fn run_bs(&self, state: &mut TileState, params: &BsParams) -> Result<f32> {
+        let p = self.info.p as i64;
+        let inputs = [
+            xla::Literal::vec1(&[state.root]),
+            xla::Literal::vec1(&state.h),
+            xla::Literal::vec1(&state.xs_flat()).reshape(&[4, p])?,
+            xla::Literal::vec1(&[params.s0, params.k, params.r, params.sigma, params.t]),
+        ];
+        let results = self.exe.execute::<xla::Literal>(&inputs)?;
+        let tuple = results[0][0].to_literal_sync()?.to_tuple()?;
+        let [sum_lit, root_lit, xs_lit]: [xla::Literal; 3] =
+            tuple.try_into().map_err(|_| anyhow!("bs tile: expected 3-tuple"))?;
+        state.root = root_lit.to_vec::<u64>()?[0];
+        state.set_xs_flat(&xs_lit.to_vec::<u32>()?);
+        Ok(sum_lit.get_first_element::<f32>()?)
+    }
+
+    /// Execute the philox baseline tile (stateless counter mode).
+    pub fn run_philox(&self, ctr_base: u64, key: [u32; 2], out: &mut [u32]) -> Result<()> {
+        ensure!(out.len() == self.info.rows * self.info.p);
+        let inputs = [xla::Literal::vec1(&[ctr_base]), xla::Literal::vec1(&key)];
+        let results = self.exe.execute::<xla::Literal>(&inputs)?;
+        let out_lit = results[0][0].to_literal_sync()?.to_tuple1()?;
+        out.copy_from_slice(&out_lit.to_vec::<u32>()?);
+        Ok(())
+    }
+
+    /// Execute the lcg-only ablation tile.
+    pub fn run_lcg_only(&self, root: &mut u64, h: &[u64], out: &mut [u32]) -> Result<()> {
+        ensure!(out.len() == self.info.rows * self.info.p);
+        let inputs = [xla::Literal::vec1(&[*root]), xla::Literal::vec1(h)];
+        let results = self.exe.execute::<xla::Literal>(&inputs)?;
+        let tuple = results[0][0].to_literal_sync()?.to_tuple()?;
+        let [out_lit, root_lit]: [xla::Literal; 2] =
+            tuple.try_into().map_err(|_| anyhow!("lcg tile: expected 2-tuple"))?;
+        out.copy_from_slice(&out_lit.to_vec::<u32>()?);
+        *root = root_lit.to_vec::<u64>()?[0];
+        Ok(())
+    }
+}
+
+/// Black–Scholes parameters for the option-pricing tile.
+#[derive(Clone, Copy, Debug)]
+pub struct BsParams {
+    pub s0: f32,
+    pub k: f32,
+    pub r: f32,
+    pub sigma: f32,
+    pub t: f32,
+}
+
+impl Default for BsParams {
+    fn default() -> Self {
+        // The classic textbook configuration used by the cuRAND samples.
+        Self { s0: 100.0, k: 100.0, r: 0.05, sigma: 0.2, t: 1.0 }
+    }
+}
+
+/// Artifact loader + executable cache bound to one PJRT CPU client.
+/// Single-threaded by construction (see module docs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<TileExe>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts_dir` (must contain manifest.json; run
+    /// `make artifacts` first).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: $THUNDERING_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("THUNDERING_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (and cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<TileExe>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (see manifest.json)"))?
+            .clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        let tile = Rc::new(TileExe { name: name.to_string(), info, exe });
+        self.cache.borrow_mut().insert(name.to_string(), tile.clone());
+        Ok(tile)
+    }
+
+    /// All artifact names of a given kind.
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == kind)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+}

@@ -1,0 +1,173 @@
+//! Bit-level adapters over `Prng32` sources for the battery's bit tests.
+
+use crate::prng::Prng32;
+
+/// Streams individual bits (MSB-first) out of a 32-bit generator.
+pub struct BitSource<'a> {
+    gen: &'a mut dyn Prng32,
+    current: u32,
+    remaining: u32,
+}
+
+impl<'a> BitSource<'a> {
+    pub fn new(gen: &'a mut dyn Prng32) -> Self {
+        Self { gen, current: 0, remaining: 0 }
+    }
+
+    #[inline]
+    pub fn next_bit(&mut self) -> u8 {
+        if self.remaining == 0 {
+            self.current = self.gen.next_u32();
+            self.remaining = 32;
+        }
+        self.remaining -= 1;
+        ((self.current >> self.remaining) & 1) as u8
+    }
+
+    /// Next `k` bits as an integer (k <= 32).
+    #[inline]
+    pub fn next_bits(&mut self, k: u32) -> u32 {
+        debug_assert!(k <= 32);
+        let mut v = 0u32;
+        for _ in 0..k {
+            v = (v << 1) | self.next_bit() as u32;
+        }
+        v
+    }
+
+    /// Fill a packed u64 bit buffer with `nbits` bits.
+    pub fn fill_words(&mut self, nbits: usize) -> Vec<u64> {
+        let mut words = vec![0u64; nbits.div_ceil(64)];
+        for i in 0..nbits {
+            if self.next_bit() == 1 {
+                words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        words
+    }
+}
+
+/// Round-robin interleaver: presents k independent streams as one sequence
+/// (the paper's inter-stream evaluation method, Sec. 5.1.3).
+pub struct Interleaved<G: Prng32> {
+    streams: Vec<G>,
+    next: usize,
+}
+
+impl<G: Prng32> Interleaved<G> {
+    pub fn new(streams: Vec<G>) -> Self {
+        assert!(!streams.is_empty());
+        Self { streams, next: 0 }
+    }
+
+    pub fn width(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+impl<G: Prng32> Prng32 for Interleaved<G> {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let v = self.streams[self.next].next_u32();
+        self.next = (self.next + 1) % self.streams.len();
+        v
+    }
+
+    fn name(&self) -> &'static str {
+        "interleaved"
+    }
+}
+
+/// Known-bad control sources for battery self-tests.
+pub mod controls {
+    use crate::prng::Prng32;
+
+    /// An incrementing counter — fails virtually everything.
+    pub struct Counter(pub u32);
+
+    impl Prng32 for Counter {
+        fn next_u32(&mut self) -> u32 {
+            self.0 = self.0.wrapping_add(1);
+            self.0
+        }
+
+        fn name(&self) -> &'static str {
+            "counter"
+        }
+    }
+
+    /// A constant — the most broken source possible.
+    pub struct Constant(pub u32);
+
+    impl Prng32 for Constant {
+        fn next_u32(&mut self) -> u32 {
+            self.0
+        }
+
+        fn name(&self) -> &'static str {
+            "constant"
+        }
+    }
+
+    /// Alternating bits 0101... at the word level.
+    pub struct Alternator(pub bool);
+
+    impl Prng32 for Alternator {
+        fn next_u32(&mut self) -> u32 {
+            self.0 = !self.0;
+            if self.0 {
+                0xAAAA_AAAA
+            } else {
+                0x5555_5555
+            }
+        }
+
+        fn name(&self) -> &'static str {
+            "alternator"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    #[test]
+    fn bits_msb_first() {
+        let mut c = controls::Constant(0x8000_0001);
+        let mut bs = BitSource::new(&mut c);
+        assert_eq!(bs.next_bit(), 1);
+        for _ in 0..30 {
+            assert_eq!(bs.next_bit(), 0);
+        }
+        assert_eq!(bs.next_bit(), 1);
+        // Next word starts again at the MSB.
+        assert_eq!(bs.next_bit(), 1);
+    }
+
+    #[test]
+    fn next_bits_matches_word() {
+        let mut c = controls::Constant(0xDEAD_BEEF);
+        let mut bs = BitSource::new(&mut c);
+        assert_eq!(bs.next_bits(32), 0xDEAD_BEEF);
+        assert_eq!(bs.next_bits(16), 0xDEAD);
+        assert_eq!(bs.next_bits(16), 0xBEEF);
+    }
+
+    #[test]
+    fn fill_words_counts() {
+        let mut g = SplitMix64::new(1);
+        let mut bs = BitSource::new(&mut g);
+        let words = bs.fill_words(130);
+        assert_eq!(words.len(), 3);
+    }
+
+    #[test]
+    fn interleave_round_robin() {
+        let s = vec![controls::Constant(1), controls::Constant(2), controls::Constant(3)];
+        let mut il = Interleaved::new(s);
+        let got: Vec<u32> = (0..7).map(|_| il.next_u32()).collect();
+        assert_eq!(got, vec![1, 2, 3, 1, 2, 3, 1]);
+    }
+}

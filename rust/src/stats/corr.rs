@@ -1,0 +1,261 @@
+//! Pairwise inter-stream correlation — Pearson, Spearman rank, and Kendall
+//! rank coefficients (paper Sec. 5.2.2, Table 3).
+
+use crate::prng::Prng32;
+
+/// Pearson product-moment correlation of two equal-length samples.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Ranks with average tie handling.
+fn ranks(v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    let mut r = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            r[k] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Spearman rank correlation.
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Kendall tau-b rank correlation in O(n log n) (merge-sort inversions).
+pub fn kendall(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // Sort by x, count discordant pairs = inversions in the y ordering.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        x[a].partial_cmp(&x[b]).unwrap().then(y[a].partial_cmp(&y[b]).unwrap())
+    });
+    let mut ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+
+    // Tie corrections.
+    let tie_count = |v: &[f64]| -> f64 {
+        let mut sorted = v.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut total = 0.0;
+        let mut i = 0;
+        while i < sorted.len() {
+            let mut j = i;
+            while j + 1 < sorted.len() && sorted[j + 1] == sorted[i] {
+                j += 1;
+            }
+            let t = (j - i + 1) as f64;
+            total += t * (t - 1.0) / 2.0;
+            i = j + 1;
+        }
+        total
+    };
+    let tx = tie_count(x);
+    let ty = tie_count(y);
+
+    let mut buf = vec![0f64; n];
+    let discordant = merge_count(&mut ys, &mut buf) as f64;
+    let n0 = n as f64 * (n as f64 - 1.0) / 2.0;
+    let denom = ((n0 - tx) * (n0 - ty)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    // concordant - discordant = n0 - tx - ty + txy - 2*discordant; for
+    // continuous samples (our case — u32 draws rarely tie) txy ≈ 0.
+    (n0 - tx - ty - 2.0 * discordant) / denom
+}
+
+/// Merge sort counting inversions (pairs out of order).
+fn merge_count(v: &mut [f64], buf: &mut [f64]) -> u64 {
+    let n = v.len();
+    if n <= 1 {
+        return 0;
+    }
+    let mid = n / 2;
+    let mut inv = {
+        let (left, right) = v.split_at_mut(mid);
+        merge_count(left, buf) + merge_count(right, buf)
+    };
+    let (mut i, mut j, mut k) = (0usize, mid, 0usize);
+    while i < mid && j < n {
+        if v[i] <= v[j] {
+            buf[k] = v[i];
+            i += 1;
+        } else {
+            buf[k] = v[j];
+            j += 1;
+            inv += (mid - i) as u64;
+        }
+        k += 1;
+    }
+    while i < mid {
+        buf[k] = v[i];
+        i += 1;
+        k += 1;
+    }
+    while j < n {
+        buf[k] = v[j];
+        j += 1;
+        k += 1;
+    }
+    v.copy_from_slice(&buf[..n]);
+    inv
+}
+
+/// All three coefficients for a pair of generators over `n` draws.
+pub fn correlations(a: &mut dyn Prng32, b: &mut dyn Prng32, n: usize) -> (f64, f64, f64) {
+    let x: Vec<f64> = (0..n).map(|_| a.next_u32() as f64).collect();
+    let y: Vec<f64> = (0..n).map(|_| b.next_u32() as f64).collect();
+    (pearson(&x, &y), spearman(&x, &y), kendall(&x, &y))
+}
+
+/// Max |coefficient| over `pairs` random stream pairs of a family — the
+/// Table 3 protocol ("report the maximal correlation for 1000 such pairs").
+pub struct MaxCorr {
+    pub pearson: f64,
+    pub spearman: f64,
+    pub kendall: f64,
+}
+
+pub fn max_pairwise<F, G>(mut make: F, pairs: usize, n: usize, mut pick: G) -> MaxCorr
+where
+    F: FnMut(u64) -> Box<dyn Prng32>,
+    G: FnMut() -> (u64, u64),
+{
+    let mut out = MaxCorr { pearson: 0.0, spearman: 0.0, kendall: 0.0 };
+    for _ in 0..pairs {
+        let (i, j) = pick();
+        let mut a = make(i);
+        let mut b = make(j);
+        let (p, s, k) = correlations(a.as_mut(), b.as_mut(), n);
+        out.pearson = out.pearson.max(p.abs());
+        out.spearman = out.spearman.max(s.abs());
+        out.kendall = out.kendall.max(k.abs());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, SplitMix64};
+
+    #[test]
+    fn perfect_correlation() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert!((pearson(&x, &x) - 1.0).abs() < 1e-12);
+        assert!((spearman(&x, &x) - 1.0).abs() < 1e-12);
+        assert!((kendall(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_anticorrelation() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..100).map(|i| -(i as f64)).collect();
+        assert!((pearson(&x, &y) + 1.0).abs() < 1e-12);
+        assert!((kendall(&x, &y) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_nonlinear_spearman_one() {
+        let x: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v.powi(3)).collect();
+        assert!(pearson(&x, &y) < 0.95); // nonlinear
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!((kendall(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_streams_near_zero() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        let (p, s, k) = correlations(&mut a, &mut b, 4096);
+        assert!(p.abs() < 0.06, "pearson={p}");
+        assert!(s.abs() < 0.06, "spearman={s}");
+        assert!(k.abs() < 0.06, "kendall={k}");
+    }
+
+    #[test]
+    fn raw_lcg_streams_strongly_correlated() {
+        // The paper's motivating defect (Table 3 ≈ 0.998): truncated
+        // state-shared LCG streams are near-perfectly correlated whenever
+        // their leaf constants nearly agree in the top 32 bits. Streams
+        // (0, 1292) are such a pair under the golden-ratio schedule
+        // (gamma ≈ 1.7e-4 ⇒ Pearson ≈ 0.9990).
+        use crate::prng::thundering::{Ablation, AblatedStream};
+        let mut a = AblatedStream::new(42, 0, Ablation::LcgBaseline);
+        let mut b = AblatedStream::new(42, 1292, Ablation::LcgBaseline);
+        let (p, s, _) = correlations(&mut a, &mut b, 4096);
+        assert!(p.abs() > 0.99, "pearson={p}");
+        assert!(s.abs() > 0.99, "spearman={s}");
+        // The full pipeline kills exactly this pair's correlation.
+        let mut a = AblatedStream::new(42, 0, Ablation::Full);
+        let mut b = AblatedStream::new(42, 1292, Ablation::Full);
+        let (p, s, k) = correlations(&mut a, &mut b, 4096);
+        assert!(p.abs() < 0.06 && s.abs() < 0.06 && k.abs() < 0.06, "{p} {s} {k}");
+    }
+
+    #[test]
+    fn decorrelated_streams_uncorrelated() {
+        let mut a = crate::prng::ThunderingStream::new(42, 0);
+        let mut b = crate::prng::ThunderingStream::new(42, 1);
+        let (p, s, k) = correlations(&mut a, &mut b, 4096);
+        assert!(p.abs() < 0.06 && s.abs() < 0.06 && k.abs() < 0.06, "{p} {s} {k}");
+    }
+
+    #[test]
+    fn ranks_handle_ties() {
+        let r = ranks(&[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn kendall_matches_naive_on_small_input() {
+        let mut g = SplitMix64::new(9);
+        let x: Vec<f64> = (0..50).map(|_| g.next_f64()).collect();
+        let y: Vec<f64> = (0..50).map(|_| g.next_f64()).collect();
+        // Naive O(n^2) tau.
+        let mut conc = 0i64;
+        let mut disc = 0i64;
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                let s = (x[i] - x[j]) * (y[i] - y[j]);
+                if s > 0.0 {
+                    conc += 1;
+                } else if s < 0.0 {
+                    disc += 1;
+                }
+            }
+        }
+        let naive = (conc - disc) as f64 / (50.0 * 49.0 / 2.0);
+        assert!((kendall(&x, &y) - naive).abs() < 1e-12);
+    }
+}

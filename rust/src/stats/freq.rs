@@ -1,0 +1,168 @@
+//! Frequency-family tests: monobit, block frequency, runs, and bit-level
+//! autocorrelation (NIST SP 800-22 forms, sized for battery use).
+
+use super::bits::BitSource;
+use super::special::{chi2_sf, normal_two_sided, two_sided_from_sf};
+use super::TestResult;
+use crate::prng::Prng32;
+
+/// Monobit (frequency) test over `nbits` bits.
+pub fn monobit(gen: &mut dyn Prng32, nbits: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let mut ones = 0i64;
+    for _ in 0..nbits {
+        ones += bs.next_bit() as i64;
+    }
+    let s = 2 * ones - nbits as i64; // sum of ±1
+    let z = s as f64 / (nbits as f64).sqrt();
+    TestResult::new("monobit", normal_two_sided(z))
+        .with_detail(format!("ones={ones}/{nbits} z={z:.3}"))
+}
+
+/// Block frequency test: `nblocks` blocks of `m` bits, chi-square.
+pub fn block_frequency(gen: &mut dyn Prng32, m: usize, nblocks: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let mut stat = 0.0;
+    for _ in 0..nblocks {
+        let mut ones = 0usize;
+        for _ in 0..m {
+            ones += bs.next_bit() as usize;
+        }
+        let pi = ones as f64 / m as f64;
+        stat += (pi - 0.5) * (pi - 0.5);
+    }
+    stat *= 4.0 * m as f64;
+    TestResult::new("block_frequency", two_sided_from_sf(chi2_sf(stat, nblocks as f64)))
+        .with_detail(format!("chi2={stat:.2} blocks={nblocks} m={m}"))
+}
+
+/// Runs test (NIST): number of runs vs expectation given the bit ratio.
+pub fn runs(gen: &mut dyn Prng32, nbits: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let first = bs.next_bit();
+    let mut ones = first as usize;
+    let mut runs = 1usize;
+    let mut prev = first;
+    for _ in 1..nbits {
+        let b = bs.next_bit();
+        ones += b as usize;
+        if b != prev {
+            runs += 1;
+        }
+        prev = b;
+    }
+    let pi = ones as f64 / nbits as f64;
+    if (pi - 0.5).abs() >= 2.0 / (nbits as f64).sqrt() {
+        // Monobit precondition failed — report hard failure.
+        return TestResult::new("runs", 0.0).with_detail(format!("pi={pi:.4} precondition"));
+    }
+    let n = nbits as f64;
+    let expected = 2.0 * n * pi * (1.0 - pi);
+    let z = (runs as f64 - expected) / (2.0 * n.sqrt() * pi * (1.0 - pi));
+    TestResult::new("runs", normal_two_sided(z))
+        .with_detail(format!("runs={runs} expected={expected:.1} z={z:.3}"))
+}
+
+/// Bit autocorrelation at lag `lag` over `nbits` bits.
+pub fn autocorrelation(gen: &mut dyn Prng32, lag: usize, nbits: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let mut ring = vec![0u8; lag];
+    for b in ring.iter_mut() {
+        *b = bs.next_bit();
+    }
+    let mut agree = 0usize;
+    let mut idx = 0usize;
+    for _ in 0..nbits {
+        let b = bs.next_bit();
+        if b == ring[idx] {
+            agree += 1;
+        }
+        ring[idx] = b;
+        idx = (idx + 1) % lag;
+    }
+    let n = nbits as f64;
+    let z = (2.0 * agree as f64 - n) / n.sqrt();
+    TestResult::new(&format!("autocorr_lag{lag}"), normal_two_sided(z))
+        .with_detail(format!("agree={agree}/{nbits} z={z:.3}"))
+}
+
+/// Byte-level frequency chi-square over `n` words (catches byte-biased
+/// outputs the bit tests miss).
+pub fn byte_frequency(gen: &mut dyn Prng32, nwords: usize) -> TestResult {
+    let mut counts = [0f64; 256];
+    for _ in 0..nwords {
+        let w = gen.next_u32();
+        for shift in [0, 8, 16, 24] {
+            counts[((w >> shift) & 0xFF) as usize] += 1.0;
+        }
+    }
+    let expected = (nwords * 4) as f64 / 256.0;
+    let stat: f64 = counts.iter().map(|&o| (o - expected) * (o - expected) / expected).sum();
+    TestResult::new("byte_frequency", two_sided_from_sf(chi2_sf(stat, 255.0)))
+        .with_detail(format!("chi2={stat:.1}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+    use crate::stats::bits::controls::{Alternator, Constant, Counter};
+
+    const N: usize = 1 << 16;
+
+    #[test]
+    fn good_source_passes() {
+        let mut g = SplitMix64::new(12345);
+        assert!(monobit(&mut g, N).p_value > 1e-3);
+        assert!(block_frequency(&mut g, 128, 256).p_value > 1e-3);
+        assert!(runs(&mut g, N).p_value > 1e-3);
+        assert!(autocorrelation(&mut g, 1, N).p_value > 1e-3);
+        assert!(autocorrelation(&mut g, 8, N).p_value > 1e-3);
+        assert!(byte_frequency(&mut g, N).p_value > 1e-3);
+    }
+
+    #[test]
+    fn constant_fails_monobit() {
+        let mut g = Constant(0);
+        assert!(monobit(&mut g, N).p_value < 1e-10);
+    }
+
+    #[test]
+    fn alternator_fails_runs_family() {
+        let mut g = Alternator(false);
+        // Perfectly balanced bits, so monobit passes...
+        assert!(monobit(&mut g, N).p_value > 0.9);
+        // ...but run structure and autocorrelation are pathological.
+        assert!(runs(&mut g, N).p_value < 1e-10);
+        let mut g = Alternator(false);
+        assert!(autocorrelation(&mut g, 1, N).p_value < 1e-10);
+    }
+
+    #[test]
+    fn counter_fails_byte_frequency() {
+        let mut g = Counter(0);
+        // Low bytes sweep uniformly but high bytes barely move over 65k.
+        assert!(byte_frequency(&mut g, N).p_value < 1e-10);
+    }
+
+    #[test]
+    fn block_frequency_catches_drift() {
+        // A source whose density drifts block to block.
+        struct Drift(u32);
+        impl crate::prng::Prng32 for Drift {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = self.0.wrapping_add(1);
+                if (self.0 / 64) % 2 == 0 {
+                    0xFFFF_FFFF
+                } else {
+                    0xFFFF_0000
+                }
+            }
+            fn name(&self) -> &'static str {
+                "drift"
+            }
+        }
+        let mut g = Drift(0);
+        assert!(block_frequency(&mut g, 128, 256).p_value < 1e-10);
+    }
+}

@@ -1,0 +1,142 @@
+//! Hamming-weight dependency test (after Blackman & Vigna's `hwd`) —
+//! detects dependency between the Hamming weights of consecutive outputs
+//! (paper Sec. 5.2.3, Table 4).
+//!
+//! Statistic: center the weight of each 32-bit word (w − 16), then z-score
+//! the lag-1 correlation of the centered weights. Under independence the
+//! correlation is 0 with variance 1/n. The test runs in doubling batches
+//! and reports the sample count at which the dependency is detected, capped
+//! at `max_samples` (the paper reports exactly this "numbers before an
+//! unexpected pattern" count).
+
+use super::special::normal_two_sided;
+use super::TestResult;
+use crate::prng::Prng32;
+
+/// One-shot HWD z-test over `n` outputs.
+pub fn hwd_test(gen: &mut dyn Prng32, n: usize) -> TestResult {
+    let mut prev = gen.next_u32().count_ones() as f64 - 16.0;
+    let mut corr_sum = 0.0;
+    let mut var_sum = prev * prev;
+    for _ in 1..n {
+        let w = gen.next_u32().count_ones() as f64 - 16.0;
+        corr_sum += prev * w;
+        var_sum += w * w;
+        prev = w;
+    }
+    // Var[weight] = 32·(1/4) = 8 per word; normalize empirically to be
+    // robust to marginally-biased sources.
+    let var = (var_sum / n as f64).max(1e-9);
+    let z = corr_sum / (var * ((n - 1) as f64).sqrt());
+    TestResult::new("hwd_lag1", normal_two_sided(z)).with_detail(format!("z={z:.3} n={n}"))
+}
+
+/// Multi-lag HWD: max |z| over lags 1..=maxlag (Bonferroni-corrected).
+pub fn hwd_multilag(gen: &mut dyn Prng32, n: usize, maxlag: usize) -> TestResult {
+    let weights: Vec<f64> =
+        (0..n).map(|_| gen.next_u32().count_ones() as f64 - 16.0).collect();
+    let var = (weights.iter().map(|w| w * w).sum::<f64>() / n as f64).max(1e-9);
+    let mut worst_z = 0.0f64;
+    let mut worst_lag = 1usize;
+    for lag in 1..=maxlag {
+        let m = n - lag;
+        let corr: f64 = (0..m).map(|i| weights[i] * weights[i + lag]).sum();
+        let z = (corr / (var * (m as f64).sqrt())).abs();
+        if z > worst_z {
+            worst_z = z;
+            worst_lag = lag;
+        }
+    }
+    // Šidák correction for the max over lags (stays < 1, so the two-sided
+    // verdict never misreads a clean result as "too good").
+    let p1 = normal_two_sided(worst_z);
+    let p = 1.0 - (1.0 - p1).powi(maxlag as i32);
+    TestResult::new("hwd_multilag", p.clamp(0.0, 1.0 - 1e-9))
+        .with_detail(format!("worst_lag={worst_lag} z={worst_z:.3}"))
+}
+
+/// Doubling-batch HWD driver: returns the number of outputs consumed before
+/// the dependency was detected (p < threshold), or `cap` if never. This is
+/// the Table 4 metric.
+pub fn hwd_detection_threshold<F>(mut make_gen: F, cap: u64) -> u64
+where
+    F: FnMut() -> Box<dyn Prng32>,
+{
+    let mut n: u64 = 1 << 14;
+    while n <= cap {
+        let mut gen = make_gen();
+        let r = hwd_multilag(gen.as_mut(), n as usize, 4);
+        if r.p_value < 1e-9 {
+            return n;
+        }
+        n *= 2;
+    }
+    cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, SplitMix64};
+
+    #[test]
+    fn good_source_passes() {
+        let mut g = SplitMix64::new(31337);
+        let r = hwd_test(&mut g, 1 << 16);
+        assert!(r.p_value > 1e-4, "{r:?}");
+        let mut g = SplitMix64::new(31338);
+        let r = hwd_multilag(&mut g, 1 << 16, 4);
+        assert!(r.p_value > 1e-4, "{r:?}");
+    }
+
+    /// A source whose consecutive outputs alternate between heavy and light
+    /// Hamming weight — the canonical HWD failure.
+    struct WeightSeesaw {
+        inner: SplitMix64,
+        heavy: bool,
+    }
+
+    impl Prng32 for WeightSeesaw {
+        fn next_u32(&mut self) -> u32 {
+            let v = self.inner.next_u32();
+            self.heavy = !self.heavy;
+            if self.heavy {
+                v | 0x00FF_0000 // force some extra weight
+            } else {
+                v & !0x00FF_0000
+            }
+        }
+        fn name(&self) -> &'static str {
+            "seesaw"
+        }
+    }
+
+    #[test]
+    fn seesaw_fails() {
+        let mut g = WeightSeesaw { inner: SplitMix64::new(1), heavy: false };
+        let r = hwd_test(&mut g, 1 << 16);
+        assert!(r.p_value < 1e-10, "{r:?}");
+    }
+
+    #[test]
+    fn detection_threshold_finds_seesaw_fast() {
+        let n = hwd_detection_threshold(
+            || Box::new(WeightSeesaw { inner: SplitMix64::new(1), heavy: false }),
+            1 << 22,
+        );
+        assert_eq!(n, 1 << 14);
+    }
+
+    #[test]
+    fn detection_threshold_caps_for_good_source() {
+        let mut seed = 0;
+        let n = hwd_detection_threshold(
+            || {
+                seed += 1;
+                Box::new(SplitMix64::new(seed))
+            },
+            1 << 17,
+        );
+        assert_eq!(n, 1 << 17);
+    }
+}

@@ -1,0 +1,187 @@
+//! Linear complexity test via Berlekamp–Massey — the sharpest discriminator
+//! for F2-linear generators. A truly random n-bit sequence has linear
+//! complexity ≈ n/2; an LFSR/xorshift/Mersenne-Twister bit stream can never
+//! exceed its state dimension (113 / 128 / 19937). This is what makes the
+//! Table 1 "crushable" column fail in our battery.
+
+use super::bits::BitSource;
+use super::special::normal_two_sided;
+use super::TestResult;
+use crate::prng::Prng32;
+
+/// Berlekamp–Massey over GF(2) on a packed bit sequence; returns the linear
+/// complexity L. Bit i of the sequence is `(bits[i/64] >> (i%64)) & 1`.
+pub fn berlekamp_massey(bits: &[u64], n: usize) -> usize {
+    let words = n.div_ceil(64);
+    let mut c = vec![0u64; words + 1]; // connection polynomial
+    let mut b = vec![0u64; words + 1];
+    c[0] = 1;
+    b[0] = 1;
+    let (mut l, mut m) = (0usize, 1usize);
+    let mut t = vec![0u64; words + 1];
+
+    let get = |v: &[u64], i: usize| -> u64 { (v[i / 64] >> (i % 64)) & 1 };
+
+    for i in 0..n {
+        // discrepancy d = s_i + Σ_{j=1..L} c_j s_{i-j}
+        let mut d = get(bits, i);
+        for j in 1..=l {
+            d ^= get(&c, j) & get(bits, i - j);
+        }
+        if d == 1 {
+            t.copy_from_slice(&c);
+            // c ^= b << m (polynomial shift by m bits)
+            let (wsh, bsh) = (m / 64, m % 64);
+            for w in (0..=words).rev() {
+                let mut v = 0u64;
+                if w >= wsh {
+                    v = b[w - wsh] << bsh;
+                    if bsh > 0 && w > wsh {
+                        v |= b[w - wsh - 1] >> (64 - bsh);
+                    }
+                }
+                c[w] ^= v;
+            }
+            if 2 * l <= i {
+                l = i + 1 - l;
+                b.copy_from_slice(&t);
+                m = 1;
+            } else {
+                m += 1;
+            }
+        } else {
+            m += 1;
+        }
+    }
+    l
+}
+
+/// Linear complexity test on one bit plane: take bit `bit` of `nbits`
+/// consecutive outputs (a single bit plane is an LFSR sequence of complexity
+/// <= state dimension for any F2-linear generator) and z-score L against the
+/// random expectation μ ≈ n/2 + (4 + (n mod 2))/18, σ² ≈ 86/81.
+pub fn linear_complexity(gen: &mut dyn Prng32, bit: u32, nbits: usize) -> TestResult {
+    let mut bits = vec![0u64; nbits.div_ceil(64)];
+    for i in 0..nbits {
+        if (gen.next_u32() >> bit) & 1 == 1 {
+            bits[i / 64] |= 1 << (i % 64);
+        }
+    }
+    let l = berlekamp_massey(&bits, nbits);
+    let n = nbits as f64;
+    let mu = n / 2.0 + (4.0 + (nbits % 2) as f64) / 18.0;
+    let sigma = (86.0f64 / 81.0).sqrt();
+    let z = (l as f64 - mu) / sigma;
+    TestResult::new(&format!("linear_complexity_b{bit}"), normal_two_sided(z))
+        .with_detail(format!("L={l} n={nbits} mu={mu:.1}"))
+}
+
+/// Full-bitstream variant (all 32 bits, MSB-first). Catches linear structure
+/// across bit planes; interleaving multiplies the detectable dimension by
+/// 32, so prefer [`linear_complexity`] for small sample sizes.
+pub fn linear_complexity_stream(gen: &mut dyn Prng32, nbits: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let bits = bs.fill_words(nbits);
+    let l = berlekamp_massey(&bits, nbits);
+    let n = nbits as f64;
+    let mu = n / 2.0 + (4.0 + (nbits % 2) as f64) / 18.0;
+    let sigma = (86.0f64 / 81.0).sqrt();
+    let z = (l as f64 - mu) / sigma;
+    TestResult::new("linear_complexity_stream", normal_two_sided(z))
+        .with_detail(format!("L={l} n={nbits} mu={mu:.1}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, SplitMix64, Xorshift128};
+
+    fn pack(bits: &[u8]) -> Vec<u64> {
+        let mut w = vec![0u64; bits.len().div_ceil(64)];
+        for (i, &b) in bits.iter().enumerate() {
+            if b == 1 {
+                w[i / 64] |= 1 << (i % 64);
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn bm_on_known_lfsr() {
+        // s_i = s_{i-1} ^ s_{i-4} (L = 4), seeded 1,0,0,0.
+        let mut s = vec![1u8, 0, 0, 0];
+        for i in 4..64 {
+            let v = s[i - 1] ^ s[i - 4];
+            s.push(v);
+        }
+        assert_eq!(berlekamp_massey(&pack(&s), s.len()), 4);
+    }
+
+    #[test]
+    fn bm_on_alternating() {
+        // 101010... has complexity 2 (s_i = s_{i-2}).
+        let s: Vec<u8> = (0..64).map(|i| (i % 2) as u8).collect();
+        assert_eq!(berlekamp_massey(&pack(&s), 64), 2);
+    }
+
+    #[test]
+    fn bm_on_zeroes() {
+        assert_eq!(berlekamp_massey(&pack(&[0u8; 64]), 64), 0);
+    }
+
+    #[test]
+    fn random_sequence_complexity_near_half() {
+        let mut g = SplitMix64::new(3);
+        let mut bs = BitSource::new(&mut g);
+        let n = 2048;
+        let bits = bs.fill_words(n);
+        let l = berlekamp_massey(&bits, n);
+        assert!((l as i64 - (n as i64) / 2).abs() <= 8, "L={l}");
+    }
+
+    #[test]
+    fn xorshift128_bit0_capped_at_128() {
+        // Bit 0 of xorshift128 outputs is an F2-linear sequence with
+        // complexity <= 128 — the battery's crushable detector.
+        let mut g = Xorshift128::new([1, 2, 3, 4]);
+        let n = 1024;
+        let mut bits = vec![0u64; n / 64];
+        for i in 0..n {
+            if g.next_u32() & 1 == 1 {
+                bits[i / 64] |= 1 << (i % 64);
+            }
+        }
+        let l = berlekamp_massey(&bits, n);
+        assert!(l <= 128, "L={l}");
+    }
+
+    #[test]
+    fn good_source_passes_test() {
+        let mut g = SplitMix64::new(11);
+        let r = linear_complexity(&mut g, 0, 4096);
+        assert!(r.p_value > 1e-4, "{r:?}");
+        let mut g = SplitMix64::new(12);
+        let r = linear_complexity_stream(&mut g, 4096);
+        assert!(r.p_value > 1e-4, "{r:?}");
+    }
+
+    #[test]
+    fn xorshift_fails_test() {
+        // Any bit plane of an F2-linear generator has complexity <= 128.
+        let mut g = Xorshift128::new([5, 6, 7, 8]);
+        let r = linear_complexity(&mut g, 0, 4096);
+        assert!(r.p_value < 1e-10, "{r:?}");
+        let mut g = Xorshift128::new([5, 6, 7, 8]);
+        let r = linear_complexity(&mut g, 31, 4096);
+        assert!(r.p_value < 1e-10, "{r:?}");
+    }
+
+    #[test]
+    fn thundering_passes_where_xorshift_fails() {
+        // The decorrelated ThundeRiNG output XORs a *nonlinear* permuted LCG
+        // with the linear decorrelator — complexity is restored.
+        let mut g = crate::prng::ThunderingStream::new(42, 0);
+        let r = linear_complexity(&mut g, 0, 4096);
+        assert!(r.p_value > 1e-4, "{r:?}");
+    }
+}

@@ -1,0 +1,316 @@
+//! Statistical-quality substrate: the "MiniCrush" battery, the
+//! PractRand-style doubling driver, Hamming-weight dependency, and pairwise
+//! correlation — the from-scratch stand-ins for TestU01 BigCrush, PractRand,
+//! and Blackman's hwd (see DESIGN.md §2 for the substitution argument).
+
+pub mod birthday;
+pub mod bits;
+pub mod corr;
+pub mod freq;
+pub mod hwd;
+pub mod lincomp;
+pub mod rank;
+pub mod serial;
+pub mod special;
+
+use crate::prng::Prng32;
+
+/// Outcome of one statistical test.
+#[derive(Debug, Clone)]
+pub struct TestResult {
+    pub name: String,
+    /// Two-sided p-value in [0, 1].
+    pub p_value: f64,
+    pub detail: String,
+}
+
+impl TestResult {
+    pub fn new(name: &str, p_value: f64) -> Self {
+        Self { name: name.to_string(), p_value: p_value.clamp(0.0, 1.0), detail: String::new() }
+    }
+
+    pub fn with_detail(mut self, detail: String) -> Self {
+        self.detail = detail;
+        self
+    }
+
+    pub fn verdict(&self) -> Verdict {
+        // Every test reports p in the "small = bad" convention (one-sided
+        // sf values are folded two-sided at the source, so "suspiciously
+        // good fits" also yield small p). TestU01-style thresholds.
+        if self.p_value < 1e-10 {
+            Verdict::Fail
+        } else if self.p_value < 1e-4 {
+            Verdict::Suspicious
+        } else {
+            Verdict::Pass
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    Suspicious,
+    Fail,
+}
+
+impl std::fmt::Display for Verdict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Verdict::Pass => write!(f, "pass"),
+            Verdict::Suspicious => write!(f, "SUSPICIOUS"),
+            Verdict::Fail => write!(f, "FAIL"),
+        }
+    }
+}
+
+/// Battery scale: how many samples each test consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// ~2^21 outputs total — CI-friendly (seconds).
+    Quick,
+    /// ~2^25 outputs total — the Table 2 setting (tens of seconds).
+    Standard,
+    /// ~2^28 outputs total — closest to a Crush-class sweep (minutes).
+    Deep,
+}
+
+impl Scale {
+    fn shift(&self) -> u32 {
+        match self {
+            Scale::Quick => 0,
+            Scale::Standard => 4,
+            Scale::Deep => 7,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "quick" => Some(Scale::Quick),
+            "standard" => Some(Scale::Standard),
+            "deep" => Some(Scale::Deep),
+            _ => None,
+        }
+    }
+}
+
+/// Summary of one battery run.
+#[derive(Debug, Clone)]
+pub struct BatteryReport {
+    pub generator: String,
+    pub scale: Scale,
+    pub results: Vec<TestResult>,
+}
+
+impl BatteryReport {
+    pub fn failures(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Fail).count()
+    }
+
+    pub fn suspicious(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Suspicious).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    /// TestU01-style one-line summary ("Pass" / "k failures").
+    pub fn summary(&self) -> String {
+        match self.failures() {
+            0 => format!("Pass ({} tests, {} suspicious)", self.results.len(), self.suspicious()),
+            k => {
+                let names: Vec<&str> = self
+                    .results
+                    .iter()
+                    .filter(|r| r.verdict() == Verdict::Fail)
+                    .map(|r| r.name.as_str())
+                    .collect();
+                format!("{k} failures ({})", names.join(", "))
+            }
+        }
+    }
+}
+
+/// Run the MiniCrush battery on a generator.
+///
+/// Twenty-two tests spanning the discriminative axes of Crush:
+/// equidistribution (monobit/block/byte/poker/serial), independence
+/// (runs/autocorrelation/gap/HWD), structure (birthday spacings, collision,
+/// matrix rank, linear complexity), and extremes (max-of-t, runs-up).
+pub fn mini_crush(gen: &mut dyn Prng32, scale: Scale) -> BatteryReport {
+    let s = scale.shift();
+    let k = |base: usize| base << s; // scale sample sizes
+    let name = gen.name().to_string();
+
+    let results = vec![
+        freq::monobit(gen, k(1 << 20)),
+        freq::block_frequency(gen, 128, k(1 << 12)),
+        freq::runs(gen, k(1 << 20)),
+        freq::autocorrelation(gen, 1, k(1 << 20)),
+        freq::autocorrelation(gen, 2, k(1 << 20)),
+        freq::autocorrelation(gen, 16, k(1 << 20)),
+        freq::byte_frequency(gen, k(1 << 18)),
+        serial::serial(gen, 4, k(1 << 18)),
+        serial::serial(gen, 8, k(1 << 18)),
+        serial::poker(gen, 4, k(1 << 18)),
+        serial::gap(gen, 0.25, k(1 << 14)),
+        serial::collision(gen, 24, k(1 << 16)),
+        serial::coupon_collector(gen, 8, k(1 << 13)),
+        serial::maximum_of_t(gen, 8, k(1 << 13)),
+        serial::runs_up(gen, k(1 << 14)),
+        serial::low_bit_bias(gen, k(1 << 20)),
+        birthday::birthday_spacings(gen, 1 << 11, 28, 4 << s),
+        rank::matrix_rank(gen, 64, k(256)),
+        rank::matrix_rank(gen, 256, k(16)),
+        lincomp::linear_complexity(gen, 0, k(1 << 12)),
+        lincomp::linear_complexity(gen, 31, k(1 << 12)),
+        hwd::hwd_multilag(gen, k(1 << 18), 4),
+    ];
+    BatteryReport { generator: name, scale, results }
+}
+
+/// PractRand-style doubling driver outcome: the first failing scale, or
+/// clean through the cap. This is the "PractRand" column of Table 2.
+pub struct DoublingReport {
+    pub generator: String,
+    /// Bytes at which the first failure appeared; None = clean through cap.
+    pub failed_at_bytes: Option<u64>,
+    pub tested_up_to_bytes: u64,
+    pub failing_test: Option<String>,
+}
+
+impl DoublingReport {
+    /// PractRand-style ">= N" / "N" label.
+    pub fn label(&self) -> String {
+        fn human(b: u64) -> String {
+            if b >= 1 << 30 {
+                format!("{}GB", b >> 30)
+            } else if b >= 1 << 20 {
+                format!("{}MB", b >> 20)
+            } else {
+                format!("{}KB", b >> 10)
+            }
+        }
+        match self.failed_at_bytes {
+            Some(b) => human(b),
+            None => format!(">{}", human(self.tested_up_to_bytes)),
+        }
+    }
+}
+
+/// Run the doubling driver. `make_gen` must return a fresh, identically
+/// seeded generator each call. Scales double from 2^21 bytes up to `cap`.
+pub fn doubling_drive<F>(mut make_gen: F, cap_bytes: u64) -> DoublingReport
+where
+    F: FnMut() -> Box<dyn Prng32>,
+{
+    let mut bytes: u64 = 1 << 21;
+    let mut name = String::new();
+    while bytes <= cap_bytes {
+        let mut gen = make_gen();
+        name = gen.name().to_string();
+        let words = (bytes / 4) as usize;
+        // A focused sub-battery sized to exactly `words` outputs, weighted
+        // toward the tests that sharpen with length.
+        let per = words / 4;
+        let results = [
+            freq::monobit(gen.as_mut(), per * 32),
+            serial::serial(gen.as_mut(), 8, (per * 8).min(1 << 26)),
+            hwd::hwd_multilag(gen.as_mut(), per, 4),
+            serial::collision(gen.as_mut(), 24, per.min(1 << 22)),
+        ];
+        if let Some(fail) = results.iter().find(|r| r.verdict() == Verdict::Fail) {
+            return DoublingReport {
+                generator: name,
+                failed_at_bytes: Some(bytes),
+                tested_up_to_bytes: bytes,
+                failing_test: Some(fail.name.clone()),
+            };
+        }
+        bytes *= 2;
+    }
+    DoublingReport {
+        generator: name,
+        failed_at_bytes: None,
+        tested_up_to_bytes: cap_bytes,
+        failing_test: None,
+    }
+}
+
+pub use bits::{controls, BitSource, Interleaved};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{SplitMix64, ThunderingStream};
+
+    #[test]
+    fn verdict_thresholds() {
+        assert_eq!(TestResult::new("t", 0.5).verdict(), Verdict::Pass);
+        assert_eq!(TestResult::new("t", 1e-5).verdict(), Verdict::Suspicious);
+        assert_eq!(TestResult::new("t", 1e-12).verdict(), Verdict::Fail);
+        // p near 1 is benign in the small=bad convention.
+        assert_eq!(TestResult::new("t", 1.0 - 1e-12).verdict(), Verdict::Pass);
+    }
+
+    #[test]
+    fn quick_battery_passes_good_generators() {
+        let mut g = SplitMix64::new(1);
+        let r = mini_crush(&mut g, Scale::Quick);
+        assert_eq!(r.failures(), 0, "{}", r.summary());
+
+        let mut t = ThunderingStream::new(42, 7);
+        let r = mini_crush(&mut t, Scale::Quick);
+        assert_eq!(r.failures(), 0, "{}", r.summary());
+    }
+
+    #[test]
+    fn quick_battery_fails_counter() {
+        let mut c = controls::Counter(0);
+        let r = mini_crush(&mut c, Scale::Quick);
+        assert!(r.failures() >= 3, "{}", r.summary());
+    }
+
+    #[test]
+    fn doubling_reports_clean_for_good_source() {
+        let mut seed = 100;
+        let rep = doubling_drive(
+            || {
+                seed += 1;
+                Box::new(SplitMix64::new(seed))
+            },
+            1 << 22,
+        );
+        assert!(rep.failed_at_bytes.is_none());
+        assert_eq!(rep.label(), ">4MB");
+    }
+
+    #[test]
+    fn doubling_catches_counter_immediately() {
+        let rep = doubling_drive(|| Box::new(controls::Counter(0)), 1 << 30);
+        assert_eq!(rep.failed_at_bytes, Some(1 << 21));
+        assert_eq!(rep.label(), "2MB");
+    }
+
+    #[test]
+    fn interleaved_thundering_passes_quick() {
+        // The inter-stream protocol of Sec. 5.1.3 at unit scale.
+        let streams: Vec<ThunderingStream> =
+            (0..8).map(|i| ThunderingStream::new(42, i)).collect();
+        let mut il = Interleaved::new(streams);
+        let r = mini_crush(&mut il, Scale::Quick);
+        assert_eq!(r.failures(), 0, "{}", r.summary());
+    }
+
+    #[test]
+    fn interleaved_raw_lcg_fails_quick() {
+        use crate::prng::thundering::{Ablation, AblatedStream};
+        let streams: Vec<AblatedStream> =
+            (0..8).map(|i| AblatedStream::new(42, i, Ablation::LcgBaseline)).collect();
+        let mut il = Interleaved::new(streams);
+        let r = mini_crush(&mut il, Scale::Quick);
+        assert!(r.failures() > 0, "{}", r.summary());
+    }
+}

@@ -1,0 +1,153 @@
+//! Binary matrix rank test (Marsaglia / NIST) — builds k×k GF(2) matrices
+//! from output bits and compares the rank distribution to the random-matrix
+//! law. F2-linear generators (LFSRs, xorshift, Mersenne Twister) produce
+//! rank-deficient matrices once k exceeds their effective dimension.
+
+use super::bits::BitSource;
+use super::special::chi2_test;
+use super::TestResult;
+use crate::prng::Prng32;
+
+/// GF(2) rank of a k×k bit matrix stored as rows of u64 words.
+pub fn gf2_rank(rows: &mut [Vec<u64>], k: usize) -> usize {
+    let words = k.div_ceil(64);
+    let mut rank = 0usize;
+    let mut row = 0usize;
+    for col in 0..k {
+        let (w, b) = (col / 64, col % 64);
+        // Find a pivot at or below `row`.
+        let mut pivot = None;
+        for r in row..rows.len() {
+            if rows[r][w] >> b & 1 == 1 {
+                pivot = Some(r);
+                break;
+            }
+        }
+        let Some(p) = pivot else { continue };
+        rows.swap(row, p);
+        // Eliminate this column from all other rows.
+        let pivot_row = rows[row].clone();
+        for (r, other) in rows.iter_mut().enumerate() {
+            if r != row && other[w] >> b & 1 == 1 {
+                for wi in 0..words {
+                    other[wi] ^= pivot_row[wi];
+                }
+            }
+        }
+        row += 1;
+        rank += 1;
+        if row == rows.len() {
+            break;
+        }
+    }
+    rank
+}
+
+/// P[rank = k - d] for a random k×k GF(2) matrix (d = deficiency).
+pub fn rank_prob(k: usize, d: usize) -> f64 {
+    // P[rank = r] = 2^{r(2k-r) - k²} · Π_{i=0..r-1} ((1-2^{i-k})² / (1-2^{i-r}))
+    let r = k - d;
+    let log2p = (r as f64) * (2.0 * k as f64 - r as f64) - (k as f64) * (k as f64);
+    let mut prod = 1.0;
+    for i in 0..r {
+        let a = 1.0 - 2f64.powi(i as i32 - k as i32);
+        let b = 1.0 - 2f64.powi(i as i32 - r as i32);
+        prod *= a * a / b;
+    }
+    prod * 2f64.powf(log2p)
+}
+
+/// Matrix rank test: `nmat` matrices of size k×k; chi-square over
+/// {full, -1, -2, <=-3} deficiency classes.
+pub fn matrix_rank(gen: &mut dyn Prng32, k: usize, nmat: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let mut counts = [0f64; 4]; // d = 0, 1, 2, >=3
+    for _ in 0..nmat {
+        let mut rows: Vec<Vec<u64>> = (0..k).map(|_| bs.fill_words(k)).collect();
+        let rank = gf2_rank(&mut rows, k);
+        let d = (k - rank).min(3);
+        counts[d] += 1.0;
+    }
+    let mut expected = [0f64; 4];
+    for (d, e) in expected.iter_mut().enumerate().take(3) {
+        *e = rank_prob(k, d) * nmat as f64;
+    }
+    expected[3] = (nmat as f64 - expected[0] - expected[1] - expected[2]).max(0.0);
+    // Merge the tail bins (tiny expectations) into d=2.
+    let obs = [counts[0], counts[1], counts[2] + counts[3]];
+    let exp = [expected[0], expected[1], expected[2] + expected[3]];
+    let (stat, p) = chi2_test(&obs, &exp);
+    TestResult::new(&format!("matrix_rank_{k}"), p).with_detail(format!(
+        "chi2={stat:.2} full={} d1={} d2+={}",
+        counts[0],
+        counts[1],
+        counts[2] + counts[3]
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, SplitMix64};
+
+    #[test]
+    fn rank_of_identity() {
+        let k = 64;
+        let mut rows: Vec<Vec<u64>> = (0..k).map(|i| vec![1u64 << i]).collect();
+        assert_eq!(gf2_rank(&mut rows, k), 64);
+    }
+
+    #[test]
+    fn rank_of_duplicated_rows() {
+        let k = 64;
+        let mut rows: Vec<Vec<u64>> = (0..k).map(|i| vec![1u64 << (i / 2)]).collect();
+        assert_eq!(gf2_rank(&mut rows, k), 32);
+    }
+
+    #[test]
+    fn rank_of_zero() {
+        let mut rows: Vec<Vec<u64>> = (0..32).map(|_| vec![0u64]).collect();
+        assert_eq!(gf2_rank(&mut rows, 32), 0);
+    }
+
+    #[test]
+    fn rank_probs_sum_to_one() {
+        let total: f64 = (0..6).map(|d| rank_prob(32, d)).sum();
+        assert!((total - 1.0).abs() < 1e-6, "{total}");
+        // Known values: P[full rank] ≈ 0.2888, P[d=1] ≈ 0.5776.
+        assert!((rank_prob(32, 0) - 0.2888).abs() < 1e-3);
+        assert!((rank_prob(32, 1) - 0.5776).abs() < 1e-3);
+        assert!((rank_prob(32, 2) - 0.1284).abs() < 1e-3);
+    }
+
+    #[test]
+    fn good_source_passes() {
+        let mut g = SplitMix64::new(99);
+        let r = matrix_rank(&mut g, 32, 256);
+        assert!(r.p_value > 1e-3, "{r:?}");
+    }
+
+    #[test]
+    fn linear_source_fails_when_k_exceeds_dimension() {
+        // A pure 31-bit LFSR bit stream: every 64x64 matrix of consecutive
+        // bits has rank <= 31+something tiny — catastrophic deficiency.
+        struct Lfsr(u32);
+        impl Prng32 for Lfsr {
+            fn next_u32(&mut self) -> u32 {
+                let mut out = 0u32;
+                for _ in 0..32 {
+                    let bit = ((self.0 >> 30) ^ (self.0 >> 27)) & 1;
+                    self.0 = ((self.0 << 1) | bit) & 0x7FFF_FFFF;
+                    out = (out << 1) | bit;
+                }
+                out
+            }
+            fn name(&self) -> &'static str {
+                "lfsr31"
+            }
+        }
+        let mut g = Lfsr(0x12345);
+        let r = matrix_rank(&mut g, 64, 64);
+        assert!(r.p_value < 1e-10, "{r:?}");
+    }
+}

@@ -1,0 +1,344 @@
+//! Pattern-family tests: serial (overlapping m-bit), poker (non-overlapping
+//! nibbles), gap, collision, coupon collector, and maximum-of-t — the Knuth
+//! classics that TestU01's Small/Crush batteries build on.
+
+use super::bits::BitSource;
+use super::special::{chi2_sf, chi2_test, ks_test_uniform, normal_two_sided, two_sided_from_sf};
+use super::TestResult;
+use crate::prng::Prng32;
+
+/// Serial test: chi-square delta statistic on overlapping m-bit patterns
+/// (NIST SP 800-22 serial, first statistic, for m and m-1).
+pub fn serial(gen: &mut dyn Prng32, m: u32, nbits: usize) -> TestResult {
+    assert!(m >= 2 && m <= 16);
+    let mut bs = BitSource::new(gen);
+    let bits: Vec<u8> = (0..nbits).map(|_| bs.next_bit()).collect();
+
+    let psi2 = |mm: u32| -> f64 {
+        if mm == 0 {
+            return 0.0;
+        }
+        let mut counts = vec![0u64; 1usize << mm];
+        let mask = (1u32 << mm) - 1;
+        let mut pat = 0u32;
+        // Overlapping with wraparound (the standard cyclic form).
+        for i in 0..nbits + mm as usize - 1 {
+            pat = ((pat << 1) | bits[i % nbits] as u32) & mask;
+            if i + 1 >= mm as usize {
+                counts[pat as usize] += 1;
+            }
+        }
+        let n = nbits as f64;
+        let k = (1usize << mm) as f64;
+        counts.iter().map(|&c| c as f64 * c as f64).sum::<f64>() * k / n - n
+    };
+
+    let d1 = psi2(m) - psi2(m - 1);
+    let p = two_sided_from_sf(chi2_sf(d1, (1u64 << (m - 1)) as f64));
+    TestResult::new(&format!("serial_m{m}"), p).with_detail(format!("delta_psi2={d1:.2}"))
+}
+
+/// Poker test (FIPS 140 form generalized): non-overlapping m-bit hands,
+/// chi-square over 2^m bins.
+pub fn poker(gen: &mut dyn Prng32, m: u32, hands: usize) -> TestResult {
+    let mut bs = BitSource::new(gen);
+    let bins = 1usize << m;
+    let mut counts = vec![0f64; bins];
+    for _ in 0..hands {
+        counts[bs.next_bits(m) as usize] += 1.0;
+    }
+    let expected = vec![hands as f64 / bins as f64; bins];
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new(&format!("poker_m{m}"), p).with_detail(format!("chi2={stat:.1}"))
+}
+
+/// Gap test (Knuth 3.3.2.D): gaps between visits of u ∈ [0, alpha), chi-square
+/// against the geometric law.
+pub fn gap(gen: &mut dyn Prng32, alpha: f64, ngaps: usize) -> TestResult {
+    let max_gap = 24usize; // bins 0..max_gap, last bin = ">= max_gap"
+    let mut counts = vec![0f64; max_gap + 1];
+    let mut collected = 0usize;
+    let mut gap_len = 0usize;
+    let mut draws = 0u64;
+    let limit = (ngaps as u64) * (16.0 / alpha) as u64 + 1_000_000;
+    while collected < ngaps {
+        draws += 1;
+        if draws > limit {
+            // Degenerate source never hits the band — maximal failure.
+            return TestResult::new("gap", 0.0)
+                .with_detail(format!("stalled after {draws} draws"));
+        }
+        let u = gen.next_f32() as f64;
+        if u < alpha {
+            counts[gap_len.min(max_gap)] += 1.0;
+            collected += 1;
+            gap_len = 0;
+        } else {
+            gap_len += 1;
+        }
+    }
+    // Geometric expectations: P[gap = k] = alpha (1-alpha)^k.
+    let mut expected = vec![0f64; max_gap + 1];
+    let mut tail = 1.0;
+    for (k, e) in expected.iter_mut().enumerate().take(max_gap) {
+        let p = alpha * (1.0 - alpha).powi(k as i32);
+        *e = p * ngaps as f64;
+        tail -= p;
+    }
+    expected[max_gap] = tail * ngaps as f64;
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("gap", p).with_detail(format!("chi2={stat:.1} ngaps={ngaps}"))
+}
+
+/// Collision test (Knuth 3.3.2.I): throw `n` balls into `d` urns (d >> n),
+/// compare the collision count to its (approximately Poisson) law.
+pub fn collision(gen: &mut dyn Prng32, log2_d: u32, n: usize) -> TestResult {
+    let d = 1u64 << log2_d;
+    let mut seen = vec![false; d as usize];
+    let mut collisions = 0u64;
+    for _ in 0..n {
+        let v = (gen.next_u32() as u64) & (d - 1);
+        if seen[v as usize] {
+            collisions += 1;
+        } else {
+            seen[v as usize] = true;
+        }
+    }
+    // Exact expectation E = n − d·(1 − (1 − 1/d)^n); the familiar n²/2d
+    // approximation overshoots by ~5% already at n/d = 0.125, which a
+    // 2^21-ball test run flags as a (bogus) 50-sigma failure.
+    let (nf, df) = (n as f64, d as f64);
+    let lambda = nf + df * (nf * (-1.0 / df).ln_1p()).exp_m1();
+    let p = super::special::poisson_two_sided(collisions, lambda);
+    TestResult::new("collision", p)
+        .with_detail(format!("collisions={collisions} lambda={lambda:.1}"))
+}
+
+/// Maximum-of-t test: distribution of max(u_1..u_t) is x^t; KS on n samples.
+pub fn maximum_of_t(gen: &mut dyn Prng32, t: usize, n: usize) -> TestResult {
+    let mut vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut m = 0f64;
+        for _ in 0..t {
+            m = m.max(gen.next_f64());
+        }
+        vals.push(m.powi(t as i32)); // transform to U(0,1)
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = two_sided_from_sf(ks_test_uniform(&vals));
+    TestResult::new(&format!("max_of_{t}"), p)
+}
+
+/// Coupon collector (Knuth 3.3.2.E): segments until all `d` symbols of a
+/// small alphabet are seen; chi-square on segment lengths.
+pub fn coupon_collector(gen: &mut dyn Prng32, d: u32, nsegments: usize) -> TestResult {
+    let dmax = (d as usize) * 8; // bins d..dmax, last = overflow
+    let mut counts = vec![0f64; dmax - d as usize + 2];
+    let mut bs = BitSource::new(gen);
+    let bits_per = 32 - (d - 1).leading_zeros();
+    for _ in 0..nsegments {
+        let mut seen = 0u64;
+        let mut nseen = 0u32;
+        let mut len = 0usize;
+        while nseen < d {
+            // Rejection-sample a symbol in [0, d).
+            let mut s = bs.next_bits(bits_per);
+            while s >= d {
+                s = bs.next_bits(bits_per);
+            }
+            len += 1;
+            if len >= dmax + (d as usize) * 64 {
+                return TestResult::new("coupon_collector", 0.0)
+                    .with_detail("stalled".to_string());
+            }
+            if seen & (1u64 << s) == 0 {
+                seen |= 1u64 << s;
+                nseen += 1;
+            }
+        }
+        let idx = (len - d as usize).min(counts.len() - 1);
+        counts[idx] += 1.0;
+    }
+    // Exact probabilities via Stirling numbers would be ideal; we use the
+    // recurrence P[len = l] = d!/d^l * S(l-1, d-1) computed iteratively.
+    let expected = coupon_expected(d as usize, counts.len(), nsegments as f64);
+    // Merge bins with tiny expectation into the tail.
+    let (mut obs_m, mut exp_m) = (Vec::new(), Vec::new());
+    let (mut acc_o, mut acc_e) = (0.0, 0.0);
+    for (o, e) in counts.iter().zip(&expected) {
+        acc_o += o;
+        acc_e += e;
+        if acc_e >= 5.0 {
+            obs_m.push(acc_o);
+            exp_m.push(acc_e);
+            acc_o = 0.0;
+            acc_e = 0.0;
+        }
+    }
+    if acc_e > 0.0 {
+        if let (Some(o), Some(e)) = (obs_m.last_mut(), exp_m.last_mut()) {
+            *o += acc_o;
+            *e += acc_e;
+        }
+    }
+    let (stat, p) = chi2_test(&obs_m, &exp_m);
+    TestResult::new("coupon_collector", p).with_detail(format!("chi2={stat:.1}"))
+}
+
+/// P[segment length = d + k] for the coupon collector over d symbols,
+/// scaled by `scale`; index k in [0, len), last bin absorbs the tail.
+fn coupon_expected(d: usize, len: usize, scale: f64) -> Vec<f64> {
+    // P[L <= l] = d! S(l, d) / d^l = sum over inclusion-exclusion:
+    // P[L <= l] = Σ_{j=0..d} (-1)^j C(d,j) ((d-j)/d)^l
+    let cdf = |l: usize| -> f64 {
+        let mut sum = 0.0;
+        let mut c = 1.0; // C(d, j)
+        for j in 0..=d {
+            let term = c * ((d - j) as f64 / d as f64).powi(l as i32);
+            sum += if j % 2 == 0 { term } else { -term };
+            c = c * (d - j) as f64 / (j + 1) as f64;
+        }
+        sum.clamp(0.0, 1.0)
+    };
+    let mut out = vec![0f64; len];
+    let mut prev = 0.0;
+    for (k, o) in out.iter_mut().enumerate().take(len - 1) {
+        let cur = cdf(d + k);
+        *o = (cur - prev) * scale;
+        prev = cur;
+    }
+    out[len - 1] = (1.0 - prev) * scale;
+    out
+}
+
+/// Runs-up test: lengths of strictly increasing runs of f64s. The value
+/// that breaks each run is discarded (Knuth 3.3.2.G) so successive run
+/// lengths are independent and the plain chi-square applies.
+pub fn runs_up(gen: &mut dyn Prng32, nruns: usize) -> TestResult {
+    // Run-length distribution: P[len = k] = k/(k+1)!
+    let max_len = 8usize;
+    let mut counts = vec![0f64; max_len + 1];
+    let mut collected = 0usize;
+    while collected < nruns {
+        let mut prev = gen.next_f64();
+        let mut len = 1usize;
+        loop {
+            let v = gen.next_f64();
+            if v > prev {
+                len += 1;
+                prev = v;
+            } else {
+                break; // breaker discarded
+            }
+        }
+        counts[len.min(max_len)] += 1.0;
+        collected += 1;
+    }
+    let mut expected = vec![0f64; max_len + 1];
+    let mut fact = 1.0; // (k+1)!
+    let mut tail = 1.0;
+    for k in 1..max_len {
+        fact *= (k + 1) as f64;
+        let p = k as f64 / fact;
+        expected[k] = p * nruns as f64;
+        tail -= p;
+    }
+    expected[max_len] = tail * nruns as f64;
+    counts.remove(0);
+    expected.remove(0);
+    let (stat, p) = chi2_test(&counts, &expected);
+    TestResult::new("runs_up", p).with_detail(format!("chi2={stat:.1}"))
+}
+
+/// Low-order bit bias: z-test on bit 0 of each word (catches truncated LCG
+/// low-bit weakness the high-bit tests miss).
+pub fn low_bit_bias(gen: &mut dyn Prng32, n: usize) -> TestResult {
+    let mut ones = 0i64;
+    for _ in 0..n {
+        ones += (gen.next_u32() & 1) as i64;
+    }
+    let z = (2 * ones - n as i64) as f64 / (n as f64).sqrt();
+    TestResult::new("low_bit_bias", normal_two_sided(z))
+        .with_detail(format!("ones={ones}/{n}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+    use crate::stats::bits::controls::{Alternator, Counter};
+
+    #[test]
+    fn good_source_passes_all() {
+        let mut g = SplitMix64::new(777);
+        assert!(serial(&mut g, 4, 1 << 14).p_value > 1e-3);
+        assert!(poker(&mut g, 4, 1 << 14).p_value > 1e-3);
+        assert!(gap(&mut g, 0.25, 2000).p_value > 1e-3);
+        assert!(collision(&mut g, 20, 1 << 14).p_value > 1e-3);
+        assert!(maximum_of_t(&mut g, 8, 2000).p_value > 1e-3);
+        assert!(coupon_collector(&mut g, 8, 2000).p_value > 1e-3);
+        assert!(runs_up(&mut g, 2000).p_value > 1e-3);
+        assert!(low_bit_bias(&mut g, 1 << 14).p_value > 1e-3);
+    }
+
+    #[test]
+    fn counter_fails_serial_family() {
+        let mut g = Counter(0);
+        assert!(serial(&mut g, 4, 1 << 14).p_value < 1e-10);
+        let mut g = Counter(0);
+        assert!(collision(&mut g, 20, 1 << 14).p_value < 1e-6);
+    }
+
+    #[test]
+    fn alternator_fails_poker() {
+        let mut g = Alternator(false);
+        assert!(poker(&mut g, 4, 1 << 14).p_value < 1e-10);
+    }
+
+    #[test]
+    fn lcg_low_bits_fail() {
+        // Raw LCG mod 2^64 low bit alternates deterministically (period 2):
+        // bit 0 of consecutive words is perfectly anti-correlated at lag 32
+        // of the bit stream. This is the weakness Sec. 3.4's permutation
+        // exists to fix.
+        struct LowLcg(u64);
+        impl crate::prng::Prng32 for LowLcg {
+            fn next_u32(&mut self) -> u32 {
+                self.0 = crate::prng::lcg::lcg_step(self.0);
+                self.0 as u32 // low 32 bits — the weak ones
+            }
+            fn name(&self) -> &'static str {
+                "low-lcg"
+            }
+        }
+        let mut g = LowLcg(42);
+        let r = crate::stats::freq::autocorrelation(&mut g, 32, 1 << 14);
+        assert!(r.p_value < 1e-10, "{r:?}");
+        let mut g = LowLcg(42);
+        let r = crate::stats::lincomp::linear_complexity(&mut g, 0, 1 << 10);
+        assert!(r.p_value < 1e-10, "{r:?}");
+    }
+
+    #[test]
+    fn coupon_expected_sums_to_one() {
+        let e = coupon_expected(8, 60, 1.0);
+        let sum: f64 = e.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{sum}");
+    }
+
+    #[test]
+    fn skewed_floats_fail_max_of_t() {
+        struct Skew(SplitMix64);
+        impl crate::prng::Prng32 for Skew {
+            fn next_u32(&mut self) -> u32 {
+                let v = self.0.next_u32();
+                v / 2 // never in the top half
+            }
+            fn name(&self) -> &'static str {
+                "skew"
+            }
+        }
+        let mut g = Skew(SplitMix64::new(5));
+        assert!(maximum_of_t(&mut g, 8, 2000).p_value < 1e-10);
+    }
+}

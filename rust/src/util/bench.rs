@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology: warmup runs, then `iters` timed runs; reports min / median /
+//! mean / p95. Results print in a stable machine-grepable format:
+//! `BENCH <name> median=<s> mean=<s> min=<s> p95=<s> [thrpt=<x>/s]`.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+    /// Work items per run, for throughput reporting (0 = no throughput).
+    pub items_per_run: u64,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples, 95.0)
+    }
+
+    /// Items/second at the median sample.
+    pub fn throughput(&self) -> f64 {
+        if self.items_per_run == 0 {
+            0.0
+        } else {
+            self.items_per_run as f64 / self.median()
+        }
+    }
+
+    pub fn report(&self) {
+        let mut line = format!(
+            "BENCH {} median={} mean={} min={} p95={}",
+            self.name,
+            crate::util::fmt_duration(self.median()),
+            crate::util::fmt_duration(self.mean()),
+            crate::util::fmt_duration(self.min()),
+            crate::util::fmt_duration(self.p95()),
+        );
+        if self.items_per_run > 0 {
+            line.push_str(&format!(" thrpt={}", crate::util::fmt_rate(self.throughput())));
+        }
+        println!("{line}");
+    }
+}
+
+fn percentile(samples: &[f64], pct: f64) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((pct / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Benchmark runner with fixed warmup/iteration counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters }
+    }
+
+    /// Quick-mode harness honoring $BENCH_ITERS.
+    pub fn from_env() -> Self {
+        let iters = std::env::var("BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        Self { warmup: (iters / 3).max(1), iters }
+    }
+
+    /// Time `f` (which performs `items` work items per call).
+    pub fn run<F: FnMut()>(&self, name: &str, items: u64, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples, items_per_run: items };
+        m.report();
+        m
+    }
+}
+
+/// Guard against the optimizer deleting benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_ordering() {
+        let m = Measurement {
+            name: "t".into(),
+            samples: vec![3.0, 1.0, 2.0, 5.0, 4.0],
+            items_per_run: 10,
+        };
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.median(), 3.0);
+        assert_eq!(m.mean(), 3.0);
+        assert_eq!(m.p95(), 5.0);
+        assert!((m.throughput() - 10.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench::new(1, 5);
+        let mut count = 0u64;
+        let m = b.run("noop", 1, || {
+            count += 1;
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert_eq!(count, 6); // warmup + iters
+    }
+}

@@ -1,0 +1,167 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that take a value (everything else is a flag).
+    known_options: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse raw args. `value_options` lists the long options that consume
+    /// a value; any other `--name` is treated as a boolean flag.
+    pub fn parse(raw: impl Iterator<Item = String>, value_options: &[&'static str]) -> Result<Args> {
+        let mut out = Args { known_options: value_options.to_vec(), ..Default::default() };
+        let mut it = raw.peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_options.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} requires a value"))?;
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_scaled(v)
+                .ok_or_else(|| anyhow!("--{name}: cannot parse {v:?} as a count")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_scaled(v)
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow!("--{name}: cannot parse {v:?} as a count")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: cannot parse {v:?} as a number")),
+        }
+    }
+
+    /// Error if any option key is unknown (typo detection).
+    pub fn check_known(&self, also_flags: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !self.known_options.contains(&k.as_str()) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !also_flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse counts with scale suffixes: `4k`, `16M`, `2G`, `1e9`, `2^20`.
+pub fn parse_scaled(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if let Some(exp) = s.strip_prefix("2^") {
+        let e: u32 = exp.parse().ok()?;
+        return 1usize.checked_shl(e);
+    }
+    if let Ok(v) = s.parse::<usize>() {
+        return Some(v);
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        if v >= 0.0 && v.fract() == 0.0 {
+            return Some(v as usize);
+        }
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1_000usize),
+        'm' | 'M' => (&s[..s.len() - 1], 1_000_000),
+        'g' | 'G' => (&s[..s.len() - 1], 1_000_000_000),
+        't' | 'T' => (&s[..s.len() - 1], 1_000_000_000_000),
+        _ => return None,
+    };
+    let base: f64 = num.parse().ok()?;
+    Some((base * mult as f64) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str], opts: &[&'static str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), opts).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = args(
+            &["gen", "--streams", "64", "--rows=4096", "--verbose", "out.bin"],
+            &["streams", "rows"],
+        );
+        assert_eq!(a.positional, vec!["gen", "out.bin"]);
+        assert_eq!(a.get("streams"), Some("64"));
+        assert_eq!(a.get("rows"), Some("4096"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--streams".to_string()].into_iter(), &["streams"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn scaled_counts() {
+        assert_eq!(parse_scaled("4k"), Some(4_000));
+        assert_eq!(parse_scaled("16M"), Some(16_000_000));
+        assert_eq!(parse_scaled("2G"), Some(2_000_000_000));
+        assert_eq!(parse_scaled("2^20"), Some(1 << 20));
+        assert_eq!(parse_scaled("1e6"), Some(1_000_000));
+        assert_eq!(parse_scaled("123"), Some(123));
+        assert_eq!(parse_scaled("x"), None);
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = args(&["--bogus=1"], &["streams"]);
+        assert!(a.check_known(&[]).is_err());
+        let a = args(&["--streams=1"], &["streams"]);
+        assert!(a.check_known(&[]).is_ok());
+    }
+}

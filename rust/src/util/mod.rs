@@ -1,0 +1,57 @@
+//! Small self-contained utilities (the build is offline — no external
+//! crates beyond `xla`/`anyhow`, so JSON parsing, CLI parsing, and the
+//! bench harness live here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+/// Format a throughput in numbers/second with an SI suffix.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e12 {
+        format!("{:.2} T/s", per_sec / 1e12)
+    } else if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_units() {
+        assert_eq!(fmt_rate(5.0e12), "5.00 T/s");
+        assert_eq!(fmt_rate(2.5e9), "2.50 G/s");
+        assert_eq!(fmt_rate(1.0e6), "1.00 M/s");
+        assert_eq!(fmt_rate(1500.0), "1.50 K/s");
+        assert_eq!(fmt_rate(12.0), "12.00 /s");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(0.002), "2.000 ms");
+        assert_eq!(fmt_duration(2e-6), "2.000 µs");
+        assert_eq!(fmt_duration(2e-9), "2.0 ns");
+    }
+}

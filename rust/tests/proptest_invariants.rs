@@ -1,0 +1,221 @@
+//! Randomized property tests on coordinator and generator invariants.
+//! (proptest is unavailable offline; cases are driven by our own
+//! splitmix64 with fixed seeds, so failures are perfectly reproducible.)
+
+use thundering::coordinator::{Config, Coordinator, Engine, StreamRegistry};
+use thundering::prng::lcg::{lcg_jump, lcg_step, LCG_A, LCG_C};
+use thundering::prng::thundering::leaf_h;
+use thundering::prng::xorshift::{xs128_jump, xs128_step_packed, pack, unpack, XS128_SEED};
+use thundering::prng::{splitmix64, Prng32, SplitMix64, ThunderingStream};
+
+/// Property: any fetch schedule delivers each stream's exact scalar
+/// sequence, regardless of interleaving, chunk sizes, and group shape.
+#[test]
+fn prop_fetch_schedule_preserves_per_stream_order() {
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for case in 0..25 {
+        let width = [2usize, 4, 8, 16][rng.next_u32() as usize % 4];
+        let n_groups = 1 + rng.next_u32() as usize % 3;
+        let rows_per_tile = [4usize, 16, 64][rng.next_u32() as usize % 3];
+        let n_streams = (width * n_groups) as u64;
+        let c = Coordinator::new(
+            Config {
+                engine: Engine::Native,
+                group_width: width,
+                rows_per_tile,
+                lag_window: 1 << 14,
+                root_seed: 42,
+                ..Default::default()
+            },
+            n_streams,
+        )
+        .unwrap();
+
+        let mut delivered: Vec<Vec<u32>> = vec![Vec::new(); n_streams as usize];
+        for _ in 0..60 {
+            let stream = rng.next_u32() as u64 % n_streams;
+            let n = 1 + rng.next_u32() as usize % 50;
+            let mut buf = vec![0u32; n];
+            // Lag rejections are allowed by the contract; skip those ops.
+            if c.fetch(stream, &mut buf).is_ok() {
+                delivered[stream as usize].extend_from_slice(&buf);
+            }
+        }
+        for (sid, got) in delivered.iter().enumerate() {
+            let g = sid as u64 / width as u64;
+            let mut s = ThunderingStream::new(splitmix64(42 ^ g), sid as u64);
+            let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+            assert_eq!(got, &expect, "case {case} stream {sid}");
+        }
+    }
+}
+
+/// Property: lag-window rejections never corrupt subsequent delivery.
+#[test]
+fn prop_lag_rejection_is_clean() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..10 {
+        let c = Coordinator::new(
+            Config {
+                engine: Engine::Native,
+                group_width: 2,
+                rows_per_tile: 8,
+                lag_window: 32,
+                root_seed: 1,
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        let mut got0 = Vec::new();
+        for _ in 0..30 {
+            let n = 1 + rng.next_u32() as usize % 40;
+            let mut buf = vec![0u32; n];
+            if c.fetch(0, &mut buf).is_ok() {
+                got0.extend_from_slice(&buf);
+            }
+        }
+        let mut s = ThunderingStream::new(splitmix64(1), 0);
+        let expect: Vec<u32> = (0..got0.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got0, expect);
+    }
+}
+
+/// Property: registry h values are globally unique and even across random
+/// registration batch sizes.
+#[test]
+fn prop_registry_h_unique_even() {
+    let mut rng = SplitMix64::new(99);
+    let mut reg = StreamRegistry::new();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..50 {
+        let n = 1 + rng.next_u32() as u64 % 100;
+        for spec in reg.register(n).unwrap() {
+            assert_eq!(spec.h % 2, 0);
+            assert_eq!(spec.h, leaf_h(spec.id));
+            assert!(seen.insert(spec.h), "duplicate h for id {}", spec.id);
+        }
+    }
+}
+
+/// Property: LCG jump-ahead composes for random jump sizes.
+#[test]
+fn prop_lcg_jump_composition() {
+    let mut rng = SplitMix64::new(5);
+    for _ in 0..200 {
+        let x = rng.next_u64();
+        let j = rng.next_u64() % 100_000;
+        let k = rng.next_u64() % 100_000;
+        let a = lcg_jump(lcg_jump(x, j, LCG_A, LCG_C), k, LCG_A, LCG_C);
+        let b = lcg_jump(x, j + k, LCG_A, LCG_C);
+        assert_eq!(a, b);
+    }
+}
+
+/// Property: LCG jump-ahead equals explicit stepping for random small k.
+#[test]
+fn prop_lcg_jump_equals_steps() {
+    let mut rng = SplitMix64::new(6);
+    for _ in 0..50 {
+        let x0 = rng.next_u64();
+        let k = rng.next_u64() % 3000;
+        let mut x = x0;
+        for _ in 0..k {
+            x = lcg_step(x);
+        }
+        assert_eq!(lcg_jump(x0, k, LCG_A, LCG_C), x);
+    }
+}
+
+/// Property: xorshift jump equals explicit stepping for random states/k.
+#[test]
+fn prop_xs128_jump_equals_steps() {
+    let mut rng = SplitMix64::new(8);
+    for _ in 0..25 {
+        let state = [
+            rng.next_u32() | 1, // ensure nonzero
+            rng.next_u32(),
+            rng.next_u32(),
+            rng.next_u32(),
+        ];
+        let k = rng.next_u32() as u128 % 2000;
+        let mut s = pack(state);
+        for _ in 0..k {
+            s = xs128_step_packed(s);
+        }
+        assert_eq!(xs128_jump(state, k), unpack(s));
+    }
+}
+
+/// Property: stream jump(k) == k outputs discarded, for random k.
+#[test]
+fn prop_stream_jump_consistency() {
+    let mut rng = SplitMix64::new(10);
+    for _ in 0..20 {
+        let stream_id = rng.next_u64() % 1000;
+        let k = rng.next_u64() % 5000;
+        let mut a = ThunderingStream::new(77, stream_id);
+        let mut b = ThunderingStream::new(77, stream_id);
+        for _ in 0..k {
+            a.next_u32();
+        }
+        b.jump(k);
+        assert_eq!(a.next_u32(), b.next_u32(), "stream {stream_id} k {k}");
+    }
+}
+
+/// Property: substream non-overlap — windows of different streams never
+/// collide (probabilistically: no window of 64 outputs repeats across the
+/// first 64 streams' first 2^10 outputs).
+#[test]
+fn prop_no_cross_stream_window_collision() {
+    use std::collections::HashSet;
+    let mut windows: HashSet<Vec<u32>> = HashSet::new();
+    for i in 0..64u64 {
+        let mut s = ThunderingStream::new(42, i);
+        let out: Vec<u32> = (0..1024).map(|_| s.next_u32()).collect();
+        for w in out.chunks_exact(64) {
+            assert!(windows.insert(w.to_vec()), "window collision on stream {i}");
+        }
+    }
+}
+
+/// Property: JSON parser round-trips random documents built from our own
+/// generator (fuzz-lite).
+#[test]
+fn prop_json_roundtrip_random_docs() {
+    use thundering::util::json::Json;
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..100 {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, doc, "{text}");
+    }
+}
+
+fn random_json(rng: &mut SplitMix64, depth: u32) -> thundering::util::json::Json {
+    use thundering::util::json::Json;
+    let pick = rng.next_u32() % if depth == 0 { 4 } else { 6 };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_u32() % 2 == 0),
+        2 => {
+            let v = rng.next_u64();
+            Json::Num(v as f64, v.to_string())
+        }
+        3 => Json::Str(format!("s{}", rng.next_u32())),
+        4 => {
+            let n = rng.next_u32() as usize % 4;
+            Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.next_u32() as usize % 4;
+            Json::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}

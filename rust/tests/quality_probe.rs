@@ -1,0 +1,17 @@
+//! Quality at non-origin stream positions: the battery must hold anywhere
+//! in the sequence, since the coordinator serves arbitrary offsets (this
+//! is also the regression test for the p≈1 verdict-saturation bug: a
+//! dead-center collision count once misread as a failure).
+
+use thundering::prng::{splitmix64, ThunderingStream};
+use thundering::stats::{mini_crush, Scale};
+
+#[test]
+fn battery_passes_at_deep_offsets() {
+    for offset in [65536u64, 1 << 24, 1 << 40] {
+        let mut s = ThunderingStream::new(splitmix64(42), 1);
+        s.jump(offset);
+        let rep = mini_crush(&mut s, Scale::Quick);
+        assert_eq!(rep.failures(), 0, "offset {offset}: {}", rep.summary());
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: every AOT artifact loads, compiles, and matches the native
+//! Rust implementation bit-for-bit. This is the cross-layer contract test —
+//! Pallas kernel (via HLO/PJRT) ≡ python oracle ≡ Rust scalar engine.
+
+use thundering::prng::thundering::leaf_h;
+use thundering::prng::{splitmix64, ThunderingBatch};
+use thundering::runtime::{BsParams, Runtime, TileState};
+
+fn runtime() -> Runtime {
+    let dir = std::env::var("THUNDERING_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    Runtime::new(dir).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn thundering_tiles_match_native_batch() {
+    let rt = runtime();
+    for name in rt.names_of_kind("thundering") {
+        let exe = rt.load(&name).unwrap();
+        let (p, rows) = (exe.info.p, exe.info.rows);
+        let seed = splitmix64(42);
+        let mut state = TileState::new(seed, p, 0);
+        let mut out = vec![0u32; rows * p];
+        exe.run_thundering(&mut state, &mut out).unwrap();
+
+        let mut native = ThunderingBatch::new(seed, p, 0);
+        let expect = native.tile(rows);
+        assert_eq!(out, expect, "artifact {name} mismatch vs native");
+        assert_eq!(state.root, native.root_state(), "{name} root state");
+        assert_eq!(state.xs.as_slice(), native.xs_states(), "{name} xs state");
+
+        // Second invocation continues the stream seamlessly.
+        exe.run_thundering(&mut state, &mut out).unwrap();
+        let expect2 = native.tile(rows);
+        assert_eq!(out, expect2, "artifact {name} tile 2 mismatch");
+    }
+}
+
+#[test]
+fn thundering_scan_matches_native_batch() {
+    let rt = runtime();
+    for name in rt.names_of_kind("thundering_scan") {
+        let exe = rt.load(&name).unwrap();
+        let (p, rows) = (exe.info.p, exe.info.rows);
+        let seed = splitmix64(7);
+        let mut state = TileState::new(seed, p, 0);
+        let mut out = vec![0u32; rows * p];
+        exe.run_thundering(&mut state, &mut out).unwrap();
+
+        let mut native = ThunderingBatch::new(seed, p, 0);
+        let expect = native.tile(rows);
+        assert_eq!(out, expect, "artifact {name} mismatch vs native");
+        assert_eq!(state.root, native.root_state());
+    }
+}
+
+#[test]
+fn tile_state_offset_streams() {
+    let rt = runtime();
+    let name = rt.names_of_kind("thundering").into_iter().next().unwrap();
+    let exe = rt.load(&name).unwrap();
+    let (p, rows) = (exe.info.p, exe.info.rows);
+    let first = 1000u64;
+    let seed = splitmix64(3);
+    let mut state = TileState::new(seed, p, first);
+    assert_eq!(state.h[0], leaf_h(first));
+    let mut out = vec![0u32; rows * p];
+    exe.run_thundering(&mut state, &mut out).unwrap();
+    let mut native = ThunderingBatch::new(seed, p, first);
+    assert_eq!(out, native.tile(rows));
+}
+
+#[test]
+fn philox_tile_matches_native() {
+    let rt = runtime();
+    for name in rt.names_of_kind("philox") {
+        let exe = rt.load(&name).unwrap();
+        let (p, rows) = (exe.info.p, exe.info.rows);
+        let mut out = vec![0u32; rows * p];
+        exe.run_philox(5, [7, 99], &mut out).unwrap();
+        // Native comparison: stream i = key (7+i, 99), counters from 5.
+        use thundering::prng::philox::philox4x32_10;
+        for i in 0..p {
+            for n in 0..rows / 4 {
+                let ctr = 5 + n as u64;
+                let r = philox4x32_10(
+                    [ctr as u32, (ctr >> 32) as u32, 0, 0],
+                    [7 + i as u32, 99],
+                );
+                for j in 0..4 {
+                    assert_eq!(out[(4 * n + j) * p + i], r[j], "philox ({n},{j},{i})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lcg_only_tile_matches_native() {
+    let rt = runtime();
+    for name in rt.names_of_kind("lcg_only") {
+        let exe = rt.load(&name).unwrap();
+        let (p, rows) = (exe.info.p, exe.info.rows);
+        let h: Vec<u64> = (0..p as u64).map(leaf_h).collect();
+        let mut root = 12345u64;
+        let mut out = vec![0u32; rows * p];
+        exe.run_lcg_only(&mut root, &h, &mut out).unwrap();
+        let mut x = 12345u64;
+        for n in 0..rows {
+            x = thundering::prng::lcg::lcg_step(x);
+            for i in 0..p {
+                let w = x.wrapping_add(h[i]);
+                assert_eq!(out[n * p + i], (w >> 32) as u32, "lcg ({n},{i})");
+            }
+        }
+        assert_eq!(root, x);
+    }
+}
+
+#[test]
+fn pi_tile_plausible_and_stateful() {
+    let rt = runtime();
+    let exe = rt.load("pi_tile").unwrap();
+    let p = exe.info.p;
+    let mut state = TileState::new(splitmix64(42), p, 0);
+    let draws = (exe.info.rows / 2) * p;
+    let mut total_hits = 0u64;
+    let tiles = 8;
+    for _ in 0..tiles {
+        total_hits += exe.run_pi(&mut state).unwrap() as u64;
+    }
+    let pi = 4.0 * total_hits as f64 / (tiles * draws) as f64;
+    assert!((pi - std::f64::consts::PI).abs() < 0.01, "pi estimate {pi}");
+}
+
+#[test]
+fn bs_tile_close_to_black_scholes_closed_form() {
+    let rt = runtime();
+    let exe = rt.load("bs_tile").unwrap();
+    let p = exe.info.p;
+    let mut state = TileState::new(splitmix64(42), p, 0);
+    let params = BsParams::default();
+    let draws_per_tile = (exe.info.rows / 2) * p;
+    let tiles = 8;
+    let mut sum = 0.0f64;
+    for _ in 0..tiles {
+        sum += exe.run_bs(&mut state, &params).unwrap() as f64;
+    }
+    let price = sum / (tiles * draws_per_tile) as f64;
+    // Closed-form Black-Scholes call for (100, 100, 0.05, 0.2, 1.0) ≈ 10.4506.
+    assert!((price - 10.4506).abs() < 0.15, "MC price {price}");
+}

@@ -7,7 +7,7 @@
 //! cargo run --release --example quickstart [-- --pjrt]
 //! ```
 
-use thundering::coordinator::{Config, Coordinator, Engine};
+use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
 
 fn main() -> anyhow::Result<()> {
     let use_pjrt = std::env::args().any(|a| a == "--pjrt");
@@ -46,5 +46,20 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("metrics: {}", coordinator.metrics());
+
+    // Sharded parallel engine: same streams and same bits, but generation
+    // runs on one shard per core with double-buffered tiles (DESIGN.md §3).
+    let sharded = ParallelCoordinator::new(
+        ShardedConfig { group_width: 64, root_seed: 42, ..Default::default() },
+        128,
+    )?;
+    let blocks = sharded.fetch_many(1024)?;
+    println!(
+        "sharded engine: {} shards served {} groups x {} numbers, metrics: {}",
+        sharded.n_shards(),
+        blocks.len(),
+        blocks[0].len(),
+        sharded.metrics()
+    );
     Ok(())
 }

@@ -1,12 +1,15 @@
 //! Coordinator-path benches: fetch hit/miss, group blocks, multi-client
-//! scaling — the L3 hot path (EXPERIMENTS.md §Perf).
+//! scaling — the L3 hot path — plus the headline single-thread vs sharded
+//! GRN/s comparison, emitted as a `BENCH_parallel.json` trajectory point.
 //!
 //! Run: `cargo bench --bench bench_coordinator`
+//! (BENCH_ITERS=n adjusts iterations; BENCH_PARALLEL_OUT overrides the
+//! JSON output path, default `BENCH_parallel.json`.)
 
 use std::sync::Arc;
 
-use thundering::coordinator::{Config, Coordinator, Engine};
-use thundering::util::bench::{black_box, Bench};
+use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
+use thundering::util::bench::{black_box, Bench, JsonReport};
 
 fn native(streams: u64, width: usize, rows: usize) -> Coordinator {
     Coordinator::new(
@@ -71,6 +74,76 @@ fn main() {
                 h.join().unwrap();
             }
         });
+    }
+
+    // Tentpole comparison: one client draining every group through the
+    // single-coordinator path (generation inline on the client thread —
+    // one core total) vs the sharded engine (generation spread over one
+    // shard per core, double-buffered ahead of the consumer).
+    {
+        let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        let n_groups = cores.clamp(2, 16);
+        let width = 64usize;
+        let rows = 1024usize;
+        let rounds = 8usize; // group blocks per measurement per group
+        let numbers = (n_groups * rounds * rows * width) as u64;
+        println!(
+            "\n# single-thread vs sharded generation \
+             ({n_groups} groups x {width} streams, {rounds} x {rows} rows/iter, {cores} cores)"
+        );
+
+        let single = native((n_groups * width) as u64, width, rows);
+        let m_single = b.run("engine/single-thread", numbers, || {
+            for _ in 0..rounds {
+                for g in 0..n_groups {
+                    black_box(single.fetch_group_block(g, rows).unwrap());
+                }
+            }
+        });
+
+        let sharded = ParallelCoordinator::new(
+            ShardedConfig {
+                group_width: width,
+                rows_per_tile: rows,
+                lag_window: u64::MAX / 2,
+                ..Default::default()
+            },
+            (n_groups * width) as u64,
+        )
+        .unwrap();
+        let m_sharded = b.run("engine/sharded", numbers, || {
+            for _ in 0..rounds {
+                black_box(sharded.fetch_many(rows).unwrap());
+            }
+        });
+
+        let speedup = m_sharded.throughput() / m_single.throughput();
+        println!(
+            "single-thread = {:.3} GRN/s  sharded = {:.3} GRN/s  speedup = {speedup:.2}x \
+             ({} shards)",
+            m_single.throughput() / 1e9,
+            m_sharded.throughput() / 1e9,
+            sharded.n_shards(),
+        );
+
+        let mut rep = JsonReport::new();
+        rep.context_str("bench", "parallel-generation");
+        rep.context_num("cores", cores as f64);
+        rep.context_num("shards", sharded.n_shards() as f64);
+        rep.context_num("n_groups", n_groups as f64);
+        rep.context_num("group_width", width as f64);
+        rep.context_num("rows_per_tile", rows as f64);
+        rep.context_num("single_thread_grn_per_s", m_single.throughput() / 1e9);
+        rep.context_num("sharded_grn_per_s", m_sharded.throughput() / 1e9);
+        rep.context_num("speedup", speedup);
+        rep.push(&m_single);
+        rep.push(&m_sharded);
+        let out = std::env::var("BENCH_PARALLEL_OUT")
+            .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
+        match rep.write(&out) {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => eprintln!("could not write {out}: {e}"),
+        }
     }
 
     // PJRT path if artifacts exist.

@@ -53,6 +53,60 @@ fn erf(x: f64) -> f64 {
     1.0 - crate::stats::special::erfc(x)
 }
 
+/// Shared driver for the sharded-engine apps: one state-sharing group per
+/// consumer thread, blocks pulled through the `ParallelCoordinator`'s
+/// batched API while the shard threads prefetch, each consecutive pair of
+/// 32-bit outputs folded into a partial sum by `pair_fold`. Deterministic
+/// for a given `(groups, seed)`: per-group streams are fixed and partials
+/// are summed in group order.
+pub(crate) fn sharded_pairs_sum<F>(groups: usize, draws: u64, seed: u64, pair_fold: F) -> Result<f64>
+where
+    F: Fn(u32, u32) -> f64 + Sync,
+{
+    use crate::coordinator::sharded::{ParallelCoordinator, ShardedConfig};
+    const P: usize = 64;
+    const ROWS: usize = 1024;
+    let n_groups = groups.max(1);
+    let pc = ParallelCoordinator::new(
+        ShardedConfig {
+            group_width: P,
+            rows_per_tile: ROWS,
+            lag_window: u64::MAX / 2,
+            root_seed: seed,
+            ..Default::default()
+        },
+        (n_groups * P) as u64,
+    )?;
+    let per = draws / n_groups as u64;
+    let extra = draws % n_groups as u64;
+    std::thread::scope(|s| -> Result<f64> {
+        let pc = &pc;
+        let pair_fold = &pair_fold;
+        let mut handles = Vec::new();
+        for g in 0..n_groups {
+            let n = per + if (g as u64) < extra { 1 } else { 0 };
+            handles.push(s.spawn(move || -> Result<f64> {
+                let mut acc = 0f64;
+                let mut remaining = n;
+                while remaining > 0 {
+                    let block = pc.fetch_group_block(g, ROWS)?;
+                    let draws_here = (block.len() / 2).min(remaining as usize);
+                    for pair in block.chunks_exact(2).take(draws_here) {
+                        acc += pair_fold(pair[0], pair[1]);
+                    }
+                    remaining -= draws_here as u64;
+                }
+                Ok(acc)
+            }));
+        }
+        let mut total = 0f64;
+        for h in handles {
+            total += h.join().map_err(|_| anyhow::anyhow!("consumer panicked"))??;
+        }
+        Ok(total)
+    })
+}
+
 /// Spawn `threads` workers over `draws` total work items, each worker
 /// running `f(worker_index, draws_for_worker) -> partial`, summing results.
 pub fn parallel_sum<F>(threads: usize, draws: u64, f: F) -> Result<f64>

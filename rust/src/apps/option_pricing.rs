@@ -41,16 +41,53 @@ pub fn run_pjrt(
     })
 }
 
+/// The per-draw kernel shared by every CPU engine: two 32-bit words →
+/// one Box–Muller normal → one discounted call payoff. Precomputed from
+/// [`BsParams`] once per run so both the native and sharded paths use
+/// the exact same arithmetic.
+#[derive(Clone, Copy)]
+struct PayoffKernel {
+    s0: f64,
+    k: f64,
+    drift: f64,
+    vol: f64,
+    disc: f64,
+}
+
+impl PayoffKernel {
+    fn new(params: BsParams) -> Self {
+        let (s0, k, r, sigma, t) = (
+            params.s0 as f64,
+            params.k as f64,
+            params.r as f64,
+            params.sigma as f64,
+            params.t as f64,
+        );
+        Self {
+            s0,
+            k,
+            drift: (r - 0.5 * sigma * sigma) * t,
+            vol: sigma * t.sqrt(),
+            disc: (-r * t).exp(),
+        }
+    }
+
+    #[inline]
+    fn pair(&self, a: u32, b: u32) -> f64 {
+        let u1 = ((a >> 8) as f64 * (1.0 / 16_777_216.0)).max(5.96e-8);
+        let u2 = (b >> 8) as f64 * (1.0 / 16_777_216.0);
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        let st = self.s0 * (self.drift + self.vol * z).exp();
+        (st - self.k).max(0.0) * self.disc
+    }
+}
+
 /// Native multi-threaded run (state-sharing batch engine).
 pub fn run_native(threads: usize, draws: u64, seed: u64, params: BsParams) -> Result<AppRun> {
     const P: usize = 64;
     const ROWS: usize = 1024;
     let t0 = Instant::now();
-    let (s0, k, r, sigma, t) =
-        (params.s0 as f64, params.k as f64, params.r as f64, params.sigma as f64, params.t as f64);
-    let drift = (r - 0.5 * sigma * sigma) * t;
-    let vol = sigma * t.sqrt();
-    let disc = (-r * t).exp();
+    let kernel = PayoffKernel::new(params);
     let sum = super::parallel_sum(threads, draws, |w, n| {
         let mut batch =
             ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
@@ -61,12 +98,7 @@ pub fn run_native(threads: usize, draws: u64, seed: u64, params: BsParams) -> Re
             batch.fill_rows(ROWS, &mut buf);
             let draws_here = (buf.len() / 2).min(remaining as usize);
             for pair in buf.chunks_exact(2).take(draws_here) {
-                let u1 = ((pair[0] >> 8) as f64 * (1.0 / 16_777_216.0)).max(5.96e-8);
-                let u2 = (pair[1] >> 8) as f64 * (1.0 / 16_777_216.0);
-                let z = (-2.0 * u1.ln()).sqrt()
-                    * (2.0 * std::f64::consts::PI * u2).cos();
-                let st = s0 * (drift + vol * z).exp();
-                acc += (st - k).max(0.0) * disc;
+                acc += kernel.pair(pair[0], pair[1]);
             }
             remaining -= draws_here as u64;
         }
@@ -74,6 +106,22 @@ pub fn run_native(threads: usize, draws: u64, seed: u64, params: BsParams) -> Re
     })?;
     Ok(AppRun {
         engine: "native",
+        draws,
+        result: sum / draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Sharded-engine run: group blocks are pulled through the
+/// `ParallelCoordinator`'s batched API while shard threads prefetch the
+/// next tiles (see `super::sharded_pairs_sum`) — same payoff math as
+/// [`run_native`], deterministic for a given `(groups, seed)`.
+pub fn run_sharded(groups: usize, draws: u64, seed: u64, params: BsParams) -> Result<AppRun> {
+    let t0 = Instant::now();
+    let kernel = PayoffKernel::new(params);
+    let sum = super::sharded_pairs_sum(groups, draws, seed, |a, b| kernel.pair(a, b))?;
+    Ok(AppRun {
+        engine: "sharded",
         draws,
         result: sum / draws as f64,
         seconds: t0.elapsed().as_secs_f64(),
@@ -100,5 +148,15 @@ mod tests {
         let run = run_native(2, 200_000, 1, params).unwrap();
         let expect = black_scholes_call(200.0, 100.0, 0.05, 0.2, 1.0);
         assert!((run.result - expect).abs() < 0.5, "{} vs {expect}", run.result);
+    }
+
+    #[test]
+    fn sharded_price_near_closed_form_and_deterministic() {
+        let params = BsParams::default();
+        let a = run_sharded(2, 300_000, 42, params).unwrap();
+        let b = run_sharded(2, 300_000, 42, params).unwrap();
+        assert_eq!(a.result, b.result);
+        let expect = black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
+        assert!((a.result - expect).abs() < 0.2, "{} vs {expect}", a.result);
     }
 }

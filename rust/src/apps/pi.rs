@@ -37,6 +37,19 @@ pub fn run_pjrt(executor: &TileExecutor, draws: u64, seed: u64) -> Result<AppRun
     })
 }
 
+/// The per-draw kernel shared by every engine: two 32-bit words → one
+/// quarter-circle hit test (1.0 or 0.0; exact in f64 up to 2^53 draws).
+#[inline]
+fn pair_hit(a: u32, b: u32) -> f64 {
+    let x = (a >> 8) as f32 * (1.0 / 16_777_216.0);
+    let y = (b >> 8) as f32 * (1.0 / 16_777_216.0);
+    if x * x + y * y < 1.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
 /// Native multi-threaded run using the state-sharing batch engine — the
 /// CPU port measured in Fig. 7. Each thread owns a group of streams.
 pub fn run_native(threads: usize, draws: u64, seed: u64) -> Result<AppRun> {
@@ -47,24 +60,36 @@ pub fn run_native(threads: usize, draws: u64, seed: u64) -> Result<AppRun> {
         let mut batch =
             ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
         let mut buf = vec![0u32; ROWS * P];
-        let mut hits = 0u64;
+        let mut hits = 0f64;
         let mut remaining = n;
         while remaining > 0 {
             batch.fill_rows(ROWS, &mut buf);
             let draws_here = (buf.len() / 2).min(remaining as usize);
             for pair in buf.chunks_exact(2).take(draws_here) {
-                let x = (pair[0] >> 8) as f32 * (1.0 / 16_777_216.0);
-                let y = (pair[1] >> 8) as f32 * (1.0 / 16_777_216.0);
-                if x * x + y * y < 1.0 {
-                    hits += 1;
-                }
+                hits += pair_hit(pair[0], pair[1]);
             }
             remaining -= draws_here as u64;
         }
-        hits as f64
+        hits
     })?;
     Ok(AppRun {
         engine: "native",
+        draws,
+        result: 4.0 * hits / draws as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Sharded-engine run: one state-sharing group per consumer thread,
+/// served through the `ParallelCoordinator`'s batched block API while the
+/// shard threads prefetch (see `super::sharded_pairs_sum`). Hit counts
+/// are exact in f64 and summed in group order, so the result is
+/// deterministic for a given `(groups, seed)`.
+pub fn run_sharded(groups: usize, draws: u64, seed: u64) -> Result<AppRun> {
+    let t0 = Instant::now();
+    let hits = super::sharded_pairs_sum(groups, draws, seed, pair_hit)?;
+    Ok(AppRun {
+        engine: "sharded",
         draws,
         result: 4.0 * hits / draws as f64,
         seconds: t0.elapsed().as_secs_f64(),
@@ -112,6 +137,19 @@ mod tests {
     fn native_deterministic_given_seed_and_threads() {
         let a = run_native(3, 100_000, 9).unwrap();
         let b = run_native(3, 100_000, 9).unwrap();
+        assert_eq!(a.result, b.result);
+    }
+
+    #[test]
+    fn sharded_estimates_pi() {
+        let run = run_sharded(2, 400_000, 42).unwrap();
+        assert!((run.result - std::f64::consts::PI).abs() < 0.02, "{}", run.result);
+    }
+
+    #[test]
+    fn sharded_deterministic_given_groups_and_seed() {
+        let a = run_sharded(3, 150_000, 9).unwrap();
+        let b = run_sharded(3, 150_000, 9).unwrap();
         assert_eq!(a.result, b.result);
     }
 }

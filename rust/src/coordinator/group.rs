@@ -253,7 +253,22 @@ impl StreamGroup {
             metrics.add(&metrics.numbers_delivered, (rows * self.width) as u64);
             return Ok(out);
         }
-        // Slow path: per-lane fetch into a transposed buffer.
+        // Slow path: per-lane fetch into a transposed buffer. The lag
+        // window is checked once, atomically, for the whole block
+        // ((fastest + rows) − slowest): rejecting up front means a
+        // failure never leaves some lanes advanced with their rows
+        // silently dropped, and it makes the per-lane checks inside
+        // `fetch` unreachable for this call (their lead is bounded by
+        // the lead vetted here).
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        let max_target = *self.cursors.iter().max().unwrap() + rows as u64;
+        if max_target - min_cursor > self.lag_window {
+            metrics.add(&metrics.lag_rejections, 1);
+            return Err(FetchError::LagWindowExceeded {
+                lead: max_target - min_cursor,
+                window: self.lag_window,
+            });
+        }
         let mut out = vec![0u32; rows * self.width];
         let mut lane_buf = vec![0u32; rows];
         for lane in 0..self.width {
@@ -358,6 +373,22 @@ mod tests {
             assert_eq!(block[r * 2], s0.next_u32(), "lane0 row {r}");
             assert_eq!(block[r * 2 + 1], s1.next_u32(), "lane1 row {r}");
         }
+    }
+
+    #[test]
+    fn rejected_block_leaves_no_lane_advanced() {
+        let m = Metrics::default();
+        let mut g = native_group(3, 4, 10);
+        let mut ten = vec![0u32; 10];
+        g.fetch(1, &mut ten, &m).unwrap(); // lane 1 at the window edge
+        let err = g.fetch_block(1, &m).unwrap_err();
+        assert!(matches!(err, FetchError::LagWindowExceeded { .. }));
+        // Lane 0 was not advanced by the rejected block.
+        let mut five = vec![0u32; 5];
+        g.fetch(0, &mut five, &m).unwrap();
+        let mut s0 = ThunderingStream::new(splitmix64(42), 0);
+        let expect: Vec<u32> = (0..5).map(|_| s0.next_u32()).collect();
+        assert_eq!(five, expect);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 pub mod group;
 pub mod metrics;
 pub mod registry;
+pub mod sharded;
 
 use std::sync::Mutex;
 
@@ -30,6 +31,7 @@ use anyhow::{anyhow, bail, Context, Result};
 pub use group::{FetchError, GroupBackend, StreamGroup};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{StreamRegistry, StreamSpec};
+pub use sharded::{ParallelCoordinator, ShardedConfig};
 
 use crate::prng::ThunderingBatch;
 use crate::runtime::executor::{TileExecutor, TileExecutorGuard};

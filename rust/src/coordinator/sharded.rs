@@ -1,0 +1,704 @@
+//! Sharded parallel generation engine — the multi-core MISRN service.
+//!
+//! The single-coordinator path ([`super::Coordinator`]) generates tiles
+//! *inline* on whichever client thread faults on an empty buffer, under
+//! that group's mutex: one core's worth of generation throughput per
+//! group, zero overlap between generation and consumption. This module is
+//! the software twin of the paper's FPGA organization (Sec. 3.3 / Fig. 7):
+//! one cheap shared root recurrence per group, fanned out across many
+//! lanes, with *generation decoupled from consumption by double buffering*
+//! — the daisy chain keeps producing the next state vector while the
+//! current one is being consumed.
+//!
+//! ```text
+//!  clients ──fetch(stream,n) / fetch_many(rows)──▶ ParallelCoordinator
+//!                                                       │
+//!            group 0   group 1   group 2   group 3 ... (state sharing)
+//!            ┌──────┐  ┌──────┐  ┌──────┐  ┌──────┐
+//!   tiles ─▶ │queue │  │queue │  │queue │  │queue │  bounded tile queues
+//!            └──▲───┘  └──▲───┘  └──▲───┘  └──▲───┘  (depth 2 = double buf)
+//!               │         │         │         │
+//!            ┌──┴─────────┴──┐   ┌──┴─────────┴──┐
+//!            │    shard 0    │   │    shard 1    │   ... one shard/core,
+//!            │ ThunderingBatch│  │ ThunderingBatch│  each owns its groups'
+//!            └───────────────┘   └───────────────┘   generator state
+//! ```
+//!
+//! * Each **shard** is a worker thread owning the [`ThunderingBatch`]
+//!   state of the groups assigned to it (round-robin). It keeps every
+//!   *active* owned group's queue topped up to `prefetch_depth` tiles,
+//!   so tile `N+1` is being filled while clients drain tile `N`; a group
+//!   becomes active the first time a consumer touches it, so buffer
+//!   memory scales with demand, not with the registered group count.
+//! * The consumer side of each group keeps the same bounded **lag
+//!   window** semantics as [`super::group::StreamGroup`]: lanes of a
+//!   group may be consumed at different rates; rows stay buffered until
+//!   every lane passed them; a fetch that would stretch the spread beyond
+//!   `lag_window` is rejected (backpressure instead of unbounded memory).
+//! * **Determinism contract:** group `g` is seeded
+//!   `splitmix64(root_seed ^ g)` and advanced by exactly one shard thread
+//!   in tile order, so stream `s` delivers *bit-identical* output to
+//!   `ThunderingStream::new(splitmix64(root_seed ^ g), s)` — the same
+//!   contract as the single-coordinator path, regardless of shard count,
+//!   prefetch depth, or client interleaving (see `rust/tests/
+//!   sharded_stress.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::group::FetchError;
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::prng::ThunderingBatch;
+
+/// Configuration of the sharded engine.
+#[derive(Debug, Clone)]
+pub struct ShardedConfig {
+    /// Streams per group (the state-sharing fan-out `p`).
+    pub group_width: usize,
+    /// Rows generated per tile.
+    pub rows_per_tile: usize,
+    /// Max allowed (fastest − slowest) lane spread within a group, in rows.
+    pub lag_window: u64,
+    /// Tiles buffered ahead per group (2 = classic double buffering).
+    pub prefetch_depth: usize,
+    /// Worker shards; 0 = one per available core (capped at the group
+    /// count — an idle shard would own nothing).
+    pub shards: usize,
+    /// Root seed; group `g` is seeded with `splitmix64(root_seed ^ g)`.
+    pub root_seed: u64,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            group_width: 64,
+            rows_per_tile: 1024,
+            lag_window: 1 << 16,
+            prefetch_depth: 2,
+            shards: 0,
+            root_seed: 42,
+        }
+    }
+}
+
+/// Producer→consumer handoff for one group: a bounded FIFO of finished
+/// tiles. Single producer (the owning shard), any number of consumers
+/// (serialized by the group's drain lock).
+struct TileQueue {
+    ready: Mutex<VecDeque<Vec<u32>>>,
+    /// Signalled by the producer after pushing a tile.
+    tile_ready: Condvar,
+}
+
+/// Consumer-side state of one group (the StreamGroup bookkeeping, minus
+/// generation — tiles arrive from the shard via the queue).
+struct DrainState {
+    /// Absolute row index of the first buffered row.
+    base_row: u64,
+    /// Tiles popped from the queue and not yet fully consumed.
+    tiles: VecDeque<Vec<u32>>,
+    /// Per-lane absolute row cursor (next row to deliver).
+    cursors: Vec<u64>,
+}
+
+struct GroupSlot {
+    queue: TileQueue,
+    drain: Mutex<DrainState>,
+    /// Demand gate: shards only prefetch groups a consumer has touched,
+    /// so buffer memory scales with *active* groups, not total groups.
+    active: AtomicBool,
+}
+
+/// Parking spot for one shard thread: it waits here when every owned
+/// queue is full; consumers nudge it after freeing a slot. The guarded
+/// generation counter (bumped on every nudge) closes the scan→park race:
+/// the producer reads it before scanning and only sleeps if no nudge
+/// arrived in between, so a wakeup can never be lost.
+struct Park {
+    generation: Mutex<u64>,
+    cv: Condvar,
+}
+
+struct Shared {
+    groups: Vec<GroupSlot>,
+    /// group index → owning shard index.
+    shard_of: Vec<usize>,
+    parks: Vec<Park>,
+    /// Recycled tile buffers (all tiles are `rows_per_tile × width`).
+    pool: Mutex<Vec<Vec<u32>>>,
+    stop: AtomicBool,
+    metrics: Metrics,
+    width: usize,
+    rows_per_tile: usize,
+    lag_window: u64,
+    prefetch_depth: usize,
+}
+
+/// The sharded MISRN coordinator. Create once, share via `&` or `Arc`
+/// across client threads; shard workers shut down on drop.
+pub struct ParallelCoordinator {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    config: ShardedConfig,
+    n_shards: usize,
+}
+
+fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, ThunderingBatch)>) {
+    let rows = shared.rows_per_tile;
+    let width = shared.width;
+    while !shared.stop.load(Ordering::Acquire) {
+        let pre_scan_generation = *shared.parks[shard].generation.lock().unwrap();
+        let mut progress = false;
+        for (g, batch) in groups.iter_mut() {
+            let slot = &shared.groups[*g];
+            // Untouched group: don't generate ahead for it. The consumer
+            // that first touches it flips `active` and nudges us, which
+            // also bumps the generation — no activation can be missed.
+            if !slot.active.load(Ordering::Acquire) {
+                continue;
+            }
+            // Single producer per queue: a length check now cannot be
+            // invalidated by anyone but us (consumers only shrink it).
+            let has_room = slot.queue.ready.lock().unwrap().len() < shared.prefetch_depth;
+            if !has_room {
+                continue;
+            }
+            let mut buf = shared
+                .pool
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_else(|| vec![0u32; rows * width]);
+            debug_assert_eq!(buf.len(), rows * width);
+            let t0 = Instant::now();
+            batch.fill_rows(rows, &mut buf);
+            shared.metrics.add(&shared.metrics.backend_ns, t0.elapsed().as_nanos() as u64);
+            shared.metrics.add(&shared.metrics.tiles_executed, 1);
+            shared.metrics.add(&shared.metrics.rows_generated, rows as u64);
+            let mut q = slot.queue.ready.lock().unwrap();
+            q.push_back(buf);
+            drop(q);
+            slot.queue.tile_ready.notify_all();
+            progress = true;
+        }
+        if !progress {
+            // Every owned queue was full: park until a consumer frees a
+            // slot (it bumps the generation and notifies). If a nudge
+            // landed during the scan the generation already moved and we
+            // rescan immediately. The long timeout is only a backstop.
+            let park = &shared.parks[shard];
+            let guard = park.generation.lock().unwrap();
+            if *guard == pre_scan_generation && !shared.stop.load(Ordering::Acquire) {
+                let _ = park.cv.wait_timeout(guard, Duration::from_millis(100)).unwrap();
+            }
+        }
+    }
+}
+
+impl ParallelCoordinator {
+    /// Create a sharded coordinator serving `n_streams` streams.
+    pub fn new(config: ShardedConfig, n_streams: u64) -> Result<Self> {
+        anyhow::ensure!(config.group_width > 0 && config.rows_per_tile > 0);
+        anyhow::ensure!(config.prefetch_depth >= 1, "prefetch_depth must be >= 1");
+        anyhow::ensure!(
+            n_streams > 0 && n_streams % config.group_width as u64 == 0,
+            "n_streams must be a positive multiple of group_width"
+        );
+        let n_groups = (n_streams / config.group_width as u64) as usize;
+        let requested = if config.shards == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        } else {
+            config.shards
+        };
+        let n_shards = requested.clamp(1, n_groups);
+
+        let width = config.group_width;
+        let groups = (0..n_groups)
+            .map(|_| GroupSlot {
+                queue: TileQueue {
+                    ready: Mutex::new(VecDeque::with_capacity(config.prefetch_depth)),
+                    tile_ready: Condvar::new(),
+                },
+                drain: Mutex::new(DrainState {
+                    base_row: 0,
+                    tiles: VecDeque::new(),
+                    cursors: vec![0; width],
+                }),
+                active: AtomicBool::new(false),
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            groups,
+            shard_of: (0..n_groups).map(|g| g % n_shards).collect(),
+            parks: (0..n_shards)
+                .map(|_| Park { generation: Mutex::new(0), cv: Condvar::new() })
+                .collect(),
+            pool: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            metrics: Metrics::default(),
+            width,
+            rows_per_tile: config.rows_per_tile,
+            lag_window: config.lag_window,
+            prefetch_depth: config.prefetch_depth,
+        });
+
+        // Round-robin group ownership; each shard owns its groups'
+        // generator state outright (no locks on the generation path).
+        let mut per_shard: Vec<Vec<(usize, ThunderingBatch)>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for g in 0..n_groups {
+            let first = g as u64 * width as u64;
+            let seed = crate::prng::splitmix64(config.root_seed ^ g as u64);
+            per_shard[g % n_shards].push((g, ThunderingBatch::new(seed, width, first)));
+        }
+        let mut threads = Vec::with_capacity(n_shards);
+        for (s, owned) in per_shard.into_iter().enumerate() {
+            let shared = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("thundering-shard-{s}"))
+                    .spawn(move || shard_main(shared, s, owned))?,
+            );
+        }
+        Ok(Self { shared, threads, config, n_shards })
+    }
+
+    pub fn config(&self) -> &ShardedConfig {
+        &self.config
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.shared.groups.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn n_streams(&self) -> u64 {
+        self.shared.groups.len() as u64 * self.shared.width as u64
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Fill `out` with the next numbers of `stream` (bit-identical to the
+    /// scalar `ThunderingStream` replay of that stream).
+    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<()> {
+        let width = self.shared.width as u64;
+        let g = (stream / width) as usize;
+        if g >= self.shared.groups.len() {
+            bail!("stream {stream} not registered (have {})", self.n_streams());
+        }
+        let lane = (stream % width) as usize;
+        let mut drain = self.shared.groups[g].drain.lock().unwrap();
+        self.fetch_lane_locked(g, &mut drain, lane, out).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Fetch `rows` synchronized rows for one group (row-major
+    /// `rows × group_width`), advancing every lane together.
+    pub fn fetch_group_block(&self, group: usize, rows: usize) -> Result<Vec<u32>> {
+        if group >= self.shared.groups.len() {
+            bail!("group {group} out of range (have {})", self.n_groups());
+        }
+        let mut d = self.shared.groups[group].drain.lock().unwrap();
+        self.block_with_drain(group, &mut d, rows).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Batched fetch: one `rows × group_width` block for **every** group,
+    /// all-or-nothing. Generation for all groups runs concurrently on the
+    /// shard threads; the caller mostly performs bounded-queue pops and
+    /// memcpys. This is the Monte-Carlo fast path (`apps::pi`,
+    /// `apps::option_pricing`).
+    ///
+    /// Every group's drain lock is taken up front (in index order — the
+    /// only multi-lock path in the engine, so the ordering rules out
+    /// deadlock) and every group's lag window is validated before any
+    /// group is consumed: a rejection leaves no group advanced, the same
+    /// atomicity contract as a single block fetch.
+    pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>> {
+        let shared = &*self.shared;
+        let mut guards: Vec<_> =
+            shared.groups.iter().map(|slot| slot.drain.lock().unwrap()).collect();
+        for (g, d) in guards.iter().enumerate() {
+            if let Err(e) = Self::block_lag_check(shared, d, rows) {
+                shared.metrics.add(&shared.metrics.lag_rejections, 1);
+                bail!("group {g}: {e}");
+            }
+        }
+        let mut out = Vec::with_capacity(guards.len());
+        for (g, d) in guards.iter_mut().enumerate() {
+            out.push(self.block_with_drain(g, d, rows).map_err(|e| anyhow!("{e}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Pop the next finished tile of group `g`, blocking on the producer
+    /// if the queue is momentarily empty, then nudge the owning shard
+    /// (a prefetch slot just opened).
+    fn pop_tile(&self, g: usize) -> Vec<u32> {
+        let shared = &*self.shared;
+        let slot = &shared.groups[g];
+        if !slot.active.load(Ordering::Acquire) {
+            slot.active.store(true, Ordering::Release);
+            Self::nudge(&shared.parks[shared.shard_of[g]]);
+        }
+        let mut q = slot.queue.ready.lock().unwrap();
+        loop {
+            if let Some(tile) = q.pop_front() {
+                drop(q);
+                Self::nudge(&shared.parks[shared.shard_of[g]]);
+                return tile;
+            }
+            q = slot.queue.tile_ready.wait(q).unwrap();
+        }
+    }
+
+    /// Wake a shard: a prefetch slot opened (or we are shutting down).
+    fn nudge(park: &Park) {
+        *park.generation.lock().unwrap() += 1;
+        park.cv.notify_all();
+    }
+
+    /// Return a fully consumed tile buffer to the shared pool (bounded).
+    fn recycle(&self, buf: Vec<u32>) {
+        let mut pool = self.shared.pool.lock().unwrap();
+        if pool.len() < 2 * self.shared.groups.len() {
+            pool.push(buf);
+        }
+    }
+
+    fn fetch_lane_locked(
+        &self,
+        g: usize,
+        d: &mut DrainState,
+        lane: usize,
+        out: &mut [u32],
+    ) -> std::result::Result<(), FetchError> {
+        let shared = &*self.shared;
+        let rows_per_tile = shared.rows_per_tile as u64;
+        let n = out.len() as u64;
+        let target = d.cursors[lane] + n;
+
+        // Backpressure: would this lane run too far ahead of the slowest?
+        let min_cursor = *d.cursors.iter().min().unwrap();
+        if target - min_cursor > shared.lag_window {
+            shared.metrics.add(&shared.metrics.lag_rejections, 1);
+            return Err(FetchError::LagWindowExceeded {
+                lead: target - min_cursor,
+                window: shared.lag_window,
+            });
+        }
+
+        // Pull prefetched tiles until the target row is buffered.
+        let mut missed = false;
+        while d.base_row + d.tiles.len() as u64 * rows_per_tile < target {
+            missed = true;
+            let tile = self.pop_tile(g);
+            d.tiles.push_back(tile);
+        }
+        shared
+            .metrics
+            .add(if missed { &shared.metrics.fetch_misses } else { &shared.metrics.fetch_hits }, 1);
+
+        // Strided column copy, one tile-resident run at a time.
+        let width = shared.width;
+        let rpt = shared.rows_per_tile;
+        let mut cursor = d.cursors[lane];
+        let mut written = 0usize;
+        while written < out.len() {
+            let rel = (cursor - d.base_row) as usize;
+            let (t, r0) = (rel / rpt, rel % rpt);
+            let take = (rpt - r0).min(out.len() - written);
+            let tile = &d.tiles[t];
+            let mut idx = r0 * width + lane;
+            for slot in out[written..written + take].iter_mut() {
+                *slot = tile[idx];
+                idx += width;
+            }
+            written += take;
+            cursor += take as u64;
+        }
+        d.cursors[lane] = cursor;
+        shared.metrics.add(&shared.metrics.numbers_delivered, n);
+
+        // Prune tiles every lane has fully consumed; recycle the buffers.
+        let min_cursor = *d.cursors.iter().min().unwrap();
+        while !d.tiles.is_empty() && d.base_row + rows_per_tile <= min_cursor {
+            let buf = d.tiles.pop_front().unwrap();
+            d.base_row += rows_per_tile;
+            self.recycle(buf);
+        }
+        Ok(())
+    }
+
+    /// Would a `rows`-row block fetch on this drain state violate the lag
+    /// window? (The fast tile-streaming path advances all lanes uniformly
+    /// from a clean boundary and carries no lag constraint, matching
+    /// `StreamGroup::fetch_block`.)
+    fn block_lag_check(
+        shared: &Shared,
+        d: &DrainState,
+        rows: usize,
+    ) -> std::result::Result<(), FetchError> {
+        let uniform = d.cursors.iter().all(|&c| c == d.cursors[0]);
+        if uniform && d.tiles.is_empty() && rows % shared.rows_per_tile == 0 {
+            return Ok(());
+        }
+        let min_cursor = *d.cursors.iter().min().unwrap();
+        let max_target = *d.cursors.iter().max().unwrap() + rows as u64;
+        if max_target - min_cursor > shared.lag_window {
+            return Err(FetchError::LagWindowExceeded {
+                lead: max_target - min_cursor,
+                window: shared.lag_window,
+            });
+        }
+        Ok(())
+    }
+
+    fn block_with_drain(
+        &self,
+        g: usize,
+        d: &mut DrainState,
+        rows: usize,
+    ) -> std::result::Result<Vec<u32>, FetchError> {
+        let shared = &*self.shared;
+        let width = shared.width;
+        let rpt = shared.rows_per_tile;
+
+        // Fast path: lanes uniform on a tile boundary and whole tiles
+        // requested — hand prefetched tiles straight to the caller (the
+        // single-tile case, the Monte-Carlo apps' shape, is zero-copy).
+        let uniform = d.cursors.iter().all(|&c| c == d.cursors[0]);
+        if uniform && d.tiles.is_empty() && rows % rpt == 0 {
+            let out = if rows == rpt {
+                self.pop_tile(g)
+            } else {
+                let mut out = vec![0u32; rows * width];
+                for chunk in out.chunks_mut(rpt * width) {
+                    let tile = self.pop_tile(g);
+                    chunk.copy_from_slice(&tile);
+                    self.recycle(tile);
+                }
+                out
+            };
+            for c in d.cursors.iter_mut() {
+                *c += rows as u64;
+            }
+            d.base_row += rows as u64;
+            shared.metrics.add(&shared.metrics.numbers_delivered, (rows * width) as u64);
+            return Ok(out);
+        }
+
+        // Slow path: per-lane fetch into a transposed buffer, under the
+        // caller-held drain lock so the block is one consistent row range.
+        //
+        // The lag window is checked once for the whole block, up front:
+        // a block advances every lane by `rows`, so the spread that
+        // matters is (fastest lane + rows) − slowest lane. Checking (and
+        // rejecting) atomically here means a rejection never leaves some
+        // lanes advanced and their rows silently dropped; it also makes
+        // the per-lane checks inside `fetch_lane_locked` unreachable for
+        // this call (their lead is bounded by the lead vetted here).
+        if let Err(e) = Self::block_lag_check(shared, d, rows) {
+            shared.metrics.add(&shared.metrics.lag_rejections, 1);
+            return Err(e);
+        }
+        let mut out = vec![0u32; rows * width];
+        let mut lane_buf = vec![0u32; rows];
+        for lane in 0..width {
+            self.fetch_lane_locked(g, &mut d, lane, &mut lane_buf)?;
+            for (r, &v) in lane_buf.iter().enumerate() {
+                out[r * width + lane] = v;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for ParallelCoordinator {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        for park in &self.shared.parks {
+            Self::nudge(park);
+        }
+        for handle in self.threads.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{splitmix64, Prng32, ThunderingStream};
+
+    fn cfg(width: usize, rows: usize, lag: u64, shards: usize) -> ShardedConfig {
+        ShardedConfig {
+            group_width: width,
+            rows_per_tile: rows,
+            lag_window: lag,
+            prefetch_depth: 2,
+            shards,
+            root_seed: 42,
+        }
+    }
+
+    #[test]
+    fn fetch_matches_scalar_stream() {
+        let c = ParallelCoordinator::new(cfg(8, 16, u64::MAX / 2, 2), 32).unwrap();
+        let mut buf = vec![0u32; 100];
+        c.fetch(19, &mut buf).unwrap(); // group 2, lane 3
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 2), 19);
+        let expect: Vec<u32> = (0..100).map(|_| s.next_u32()).collect();
+        assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn matches_single_coordinator_engine() {
+        use crate::coordinator::{Config, Coordinator, Engine};
+        let sharded = ParallelCoordinator::new(cfg(4, 8, u64::MAX / 2, 3), 16).unwrap();
+        let single = Coordinator::new(
+            Config {
+                engine: Engine::Native,
+                group_width: 4,
+                rows_per_tile: 8,
+                lag_window: u64::MAX / 2,
+                root_seed: 42,
+                ..Default::default()
+            },
+            16,
+        )
+        .unwrap();
+        for stream in [0u64, 5, 10, 15] {
+            let mut a = vec![0u32; 77];
+            let mut b = vec![0u32; 77];
+            sharded.fetch(stream, &mut a).unwrap();
+            single.fetch(stream, &mut b).unwrap();
+            assert_eq!(a, b, "stream {stream}");
+        }
+    }
+
+    #[test]
+    fn unknown_stream_rejected() {
+        let c = ParallelCoordinator::new(cfg(4, 8, 1024, 1), 8).unwrap();
+        let mut buf = vec![0u32; 4];
+        assert!(c.fetch(8, &mut buf).is_err());
+        assert!(c.fetch_group_block(2, 8).is_err());
+    }
+
+    #[test]
+    fn lag_window_enforced_and_recoverable() {
+        let c = ParallelCoordinator::new(cfg(2, 4, 16, 1), 2).unwrap();
+        let mut big = vec![0u32; 16];
+        c.fetch(0, &mut big).unwrap();
+        let mut one = vec![0u32; 1];
+        let err = c.fetch(0, &mut one).unwrap_err();
+        assert!(format!("{err}").contains("lag window"), "{err}");
+        c.fetch(1, &mut big).unwrap(); // catch the slow lane up
+        c.fetch(0, &mut one).unwrap();
+        assert_eq!(c.metrics().lag_rejections, 1);
+    }
+
+    #[test]
+    fn group_blocks_match_batch_engine() {
+        let c = ParallelCoordinator::new(cfg(4, 8, u64::MAX / 2, 2), 12).unwrap();
+        let blocks = c.fetch_many(24).unwrap();
+        assert_eq!(blocks.len(), 3);
+        for (g, block) in blocks.iter().enumerate() {
+            let mut batch =
+                ThunderingBatch::new(splitmix64(42 ^ g as u64), 4, g as u64 * 4);
+            assert_eq!(block, &batch.tile(24), "group {g}");
+        }
+    }
+
+    #[test]
+    fn block_after_partial_fetch_stays_consistent() {
+        let c = ParallelCoordinator::new(cfg(2, 4, u64::MAX / 2, 1), 2).unwrap();
+        let mut buf = vec![0u32; 3];
+        c.fetch(0, &mut buf).unwrap(); // misalign lane cursors
+        let block = c.fetch_group_block(0, 8).unwrap();
+        let mut s0 = ThunderingStream::new(splitmix64(42), 0);
+        for _ in 0..3 {
+            s0.next_u32();
+        }
+        let mut s1 = ThunderingStream::new(splitmix64(42), 1);
+        for r in 0..8 {
+            assert_eq!(block[r * 2], s0.next_u32(), "lane0 row {r}");
+            assert_eq!(block[r * 2 + 1], s1.next_u32(), "lane1 row {r}");
+        }
+    }
+
+    #[test]
+    fn rejected_block_leaves_no_lane_advanced() {
+        // Lane 1 runs 10 ahead (== window). A 1-row block would need an
+        // 11-row spread → must be rejected atomically: lane 0 still
+        // replays from its origin afterwards (before the atomic check,
+        // lane 0 was advanced and its row silently dropped).
+        let c = ParallelCoordinator::new(cfg(3, 4, 10, 1), 3).unwrap();
+        let mut ten = vec![0u32; 10];
+        c.fetch(1, &mut ten).unwrap();
+        let err = c.fetch_group_block(0, 1).unwrap_err();
+        assert!(format!("{err}").contains("lag window"), "{err}");
+        let mut five = vec![0u32; 5];
+        c.fetch(0, &mut five).unwrap();
+        let mut s0 = ThunderingStream::new(splitmix64(42), 0);
+        let expect: Vec<u32> = (0..5).map(|_| s0.next_u32()).collect();
+        assert_eq!(five, expect, "lane 0 must not have been advanced by the rejected block");
+        // Catch every lane up to row 10, then the block goes through.
+        let mut buf = vec![0u32; 5];
+        c.fetch(0, &mut buf).unwrap();
+        c.fetch(2, &mut ten).unwrap();
+        let block = c.fetch_group_block(0, 1).unwrap();
+        for lane in 0..3u64 {
+            let mut s = ThunderingStream::new(splitmix64(42), lane);
+            for _ in 0..10 {
+                s.next_u32();
+            }
+            assert_eq!(block[lane as usize], s.next_u32(), "lane {lane} row 10");
+        }
+    }
+
+    #[test]
+    fn rejected_fetch_many_consumes_no_group() {
+        // Group 1 is skewed past what an 8-row block allows; fetch_many
+        // must validate every group before consuming any, so group 0's
+        // streams still replay from their origin after the rejection.
+        let c = ParallelCoordinator::new(cfg(2, 8, 16, 1), 4).unwrap();
+        let mut sixteen = vec![0u32; 16];
+        c.fetch(2, &mut sixteen).unwrap(); // group 1, lane 0, at the edge
+        let err = c.fetch_many(8).unwrap_err();
+        assert!(format!("{err}").contains("lag window"), "{err}");
+        let mut buf = vec![0u32; 8];
+        c.fetch(0, &mut buf).unwrap();
+        let mut s = ThunderingStream::new(splitmix64(42), 0);
+        let expect: Vec<u32> = (0..8).map(|_| s.next_u32()).collect();
+        assert_eq!(buf, expect, "group 0 must be untouched by the rejected fetch_many");
+        // Catching group 1's slow lane up clears the batch.
+        c.fetch(3, &mut sixteen).unwrap();
+        let blocks = c.fetch_many(8).unwrap();
+        assert_eq!(blocks.len(), 2);
+        let mut s2 = ThunderingStream::new(splitmix64(42 ^ 1), 2);
+        for _ in 0..16 {
+            s2.next_u32();
+        }
+        assert_eq!(blocks[1][0], s2.next_u32(), "group 1 continues from row 16");
+    }
+
+    #[test]
+    fn shutdown_joins_workers_quickly() {
+        let t0 = std::time::Instant::now();
+        {
+            let c = ParallelCoordinator::new(cfg(8, 64, 1 << 14, 0), 64).unwrap();
+            let mut buf = vec![0u32; 256];
+            c.fetch(0, &mut buf).unwrap();
+        } // drop here
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

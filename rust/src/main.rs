@@ -14,7 +14,7 @@ use std::io::Write;
 use anyhow::{bail, Result};
 
 use thundering::apps;
-use thundering::coordinator::{Config, Coordinator, Engine};
+use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
 use thundering::fpga::resources::ResourceModel;
 use thundering::fpga::throughput::thundering_throughput;
 use thundering::report;
@@ -68,9 +68,9 @@ fn print_help() {
          generate    --streams N --count N [--stream I] [--engine native|pjrt] [--artifacts DIR] [--out hex|none]\n  \
          quality     --gen NAME [--scale quick|standard|deep]\n  \
          report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
-         pi          --draws N [--engine pjrt|native] [--artifacts DIR] [--threads N]\n  \
-         bs          --draws N [--engine pjrt|native] [--artifacts DIR] [--threads N]\n  \
-         throughput  --streams N --rows N [--engine native|pjrt] [--artifacts DIR]\n  \
+         pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
+         bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
+         throughput  --streams N --rows N [--engine native|pjrt|sharded] [--artifacts DIR]\n  \
          fpga-model  --n INSTANCES"
     );
 }
@@ -179,6 +179,7 @@ fn cmd_pi(args: &Args) -> Result<()> {
             apps::pi::run_pjrt(&guard.executor, draws, args.get_u64("seed", 42)?)?
         }
         "native" => apps::pi::run_native(threads, draws, args.get_u64("seed", 42)?)?,
+        "sharded" => apps::pi::run_sharded(threads, draws, args.get_u64("seed", 42)?)?,
         other => bail!("unknown engine {other:?}"),
     };
     println!(
@@ -213,6 +214,9 @@ fn cmd_bs(args: &Args) -> Result<()> {
         "native" => {
             apps::option_pricing::run_native(threads, draws, args.get_u64("seed", 42)?, params)?
         }
+        "sharded" => {
+            apps::option_pricing::run_sharded(threads, draws, args.get_u64("seed", 42)?, params)?
+        }
         other => bail!("unknown engine {other:?}"),
     };
     let closed = apps::black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
@@ -232,6 +236,9 @@ fn cmd_bs(args: &Args) -> Result<()> {
 fn cmd_throughput(args: &Args) -> Result<()> {
     let streams = args.get_u64("streams", 256)?;
     let rows = args.get_usize("rows", 1 << 16)?;
+    if args.get_or("engine", "native") == "sharded" {
+        return cmd_throughput_sharded(args, streams, rows);
+    }
     let config = Config {
         engine: engine(args, true)?,
         group_width: args.get_usize("group-width", 64)?,
@@ -253,6 +260,37 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s)\nmetrics: {}",
         thundering::util::fmt_rate(total as f64 / secs),
         total as f64 * 32.0 / secs / 1e12,
+        c.metrics()
+    );
+    Ok(())
+}
+
+fn cmd_throughput_sharded(args: &Args, streams: u64, rows: usize) -> Result<()> {
+    let config = ShardedConfig {
+        group_width: args.get_usize("group-width", 64)?,
+        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
+        lag_window: u64::MAX / 2,
+        root_seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let rows_per_tile = config.rows_per_tile;
+    let c = ParallelCoordinator::new(config, streams)?;
+    let rows_aligned = (rows - rows % rows_per_tile).max(rows_per_tile);
+    let t0 = std::time::Instant::now();
+    let mut total = 0u64;
+    // One group block at a time (like the native path) so peak memory is
+    // a single block; generation still runs in parallel on the shards.
+    for g in 0..c.n_groups() {
+        let block = c.fetch_group_block(g, rows_aligned)?;
+        total += block.len() as u64;
+        std::hint::black_box(&block);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s) on {} shards\nmetrics: {}",
+        thundering::util::fmt_rate(total as f64 / secs),
+        total as f64 * 32.0 / secs / 1e12,
+        c.n_shards(),
         c.metrics()
     );
     Ok(())

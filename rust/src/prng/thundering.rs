@@ -196,10 +196,53 @@ impl Prng32 for AblatedStream {
 /// Per step: **one** root multiply, then `p` lanes of add/rotate/xor. The
 /// output is row-major `(step, stream)` — identical layout to the Pallas
 /// tile kernel, so tile outputs can be cross-checked bit-for-bit.
+///
+/// The decorrelator state is held structure-of-arrays: four flat `u32`
+/// vectors (`lanes[k][i]` = word `k` of stream `i`) instead of
+/// `Vec<[u32; 4]>`. The xorshift128 shift register `(x,y,z,w) →
+/// (y,z,w,w')` is realized by *rotating the role of the arrays* (tracked
+/// by `phase`) rather than moving data, so the hot loop touches exactly
+/// two flat arrays per step — the layout autovectorizers want (no
+/// per-lane array destructuring, no gather/scatter).
 pub struct ThunderingBatch {
     root: u64,
     h: Vec<u64>,
-    xs: Vec<[u32; 4]>,
+    /// SoA decorrelator words; the array holding role `x` is
+    /// `lanes[phase % 4]`, role `y` is `lanes[(phase + 1) % 4]`, etc.
+    lanes: [Vec<u32>; 4],
+    phase: usize,
+}
+
+/// One generation step across all lanes of a row. `xs` holds the `x` role
+/// (overwritten in place with the new `w'` word), `ws` the `w` role.
+/// Fixed-width inner chunks give the compiler constant trip counts to
+/// unroll and vectorize; the remainder loop handles `p % CHUNK` lanes.
+#[inline]
+fn fill_row_lanes(root: u64, h: &[u64], xs: &mut [u32], ws: &[u32], row: &mut [u32]) {
+    const CHUNK: usize = 16;
+    let p = h.len();
+    debug_assert!(xs.len() == p && ws.len() == p && row.len() == p);
+    let mut base = 0usize;
+    while base + CHUNK <= p {
+        for k in 0..CHUNK {
+            let i = base + k;
+            let x = xs[i];
+            let w = ws[i];
+            let t = x ^ (x << 11);
+            let nw = w ^ (w >> 19) ^ t ^ (t >> 8);
+            xs[i] = nw;
+            row[i] = xsh_rr(root.wrapping_add(h[i])) ^ nw;
+        }
+        base += CHUNK;
+    }
+    for i in base..p {
+        let x = xs[i];
+        let w = ws[i];
+        let t = x ^ (x << 11);
+        let nw = w ^ (w >> 19) ^ t ^ (t >> 8);
+        xs[i] = nw;
+        row[i] = xsh_rr(root.wrapping_add(h[i])) ^ nw;
+    }
 }
 
 impl ThunderingBatch {
@@ -207,13 +250,36 @@ impl ThunderingBatch {
     pub fn new(root_seed: u64, p: usize, first_stream: u64) -> Self {
         let h = (0..p as u64).map(|i| leaf_h(first_stream + i)).collect();
         let mut alloc = Xs128SubstreamAlloc::starting_at(first_stream);
-        let xs = (0..p).map(|_| alloc.next_substream().1).collect();
-        Self { root: root_seed, h, xs }
+        let mut lanes = [
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+        ];
+        for _ in 0..p {
+            let (_, s) = alloc.next_substream();
+            for (k, lane) in lanes.iter_mut().enumerate() {
+                lane.push(s[k]);
+            }
+        }
+        Self { root: root_seed, h, lanes, phase: 0 }
     }
 
     pub fn from_parts(root: u64, h: Vec<u64>, xs: Vec<[u32; 4]>) -> Self {
         assert_eq!(h.len(), xs.len());
-        Self { root, h, xs }
+        let p = xs.len();
+        let mut lanes = [
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+            Vec::with_capacity(p),
+        ];
+        for s in &xs {
+            for (k, lane) in lanes.iter_mut().enumerate() {
+                lane.push(s[k]);
+            }
+        }
+        Self { root, h, lanes, phase: 0 }
     }
 
     pub fn width(&self) -> usize {
@@ -224,8 +290,34 @@ impl ThunderingBatch {
         self.root
     }
 
-    pub fn xs_states(&self) -> &[[u32; 4]] {
-        &self.xs
+    /// Current decorrelator states in canonical `[x, y, z, w]` order
+    /// (materialized from the rotating SoA representation).
+    pub fn xs_states(&self) -> Vec<[u32; 4]> {
+        let p = self.width();
+        let mut out = Vec::with_capacity(p);
+        for i in 0..p {
+            out.push([
+                self.lanes[self.phase % 4][i],
+                self.lanes[(self.phase + 1) % 4][i],
+                self.lanes[(self.phase + 2) % 4][i],
+                self.lanes[(self.phase + 3) % 4][i],
+            ]);
+        }
+        out
+    }
+
+    /// Borrow the `x`-role array mutably and the `w`-role array immutably
+    /// for the given phase (they are always distinct arrays).
+    fn xw_pair(lanes: &mut [Vec<u32>; 4], phase: usize) -> (&mut [u32], &[u32]) {
+        let x = phase % 4;
+        let w = (phase + 3) % 4;
+        if x < w {
+            let (lo, hi) = lanes.split_at_mut(w);
+            (lo[x].as_mut_slice(), hi[0].as_slice())
+        } else {
+            let (lo, hi) = lanes.split_at_mut(x);
+            (hi[0].as_mut_slice(), lo[w].as_slice())
+        }
     }
 
     /// Generate `rows` steps into `out` (len = rows·p, row-major).
@@ -233,19 +325,16 @@ impl ThunderingBatch {
         let p = self.h.len();
         assert_eq!(out.len(), rows * p);
         let mut root = self.root;
+        let mut phase = self.phase;
         for r in 0..rows {
             root = lcg_step(root); // the single shared multiply
             let row = &mut out[r * p..(r + 1) * p];
-            for i in 0..p {
-                let w = root.wrapping_add(self.h[i]);
-                let [x, y, z, wst] = self.xs[i];
-                let t = x ^ (x << 11);
-                let new_w = wst ^ (wst >> 19) ^ t ^ (t >> 8);
-                self.xs[i] = [y, z, wst, new_w];
-                row[i] = xsh_rr(w) ^ new_w;
-            }
+            let (xs, ws) = Self::xw_pair(&mut self.lanes, phase);
+            fill_row_lanes(root, &self.h, xs, ws, row);
+            phase = (phase + 1) % 4;
         }
         self.root = root;
+        self.phase = phase;
     }
 
     /// Convenience: allocate and fill a rows×p tile.

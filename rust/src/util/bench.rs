@@ -2,9 +2,25 @@
 //!
 //! Methodology: warmup runs, then `iters` timed runs; reports min / median /
 //! mean / p95. Results print in a stable machine-grepable format:
-//! `BENCH <name> median=<s> mean=<s> min=<s> p95=<s> [thrpt=<x>/s]`.
+//! `BENCH <name> median=<s> mean=<s> min=<s> p95=<s> [thrpt=<x>/s]`,
+//! and can additionally be serialized as a JSON trajectory point
+//! ([`JsonReport`], e.g. `BENCH_parallel.json`) so successive PRs can
+//! track throughput over time.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::Json;
+
+fn json_num(v: f64) -> Json {
+    // Rust formats non-finite floats as `NaN`/`inf`, which is not valid
+    // JSON; serialize those as null so the document always parses.
+    if v.is_finite() {
+        Json::Num(v, format!("{v}"))
+    } else {
+        Json::Null
+    }
+}
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -54,6 +70,60 @@ impl Measurement {
             line.push_str(&format!(" thrpt={}", crate::util::fmt_rate(self.throughput())));
         }
         println!("{line}");
+    }
+
+    /// JSON object form (seconds for the time stats, items/s throughput).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("median_s".to_string(), json_num(self.median()));
+        m.insert("mean_s".to_string(), json_num(self.mean()));
+        m.insert("min_s".to_string(), json_num(self.min()));
+        m.insert("p95_s".to_string(), json_num(self.p95()));
+        m.insert("samples".to_string(), json_num(self.samples.len() as f64));
+        m.insert("items_per_run".to_string(), json_num(self.items_per_run as f64));
+        m.insert("items_per_sec".to_string(), json_num(self.throughput()));
+        Json::Obj(m)
+    }
+}
+
+/// A machine-readable benchmark report: free-form context (host shape,
+/// engine parameters, derived ratios) plus a list of measurements.
+/// Written as one JSON document — the trajectory-point format consumed by
+/// `BENCH_*.json` files.
+#[derive(Default)]
+pub struct JsonReport {
+    context: BTreeMap<String, Json>,
+    measurements: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn context_str(&mut self, key: &str, value: &str) {
+        self.context.insert(key.to_string(), Json::Str(value.to_string()));
+    }
+
+    pub fn context_num(&mut self, key: &str, value: f64) {
+        self.context.insert(key.to_string(), json_num(value));
+    }
+
+    pub fn push(&mut self, m: &Measurement) {
+        self.measurements.push(m.to_json());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("context".to_string(), Json::Obj(self.context.clone()));
+        m.insert("benches".to_string(), Json::Arr(self.measurements.clone()));
+        Json::Obj(m)
+    }
+
+    /// Write the report to `path` (single JSON document + newline).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
     }
 }
 
@@ -143,5 +213,28 @@ mod tests {
         });
         assert_eq!(m.samples.len(), 5);
         assert_eq!(count, 6); // warmup + iters
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let m = Measurement {
+            name: "engine/sharded".into(),
+            samples: vec![0.5, 0.25, 1.0],
+            items_per_run: 1000,
+        };
+        let mut rep = JsonReport::new();
+        rep.context_str("bench", "parallel");
+        rep.context_num("cores", 8.0);
+        rep.context_num("bad_ratio", f64::INFINITY); // must not break the doc
+        rep.push(&m);
+        let text = rep.to_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("context").unwrap().get("cores").unwrap().as_f64(), Some(8.0));
+        assert_eq!(back.get("context").unwrap().get("bad_ratio"), Some(&Json::Null));
+        let benches = back.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        assert_eq!(benches[0].get("name").unwrap().as_str(), Some("engine/sharded"));
+        assert_eq!(benches[0].get("median_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(benches[0].get("items_per_sec").unwrap().as_f64(), Some(2000.0));
     }
 }

@@ -1,5 +1,8 @@
 //! Integration: the coordinator serving from real AOT artifacts via the
 //! PJRT device thread, checked bit-for-bit against the native engine.
+//! Requires the `xla` feature (real PJRT bindings) plus `make artifacts`.
+
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 

@@ -1,0 +1,193 @@
+//! Known-answer tests for the full comparator-PRNG roster (Table 1), plus
+//! a generic `fill_u32`-vs-`next_u32` equivalence sweep over every
+//! `Prng32` implementation.
+//!
+//! Vector provenance (see DESIGN.md §2): each constant was produced by an
+//! implementation *independent of this crate* — the canonical C reference
+//! code of the algorithm's authors where published vectors exist (MT19937
+//! `mt19937ar.out`, Random123 Philox kats, Vigna's xoroshiro128**,
+//! L'Ecuyer's MRG32k3a checks), cross-validated against a Python oracle
+//! (numpy's legacy `RandomState` for MT19937's `init_by_array` seeding).
+//! Where the repo uses a parameterization without a published vector
+//! (PCG output-before-advance, LFSR113 from an all-12345 state, the
+//! Marsaglia xor128 recurrence), the vectors come from the same
+//! independent Python transcription of the published recurrences.
+
+use thundering::prng::thundering::{Ablation, AblatedStream};
+use thundering::prng::{
+    splitmix64, Lcg64, LutSr, Mrg32k3a, Mt19937, PcgXshRr64, PcgXshRs64, Philox4x32, Prng32,
+    SplitMix64, ThunderingStream, Xoroshiro128StarStar, Xorshift128,
+};
+
+fn first_n(gen: &mut dyn Prng32, n: usize) -> Vec<u32> {
+    (0..n).map(|_| gen.next_u32()).collect()
+}
+
+#[test]
+fn mt19937_matches_authors_init_by_array_vector() {
+    // mt19937ar.out (Matsumoto & Nishimura), init_by_array
+    // {0x123, 0x234, 0x345, 0x456}; cross-checked with numpy RandomState.
+    let mut g = Mt19937::new_by_array(&[0x123, 0x234, 0x345, 0x456]);
+    let expect: [u32; 10] = [
+        1067595299, 955945823, 477289528, 4107218783, 4228976476, 3344332714, 3355579695,
+        227628506, 810200273, 2591290167,
+    ];
+    assert_eq!(first_n(&mut g, 10), expect);
+}
+
+#[test]
+fn mt19937_matches_default_seed_vector() {
+    // The classic seed-5489 sequence (identical to C++ std::mt19937).
+    let mut g = Mt19937::new(5489);
+    let expect: [u32; 5] = [3499211612, 581869302, 3890346734, 3586334585, 545404204];
+    assert_eq!(first_n(&mut g, 5), expect);
+}
+
+#[test]
+fn philox4x32_matches_random123_kat_vectors() {
+    use thundering::prng::philox::philox4x32_10;
+    // Official Random123 known-answer tests for philox4x32-10.
+    assert_eq!(
+        philox4x32_10([0, 0, 0, 0], [0, 0]),
+        [0x6627_E8D5, 0xE169_C58D, 0xBC57_AC4C, 0x9B00_DBD8]
+    );
+    assert_eq!(
+        philox4x32_10([u32::MAX; 4], [u32::MAX; 2]),
+        [0x408F_276D, 0x41C8_3B0E, 0xA20B_C7C6, 0x6D54_51FD]
+    );
+    // Stream form: block 1 of key (7, 99) continues the counter sequence.
+    let mut s = Philox4x32::new([7, 99]);
+    let _ = first_n(&mut s, 4); // drain block 0
+    assert_eq!(first_n(&mut s, 4), [4261944098, 4095783935, 919678452, 1392150649]);
+}
+
+#[test]
+fn mrg32k3a_matches_lecuyer_reference_sequence() {
+    // From the canonical all-12345 starting state; the raw outputs match
+    // L'Ecuyer's published u_n = z_n/(m1+1) check values (0.127011,
+    // 0.318528, 0.309186, ...); these are the 32-bit scaled outputs.
+    let mut g = Mrg32k3a::from_state([12345; 3], [12345; 3]);
+    let expect: [u32; 6] =
+        [545508615, 1368065476, 1327943825, 3546985268, 951893240, 2290915747];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn xoroshiro128starstar_matches_vigna_reference() {
+    // u64 outputs from state (1, 2) per the canonical C implementation,
+    // delivered 32 bits at a time (low half first).
+    let mut g = Xoroshiro128StarStar::from_state(1, 2);
+    let expect: [u32; 6] = [5760, 0, 3279963008, 22, 17280, 2260054957];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn pcg_xsh_rs_matches_oracle_vector() {
+    // PCG-XSH-RS-64/32, output-before-advance, seed 42 / stream 0
+    // (inc = 1): independent Python transcription of O'Neill's recurrence.
+    let mut g = PcgXshRs64::new(42, 0);
+    let expect: [u32; 6] = [0, 3104263596, 8360134, 3669367720, 2256410373, 2956640566];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn pcg_xsh_rr_matches_oracle_vector() {
+    let mut g = PcgXshRr64::new(42, 0);
+    let expect: [u32; 6] = [0, 210066564, 812384312, 2560358063, 3425943684, 3613413895];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn tausworthe_lfsr113_matches_oracle_vector() {
+    // LFSR113 stepped from the all-12345 state (valid: every component
+    // above its minimum), via an independent transcription of L'Ecuyer's
+    // published C code.
+    let mut g = LutSr::from_state([12345; 4]);
+    let expect: [u32; 6] =
+        [3338197162, 227261592, 1979908174, 147202595, 2208502443, 1347239434];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn xorshift128_matches_marsaglia_seed_vector() {
+    // Marsaglia's xor128 with his paper's seed (123456789, 362436069,
+    // 521288629, 88675123).
+    let mut g = Xorshift128::new([123456789, 362436069, 521288629, 88675123]);
+    let expect: [u32; 6] =
+        [3701687786, 458299110, 2500872618, 3633119408, 516391518, 2377269574];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn xorshift128_matches_python_oracle_from_master_seed() {
+    // From the project's master seed (params.XS128_SEED) — the same
+    // states the Pallas kernels bake in.
+    use thundering::prng::xorshift::XS128_SEED;
+    let mut g = Xorshift128::new(XS128_SEED);
+    let expect: [u32; 6] =
+        [3218796604, 1669865808, 2632967159, 1140209258, 734360888, 157635505];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn lcg64_matches_oracle_vector() {
+    // High-32 truncation of x' = a·x + 55 from seed 42 (MMIX multiplier).
+    let mut g = Lcg64::new(42);
+    let expect: [u32; 6] =
+        [2104627054, 424312911, 887000589, 4274229869, 228093390, 3745906375];
+    assert_eq!(first_n(&mut g, 6), expect);
+}
+
+#[test]
+fn splitmix64_matches_vigna_reference() {
+    let mut g = SplitMix64::new(0);
+    assert_eq!(g.next_u64(), 0xE220_A839_7B1D_CDAF);
+    assert_eq!(g.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    assert_eq!(g.next_u64(), 0x06C4_5D18_8009_454F);
+}
+
+#[test]
+fn thundering_stream_matches_python_tile_oracle() {
+    // Column 0 of ref.thundering_tile_ref(splitmix64(42), ...) — the same
+    // vector the batch/tile tests pin, via the scalar path.
+    let mut s = ThunderingStream::new(splitmix64(42), 0);
+    assert_eq!(first_n(&mut s, 4), [1809276457, 3112793216, 58361432, 4212462168]);
+}
+
+/// Every `Prng32` in the roster must deliver exactly the same sequence
+/// through `fill_u32` as through repeated `next_u32` — this is what lets
+/// the coordinator, battery, and apps use either interface
+/// interchangeably (and guards future buffered/SIMD `fill_u32`
+/// overrides).
+#[test]
+fn fill_u32_equals_next_u32_across_roster() {
+    type Factory = Box<dyn Fn() -> Box<dyn Prng32>>;
+    let roster: Vec<Factory> = vec![
+        Box::new(|| Box::new(ThunderingStream::new(42, 7))),
+        Box::new(|| Box::new(AblatedStream::new(42, 7, Ablation::Decorrelation))),
+        Box::new(|| Box::new(SplitMix64::new(9))),
+        Box::new(|| Box::new(Lcg64::new(9))),
+        Box::new(|| Box::new(PcgXshRs64::new(9, 3))),
+        Box::new(|| Box::new(PcgXshRr64::new(9, 3))),
+        Box::new(|| Box::new(Xoroshiro128StarStar::new(9))),
+        Box::new(|| Box::new(Philox4x32::new([9, 3]))),
+        Box::new(|| Box::new(Mrg32k3a::new(9))),
+        Box::new(|| Box::new(Mt19937::new(9))),
+        Box::new(|| Box::new(LutSr::new(9))),
+        Box::new(|| Box::new(Xorshift128::new([9, 8, 7, 6]))),
+    ];
+    for factory in &roster {
+        let mut a = factory();
+        let mut b = factory();
+        let name = a.name().to_string();
+        // Two fills with a deliberately odd length so buffered generators
+        // (e.g. philox's 4-word blocks, xoroshiro's u64 halves) cross
+        // their internal block boundaries mid-buffer.
+        for round in 0..2 {
+            let mut filled = vec![0u32; 257];
+            a.fill_u32(&mut filled);
+            let stepped: Vec<u32> = (0..257).map(|_| b.next_u32()).collect();
+            assert_eq!(filled, stepped, "{name} round {round}");
+        }
+    }
+}

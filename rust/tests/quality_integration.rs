@@ -1,6 +1,9 @@
 //! Integration: statistical quality of the numbers actually served by the
 //! coordinator (artifact path) — the end-to-end version of Table 2's
 //! protocol at CI scale.
+//! Requires the `xla` feature (real PJRT bindings) plus `make artifacts`.
+
+#![cfg(feature = "xla")]
 
 use thundering::coordinator::{Config, Coordinator, Engine};
 use thundering::prng::Prng32;

@@ -1,0 +1,126 @@
+//! Thread-stress determinism for the sharded parallel engine: many
+//! concurrent clients fetching interleaved, non-aligned chunk sizes from a
+//! [`ParallelCoordinator`] must receive output **bit-identical** to scalar
+//! `ThunderingStream` replay — the cross-shard, prefetching extension of
+//! `coordinator::tests::concurrent_fetches_consistent`.
+
+use std::sync::Arc;
+
+use thundering::coordinator::{ParallelCoordinator, ShardedConfig};
+use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
+
+fn config(width: usize, rows: usize, shards: usize) -> ShardedConfig {
+    ShardedConfig {
+        group_width: width,
+        rows_per_tile: rows,
+        lag_window: u64::MAX / 2,
+        prefetch_depth: 2,
+        shards,
+        root_seed: 42,
+    }
+}
+
+#[test]
+fn sixteen_clients_bit_identical_to_scalar_replay() {
+    // 16 groups of 8 streams; 16 clients, each hammering a different
+    // (group, lane) pair with varying chunk sizes that straddle the
+    // 64-row tile boundary in every possible phase. Shard count is auto
+    // (one per core), so groups share shards on small hosts — the
+    // interleaving this test is designed to shake out.
+    let c = Arc::new(ParallelCoordinator::new(config(8, 64, 0), 128).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..16u64 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = t * 8 + (t % 8);
+            let chunks = [257usize, 63, 1024, 1, 500, 129];
+            let mut all = Vec::new();
+            for (i, &n) in chunks.iter().cycle().take(12).enumerate() {
+                let mut buf = vec![0u32; n + (i % 3)];
+                c.fetch(stream, &mut buf).unwrap();
+                all.extend_from_slice(&buf);
+            }
+            (stream, all)
+        }));
+    }
+    for h in handles {
+        let (stream, got) = h.join().unwrap();
+        let g = stream / 8;
+        let mut s = ThunderingStream::new(splitmix64(42 ^ g), stream);
+        let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect, "stream {stream}");
+    }
+}
+
+#[test]
+fn clients_sharing_groups_stay_bit_identical() {
+    // Two clients per group, different lanes: the drain lock serializes
+    // them while the shard prefetches; both lanes must replay exactly.
+    let c = Arc::new(ParallelCoordinator::new(config(4, 32, 2), 16).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let stream = (t / 2) * 4 + (t % 2) * 3; // lanes 0 and 3
+            let mut all = Vec::new();
+            let mut buf = vec![0u32; 377];
+            for _ in 0..6 {
+                c.fetch(stream, &mut buf).unwrap();
+                all.extend_from_slice(&buf);
+            }
+            (stream, all)
+        }));
+    }
+    for h in handles {
+        let (stream, got) = h.join().unwrap();
+        let g = stream / 4;
+        let mut s = ThunderingStream::new(splitmix64(42 ^ g), stream);
+        let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect, "stream {stream}");
+    }
+}
+
+#[test]
+fn fetch_many_blocks_match_batch_engine_across_shard_counts() {
+    // The batched API must return the same bits no matter how groups are
+    // spread over shards (1, 2, or 5 shards over 5 groups).
+    for shards in [1usize, 2, 5] {
+        let c = ParallelCoordinator::new(config(4, 16, shards), 20).unwrap();
+        let first = c.fetch_many(32).unwrap();
+        let second = c.fetch_many(16).unwrap();
+        assert_eq!(first.len(), 5);
+        for g in 0..5usize {
+            let mut batch =
+                ThunderingBatch::new(splitmix64(42 ^ g as u64), 4, g as u64 * 4);
+            assert_eq!(first[g], batch.tile(32), "shards {shards} group {g} block 1");
+            assert_eq!(second[g], batch.tile(16), "shards {shards} group {g} block 2");
+        }
+    }
+}
+
+#[test]
+fn prime_sized_chunks_across_shared_shards_replay_exactly() {
+    // Chunk size 97 (coprime to the 16-row tile) walks the copy window
+    // through every intra-tile phase; two groups share two shards.
+    let c = Arc::new(ParallelCoordinator::new(config(4, 16, 2), 8).unwrap());
+    let mut handles = Vec::new();
+    for &stream in &[1u64, 6, 3, 7] {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut all = Vec::new();
+            let mut buf = vec![0u32; 97];
+            for _ in 0..5 {
+                c.fetch(stream, &mut buf).unwrap();
+                all.extend_from_slice(&buf);
+            }
+            (stream, all)
+        }));
+    }
+    for h in handles {
+        let (stream, got) = h.join().unwrap();
+        let g = stream / 4;
+        let mut s = ThunderingStream::new(splitmix64(42 ^ g), stream);
+        let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect, "stream {stream}");
+    }
+}

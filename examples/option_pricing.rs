@@ -9,6 +9,7 @@
 use thundering::apps::{black_scholes_call, option_pricing};
 use thundering::runtime::executor::TileExecutor;
 use thundering::runtime::BsParams;
+use thundering::{Engine, EngineBuilder};
 
 fn main() -> anyhow::Result<()> {
     let artifacts =
@@ -36,8 +37,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Native engine cross-check at the money.
-    let native = option_pricing::run_native(threads, draws, 42, BsParams::default())?;
+    // Native engine cross-check at the money, through the same
+    // engine-agnostic driver the CLI uses.
+    let source = EngineBuilder::new(threads as u64 * 64)
+        .engine(Engine::Native)
+        .root_seed(42)
+        .build()?;
+    let native = option_pricing::run(&*source, draws, BsParams::default())?;
     println!(
         "\nnative engine: {:.4} ({} draws in {:.3}s, {:.1} Mdraw/s)",
         native.result,

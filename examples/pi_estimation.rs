@@ -9,6 +9,7 @@
 use thundering::apps::gpu_model::{FPGA_PI, P100_PI};
 use thundering::apps::pi;
 use thundering::runtime::executor::TileExecutor;
+use thundering::{Engine, EngineBuilder};
 
 fn main() -> anyhow::Result<()> {
     let artifacts =
@@ -23,7 +24,12 @@ fn main() -> anyhow::Result<()> {
     for shift in [20u32, 22, 24, 26] {
         let draws = 1u64 << shift;
         let pjrt = pi::run_pjrt(&guard.executor, draws, 42)?;
-        let native = pi::run_native(threads, draws, 42)?;
+        // Fresh native source per row: streams restart from the origin.
+        let source = EngineBuilder::new(threads as u64 * 64)
+            .engine(Engine::Native)
+            .root_seed(42)
+            .build()?;
+        let native = pi::run(&*source, draws)?;
         let samples = draws * 2;
         let f_t = FPGA_PI.exec_time(samples);
         let g_t = P100_PI.exec_time(samples);

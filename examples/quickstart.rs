@@ -1,4 +1,4 @@
-//! Quickstart: create a MISRN coordinator, register streams, fetch numbers.
+//! Quickstart: build a MISRN source, take stream handles, fetch numbers.
 //!
 //! Runs on the native engine by default; pass `--pjrt` (with `make
 //! artifacts` done) to serve from the AOT Pallas tiles instead.
@@ -7,7 +7,7 @@
 //! cargo run --release --example quickstart [-- --pjrt]
 //! ```
 
-use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
+use thundering::{Engine, EngineBuilder, StreamHandle, StreamSource};
 
 fn main() -> anyhow::Result<()> {
     let use_pjrt = std::env::args().any(|a| a == "--pjrt");
@@ -20,24 +20,27 @@ fn main() -> anyhow::Result<()> {
         Engine::Native
     };
 
-    // 128 independent streams in two state-sharing groups of 64.
-    let coordinator = Coordinator::new(
-        Config { engine, group_width: 64, rows_per_tile: 1024, ..Default::default() },
-        128,
-    )?;
+    // 128 independent streams in two state-sharing groups of 64, behind
+    // the engine-agnostic StreamSource surface.
+    let source = EngineBuilder::new(128)
+        .engine(engine)
+        .group_width(64)
+        .rows_per_tile(1024)
+        .build_arc()?;
+    println!("engine: {}", source.engine_kind());
 
-    println!("engine artifact: {:?}", coordinator.artifact());
-
-    // Every stream is an independent, crush-resistant sequence.
+    // Every stream is an independent, crush-resistant sequence; a
+    // StreamHandle is the cheap per-stream client.
     for stream in [0u64, 1, 64, 127] {
-        let spec = coordinator.spec(stream).unwrap();
+        let mut handle = StreamHandle::new(source.clone(), stream)?;
+        let spec = handle.spec().unwrap();
         let mut buf = [0u32; 8];
-        coordinator.fetch(stream, &mut buf)?;
+        handle.fill(&mut buf)?;
         println!("stream {:>3} (h = {:#018x}): {:?}", stream, spec.h, buf);
     }
 
     // Monte-Carlo-style consumption: one whole group advancing in lockstep.
-    let block = coordinator.fetch_group_block(1, 1024)?;
+    let block = source.fetch_block(1, 1024)?;
     let mean = block.iter().map(|&v| v as f64).sum::<f64>() / block.len() as f64;
     println!(
         "group block: {} numbers, mean/2^32 = {:.4} (expect ~0.5)",
@@ -45,21 +48,23 @@ fn main() -> anyhow::Result<()> {
         mean / 2f64.powi(32)
     );
 
-    println!("metrics: {}", coordinator.metrics());
+    println!("metrics: {}", source.metrics());
 
-    // Sharded parallel engine: same streams and same bits, but generation
-    // runs on one shard per core with double-buffered tiles (DESIGN.md §3).
-    let sharded = ParallelCoordinator::new(
-        ShardedConfig { group_width: 64, root_seed: 42, ..Default::default() },
-        128,
-    )?;
+    // Same streams, same bits, on the sharded parallel engine: one
+    // prefetching worker shard per core with double-buffered tiles
+    // (DESIGN.md §3) — only the builder call changes.
+    let sharded = EngineBuilder::new(128).engine(Engine::Sharded).build_arc()?;
     let blocks = sharded.fetch_many(1024)?;
     println!(
-        "sharded engine: {} shards served {} groups x {} numbers, metrics: {}",
-        sharded.n_shards(),
+        "sharded engine served {} groups x {} numbers, metrics: {}",
         blocks.len(),
         blocks[0].len(),
         sharded.metrics()
     );
+
+    // Iterator view over a served stream.
+    let handle = StreamHandle::new(sharded.clone(), 7)?;
+    let preview: Vec<u32> = handle.take(4).collect();
+    println!("stream 7 continues: {preview:?}");
     Ok(())
 }

@@ -1,75 +1,51 @@
-//! End-to-end driver (DESIGN.md "E2E"): a MISRN *service* on real AOT
-//! artifacts — N client threads issue batched fetches against the
-//! coordinator; we report delivered throughput, request latency
-//! percentiles, and a statistical spot-check of the served numbers.
-//! Results are recorded in EXPERIMENTS.md.
+//! End-to-end driver (DESIGN.md "E2E"): a MISRN *service* — N client
+//! threads issue batched fetches against any engine behind the
+//! `StreamSource` surface; we report delivered throughput, request
+//! latency percentiles, and a statistical spot-check of the served
+//! numbers. Results are recorded in EXPERIMENTS.md.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example stream_service -- \
-//!     [--clients 8] [--requests 64] [--chunk 65536] [--native]
+//!     [--clients 8] [--requests 64] [--chunk 65536] \
+//!     [--engine pjrt|native|sharded]
 //! ```
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use thundering::coordinator::{Config, Coordinator, Engine};
 use thundering::stats::{mini_crush, Scale};
 use thundering::util::cli::Args;
-
-struct Served {
-    c: Arc<Coordinator>,
-    stream: u64,
-    buf: Vec<u32>,
-    pos: usize,
-}
-
-impl thundering::prng::Prng32 for Served {
-    fn next_u32(&mut self) -> u32 {
-        if self.pos == self.buf.len() {
-            self.buf.resize(8192, 0);
-            self.c.fetch(self.stream, &mut self.buf).expect("fetch");
-            self.pos = 0;
-        }
-        let v = self.buf[self.pos];
-        self.pos += 1;
-        v
-    }
-    fn name(&self) -> &'static str {
-        "served"
-    }
-}
+use thundering::{Engine, EngineBuilder, StreamHandle};
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["clients", "requests", "chunk"])?;
+    let args =
+        Args::parse(std::env::args().skip(1), &["clients", "requests", "chunk", "engine"])?;
     let clients = args.get_usize("clients", 8)?;
     let requests = args.get_usize("requests", 64)?;
     let chunk = args.get_usize("chunk", 65536)?;
-    let native = args.flag("native");
+    // --native is kept as a shorthand for --engine native.
+    let engine_name =
+        if args.flag("native") { "native" } else { args.get_or("engine", "pjrt") };
 
-    let engine = if native {
-        Engine::Native
-    } else {
-        Engine::Pjrt {
+    let engine = match engine_name {
+        "native" => Engine::Native,
+        "sharded" => Engine::Sharded,
+        "pjrt" => Engine::Pjrt {
             artifacts_dir: std::env::var("THUNDERING_ARTIFACTS")
                 .unwrap_or_else(|_| "artifacts".into()),
-        }
+        },
+        other => anyhow::bail!("unknown engine {other:?}"),
     };
     let n_streams = (clients as u64).next_power_of_two().max(4) * 64;
-    let c = Arc::new(Coordinator::new(
-        Config {
-            engine,
-            group_width: 64,
-            rows_per_tile: 1024,
-            lag_window: 1 << 22,
-            ..Default::default()
-        },
-        n_streams,
-    )?);
+    let c = EngineBuilder::new(n_streams)
+        .engine(engine)
+        .group_width(64)
+        .rows_per_tile(1024)
+        .lag_window(1 << 22)
+        .build_arc()?;
     println!(
-        "serving {} streams on {} (artifact {:?}), {clients} clients x {requests} requests x {chunk} numbers",
+        "serving {} streams on {}, {clients} clients x {requests} requests x {chunk} numbers",
         n_streams,
-        if native { "native" } else { "pjrt" },
-        c.artifact()
+        c.engine_kind(),
     );
 
     // Client pattern: each client owns one state-sharing *group* and
@@ -87,7 +63,7 @@ fn main() -> anyhow::Result<()> {
                 let mut lats = Vec::with_capacity(requests);
                 for _ in 0..requests {
                     let t = Instant::now();
-                    let block = c.fetch_group_block(group, rows_per_request).expect("fetch");
+                    let block = c.fetch_block(group, rows_per_request).expect("fetch");
                     lats.push(t.elapsed().as_secs_f64());
                     std::hint::black_box(&block);
                 }
@@ -118,8 +94,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!("metrics: {}", c.metrics());
 
-    // Quality spot-check on a freshly served stream.
-    let mut s = Served { c: c.clone(), stream: 1, buf: Vec::new(), pos: 0 };
+    // Quality spot-check on a freshly served stream: a StreamHandle is a
+    // Prng32, so it feeds the battery directly.
+    let mut s = StreamHandle::new(c.clone(), 1)?.with_chunk(8192);
     let report = mini_crush(&mut s, Scale::Quick);
     println!("served-stream quality: {}", report.summary());
     assert!(report.passed(), "served numbers failed the battery!");

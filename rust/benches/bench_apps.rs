@@ -1,5 +1,6 @@
 //! Application benches — the measured core of Figs. 8/9: π estimation and
-//! option pricing on PJRT (AOT tiles) and native engines.
+//! option pricing through the engine-agnostic `run(&dyn StreamSource)`
+//! driver (native and sharded engines) and on the PJRT AOT tiles.
 //!
 //! Run: `make artifacts && cargo bench --bench bench_apps`
 
@@ -7,19 +8,36 @@ use thundering::apps::{option_pricing, pi};
 use thundering::runtime::executor::TileExecutor;
 use thundering::runtime::BsParams;
 use thundering::util::bench::{black_box, Bench};
+use thundering::{Engine, EngineBuilder, StreamSource};
 
 fn main() {
     let b = Bench::from_env();
     let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(8);
     let draws: u64 = 1 << 24;
 
-    println!("# native engine ({draws} draws/iter, {threads} threads)");
-    b.run("pi/native", draws, || {
-        black_box(pi::run_native(threads, draws, 42).unwrap());
-    });
-    b.run("bs/native", draws, || {
-        black_box(option_pricing::run_native(threads, draws, 42, BsParams::default()).unwrap());
-    });
+    let source = |engine: Engine| -> Box<dyn StreamSource> {
+        EngineBuilder::new(threads as u64 * 64).engine(engine).build().unwrap()
+    };
+
+    println!("# engine-agnostic driver ({draws} draws/iter, {threads} consumer groups)");
+    {
+        let native = source(Engine::Native);
+        b.run("pi/native", draws, || {
+            black_box(pi::run(&*native, draws).unwrap());
+        });
+        b.run("bs/native", draws, || {
+            black_box(option_pricing::run(&*native, draws, BsParams::default()).unwrap());
+        });
+    }
+    {
+        let sharded = source(Engine::Sharded);
+        b.run("pi/sharded", draws, || {
+            black_box(pi::run(&*sharded, draws).unwrap());
+        });
+        b.run("bs/sharded", draws, || {
+            black_box(option_pricing::run(&*sharded, draws, BsParams::default()).unwrap());
+        });
+    }
 
     let art = std::env::var("THUNDERING_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));

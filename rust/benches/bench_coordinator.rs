@@ -8,21 +8,17 @@
 
 use std::sync::Arc;
 
-use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
 use thundering::util::bench::{black_box, Bench, JsonReport};
+use thundering::{Engine, EngineBuilder, StreamSource};
 
-fn native(streams: u64, width: usize, rows: usize) -> Coordinator {
-    Coordinator::new(
-        Config {
-            engine: Engine::Native,
-            group_width: width,
-            rows_per_tile: rows,
-            lag_window: u64::MAX / 2,
-            ..Default::default()
-        },
-        streams,
-    )
-    .unwrap()
+fn native(streams: u64, width: usize, rows: usize) -> Box<dyn StreamSource> {
+    EngineBuilder::new(streams)
+        .engine(Engine::Native)
+        .group_width(width)
+        .rows_per_tile(rows)
+        .lag_window(u64::MAX / 2)
+        .build()
+        .unwrap()
 }
 
 fn main() {
@@ -42,7 +38,7 @@ fn main() {
     {
         let c = native(64, 64, 1024);
         b.run("fetch_block/native", 65536, || {
-            black_box(c.fetch_group_block(0, 1024).unwrap());
+            black_box(c.fetch_block(0, 1024).unwrap());
         });
     }
 
@@ -58,7 +54,11 @@ fn main() {
 
     println!("\n# concurrent clients (8 threads x 64k numbers each)");
     {
-        let c = Arc::new(native(512, 64, 1024));
+        let c: Arc<dyn StreamSource> = EngineBuilder::new(512)
+            .engine(Engine::Native)
+            .lag_window(u64::MAX / 2)
+            .build_arc()
+            .unwrap();
         b.run("fetch/concurrent-8", 8 * 65536, || {
             let handles: Vec<_> = (0..8u64)
                 .map(|k| {
@@ -79,7 +79,9 @@ fn main() {
     // Tentpole comparison: one client draining every group through the
     // single-coordinator path (generation inline on the client thread —
     // one core total) vs the sharded engine (generation spread over one
-    // shard per core, double-buffered ahead of the consumer).
+    // shard per core, double-buffered ahead of the consumer; fetch_many
+    // drains tile-granular in shard-affine order, so the caller's memcpy
+    // overlaps generation).
     {
         let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
         let n_groups = cores.clamp(2, 16);
@@ -96,21 +98,18 @@ fn main() {
         let m_single = b.run("engine/single-thread", numbers, || {
             for _ in 0..rounds {
                 for g in 0..n_groups {
-                    black_box(single.fetch_group_block(g, rows).unwrap());
+                    black_box(single.fetch_block(g, rows).unwrap());
                 }
             }
         });
 
-        let sharded = ParallelCoordinator::new(
-            ShardedConfig {
-                group_width: width,
-                rows_per_tile: rows,
-                lag_window: u64::MAX / 2,
-                ..Default::default()
-            },
-            (n_groups * width) as u64,
-        )
-        .unwrap();
+        let sharded = EngineBuilder::new((n_groups * width) as u64)
+            .engine(Engine::Sharded)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(u64::MAX / 2)
+            .build_sharded()
+            .unwrap();
         let m_sharded = b.run("engine/sharded", numbers, || {
             for _ in 0..rounds {
                 black_box(sharded.fetch_many(rows).unwrap());
@@ -151,19 +150,15 @@ fn main() {
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
     if std::path::Path::new(&art).join("manifest.json").exists() {
         println!("\n# PJRT-backed coordinator");
-        let c = Coordinator::new(
-            Config {
-                engine: Engine::Pjrt { artifacts_dir: art },
-                group_width: 64,
-                rows_per_tile: 1024,
-                lag_window: u64::MAX / 2,
-                ..Default::default()
-            },
-            64,
-        )
-        .unwrap();
+        let c = EngineBuilder::new(64)
+            .engine(Engine::Pjrt { artifacts_dir: art })
+            .group_width(64)
+            .rows_per_tile(1024)
+            .lag_window(u64::MAX / 2)
+            .build()
+            .unwrap();
         b.run("fetch_block/pjrt", 65536, || {
-            black_box(c.fetch_group_block(0, 1024).unwrap());
+            black_box(c.fetch_block(0, 1024).unwrap());
         });
         let mut buf = vec![0u32; 4096];
         b.run("fetch/pjrt-4096", 4096, || {

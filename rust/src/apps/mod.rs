@@ -1,38 +1,36 @@
 //! Case-study applications (paper Sec. 6): Monte-Carlo π estimation and
-//! Black–Scholes option pricing, each runnable on three engines:
+//! Black–Scholes option pricing.
 //!
-//! * `Pjrt` — the AOT Pallas app tiles (`pi_tile` / `bs_tile`) executed on
-//!   the PJRT device thread: the *measured* end-to-end path on this host.
-//! * `Native` — multi-threaded pure-Rust state-sharing engine (the CPU
-//!   port of Fig. 7).
-//! * models — FPGA/GPU analytic profiles for the Fig. 8/9 & Table 7
-//!   projections ([`gpu_model`]).
+//! Each app has **one** engine-agnostic driver — `run(&dyn StreamSource,
+//! ..)` — that consumes whichever engine the caller built
+//! ([`EngineBuilder`](crate::EngineBuilder): native, sharded, or PJRT),
+//! plus a `run_pjrt` path that executes the paper's fused app tiles
+//! (`pi_tile` / `bs_tile`) directly on the device thread, and analytic
+//! FPGA/GPU profiles for the Fig. 8/9 & Table 7 projections
+//! ([`gpu_model`]).
 
 pub mod gpu_model;
 pub mod option_pricing;
 pub mod pi;
 
-use anyhow::Result;
-
-/// Execution engines for the app drivers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AppEngine {
-    /// AOT HLO tiles via PJRT (measured).
-    Pjrt,
-    /// Native multi-threaded Rust (measured).
-    Native,
-}
+use crate::coordinator::StreamSource;
+use crate::error::Error;
 
 /// A measured app run.
 #[derive(Debug, Clone)]
 pub struct AppRun {
+    /// Engine identifier (`"native"`, `"sharded"`, `"pjrt"`, `"scalar"`).
     pub engine: &'static str,
+    /// Draws actually performed.
     pub draws: u64,
+    /// The Monte-Carlo estimate.
     pub result: f64,
+    /// Wall-clock seconds.
     pub seconds: f64,
 }
 
 impl AppRun {
+    /// Draws per wall-clock second.
     pub fn draws_per_sec(&self) -> f64 {
         self.draws as f64 / self.seconds
     }
@@ -53,43 +51,41 @@ fn erf(x: f64) -> f64 {
     1.0 - crate::stats::special::erfc(x)
 }
 
-/// Shared driver for the sharded-engine apps: one state-sharing group per
-/// consumer thread, blocks pulled through the `ParallelCoordinator`'s
-/// batched API while the shard threads prefetch, each consecutive pair of
-/// 32-bit outputs folded into a partial sum by `pair_fold`. Deterministic
-/// for a given `(groups, seed)`: per-group streams are fixed and partials
-/// are summed in group order.
-pub(crate) fn sharded_pairs_sum<F>(groups: usize, draws: u64, seed: u64, pair_fold: F) -> Result<f64>
+/// Rows drained per `fetch_block` request by the app drivers (one
+/// default-sized tile: the zero-copy shape on both engines).
+const BLOCK_ROWS: usize = 1024;
+
+/// Shared driver for the engine-agnostic apps: one consumer thread per
+/// state-sharing group, each draining `rows × width` blocks through
+/// [`StreamSource::fetch_block`] and folding each consecutive pair of
+/// 32-bit outputs into a partial sum via `pair_fold`.
+///
+/// On the sharded engine the consumers drain while the worker shards
+/// prefetch; on the native engine each consumer generates its own
+/// group's tiles inline — either way every core contributes.
+/// Deterministic for a given source `(root_seed, n_groups)`: per-group
+/// streams are fixed and partials are summed in group order.
+pub(crate) fn source_pairs_sum<F>(
+    source: &dyn StreamSource,
+    draws: u64,
+    pair_fold: F,
+) -> Result<f64, Error>
 where
     F: Fn(u32, u32) -> f64 + Sync,
 {
-    use crate::coordinator::sharded::{ParallelCoordinator, ShardedConfig};
-    const P: usize = 64;
-    const ROWS: usize = 1024;
-    let n_groups = groups.max(1);
-    let pc = ParallelCoordinator::new(
-        ShardedConfig {
-            group_width: P,
-            rows_per_tile: ROWS,
-            lag_window: u64::MAX / 2,
-            root_seed: seed,
-            ..Default::default()
-        },
-        (n_groups * P) as u64,
-    )?;
+    let n_groups = source.n_groups();
     let per = draws / n_groups as u64;
     let extra = draws % n_groups as u64;
-    std::thread::scope(|s| -> Result<f64> {
-        let pc = &pc;
+    std::thread::scope(|s| -> Result<f64, Error> {
         let pair_fold = &pair_fold;
         let mut handles = Vec::new();
         for g in 0..n_groups {
             let n = per + if (g as u64) < extra { 1 } else { 0 };
-            handles.push(s.spawn(move || -> Result<f64> {
+            handles.push(s.spawn(move || -> Result<f64, Error> {
                 let mut acc = 0f64;
                 let mut remaining = n;
                 while remaining > 0 {
-                    let block = pc.fetch_group_block(g, ROWS)?;
+                    let block = source.fetch_block(g, BLOCK_ROWS)?;
                     let draws_here = (block.len() / 2).min(remaining as usize);
                     for pair in block.chunks_exact(2).take(draws_here) {
                         acc += pair_fold(pair[0], pair[1]);
@@ -101,38 +97,10 @@ where
         }
         let mut total = 0f64;
         for h in handles {
-            total += h.join().map_err(|_| anyhow::anyhow!("consumer panicked"))??;
+            total += h.join().map_err(|_| Error::Backend("consumer panicked".into()))??;
         }
         Ok(total)
     })
-}
-
-/// Spawn `threads` workers over `draws` total work items, each worker
-/// running `f(worker_index, draws_for_worker) -> partial`, summing results.
-pub fn parallel_sum<F>(threads: usize, draws: u64, f: F) -> Result<f64>
-where
-    F: Fn(usize, u64) -> f64 + Sync,
-{
-    let per = draws / threads as u64;
-    let extra = draws % threads as u64;
-    let total = std::sync::Mutex::new(0.0f64);
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for w in 0..threads {
-            let n = per + if (w as u64) < extra { 1 } else { 0 };
-            let f = &f;
-            let total = &total;
-            handles.push(s.spawn(move || {
-                let part = f(w, n);
-                *total.lock().unwrap() += part;
-            }));
-        }
-        for h in handles {
-            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
-        }
-        Ok(())
-    })?;
-    Ok(total.into_inner().unwrap())
 }
 
 #[cfg(test)]
@@ -147,8 +115,14 @@ mod tests {
     }
 
     #[test]
-    fn parallel_sum_partitions_work() {
-        let total = parallel_sum(4, 1003, |_, n| n as f64).unwrap();
-        assert_eq!(total, 1003.0);
+    fn source_pairs_sum_partitions_work() {
+        use crate::coordinator::{Engine, EngineBuilder};
+        let source = EngineBuilder::new(4 * 64)
+            .engine(Engine::Native)
+            .build()
+            .unwrap();
+        // Counting pairs: the fold sees exactly `draws` pairs.
+        let total = source_pairs_sum(&*source, 100_003, |_, _| 1.0).unwrap();
+        assert_eq!(total, 100_003.0);
     }
 }

@@ -7,7 +7,8 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::AppRun;
-use crate::prng::ThunderingBatch;
+use crate::coordinator::StreamSource;
+use crate::error::Error;
 use crate::runtime::executor::TileExecutor;
 use crate::runtime::{BsParams, TileState};
 
@@ -43,8 +44,8 @@ pub fn run_pjrt(
 
 /// The per-draw kernel shared by every CPU engine: two 32-bit words →
 /// one Box–Muller normal → one discounted call payoff. Precomputed from
-/// [`BsParams`] once per run so both the native and sharded paths use
-/// the exact same arithmetic.
+/// [`BsParams`] once per run so every engine uses the exact same
+/// arithmetic.
 #[derive(Clone, Copy)]
 struct PayoffKernel {
     s0: f64,
@@ -82,46 +83,16 @@ impl PayoffKernel {
     }
 }
 
-/// Native multi-threaded run (state-sharing batch engine).
-pub fn run_native(threads: usize, draws: u64, seed: u64, params: BsParams) -> Result<AppRun> {
-    const P: usize = 64;
-    const ROWS: usize = 1024;
+/// Engine-agnostic Monte-Carlo run over any [`StreamSource`]: one
+/// consumer thread per state-sharing group draining synchronized blocks
+/// (the shared `source_pairs_sum` driver), same payoff math on every engine,
+/// deterministic for a given `(root_seed, n_groups)`.
+pub fn run(source: &dyn StreamSource, draws: u64, params: BsParams) -> Result<AppRun, Error> {
     let t0 = Instant::now();
     let kernel = PayoffKernel::new(params);
-    let sum = super::parallel_sum(threads, draws, |w, n| {
-        let mut batch =
-            ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
-        let mut buf = vec![0u32; ROWS * P];
-        let mut acc = 0f64;
-        let mut remaining = n;
-        while remaining > 0 {
-            batch.fill_rows(ROWS, &mut buf);
-            let draws_here = (buf.len() / 2).min(remaining as usize);
-            for pair in buf.chunks_exact(2).take(draws_here) {
-                acc += kernel.pair(pair[0], pair[1]);
-            }
-            remaining -= draws_here as u64;
-        }
-        acc
-    })?;
+    let sum = super::source_pairs_sum(source, draws, |a, b| kernel.pair(a, b))?;
     Ok(AppRun {
-        engine: "native",
-        draws,
-        result: sum / draws as f64,
-        seconds: t0.elapsed().as_secs_f64(),
-    })
-}
-
-/// Sharded-engine run: group blocks are pulled through the
-/// `ParallelCoordinator`'s batched API while shard threads prefetch the
-/// next tiles (see `super::sharded_pairs_sum`) — same payoff math as
-/// [`run_native`], deterministic for a given `(groups, seed)`.
-pub fn run_sharded(groups: usize, draws: u64, seed: u64, params: BsParams) -> Result<AppRun> {
-    let t0 = Instant::now();
-    let kernel = PayoffKernel::new(params);
-    let sum = super::sharded_pairs_sum(groups, draws, seed, |a, b| kernel.pair(a, b))?;
-    Ok(AppRun {
-        engine: "sharded",
+        engine: source.engine_kind(),
         draws,
         result: sum / draws as f64,
         seconds: t0.elapsed().as_secs_f64(),
@@ -132,11 +103,20 @@ pub fn run_sharded(groups: usize, draws: u64, seed: u64, params: BsParams) -> Re
 mod tests {
     use super::*;
     use crate::apps::black_scholes_call;
+    use crate::coordinator::{Engine, EngineBuilder};
+
+    fn source(engine: Engine, groups: usize, seed: u64) -> Box<dyn StreamSource> {
+        EngineBuilder::new(groups as u64 * 64)
+            .engine(engine)
+            .root_seed(seed)
+            .build()
+            .unwrap()
+    }
 
     #[test]
     fn native_price_near_closed_form() {
         let params = BsParams::default();
-        let run = run_native(2, 400_000, 42, params).unwrap();
+        let run = run(&*source(Engine::Native, 2, 42), 400_000, params).unwrap();
         let expect = black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
         assert!((run.result - expect).abs() < 0.15, "{} vs {expect}", run.result);
     }
@@ -145,17 +125,17 @@ mod tests {
     fn respects_parameters() {
         // Deep in-the-money call: price ≈ s0 - k·e^{-rt}.
         let params = BsParams { s0: 200.0, k: 100.0, r: 0.05, sigma: 0.2, t: 1.0 };
-        let run = run_native(2, 200_000, 1, params).unwrap();
+        let run = run(&*source(Engine::Native, 2, 1), 200_000, params).unwrap();
         let expect = black_scholes_call(200.0, 100.0, 0.05, 0.2, 1.0);
         assert!((run.result - expect).abs() < 0.5, "{} vs {expect}", run.result);
     }
 
     #[test]
-    fn sharded_price_near_closed_form_and_deterministic() {
+    fn sharded_price_matches_native_and_closed_form() {
         let params = BsParams::default();
-        let a = run_sharded(2, 300_000, 42, params).unwrap();
-        let b = run_sharded(2, 300_000, 42, params).unwrap();
-        assert_eq!(a.result, b.result);
+        let a = run(&*source(Engine::Sharded, 2, 42), 300_000, params).unwrap();
+        let b = run(&*source(Engine::Native, 2, 42), 300_000, params).unwrap();
+        assert_eq!(a.result, b.result, "engines must price identically");
         let expect = black_scholes_call(100.0, 100.0, 0.05, 0.2, 1.0);
         assert!((a.result - expect).abs() < 0.2, "{} vs {expect}", a.result);
     }

@@ -7,7 +7,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::AppRun;
-use crate::prng::{Prng32, ThunderingBatch};
+use crate::coordinator::StreamSource;
+use crate::error::Error;
+use crate::prng::Prng32;
 use crate::runtime::executor::TileExecutor;
 use crate::runtime::TileState;
 
@@ -50,46 +52,17 @@ fn pair_hit(a: u32, b: u32) -> f64 {
     }
 }
 
-/// Native multi-threaded run using the state-sharing batch engine — the
-/// CPU port measured in Fig. 7. Each thread owns a group of streams.
-pub fn run_native(threads: usize, draws: u64, seed: u64) -> Result<AppRun> {
-    const P: usize = 64;
-    const ROWS: usize = 1024;
+/// Engine-agnostic Monte-Carlo run over any [`StreamSource`]: one
+/// consumer thread per state-sharing group draining synchronized blocks
+/// (the shared `source_pairs_sum` driver). Hit counts are exact in f64 and
+/// summed in group order, so the result is deterministic for a given
+/// `(root_seed, n_groups)` — and identical across engines, since every
+/// engine serves the same bits.
+pub fn run(source: &dyn StreamSource, draws: u64) -> Result<AppRun, Error> {
     let t0 = Instant::now();
-    let hits = super::parallel_sum(threads, draws, |w, n| {
-        let mut batch =
-            ThunderingBatch::new(crate::prng::splitmix64(seed ^ w as u64), P, (w * P) as u64);
-        let mut buf = vec![0u32; ROWS * P];
-        let mut hits = 0f64;
-        let mut remaining = n;
-        while remaining > 0 {
-            batch.fill_rows(ROWS, &mut buf);
-            let draws_here = (buf.len() / 2).min(remaining as usize);
-            for pair in buf.chunks_exact(2).take(draws_here) {
-                hits += pair_hit(pair[0], pair[1]);
-            }
-            remaining -= draws_here as u64;
-        }
-        hits
-    })?;
+    let hits = super::source_pairs_sum(source, draws, pair_hit)?;
     Ok(AppRun {
-        engine: "native",
-        draws,
-        result: 4.0 * hits / draws as f64,
-        seconds: t0.elapsed().as_secs_f64(),
-    })
-}
-
-/// Sharded-engine run: one state-sharing group per consumer thread,
-/// served through the `ParallelCoordinator`'s batched block API while the
-/// shard threads prefetch (see `super::sharded_pairs_sum`). Hit counts
-/// are exact in f64 and summed in group order, so the result is
-/// deterministic for a given `(groups, seed)`.
-pub fn run_sharded(groups: usize, draws: u64, seed: u64) -> Result<AppRun> {
-    let t0 = Instant::now();
-    let hits = super::sharded_pairs_sum(groups, draws, seed, pair_hit)?;
-    Ok(AppRun {
-        engine: "sharded",
+        engine: source.engine_kind(),
         draws,
         result: 4.0 * hits / draws as f64,
         seconds: t0.elapsed().as_secs_f64(),
@@ -119,11 +92,44 @@ pub fn run_scalar(gen: &mut dyn Prng32, draws: u64) -> AppRun {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{Engine, EngineBuilder};
+
+    fn source(engine: Engine, groups: usize, seed: u64) -> Box<dyn StreamSource> {
+        EngineBuilder::new(groups as u64 * 64)
+            .engine(engine)
+            .root_seed(seed)
+            .build()
+            .unwrap()
+    }
 
     #[test]
-    fn native_estimates_pi() {
-        let run = run_native(2, 400_000, 42).unwrap();
+    fn native_run_estimates_pi() {
+        let run = run(&*source(Engine::Native, 2, 42), 400_000).unwrap();
+        assert_eq!(run.engine, "native");
         assert!((run.result - std::f64::consts::PI).abs() < 0.02, "{}", run.result);
+    }
+
+    #[test]
+    fn sharded_run_estimates_pi() {
+        let run = run(&*source(Engine::Sharded, 2, 42), 400_000).unwrap();
+        assert_eq!(run.engine, "sharded");
+        assert!((run.result - std::f64::consts::PI).abs() < 0.02, "{}", run.result);
+    }
+
+    #[test]
+    fn engines_agree_bit_for_bit() {
+        // Same streams, same fold order ⇒ the engine-agnostic driver
+        // must produce the *identical* estimate on both engines.
+        let a = run(&*source(Engine::Native, 3, 9), 150_000).unwrap();
+        let b = run(&*source(Engine::Sharded, 3, 9), 150_000).unwrap();
+        assert_eq!(a.result, b.result);
+    }
+
+    #[test]
+    fn deterministic_given_source_config() {
+        let a = run(&*source(Engine::Sharded, 3, 9), 150_000).unwrap();
+        let b = run(&*source(Engine::Sharded, 3, 9), 150_000).unwrap();
+        assert_eq!(a.result, b.result);
     }
 
     #[test]
@@ -131,25 +137,5 @@ mod tests {
         let mut g = crate::prng::ThunderingStream::new(7, 0);
         let run = run_scalar(&mut g, 200_000);
         assert!((run.result - std::f64::consts::PI).abs() < 0.03, "{}", run.result);
-    }
-
-    #[test]
-    fn native_deterministic_given_seed_and_threads() {
-        let a = run_native(3, 100_000, 9).unwrap();
-        let b = run_native(3, 100_000, 9).unwrap();
-        assert_eq!(a.result, b.result);
-    }
-
-    #[test]
-    fn sharded_estimates_pi() {
-        let run = run_sharded(2, 400_000, 42).unwrap();
-        assert!((run.result - std::f64::consts::PI).abs() < 0.02, "{}", run.result);
-    }
-
-    #[test]
-    fn sharded_deterministic_given_groups_and_seed() {
-        let a = run_sharded(3, 150_000, 9).unwrap();
-        let b = run_sharded(3, 150_000, 9).unwrap();
-        assert_eq!(a.result, b.result);
     }
 }

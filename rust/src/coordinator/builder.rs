@@ -1,0 +1,275 @@
+//! One construction path for every engine: [`EngineBuilder`].
+//!
+//! The builder subsumes the former per-engine `Config`/`ShardedConfig`
+//! structs: every knob of every engine lives here, validation happens
+//! once in [`EngineBuilder::build`], and the result is a boxed
+//! [`StreamSource`] so application code never names an engine type.
+
+use std::sync::Arc;
+
+use crate::coordinator::registry::StreamRegistry;
+use crate::coordinator::source::StreamSource;
+use crate::coordinator::{Coordinator, ParallelCoordinator};
+use crate::error::Error;
+
+/// Which machinery generates tiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-Rust engine generating inline on the faulting client thread
+    /// (no worker threads, no artifacts). Deterministic baseline.
+    Native,
+    /// Multi-core engine: one prefetching worker shard per core, bounded
+    /// per-group tile queues (double buffering). The serving default.
+    Sharded,
+    /// AOT Pallas tiles on the PJRT CPU client (requires `--features
+    /// xla` plus `make artifacts`). The artifact is chosen per group
+    /// width from the manifest in `artifacts_dir`.
+    Pjrt {
+        /// Directory holding `manifest.json` and the HLO artifacts.
+        artifacts_dir: String,
+    },
+}
+
+/// Builder for every generation engine, returning a boxed
+/// [`StreamSource`].
+///
+/// Defaults: native engine, 64-wide groups, 1024-row tiles, a 2¹⁶-row
+/// lag window, prefetch depth 2, auto shard count, queue depth 4, root
+/// seed 42. The determinism contract is part of the configuration:
+/// group `g` is seeded `splitmix64(root_seed ^ g)`, so `(root_seed,
+/// group_width)` fully determine every stream's bits on every engine.
+///
+/// ```
+/// use thundering::{Engine, EngineBuilder, StreamSource};
+///
+/// let source = EngineBuilder::new(128)
+///     .engine(Engine::Sharded)
+///     .lag_window(1 << 16)
+///     .prefetch_depth(2)
+///     .build()
+///     .unwrap();
+/// let mut buf = [0u32; 8];
+/// source.fetch(7, &mut buf).unwrap();
+/// assert_eq!(source.n_streams(), 128);
+/// assert_eq!(source.engine_kind(), "sharded");
+/// ```
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    pub(crate) n_streams: u64,
+    pub(crate) engine: Engine,
+    pub(crate) group_width: usize,
+    pub(crate) rows_per_tile: usize,
+    pub(crate) lag_window: u64,
+    pub(crate) prefetch_depth: usize,
+    pub(crate) shards: usize,
+    pub(crate) queue_depth: usize,
+    pub(crate) root_seed: u64,
+}
+
+impl EngineBuilder {
+    /// A builder serving `n_streams` streams (must end up a positive
+    /// multiple of the group width).
+    pub fn new(n_streams: u64) -> Self {
+        Self {
+            n_streams,
+            engine: Engine::Native,
+            group_width: 64,
+            rows_per_tile: 1024,
+            lag_window: 1 << 16,
+            prefetch_depth: 2,
+            shards: 0,
+            queue_depth: 4,
+            root_seed: 42,
+        }
+    }
+
+    /// Select the generation engine (default [`Engine::Native`]).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Streams per state-sharing group — the paper's fan-out `p`
+    /// (default 64; for PJRT it must match an artifact width).
+    pub fn group_width(mut self, width: usize) -> Self {
+        self.group_width = width;
+        self
+    }
+
+    /// Rows generated per tile execution (default 1024).
+    pub fn rows_per_tile(mut self, rows: usize) -> Self {
+        self.rows_per_tile = rows;
+        self
+    }
+
+    /// Max allowed (fastest − slowest) lane spread within a group, in
+    /// rows (default 2¹⁶) — the service's backpressure bound. Must be at
+    /// least one tile of rows.
+    pub fn lag_window(mut self, rows: u64) -> Self {
+        self.lag_window = rows;
+        self
+    }
+
+    /// Tiles buffered ahead per group by the sharded engine (default 2 =
+    /// classic double buffering).
+    pub fn prefetch_depth(mut self, tiles: usize) -> Self {
+        self.prefetch_depth = tiles;
+        self
+    }
+
+    /// Worker shards for the sharded engine; 0 (default) = one per
+    /// available core, capped at the group count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Device-queue depth for the PJRT engine (backpressure bound for
+    /// in-flight tiles; default 4).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// Root seed; group `g` is seeded `splitmix64(root_seed ^ g)`
+    /// (default 42).
+    pub fn root_seed(mut self, seed: u64) -> Self {
+        self.root_seed = seed;
+        self
+    }
+
+    fn validate(&self) -> Result<(), Error> {
+        let fail = |msg: String| Err(Error::InvalidConfig(msg));
+        if self.n_streams == 0 {
+            return fail("n_streams must be > 0".into());
+        }
+        if self.group_width == 0 {
+            return fail("group_width must be > 0".into());
+        }
+        if self.rows_per_tile == 0 {
+            return fail("rows_per_tile must be > 0".into());
+        }
+        if self.n_streams % self.group_width as u64 != 0 {
+            return fail(format!(
+                "n_streams ({}) must be a multiple of group_width ({})",
+                self.n_streams, self.group_width
+            ));
+        }
+        if self.lag_window < self.rows_per_tile as u64 {
+            return fail(format!(
+                "lag_window ({}) must be at least one tile of rows ({})",
+                self.lag_window, self.rows_per_tile
+            ));
+        }
+        if self.prefetch_depth == 0 {
+            return fail("prefetch_depth must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return fail("queue_depth must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Register this builder's streams — the shared construction step of
+    /// both engines. The registry is immutable after this.
+    pub(crate) fn build_registry(&self) -> Result<StreamRegistry, Error> {
+        let mut registry = StreamRegistry::new();
+        registry
+            .register(self.n_streams)
+            .map_err(|e| Error::InvalidConfig(format!("{e:#}")))?;
+        Ok(registry)
+    }
+
+    /// Validate and construct the configured engine as a boxed
+    /// [`StreamSource`].
+    pub fn build(self) -> Result<Box<dyn StreamSource>, Error> {
+        self.validate()?;
+        Ok(match self.engine {
+            Engine::Sharded => Box::new(ParallelCoordinator::from_builder(&self)?),
+            Engine::Native | Engine::Pjrt { .. } => {
+                Box::new(Coordinator::from_builder(&self)?)
+            }
+        })
+    }
+
+    /// Like [`Self::build`], but shared: `Arc<dyn StreamSource>` is what
+    /// [`StreamHandle`](super::StreamHandle)s clone.
+    pub fn build_arc(self) -> Result<Arc<dyn StreamSource>, Error> {
+        self.build().map(Arc::from)
+    }
+
+    /// Typed construction of the inline-generation engine (native or
+    /// PJRT per [`Self::engine`]) for callers that need
+    /// [`Coordinator`]-specific accessors (e.g. the resolved artifact).
+    /// Fails on [`Engine::Sharded`].
+    pub fn build_coordinator(self) -> Result<Coordinator, Error> {
+        self.validate()?;
+        if matches!(self.engine, Engine::Sharded) {
+            return Err(Error::InvalidConfig(
+                "Engine::Sharded builds a ParallelCoordinator; use build() or build_sharded()"
+                    .into(),
+            ));
+        }
+        Coordinator::from_builder(&self)
+    }
+
+    /// Typed construction of the sharded engine for callers that need
+    /// [`ParallelCoordinator`]-specific accessors (e.g. the shard
+    /// count). Requires [`Engine::Sharded`] — silently ignoring a
+    /// configured PJRT/native engine would measure the wrong thing.
+    pub fn build_sharded(self) -> Result<ParallelCoordinator, Error> {
+        self.validate()?;
+        if !matches!(self.engine, Engine::Sharded) {
+            return Err(Error::InvalidConfig(
+                "build_sharded() requires engine(Engine::Sharded); \
+                 use build() or build_coordinator() for other engines"
+                    .into(),
+            ));
+        }
+        ParallelCoordinator::from_builder(&self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(EngineBuilder::new(0).build().is_err());
+        assert!(EngineBuilder::new(64).group_width(0).build().is_err());
+        assert!(EngineBuilder::new(64).rows_per_tile(0).build().is_err());
+        assert!(EngineBuilder::new(63).build().is_err());
+        assert!(EngineBuilder::new(64).rows_per_tile(64).lag_window(63).build().is_err());
+        assert!(EngineBuilder::new(64).prefetch_depth(0).build().is_err());
+        assert!(EngineBuilder::new(64).queue_depth(0).build().is_err());
+    }
+
+    #[test]
+    fn builds_both_engines() {
+        for engine in [Engine::Native, Engine::Sharded] {
+            let source = EngineBuilder::new(8)
+                .engine(engine)
+                .group_width(4)
+                .rows_per_tile(8)
+                .build()
+                .unwrap();
+            assert_eq!(source.n_streams(), 8);
+            assert_eq!(source.n_groups(), 2);
+            assert_eq!(source.group_width(), 4);
+        }
+    }
+
+    #[test]
+    fn typed_builders_enforce_engine() {
+        assert!(EngineBuilder::new(64).engine(Engine::Sharded).build_coordinator().is_err());
+        assert!(EngineBuilder::new(64).build_sharded().is_err()); // default = Native
+        let pc = EngineBuilder::new(8)
+            .engine(Engine::Sharded)
+            .group_width(4)
+            .rows_per_tile(8)
+            .build_sharded()
+            .unwrap();
+        assert!(pc.n_shards() >= 1);
+    }
+}

@@ -1,0 +1,432 @@
+//! The shared consumer-side drain core.
+//!
+//! Both engines buffer generated tiles on the consumer side of a group
+//! and meter them out under the same contract: lanes may be consumed at
+//! different rates inside a bounded **lag window**, rows stay buffered
+//! until every lane has passed them, and a fetch that would stretch the
+//! fastest−slowest spread beyond the window is rejected atomically.
+//!
+//! Until this module existed, that bookkeeping (lag check, tile
+//! buffering, strided column copy, prune) was implemented twice —
+//! [`StreamGroup`](super::group::StreamGroup) and
+//! [`ParallelCoordinator`](super::sharded::ParallelCoordinator) — and
+//! kept behaviorally identical only by the cross-engine tests. Now both
+//! engines drain through one [`DrainState`], parameterized by a
+//! [`TileProvider`]: the single coordinator generates tiles *inline* on
+//! the faulting thread, the sharded engine *pops* tiles its worker
+//! shards prefetched. The bit-identical replay contract between the
+//! engines is structural, not test-enforced.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::metrics::Metrics;
+use crate::error::Error;
+
+/// Supplies generated tiles to a [`DrainState`], in sequence order.
+///
+/// A tile is one `rows_per_tile × width` row-major buffer. The provider
+/// owns generation (or the handoff from whoever generates) and buffer
+/// recycling; the drain owns everything between a tile arriving and its
+/// rows being delivered to clients.
+pub trait TileProvider {
+    /// Produce the next tile of the group's sequence.
+    fn next_tile(&mut self, metrics: &Metrics) -> Result<Vec<u32>, Error>;
+
+    /// Fill `out` — a whole number of tiles, row-major — with the next
+    /// rows of the sequence. Inline generators write straight into `out`
+    /// (no intermediate tile buffer); queue-backed providers pop and copy.
+    ///
+    /// On failure, returns the error together with the number of whole
+    /// tiles already generated into the prefix of `out` — the provider's
+    /// sequence has advanced past them, so the caller must keep those
+    /// rows (the drain re-buffers them) or they would be lost.
+    fn fill_block(
+        &mut self,
+        rows: usize,
+        out: &mut [u32],
+        metrics: &Metrics,
+    ) -> Result<(), (usize, Error)>;
+
+    /// Take back a fully consumed tile buffer for reuse.
+    fn recycle(&mut self, buf: Vec<u32>);
+}
+
+/// Consumer-side state of one stream group: buffered tiles plus per-lane
+/// cursors, advancing under the lag-window contract.
+///
+/// All mutating calls take the [`TileProvider`] that feeds this group;
+/// the caller is responsible for serializing access (both engines hold a
+/// per-group mutex around the drain).
+pub struct DrainState {
+    width: usize,
+    rows_per_tile: usize,
+    lag_window: u64,
+    /// Absolute row index of the first buffered row.
+    base_row: u64,
+    /// Tiles obtained from the provider and not yet fully consumed.
+    tiles: VecDeque<Vec<u32>>,
+    /// Per-lane absolute row cursor (next row to deliver).
+    cursors: Vec<u64>,
+}
+
+impl DrainState {
+    /// A drain for a `width`-lane group consuming `rows_per_tile`-row
+    /// tiles under a `lag_window`-row spread bound.
+    pub fn new(width: usize, rows_per_tile: usize, lag_window: u64) -> Self {
+        Self {
+            width,
+            rows_per_tile,
+            lag_window,
+            base_row: 0,
+            tiles: VecDeque::new(),
+            cursors: vec![0; width],
+        }
+    }
+
+    /// Lanes in the group.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Rows currently buffered.
+    pub fn buffered_rows(&self) -> u64 {
+        self.tiles.len() as u64 * self.rows_per_tile as u64
+    }
+
+    /// Highest buffered absolute row (exclusive).
+    fn generated_through(&self) -> u64 {
+        self.base_row + self.buffered_rows()
+    }
+
+    /// Fetch `out.len()` numbers from `lane`, advancing its cursor.
+    /// Pulls tiles from `provider` on demand; prunes (and recycles) tiles
+    /// every lane has passed. Lag-window rejections consume nothing.
+    pub fn fetch_lane(
+        &mut self,
+        lane: usize,
+        out: &mut [u32],
+        provider: &mut dyn TileProvider,
+        metrics: &Metrics,
+    ) -> Result<(), Error> {
+        assert!(lane < self.width);
+        let n = out.len() as u64;
+        let target = self.cursors[lane] + n;
+
+        // Backpressure: would this lane run too far ahead of the slowest?
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        if target - min_cursor > self.lag_window {
+            metrics.add(&metrics.lag_rejections, 1);
+            return Err(Error::LagWindowExceeded {
+                lead: target - min_cursor,
+                window: self.lag_window,
+            });
+        }
+
+        // Buffer tiles until the target row is covered.
+        let mut missed = false;
+        while self.generated_through() < target {
+            missed = true;
+            let tile = provider.next_tile(metrics)?;
+            self.tiles.push_back(tile);
+        }
+        metrics.add(if missed { &metrics.fetch_misses } else { &metrics.fetch_hits }, 1);
+
+        // Copy the column slice, one tile-resident strided run at a time
+        // (hoists the div/mod out of the per-element loop: ~3x on the
+        // fetch path, EXPERIMENTS.md §Perf L3).
+        let rpt = self.rows_per_tile;
+        let width = self.width;
+        let mut cursor = self.cursors[lane];
+        let mut written = 0usize;
+        while written < out.len() {
+            let rel = (cursor - self.base_row) as usize;
+            let (t, r0) = (rel / rpt, rel % rpt);
+            let take = (rpt - r0).min(out.len() - written);
+            let tile = &self.tiles[t];
+            let mut idx = r0 * width + lane;
+            for slot in out[written..written + take].iter_mut() {
+                *slot = tile[idx];
+                idx += width;
+            }
+            written += take;
+            cursor += take as u64;
+        }
+        self.cursors[lane] = cursor;
+        metrics.add(&metrics.numbers_delivered, n);
+
+        // Prune tiles every lane has fully consumed; recycle the buffers.
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        while !self.tiles.is_empty() && self.base_row + rpt as u64 <= min_cursor {
+            let buf = self.tiles.pop_front().unwrap();
+            self.base_row += rpt as u64;
+            provider.recycle(buf);
+        }
+        Ok(())
+    }
+
+    /// Does the tile-streaming fast path apply to a `rows`-row block
+    /// fetch? (Uniform cursors on a tile boundary with nothing buffered
+    /// and whole tiles requested: tiles can be handed straight through.)
+    pub fn fast_block_ready(&self, rows: usize) -> bool {
+        let uniform = self.cursors.iter().all(|&c| c == self.cursors[0]);
+        uniform && self.tiles.is_empty() && rows % self.rows_per_tile == 0
+    }
+
+    /// Would a `rows`-row block fetch violate the lag window? The fast
+    /// tile-streaming path advances all lanes uniformly from a clean
+    /// boundary and carries no lag constraint. Pure check — the caller
+    /// owns the `lag_rejections` metric.
+    pub fn block_lag_check(&self, rows: usize) -> Result<(), Error> {
+        if self.fast_block_ready(rows) {
+            return Ok(());
+        }
+        let min_cursor = *self.cursors.iter().min().unwrap();
+        let max_target = *self.cursors.iter().max().unwrap() + rows as u64;
+        if max_target - min_cursor > self.lag_window {
+            return Err(Error::LagWindowExceeded {
+                lead: max_target - min_cursor,
+                window: self.lag_window,
+            });
+        }
+        Ok(())
+    }
+
+    /// Advance every lane together past `rows` rows that were delivered
+    /// outside the buffer (the fast path: tiles went straight to the
+    /// caller). Only valid when [`Self::fast_block_ready`] held.
+    pub fn advance_uniform(&mut self, rows: usize, metrics: &Metrics) {
+        debug_assert!(self.tiles.is_empty());
+        for c in self.cursors.iter_mut() {
+            *c += rows as u64;
+        }
+        self.base_row += rows as u64;
+        metrics.add(&metrics.numbers_delivered, (rows * self.width) as u64);
+    }
+
+    /// Fetch one `rows × width` row-major block for ALL lanes, advancing
+    /// every cursor together — the uniform-consumption fast path used by
+    /// the Monte-Carlo apps. All-or-nothing under the lag window: it is
+    /// checked once for the whole block ((fastest + rows) − slowest), so
+    /// a rejection never leaves some lanes advanced with rows silently
+    /// dropped, and the per-lane checks inside [`Self::fetch_lane`] are
+    /// unreachable for this call.
+    ///
+    /// A provider failure ([`Error::Backend`]) is a different class: the
+    /// fast path re-buffers whatever tiles were generated (no rows
+    /// lost), but the misaligned slow path can leave earlier lanes
+    /// advanced. In practice a backend error (PJRT device thread gone,
+    /// artifact mismatch) is persistent — every later call fails too —
+    /// so treat it as fatal for replay continuity. The infallible
+    /// providers (native batch, shard queues) never hit this.
+    pub fn fetch_block(
+        &mut self,
+        rows: usize,
+        provider: &mut dyn TileProvider,
+        metrics: &Metrics,
+    ) -> Result<Vec<u32>, Error> {
+        // Fast path: hand tiles straight through (the single-tile case —
+        // the Monte-Carlo apps' shape — is zero-copy).
+        if self.fast_block_ready(rows) {
+            let out = if rows == self.rows_per_tile {
+                provider.next_tile(metrics)?
+            } else {
+                let mut out = vec![0u32; rows * self.width];
+                if let Err((done_tiles, e)) = provider.fill_block(rows, &mut out, metrics) {
+                    // The provider's sequence advanced past `done_tiles`
+                    // tiles before failing; re-buffer them (cursors
+                    // unchanged) so no rows are lost — the next fetch
+                    // serves them from the buffer.
+                    let tile_len = self.rows_per_tile * self.width;
+                    for t in 0..done_tiles {
+                        self.tiles.push_back(out[t * tile_len..(t + 1) * tile_len].to_vec());
+                    }
+                    return Err(e);
+                }
+                out
+            };
+            self.advance_uniform(rows, metrics);
+            return Ok(out);
+        }
+
+        // Slow path: per-lane fetch into a transposed buffer, after the
+        // atomic whole-block lag check.
+        if let Err(e) = self.block_lag_check(rows) {
+            metrics.add(&metrics.lag_rejections, 1);
+            return Err(e);
+        }
+        let mut out = vec![0u32; rows * self.width];
+        let mut lane_buf = vec![0u32; rows];
+        for lane in 0..self.width {
+            self.fetch_lane(lane, &mut lane_buf, provider, metrics)?;
+            for (r, &v) in lane_buf.iter().enumerate() {
+                out[r * self.width + lane] = v;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic provider: tile `t` holds `t*rpt*width ..` counting
+    /// up, so absolute row `r`, lane `l` is `r*width + l`. Tracks how many
+    /// buffers came back for recycling.
+    struct SeqTiles {
+        width: usize,
+        rows_per_tile: usize,
+        next: u32,
+        recycled: usize,
+    }
+
+    impl TileProvider for SeqTiles {
+        fn next_tile(&mut self, _m: &Metrics) -> Result<Vec<u32>, Error> {
+            let len = self.rows_per_tile * self.width;
+            let tile: Vec<u32> = (self.next..self.next + len as u32).collect();
+            self.next += len as u32;
+            Ok(tile)
+        }
+
+        fn fill_block(
+            &mut self,
+            _rows: usize,
+            out: &mut [u32],
+            m: &Metrics,
+        ) -> Result<(), (usize, Error)> {
+            for (t, chunk) in out.chunks_mut(self.rows_per_tile * self.width).enumerate() {
+                let tile = self.next_tile(m).map_err(|e| (t, e))?;
+                chunk.copy_from_slice(&tile);
+            }
+            Ok(())
+        }
+
+        fn recycle(&mut self, _buf: Vec<u32>) {
+            self.recycled += 1;
+        }
+    }
+
+    fn seq(width: usize, rows_per_tile: usize) -> SeqTiles {
+        SeqTiles { width, rows_per_tile, next: 0, recycled: 0 }
+    }
+
+    #[test]
+    fn lane_fetch_walks_the_column() {
+        let m = Metrics::default();
+        let mut p = seq(4, 8);
+        let mut d = DrainState::new(4, 8, 1024);
+        let mut buf = vec![0u32; 20];
+        d.fetch_lane(2, &mut buf, &mut p, &m).unwrap();
+        let expect: Vec<u32> = (0..20).map(|r| r * 4 + 2).collect();
+        assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn prune_recycles_only_fully_passed_tiles() {
+        let m = Metrics::default();
+        let mut p = seq(2, 4);
+        let mut d = DrainState::new(2, 4, 64);
+        let mut buf = vec![0u32; 10];
+        d.fetch_lane(0, &mut buf, &mut p, &m).unwrap();
+        assert_eq!(p.recycled, 0); // lane 1 still at row 0
+        d.fetch_lane(1, &mut buf, &mut p, &m).unwrap();
+        assert_eq!(p.recycled, 2); // rows 0..8 passed by both lanes
+        assert!(d.buffered_rows() <= 4);
+    }
+
+    #[test]
+    fn lag_rejection_consumes_nothing() {
+        let m = Metrics::default();
+        let mut p = seq(2, 4);
+        let mut d = DrainState::new(2, 4, 8);
+        let mut buf = vec![0u32; 8];
+        d.fetch_lane(0, &mut buf, &mut p, &m).unwrap();
+        let mut one = vec![0u32; 1];
+        let err = d.fetch_lane(0, &mut one, &mut p, &m).unwrap_err();
+        assert_eq!(err, Error::LagWindowExceeded { lead: 9, window: 8 });
+        // Lane 1 still replays from the origin.
+        let mut two = vec![0u32; 2];
+        d.fetch_lane(1, &mut two, &mut p, &m).unwrap();
+        assert_eq!(two, vec![1, 3]);
+        assert_eq!(m.snapshot().lag_rejections, 1);
+    }
+
+    #[test]
+    fn block_fast_path_is_tile_passthrough() {
+        let m = Metrics::default();
+        let mut p = seq(2, 4);
+        let mut d = DrainState::new(2, 4, 1024);
+        assert!(d.fast_block_ready(8));
+        let block = d.fetch_block(8, &mut p, &m).unwrap();
+        assert_eq!(block, (0..16).collect::<Vec<u32>>());
+        // Misaligned rows fall off the fast path.
+        assert!(!d.fast_block_ready(3));
+    }
+
+    /// Like [`SeqTiles`] but the backend dies after `ok_tiles` tiles —
+    /// having already advanced its sequence for the tiles that succeeded.
+    struct FlakyTiles {
+        inner: SeqTiles,
+        ok_tiles: usize,
+    }
+
+    impl TileProvider for FlakyTiles {
+        fn next_tile(&mut self, m: &Metrics) -> Result<Vec<u32>, Error> {
+            if self.ok_tiles == 0 {
+                return Err(Error::Backend("flaky".into()));
+            }
+            self.ok_tiles -= 1;
+            self.inner.next_tile(m)
+        }
+
+        fn fill_block(
+            &mut self,
+            _rows: usize,
+            out: &mut [u32],
+            m: &Metrics,
+        ) -> Result<(), (usize, Error)> {
+            let tile_len = self.inner.rows_per_tile * self.inner.width;
+            for (t, chunk) in out.chunks_mut(tile_len).enumerate() {
+                let tile = self.next_tile(m).map_err(|e| (t, e))?;
+                chunk.copy_from_slice(&tile);
+            }
+            Ok(())
+        }
+
+        fn recycle(&mut self, buf: Vec<u32>) {
+            self.inner.recycle(buf);
+        }
+    }
+
+    #[test]
+    fn mid_block_backend_failure_loses_no_rows() {
+        // 3-tile block; the backend dies after 2 tiles. The block fetch
+        // fails, but the 2 generated tiles must stay buffered: the next
+        // fetch serves rows 0.. — not rows 8.. with 2 tiles vanished.
+        let m = Metrics::default();
+        let mut p = FlakyTiles { inner: seq(2, 4), ok_tiles: 2 };
+        let mut d = DrainState::new(2, 4, 1024);
+        let err = d.fetch_block(12, &mut p, &m).unwrap_err();
+        assert_eq!(err, Error::Backend("flaky".into()));
+        assert_eq!(d.buffered_rows(), 8, "generated tiles must be re-buffered");
+        let mut buf = vec![0u32; 8];
+        d.fetch_lane(0, &mut buf, &mut p, &m).unwrap();
+        let expect: Vec<u32> = (0..8).map(|r| r * 2).collect();
+        assert_eq!(buf, expect, "lane 0 must replay from row 0");
+    }
+
+    #[test]
+    fn block_after_partial_fetch_transposes_consistently() {
+        let m = Metrics::default();
+        let mut p = seq(2, 4);
+        let mut d = DrainState::new(2, 4, 1024);
+        let mut buf = vec![0u32; 3];
+        d.fetch_lane(0, &mut buf, &mut p, &m).unwrap();
+        let block = d.fetch_block(4, &mut p, &m).unwrap();
+        // Lane 0 continues from row 3, lane 1 from row 0.
+        for r in 0..4u32 {
+            assert_eq!(block[(r * 2) as usize], (r + 3) * 2);
+            assert_eq!(block[(r * 2 + 1) as usize], r * 2 + 1);
+        }
+    }
+}

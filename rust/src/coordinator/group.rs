@@ -6,15 +6,22 @@
 //! streams at different rates within a bounded **lag window**: generated
 //! rows are buffered until every stream has passed them. A fetch that
 //! would stretch the window beyond its bound is rejected with
-//! [`FetchError::LagWindowExceeded`] — the coordinator's backpressure
-//! point (the alternative is unbounded buffering).
+//! [`Error::LagWindowExceeded`] — the coordinator's backpressure point
+//! (the alternative is unbounded buffering).
+//!
+//! The buffering/lag/prune bookkeeping itself lives in the engine-shared
+//! [`DrainState`](super::drain::DrainState); this module contributes the
+//! *generate-inline* [`TileProvider`]: tiles are produced on the
+//! faulting client thread by the group's [`GroupBackend`] (native batch
+//! engine or AOT PJRT tiles).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::drain::{DrainState, TileProvider};
 use crate::coordinator::metrics::Metrics;
+use crate::error::Error;
 use crate::prng::ThunderingBatch;
 use crate::runtime::executor::TileExecutor;
 use crate::runtime::TileState;
@@ -25,7 +32,14 @@ pub enum GroupBackend {
     /// baselines, and as a fallback).
     Native(ThunderingBatch),
     /// AOT tile executable on the PJRT device thread.
-    Pjrt { executor: TileExecutor, artifact: String, state: TileState },
+    Pjrt {
+        /// Handle on the device thread owning the PJRT client.
+        executor: TileExecutor,
+        /// Artifact name resolved for this group shape.
+        artifact: String,
+        /// Device-side generator state mirror.
+        state: TileState,
+    },
 }
 
 impl GroupBackend {
@@ -76,47 +90,79 @@ impl GroupBackend {
     }
 }
 
-/// Fetch failure modes.
-#[derive(Debug, PartialEq, Eq)]
-pub enum FetchError {
-    /// The requested advance would exceed the group's lag window.
-    LagWindowExceeded { lead: u64, window: u64 },
-    /// Backend failure (artifact error, device thread gone).
-    Backend(String),
-}
-
-impl std::fmt::Display for FetchError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            FetchError::LagWindowExceeded { lead, window } => {
-                write!(f, "stream lead {lead} exceeds lag window {window}")
-            }
-            FetchError::Backend(e) => write!(f, "backend: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for FetchError {}
-
-/// Buffered, lockstep-advancing stream group.
-pub struct StreamGroup {
-    pub first_stream: u64,
+/// The generate-inline [`TileProvider`]: tiles are produced by the
+/// backend on the calling thread, with a small local buffer pool fed by
+/// the drain's prune.
+struct InlineTiles {
+    backend: GroupBackend,
     width: usize,
     rows_per_tile: usize,
-    backend: GroupBackend,
-    /// Absolute row index of the first buffered row.
-    base_row: u64,
-    /// Buffered tiles, each `rows_per_tile * width` row-major.
-    tiles: VecDeque<Vec<u32>>,
-    /// Per-stream absolute row cursor (next row to deliver).
-    cursors: Vec<u64>,
-    /// Max allowed (max_cursor − min_cursor).
-    lag_window: u64,
     /// Recycled tile buffers (pruned tiles return here; generation reuses).
     pool: Vec<Vec<u32>>,
 }
 
+impl InlineTiles {
+    fn take_buffer(&mut self) -> Vec<u32> {
+        self.pool
+            .pop()
+            .unwrap_or_else(|| vec![0u32; self.rows_per_tile * self.width])
+    }
+
+    fn generate(&mut self, rows: usize, out: &mut [u32], metrics: &Metrics) -> Result<(), Error> {
+        self.backend
+            .generate_into(rows, out, metrics)
+            .map_err(|e| Error::Backend(format!("{e:#}")))?;
+        metrics.add(&metrics.tiles_executed, 1);
+        metrics.add(&metrics.rows_generated, rows as u64);
+        Ok(())
+    }
+}
+
+impl TileProvider for InlineTiles {
+    fn next_tile(&mut self, metrics: &Metrics) -> Result<Vec<u32>, Error> {
+        let mut tile = self.take_buffer();
+        self.generate(self.rows_per_tile, &mut tile, metrics)?;
+        Ok(tile)
+    }
+
+    fn fill_block(
+        &mut self,
+        rows: usize,
+        out: &mut [u32],
+        metrics: &Metrics,
+    ) -> Result<(), (usize, Error)> {
+        debug_assert_eq!(rows % self.rows_per_tile, 0);
+        debug_assert_eq!(out.len(), rows * self.width);
+        // Straight into the caller's buffer — no intermediate tile. A
+        // mid-block backend failure reports how many tiles landed: the
+        // backend state has advanced past them, so the drain re-buffers
+        // that prefix rather than losing it.
+        let rpt = self.rows_per_tile;
+        for (t, chunk) in out.chunks_mut(rpt * self.width).enumerate() {
+            self.generate(rpt, chunk, metrics).map_err(|e| (t, e))?;
+        }
+        Ok(())
+    }
+
+    fn recycle(&mut self, buf: Vec<u32>) {
+        if self.pool.len() < 8 {
+            self.pool.push(buf);
+        }
+    }
+}
+
+/// Buffered, lockstep-advancing stream group: the shared
+/// [`DrainState`] over a generate-inline tile provider.
+pub struct StreamGroup {
+    /// Global id of lane 0.
+    pub first_stream: u64,
+    provider: InlineTiles,
+    drain: DrainState,
+}
+
 impl StreamGroup {
+    /// A group of `backend.width()` lanes starting at global stream id
+    /// `first_stream`.
     pub fn new(
         first_stream: u64,
         backend: GroupBackend,
@@ -126,158 +172,38 @@ impl StreamGroup {
         let width = backend.width();
         Self {
             first_stream,
-            width,
-            rows_per_tile,
-            backend,
-            base_row: 0,
-            tiles: VecDeque::new(),
-            cursors: vec![0; width],
-            lag_window,
-            pool: Vec::new(),
+            provider: InlineTiles { backend, width, rows_per_tile, pool: Vec::new() },
+            drain: DrainState::new(width, rows_per_tile, lag_window),
         }
     }
 
-    fn take_buffer(&mut self) -> Vec<u32> {
-        self.pool
-            .pop()
-            .unwrap_or_else(|| vec![0u32; self.rows_per_tile * self.width])
-    }
-
+    /// Lanes in the group.
     pub fn width(&self) -> usize {
-        self.width
+        self.provider.width
     }
 
     /// Rows currently buffered.
     pub fn buffered_rows(&self) -> u64 {
-        self.tiles.len() as u64 * self.rows_per_tile as u64
-    }
-
-    /// Highest generated absolute row (exclusive).
-    fn generated_through(&self) -> u64 {
-        self.base_row + self.buffered_rows()
+        self.drain.buffered_rows()
     }
 
     /// Fetch `out.len()` numbers from local stream `lane`, advancing its
     /// cursor. Generates tiles on demand; prunes rows all streams passed.
-    pub fn fetch(
-        &mut self,
-        lane: usize,
-        out: &mut [u32],
-        metrics: &Metrics,
-    ) -> std::result::Result<(), FetchError> {
-        assert!(lane < self.width);
-        let n = out.len() as u64;
-        let target = self.cursors[lane] + n;
-
-        // Backpressure: would this stream run too far ahead of the slowest?
-        let min_cursor = *self.cursors.iter().min().unwrap();
-        if target - min_cursor > self.lag_window {
-            metrics.add(&metrics.lag_rejections, 1);
-            return Err(FetchError::LagWindowExceeded {
-                lead: target - min_cursor,
-                window: self.lag_window,
-            });
-        }
-
-        // Generate until the target row is buffered.
-        let mut missed = false;
-        while self.generated_through() < target {
-            missed = true;
-            let mut tile = self.take_buffer();
-            self.backend
-                .generate_into(self.rows_per_tile, &mut tile, metrics)
-                .map_err(|e| FetchError::Backend(format!("{e:#}")))?;
-            metrics.add(&metrics.tiles_executed, 1);
-            metrics.add(&metrics.rows_generated, self.rows_per_tile as u64);
-            self.tiles.push_back(tile);
-        }
-        metrics.add(if missed { &metrics.fetch_misses } else { &metrics.fetch_hits }, 1);
-
-        // Copy the column slice, one tile-resident strided run at a time
-        // (hoists the div/mod out of the per-element loop: ~3x on the
-        // fetch path, EXPERIMENTS.md §Perf L3).
-        let mut cursor = self.cursors[lane];
-        let mut written = 0usize;
-        while written < out.len() {
-            let rel = (cursor - self.base_row) as usize;
-            let (t, r0) = (rel / self.rows_per_tile, rel % self.rows_per_tile);
-            let take = (self.rows_per_tile - r0).min(out.len() - written);
-            let tile = &self.tiles[t];
-            let mut idx = r0 * self.width + lane;
-            for slot in out[written..written + take].iter_mut() {
-                *slot = tile[idx];
-                idx += self.width;
-            }
-            written += take;
-            cursor += take as u64;
-        }
-        self.cursors[lane] = cursor;
-        metrics.add(&metrics.numbers_delivered, n);
-
-        // Prune tiles every stream has fully consumed (buffers recycle).
-        let min_cursor = *self.cursors.iter().min().unwrap();
-        while !self.tiles.is_empty() && self.base_row + self.rows_per_tile as u64 <= min_cursor {
-            let buf = self.tiles.pop_front().unwrap();
-            if self.pool.len() < 8 {
-                self.pool.push(buf);
-            }
-            self.base_row += self.rows_per_tile as u64;
-        }
-        Ok(())
+    pub fn fetch(&mut self, lane: usize, out: &mut [u32], metrics: &Metrics) -> Result<(), Error> {
+        self.drain.fetch_lane(lane, out, &mut self.provider, metrics)
     }
 
     /// Fetch one full row-block for ALL streams (the uniform-consumption
     /// fast path used by the Monte-Carlo apps): returns `rows × width`
     /// numbers row-major, advancing every cursor together.
-    pub fn fetch_block(
-        &mut self,
-        rows: usize,
-        metrics: &Metrics,
-    ) -> std::result::Result<Vec<u32>, FetchError> {
-        // Fast path: aligned, nothing buffered, uniform cursors — generate
-        // straight into the output (zero intermediate buffering).
-        let uniform = self.cursors.iter().all(|&c| c == self.cursors[0]);
-        if uniform && self.tiles.is_empty() && rows % self.rows_per_tile == 0 {
-            let mut out = vec![0u32; rows * self.width];
-            for chunk in out.chunks_mut(self.rows_per_tile * self.width) {
-                self.backend
-                    .generate_into(self.rows_per_tile, chunk, metrics)
-                    .map_err(|e| FetchError::Backend(format!("{e:#}")))?;
-                metrics.add(&metrics.tiles_executed, 1);
-                metrics.add(&metrics.rows_generated, self.rows_per_tile as u64);
-            }
-            for c in self.cursors.iter_mut() {
-                *c += rows as u64;
-            }
-            self.base_row += rows as u64;
-            metrics.add(&metrics.numbers_delivered, (rows * self.width) as u64);
-            return Ok(out);
-        }
-        // Slow path: per-lane fetch into a transposed buffer. The lag
-        // window is checked once, atomically, for the whole block
-        // ((fastest + rows) − slowest): rejecting up front means a
-        // failure never leaves some lanes advanced with their rows
-        // silently dropped, and it makes the per-lane checks inside
-        // `fetch` unreachable for this call (their lead is bounded by
-        // the lead vetted here).
-        let min_cursor = *self.cursors.iter().min().unwrap();
-        let max_target = *self.cursors.iter().max().unwrap() + rows as u64;
-        if max_target - min_cursor > self.lag_window {
-            metrics.add(&metrics.lag_rejections, 1);
-            return Err(FetchError::LagWindowExceeded {
-                lead: max_target - min_cursor,
-                window: self.lag_window,
-            });
-        }
-        let mut out = vec![0u32; rows * self.width];
-        let mut lane_buf = vec![0u32; rows];
-        for lane in 0..self.width {
-            self.fetch(lane, &mut lane_buf, metrics)?;
-            for (r, &v) in lane_buf.iter().enumerate() {
-                out[r * self.width + lane] = v;
-            }
-        }
-        Ok(out)
+    pub fn fetch_block(&mut self, rows: usize, metrics: &Metrics) -> Result<Vec<u32>, Error> {
+        self.drain.fetch_block(rows, &mut self.provider, metrics)
+    }
+
+    /// Would a `rows`-row block fetch violate the lag window? (Pure
+    /// check; used by the coordinator's all-or-nothing `fetch_many`.)
+    pub fn block_lag_check(&self, rows: usize) -> Result<(), Error> {
+        self.drain.block_lag_check(rows)
     }
 }
 
@@ -328,7 +254,7 @@ mod tests {
         g.fetch(0, &mut buf, &m).unwrap(); // lane 0 at 16, lane 1 at 0
         let mut buf2 = vec![0u32; 1];
         let err = g.fetch(0, &mut buf2, &m).unwrap_err();
-        assert!(matches!(err, FetchError::LagWindowExceeded { .. }));
+        assert!(matches!(err, Error::LagWindowExceeded { .. }));
         // Catching up lane 1 releases the window.
         let mut buf3 = vec![0u32; 16];
         g.fetch(1, &mut buf3, &m).unwrap();
@@ -382,7 +308,7 @@ mod tests {
         let mut ten = vec![0u32; 10];
         g.fetch(1, &mut ten, &m).unwrap(); // lane 1 at the window edge
         let err = g.fetch_block(1, &m).unwrap_err();
-        assert!(matches!(err, FetchError::LagWindowExceeded { .. }));
+        assert!(matches!(err, Error::LagWindowExceeded { .. }));
         // Lane 0 was not advanced by the rejected block.
         let mut five = vec![0u32; 5];
         g.fetch(0, &mut five, &m).unwrap();

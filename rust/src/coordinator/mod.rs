@@ -3,218 +3,226 @@
 //! Shape of the system (vLLM-router-like, adapted to generation):
 //!
 //! ```text
-//!  clients ──fetch(stream, n)──▶ Coordinator ──┬─ group 0 (streams 0..p)
-//!                                              ├─ group 1 (streams p..2p)
-//!                                              │    ...each: TileState +
-//!                                              │    row buffer + cursors
-//!                                              ▼
-//!                                   TileExecutor (device thread)
-//!                                     └─ PJRT CPU: AOT HLO tiles
+//!  clients ──StreamHandle / fetch(stream, n)──▶ dyn StreamSource
+//!                                                    │
+//!                              ┌─────────────────────┴───────────┐
+//!                              │ Coordinator (native | pjrt)     │
+//!                              │ ParallelCoordinator (sharded)   │
+//!                              └──┬─ group 0 (streams 0..p)      │
+//!                                 ├─ group 1 (streams p..2p)     │
+//!                                 │    ...each: shared DrainState │
+//!                                 ▼                              │
+//!                              TileProvider (inline | queue-pop) ┘
 //! ```
 //!
+//! One public surface serves every engine:
+//!
+//! * [`EngineBuilder`] constructs any engine ([`Engine::Native`],
+//!   [`Engine::Sharded`], [`Engine::Pjrt`]) behind the [`StreamSource`]
+//!   trait; [`StreamHandle`] is the recommended per-stream client.
 //! * the **registry** hands out stream identities under the paper's
 //!   constraints (even distinct `h`, non-overlapping xorshift substreams);
 //! * each **group** shares one root recurrence across `p` streams (state
-//!   sharing, Sec. 3.3) and advances in lockstep with a bounded lag window;
-//! * the **device thread** owns the PJRT client (not `Send`) and executes
-//!   tile artifacts in submission order — the daisy chain's software twin.
+//!   sharing, Sec. 3.3) and advances in lockstep with a bounded lag
+//!   window, metered by the engine-shared [`drain::DrainState`];
+//! * on PJRT, the **device thread** owns the client (not `Send`) and
+//!   executes tile artifacts in submission order — the daisy chain's
+//!   software twin.
 
+pub mod builder;
+pub mod drain;
 pub mod group;
 pub mod metrics;
 pub mod registry;
 pub mod sharded;
+pub mod source;
 
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::anyhow;
 
-pub use group::{FetchError, GroupBackend, StreamGroup};
+pub use builder::{Engine, EngineBuilder};
+pub use drain::{DrainState, TileProvider};
+pub use group::{GroupBackend, StreamGroup};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{StreamRegistry, StreamSpec};
-pub use sharded::{ParallelCoordinator, ShardedConfig};
+pub use sharded::ParallelCoordinator;
+pub use source::{StreamHandle, StreamSource};
+
+pub use crate::error::Error;
 
 use crate::prng::ThunderingBatch;
 use crate::runtime::executor::{TileExecutor, TileExecutorGuard};
 use crate::runtime::TileState;
 
-/// Which engine generates tiles.
-#[derive(Debug, Clone)]
-pub enum Engine {
-    /// Pure-Rust scalar engine (no artifacts required).
-    Native,
-    /// AOT Pallas tiles on the PJRT CPU client. The artifact is chosen per
-    /// group width from the manifest.
-    Pjrt { artifacts_dir: String },
-}
-
-/// Coordinator configuration.
-#[derive(Debug, Clone)]
-pub struct Config {
-    pub engine: Engine,
-    /// Streams per group (must match an artifact width for PJRT).
-    pub group_width: usize,
-    /// Rows generated per tile execution.
-    pub rows_per_tile: usize,
-    /// Max lead (rows) of the fastest stream over the slowest in a group.
-    pub lag_window: u64,
-    /// Device-queue depth (backpressure bound for in-flight tiles).
-    pub queue_depth: usize,
-    /// Root seed; group g is seeded with splitmix64(root_seed ^ g).
-    pub root_seed: u64,
-}
-
-impl Default for Config {
-    fn default() -> Self {
-        Self {
-            engine: Engine::Native,
-            group_width: 64,
-            rows_per_tile: 1024,
-            lag_window: 1 << 16,
-            queue_depth: 4,
-            root_seed: 42,
-        }
-    }
-}
-
-/// The MISRN coordinator service.
+/// The inline-generation MISRN coordinator (native or PJRT engine).
+/// Built via [`EngineBuilder`]; tiles are generated on whichever client
+/// thread faults on an empty buffer, under that group's mutex.
 pub struct Coordinator {
-    config: Config,
-    registry: Mutex<StreamRegistry>,
+    group_width: usize,
+    /// Immutable after construction — reads need no lock.
+    registry: StreamRegistry,
     groups: Vec<Mutex<StreamGroup>>,
     metrics: Metrics,
     executor: Option<TileExecutor>,
     _executor_guard: Option<TileExecutorGuard>,
     /// Artifact name used for PJRT groups (resolved once).
     artifact: Option<String>,
+    engine_kind: &'static str,
 }
 
 impl Coordinator {
-    /// Create a coordinator serving `n_streams` streams.
-    pub fn new(config: Config, n_streams: u64) -> Result<Self> {
-        anyhow::ensure!(config.group_width > 0 && config.rows_per_tile > 0);
-        anyhow::ensure!(
-            n_streams % config.group_width as u64 == 0,
-            "n_streams must be a multiple of group_width"
-        );
-
-        let (executor, guard, artifact) = match &config.engine {
-            Engine::Native => (None, None, None),
+    /// Construct from a validated [`EngineBuilder`] (the builder is the
+    /// only public construction path).
+    pub(crate) fn from_builder(b: &EngineBuilder) -> Result<Self, Error> {
+        let (executor, guard, artifact, engine_kind) = match &b.engine {
+            Engine::Native => (None, None, None, "native"),
+            Engine::Sharded => {
+                return Err(Error::InvalidConfig(
+                    "Engine::Sharded is served by ParallelCoordinator".into(),
+                ))
+            }
             Engine::Pjrt { artifacts_dir } => {
-                let guard = TileExecutor::spawn(artifacts_dir.clone(), config.queue_depth)?;
-                let executor = guard.executor.clone();
-                // Resolve the artifact matching (rows_per_tile, group_width).
-                let rows = config.rows_per_tile;
-                let width = config.group_width;
-                let name = executor
-                    .call(move |rt| {
-                        let name = rt
-                            .manifest
-                            .select_thundering(rows, width)
-                            .filter(|(_, info)| info.p == width && info.rows == rows)
-                            .map(|(n, _)| n.to_string())
-                            .ok_or_else(|| {
-                                anyhow!(
-                                    "no thundering artifact with p={width} rows={rows}; \
-                                     available: {:?}",
-                                    rt.manifest.artifacts.keys().collect::<Vec<_>>()
-                                )
-                            })?;
-                        // Eager compile: the PJRT compile of the artifact
-                        // (~100 ms) must not land on the first request's
-                        // latency (§Perf L3: p99 fix).
-                        rt.load(&name)?;
-                        Ok::<String, anyhow::Error>(name)
-                    })?
-                    .context("selecting artifact")?;
-                (Some(executor), Some(guard), Some(name))
+                let (executor, guard, name) =
+                    Self::spawn_pjrt(artifacts_dir, b.queue_depth, b.rows_per_tile, b.group_width)
+                        .map_err(|e| Error::Backend(format!("{e:#}")))?;
+                (Some(executor), Some(guard), Some(name), "pjrt")
             }
         };
 
-        let mut registry = StreamRegistry::new();
-        registry.register(n_streams)?;
+        let registry = b.build_registry()?;
 
-        let n_groups = (n_streams / config.group_width as u64) as usize;
+        let n_groups = (b.n_streams / b.group_width as u64) as usize;
         let mut groups = Vec::with_capacity(n_groups);
         for g in 0..n_groups {
-            let first = g as u64 * config.group_width as u64;
-            let seed = crate::prng::splitmix64(config.root_seed ^ g as u64);
-            let backend = match (&config.engine, &executor, &artifact) {
-                (Engine::Native, _, _) => GroupBackend::Native(ThunderingBatch::new(
-                    seed,
-                    config.group_width,
-                    first,
-                )),
-                (Engine::Pjrt { .. }, Some(exec), Some(name)) => GroupBackend::Pjrt {
+            let first = g as u64 * b.group_width as u64;
+            let seed = crate::prng::splitmix64(b.root_seed ^ g as u64);
+            let backend = match (&executor, &artifact) {
+                (Some(exec), Some(name)) => GroupBackend::Pjrt {
                     executor: exec.clone(),
                     artifact: name.clone(),
-                    state: TileState::new(seed, config.group_width, first),
+                    state: TileState::new(seed, b.group_width, first),
                 },
-                _ => bail!("inconsistent engine setup"),
+                _ => GroupBackend::Native(ThunderingBatch::new(seed, b.group_width, first)),
             };
             groups.push(Mutex::new(StreamGroup::new(
                 first,
                 backend,
-                config.rows_per_tile,
-                config.lag_window,
+                b.rows_per_tile,
+                b.lag_window,
             )));
         }
 
         Ok(Self {
-            config,
-            registry: Mutex::new(registry),
+            group_width: b.group_width,
+            registry,
             groups,
             metrics: Metrics::default(),
             executor,
             _executor_guard: guard,
             artifact,
+            engine_kind,
         })
     }
 
-    pub fn config(&self) -> &Config {
-        &self.config
+    /// Spawn the PJRT device thread and resolve the artifact matching
+    /// `(rows_per_tile, group_width)`.
+    fn spawn_pjrt(
+        artifacts_dir: &str,
+        queue_depth: usize,
+        rows: usize,
+        width: usize,
+    ) -> anyhow::Result<(TileExecutor, TileExecutorGuard, String)> {
+        let guard = TileExecutor::spawn(artifacts_dir.to_string(), queue_depth)?;
+        let executor = guard.executor.clone();
+        let name = executor
+            .call(move |rt| {
+                let name = rt
+                    .manifest
+                    .select_thundering(rows, width)
+                    .filter(|(_, info)| info.p == width && info.rows == rows)
+                    .map(|(n, _)| n.to_string())
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no thundering artifact with p={width} rows={rows}; \
+                             available: {:?}",
+                            rt.manifest.artifacts.keys().collect::<Vec<_>>()
+                        )
+                    })?;
+                // Eager compile: the PJRT compile of the artifact
+                // (~100 ms) must not land on the first request's
+                // latency (§Perf L3: p99 fix).
+                rt.load(&name)?;
+                Ok::<String, anyhow::Error>(name)
+            })??;
+        Ok((executor, guard, name))
     }
 
+    /// Streams served.
     pub fn n_streams(&self) -> u64 {
-        self.groups.len() as u64 * self.config.group_width as u64
+        self.groups.len() as u64 * self.group_width as u64
     }
 
+    /// The resolved PJRT artifact name, when running on PJRT.
     pub fn artifact(&self) -> Option<&str> {
         self.artifact.as_deref()
     }
 
+    /// Service counters since construction.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
+    /// The registered identity of `stream`, if served.
     pub fn spec(&self, stream: u64) -> Option<StreamSpec> {
-        self.registry.lock().unwrap().get(stream).cloned()
+        self.registry.get(stream).cloned()
     }
 
-    fn locate(&self, stream: u64) -> Result<(usize, usize)> {
-        let g = (stream / self.config.group_width as u64) as usize;
+    fn locate(&self, stream: u64) -> Result<(usize, usize), Error> {
+        let g = (stream / self.group_width as u64) as usize;
         if g >= self.groups.len() {
-            bail!("stream {stream} not registered (have {})", self.n_streams());
+            return Err(Error::UnknownStream { stream, have: self.n_streams() });
         }
-        Ok((g, (stream % self.config.group_width as u64) as usize))
+        Ok((g, (stream % self.group_width as u64) as usize))
     }
 
     /// Fill `out` with the next numbers of `stream`.
-    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<()> {
+    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
         let (g, lane) = self.locate(stream)?;
         let mut group = self.groups[g].lock().unwrap();
-        group.fetch(lane, out, &self.metrics).map_err(|e| anyhow!("{e}"))
+        group.fetch(lane, out, &self.metrics)
     }
 
     /// Fetch `rows` synchronized rows for a whole group (row-major
     /// `rows × group_width`) — the Monte-Carlo fast path.
-    pub fn fetch_group_block(&self, group: usize, rows: usize) -> Result<Vec<u32>> {
+    pub fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error> {
         let g = self
             .groups
             .get(group)
-            .ok_or_else(|| anyhow!("group {group} out of range"))?;
-        g.lock().unwrap().fetch_block(rows, &self.metrics).map_err(|e| anyhow!("{e}"))
+            .ok_or(Error::GroupOutOfRange { group, have: self.groups.len() })?;
+        g.lock().unwrap().fetch_block(rows, &self.metrics)
     }
 
+    /// Batched fetch: one `rows × group_width` block for **every** group,
+    /// all-or-nothing under the lag window — every group's lock is taken
+    /// (in index order) and every lag window validated before any group
+    /// is consumed, matching [`ParallelCoordinator::fetch_many`].
+    /// Generation runs inline on this thread, group by group. A backend
+    /// failure ([`Error::Backend`], PJRT only — the native backend is
+    /// infallible) is persistent and fatal for replay continuity: groups
+    /// drained before the failure stay advanced.
+    pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
+        let mut guards: Vec<_> = self.groups.iter().map(|g| g.lock().unwrap()).collect();
+        for d in guards.iter() {
+            if let Err(e) = d.block_lag_check(rows) {
+                self.metrics.add(&self.metrics.lag_rejections, 1);
+                return Err(e);
+            }
+        }
+        guards.iter_mut().map(|g| g.fetch_block(rows, &self.metrics)).collect()
+    }
+
+    /// State-sharing groups served.
     pub fn n_groups(&self) -> usize {
         self.groups.len()
     }
@@ -226,14 +234,61 @@ impl Coordinator {
     }
 }
 
+impl StreamSource for Coordinator {
+    fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
+        Coordinator::fetch(self, stream, out)
+    }
+
+    fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error> {
+        Coordinator::fetch_block(self, group, rows)
+    }
+
+    fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
+        Coordinator::fetch_many(self, rows)
+    }
+
+    fn n_streams(&self) -> u64 {
+        Coordinator::n_streams(self)
+    }
+
+    fn n_groups(&self) -> usize {
+        Coordinator::n_groups(self)
+    }
+
+    fn group_width(&self) -> usize {
+        self.group_width
+    }
+
+    fn spec(&self, stream: u64) -> Option<StreamSpec> {
+        Coordinator::spec(self, stream)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        Coordinator::metrics(self)
+    }
+
+    fn engine_kind(&self) -> &'static str {
+        self.engine_kind
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prng::{splitmix64, Prng32, ThunderingStream};
 
+    fn native(n_streams: u64, width: usize, rows: usize) -> Coordinator {
+        EngineBuilder::new(n_streams)
+            .engine(Engine::Native)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .build_coordinator()
+            .unwrap()
+    }
+
     #[test]
     fn native_fetch_matches_scalar() {
-        let c = Coordinator::new(Config::default(), 128).unwrap();
+        let c = native(128, 64, 1024);
         let mut buf = vec![0u32; 100];
         c.fetch(70, &mut buf).unwrap();
         // Stream 70 lives in group 1, seeded splitmix64(42 ^ 1).
@@ -244,35 +299,40 @@ mod tests {
 
     #[test]
     fn unknown_stream_rejected() {
-        let c = Coordinator::new(Config::default(), 64).unwrap();
+        let c = native(64, 64, 1024);
         let mut buf = vec![0u32; 4];
-        assert!(c.fetch(64, &mut buf).is_err());
+        assert_eq!(
+            c.fetch(64, &mut buf).unwrap_err(),
+            Error::UnknownStream { stream: 64, have: 64 }
+        );
     }
 
     #[test]
     fn misaligned_stream_count_rejected() {
-        assert!(Coordinator::new(Config::default(), 63).is_err());
+        assert!(EngineBuilder::new(63).build().is_err());
     }
 
     #[test]
     fn group_block_shape() {
-        let c = Coordinator::new(
-            Config { group_width: 16, rows_per_tile: 8, ..Default::default() },
-            32,
-        )
-        .unwrap();
-        let block = c.fetch_group_block(1, 24).unwrap();
+        let c = native(32, 16, 8);
+        let block = c.fetch_block(1, 24).unwrap();
         assert_eq!(block.len(), 24 * 16);
         assert_eq!(c.metrics().tiles_executed, 3);
     }
 
     #[test]
+    fn fetch_many_matches_per_group_blocks() {
+        let a = native(8, 4, 4);
+        let b = native(8, 4, 4);
+        let many = a.fetch_many(8).unwrap();
+        let blocks: Vec<Vec<u32>> =
+            (0..2).map(|g| b.fetch_block(g, 8).unwrap()).collect();
+        assert_eq!(many, blocks);
+    }
+
+    #[test]
     fn groups_are_independent() {
-        let c = Coordinator::new(
-            Config { group_width: 4, rows_per_tile: 4, ..Default::default() },
-            8,
-        )
-        .unwrap();
+        let c = native(8, 4, 4);
         let mut a = vec![0u32; 8];
         let mut b = vec![0u32; 8];
         c.fetch(0, &mut a).unwrap();
@@ -283,13 +343,7 @@ mod tests {
     #[test]
     fn concurrent_fetches_consistent() {
         use std::sync::Arc;
-        let c = Arc::new(
-            Coordinator::new(
-                Config { group_width: 8, rows_per_tile: 64, ..Default::default() },
-                64,
-            )
-            .unwrap(),
-        );
+        let c = Arc::new(native(64, 8, 64));
         let mut handles = Vec::new();
         for t in 0..8u64 {
             let c = c.clone();

@@ -30,11 +30,11 @@
 //!   so tile `N+1` is being filled while clients drain tile `N`; a group
 //!   becomes active the first time a consumer touches it, so buffer
 //!   memory scales with demand, not with the registered group count.
-//! * The consumer side of each group keeps the same bounded **lag
-//!   window** semantics as [`super::group::StreamGroup`]: lanes of a
-//!   group may be consumed at different rates; rows stay buffered until
-//!   every lane passed them; a fetch that would stretch the spread beyond
-//!   `lag_window` is rejected (backpressure instead of unbounded memory).
+//! * The consumer side of each group is the engine-shared
+//!   [`DrainState`](super::drain::DrainState) over a *queue-pop*
+//!   [`TileProvider`]: same bounded lag-window semantics, buffering, and
+//!   pruning as [`super::group::StreamGroup`], by construction rather
+//!   than by parallel implementation.
 //! * **Determinism contract:** group `g` is seeded
 //!   `splitmix64(root_seed ^ g)` and advanced by exactly one shard thread
 //!   in tile order, so stream `s` delivers *bit-identical* output to
@@ -49,42 +49,13 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
-
-use super::group::FetchError;
-use super::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::builder::EngineBuilder;
+use crate::coordinator::drain::{DrainState, TileProvider};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::registry::{StreamRegistry, StreamSpec};
+use crate::coordinator::source::StreamSource;
+use crate::error::Error;
 use crate::prng::ThunderingBatch;
-
-/// Configuration of the sharded engine.
-#[derive(Debug, Clone)]
-pub struct ShardedConfig {
-    /// Streams per group (the state-sharing fan-out `p`).
-    pub group_width: usize,
-    /// Rows generated per tile.
-    pub rows_per_tile: usize,
-    /// Max allowed (fastest − slowest) lane spread within a group, in rows.
-    pub lag_window: u64,
-    /// Tiles buffered ahead per group (2 = classic double buffering).
-    pub prefetch_depth: usize,
-    /// Worker shards; 0 = one per available core (capped at the group
-    /// count — an idle shard would own nothing).
-    pub shards: usize,
-    /// Root seed; group `g` is seeded with `splitmix64(root_seed ^ g)`.
-    pub root_seed: u64,
-}
-
-impl Default for ShardedConfig {
-    fn default() -> Self {
-        Self {
-            group_width: 64,
-            rows_per_tile: 1024,
-            lag_window: 1 << 16,
-            prefetch_depth: 2,
-            shards: 0,
-            root_seed: 42,
-        }
-    }
-}
 
 /// Producer→consumer handoff for one group: a bounded FIFO of finished
 /// tiles. Single producer (the owning shard), any number of consumers
@@ -93,17 +64,6 @@ struct TileQueue {
     ready: Mutex<VecDeque<Vec<u32>>>,
     /// Signalled by the producer after pushing a tile.
     tile_ready: Condvar,
-}
-
-/// Consumer-side state of one group (the StreamGroup bookkeeping, minus
-/// generation — tiles arrive from the shard via the queue).
-struct DrainState {
-    /// Absolute row index of the first buffered row.
-    base_row: u64,
-    /// Tiles popped from the queue and not yet fully consumed.
-    tiles: VecDeque<Vec<u32>>,
-    /// Per-lane absolute row cursor (next row to deliver).
-    cursors: Vec<u64>,
 }
 
 struct GroupSlot {
@@ -135,16 +95,89 @@ struct Shared {
     metrics: Metrics,
     width: usize,
     rows_per_tile: usize,
-    lag_window: u64,
     prefetch_depth: usize,
 }
 
-/// The sharded MISRN coordinator. Create once, share via `&` or `Arc`
-/// across client threads; shard workers shut down on drop.
+impl Shared {
+    /// Pop the next finished tile of group `g`, blocking on the producer
+    /// if the queue is momentarily empty, then nudge the owning shard
+    /// (a prefetch slot just opened).
+    fn pop_tile(&self, g: usize) -> Vec<u32> {
+        let slot = &self.groups[g];
+        if !slot.active.load(Ordering::Acquire) {
+            slot.active.store(true, Ordering::Release);
+            Self::nudge(&self.parks[self.shard_of[g]]);
+        }
+        let mut q = slot.queue.ready.lock().unwrap();
+        loop {
+            if let Some(tile) = q.pop_front() {
+                drop(q);
+                Self::nudge(&self.parks[self.shard_of[g]]);
+                return tile;
+            }
+            q = slot.queue.tile_ready.wait(q).unwrap();
+        }
+    }
+
+    /// Wake a shard: a prefetch slot opened (or we are shutting down).
+    fn nudge(park: &Park) {
+        *park.generation.lock().unwrap() += 1;
+        park.cv.notify_all();
+    }
+
+    /// Return a fully consumed tile buffer to the shared pool (bounded).
+    fn recycle(&self, buf: Vec<u32>) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < 2 * self.groups.len() {
+            pool.push(buf);
+        }
+    }
+}
+
+/// The queue-pop [`TileProvider`]: tiles arrive prefetched from the
+/// owning shard through the group's bounded queue.
+struct QueueTiles<'a> {
+    shared: &'a Shared,
+    g: usize,
+}
+
+impl TileProvider for QueueTiles<'_> {
+    fn next_tile(&mut self, _metrics: &Metrics) -> Result<Vec<u32>, Error> {
+        // Generation metrics (tiles_executed, rows_generated, backend_ns)
+        // are counted by the producing shard, not here.
+        Ok(self.shared.pop_tile(self.g))
+    }
+
+    fn fill_block(
+        &mut self,
+        rows: usize,
+        out: &mut [u32],
+        _metrics: &Metrics,
+    ) -> Result<(), (usize, Error)> {
+        debug_assert_eq!(rows % self.shared.rows_per_tile, 0);
+        let tile_len = self.shared.rows_per_tile * self.shared.width;
+        for chunk in out.chunks_mut(tile_len) {
+            let tile = self.shared.pop_tile(self.g);
+            chunk.copy_from_slice(&tile);
+            self.shared.recycle(tile);
+        }
+        Ok(())
+    }
+
+    fn recycle(&mut self, buf: Vec<u32>) {
+        self.shared.recycle(buf);
+    }
+}
+
+/// The sharded MISRN coordinator. Built via
+/// [`EngineBuilder`](super::EngineBuilder) with
+/// [`Engine::Sharded`](super::Engine::Sharded); create once, share via
+/// `&` or `Arc` across client threads; shard workers shut down on drop.
 pub struct ParallelCoordinator {
     shared: Arc<Shared>,
     threads: Vec<JoinHandle<()>>,
-    config: ShardedConfig,
+    /// Immutable after construction — reads need no lock.
+    registry: StreamRegistry,
     n_shards: usize,
 }
 
@@ -201,34 +234,25 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
 }
 
 impl ParallelCoordinator {
-    /// Create a sharded coordinator serving `n_streams` streams.
-    pub fn new(config: ShardedConfig, n_streams: u64) -> Result<Self> {
-        anyhow::ensure!(config.group_width > 0 && config.rows_per_tile > 0);
-        anyhow::ensure!(config.prefetch_depth >= 1, "prefetch_depth must be >= 1");
-        anyhow::ensure!(
-            n_streams > 0 && n_streams % config.group_width as u64 == 0,
-            "n_streams must be a positive multiple of group_width"
-        );
-        let n_groups = (n_streams / config.group_width as u64) as usize;
-        let requested = if config.shards == 0 {
+    /// Construct from a validated [`EngineBuilder`] (the builder is the
+    /// only public construction path).
+    pub(crate) fn from_builder(b: &EngineBuilder) -> Result<Self, Error> {
+        let n_groups = (b.n_streams / b.group_width as u64) as usize;
+        let requested = if b.shards == 0 {
             std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
         } else {
-            config.shards
+            b.shards
         };
         let n_shards = requested.clamp(1, n_groups);
 
-        let width = config.group_width;
+        let width = b.group_width;
         let groups = (0..n_groups)
             .map(|_| GroupSlot {
                 queue: TileQueue {
-                    ready: Mutex::new(VecDeque::with_capacity(config.prefetch_depth)),
+                    ready: Mutex::new(VecDeque::with_capacity(b.prefetch_depth)),
                     tile_ready: Condvar::new(),
                 },
-                drain: Mutex::new(DrainState {
-                    base_row: 0,
-                    tiles: VecDeque::new(),
-                    cursors: vec![0; width],
-                }),
+                drain: Mutex::new(DrainState::new(width, b.rows_per_tile, b.lag_window)),
                 active: AtomicBool::new(false),
             })
             .collect();
@@ -242,10 +266,11 @@ impl ParallelCoordinator {
             stop: AtomicBool::new(false),
             metrics: Metrics::default(),
             width,
-            rows_per_tile: config.rows_per_tile,
-            lag_window: config.lag_window,
-            prefetch_depth: config.prefetch_depth,
+            rows_per_tile: b.rows_per_tile,
+            prefetch_depth: b.prefetch_depth,
         });
+
+        let registry = b.build_registry()?;
 
         // Round-robin group ownership; each shard owns its groups'
         // generator state outright (no locks on the generation path).
@@ -253,62 +278,83 @@ impl ParallelCoordinator {
             (0..n_shards).map(|_| Vec::new()).collect();
         for g in 0..n_groups {
             let first = g as u64 * width as u64;
-            let seed = crate::prng::splitmix64(config.root_seed ^ g as u64);
+            let seed = crate::prng::splitmix64(b.root_seed ^ g as u64);
             per_shard[g % n_shards].push((g, ThunderingBatch::new(seed, width, first)));
         }
         let mut threads = Vec::with_capacity(n_shards);
         for (s, owned) in per_shard.into_iter().enumerate() {
-            let shared = shared.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("thundering-shard-{s}"))
-                    .spawn(move || shard_main(shared, s, owned))?,
-            );
+            let worker_shared = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("thundering-shard-{s}"))
+                .spawn(move || shard_main(worker_shared, s, owned));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    // Already-spawned shards hold the Shared and would
+                    // spin forever: stop and join them before erroring
+                    // (Drop never runs — Self was never constructed).
+                    shared.stop.store(true, Ordering::Release);
+                    for park in &shared.parks {
+                        Shared::nudge(park);
+                    }
+                    for handle in threads {
+                        let _ = handle.join();
+                    }
+                    return Err(Error::Backend(format!("spawning shard: {e}")));
+                }
+            }
         }
-        Ok(Self { shared, threads, config, n_shards })
+        Ok(Self { shared, threads, registry, n_shards })
     }
 
-    pub fn config(&self) -> &ShardedConfig {
-        &self.config
-    }
-
+    /// State-sharing groups served.
     pub fn n_groups(&self) -> usize {
         self.shared.groups.len()
     }
 
+    /// Worker shards generating tiles.
     pub fn n_shards(&self) -> usize {
         self.n_shards
     }
 
+    /// Streams served.
     pub fn n_streams(&self) -> u64 {
         self.shared.groups.len() as u64 * self.shared.width as u64
     }
 
+    /// Service counters since construction.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
     }
 
+    /// The registered identity of `stream`, if served.
+    pub fn spec(&self, stream: u64) -> Option<StreamSpec> {
+        self.registry.get(stream).cloned()
+    }
+
     /// Fill `out` with the next numbers of `stream` (bit-identical to the
     /// scalar `ThunderingStream` replay of that stream).
-    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<()> {
+    pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
         let width = self.shared.width as u64;
         let g = (stream / width) as usize;
         if g >= self.shared.groups.len() {
-            bail!("stream {stream} not registered (have {})", self.n_streams());
+            return Err(Error::UnknownStream { stream, have: self.n_streams() });
         }
         let lane = (stream % width) as usize;
         let mut drain = self.shared.groups[g].drain.lock().unwrap();
-        self.fetch_lane_locked(g, &mut drain, lane, out).map_err(|e| anyhow!("{e}"))
+        let mut provider = QueueTiles { shared: &*self.shared, g };
+        drain.fetch_lane(lane, out, &mut provider, &self.shared.metrics)
     }
 
     /// Fetch `rows` synchronized rows for one group (row-major
     /// `rows × group_width`), advancing every lane together.
-    pub fn fetch_group_block(&self, group: usize, rows: usize) -> Result<Vec<u32>> {
+    pub fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error> {
         if group >= self.shared.groups.len() {
-            bail!("group {group} out of range (have {})", self.n_groups());
+            return Err(Error::GroupOutOfRange { group, have: self.n_groups() });
         }
-        let mut d = self.shared.groups[group].drain.lock().unwrap();
-        self.block_with_drain(group, &mut d, rows).map_err(|e| anyhow!("{e}"))
+        let mut drain = self.shared.groups[group].drain.lock().unwrap();
+        let mut provider = QueueTiles { shared: &*self.shared, g: group };
+        drain.fetch_block(rows, &mut provider, &self.shared.metrics)
     }
 
     /// Batched fetch: one `rows × group_width` block for **every** group,
@@ -322,203 +368,114 @@ impl ParallelCoordinator {
     /// deadlock) and every group's lag window is validated before any
     /// group is consumed: a rejection leaves no group advanced, the same
     /// atomicity contract as a single block fetch.
-    pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>> {
+    ///
+    /// Multi-tile blocks drain **tile-granular and shard-affine**: one
+    /// tile per group per round, in group-index order. Group ownership is
+    /// round-robin (`g % n_shards`), so consecutive pops target distinct
+    /// shards — while the caller memcpys group `g`'s tile, the slot it
+    /// just freed on `g`'s shard and every other shard's queues are
+    /// refilling. Draining each group to completion before the next (the
+    /// old order) instead serialized the tail: past the prefetch depth,
+    /// the caller waited on one shard while the others sat full and
+    /// parked.
+    pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
         let shared = &*self.shared;
         let mut guards: Vec<_> =
             shared.groups.iter().map(|slot| slot.drain.lock().unwrap()).collect();
-        for (g, d) in guards.iter().enumerate() {
-            if let Err(e) = Self::block_lag_check(shared, d, rows) {
+        for d in guards.iter() {
+            if let Err(e) = d.block_lag_check(rows) {
                 shared.metrics.add(&shared.metrics.lag_rejections, 1);
-                bail!("group {g}: {e}");
+                return Err(e);
             }
         }
-        let mut out = Vec::with_capacity(guards.len());
-        for (g, d) in guards.iter_mut().enumerate() {
-            out.push(self.block_with_drain(g, d, rows).map_err(|e| anyhow!("{e}"))?);
-        }
-        Ok(out)
-    }
 
-    /// Pop the next finished tile of group `g`, blocking on the producer
-    /// if the queue is momentarily empty, then nudge the owning shard
-    /// (a prefetch slot just opened).
-    fn pop_tile(&self, g: usize) -> Vec<u32> {
-        let shared = &*self.shared;
-        let slot = &shared.groups[g];
-        if !slot.active.load(Ordering::Acquire) {
-            slot.active.store(true, Ordering::Release);
-            Self::nudge(&shared.parks[shared.shard_of[g]]);
-        }
-        let mut q = slot.queue.ready.lock().unwrap();
-        loop {
-            if let Some(tile) = q.pop_front() {
-                drop(q);
-                Self::nudge(&shared.parks[shared.shard_of[g]]);
-                return tile;
-            }
-            q = slot.queue.tile_ready.wait(q).unwrap();
-        }
-    }
-
-    /// Wake a shard: a prefetch slot opened (or we are shutting down).
-    fn nudge(park: &Park) {
-        *park.generation.lock().unwrap() += 1;
-        park.cv.notify_all();
-    }
-
-    /// Return a fully consumed tile buffer to the shared pool (bounded).
-    fn recycle(&self, buf: Vec<u32>) {
-        let mut pool = self.shared.pool.lock().unwrap();
-        if pool.len() < 2 * self.shared.groups.len() {
-            pool.push(buf);
-        }
-    }
-
-    fn fetch_lane_locked(
-        &self,
-        g: usize,
-        d: &mut DrainState,
-        lane: usize,
-        out: &mut [u32],
-    ) -> std::result::Result<(), FetchError> {
-        let shared = &*self.shared;
-        let rows_per_tile = shared.rows_per_tile as u64;
-        let n = out.len() as u64;
-        let target = d.cursors[lane] + n;
-
-        // Backpressure: would this lane run too far ahead of the slowest?
-        let min_cursor = *d.cursors.iter().min().unwrap();
-        if target - min_cursor > shared.lag_window {
-            shared.metrics.add(&shared.metrics.lag_rejections, 1);
-            return Err(FetchError::LagWindowExceeded {
-                lead: target - min_cursor,
-                window: shared.lag_window,
-            });
-        }
-
-        // Pull prefetched tiles until the target row is buffered.
-        let mut missed = false;
-        while d.base_row + d.tiles.len() as u64 * rows_per_tile < target {
-            missed = true;
-            let tile = self.pop_tile(g);
-            d.tiles.push_back(tile);
-        }
-        shared
-            .metrics
-            .add(if missed { &shared.metrics.fetch_misses } else { &shared.metrics.fetch_hits }, 1);
-
-        // Strided column copy, one tile-resident run at a time.
-        let width = shared.width;
         let rpt = shared.rows_per_tile;
-        let mut cursor = d.cursors[lane];
-        let mut written = 0usize;
-        while written < out.len() {
-            let rel = (cursor - d.base_row) as usize;
-            let (t, r0) = (rel / rpt, rel % rpt);
-            let take = (rpt - r0).min(out.len() - written);
-            let tile = &d.tiles[t];
-            let mut idx = r0 * width + lane;
-            for slot in out[written..written + take].iter_mut() {
-                *slot = tile[idx];
-                idx += width;
-            }
-            written += take;
-            cursor += take as u64;
-        }
-        d.cursors[lane] = cursor;
-        shared.metrics.add(&shared.metrics.numbers_delivered, n);
+        let tile_len = rpt * shared.width;
+        let n = guards.len();
+        let streamable: Vec<bool> = guards.iter().map(|d| d.fast_block_ready(rows)).collect();
+        let mut out: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
 
-        // Prune tiles every lane has fully consumed; recycle the buffers.
-        let min_cursor = *d.cursors.iter().min().unwrap();
-        while !d.tiles.is_empty() && d.base_row + rows_per_tile <= min_cursor {
-            let buf = d.tiles.pop_front().unwrap();
-            d.base_row += rows_per_tile;
-            self.recycle(buf);
-        }
-        Ok(())
-    }
-
-    /// Would a `rows`-row block fetch on this drain state violate the lag
-    /// window? (The fast tile-streaming path advances all lanes uniformly
-    /// from a clean boundary and carries no lag constraint, matching
-    /// `StreamGroup::fetch_block`.)
-    fn block_lag_check(
-        shared: &Shared,
-        d: &DrainState,
-        rows: usize,
-    ) -> std::result::Result<(), FetchError> {
-        let uniform = d.cursors.iter().all(|&c| c == d.cursors[0]);
-        if uniform && d.tiles.is_empty() && rows % shared.rows_per_tile == 0 {
-            return Ok(());
-        }
-        let min_cursor = *d.cursors.iter().min().unwrap();
-        let max_target = *d.cursors.iter().max().unwrap() + rows as u64;
-        if max_target - min_cursor > shared.lag_window {
-            return Err(FetchError::LagWindowExceeded {
-                lead: max_target - min_cursor,
-                window: shared.lag_window,
-            });
-        }
-        Ok(())
-    }
-
-    fn block_with_drain(
-        &self,
-        g: usize,
-        d: &mut DrainState,
-        rows: usize,
-    ) -> std::result::Result<Vec<u32>, FetchError> {
-        let shared = &*self.shared;
-        let width = shared.width;
-        let rpt = shared.rows_per_tile;
-
-        // Fast path: lanes uniform on a tile boundary and whole tiles
-        // requested — hand prefetched tiles straight to the caller (the
-        // single-tile case, the Monte-Carlo apps' shape, is zero-copy).
-        let uniform = d.cursors.iter().all(|&c| c == d.cursors[0]);
-        if uniform && d.tiles.is_empty() && rows % rpt == 0 {
-            let out = if rows == rpt {
-                self.pop_tile(g)
-            } else {
-                let mut out = vec![0u32; rows * width];
-                for chunk in out.chunks_mut(rpt * width) {
-                    let tile = self.pop_tile(g);
-                    chunk.copy_from_slice(&tile);
-                    self.recycle(tile);
+        if streamable.iter().any(|&s| s) {
+            let tiles_per_group = rows / rpt;
+            if tiles_per_group == 1 {
+                // Single-tile blocks hand the queue buffer straight to the
+                // caller — zero-copy, and index order already cycles the
+                // shards once per group.
+                for g in 0..n {
+                    if streamable[g] {
+                        out[g] = shared.pop_tile(g);
+                    }
                 }
-                out
-            };
-            for c in d.cursors.iter_mut() {
-                *c += rows as u64;
+            } else {
+                for (g, o) in out.iter_mut().enumerate() {
+                    if streamable[g] {
+                        *o = vec![0u32; rows * shared.width];
+                    }
+                }
+                for t in 0..tiles_per_group {
+                    for g in 0..n {
+                        if streamable[g] {
+                            let tile = shared.pop_tile(g);
+                            out[g][t * tile_len..(t + 1) * tile_len].copy_from_slice(&tile);
+                            shared.recycle(tile);
+                        }
+                    }
+                }
             }
-            d.base_row += rows as u64;
-            shared.metrics.add(&shared.metrics.numbers_delivered, (rows * width) as u64);
-            return Ok(out);
+            for (g, d) in guards.iter_mut().enumerate() {
+                if streamable[g] {
+                    d.advance_uniform(rows, &shared.metrics);
+                }
+            }
         }
 
-        // Slow path: per-lane fetch into a transposed buffer, under the
-        // caller-held drain lock so the block is one consistent row range.
-        //
-        // The lag window is checked once for the whole block, up front:
-        // a block advances every lane by `rows`, so the spread that
-        // matters is (fastest lane + rows) − slowest lane. Checking (and
-        // rejecting) atomically here means a rejection never leaves some
-        // lanes advanced and their rows silently dropped; it also makes
-        // the per-lane checks inside `fetch_lane_locked` unreachable for
-        // this call (their lead is bounded by the lead vetted here).
-        if let Err(e) = Self::block_lag_check(shared, d, rows) {
-            shared.metrics.add(&shared.metrics.lag_rejections, 1);
-            return Err(e);
-        }
-        let mut out = vec![0u32; rows * width];
-        let mut lane_buf = vec![0u32; rows];
-        for lane in 0..width {
-            self.fetch_lane_locked(g, &mut d, lane, &mut lane_buf)?;
-            for (r, &v) in lane_buf.iter().enumerate() {
-                out[r * width + lane] = v;
+        // Misaligned groups (partial tiles buffered or skewed lanes) take
+        // the per-group drain path; their lag windows were vetted above.
+        for (g, d) in guards.iter_mut().enumerate() {
+            if !streamable[g] {
+                let mut provider = QueueTiles { shared, g };
+                out[g] = d.fetch_block(rows, &mut provider, &shared.metrics)?;
             }
         }
         Ok(out)
+    }
+}
+
+impl StreamSource for ParallelCoordinator {
+    fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
+        ParallelCoordinator::fetch(self, stream, out)
+    }
+
+    fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error> {
+        ParallelCoordinator::fetch_block(self, group, rows)
+    }
+
+    fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
+        ParallelCoordinator::fetch_many(self, rows)
+    }
+
+    fn n_streams(&self) -> u64 {
+        ParallelCoordinator::n_streams(self)
+    }
+
+    fn n_groups(&self) -> usize {
+        ParallelCoordinator::n_groups(self)
+    }
+
+    fn group_width(&self) -> usize {
+        self.shared.width
+    }
+
+    fn spec(&self, stream: u64) -> Option<StreamSpec> {
+        ParallelCoordinator::spec(self, stream)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        ParallelCoordinator::metrics(self)
+    }
+
+    fn engine_kind(&self) -> &'static str {
+        "sharded"
     }
 }
 
@@ -526,7 +483,7 @@ impl Drop for ParallelCoordinator {
     fn drop(&mut self) {
         self.shared.stop.store(true, Ordering::Release);
         for park in &self.shared.parks {
-            Self::nudge(park);
+            Shared::nudge(park);
         }
         for handle in self.threads.drain(..) {
             let _ = handle.join();
@@ -537,22 +494,31 @@ impl Drop for ParallelCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Engine;
     use crate::prng::{splitmix64, Prng32, ThunderingStream};
 
-    fn cfg(width: usize, rows: usize, lag: u64, shards: usize) -> ShardedConfig {
-        ShardedConfig {
-            group_width: width,
-            rows_per_tile: rows,
-            lag_window: lag,
-            prefetch_depth: 2,
-            shards,
-            root_seed: 42,
-        }
+    fn build(
+        width: usize,
+        rows: usize,
+        lag: u64,
+        shards: usize,
+        n_streams: u64,
+    ) -> ParallelCoordinator {
+        EngineBuilder::new(n_streams)
+            .engine(Engine::Sharded)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(lag)
+            .prefetch_depth(2)
+            .shards(shards)
+            .root_seed(42)
+            .build_sharded()
+            .unwrap()
     }
 
     #[test]
     fn fetch_matches_scalar_stream() {
-        let c = ParallelCoordinator::new(cfg(8, 16, u64::MAX / 2, 2), 32).unwrap();
+        let c = build(8, 16, u64::MAX / 2, 2, 32);
         let mut buf = vec![0u32; 100];
         c.fetch(19, &mut buf).unwrap(); // group 2, lane 3
         let mut s = ThunderingStream::new(splitmix64(42 ^ 2), 19);
@@ -562,20 +528,15 @@ mod tests {
 
     #[test]
     fn matches_single_coordinator_engine() {
-        use crate::coordinator::{Config, Coordinator, Engine};
-        let sharded = ParallelCoordinator::new(cfg(4, 8, u64::MAX / 2, 3), 16).unwrap();
-        let single = Coordinator::new(
-            Config {
-                engine: Engine::Native,
-                group_width: 4,
-                rows_per_tile: 8,
-                lag_window: u64::MAX / 2,
-                root_seed: 42,
-                ..Default::default()
-            },
-            16,
-        )
-        .unwrap();
+        let sharded = build(4, 8, u64::MAX / 2, 3, 16);
+        let single = EngineBuilder::new(16)
+            .engine(Engine::Native)
+            .group_width(4)
+            .rows_per_tile(8)
+            .lag_window(u64::MAX / 2)
+            .root_seed(42)
+            .build_coordinator()
+            .unwrap();
         for stream in [0u64, 5, 10, 15] {
             let mut a = vec![0u32; 77];
             let mut b = vec![0u32; 77];
@@ -587,15 +548,24 @@ mod tests {
 
     #[test]
     fn unknown_stream_rejected() {
-        let c = ParallelCoordinator::new(cfg(4, 8, 1024, 1), 8).unwrap();
+        let c = build(4, 8, 1024, 1, 8);
         let mut buf = vec![0u32; 4];
         assert!(c.fetch(8, &mut buf).is_err());
-        assert!(c.fetch_group_block(2, 8).is_err());
+        assert!(c.fetch_block(2, 8).is_err());
+    }
+
+    #[test]
+    fn registry_serves_specs() {
+        let c = build(4, 8, 1024, 1, 8);
+        let spec = c.spec(5).unwrap();
+        assert_eq!(spec.id, 5);
+        assert_eq!(spec.h % 2, 0);
+        assert!(c.spec(8).is_none());
     }
 
     #[test]
     fn lag_window_enforced_and_recoverable() {
-        let c = ParallelCoordinator::new(cfg(2, 4, 16, 1), 2).unwrap();
+        let c = build(2, 4, 16, 1, 2);
         let mut big = vec![0u32; 16];
         c.fetch(0, &mut big).unwrap();
         let mut one = vec![0u32; 1];
@@ -608,7 +578,7 @@ mod tests {
 
     #[test]
     fn group_blocks_match_batch_engine() {
-        let c = ParallelCoordinator::new(cfg(4, 8, u64::MAX / 2, 2), 12).unwrap();
+        let c = build(4, 8, u64::MAX / 2, 2, 12);
         let blocks = c.fetch_many(24).unwrap();
         assert_eq!(blocks.len(), 3);
         for (g, block) in blocks.iter().enumerate() {
@@ -619,11 +589,42 @@ mod tests {
     }
 
     #[test]
+    fn fetch_many_interleaves_skewed_and_streamable_groups() {
+        // Group 1 is knocked off the tile boundary by a 3-number fetch,
+        // so a fetch_many mixes the shard-affine streaming path (groups
+        // 0, 2) with the per-group drain path (group 1) — every block
+        // must still replay exactly.
+        let c = build(2, 4, u64::MAX / 2, 2, 6);
+        let mut three = vec![0u32; 3];
+        c.fetch(2, &mut three).unwrap(); // group 1, lane 0
+        let blocks = c.fetch_many(8).unwrap();
+        assert_eq!(blocks.len(), 3);
+        for g in 0..3u64 {
+            for lane in 0..2u64 {
+                let mut s = ThunderingStream::new(splitmix64(42 ^ g), g * 2 + lane);
+                // Group 1 lane 0 already consumed 3 numbers.
+                if g == 1 && lane == 0 {
+                    for _ in 0..3 {
+                        s.next_u32();
+                    }
+                }
+                for r in 0..8usize {
+                    assert_eq!(
+                        blocks[g as usize][r * 2 + lane as usize],
+                        s.next_u32(),
+                        "group {g} lane {lane} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn block_after_partial_fetch_stays_consistent() {
-        let c = ParallelCoordinator::new(cfg(2, 4, u64::MAX / 2, 1), 2).unwrap();
+        let c = build(2, 4, u64::MAX / 2, 1, 2);
         let mut buf = vec![0u32; 3];
         c.fetch(0, &mut buf).unwrap(); // misalign lane cursors
-        let block = c.fetch_group_block(0, 8).unwrap();
+        let block = c.fetch_block(0, 8).unwrap();
         let mut s0 = ThunderingStream::new(splitmix64(42), 0);
         for _ in 0..3 {
             s0.next_u32();
@@ -641,10 +642,10 @@ mod tests {
         // 11-row spread → must be rejected atomically: lane 0 still
         // replays from its origin afterwards (before the atomic check,
         // lane 0 was advanced and its row silently dropped).
-        let c = ParallelCoordinator::new(cfg(3, 4, 10, 1), 3).unwrap();
+        let c = build(3, 4, 10, 1, 3);
         let mut ten = vec![0u32; 10];
         c.fetch(1, &mut ten).unwrap();
-        let err = c.fetch_group_block(0, 1).unwrap_err();
+        let err = c.fetch_block(0, 1).unwrap_err();
         assert!(format!("{err}").contains("lag window"), "{err}");
         let mut five = vec![0u32; 5];
         c.fetch(0, &mut five).unwrap();
@@ -655,7 +656,7 @@ mod tests {
         let mut buf = vec![0u32; 5];
         c.fetch(0, &mut buf).unwrap();
         c.fetch(2, &mut ten).unwrap();
-        let block = c.fetch_group_block(0, 1).unwrap();
+        let block = c.fetch_block(0, 1).unwrap();
         for lane in 0..3u64 {
             let mut s = ThunderingStream::new(splitmix64(42), lane);
             for _ in 0..10 {
@@ -670,7 +671,7 @@ mod tests {
         // Group 1 is skewed past what an 8-row block allows; fetch_many
         // must validate every group before consuming any, so group 0's
         // streams still replay from their origin after the rejection.
-        let c = ParallelCoordinator::new(cfg(2, 8, 16, 1), 4).unwrap();
+        let c = build(2, 8, 16, 1, 4);
         let mut sixteen = vec![0u32; 16];
         c.fetch(2, &mut sixteen).unwrap(); // group 1, lane 0, at the edge
         let err = c.fetch_many(8).unwrap_err();
@@ -695,7 +696,7 @@ mod tests {
     fn shutdown_joins_workers_quickly() {
         let t0 = std::time::Instant::now();
         {
-            let c = ParallelCoordinator::new(cfg(8, 64, 1 << 14, 0), 64).unwrap();
+            let c = build(8, 64, 1 << 14, 0, 64);
             let mut buf = vec![0u32; 256];
             c.fetch(0, &mut buf).unwrap();
         } // drop here

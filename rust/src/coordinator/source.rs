@@ -1,0 +1,311 @@
+//! The engine-agnostic client surface: [`StreamSource`] (what every
+//! engine implements) and [`StreamHandle`] (the recommended per-stream
+//! consumer view).
+//!
+//! Application code should depend on `&dyn StreamSource` / `Arc<dyn
+//! StreamSource>` and let [`EngineBuilder`](super::EngineBuilder) pick
+//! the engine — the paper's whole point is that one decorrelator-backed
+//! state-sharing architecture serves arbitrarily many independent
+//! streams, so which machinery generates the tiles is a deployment
+//! detail, not an API.
+
+use std::sync::Arc;
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::registry::StreamSpec;
+use crate::error::Error;
+use crate::prng::Prng32;
+
+/// A source of multiple independent random number streams (MISRN).
+///
+/// Implemented by both engines — the single
+/// [`Coordinator`](super::Coordinator) (inline generation, optionally on
+/// AOT PJRT tiles) and the [`ParallelCoordinator`](super::ParallelCoordinator)
+/// (one prefetching worker shard per core). Every implementation serves
+/// the same deterministic contract: stream `s` of group `g = s /
+/// group_width` is bit-identical to
+/// `ThunderingStream::new(splitmix64(root_seed ^ g), s)`, regardless of
+/// engine, shard count, or client interleaving.
+///
+/// Sources are shared by reference (`&`/`Arc`) across any number of
+/// client threads; all methods take `&self`.
+pub trait StreamSource: Send + Sync {
+    /// Fill `out` with the next `out.len()` numbers of `stream`,
+    /// advancing its cursor. Rejected fetches (lag window) consume
+    /// nothing.
+    fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error>;
+
+    /// Fetch `rows` synchronized rows for one whole group (row-major
+    /// `rows × group_width`), advancing every lane together — the
+    /// Monte-Carlo fast path. All-or-nothing under the lag window
+    /// (backend failures are persistent and fatal for replay continuity;
+    /// see the engine docs).
+    fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error>;
+
+    /// Batched fetch: one `rows × group_width` block for **every** group,
+    /// all-or-nothing across groups under the lag window (a rejection
+    /// leaves no group advanced).
+    fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error>;
+
+    /// Streams served (ids `0..n_streams`).
+    fn n_streams(&self) -> u64;
+
+    /// State-sharing groups served (indices `0..n_groups`).
+    fn n_groups(&self) -> usize;
+
+    /// Streams per group (the paper's fan-out `p`).
+    fn group_width(&self) -> usize;
+
+    /// The registered identity of `stream` (leaf constant, decorrelator
+    /// origin), if served.
+    fn spec(&self, stream: u64) -> Option<StreamSpec>;
+
+    /// Service counters since construction.
+    fn metrics(&self) -> MetricsSnapshot;
+
+    /// Short engine identifier (`"native"`, `"sharded"`, `"pjrt"`) for
+    /// reports and logs.
+    fn engine_kind(&self) -> &'static str;
+}
+
+/// Default numbers fetched per refill of a [`StreamHandle`]'s local
+/// buffer (override with [`StreamHandle::with_chunk`]).
+const DEFAULT_CHUNK: usize = 4096;
+
+/// A cheap, cloneable client of one stream of a [`StreamSource`] — the
+/// recommended consumer surface.
+///
+/// A handle owns nothing but an `Arc` on the source, the stream id, and
+/// a small local refill buffer, so it is cheap to create and to clone.
+/// It offers three views over the same underlying sequence:
+///
+/// * [`StreamHandle::fill`] — bulk copy into a caller buffer;
+/// * [`StreamHandle::next_u32`] — buffered single numbers with explicit
+///   error handling;
+/// * the [`Iterator`] impl — `for x in handle.by_ref().take(n)`-style
+///   consumption (iteration ends on a backpressure/backend error; use
+///   `next_u32` when you need to see the error).
+///
+/// It also implements [`Prng32`], so a served stream can feed anything
+/// that consumes a generator (e.g. the statistical battery); that view
+/// panics on fetch errors, so use it only on sources whose lag window
+/// the consumption pattern cannot violate.
+///
+/// Cloning yields an *additional client of the same stream*: the clone's
+/// reads interleave with (and advance the same cursor as) the
+/// original's. Numbers already sitting in a handle's local buffer are
+/// not shared with clones.
+pub struct StreamHandle {
+    source: Arc<dyn StreamSource>,
+    stream: u64,
+    chunk: usize,
+    buf: Vec<u32>,
+    pos: usize,
+}
+
+impl StreamHandle {
+    /// A handle on `stream`, validated against the source.
+    pub fn new(source: Arc<dyn StreamSource>, stream: u64) -> Result<Self, Error> {
+        let have = source.n_streams();
+        if stream >= have {
+            return Err(Error::UnknownStream { stream, have });
+        }
+        Ok(Self { source, stream, chunk: DEFAULT_CHUNK, buf: Vec::new(), pos: 0 })
+    }
+
+    /// Set the local refill size (numbers fetched per buffer miss;
+    /// clamped to ≥ 1). Larger chunks amortize source locking; smaller
+    /// chunks bound how far this handle runs ahead inside its group's
+    /// lag window.
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk.max(1);
+        self
+    }
+
+    /// The stream this handle consumes.
+    pub fn stream_id(&self) -> u64 {
+        self.stream
+    }
+
+    /// The stream's registered identity.
+    pub fn spec(&self) -> Option<StreamSpec> {
+        self.source.spec(self.stream)
+    }
+
+    /// The source this handle draws from.
+    pub fn source(&self) -> &Arc<dyn StreamSource> {
+        &self.source
+    }
+
+    /// Fill `out` with the next `out.len()` numbers: locally buffered
+    /// numbers first, the remainder fetched from the source in one call.
+    /// On error nothing is consumed (neither locally nor at the source).
+    pub fn fill(&mut self, out: &mut [u32]) -> Result<(), Error> {
+        let buffered = self.buf.len() - self.pos;
+        let take = buffered.min(out.len());
+        // Fetch the tail first: a rejected fetch then leaves the local
+        // buffer untouched too.
+        if take < out.len() {
+            self.source.fetch(self.stream, &mut out[take..])?;
+        }
+        out[..take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+        self.pos += take;
+        Ok(())
+    }
+
+    /// The next number of the stream, refilling the local buffer from
+    /// the source every [`chunk`](Self::with_chunk) numbers. A failed
+    /// refill (e.g. backpressure) consumes nothing and leaves the handle
+    /// ready to retry.
+    pub fn next_u32(&mut self) -> Result<u32, Error> {
+        if self.pos == self.buf.len() {
+            self.buf.resize(self.chunk, 0);
+            if let Err(e) = self.source.fetch(self.stream, &mut self.buf) {
+                // Drop the unfilled zeros: they must never be mistaken
+                // for buffered stream data on the next call.
+                self.buf.clear();
+                self.pos = 0;
+                return Err(e);
+            }
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+}
+
+impl Clone for StreamHandle {
+    fn clone(&self) -> Self {
+        Self {
+            source: self.source.clone(),
+            stream: self.stream,
+            chunk: self.chunk,
+            buf: Vec::new(),
+            pos: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for StreamHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamHandle")
+            .field("stream", &self.stream)
+            .field("engine", &self.source.engine_kind())
+            .field("chunk", &self.chunk)
+            .field("buffered", &(self.buf.len() - self.pos))
+            .finish()
+    }
+}
+
+impl Iterator for StreamHandle {
+    type Item = u32;
+
+    /// Yields the stream's numbers; ends (returns `None`) on the first
+    /// fetch error. Use [`StreamHandle::next_u32`] to observe errors.
+    fn next(&mut self) -> Option<u32> {
+        StreamHandle::next_u32(self).ok()
+    }
+}
+
+impl Prng32 for StreamHandle {
+    /// The [`Prng32`] view panics on fetch errors (see type docs).
+    fn next_u32(&mut self) -> u32 {
+        StreamHandle::next_u32(self).expect("StreamHandle fetch failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "served-thundering"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, EngineBuilder};
+    // `use super::*` brings Prng32 into scope for the scalar oracles;
+    // StreamHandle's inherent `next_u32` (Result) still takes precedence
+    // over the trait method.
+    use crate::prng::{splitmix64, ThunderingStream};
+
+    fn native_source() -> Arc<dyn StreamSource> {
+        EngineBuilder::new(8)
+            .engine(Engine::Native)
+            .group_width(4)
+            .rows_per_tile(16)
+            .build_arc()
+            .unwrap()
+    }
+
+    #[test]
+    fn handle_views_agree_with_scalar_replay() {
+        let source = native_source();
+        let mut h = StreamHandle::new(source, 5).unwrap().with_chunk(7);
+        let mut got = Vec::new();
+        // Interleave the three views; the sequence must stay seamless.
+        for _ in 0..5 {
+            got.push(h.next_u32().unwrap());
+        }
+        let mut buf = vec![0u32; 13];
+        h.fill(&mut buf).unwrap();
+        got.extend_from_slice(&buf);
+        got.extend(h.by_ref().take(6));
+
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+        let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn unknown_stream_rejected_at_handle_creation() {
+        let source = native_source();
+        assert_eq!(
+            StreamHandle::new(source, 8).unwrap_err(),
+            Error::UnknownStream { stream: 8, have: 8 }
+        );
+    }
+
+    #[test]
+    fn rejected_refill_is_retryable_without_corruption() {
+        // Lag window 8 with a 2-lane group: a chunk-8 handle on lane 0
+        // fills once, then the second refill is rejected until lane 1
+        // catches up. The retry must deliver row 8's real value, not the
+        // zeros of the failed refill.
+        let source: Arc<dyn StreamSource> = EngineBuilder::new(2)
+            .engine(Engine::Native)
+            .group_width(2)
+            .rows_per_tile(4)
+            .lag_window(8)
+            .build_arc()
+            .unwrap();
+        let mut h = StreamHandle::new(source.clone(), 0).unwrap().with_chunk(8);
+        for _ in 0..8 {
+            h.next_u32().unwrap();
+        }
+        let err = h.next_u32().unwrap_err();
+        assert!(matches!(err, Error::LagWindowExceeded { .. }));
+        // Catch lane 1 up, then the handle must resume seamlessly.
+        let mut other = vec![0u32; 8];
+        source.fetch(1, &mut other).unwrap();
+        let got = h.next_u32().unwrap();
+        let mut s = ThunderingStream::new(splitmix64(42), 0);
+        let mut expect = 0;
+        for _ in 0..9 {
+            expect = s.next_u32();
+        }
+        assert_eq!(got, expect, "row 8 after the rejected refill");
+    }
+
+    #[test]
+    fn clones_interleave_on_the_same_cursor() {
+        let source = native_source();
+        let mut a = StreamHandle::new(source, 2).unwrap().with_chunk(4);
+        let mut b = a.clone();
+        let mut got = Vec::new();
+        got.extend(a.by_ref().take(4));
+        got.extend(b.by_ref().take(4));
+        let mut s = ThunderingStream::new(splitmix64(42), 2);
+        let expect: Vec<u32> = (0..8).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect);
+    }
+}

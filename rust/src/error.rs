@@ -1,0 +1,90 @@
+//! The crate-level error type shared by every engine and client surface.
+//!
+//! Before the [`StreamSource`](crate::coordinator::StreamSource) redesign,
+//! drain failures surfaced as a coordinator-local `FetchError` on one
+//! engine and as stringly `anyhow` errors on the other; callers matching
+//! on backpressure had to parse messages. This enum is the single failure
+//! vocabulary of the public API: every engine, the builder, and
+//! [`StreamHandle`](crate::coordinator::StreamHandle) return it, and the
+//! blanket `std::error::Error` conversion keeps `?` working in
+//! `anyhow`-returning application code.
+
+/// `Result` specialized to the crate-level [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Every failure mode of the generation service.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// The requested advance would stretch a group's fastest−slowest lane
+    /// spread beyond its lag window — the service's backpressure signal.
+    /// Catch the slow lanes up (or widen the window at build time) and
+    /// retry; the rejected call consumed nothing.
+    LagWindowExceeded {
+        /// The spread (in rows) the rejected call would have created.
+        lead: u64,
+        /// The configured bound on the spread.
+        window: u64,
+    },
+    /// The stream id is not served by this source.
+    UnknownStream {
+        /// The requested stream id.
+        stream: u64,
+        /// How many streams the source serves (ids `0..have`).
+        have: u64,
+    },
+    /// The group index is not served by this source.
+    GroupOutOfRange {
+        /// The requested group index.
+        group: usize,
+        /// How many groups the source serves (indices `0..have`).
+        have: usize,
+    },
+    /// [`EngineBuilder`](crate::coordinator::EngineBuilder) rejected the
+    /// requested configuration before constructing anything.
+    InvalidConfig(String),
+    /// Generation-backend failure (artifact error, device thread gone,
+    /// worker shard died).
+    Backend(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::LagWindowExceeded { lead, window } => {
+                write!(f, "stream lead {lead} exceeds lag window {window}")
+            }
+            Error::UnknownStream { stream, have } => {
+                write!(f, "stream {stream} not registered (have {have})")
+            }
+            Error::GroupOutOfRange { group, have } => {
+                write!(f, "group {group} out of range (have {have})")
+            }
+            Error::InvalidConfig(msg) => write!(f, "invalid engine config: {msg}"),
+            Error::Backend(msg) => write!(f, "backend: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_backpressure_greppable() {
+        // Client code (and the stress tests) match on this phrase.
+        let e = Error::LagWindowExceeded { lead: 20, window: 10 };
+        assert!(format!("{e}").contains("lag window"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fallible() -> anyhow::Result<()> {
+            Err(Error::InvalidConfig("zero streams".into()))?;
+            Ok(())
+        }
+        let err = fallible().unwrap_err();
+        assert!(format!("{err}").contains("zero streams"));
+    }
+}

@@ -5,14 +5,27 @@
 //! root-state transition across many cheap per-stream "sequence output
 //! units" (leaf add + XSH-RR permutation + xorshift128 decorrelation).
 //!
+//! The public surface is one engine-agnostic API:
+//!
+//! * [`EngineBuilder`] constructs any generation engine —
+//!   [`Engine::Native`] (inline), [`Engine::Sharded`] (one prefetching
+//!   worker per core), [`Engine::Pjrt`] (AOT Pallas tiles) — behind the
+//!   [`StreamSource`] trait;
+//! * [`StreamHandle`] is the recommended per-stream client
+//!   (fill / `next_u32` / iterator views);
+//! * every engine serves bit-identical streams: stream `s` of group `g`
+//!   replays `ThunderingStream::new(splitmix64(root_seed ^ g), s)`
+//!   exactly, enforced structurally by the shared drain core
+//!   ([`coordinator::drain`]).
+//!
 //! This crate is the Layer-3 coordinator of a three-layer stack:
 //!
 //! * **Layer 1** — Pallas tile kernels (`python/compile/kernels/`),
 //!   AOT-lowered to HLO text artifacts.
 //! * **Layer 2** — JAX graphs composing the kernels
 //!   (`python/compile/model.py`).
-//! * **Layer 3** — this crate: stream registry, request router/batcher,
-//!   PJRT runtime, statistical-quality battery, FPGA substrate model, and
+//! * **Layer 3** — this crate: stream registry, generation engines, PJRT
+//!   runtime, statistical-quality battery, FPGA substrate model, and
 //!   the paper's two case-study applications.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
@@ -20,9 +33,15 @@
 
 pub mod apps;
 pub mod coordinator;
+pub mod error;
 pub mod fpga;
 pub mod prng;
 pub mod report;
 pub mod runtime;
 pub mod stats;
 pub mod util;
+
+pub use coordinator::{
+    Coordinator, Engine, EngineBuilder, ParallelCoordinator, StreamHandle, StreamSource,
+};
+pub use error::Error;

@@ -4,23 +4,27 @@
 //!   generate     stream numbers from the coordinator to stdout/devnull
 //!   quality      run the MiniCrush battery on one generator
 //!   report       regenerate a paper table/figure (or `all`)
-//!   pi           Monte-Carlo pi estimation (pjrt | native)
-//!   bs           Monte-Carlo option pricing (pjrt | native)
+//!   pi           Monte-Carlo pi estimation (native | sharded | pjrt)
+//!   bs           Monte-Carlo option pricing (native | sharded | pjrt)
 //!   throughput   measure coordinator serving throughput on this host
 //!   fpga-model   print the FPGA model design point for n instances
+//!
+//! Every engine is reached through the same [`EngineBuilder`] →
+//! [`StreamSource`] surface; `--engine` only changes what generates the
+//! tiles, never the bits.
 
 use std::io::Write;
 
 use anyhow::{bail, Result};
 
 use thundering::apps;
-use thundering::coordinator::{Config, Coordinator, Engine, ParallelCoordinator, ShardedConfig};
 use thundering::fpga::resources::ResourceModel;
 use thundering::fpga::throughput::thundering_throughput;
 use thundering::report;
 use thundering::runtime::executor::TileExecutor;
 use thundering::stats::Scale;
 use thundering::util::cli::Args;
+use thundering::{Engine, EngineBuilder, StreamSource};
 
 const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
@@ -65,12 +69,12 @@ fn print_help() {
         "thundering — ThundeRiNG (ICS'21) reproduction\n\n\
          USAGE: thundering <command> [options]\n\n\
          COMMANDS:\n  \
-         generate    --streams N --count N [--stream I] [--engine native|pjrt] [--artifacts DIR] [--out hex|none]\n  \
+         generate    --streams N --count N [--stream I] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
          quality     --gen NAME [--scale quick|standard|deep]\n  \
          report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
          pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
          bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
-         throughput  --streams N --rows N [--engine native|pjrt|sharded] [--artifacts DIR]\n  \
+         throughput  --streams N --rows N [--engine native|sharded|pjrt] [--artifacts DIR]\n  \
          fpga-model  --n INSTANCES"
     );
 }
@@ -82,29 +86,33 @@ fn artifacts_dir(args: &Args) -> String {
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
-fn engine(args: &Args, default_native: bool) -> Result<Engine> {
-    match args.get_or("engine", if default_native { "native" } else { "pjrt" }) {
+fn engine(args: &Args, default: &str) -> Result<Engine> {
+    match args.get_or("engine", default) {
         "native" => Ok(Engine::Native),
+        "sharded" => Ok(Engine::Sharded),
         "pjrt" => Ok(Engine::Pjrt { artifacts_dir: artifacts_dir(args) }),
-        other => bail!("unknown engine {other:?} (native|pjrt)"),
+        other => bail!("unknown engine {other:?} (native|sharded|pjrt)"),
     }
+}
+
+/// The shared `--streams/--group-width/--rows-per-tile/--seed` →
+/// [`EngineBuilder`] plumbing of the serving commands.
+fn builder(args: &Args, streams: u64, default_engine: &str) -> Result<EngineBuilder> {
+    Ok(EngineBuilder::new(streams)
+        .engine(engine(args, default_engine)?)
+        .group_width(args.get_usize("group-width", 64)?)
+        .rows_per_tile(args.get_usize("rows-per-tile", 1024)?)
+        .lag_window(u64::MAX / 2) // CLI consumers drain one stream/group at a time
+        .root_seed(args.get_u64("seed", 42)?))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let streams = args.get_u64("streams", 64)?;
     let count = args.get_usize("count", 1024)?;
     let stream = args.get_u64("stream", 0)?;
-    let config = Config {
-        engine: engine(args, true)?,
-        group_width: args.get_usize("group-width", 64)?,
-        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
-        lag_window: u64::MAX / 2, // single consumer
-        root_seed: args.get_u64("seed", 42)?,
-        ..Default::default()
-    };
-    let c = Coordinator::new(config, streams)?;
+    let source = builder(args, streams, "native")?.build()?;
     let mut buf = vec![0u32; count];
-    c.fetch(stream, &mut buf)?;
+    source.fetch(stream, &mut buf)?;
     match args.get_or("out", "hex") {
         "hex" => {
             let stdout = std::io::stdout();
@@ -119,7 +127,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         "none" => {}
         other => bail!("unknown --out {other:?}"),
     }
-    eprintln!("metrics: {}", c.metrics());
+    eprintln!("metrics: {}", source.metrics());
     Ok(())
 }
 
@@ -167,6 +175,15 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One consumer group per requested thread for the CPU engines.
+fn app_source(args: &Args, threads: usize, engine: Engine) -> Result<Box<dyn StreamSource>> {
+    let source = EngineBuilder::new(threads as u64 * 64)
+        .engine(engine)
+        .root_seed(args.get_u64("seed", 42)?)
+        .build()?;
+    Ok(source)
+}
+
 fn cmd_pi(args: &Args) -> Result<()> {
     let draws = args.get_u64("draws", 1 << 24)?;
     let threads = args.get_usize(
@@ -178,8 +195,8 @@ fn cmd_pi(args: &Args) -> Result<()> {
             let guard = TileExecutor::spawn(artifacts_dir(args), 4)?;
             apps::pi::run_pjrt(&guard.executor, draws, args.get_u64("seed", 42)?)?
         }
-        "native" => apps::pi::run_native(threads, draws, args.get_u64("seed", 42)?)?,
-        "sharded" => apps::pi::run_sharded(threads, draws, args.get_u64("seed", 42)?)?,
+        "native" => apps::pi::run(&*app_source(args, threads, Engine::Native)?, draws)?,
+        "sharded" => apps::pi::run(&*app_source(args, threads, Engine::Sharded)?, draws)?,
         other => bail!("unknown engine {other:?}"),
     };
     println!(
@@ -212,10 +229,12 @@ fn cmd_bs(args: &Args) -> Result<()> {
             )?
         }
         "native" => {
-            apps::option_pricing::run_native(threads, draws, args.get_u64("seed", 42)?, params)?
+            let source = app_source(args, threads, Engine::Native)?;
+            apps::option_pricing::run(&*source, draws, params)?
         }
         "sharded" => {
-            apps::option_pricing::run_sharded(threads, draws, args.get_u64("seed", 42)?, params)?
+            let source = app_source(args, threads, Engine::Sharded)?;
+            apps::option_pricing::run(&*source, draws, params)?
         }
         other => bail!("unknown engine {other:?}"),
     };
@@ -236,62 +255,25 @@ fn cmd_bs(args: &Args) -> Result<()> {
 fn cmd_throughput(args: &Args) -> Result<()> {
     let streams = args.get_u64("streams", 256)?;
     let rows = args.get_usize("rows", 1 << 16)?;
-    if args.get_or("engine", "native") == "sharded" {
-        return cmd_throughput_sharded(args, streams, rows);
-    }
-    let config = Config {
-        engine: engine(args, true)?,
-        group_width: args.get_usize("group-width", 64)?,
-        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
-        ..Default::default()
-    };
-    let rows_per_tile = config.rows_per_tile;
-    let c = Coordinator::new(config, streams)?;
-    let t0 = std::time::Instant::now();
-    let mut total = 0u64;
-    for g in 0..c.n_groups() {
-        let rows_aligned = (rows - rows % rows_per_tile).max(rows_per_tile);
-        let block = c.fetch_group_block(g, rows_aligned)?;
-        total += block.len() as u64;
-        std::hint::black_box(&block);
-    }
-    let secs = t0.elapsed().as_secs_f64();
-    println!(
-        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s)\nmetrics: {}",
-        thundering::util::fmt_rate(total as f64 / secs),
-        total as f64 * 32.0 / secs / 1e12,
-        c.metrics()
-    );
-    Ok(())
-}
-
-fn cmd_throughput_sharded(args: &Args, streams: u64, rows: usize) -> Result<()> {
-    let config = ShardedConfig {
-        group_width: args.get_usize("group-width", 64)?,
-        rows_per_tile: args.get_usize("rows-per-tile", 1024)?,
-        lag_window: u64::MAX / 2,
-        root_seed: args.get_u64("seed", 42)?,
-        ..Default::default()
-    };
-    let rows_per_tile = config.rows_per_tile;
-    let c = ParallelCoordinator::new(config, streams)?;
+    let rows_per_tile = args.get_usize("rows-per-tile", 1024)?;
+    let source = builder(args, streams, "native")?.build()?;
     let rows_aligned = (rows - rows % rows_per_tile).max(rows_per_tile);
     let t0 = std::time::Instant::now();
     let mut total = 0u64;
-    // One group block at a time (like the native path) so peak memory is
-    // a single block; generation still runs in parallel on the shards.
-    for g in 0..c.n_groups() {
-        let block = c.fetch_group_block(g, rows_aligned)?;
+    // One group block at a time so peak memory is a single block; on the
+    // sharded engine generation still runs in parallel on the shards.
+    for g in 0..source.n_groups() {
+        let block = source.fetch_block(g, rows_aligned)?;
         total += block.len() as u64;
         std::hint::black_box(&block);
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s) on {} shards\nmetrics: {}",
+        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s) on the {} engine\nmetrics: {}",
         thundering::util::fmt_rate(total as f64 / secs),
         total as f64 * 32.0 / secs / 1e12,
-        c.n_shards(),
-        c.metrics()
+        source.engine_kind(),
+        source.metrics()
     );
     Ok(())
 }

@@ -340,13 +340,17 @@ pub fn fig8_or_9(
             }
             None => s("-"),
         };
+        // Fresh native source per row so every estimate restarts its
+        // streams from the origin (one consumer group per core).
+        let source = crate::coordinator::EngineBuilder::new(threads as u64 * 64)
+            .engine(crate::coordinator::Engine::Native)
+            .build()?;
         let native = if is_pi {
-            crate::apps::pi::run_native(threads, draws, 42)?
+            crate::apps::pi::run(&*source, draws)?
         } else {
-            crate::apps::option_pricing::run_native(
-                threads,
+            crate::apps::option_pricing::run(
+                &*source,
                 draws,
-                42,
                 crate::runtime::BsParams::default(),
             )?
         };

@@ -6,28 +6,32 @@
 
 use std::sync::Arc;
 
-use thundering::coordinator::{Config, Coordinator, Engine};
+use thundering::coordinator::Coordinator;
 use thundering::prng::{splitmix64, Prng32, ThunderingStream};
+use thundering::{Engine, EngineBuilder};
 
 fn artifacts_dir() -> String {
     std::env::var("THUNDERING_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
 }
 
-fn pjrt_config() -> Config {
-    Config {
-        engine: Engine::Pjrt { artifacts_dir: artifacts_dir() },
-        group_width: 64,
-        rows_per_tile: 1024,
-        ..Default::default()
-    }
+fn build(engine: Engine, n_streams: u64) -> Coordinator {
+    EngineBuilder::new(n_streams)
+        .engine(engine)
+        .group_width(64)
+        .rows_per_tile(1024)
+        .build_coordinator()
+        .unwrap()
+}
+
+fn pjrt_engine() -> Engine {
+    Engine::Pjrt { artifacts_dir: artifacts_dir() }
 }
 
 #[test]
 fn pjrt_coordinator_matches_native() {
-    let pjrt = Coordinator::new(pjrt_config(), 128).unwrap();
-    let native =
-        Coordinator::new(Config { engine: Engine::Native, ..pjrt_config() }, 128).unwrap();
+    let pjrt = build(pjrt_engine(), 128);
+    let native = build(Engine::Native, 128);
     assert_eq!(pjrt.artifact(), Some("thundering_b1024_p64"));
 
     for stream in [0u64, 1, 63, 64, 127] {
@@ -41,8 +45,8 @@ fn pjrt_coordinator_matches_native() {
 
 #[test]
 fn pjrt_group_block_matches_scalar_oracle() {
-    let c = Coordinator::new(pjrt_config(), 64).unwrap();
-    let block = c.fetch_group_block(0, 2048).unwrap();
+    let c = build(pjrt_engine(), 64);
+    let block = c.fetch_block(0, 2048).unwrap();
     // Column j of group 0 is stream j, seeded splitmix64(42 ^ 0).
     for j in [0usize, 13, 63] {
         let mut s = ThunderingStream::new(splitmix64(42), j as u64);
@@ -54,7 +58,7 @@ fn pjrt_group_block_matches_scalar_oracle() {
 
 #[test]
 fn pjrt_concurrent_clients_ordered_delivery() {
-    let c = Arc::new(Coordinator::new(pjrt_config(), 256).unwrap());
+    let c = Arc::new(build(pjrt_engine(), 256));
     let mut handles = Vec::new();
     for t in 0..16u64 {
         let c = c.clone();
@@ -83,8 +87,8 @@ fn pjrt_concurrent_clients_ordered_delivery() {
 
 #[test]
 fn metrics_track_backend_time() {
-    let c = Coordinator::new(pjrt_config(), 64).unwrap();
-    let _ = c.fetch_group_block(0, 1024).unwrap();
+    let c = build(pjrt_engine(), 64);
+    let _ = c.fetch_block(0, 1024).unwrap();
     let m = c.metrics();
     assert_eq!(m.tiles_executed, 1);
     assert!(m.backend_ns > 0);

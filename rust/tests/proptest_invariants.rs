@@ -2,11 +2,12 @@
 //! (proptest is unavailable offline; cases are driven by our own
 //! splitmix64 with fixed seeds, so failures are perfectly reproducible.)
 
-use thundering::coordinator::{Config, Coordinator, Engine, StreamRegistry};
+use thundering::coordinator::StreamRegistry;
 use thundering::prng::lcg::{lcg_jump, lcg_step, LCG_A, LCG_C};
 use thundering::prng::thundering::leaf_h;
-use thundering::prng::xorshift::{xs128_jump, xs128_step_packed, pack, unpack, XS128_SEED};
+use thundering::prng::xorshift::{pack, unpack, xs128_jump, xs128_step_packed};
 use thundering::prng::{splitmix64, Prng32, SplitMix64, ThunderingStream};
+use thundering::{Engine, EngineBuilder, Error, StreamSource};
 
 /// Property: any fetch schedule delivers each stream's exact scalar
 /// sequence, regardless of interleaving, chunk sizes, and group shape.
@@ -18,18 +19,14 @@ fn prop_fetch_schedule_preserves_per_stream_order() {
         let n_groups = 1 + rng.next_u32() as usize % 3;
         let rows_per_tile = [4usize, 16, 64][rng.next_u32() as usize % 3];
         let n_streams = (width * n_groups) as u64;
-        let c = Coordinator::new(
-            Config {
-                engine: Engine::Native,
-                group_width: width,
-                rows_per_tile,
-                lag_window: 1 << 14,
-                root_seed: 42,
-                ..Default::default()
-            },
-            n_streams,
-        )
-        .unwrap();
+        let c = EngineBuilder::new(n_streams)
+            .engine(Engine::Native)
+            .group_width(width)
+            .rows_per_tile(rows_per_tile)
+            .lag_window(1 << 14)
+            .root_seed(42)
+            .build()
+            .unwrap();
 
         let mut delivered: Vec<Vec<u32>> = vec![Vec::new(); n_streams as usize];
         for _ in 0..60 {
@@ -50,23 +47,124 @@ fn prop_fetch_schedule_preserves_per_stream_order() {
     }
 }
 
+/// Property: the builder rejects every degenerate configuration —
+/// randomized over the parameter space so the rejection logic holds for
+/// arbitrary (not just hand-picked) bad values.
+#[test]
+fn prop_builder_rejects_invalid_configs() {
+    let mut rng = SplitMix64::new(0xBAD_CFG);
+    for _ in 0..50 {
+        let width = 1 + rng.next_u32() as usize % 64;
+        let rows = 1 + rng.next_u32() as usize % 512;
+        let engine =
+            if rng.next_u32() % 2 == 0 { Engine::Native } else { Engine::Sharded };
+
+        // Zero streams.
+        let e = EngineBuilder::new(0).engine(engine.clone()).build().unwrap_err();
+        assert!(matches!(e, Error::InvalidConfig(_)), "{e}");
+
+        // Lag window smaller than one tile of rows.
+        let lag = rng.next_u64() % rows as u64; // in 0..rows
+        let e = EngineBuilder::new(width as u64)
+            .engine(engine.clone())
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(lag)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, Error::InvalidConfig(_)), "{e}");
+
+        // Prefetch depth 0.
+        let e = EngineBuilder::new(width as u64)
+            .engine(engine.clone())
+            .group_width(width)
+            .prefetch_depth(0)
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, Error::InvalidConfig(_)), "{e}");
+
+        // Stream count not a multiple of the group width.
+        if width > 1 {
+            let off_by = 1 + rng.next_u64() % (width as u64 - 1);
+            let misaligned = width as u64 * (1 + rng.next_u64() % 4) + off_by;
+            let e = EngineBuilder::new(misaligned)
+                .engine(engine)
+                .group_width(width)
+                .build()
+                .unwrap_err();
+            assert!(matches!(e, Error::InvalidConfig(_)), "{e}");
+        }
+    }
+}
+
+/// Property: behind `StreamSource`, the native and sharded engines are
+/// bit-identical (including *which calls fail*, and how) under random
+/// interleavings of `fetch`, `fetch_block`, and `fetch_many`.
+#[test]
+fn prop_engines_bit_identical_under_random_interleaving() {
+    let mut rng = SplitMix64::new(0xD1CE);
+    for case in 0..8 {
+        let width = [2usize, 3, 4, 8][rng.next_u32() as usize % 4];
+        let n_groups = 1 + rng.next_u32() as usize % 3;
+        let rows_per_tile = [4usize, 8, 16][rng.next_u32() as usize % 3];
+        let n_streams = (width * n_groups) as u64;
+        let seed = rng.next_u64();
+        let build = |engine: Engine| -> Box<dyn StreamSource> {
+            EngineBuilder::new(n_streams)
+                .engine(engine)
+                .group_width(width)
+                .rows_per_tile(rows_per_tile)
+                .lag_window(64) // tight: rejections are part of the contract
+                .root_seed(seed)
+                .build()
+                .unwrap()
+        };
+        let native = build(Engine::Native);
+        let sharded = build(Engine::Sharded);
+
+        for op in 0..60 {
+            match rng.next_u32() % 4 {
+                0 | 1 => {
+                    let stream = rng.next_u64() % n_streams;
+                    let n = 1 + rng.next_u32() as usize % 50;
+                    let mut a = vec![0u32; n];
+                    let mut b = vec![0u32; n];
+                    let ra = native.fetch(stream, &mut a);
+                    let rb = sharded.fetch(stream, &mut b);
+                    assert_eq!(ra, rb, "case {case} op {op}: fetch({stream}, {n})");
+                    assert_eq!(a, b, "case {case} op {op}: fetch({stream}, {n}) payload");
+                }
+                2 => {
+                    let group = rng.next_u64() as usize % n_groups;
+                    let rows = 1 + rng.next_u32() as usize % 40;
+                    let ra = native.fetch_block(group, rows);
+                    let rb = sharded.fetch_block(group, rows);
+                    assert_eq!(ra, rb, "case {case} op {op}: fetch_block({group}, {rows})");
+                }
+                _ => {
+                    let rows = 1 + rng.next_u32() as usize % 24;
+                    let ra = native.fetch_many(rows);
+                    let rb = sharded.fetch_many(rows);
+                    assert_eq!(ra, rb, "case {case} op {op}: fetch_many({rows})");
+                }
+            }
+        }
+    }
+}
+
 /// Property: lag-window rejections never corrupt subsequent delivery.
 #[test]
 fn prop_lag_rejection_is_clean() {
     let mut rng = SplitMix64::new(7);
     for _ in 0..10 {
-        let c = Coordinator::new(
-            Config {
-                engine: Engine::Native,
-                group_width: 2,
-                rows_per_tile: 8,
-                lag_window: 32,
-                root_seed: 1,
-                ..Default::default()
-            },
-            2,
-        )
-        .unwrap();
+        let c = EngineBuilder::new(2)
+            .engine(Engine::Native)
+            .group_width(2)
+            .rows_per_tile(8)
+            .lag_window(32)
+            .root_seed(1)
+            .build()
+            .unwrap();
         let mut got0 = Vec::new();
         for _ in 0..30 {
             let n = 1 + rng.next_u32() as usize % 40;

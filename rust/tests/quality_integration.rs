@@ -1,66 +1,35 @@
 //! Integration: statistical quality of the numbers actually served by the
 //! coordinator (artifact path) — the end-to-end version of Table 2's
-//! protocol at CI scale.
+//! protocol at CI scale. Served streams feed the battery through
+//! `StreamHandle`'s `Prng32` view.
 //! Requires the `xla` feature (real PJRT bindings) plus `make artifacts`.
 
 #![cfg(feature = "xla")]
 
-use thundering::coordinator::{Config, Coordinator, Engine};
-use thundering::prng::Prng32;
+use std::sync::Arc;
+
 use thundering::stats::{mini_crush, Interleaved, Scale};
+use thundering::{Engine, EngineBuilder, StreamHandle, StreamSource};
 
 fn artifacts_dir() -> String {
     std::env::var("THUNDERING_ARTIFACTS")
         .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
 }
 
-/// Adapter: a coordinator stream as a Prng32 for the battery.
-struct ServedStream {
-    c: std::sync::Arc<Coordinator>,
-    stream: u64,
-    buf: Vec<u32>,
-    pos: usize,
-}
-
-impl ServedStream {
-    fn new(c: std::sync::Arc<Coordinator>, stream: u64) -> Self {
-        Self { c, stream, buf: Vec::new(), pos: 0 }
-    }
-}
-
-impl Prng32 for ServedStream {
-    fn next_u32(&mut self) -> u32 {
-        if self.pos == self.buf.len() {
-            self.buf.resize(8192, 0);
-            self.c.fetch(self.stream, &mut self.buf).expect("fetch");
-            self.pos = 0;
-        }
-        let v = self.buf[self.pos];
-        self.pos += 1;
-        v
-    }
-
-    fn name(&self) -> &'static str {
-        "served-thundering"
-    }
+fn pjrt_source() -> Arc<dyn StreamSource> {
+    EngineBuilder::new(64)
+        .engine(Engine::Pjrt { artifacts_dir: artifacts_dir() })
+        .group_width(64)
+        .rows_per_tile(1024)
+        .lag_window(1 << 22) // single consumer races ahead of lanes
+        .build_arc()
+        .unwrap()
 }
 
 #[test]
 fn served_stream_passes_quick_battery() {
-    let c = std::sync::Arc::new(
-        Coordinator::new(
-            Config {
-                engine: Engine::Pjrt { artifacts_dir: artifacts_dir() },
-                group_width: 64,
-                rows_per_tile: 1024,
-                lag_window: 1 << 22, // single consumer races ahead of lanes
-                ..Default::default()
-            },
-            64,
-        )
-        .unwrap(),
-    );
-    let mut s = ServedStream::new(c, 7);
+    let c = pjrt_source();
+    let mut s = StreamHandle::new(c, 7).unwrap().with_chunk(8192);
     let report = mini_crush(&mut s, Scale::Quick);
     assert_eq!(report.failures(), 0, "{}", report.summary());
 }
@@ -69,21 +38,10 @@ fn served_stream_passes_quick_battery() {
 fn served_interleaved_streams_pass_quick_battery() {
     // Inter-stream protocol (Sec. 5.1.3): round-robin interleave 8 served
     // streams and test the combined sequence.
-    let c = std::sync::Arc::new(
-        Coordinator::new(
-            Config {
-                engine: Engine::Pjrt { artifacts_dir: artifacts_dir() },
-                group_width: 64,
-                rows_per_tile: 1024,
-                lag_window: 1 << 22,
-                ..Default::default()
-            },
-            64,
-        )
-        .unwrap(),
-    );
-    let streams: Vec<ServedStream> =
-        (0..8).map(|i| ServedStream::new(c.clone(), i * 8)).collect();
+    let c = pjrt_source();
+    let streams: Vec<StreamHandle> = (0..8)
+        .map(|i| StreamHandle::new(c.clone(), i * 8).unwrap().with_chunk(8192))
+        .collect();
     let mut il = Interleaved::new(streams);
     let report = mini_crush(&mut il, Scale::Quick);
     assert_eq!(report.failures(), 0, "{}", report.summary());

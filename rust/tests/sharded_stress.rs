@@ -1,23 +1,26 @@
 //! Thread-stress determinism for the sharded parallel engine: many
-//! concurrent clients fetching interleaved, non-aligned chunk sizes from a
-//! [`ParallelCoordinator`] must receive output **bit-identical** to scalar
+//! concurrent clients fetching interleaved, non-aligned chunk sizes from
+//! the sharded engine must receive output **bit-identical** to scalar
 //! `ThunderingStream` replay — the cross-shard, prefetching extension of
 //! `coordinator::tests::concurrent_fetches_consistent`.
 
 use std::sync::Arc;
 
-use thundering::coordinator::{ParallelCoordinator, ShardedConfig};
+use thundering::coordinator::ParallelCoordinator;
 use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
+use thundering::{Engine, EngineBuilder};
 
-fn config(width: usize, rows: usize, shards: usize) -> ShardedConfig {
-    ShardedConfig {
-        group_width: width,
-        rows_per_tile: rows,
-        lag_window: u64::MAX / 2,
-        prefetch_depth: 2,
-        shards,
-        root_seed: 42,
-    }
+fn build(width: usize, rows: usize, shards: usize, n_streams: u64) -> ParallelCoordinator {
+    EngineBuilder::new(n_streams)
+        .engine(Engine::Sharded)
+        .group_width(width)
+        .rows_per_tile(rows)
+        .lag_window(u64::MAX / 2)
+        .prefetch_depth(2)
+        .shards(shards)
+        .root_seed(42)
+        .build_sharded()
+        .unwrap()
 }
 
 #[test]
@@ -27,7 +30,7 @@ fn sixteen_clients_bit_identical_to_scalar_replay() {
     // 64-row tile boundary in every possible phase. Shard count is auto
     // (one per core), so groups share shards on small hosts — the
     // interleaving this test is designed to shake out.
-    let c = Arc::new(ParallelCoordinator::new(config(8, 64, 0), 128).unwrap());
+    let c = Arc::new(build(8, 64, 0, 128));
     let mut handles = Vec::new();
     for t in 0..16u64 {
         let c = c.clone();
@@ -56,7 +59,7 @@ fn sixteen_clients_bit_identical_to_scalar_replay() {
 fn clients_sharing_groups_stay_bit_identical() {
     // Two clients per group, different lanes: the drain lock serializes
     // them while the shard prefetches; both lanes must replay exactly.
-    let c = Arc::new(ParallelCoordinator::new(config(4, 32, 2), 16).unwrap());
+    let c = Arc::new(build(4, 32, 2, 16));
     let mut handles = Vec::new();
     for t in 0..8u64 {
         let c = c.clone();
@@ -83,9 +86,11 @@ fn clients_sharing_groups_stay_bit_identical() {
 #[test]
 fn fetch_many_blocks_match_batch_engine_across_shard_counts() {
     // The batched API must return the same bits no matter how groups are
-    // spread over shards (1, 2, or 5 shards over 5 groups).
+    // spread over shards (1, 2, or 5 shards over 5 groups) — the
+    // shard-affine tile-interleaved drain must not reorder any group's
+    // tile sequence.
     for shards in [1usize, 2, 5] {
-        let c = ParallelCoordinator::new(config(4, 16, shards), 20).unwrap();
+        let c = build(4, 16, shards, 20);
         let first = c.fetch_many(32).unwrap();
         let second = c.fetch_many(16).unwrap();
         assert_eq!(first.len(), 5);
@@ -102,7 +107,7 @@ fn fetch_many_blocks_match_batch_engine_across_shard_counts() {
 fn prime_sized_chunks_across_shared_shards_replay_exactly() {
     // Chunk size 97 (coprime to the 16-row tile) walks the copy window
     // through every intra-tile phase; two groups share two shards.
-    let c = Arc::new(ParallelCoordinator::new(config(4, 16, 2), 8).unwrap());
+    let c = Arc::new(build(4, 16, 2, 8));
     let mut handles = Vec::new();
     for &stream in &[1u64, 6, 3, 7] {
         let c = c.clone();
@@ -122,5 +127,48 @@ fn prime_sized_chunks_across_shared_shards_replay_exactly() {
         let mut s = ThunderingStream::new(splitmix64(42 ^ g), stream);
         let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
         assert_eq!(got, expect, "stream {stream}");
+    }
+}
+
+#[test]
+fn concurrent_fetch_many_callers_partition_cleanly() {
+    // Two threads hammering the all-groups batched API: the up-front
+    // index-ordered drain locking must hand out disjoint, in-order row
+    // ranges — the union must replay each group's tile sequence exactly.
+    let c = Arc::new(build(4, 16, 2, 8));
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut mine = Vec::new();
+            for _ in 0..4 {
+                mine.push(c.fetch_many(32).unwrap());
+            }
+            mine
+        }));
+    }
+    let mut per_group_rows: Vec<Vec<Vec<u32>>> = vec![Vec::new(); 2];
+    for h in handles {
+        for batch in h.join().unwrap() {
+            for (g, block) in batch.into_iter().enumerate() {
+                per_group_rows[g].push(block);
+            }
+        }
+    }
+    // 8 blocks of 32 rows per group, in *some* interleaving; sorting by
+    // first element is not valid (order matters), so instead check that
+    // the multiset of blocks equals the split of the 256-row replay.
+    for (g, blocks) in per_group_rows.iter().enumerate() {
+        let mut batch = ThunderingBatch::new(splitmix64(42 ^ g as u64), 4, g as u64 * 4);
+        let full = batch.tile(8 * 32);
+        let mut expected: Vec<&[u32]> = full.chunks(32 * 4).collect();
+        for block in blocks {
+            let pos = expected
+                .iter()
+                .position(|e| *e == block.as_slice())
+                .unwrap_or_else(|| panic!("group {g}: block not found in replay"));
+            expected.remove(pos);
+        }
+        assert!(expected.is_empty(), "group {g}: replay not fully covered");
     }
 }

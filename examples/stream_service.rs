@@ -1,31 +1,41 @@
-//! End-to-end driver (DESIGN.md "E2E"): a MISRN *service* — N client
-//! threads issue batched fetches against any engine behind the
-//! `StreamSource` surface; we report delivered throughput, request
-//! latency percentiles, and a statistical spot-check of the served
-//! numbers. Results are recorded in EXPERIMENTS.md.
+//! End-to-end driver (DESIGN.md "E2E"): a MISRN *service* behind the
+//! completion front — 64 state-sharing groups served from just 2
+//! consumer threads through one `CompletionQueue`. The consumers submit
+//! group-block requests round-robin and harvest completions as the
+//! sharded engine's workers finish them; no thread-per-group, no
+//! blocking fetch per group. We report delivered throughput, the
+//! per-consumer harvest split, and verify group 0's completions
+//! bit-identically against the scalar oracle. Results are recorded in
+//! EXPERIMENTS.md.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example stream_service -- \
-//!     [--clients 8] [--requests 64] [--chunk 65536] \
-//!     [--engine pjrt|native|sharded]
+//! cargo run --release --example stream_service -- \
+//!     [--groups 64] [--consumers 2] [--rounds 4] [--rows 1024] \
+//!     [--engine sharded|native|pjrt]
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use thundering::prng::{splitmix64, ThunderingBatch};
 use thundering::stats::{mini_crush, Scale};
 use thundering::util::cli::Args;
-use thundering::{Engine, EngineBuilder, StreamHandle};
+use thundering::{Engine, EngineBuilder, ReqTarget, StreamHandle, StreamReq};
+
+const WIDTH: usize = 64;
 
 fn main() -> anyhow::Result<()> {
-    let args =
-        Args::parse(std::env::args().skip(1), &["clients", "requests", "chunk", "engine"])?;
-    let clients = args.get_usize("clients", 8)?;
-    let requests = args.get_usize("requests", 64)?;
-    let chunk = args.get_usize("chunk", 65536)?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["groups", "consumers", "rounds", "rows", "engine"],
+    )?;
+    let groups = args.get_usize("groups", 64)?;
+    let consumers = args.get_usize("consumers", 2)?.max(1);
+    let rounds = args.get_usize("rounds", 4)?;
+    let rows = args.get_usize("rows", 1024)?;
     // --native is kept as a shorthand for --engine native.
     let engine_name =
-        if args.flag("native") { "native" } else { args.get_or("engine", "pjrt") };
-
+        if args.flag("native") { "native" } else { args.get_or("engine", "sharded") };
     let engine = match engine_name {
         "native" => Engine::Native,
         "sharded" => Engine::Sharded,
@@ -35,70 +45,106 @@ fn main() -> anyhow::Result<()> {
         },
         other => anyhow::bail!("unknown engine {other:?}"),
     };
-    let n_streams = (clients as u64).next_power_of_two().max(4) * 64;
-    let c = EngineBuilder::new(n_streams)
+
+    let cq = EngineBuilder::new((groups * WIDTH) as u64)
         .engine(engine)
-        .group_width(64)
-        .rows_per_tile(1024)
-        .lag_window(1 << 22)
-        .build_arc()?;
+        .group_width(WIDTH)
+        .rows_per_tile(rows.clamp(1, 1024))
+        .lag_window(u64::MAX / 2)
+        .build_completion()?;
     println!(
-        "serving {} streams on {}, {clients} clients x {requests} requests x {chunk} numbers",
-        n_streams,
-        c.engine_kind(),
+        "serving {} streams ({groups} groups x {WIDTH}) on {}, \
+         {consumers} consumers x {} overlapped requests (engine-driven: {})",
+        groups * WIDTH,
+        cq.source().engine_kind(),
+        groups * rounds,
+        cq.engine_driven(),
     );
 
-    // Client pattern: each client owns one state-sharing *group* and
-    // consumes whole row blocks (the Monte-Carlo pattern — all 64 lanes
-    // used). Fetching a single lane is supported but wasteful by design:
-    // state sharing advances the whole group (see coordinator docs).
-    let rows_per_request = (chunk / 64).max(1024);
+    // Submission: every group's blocks, round-major, from one thread —
+    // per-group completion order therefore equals round order, which is
+    // what lets us verify any group against the scalar oracle below.
     let t0 = Instant::now();
-    let mut latencies: Vec<f64> = Vec::new();
-    let handles: Vec<_> = (0..clients)
-        .map(|k| {
-            let c = c.clone();
-            std::thread::spawn(move || {
-                let group = k % c.n_groups();
-                let mut lats = Vec::with_capacity(requests);
-                for _ in 0..requests {
-                    let t = Instant::now();
-                    let block = c.fetch_block(group, rows_per_request).expect("fetch");
-                    lats.push(t.elapsed().as_secs_f64());
-                    std::hint::black_box(&block);
-                }
-                lats
-            })
-        })
-        .collect();
-    for h in handles {
-        latencies.extend(h.join().unwrap());
+    let mut round_of = std::collections::HashMap::new();
+    for round in 0..rounds {
+        for g in 0..groups {
+            let ticket = cq.submit(StreamReq::group(g, rows))?;
+            round_of.insert(ticket, round);
+        }
     }
-    let wall = t0.elapsed().as_secs_f64();
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
-    let total_numbers = (clients * requests * rows_per_request * 64) as f64;
+    // Harvest: `consumers` threads collectively drain every completion
+    // exactly once, keeping only group 0's blocks for verification.
+    let delivered = AtomicU64::new(0);
+    let (counts, kept) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..consumers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut harvested = 0u64;
+                    let mut group0 = Vec::new();
+                    while let Some(c) = cq.wait_any() {
+                        let block = c.result.expect("completion failed");
+                        delivered.fetch_add(block.len() as u64, Ordering::Relaxed);
+                        harvested += 1;
+                        if c.req.target() == ReqTarget::Group(0) {
+                            group0.push((c.ticket, block));
+                        } else {
+                            std::hint::black_box(&block);
+                        }
+                    }
+                    (harvested, group0)
+                })
+            })
+            .collect();
+        let mut counts = Vec::new();
+        let mut kept = Vec::new();
+        for h in handles {
+            let (n, g0) = h.join().expect("consumer panicked");
+            counts.push(n);
+            kept.extend(g0);
+        }
+        (counts, kept)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total = delivered.load(Ordering::Relaxed) as f64;
     println!(
         "wall = {wall:.3}s  delivered = {:.1}M numbers  throughput = {:.1} M/s ({:.4} Gb/s)",
-        total_numbers / 1e6,
-        total_numbers / wall / 1e6,
-        total_numbers * 32.0 / wall / 1e9
+        total / 1e6,
+        total / wall / 1e6,
+        total * 32.0 / wall / 1e9
     );
     println!(
-        "request latency: p50 = {:.3} ms  p95 = {:.3} ms  p99 = {:.3} ms  max = {:.3} ms",
-        pct(0.50) * 1e3,
-        pct(0.95) * 1e3,
-        pct(0.99) * 1e3,
-        pct(1.0) * 1e3
+        "harvest split across consumers: {counts:?} (total {} completions)",
+        counts.iter().sum::<u64>()
     );
-    println!("metrics: {}", c.metrics());
+    anyhow::ensure!(
+        counts.iter().sum::<u64>() == (groups * rounds) as u64,
+        "every ticket must complete exactly once"
+    );
+
+    // Verification: group 0's completions, in ticket (= submission)
+    // order, must replay the scalar oracle seamlessly.
+    let mut kept = kept;
+    kept.sort_by_key(|(ticket, _)| *ticket);
+    let mut oracle = ThunderingBatch::new(splitmix64(42), WIDTH, 0);
+    for (round, (ticket, block)) in kept.iter().enumerate() {
+        anyhow::ensure!(
+            round_of.get(ticket) == Some(&round),
+            "group 0 completed out of submission order"
+        );
+        anyhow::ensure!(
+            *block == oracle.tile(rows),
+            "group 0 round {round} diverged from the scalar oracle"
+        );
+    }
+    println!("group 0: {} rounds bit-identical to the scalar replay", kept.len());
+    println!("metrics: {}", cq.source().metrics());
 
     // Quality spot-check on a freshly served stream: a StreamHandle is a
     // Prng32, so it feeds the battery directly.
-    let mut s = StreamHandle::new(c.clone(), 1)?.with_chunk(8192);
+    let mut s = StreamHandle::new(cq.source().clone(), 1)?.with_chunk(8192);
     let report = mini_crush(&mut s, Scale::Quick);
     println!("served-stream quality: {}", report.summary());
-    assert!(report.passed(), "served numbers failed the battery!");
+    anyhow::ensure!(report.passed(), "served numbers failed the battery!");
     Ok(())
 }

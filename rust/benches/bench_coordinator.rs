@@ -1,6 +1,7 @@
 //! Coordinator-path benches: fetch hit/miss, group blocks, multi-client
 //! scaling — the L3 hot path — plus the headline single-thread vs sharded
-//! GRN/s comparison, emitted as a `BENCH_parallel.json` trajectory point.
+//! vs completion-front (`completion_overlap`) GRN/s comparison, emitted
+//! as a `BENCH_parallel.json` trajectory point.
 //!
 //! Run: `cargo bench --bench bench_coordinator`
 //! (BENCH_ITERS=n adjusts iterations; BENCH_PARALLEL_OUT overrides the
@@ -9,7 +10,7 @@
 use std::sync::Arc;
 
 use thundering::util::bench::{black_box, Bench, JsonReport};
-use thundering::{Engine, EngineBuilder, StreamSource};
+use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
 
 fn native(streams: u64, width: usize, rows: usize) -> Box<dyn StreamSource> {
     EngineBuilder::new(streams)
@@ -116,13 +117,37 @@ fn main() {
             }
         });
 
+        // Completion front: the same work driven by ONE consumer thread
+        // with every group's block in flight through a CompletionQueue
+        // (the worker shards complete tickets directly) — the overlap
+        // the synchronous fetch_block loop cannot express.
+        let completion = EngineBuilder::new((n_groups * width) as u64)
+            .engine(Engine::Sharded)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(u64::MAX / 2)
+            .build_completion()
+            .unwrap();
+        let m_completion = b.run("engine/completion_overlap", numbers, || {
+            for _ in 0..rounds {
+                for g in 0..n_groups {
+                    completion.submit(StreamReq::group(g, rows)).unwrap();
+                }
+            }
+            for c in completion.wait_all() {
+                black_box(c.result.unwrap());
+            }
+        });
+
         let speedup = m_sharded.throughput() / m_single.throughput();
+        let overlap_speedup = m_completion.throughput() / m_single.throughput();
         println!(
             "single-thread = {:.3} GRN/s  sharded = {:.3} GRN/s  speedup = {speedup:.2}x \
-             ({} shards)",
+             ({} shards)  completion-front = {:.3} GRN/s ({overlap_speedup:.2}x, 1 consumer)",
             m_single.throughput() / 1e9,
             m_sharded.throughput() / 1e9,
             sharded.n_shards(),
+            m_completion.throughput() / 1e9,
         );
 
         let mut rep = JsonReport::new();
@@ -134,9 +159,12 @@ fn main() {
         rep.context_num("rows_per_tile", rows as f64);
         rep.context_num("single_thread_grn_per_s", m_single.throughput() / 1e9);
         rep.context_num("sharded_grn_per_s", m_sharded.throughput() / 1e9);
+        rep.context_num("completion_overlap_grn_per_s", m_completion.throughput() / 1e9);
         rep.context_num("speedup", speedup);
+        rep.context_num("completion_overlap_speedup", overlap_speedup);
         rep.push(&m_single);
         rep.push(&m_sharded);
+        rep.push(&m_completion);
         let out = std::env::var("BENCH_PARALLEL_OUT")
             .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
         match rep.write(&out) {

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::completion::CompletionQueue;
 use crate::coordinator::registry::StreamRegistry;
 use crate::coordinator::source::StreamSource;
 use crate::coordinator::{Coordinator, ParallelCoordinator};
@@ -196,6 +197,16 @@ impl EngineBuilder {
     /// [`StreamHandle`](super::StreamHandle)s clone.
     pub fn build_arc(self) -> Result<Arc<dyn StreamSource>, Error> {
         self.build().map(Arc::from)
+    }
+
+    /// Build the configured engine and wrap it in a
+    /// [`CompletionQueue`] — the submission/completion front that lets
+    /// one consumer thread overlap fills across many groups. On the
+    /// sharded engine the worker shards complete tickets directly; on
+    /// the other engines consumer threads execute inside `wait_any`
+    /// (see [`CompletionQueue`] for the contracts).
+    pub fn build_completion(self) -> Result<CompletionQueue, Error> {
+        Ok(CompletionQueue::new(self.build_arc()?))
     }
 
     /// Typed construction of the inline-generation engine (native or

@@ -1,0 +1,741 @@
+//! io_uring-style submission/completion front over any [`StreamSource`]:
+//! one consumer thread overlaps fills across many groups.
+//!
+//! The synchronous `StreamSource` surface costs one blocked client
+//! thread per in-flight group fetch: overlapping N groups means N
+//! threads. [`CompletionQueue`] decouples *requesting* numbers from
+//! *receiving* them — clients [`submit`](CompletionQueue::submit) a
+//! [`StreamReq`] (a lane fetch or a whole group block), get back a
+//! [`Ticket`], and later harvest [`Completion`]s with
+//! [`poll`](CompletionQueue::poll) / [`wait_any`](CompletionQueue::wait_any)
+//! / [`wait_all`](CompletionQueue::wait_all):
+//!
+//! ```text
+//!  consumer ──submit(req)──▶ pending ─┬─▶ worker shards (sharded engine,
+//!     ▲                      (SQ)     │    claim + execute, no trampoline
+//!     │                               │    thread)
+//!     └──wait_any()◀── done (CQ) ◀────┴─▶ consumer threads inside
+//!            parker/condvar waker          wait_any (other engines)
+//! ```
+//!
+//! **Who executes a request.** On the sharded engine the queue registers
+//! itself with the engine ([`StreamSource::attach_completion`]); the
+//! worker shard *owning* a request's group claims and executes it inside
+//! its generation loop, generating tiles inline from the batch state it
+//! already owns — no dedicated service thread sits between the shards
+//! and the consumer. Requests too large to execute inline without
+//! stalling the shard's other groups (more than a few tiles) are left
+//! for consumer threads. On engines without their own workers (native,
+//! PJRT), consumer threads inside [`wait_any`](CompletionQueue::wait_any)
+//! claim and execute pending requests themselves, so progress never
+//! depends on a hidden thread. In both modes the crate stays
+//! offline/zero-dep: the waker is a hand-rolled parker (mutex-guarded
+//! generation counter + condvar), not an async runtime.
+//!
+//! **Ordering contract.** Requests targeting the same group execute
+//! strictly in submission order: the queue claims at most one request
+//! per group at a time, always the oldest (see `InboxState::
+//! take_claimable`), so tickets complete in submission order per stream
+//! and the engines' bit-identical replay contract extends through the
+//! completion front. Requests for *different* groups execute and
+//! complete in any order — that reordering freedom is exactly where the
+//! overlap comes from.
+//!
+//! **Delivery contract.** Completions form one shared queue: each
+//! completion is delivered to exactly one harvester, whichever consumer
+//! thread pops it first (io_uring's single-CQ discipline). A request
+//! that fails executes its failure into the completion (`result:
+//! Err(..)`) — a lag-window rejection is a completion with a retryable
+//! error, never a lost ticket. Even an executor that panics mid-request
+//! posts a `Backend`-error completion on unwind, so ticket accounting
+//! is exact.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::coordinator::source::StreamSource;
+use crate::error::Error;
+
+/// What one submitted request targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReqTarget {
+    /// The next `rows` numbers of one stream (a lane fetch, like
+    /// [`StreamSource::fetch`]).
+    Stream(u64),
+    /// One `rows × group_width` row-major block of a whole group (like
+    /// [`StreamSource::fetch_block`]).
+    Group(usize),
+}
+
+/// One submitted unit of work for a [`CompletionQueue`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamReq {
+    target: ReqTarget,
+    rows: usize,
+}
+
+impl StreamReq {
+    /// Request the next `rows` numbers of `stream`.
+    pub fn stream(stream: u64, rows: usize) -> Self {
+        Self { target: ReqTarget::Stream(stream), rows }
+    }
+
+    /// Request one `rows × group_width` block of `group`.
+    pub fn group(group: usize, rows: usize) -> Self {
+        Self { target: ReqTarget::Group(group), rows }
+    }
+
+    /// What the request targets.
+    pub fn target(&self) -> ReqTarget {
+        self.target
+    }
+
+    /// Rows requested (for a lane fetch, rows == numbers).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Opaque identity of one submission, unique per queue and monotonic in
+/// submission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ticket(u64);
+
+impl Ticket {
+    /// The raw monotonic id (useful as a map key).
+    pub fn id(&self) -> u64 {
+        self.0
+    }
+}
+
+/// A finished request, harvested from the completion side of the queue.
+#[derive(Debug)]
+pub struct Completion {
+    /// The ticket [`CompletionQueue::submit`] returned for this request.
+    pub ticket: Ticket,
+    /// The request as submitted.
+    pub req: StreamReq,
+    /// The fetched numbers, or the typed error the fetch produced
+    /// (check [`Error::is_retryable`] before giving up on a ticket).
+    pub result: Result<Vec<u32>, Error>,
+}
+
+/// A submitted-but-unfinished request (submission-queue entry).
+struct Pending {
+    ticket: Ticket,
+    req: StreamReq,
+    /// The state-sharing group the request drains (derived from the
+    /// target at submit time); per-group claims serialize on this.
+    group: usize,
+}
+
+/// Everything the mutex guards: the submission FIFO, per-group claims,
+/// and the completion FIFO.
+struct InboxState {
+    next_ticket: u64,
+    pending: VecDeque<Pending>,
+    /// `claimed[g]`: some executor currently runs a request of group `g`
+    /// — no other request of `g` may start (per-group FIFO).
+    claimed: Vec<bool>,
+    /// Scratch bitset for the claim scan (always all-false between
+    /// calls); avoids a per-entry linear membership test under the
+    /// state mutex.
+    scan_blocked: Vec<bool>,
+    /// Groups set in `scan_blocked` during the current scan (always
+    /// empty between calls) — reused so the hot claim path does not
+    /// heap-allocate under the mutex.
+    scan_touched: Vec<usize>,
+    /// Requests claimed and executing right now.
+    executing: usize,
+    done: VecDeque<Completion>,
+}
+
+impl InboxState {
+    /// Requests submitted and not yet harvested (pending + executing +
+    /// completed-but-unharvested).
+    fn outstanding(&self) -> usize {
+        self.pending.len() + self.executing + self.done.len()
+    }
+
+    /// Claim the oldest pending request that is unblocked and
+    /// `eligible` (predicate over the group and the request itself —
+    /// shards use it to decline groups they don't own and requests too
+    /// large to execute inline).
+    ///
+    /// Per-group FIFO is the load-bearing invariant: only the *front*
+    /// request of each group may ever be claimed. A group whose front
+    /// request is executing, or was passed over by this executor's
+    /// eligibility, blocks every later request of that group in this
+    /// scan — otherwise an executor declining the front request could
+    /// claim a later one and complete the stream out of order.
+    fn take_claimable(
+        &mut self,
+        eligible: &dyn Fn(usize, StreamReq) -> bool,
+    ) -> Option<Pending> {
+        // O(pending) scan using the reusable scratch bitset + touched
+        // list (both restored before returning, including the
+        // nothing-found early exit); a Vec::contains membership test or
+        // a per-scan allocation here would sit on the hot path under
+        // the state mutex.
+        let mut pos = None;
+        for (i, p) in self.pending.iter().enumerate() {
+            if self.claimed[p.group] || self.scan_blocked[p.group] {
+                continue;
+            }
+            if eligible(p.group, p.req) {
+                pos = Some(i);
+                break;
+            }
+            self.scan_blocked[p.group] = true;
+            self.scan_touched.push(p.group);
+        }
+        while let Some(g) = self.scan_touched.pop() {
+            self.scan_blocked[g] = false;
+        }
+        let p = self.pending.remove(pos?)?;
+        self.claimed[p.group] = true;
+        self.executing += 1;
+        Some(p)
+    }
+}
+
+/// The shared submission/completion state between a [`CompletionQueue`]
+/// and the engine-side executors.
+///
+/// Opaque to callers: engines receive it through
+/// [`StreamSource::attach_completion`] and drive it with crate-internal
+/// claim/complete calls; clients only ever touch the [`CompletionQueue`]
+/// wrapper.
+pub struct CompletionInbox {
+    state: Mutex<InboxState>,
+    /// Consumer-side waker: notified on every completion post and claim
+    /// release, with the condition re-checked under `state`'s lock (the
+    /// classic lost-wakeup-proof parker).
+    cv: Condvar,
+    /// Engine-side waker installed by `attach_completion`, called with
+    /// the group a request targets (for the sharded engine: bump the
+    /// *owning* shard park's generation counter and notify, so that
+    /// parked shard re-scans for claimable requests — waking every
+    /// shard on every submit would cost O(tickets × shards)).
+    waker: Mutex<Option<Box<dyn Fn(usize) + Send + Sync>>>,
+}
+
+impl CompletionInbox {
+    pub(crate) fn new(n_groups: usize) -> Self {
+        Self {
+            state: Mutex::new(InboxState {
+                next_ticket: 0,
+                pending: VecDeque::new(),
+                claimed: vec![false; n_groups],
+                scan_blocked: vec![false; n_groups],
+                scan_touched: Vec::new(),
+                executing: 0,
+                done: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            waker: Mutex::new(None),
+        }
+    }
+
+    /// Install the engine-side waker (called once from
+    /// `attach_completion`). The argument passed on each wake is the
+    /// group index of the request that needs an executor.
+    pub(crate) fn set_waker(&self, waker: Box<dyn Fn(usize) + Send + Sync>) {
+        *self.waker.lock().unwrap_or_else(|e| e.into_inner()) = Some(waker);
+    }
+
+    /// Lock the state, recovering from poisoning: the state's invariants
+    /// hold between every lock/unlock pair (each critical section is a
+    /// handful of panic-free queue/flag updates), so a poisoned mutex
+    /// only records that some *other* code panicked while holding it.
+    fn lock_state(&self) -> MutexGuard<'_, InboxState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Wake the engine executor responsible for `group`, if an engine
+    /// registered a waker.
+    fn wake_engine(&self, group: usize) {
+        if let Some(w) = &*self.waker.lock().unwrap_or_else(|e| e.into_inner()) {
+            w(group);
+        }
+    }
+
+    /// Enqueue a request (group pre-derived and validated by the
+    /// [`CompletionQueue`]), waking executors on both sides.
+    fn submit(&self, req: StreamReq, group: usize) -> Ticket {
+        let ticket = {
+            let mut st = self.lock_state();
+            let ticket = Ticket(st.next_ticket);
+            st.next_ticket += 1;
+            st.pending.push_back(Pending { ticket, req, group });
+            ticket
+        };
+        // Consumers inside wait_any may claim it; the owning shard
+        // re-scans.
+        self.cv.notify_all();
+        self.wake_engine(group);
+        ticket
+    }
+
+    /// Claim the oldest pending `eligible` request — the engine-side
+    /// executor entry point. A shard passes "groups I own, requests
+    /// small enough to execute inline"; see
+    /// [`InboxState::take_claimable`] for the per-group FIFO rules.
+    pub(crate) fn claim_where(
+        self: &Arc<Self>,
+        eligible: &dyn Fn(usize, StreamReq) -> bool,
+    ) -> Option<ClaimedReq> {
+        let p = self.lock_state().take_claimable(eligible)?;
+        Some(ClaimedReq { inbox: self.clone(), inner: Some(p) })
+    }
+
+    /// Release bookkeeping shared by every way a claim ends. With
+    /// `to_done` the completion is queued for any harvester and `None`
+    /// returns; otherwise it is handed straight back to the caller.
+    fn finish(
+        &self,
+        p: Pending,
+        result: Result<Vec<u32>, Error>,
+        to_done: bool,
+    ) -> Option<Completion> {
+        let completion = Completion { ticket: p.ticket, req: p.req, result };
+        let handed_back = {
+            let mut st = self.lock_state();
+            st.claimed[p.group] = false;
+            st.executing -= 1;
+            if to_done {
+                st.done.push_back(completion);
+                None
+            } else {
+                Some(completion)
+            }
+        };
+        // Waiters may harvest; the group's next request is claimable.
+        self.cv.notify_all();
+        self.wake_engine(p.group);
+        handed_back
+    }
+}
+
+/// A claimed pending request. Exactly one executor holds the claim on a
+/// group at a time, so per-group execution is serialized in submission
+/// order. Dropping a claim without finishing it (an executor panicked
+/// mid-request) posts a `Backend`-error completion on unwind — ticket
+/// accounting stays exact even across a dying executor.
+pub(crate) struct ClaimedReq {
+    inbox: Arc<CompletionInbox>,
+    inner: Option<Pending>,
+}
+
+impl ClaimedReq {
+    /// The request to execute.
+    pub(crate) fn req(&self) -> StreamReq {
+        // `inner` is only None after complete/release consumed `self`.
+        self.inner.as_ref().map(|p| p.req).unwrap_or_else(|| StreamReq::group(0, 0))
+    }
+
+    /// The state-sharing group the claim serializes on.
+    pub(crate) fn group(&self) -> usize {
+        self.inner.as_ref().map(|p| p.group).unwrap_or(0)
+    }
+
+    /// Finish engine-side: the completion goes to the shared completion
+    /// queue for any consumer to harvest.
+    pub(crate) fn complete(mut self, result: Result<Vec<u32>, Error>) {
+        if let Some(p) = self.inner.take() {
+            self.inbox.finish(p, result, true);
+        }
+    }
+
+    /// Finish consumer-side: the completion is returned directly to the
+    /// executing consumer (it is inside `wait_any` and wants one),
+    /// bypassing the shared queue.
+    fn into_completion(mut self, result: Result<Vec<u32>, Error>) -> Completion {
+        self.inner
+            .take()
+            .and_then(|p| self.inbox.finish(p, result, false))
+            // Unreachable by construction (`inner` is Some until a
+            // finishing call consumes `self`, and `finish(.., false)`
+            // always hands the completion back); a typed error beats a
+            // panic on the serve path.
+            .unwrap_or_else(|| Completion {
+                ticket: Ticket(u64::MAX),
+                req: StreamReq::group(0, 0),
+                result: Err(Error::Backend("claim already finished".into())),
+            })
+    }
+
+    /// Give the claim back unexecuted (engine-side contention fallback:
+    /// a shard must never block on a drain lock). Pushed to the *front*
+    /// so per-group submission order is preserved.
+    pub(crate) fn release(mut self) {
+        if let Some(p) = self.inner.take() {
+            {
+                let mut st = self.inbox.lock_state();
+                st.claimed[p.group] = false;
+                st.executing -= 1;
+                st.pending.push_front(p);
+            }
+            // A consumer inside wait_any may pick it up instead.
+            self.inbox.cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ClaimedReq {
+    fn drop(&mut self) {
+        if let Some(p) = self.inner.take() {
+            self.inbox.finish(
+                p,
+                Err(Error::Backend("completion executor panicked mid-request".into())),
+                true,
+            );
+        }
+    }
+}
+
+/// The submission/completion front: `submit` requests, harvest
+/// [`Completion`]s — one consumer thread overlaps fills across many
+/// groups (see the module docs for the execution, ordering, and
+/// delivery contracts).
+///
+/// Built via
+/// [`EngineBuilder::build_completion`](crate::coordinator::EngineBuilder::build_completion)
+/// or [`CompletionQueue::new`] over any shared source. Share it across
+/// consumer threads by reference (`&`/`Arc`); all methods take `&self`.
+///
+/// ```
+/// use thundering::{CompletionQueue, Engine, EngineBuilder, StreamReq};
+///
+/// let cq: CompletionQueue = EngineBuilder::new(128)
+///     .engine(Engine::Sharded)
+///     .group_width(4)
+///     .rows_per_tile(64)
+///     .build_completion()
+///     .unwrap();
+/// // One thread, 32 groups in flight at once.
+/// let tickets: Vec<_> = (0..32)
+///     .map(|g| cq.submit(StreamReq::group(g, 64)).unwrap())
+///     .collect();
+/// let done = cq.wait_all();
+/// assert_eq!(done.len(), tickets.len());
+/// ```
+pub struct CompletionQueue {
+    source: Arc<dyn StreamSource>,
+    inbox: Arc<CompletionInbox>,
+    engine_driven: bool,
+}
+
+impl CompletionQueue {
+    /// A completion front over `source`. If the engine can execute
+    /// requests on its own workers it hooks itself up here
+    /// ([`StreamSource::attach_completion`]); otherwise consumer threads
+    /// execute inside [`wait_any`](Self::wait_any).
+    pub fn new(source: Arc<dyn StreamSource>) -> Self {
+        let inbox = Arc::new(CompletionInbox::new(source.n_groups()));
+        let engine_driven = source.attach_completion(inbox.clone());
+        Self { source, inbox, engine_driven }
+    }
+
+    /// The source requests drain from.
+    pub fn source(&self) -> &Arc<dyn StreamSource> {
+        &self.source
+    }
+
+    /// Do the engine's own workers execute requests (sharded engine,
+    /// first queue on the source)? When `false`, requests execute on
+    /// consumer threads inside [`wait_any`](Self::wait_any) — pure
+    /// [`poll`](Self::poll) loops then make no progress on their own.
+    /// Even when `true`, workers only execute requests small enough for
+    /// inline generation (a few tiles); larger requests also need a
+    /// consumer inside `wait_any`, so never rely on `poll` alone.
+    pub fn engine_driven(&self) -> bool {
+        self.engine_driven
+    }
+
+    /// Requests submitted and not yet harvested.
+    pub fn outstanding(&self) -> usize {
+        self.inbox.lock_state().outstanding()
+    }
+
+    /// Submit a request; returns its [`Ticket`]. Targets are validated
+    /// here, so an in-flight request can only fail with a fetch-time
+    /// error (backpressure, backend).
+    pub fn submit(&self, req: StreamReq) -> Result<Ticket, Error> {
+        let group = match req.target() {
+            ReqTarget::Stream(s) => {
+                let have = self.source.n_streams();
+                if s >= have {
+                    return Err(Error::UnknownStream { stream: s, have });
+                }
+                (s / self.source.group_width() as u64) as usize
+            }
+            ReqTarget::Group(g) => {
+                let have = self.source.n_groups();
+                if g >= have {
+                    return Err(Error::GroupOutOfRange { group: g, have });
+                }
+                g
+            }
+        };
+        Ok(self.inbox.submit(req, group))
+    }
+
+    /// Harvest one completion if one is ready — never blocks, never
+    /// executes. Only *engine-worker* completions (sharded, requests
+    /// within the inline-execution bound — plus panic-unwind error
+    /// completions) land in the shared queue this reads; a completion
+    /// executed by a consumer inside [`wait_any`](Self::wait_any) is
+    /// delivered directly to that consumer and never appears here. A
+    /// poll-only loop therefore must not wait on a ticket another
+    /// consumer may harvest, nor on requests only consumers can
+    /// execute — when in doubt, use `wait_any`.
+    pub fn poll(&self) -> Option<Completion> {
+        self.inbox.lock_state().done.pop_front()
+    }
+
+    /// Block until a completion is available and harvest it; `None`
+    /// means nothing is outstanding (every submitted ticket was already
+    /// harvested — by this consumer or another).
+    ///
+    /// If no completion is ready and a pending request is claimable,
+    /// the calling thread executes it and receives that completion
+    /// directly — consumers are executors of last resort, so progress
+    /// never depends on engine workers being present.
+    pub fn wait_any(&self) -> Option<Completion> {
+        let mut st = self.inbox.lock_state();
+        loop {
+            if let Some(c) = st.done.pop_front() {
+                return Some(c);
+            }
+            if st.outstanding() == 0 {
+                return None;
+            }
+            if let Some(p) = st.take_claimable(&|_, _| true) {
+                drop(st);
+                let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
+                let result = self.execute(claimed.req());
+                return Some(claimed.into_completion(result));
+            }
+            st = self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Harvest until nothing is outstanding, returning every completion
+    /// *this* caller harvested (with concurrent consumers, each gets a
+    /// disjoint share; collectively every ticket is delivered once).
+    pub fn wait_all(&self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        while let Some(c) = self.wait_any() {
+            out.push(c);
+        }
+        out
+    }
+
+    /// Execute a request over the source's blocking surface (the
+    /// consumer-side executor; engine workers use their own zero-copy
+    /// path).
+    fn execute(&self, req: StreamReq) -> Result<Vec<u32>, Error> {
+        match req.target() {
+            ReqTarget::Group(g) => self.source.fetch_block(g, req.rows()),
+            ReqTarget::Stream(s) => {
+                let mut buf = vec![0u32; req.rows()];
+                self.source.fetch(s, &mut buf)?;
+                Ok(buf)
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for CompletionQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompletionQueue")
+            .field("engine", &self.source.engine_kind())
+            .field("engine_driven", &self.engine_driven)
+            .field("outstanding", &self.outstanding())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, EngineBuilder};
+    use crate::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
+
+    fn queue(engine: Engine, n_streams: u64, width: usize, rows: usize) -> CompletionQueue {
+        EngineBuilder::new(n_streams)
+            .engine(engine)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(u64::MAX / 2)
+            .root_seed(42)
+            .build_completion()
+            .unwrap()
+    }
+
+    fn oracle_block(group: u64, width: usize, skip: usize, rows: usize) -> Vec<u32> {
+        let mut batch =
+            ThunderingBatch::new(splitmix64(42 ^ group), width, group * width as u64);
+        if skip > 0 {
+            batch.tile(skip);
+        }
+        batch.tile(rows)
+    }
+
+    #[test]
+    fn single_consumer_overlaps_32_groups_bit_identical() {
+        // The tentpole acceptance shape: one consumer thread, 32 groups
+        // in flight through one queue, every block bit-identical to the
+        // scalar oracle, for BOTH execution modes.
+        for engine in [Engine::Sharded, Engine::Native] {
+            let cq = queue(engine, 32 * 4, 4, 8);
+            let mut expect = std::collections::HashMap::new();
+            for round in 0..3usize {
+                for g in 0..32u64 {
+                    let t = cq.submit(StreamReq::group(g as usize, 8)).unwrap();
+                    expect.insert(t, (g, round));
+                }
+            }
+            let done = cq.wait_all();
+            assert_eq!(done.len(), 96);
+            for c in done {
+                let (g, round) = expect.remove(&c.ticket).expect("duplicate ticket");
+                let block = c.result.expect("completion failed");
+                assert_eq!(block, oracle_block(g, 4, round * 8, 8), "group {g} round {round}");
+            }
+            assert!(expect.is_empty(), "lost tickets: {expect:?}");
+            assert_eq!(cq.outstanding(), 0);
+        }
+    }
+
+    #[test]
+    fn lane_requests_complete_in_submission_order_per_stream() {
+        let cq = queue(Engine::Sharded, 8, 4, 16);
+        // Three chunks of one stream: harvested blocks, concatenated in
+        // ticket order, must replay the scalar stream seamlessly.
+        let t: Vec<_> =
+            (0..3).map(|_| cq.submit(StreamReq::stream(5, 37)).unwrap()).collect();
+        let mut by_ticket = std::collections::BTreeMap::new();
+        for c in cq.wait_all() {
+            by_ticket.insert(c.ticket, c.result.unwrap());
+        }
+        let got: Vec<u32> =
+            t.iter().flat_map(|tk| by_ticket[tk].clone()).collect();
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+        let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn invalid_targets_rejected_at_submit() {
+        let cq = queue(Engine::Native, 8, 4, 16);
+        assert_eq!(
+            cq.submit(StreamReq::stream(8, 4)).unwrap_err(),
+            Error::UnknownStream { stream: 8, have: 8 }
+        );
+        assert_eq!(
+            cq.submit(StreamReq::group(2, 4)).unwrap_err(),
+            Error::GroupOutOfRange { group: 2, have: 2 }
+        );
+        assert!(cq.wait_any().is_none());
+    }
+
+    #[test]
+    fn lag_rejection_is_an_err_completion_not_a_lost_ticket() {
+        // Window = one tile; a lane request far beyond it must complete
+        // with a retryable error, and a later fair request must succeed.
+        let cq = EngineBuilder::new(2)
+            .engine(Engine::Sharded)
+            .group_width(2)
+            .rows_per_tile(4)
+            .lag_window(4)
+            .root_seed(42)
+            .build_completion()
+            .unwrap();
+        let bad = cq.submit(StreamReq::stream(0, 100)).unwrap();
+        let c = cq.wait_any().expect("one outstanding ticket");
+        assert_eq!(c.ticket, bad);
+        let err = c.result.unwrap_err();
+        assert!(err.is_retryable(), "{err}");
+        cq.submit(StreamReq::group(0, 4)).unwrap();
+        let c2 = cq.wait_any().expect("second ticket");
+        assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 0, 4));
+    }
+
+    #[test]
+    fn poll_is_pure_harvest_and_wait_any_drives() {
+        let cq = queue(Engine::Native, 8, 4, 8);
+        // Native engine: nothing executes until a consumer waits.
+        cq.submit(StreamReq::group(1, 8)).unwrap();
+        assert!(cq.poll().is_none(), "poll must not execute");
+        let c = cq.wait_any().expect("wait_any executes");
+        assert_eq!(c.result.unwrap(), oracle_block(1, 4, 0, 8));
+        assert!(cq.wait_any().is_none());
+    }
+
+    #[test]
+    fn only_the_first_queue_hooks_the_sharded_engine() {
+        let source = EngineBuilder::new(8)
+            .engine(Engine::Sharded)
+            .group_width(4)
+            .rows_per_tile(8)
+            .lag_window(u64::MAX / 2)
+            .build_arc()
+            .unwrap();
+        let a = CompletionQueue::new(source.clone());
+        let b = CompletionQueue::new(source.clone());
+        assert!(a.engine_driven());
+        assert!(!b.engine_driven(), "second front falls back to consumer-driven");
+        // Both still serve, and both drain the same underlying cursors.
+        a.submit(StreamReq::group(0, 8)).unwrap();
+        let first = a.wait_any().unwrap().result.unwrap();
+        b.submit(StreamReq::group(0, 8)).unwrap();
+        let second = b.wait_any().unwrap().result.unwrap();
+        assert_eq!(first, oracle_block(0, 4, 0, 8));
+        assert_eq!(second, oracle_block(0, 4, 8, 8));
+    }
+
+    #[test]
+    fn oversized_requests_fall_back_to_consumers_in_order() {
+        // rows_per_tile 4 → shard inline cap 32 rows: a 64-row block is
+        // too big for worker-side execution, so a consumer inside
+        // wait_any executes it (streaming tiles off the prefetch queue)
+        // while the later same-group request stays queued behind it —
+        // per-group FIFO holds even across executor kinds.
+        let cq = queue(Engine::Sharded, 4, 2, 4);
+        let big = cq.submit(StreamReq::group(0, 64)).unwrap();
+        let small = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let mut by_ticket = std::collections::BTreeMap::new();
+        for c in cq.wait_all() {
+            by_ticket.insert(c.ticket, c.result.unwrap());
+        }
+        assert_eq!(by_ticket[&big], oracle_block(0, 2, 0, 64), "oversized block");
+        assert_eq!(by_ticket[&small], oracle_block(0, 2, 64, 4), "queued behind it");
+    }
+
+    #[test]
+    fn mixed_lane_and_block_requests_on_one_group_stay_serialized() {
+        let cq = queue(Engine::Sharded, 4, 2, 4);
+        // lane 0 x3 rows, then a 4-row block, then lane 1 x5 rows: the
+        // per-group FIFO must apply them in exactly this order.
+        let t0 = cq.submit(StreamReq::stream(0, 3)).unwrap();
+        let t1 = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let t2 = cq.submit(StreamReq::stream(1, 5)).unwrap();
+        let mut by_ticket = std::collections::BTreeMap::new();
+        for c in cq.wait_all() {
+            by_ticket.insert(c.ticket, c.result.unwrap());
+        }
+        let mut s0 = ThunderingStream::new(splitmix64(42), 0);
+        let lane0: Vec<u32> = (0..3).map(|_| s0.next_u32()).collect();
+        assert_eq!(by_ticket[&t0], lane0, "lane 0 first 3");
+        let mut s1 = ThunderingStream::new(splitmix64(42), 1);
+        let block = &by_ticket[&t1];
+        for r in 0..4usize {
+            assert_eq!(block[r * 2], s0.next_u32(), "block lane0 row {r}");
+            assert_eq!(block[r * 2 + 1], s1.next_u32(), "block lane1 row {r}");
+        }
+        let lane1: Vec<u32> = (0..5).map(|_| s1.next_u32()).collect();
+        assert_eq!(by_ticket[&t2], lane1, "lane 1 after the block");
+    }
+}

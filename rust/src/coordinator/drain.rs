@@ -113,7 +113,9 @@ impl DrainState {
         let target = self.cursors[lane] + n;
 
         // Backpressure: would this lane run too far ahead of the slowest?
-        let min_cursor = *self.cursors.iter().min().unwrap();
+        // (width >= 1 is a builder invariant, so min() always exists;
+        // stay panic-free on the serve path regardless.)
+        let min_cursor = self.cursors.iter().min().copied().unwrap_or(0);
         if target - min_cursor > self.lag_window {
             metrics.add(&metrics.lag_rejections, 1);
             return Err(Error::LagWindowExceeded {
@@ -155,13 +157,28 @@ impl DrainState {
         metrics.add(&metrics.numbers_delivered, n);
 
         // Prune tiles every lane has fully consumed; recycle the buffers.
-        let min_cursor = *self.cursors.iter().min().unwrap();
-        while !self.tiles.is_empty() && self.base_row + rpt as u64 <= min_cursor {
-            let buf = self.tiles.pop_front().unwrap();
-            self.base_row += rpt as u64;
-            provider.recycle(buf);
+        let min_cursor = self.cursors.iter().min().copied().unwrap_or(0);
+        while self.base_row + rpt as u64 <= min_cursor {
+            match self.tiles.pop_front() {
+                Some(buf) => {
+                    self.base_row += rpt as u64;
+                    provider.recycle(buf);
+                }
+                None => break,
+            }
         }
         Ok(())
+    }
+
+    /// Put a tile obtained from the provider back into the buffer
+    /// without advancing any cursor — for callers that popped tiles for
+    /// a multi-group batch and must not lose them when a *different*
+    /// group's provider fails mid-batch. Only valid in sequence order:
+    /// the tile's first row must be this group's next unbuffered row
+    /// (true on the `fast_block_ready` path, where `base_row` equals
+    /// the uniform cursors and nothing else is buffered).
+    pub fn rebuffer_tile(&mut self, tile: Vec<u32>) {
+        self.tiles.push_back(tile);
     }
 
     /// Does the tile-streaming fast path apply to a `rows`-row block
@@ -180,8 +197,8 @@ impl DrainState {
         if self.fast_block_ready(rows) {
             return Ok(());
         }
-        let min_cursor = *self.cursors.iter().min().unwrap();
-        let max_target = *self.cursors.iter().max().unwrap() + rows as u64;
+        let min_cursor = self.cursors.iter().min().copied().unwrap_or(0);
+        let max_target = self.cursors.iter().max().copied().unwrap_or(0) + rows as u64;
         if max_target - min_cursor > self.lag_window {
             return Err(Error::LagWindowExceeded {
                 lead: max_target - min_cursor,
@@ -361,6 +378,23 @@ mod tests {
         assert_eq!(block, (0..16).collect::<Vec<u32>>());
         // Misaligned rows fall off the fast path.
         assert!(!d.fast_block_ready(3));
+    }
+
+    #[test]
+    fn rebuffered_tile_serves_before_fresh_generation() {
+        // Simulates fetch_many's error recovery: a tile popped out of
+        // band (the batch path) is put back; the next fetch must serve
+        // its rows first, seamlessly continuing into fresh tiles.
+        let m = Metrics::default();
+        let mut p = seq(2, 4);
+        let mut d = DrainState::new(2, 4, 1024);
+        let tile = p.next_tile(&m).unwrap(); // rows 0..4, out of band
+        d.rebuffer_tile(tile);
+        assert_eq!(d.buffered_rows(), 4);
+        let mut buf = vec![0u32; 6];
+        d.fetch_lane(0, &mut buf, &mut p, &m).unwrap();
+        let expect: Vec<u32> = (0..6).map(|r| r * 2).collect();
+        assert_eq!(buf, expect, "rows 0..6 of lane 0, no gap and no repeat");
     }
 
     /// Like [`SeqTiles`] but the backend dies after `ok_tiles` tiles —

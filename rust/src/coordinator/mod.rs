@@ -25,11 +25,16 @@
 //! * each **group** shares one root recurrence across `p` streams (state
 //!   sharing, Sec. 3.3) and advances in lockstep with a bounded lag
 //!   window, metered by the engine-shared [`drain::DrainState`];
+//! * the **completion front** ([`CompletionQueue`]) is the asynchronous
+//!   face of the same service: submit lane/group requests, harvest
+//!   completed tickets — one consumer overlaps many groups, with the
+//!   sharded engine's workers completing tickets directly;
 //! * on PJRT, the **device thread** owns the client (not `Send`) and
 //!   executes tile artifacts in submission order — the daisy chain's
 //!   software twin.
 
 pub mod builder;
+pub mod completion;
 pub mod drain;
 pub mod group;
 pub mod metrics;
@@ -37,17 +42,27 @@ pub mod registry;
 pub mod sharded;
 pub mod source;
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::anyhow;
 
 pub use builder::{Engine, EngineBuilder};
+pub use completion::{Completion, CompletionInbox, CompletionQueue, ReqTarget, StreamReq, Ticket};
 pub use drain::{DrainState, TileProvider};
 pub use group::{GroupBackend, StreamGroup};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{StreamRegistry, StreamSpec};
 pub use sharded::ParallelCoordinator;
 pub use source::{StreamHandle, StreamSource};
+
+/// Lock a serve-path mutex, mapping poisoning (a peer thread panicked
+/// while holding the lock) to a typed [`Error::Backend`] instead of
+/// unwinding every subsequent caller — one client's panic must not
+/// cascade into a panic in every thread that later touches the group.
+pub(crate) fn lock_serve<T>(m: &Mutex<T>) -> Result<MutexGuard<'_, T>, Error> {
+    m.lock()
+        .map_err(|_| Error::Backend("group state poisoned by a panicked thread".into()))
+}
 
 pub use crate::error::Error;
 
@@ -189,7 +204,7 @@ impl Coordinator {
     /// Fill `out` with the next numbers of `stream`.
     pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
         let (g, lane) = self.locate(stream)?;
-        let mut group = self.groups[g].lock().unwrap();
+        let mut group = lock_serve(&self.groups[g])?;
         group.fetch(lane, out, &self.metrics)
     }
 
@@ -200,7 +215,7 @@ impl Coordinator {
             .groups
             .get(group)
             .ok_or(Error::GroupOutOfRange { group, have: self.groups.len() })?;
-        g.lock().unwrap().fetch_block(rows, &self.metrics)
+        lock_serve(g)?.fetch_block(rows, &self.metrics)
     }
 
     /// Batched fetch: one `rows × group_width` block for **every** group,
@@ -212,7 +227,10 @@ impl Coordinator {
     /// infallible) is persistent and fatal for replay continuity: groups
     /// drained before the failure stay advanced.
     pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
-        let mut guards: Vec<_> = self.groups.iter().map(|g| g.lock().unwrap()).collect();
+        let mut guards = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            guards.push(lock_serve(g)?);
+        }
         for d in guards.iter() {
             if let Err(e) = d.block_lag_check(rows) {
                 self.metrics.add(&self.metrics.lag_rejections, 1);

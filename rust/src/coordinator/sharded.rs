@@ -45,12 +45,14 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, TryLockError, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::builder::EngineBuilder;
+use crate::coordinator::completion::{CompletionInbox, ReqTarget, StreamReq};
 use crate::coordinator::drain::{DrainState, TileProvider};
+use crate::coordinator::lock_serve;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::registry::{StreamRegistry, StreamSpec};
 use crate::coordinator::source::StreamSource;
@@ -89,9 +91,16 @@ struct Shared {
     /// group index → owning shard index.
     shard_of: Vec<usize>,
     parks: Vec<Park>,
+    /// Per-shard liveness flags, flipped off when a worker exits (even
+    /// by panic) so blocked consumers fail typed instead of forever.
+    shard_alive: Vec<AtomicBool>,
     /// Recycled tile buffers (all tiles are `rows_per_tile × width`).
     pool: Mutex<Vec<Vec<u32>>>,
     stop: AtomicBool,
+    /// The completion front attached to this engine, if any (weak: the
+    /// front owns the engine through its `Arc<dyn StreamSource>`, never
+    /// the other way around).
+    completion: Mutex<Weak<CompletionInbox>>,
     metrics: Metrics,
     width: usize,
     rows_per_tile: usize,
@@ -101,36 +110,62 @@ struct Shared {
 impl Shared {
     /// Pop the next finished tile of group `g`, blocking on the producer
     /// if the queue is momentarily empty, then nudge the owning shard
-    /// (a prefetch slot just opened).
-    fn pop_tile(&self, g: usize) -> Vec<u32> {
+    /// (a prefetch slot just opened). Fails typed — never hangs — when
+    /// the owning shard is gone (engine shutdown or a panicked worker).
+    fn pop_tile(&self, g: usize) -> Result<Vec<u32>, Error> {
         let slot = &self.groups[g];
+        let owner = self.shard_of[g];
         if !slot.active.load(Ordering::Acquire) {
             slot.active.store(true, Ordering::Release);
-            Self::nudge(&self.parks[self.shard_of[g]]);
+            Self::nudge(&self.parks[owner]);
         }
-        let mut q = slot.queue.ready.lock().unwrap();
+        let mut q = lock_serve(&slot.queue.ready)?;
         loop {
             if let Some(tile) = q.pop_front() {
                 drop(q);
-                Self::nudge(&self.parks[self.shard_of[g]]);
-                return tile;
+                Self::nudge(&self.parks[owner]);
+                return Ok(tile);
             }
-            q = slot.queue.tile_ready.wait(q).unwrap();
+            // Liveness check before parking: a dead producer will never
+            // push or signal, so waiting on it would hang this client
+            // (and, in CI, the whole runner) forever.
+            if self.stop.load(Ordering::Acquire) || !self.shard_alive[owner].load(Ordering::Acquire)
+            {
+                return Err(Error::Backend(format!(
+                    "worker shard {owner} is gone; group {g} cannot be served"
+                )));
+            }
+            let (guard, _timed_out) = slot
+                .queue
+                .tile_ready
+                .wait_timeout(q, Duration::from_millis(50))
+                .map_err(|_| {
+                    Error::Backend("group state poisoned by a panicked thread".into())
+                })?;
+            q = guard;
         }
     }
 
     /// Wake a shard: a prefetch slot opened (or we are shutting down).
+    /// Tolerates poisoning — the generation counter is a plain integer,
+    /// valid no matter where a holder panicked.
     fn nudge(park: &Park) {
-        *park.generation.lock().unwrap() += 1;
+        *park.generation.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         park.cv.notify_all();
     }
 
     /// Return a fully consumed tile buffer to the shared pool (bounded).
     fn recycle(&self, buf: Vec<u32>) {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
         if pool.len() < 2 * self.groups.len() {
             pool.push(buf);
         }
+    }
+
+    /// The attached completion inbox, if a front registered one and is
+    /// still alive.
+    fn completion_inbox(&self) -> Option<Arc<CompletionInbox>> {
+        self.completion.lock().unwrap_or_else(|e| e.into_inner()).upgrade()
     }
 }
 
@@ -145,7 +180,7 @@ impl TileProvider for QueueTiles<'_> {
     fn next_tile(&mut self, _metrics: &Metrics) -> Result<Vec<u32>, Error> {
         // Generation metrics (tiles_executed, rows_generated, backend_ns)
         // are counted by the producing shard, not here.
-        Ok(self.shared.pop_tile(self.g))
+        self.shared.pop_tile(self.g)
     }
 
     fn fill_block(
@@ -156,10 +191,86 @@ impl TileProvider for QueueTiles<'_> {
     ) -> Result<(), (usize, Error)> {
         debug_assert_eq!(rows % self.shared.rows_per_tile, 0);
         let tile_len = self.shared.rows_per_tile * self.shared.width;
-        for chunk in out.chunks_mut(tile_len) {
-            let tile = self.shared.pop_tile(self.g);
+        for (t, chunk) in out.chunks_mut(tile_len).enumerate() {
+            let tile = self.shared.pop_tile(self.g).map_err(|e| (t, e))?;
             chunk.copy_from_slice(&tile);
             self.shared.recycle(tile);
+        }
+        Ok(())
+    }
+
+    fn recycle(&mut self, buf: Vec<u32>) {
+        self.shared.recycle(buf);
+    }
+}
+
+/// The owner-shard [`TileProvider`], used when a worker shard executes a
+/// completion-front request for a group it owns: tiles already sitting
+/// in the group's queue (earlier in the sequence) drain first, then the
+/// shard generates the remainder *inline* from the batch state it owns.
+/// Crucially it never blocks — the shard is the producer it would
+/// otherwise be waiting on.
+struct OwnedTiles<'a> {
+    shared: &'a Shared,
+    g: usize,
+    batch: &'a mut ThunderingBatch,
+}
+
+impl OwnedTiles<'_> {
+    fn try_pop(&self) -> Result<Option<Vec<u32>>, Error> {
+        Ok(lock_serve(&self.shared.groups[self.g].queue.ready)?.pop_front())
+    }
+
+    /// Generate `rows` rows straight into `out`, with the same metrics
+    /// accounting as the prefetch scan.
+    fn generate_into(&mut self, rows: usize, out: &mut [u32]) {
+        let t0 = Instant::now();
+        self.batch.fill_rows(rows, out);
+        let m = &self.shared.metrics;
+        m.add(&m.backend_ns, t0.elapsed().as_nanos() as u64);
+        m.add(&m.tiles_executed, 1);
+        m.add(&m.rows_generated, rows as u64);
+    }
+}
+
+impl TileProvider for OwnedTiles<'_> {
+    fn next_tile(&mut self, _metrics: &Metrics) -> Result<Vec<u32>, Error> {
+        if let Some(tile) = self.try_pop()? {
+            return Ok(tile);
+        }
+        let rows = self.shared.rows_per_tile;
+        let mut buf = self
+            .shared
+            .pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_else(|| vec![0u32; rows * self.shared.width]);
+        debug_assert_eq!(buf.len(), rows * self.shared.width);
+        self.generate_into(rows, &mut buf);
+        Ok(buf)
+    }
+
+    fn fill_block(
+        &mut self,
+        rows: usize,
+        out: &mut [u32],
+        _metrics: &Metrics,
+    ) -> Result<(), (usize, Error)> {
+        debug_assert_eq!(rows % self.shared.rows_per_tile, 0);
+        let rpt = self.shared.rows_per_tile;
+        let tile_len = rpt * self.shared.width;
+        for (t, chunk) in out.chunks_mut(tile_len).enumerate() {
+            match self.try_pop().map_err(|e| (t, e))? {
+                Some(tile) => {
+                    chunk.copy_from_slice(&tile);
+                    self.shared.recycle(tile);
+                }
+                // Queue drained: the batch state is exactly the next
+                // tile of the sequence (single producer) — generate
+                // zero-copy into the caller's block.
+                None => self.generate_into(rpt, chunk),
+            }
         }
         Ok(())
     }
@@ -181,11 +292,28 @@ pub struct ParallelCoordinator {
     n_shards: usize,
 }
 
+/// RAII liveness marker: flips the shard's alive flag off when the
+/// worker exits — including a panic unwind — so consumers blocked on its
+/// queues fail typed ([`Error::Backend`]) instead of waiting forever on
+/// a producer that will never push again.
+struct AliveGuard {
+    shared: Arc<Shared>,
+    shard: usize,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.shared.shard_alive[self.shard].store(false, Ordering::Release);
+    }
+}
+
 fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, ThunderingBatch)>) {
+    let _alive = AliveGuard { shared: shared.clone(), shard };
     let rows = shared.rows_per_tile;
     let width = shared.width;
     while !shared.stop.load(Ordering::Acquire) {
-        let pre_scan_generation = *shared.parks[shard].generation.lock().unwrap();
+        let pre_scan_generation =
+            *shared.parks[shard].generation.lock().unwrap_or_else(|e| e.into_inner());
         let mut progress = false;
         for (g, batch) in groups.iter_mut() {
             let slot = &shared.groups[*g];
@@ -197,14 +325,15 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
             }
             // Single producer per queue: a length check now cannot be
             // invalidated by anyone but us (consumers only shrink it).
-            let has_room = slot.queue.ready.lock().unwrap().len() < shared.prefetch_depth;
+            let has_room = slot.queue.ready.lock().unwrap_or_else(|e| e.into_inner()).len()
+                < shared.prefetch_depth;
             if !has_room {
                 continue;
             }
             let mut buf = shared
                 .pool
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .pop()
                 .unwrap_or_else(|| vec![0u32; rows * width]);
             debug_assert_eq!(buf.len(), rows * width);
@@ -213,22 +342,117 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
             shared.metrics.add(&shared.metrics.backend_ns, t0.elapsed().as_nanos() as u64);
             shared.metrics.add(&shared.metrics.tiles_executed, 1);
             shared.metrics.add(&shared.metrics.rows_generated, rows as u64);
-            let mut q = slot.queue.ready.lock().unwrap();
+            let mut q = slot.queue.ready.lock().unwrap_or_else(|e| e.into_inner());
             q.push_back(buf);
             drop(q);
             slot.queue.tile_ready.notify_all();
             progress = true;
         }
+        // Completion front: claim and execute one submitted request for
+        // an owned group — the worker completes the ticket itself, no
+        // trampoline thread between generation and the consumer.
+        if let Some(inbox) = shared.completion_inbox() {
+            if serve_completion_request(&shared, shard, &inbox, &mut groups) {
+                progress = true;
+            }
+        }
         if !progress {
             // Every owned queue was full: park until a consumer frees a
-            // slot (it bumps the generation and notifies). If a nudge
-            // landed during the scan the generation already moved and we
-            // rescan immediately. The long timeout is only a backstop.
+            // slot or submits a request (both bump the generation and
+            // notify). If a nudge landed during the scan the generation
+            // already moved and we rescan immediately. The timeout is
+            // only a backstop (e.g. a completion claim released under
+            // drain-lock contention with no later nudge).
             let park = &shared.parks[shard];
-            let guard = park.generation.lock().unwrap();
+            let guard = park.generation.lock().unwrap_or_else(|e| e.into_inner());
             if *guard == pre_scan_generation && !shared.stop.load(Ordering::Acquire) {
-                let _ = park.cv.wait_timeout(guard, Duration::from_millis(100)).unwrap();
+                let _ = park
+                    .cv
+                    .wait_timeout(guard, Duration::from_millis(100))
+                    .unwrap_or_else(|e| e.into_inner());
             }
+        }
+    }
+}
+
+/// Max tiles a shard generates inline for one completion claim. Larger
+/// requests are left for consumer threads (inside `wait_any`), which
+/// stream tiles from the prefetch queue while the shard keeps serving
+/// its *other* groups — an unbounded inline execution would stall every
+/// group the shard owns for the full request (head-of-line blocking).
+const SHARD_INLINE_TILE_CAP: usize = 8;
+
+/// Claim and execute one completion-front request targeting a group
+/// this shard owns. Returns whether a request was executed (progress
+/// for the scan loop).
+fn serve_completion_request(
+    shared: &Shared,
+    shard: usize,
+    inbox: &Arc<CompletionInbox>,
+    groups: &mut [(usize, ThunderingBatch)],
+) -> bool {
+    let cap_rows = shared.rows_per_tile.saturating_mul(SHARD_INLINE_TILE_CAP);
+    let eligible =
+        |g: usize, req: StreamReq| shared.shard_of[g] == shard && req.rows() <= cap_rows;
+    let claimed = match inbox.claim_where(&eligible) {
+        Some(c) => c,
+        None => return false,
+    };
+    let g = claimed.group();
+    let slot = &shared.groups[g];
+    // A request is consumer demand: keep the group prefetched from now
+    // on, like any first touch.
+    if !slot.active.load(Ordering::Acquire) {
+        slot.active.store(true, Ordering::Release);
+    }
+    match slot.drain.try_lock() {
+        Ok(mut drain) => {
+            let req = claimed.req();
+            let result = match groups.iter_mut().find(|(owned, _)| *owned == g) {
+                Some((_, batch)) => {
+                    let mut provider = OwnedTiles { shared, g, batch };
+                    run_request(&mut drain, req, shared.width, &mut provider, &shared.metrics)
+                }
+                // Unreachable: the claim filter only admits owned groups.
+                None => Err(Error::Backend("request routed to a non-owner shard".into())),
+            };
+            drop(drain);
+            claimed.complete(result);
+            true
+        }
+        // A client holds the drain lock (a plain fetch in flight). The
+        // shard must never block here — that client might itself be
+        // waiting on tiles only this shard can generate. Hand the claim
+        // back (to the queue front, preserving per-group order); a
+        // consumer inside wait_any or a later scan picks it up.
+        Err(TryLockError::WouldBlock) => {
+            claimed.release();
+            false
+        }
+        Err(TryLockError::Poisoned(_)) => {
+            claimed.complete(Err(Error::Backend(
+                "group state poisoned by a panicked thread".into(),
+            )));
+            true
+        }
+    }
+}
+
+/// Execute one completion request against a locked drain.
+fn run_request(
+    drain: &mut DrainState,
+    req: StreamReq,
+    width: usize,
+    provider: &mut dyn TileProvider,
+    metrics: &Metrics,
+) -> Result<Vec<u32>, Error> {
+    match req.target() {
+        ReqTarget::Group(_) => drain.fetch_block(req.rows(), provider, metrics),
+        ReqTarget::Stream(s) => {
+            let lane = (s % width as u64) as usize;
+            let mut buf = vec![0u32; req.rows()];
+            drain.fetch_lane(lane, &mut buf, provider, metrics)?;
+            Ok(buf)
         }
     }
 }
@@ -262,8 +486,10 @@ impl ParallelCoordinator {
             parks: (0..n_shards)
                 .map(|_| Park { generation: Mutex::new(0), cv: Condvar::new() })
                 .collect(),
+            shard_alive: (0..n_shards).map(|_| AtomicBool::new(true)).collect(),
             pool: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
+            completion: Mutex::new(Weak::new()),
             metrics: Metrics::default(),
             width,
             rows_per_tile: b.rows_per_tile,
@@ -341,7 +567,7 @@ impl ParallelCoordinator {
             return Err(Error::UnknownStream { stream, have: self.n_streams() });
         }
         let lane = (stream % width) as usize;
-        let mut drain = self.shared.groups[g].drain.lock().unwrap();
+        let mut drain = lock_serve(&self.shared.groups[g].drain)?;
         let mut provider = QueueTiles { shared: &*self.shared, g };
         drain.fetch_lane(lane, out, &mut provider, &self.shared.metrics)
     }
@@ -352,7 +578,7 @@ impl ParallelCoordinator {
         if group >= self.shared.groups.len() {
             return Err(Error::GroupOutOfRange { group, have: self.n_groups() });
         }
-        let mut drain = self.shared.groups[group].drain.lock().unwrap();
+        let mut drain = lock_serve(&self.shared.groups[group].drain)?;
         let mut provider = QueueTiles { shared: &*self.shared, g: group };
         drain.fetch_block(rows, &mut provider, &self.shared.metrics)
     }
@@ -380,8 +606,10 @@ impl ParallelCoordinator {
     /// parked.
     pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
         let shared = &*self.shared;
-        let mut guards: Vec<_> =
-            shared.groups.iter().map(|slot| slot.drain.lock().unwrap()).collect();
+        let mut guards = Vec::with_capacity(shared.groups.len());
+        for slot in &shared.groups {
+            guards.push(lock_serve(&slot.drain)?);
+        }
         for d in guards.iter() {
             if let Err(e) = d.block_lag_check(rows) {
                 shared.metrics.add(&shared.metrics.lag_rejections, 1);
@@ -397,13 +625,31 @@ impl ParallelCoordinator {
 
         if streamable.iter().any(|&s| s) {
             let tiles_per_group = rows / rpt;
+            // On a pop failure (dead shard), the failing group is lost
+            // either way — its generator state died with its worker —
+            // but tiles already popped for *healthy* groups must be
+            // re-buffered into their drains before erroring: their
+            // queues advanced past those tiles while their cursors did
+            // not, and dropping them would silently desynchronize
+            // groups the error does not concern.
             if tiles_per_group == 1 {
                 // Single-tile blocks hand the queue buffer straight to the
                 // caller — zero-copy, and index order already cycles the
                 // shards once per group.
                 for g in 0..n {
                     if streamable[g] {
-                        out[g] = shared.pop_tile(g);
+                        match shared.pop_tile(g) {
+                            Ok(tile) => out[g] = tile,
+                            Err(e) => {
+                                for gg in 0..g {
+                                    if streamable[gg] {
+                                        guards[gg]
+                                            .rebuffer_tile(std::mem::take(&mut out[gg]));
+                                    }
+                                }
+                                return Err(e);
+                            }
+                        }
                     }
                 }
             } else {
@@ -414,11 +660,30 @@ impl ParallelCoordinator {
                 }
                 for t in 0..tiles_per_group {
                     for g in 0..n {
-                        if streamable[g] {
-                            let tile = shared.pop_tile(g);
-                            out[g][t * tile_len..(t + 1) * tile_len].copy_from_slice(&tile);
-                            shared.recycle(tile);
+                        if !streamable[g] {
+                            continue;
                         }
+                        let tile = match shared.pop_tile(g) {
+                            Ok(tile) => tile,
+                            Err(e) => {
+                                // Group gg holds t whole tiles, plus one
+                                // more for groups before g this round.
+                                for (gg, o) in out.iter().enumerate() {
+                                    if !streamable[gg] {
+                                        continue;
+                                    }
+                                    let copied = t + usize::from(gg < g);
+                                    for k in 0..copied {
+                                        guards[gg].rebuffer_tile(
+                                            o[k * tile_len..(k + 1) * tile_len].to_vec(),
+                                        );
+                                    }
+                                }
+                                return Err(e);
+                            }
+                        };
+                        out[g][t * tile_len..(t + 1) * tile_len].copy_from_slice(&tile);
+                        shared.recycle(tile);
                     }
                 }
             }
@@ -476,6 +741,29 @@ impl StreamSource for ParallelCoordinator {
 
     fn engine_kind(&self) -> &'static str {
         "sharded"
+    }
+
+    /// The sharded engine executes completion-front requests on its own
+    /// worker shards (one engine-driven front per source; later fronts
+    /// fall back to consumer-driven execution). The installed waker is
+    /// the shard parker: a submit bumps the *owning* shard park's
+    /// generation counter so that parked worker re-scans for claimable
+    /// requests (targeted, not a broadcast over all shards).
+    fn attach_completion(&self, inbox: Arc<CompletionInbox>) -> bool {
+        let mut slot = self.shared.completion.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.upgrade().is_some() {
+            return false;
+        }
+        let weak = Arc::downgrade(&self.shared);
+        inbox.set_waker(Box::new(move |group: usize| {
+            if let Some(shared) = weak.upgrade() {
+                if let Some(&s) = shared.shard_of.get(group) {
+                    Shared::nudge(&shared.parks[s]);
+                }
+            }
+        }));
+        *slot = Arc::downgrade(&inbox);
+        true
     }
 }
 

@@ -11,6 +11,7 @@
 
 use std::sync::Arc;
 
+use crate::coordinator::completion::CompletionInbox;
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::coordinator::registry::StreamSpec;
 use crate::error::Error;
@@ -66,6 +67,21 @@ pub trait StreamSource: Send + Sync {
     /// Short engine identifier (`"native"`, `"sharded"`, `"pjrt"`) for
     /// reports and logs.
     fn engine_kind(&self) -> &'static str;
+
+    /// Engine-side hook for the
+    /// [`CompletionQueue`](crate::coordinator::CompletionQueue) front.
+    ///
+    /// Engines with their own worker threads (the sharded engine)
+    /// register the inbox, claim submitted requests from it inside their
+    /// worker loops, and complete tickets directly — no trampoline
+    /// thread between generation and the consumer — returning `true`.
+    /// The default implementation declines (`false`): the completion
+    /// front then executes requests on consumer threads inside
+    /// [`wait_any`](crate::coordinator::CompletionQueue::wait_any).
+    fn attach_completion(&self, inbox: Arc<CompletionInbox>) -> bool {
+        let _ = inbox;
+        false
+    }
 }
 
 /// Default numbers fetched per refill of a [`StreamHandle`]'s local
@@ -83,8 +99,9 @@ const DEFAULT_CHUNK: usize = 4096;
 /// * [`StreamHandle::next_u32`] — buffered single numbers with explicit
 ///   error handling;
 /// * the [`Iterator`] impl — `for x in handle.by_ref().take(n)`-style
-///   consumption (iteration ends on a backpressure/backend error; use
-///   `next_u32` when you need to see the error).
+///   consumption (transient backpressure is retried in place; iteration
+///   ends only on a non-retryable error — see the impl docs, and use
+///   `next_u32` when you need to observe errors).
 ///
 /// It also implements [`Prng32`], so a served stream can feed anything
 /// that consumes a generator (e.g. the statistical battery); that view
@@ -159,19 +176,27 @@ impl StreamHandle {
     /// ready to retry.
     pub fn next_u32(&mut self) -> Result<u32, Error> {
         if self.pos == self.buf.len() {
-            self.buf.resize(self.chunk, 0);
-            if let Err(e) = self.source.fetch(self.stream, &mut self.buf) {
-                // Drop the unfilled zeros: they must never be mistaken
-                // for buffered stream data on the next call.
-                self.buf.clear();
-                self.pos = 0;
-                return Err(e);
-            }
-            self.pos = 0;
+            self.refill(self.chunk)?;
         }
         let v = self.buf[self.pos];
         self.pos += 1;
         Ok(v)
+    }
+
+    /// Refill the empty local buffer with `n` fresh numbers. A failed
+    /// refill consumes nothing and leaves the handle ready to retry.
+    fn refill(&mut self, n: usize) -> Result<(), Error> {
+        debug_assert_eq!(self.pos, self.buf.len(), "refill with numbers still buffered");
+        self.buf.resize(n, 0);
+        if let Err(e) = self.source.fetch(self.stream, &mut self.buf) {
+            // Drop the unfilled zeros: they must never be mistaken
+            // for buffered stream data on the next call.
+            self.buf.clear();
+            self.pos = 0;
+            return Err(e);
+        }
+        self.pos = 0;
+        Ok(())
     }
 }
 
@@ -201,10 +226,47 @@ impl std::fmt::Debug for StreamHandle {
 impl Iterator for StreamHandle {
     type Item = u32;
 
-    /// Yields the stream's numbers; ends (returns `None`) on the first
-    /// fetch error. Use [`StreamHandle::next_u32`] to observe errors.
+    /// Yields the stream's numbers; ends (returns `None`) only on a
+    /// *non-retryable* error (unknown stream, dead backend). Transient
+    /// backpressure ([`Error::LagWindowExceeded`], see
+    /// [`Error::is_retryable`]) is retried in place: the refill shrinks
+    /// (halving down to a single number) to use whatever headroom the
+    /// lag window still allows, then backs off between attempts — a few
+    /// yields, then 1 ms sleeps — until the group's slower lanes catch
+    /// up. With no other client advancing those lanes this waits
+    /// indefinitely (parked near-idle, not spinning) — use
+    /// [`StreamHandle::next_u32`] when backpressure must be observable.
     fn next(&mut self) -> Option<u32> {
-        StreamHandle::next_u32(self).ok()
+        if self.pos < self.buf.len() {
+            let v = self.buf[self.pos];
+            self.pos += 1;
+            return Some(v);
+        }
+        let mut attempt = self.chunk.max(1);
+        let mut stalls = 0u32;
+        loop {
+            match self.refill(attempt) {
+                Ok(()) => {
+                    let v = self.buf[self.pos];
+                    self.pos += 1;
+                    return Some(v);
+                }
+                Err(e) if e.is_retryable() => {
+                    if attempt > 1 {
+                        attempt /= 2;
+                    } else if stalls < 16 {
+                        stalls += 1;
+                        std::thread::yield_now();
+                    } else {
+                        // Even a 1-row fetch is rejected: the window is
+                        // hard-closed until a peer advances the slow
+                        // lanes. Sleep instead of livelocking a core.
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                Err(_) => return None,
+            }
+        }
     }
 }
 
@@ -294,6 +356,81 @@ mod tests {
             expect = s.next_u32();
         }
         assert_eq!(got, expect, "row 8 after the rejected refill");
+    }
+
+    #[test]
+    fn iterator_rides_out_backpressure_instead_of_ending() {
+        // The iterator twin of `rejected_refill_is_retryable_without_
+        // corruption`: same window-8 two-lane setup, but consumed through
+        // the Iterator view while a peer catches the slow lane up
+        // concurrently. Before the retry loop, next() returned None on
+        // the first LagWindowExceeded and iteration silently ended.
+        let source: Arc<dyn StreamSource> = EngineBuilder::new(2)
+            .engine(Engine::Native)
+            .group_width(2)
+            .rows_per_tile(4)
+            .lag_window(8)
+            .build_arc()
+            .unwrap();
+        let mut h = StreamHandle::new(source.clone(), 0).unwrap().with_chunk(8);
+        let first: Vec<u32> = h.by_ref().take(8).collect();
+        assert_eq!(first.len(), 8);
+        // Lane 0 now sits at the window edge: the next refill is
+        // rejected until lane 1 advances, which a peer does shortly.
+        let peer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let mut other = vec![0u32; 8];
+            source.fetch(1, &mut other).unwrap();
+        });
+        let got = h.next().expect("retryable backpressure must not end iteration");
+        peer.join().unwrap();
+        let mut s = ThunderingStream::new(splitmix64(42), 0);
+        let mut expect = 0;
+        for _ in 0..9 {
+            expect = s.next_u32();
+        }
+        assert_eq!(got, expect, "row 8 delivered seamlessly after the retries");
+    }
+
+    /// A source whose backend is permanently gone: every fetch fails
+    /// with a non-retryable error.
+    struct DeadSource;
+
+    impl StreamSource for DeadSource {
+        fn fetch(&self, _stream: u64, _out: &mut [u32]) -> Result<(), Error> {
+            Err(Error::Backend("device thread gone".into()))
+        }
+        fn fetch_block(&self, _group: usize, _rows: usize) -> Result<Vec<u32>, Error> {
+            Err(Error::Backend("device thread gone".into()))
+        }
+        fn fetch_many(&self, _rows: usize) -> Result<Vec<Vec<u32>>, Error> {
+            Err(Error::Backend("device thread gone".into()))
+        }
+        fn n_streams(&self) -> u64 {
+            4
+        }
+        fn n_groups(&self) -> usize {
+            1
+        }
+        fn group_width(&self) -> usize {
+            4
+        }
+        fn spec(&self, _stream: u64) -> Option<StreamSpec> {
+            None
+        }
+        fn metrics(&self) -> MetricsSnapshot {
+            crate::coordinator::Metrics::default().snapshot()
+        }
+        fn engine_kind(&self) -> &'static str {
+            "dead"
+        }
+    }
+
+    #[test]
+    fn iterator_still_ends_on_fatal_errors() {
+        let mut h = StreamHandle::new(Arc::new(DeadSource), 0).unwrap();
+        assert_eq!(h.next(), None, "non-retryable errors must end iteration");
+        assert!(matches!(h.next_u32().unwrap_err(), Error::Backend(_)));
     }
 
     #[test]

@@ -45,6 +45,26 @@ pub enum Error {
     /// Generation-backend failure (artifact error, device thread gone,
     /// worker shard died).
     Backend(String),
+    /// A generator name was not found in a comparison roster (e.g. the
+    /// Table 5 scaling rows) — returned instead of panicking when a row
+    /// is dropped or renamed.
+    UnknownGenerator {
+        /// The requested generator name (prefix-matched).
+        name: String,
+    },
+}
+
+impl Error {
+    /// Is this a transient condition the caller can recover from by
+    /// retrying (after letting the rest of the system make progress)?
+    ///
+    /// Today only [`Error::LagWindowExceeded`] qualifies: it is the
+    /// service's backpressure signal, cleared as soon as the group's
+    /// slow lanes catch up. Every other variant is persistent — retrying
+    /// an unknown stream or a dead backend returns the same error.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::LagWindowExceeded { .. })
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -61,6 +81,9 @@ impl std::fmt::Display for Error {
             }
             Error::InvalidConfig(msg) => write!(f, "invalid engine config: {msg}"),
             Error::Backend(msg) => write!(f, "backend: {msg}"),
+            Error::UnknownGenerator { name } => {
+                write!(f, "generator {name:?} not in the roster")
+            }
         }
     }
 }
@@ -76,6 +99,14 @@ mod tests {
         // Client code (and the stress tests) match on this phrase.
         let e = Error::LagWindowExceeded { lead: 20, window: 10 };
         assert!(format!("{e}").contains("lag window"));
+    }
+
+    #[test]
+    fn only_backpressure_is_retryable() {
+        assert!(Error::LagWindowExceeded { lead: 2, window: 1 }.is_retryable());
+        assert!(!Error::UnknownStream { stream: 9, have: 8 }.is_retryable());
+        assert!(!Error::Backend("gone".into()).is_retryable());
+        assert!(!Error::UnknownGenerator { name: "WELL".into() }.is_retryable());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use super::resources::{FpgaPart, ResourceModel};
 #[cfg(test)]
 use super::resources::U250;
+use crate::error::Error;
 
 /// Throughput of ThundeRiNG with `n` SOUs, in Tb/s (Fig. 6): each SOU
 /// emits one 32-bit sample per cycle at the post-routing frequency.
@@ -111,6 +112,16 @@ pub fn optimistic_scaling(part: &FpgaPart) -> Vec<ScalingRow> {
     rows
 }
 
+/// Look up a comparison row by name prefix. Returns a typed
+/// [`Error::UnknownGenerator`] when the generator is not in the roster
+/// (e.g. a comparator dropped or renamed between revisions) — callers
+/// used to `find(..).unwrap()` and panic instead.
+pub fn scaling_row<'a>(rows: &'a [ScalingRow], name: &str) -> Result<&'a ScalingRow, Error> {
+    rows.iter()
+        .find(|r| r.name.starts_with(name))
+        .ok_or_else(|| Error::UnknownGenerator { name: name.to_string() })
+}
+
 /// Published cuRAND throughput on the Tesla P100 (paper Table 6) — the GPU
 /// side of the comparison. We cannot measure a P100 here (repro band 0/5),
 /// so these are the paper's own published constants; our FPGA-model number
@@ -165,10 +176,20 @@ mod tests {
     }
 
     #[test]
+    fn unknown_generator_is_a_typed_error_not_a_panic() {
+        let rows = optimistic_scaling(&U250);
+        assert!(scaling_row(&rows, "ThundeRiNG").is_ok());
+        assert_eq!(
+            scaling_row(&rows, "WELL19937-SIMD").unwrap_err(),
+            Error::UnknownGenerator { name: "WELL19937-SIMD".to_string() }
+        );
+    }
+
+    #[test]
     fn table5_ordering_matches_paper() {
         let rows = optimistic_scaling(&U250);
         let get = |name: &str| {
-            rows.iter().find(|r| r.name.starts_with(name)).unwrap().throughput_tbps
+            scaling_row(&rows, name).expect("roster row").throughput_tbps
         };
         let thundering = get("ThundeRiNG");
         // Paper's ordering: ThundeRiNG > xoroshiro-opt > Li-opt > Philox-opt

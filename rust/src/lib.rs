@@ -13,6 +13,9 @@
 //!   [`StreamSource`] trait;
 //! * [`StreamHandle`] is the recommended per-stream client
 //!   (fill / `next_u32` / iterator views);
+//! * [`CompletionQueue`] is the asynchronous front over the same
+//!   service: submit lane/group requests, harvest completed tickets —
+//!   one consumer thread overlaps fills across many groups;
 //! * every engine serves bit-identical streams: stream `s` of group `g`
 //!   replays `ThunderingStream::new(splitmix64(root_seed ^ g), s)`
 //!   exactly, enforced structurally by the shared drain core
@@ -42,6 +45,7 @@ pub mod stats;
 pub mod util;
 
 pub use coordinator::{
-    Coordinator, Engine, EngineBuilder, ParallelCoordinator, StreamHandle, StreamSource,
+    Completion, CompletionQueue, Coordinator, Engine, EngineBuilder, ParallelCoordinator,
+    ReqTarget, StreamHandle, StreamReq, StreamSource, Ticket,
 };
 pub use error::Error;

@@ -24,7 +24,7 @@ use thundering::report;
 use thundering::runtime::executor::TileExecutor;
 use thundering::stats::Scale;
 use thundering::util::cli::Args;
-use thundering::{Engine, EngineBuilder, StreamSource};
+use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
 
 const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
@@ -74,7 +74,7 @@ fn print_help() {
          report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
          pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
          bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
-         throughput  --streams N --rows N [--engine native|sharded|pjrt] [--artifacts DIR]\n  \
+         throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--artifacts DIR]\n  \
          fpga-model  --n INSTANCES"
     );
 }
@@ -256,8 +256,11 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let streams = args.get_u64("streams", 256)?;
     let rows = args.get_usize("rows", 1 << 16)?;
     let rows_per_tile = args.get_usize("rows-per-tile", 1024)?;
-    let source = builder(args, streams, "native")?.build()?;
     let rows_aligned = (rows - rows % rows_per_tile).max(rows_per_tile);
+    if args.flag("completion") {
+        return throughput_completion(args, streams, rows_aligned, rows_per_tile);
+    }
+    let source = builder(args, streams, "native")?.build()?;
     let t0 = std::time::Instant::now();
     let mut total = 0u64;
     // One group block at a time so peak memory is a single block; on the
@@ -274,6 +277,64 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         total as f64 * 32.0 / secs / 1e12,
         source.engine_kind(),
         source.metrics()
+    );
+    Ok(())
+}
+
+/// `throughput --completion`: the same measurement driven through the
+/// submission/completion front — one consumer thread with every group in
+/// flight at once (`--engine sharded` completes tickets on the worker
+/// shards; other engines execute inside `wait_any`). Each group's fill
+/// is submitted as tile-sized requests so the shards execute every
+/// ticket inline (per-group order is guaranteed by the front) instead
+/// of one oversized request serializing a shard.
+fn throughput_completion(
+    args: &Args,
+    streams: u64,
+    rows_aligned: usize,
+    rows_per_tile: usize,
+) -> Result<()> {
+    let cq = builder(args, streams, "sharded")?.build_completion()?;
+    let n_groups = cq.source().n_groups();
+    let tiles_per_group = rows_aligned / rows_per_tile;
+    // Windowed pipeline: at most ~2 tiles in flight per group, so every
+    // shard stays busy but completed-but-unharvested blocks stay
+    // bounded at O(n_groups) tiles — submitting the whole workload up
+    // front would buffer all of it in the completion queue.
+    let window = n_groups.saturating_mul(2).max(1);
+    let t0 = std::time::Instant::now();
+    let mut total = 0u64;
+    let mut in_flight = 0usize;
+    // Round-major submission keeps every group (hence every shard) hot.
+    for _ in 0..tiles_per_group {
+        for g in 0..n_groups {
+            if in_flight >= window {
+                if let Some(c) = cq.wait_any() {
+                    let block = c.result?;
+                    total += block.len() as u64;
+                    std::hint::black_box(&block);
+                    in_flight -= 1;
+                }
+            }
+            cq.submit(StreamReq::group(g, rows_per_tile))?;
+            in_flight += 1;
+        }
+    }
+    for c in cq.wait_all() {
+        let block = c.result?;
+        total += block.len() as u64;
+        std::hint::black_box(&block);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s) via the completion front \
+         on the {} engine ({} tickets across {} groups, 1 consumer)\nmetrics: {}",
+        thundering::util::fmt_rate(total as f64 / secs),
+        total as f64 * 32.0 / secs / 1e12,
+        cq.source().engine_kind(),
+        n_groups * tiles_per_group,
+        n_groups,
+        cq.source().metrics()
     );
     Ok(())
 }

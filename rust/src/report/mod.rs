@@ -10,8 +10,8 @@ use crate::apps::gpu_model::{FPGA_BS, FPGA_PI, P100_BS, P100_GEN, P100_PI};
 use crate::fpga::power::{efficiency_ratio, PowerModel, GPU_BS, GPU_PI};
 use crate::fpga::resources::ResourceModel;
 use crate::fpga::throughput::{
-    optimal_throughput, optimistic_scaling, thundering_gsamples, thundering_throughput,
-    CURAND_P100,
+    optimal_throughput, optimistic_scaling, scaling_row, thundering_gsamples,
+    thundering_throughput, CURAND_P100,
 };
 use crate::prng::mrg32k3a::Mrg32k3aFamily;
 use crate::prng::philox::PhiloxFamily;
@@ -147,7 +147,9 @@ pub fn fig6() -> Result<String> {
 /// Table 5 — comparison with FPGA works (measured + optimistic scaling).
 pub fn table5() -> Result<String> {
     let rows = optimistic_scaling(&crate::fpga::U250);
-    let base = rows[0].throughput_tbps;
+    // Typed lookup, not rows[0]: the roster's order (or membership) may
+    // change; a missing baseline is an error, not an index panic.
+    let base = scaling_row(&rows, "ThundeRiNG")?.throughput_tbps;
     let mut t = Table::new(
         "Table 5 — FPGA designs: measured + optimistic scaling (model)",
         &["PRNG", "quality", "freq MHz", "max #ins", "BRAM %", "DSP %", "Tb/s", "ThundeRiNG speedup"],

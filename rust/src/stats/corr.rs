@@ -25,7 +25,7 @@ pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
 fn ranks(v: &[f64]) -> Vec<f64> {
     let n = v.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    idx.sort_by(|&a, &b| v[a].total_cmp(&v[b]));
     let mut r = vec![0f64; n];
     let mut i = 0;
     while i < n {
@@ -56,15 +56,13 @@ pub fn kendall(x: &[f64], y: &[f64]) -> f64 {
     }
     // Sort by x, count discordant pairs = inversions in the y ordering.
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| {
-        x[a].partial_cmp(&x[b]).unwrap().then(y[a].partial_cmp(&y[b]).unwrap())
-    });
+    idx.sort_by(|&a, &b| x[a].total_cmp(&x[b]).then(y[a].total_cmp(&y[b])));
     let mut ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
 
     // Tie corrections.
     let tie_count = |v: &[f64]| -> f64 {
         let mut sorted = v.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let mut total = 0.0;
         let mut i = 0;
         while i < sorted.len() {

@@ -124,7 +124,9 @@ pub fn maximum_of_t(gen: &mut dyn Prng32, t: usize, n: usize) -> TestResult {
         }
         vals.push(m.powi(t as i32)); // transform to U(0,1)
     }
-    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-safe total order (a NaN here would mean a broken generator —
+    // surface it as a failing KS statistic, not a sort panic).
+    vals.sort_by(f64::total_cmp);
     let p = two_sided_from_sf(ks_test_uniform(&vals));
     TestResult::new(&format!("max_of_{t}"), p)
 }

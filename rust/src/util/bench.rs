@@ -128,11 +128,15 @@ impl JsonReport {
 }
 
 fn percentile(samples: &[f64], pct: f64) -> f64 {
-    let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    if v.is_empty() {
+    if samples.is_empty() {
         return f64::NAN;
     }
+    let mut v = samples.to_vec();
+    // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. a
+    // zero-duration timer quantization feeding a ratio) must sort (to
+    // the end, under the IEEE total order) instead of panicking the
+    // whole bench run.
+    v.sort_by(f64::total_cmp);
     let idx = ((pct / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[idx.min(v.len() - 1)]
 }
@@ -213,6 +217,29 @@ mod tests {
         });
         assert_eq!(m.samples.len(), 5);
         assert_eq!(count, 6); // warmup + iters
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_and_keeps_the_report_valid() {
+        // Regression: percentile() used partial_cmp().unwrap(), so one
+        // NaN sample panicked the whole bench run.
+        let m = Measurement {
+            name: "nan".into(),
+            samples: vec![1.0, f64::NAN, 3.0],
+            items_per_run: 6,
+        };
+        assert_eq!(m.min(), 1.0);
+        // NaN sorts last under the total order: the median of
+        // [1.0, 3.0, NaN] is 3.0, and p95 lands on the NaN itself.
+        assert_eq!(m.median(), 3.0);
+        assert!(m.p95().is_nan());
+        // The JSON document stays parseable (NaN serializes as null).
+        let mut rep = JsonReport::new();
+        rep.push(&m);
+        let back = Json::parse(&rep.to_json().to_string()).unwrap();
+        let benches = back.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches[0].get("p95_s"), Some(&Json::Null));
+        assert_eq!(benches[0].get("median_s").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //! `ThunderingStream` replay — the cross-shard, prefetching extension of
 //! `coordinator::tests::concurrent_fetches_consistent`.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use thundering::coordinator::ParallelCoordinator;
 use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
-use thundering::{Engine, EngineBuilder};
+use thundering::{CompletionQueue, Engine, EngineBuilder, StreamReq, Ticket};
 
 fn build(width: usize, rows: usize, shards: usize, n_streams: u64) -> ParallelCoordinator {
     EngineBuilder::new(n_streams)
@@ -128,6 +129,102 @@ fn prime_sized_chunks_across_shared_shards_replay_exactly() {
         let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
         assert_eq!(got, expect, "stream {stream}");
     }
+}
+
+#[test]
+fn completion_front_four_consumers_thirty_two_groups_exact_delivery() {
+    // The completion-front stress shape from the issue: 4 consumer
+    // threads draining 32 groups through ONE CompletionQueue, tickets
+    // racing through random wait_any interleavings (spiced with poll()
+    // calls). Every ticket must be delivered exactly once — no losses,
+    // no duplicates — and every group-block completion must be
+    // bit-identical to the scalar oracle at its submission-order offset.
+    let rows = 16usize;
+    let width = 4usize;
+    let groups = 32usize;
+    let rounds = 6usize;
+    let cq: Arc<CompletionQueue> = Arc::new(
+        EngineBuilder::new((groups * width) as u64)
+            .engine(Engine::Sharded)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(u64::MAX / 2)
+            .shards(0) // one per core: groups share shards on small hosts
+            .root_seed(42)
+            .build_completion()
+            .map(|q| {
+                assert!(q.engine_driven(), "sharded engine must hook the front");
+                q
+            })
+            .unwrap(),
+    );
+
+    // Round-major submission: group g's r-th completion must carry rows
+    // [r*rows, (r+1)*rows) of g's sequence.
+    let mut round_of: HashMap<Ticket, (usize, usize)> = HashMap::new();
+    for round in 0..rounds {
+        for g in 0..groups {
+            let t = cq.submit(StreamReq::group(g, rows)).unwrap();
+            round_of.insert(t, (g, round));
+        }
+    }
+
+    type Harvest = Vec<(Ticket, StreamReq, Vec<u32>)>;
+    let harvested: Arc<Mutex<Harvest>> = Arc::new(Mutex::new(Vec::new()));
+    let mut consumers = Vec::new();
+    for k in 0..4usize {
+        let cq = Arc::clone(&cq);
+        let harvested = Arc::clone(&harvested);
+        consumers.push(std::thread::spawn(move || {
+            let mut mine = 0usize;
+            loop {
+                // Vary the harvest pattern per consumer: some poll
+                // first (pure harvest), all fall back to wait_any.
+                let c = if mine % 4 == k {
+                    cq.poll().or_else(|| cq.wait_any())
+                } else {
+                    cq.wait_any()
+                };
+                match c {
+                    Some(c) => {
+                        let block = c.result.expect("completion failed");
+                        harvested.lock().unwrap().push((c.ticket, c.req, block));
+                        mine += 1;
+                    }
+                    None => return mine,
+                }
+            }
+        }));
+    }
+    let per_consumer: Vec<usize> =
+        consumers.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(
+        per_consumer.iter().sum::<usize>(),
+        groups * rounds,
+        "collective harvest must cover every ticket: {per_consumer:?}"
+    );
+
+    let mut seen = harvested.lock().unwrap();
+    seen.sort_by_key(|(t, _, _)| *t);
+    assert_eq!(seen.len(), groups * rounds, "no ticket lost");
+    for w in seen.windows(2) {
+        assert_ne!(w[0].0, w[1].0, "no ticket duplicated");
+    }
+    // Bit-identical scalar replay, per group in submission order.
+    let mut oracles: Vec<ThunderingBatch> = (0..groups)
+        .map(|g| ThunderingBatch::new(splitmix64(42 ^ g as u64), width, (g * width) as u64))
+        .collect();
+    let mut next_round = vec![0usize; groups];
+    for (ticket, _req, block) in seen.iter() {
+        let (g, round) = round_of.remove(ticket).expect("unknown ticket completed");
+        assert_eq!(
+            next_round[g], round,
+            "group {g} completed out of submission order"
+        );
+        next_round[g] += 1;
+        assert_eq!(block, &oracles[g].tile(rows), "group {g} round {round}");
+    }
+    assert!(round_of.is_empty(), "unharvested tickets: {round_of:?}");
 }
 
 #[test]

@@ -1,7 +1,8 @@
 //! Coordinator-path benches: fetch hit/miss, group blocks, multi-client
 //! scaling — the L3 hot path — plus the headline single-thread vs sharded
-//! vs completion-front (`completion_overlap`) GRN/s comparison, emitted
-//! as a `BENCH_parallel.json` trajectory point.
+//! vs completion-front (`completion_overlap`) vs network-served
+//! (`serve/loadgen`, 8 loopback TCP connections) GRN/s comparison,
+//! emitted as a `BENCH_parallel.json` trajectory point.
 //!
 //! Run: `cargo bench --bench bench_coordinator`
 //! (BENCH_ITERS=n adjusts iterations; BENCH_PARALLEL_OUT overrides the
@@ -9,6 +10,8 @@
 
 use std::sync::Arc;
 
+use thundering::serve::loadgen::{self, LoadgenConfig};
+use thundering::serve::{ServeConfig, Server};
 use thundering::util::bench::{black_box, Bench, JsonReport};
 use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
 
@@ -139,15 +142,47 @@ fn main() {
             }
         });
 
+        // Serving layer: the same engine behind loopback TCP, hammered
+        // by 8 connections through the loadgen driver — what one
+        // network hop plus framing costs relative to in-process drains
+        // (DESIGN.md §6).
+        let serve_source = EngineBuilder::new((n_groups * width) as u64)
+            .engine(Engine::Sharded)
+            .group_width(width)
+            .rows_per_tile(rows)
+            .lag_window(u64::MAX / 2)
+            .build_arc()
+            .unwrap();
+        let server =
+            Server::start(serve_source, "127.0.0.1:0", ServeConfig::default()).unwrap();
+        let connections = 8usize;
+        let per_chunk = (rows * width) as u64;
+        let per_conn_chunks = (numbers / connections as u64).max(1).div_ceil(per_chunk);
+        let served = per_conn_chunks * per_chunk * connections as u64;
+        let loadgen_cfg = LoadgenConfig {
+            addr: server.local_addr().to_string(),
+            connections,
+            numbers_per_conn: per_conn_chunks * per_chunk,
+            chunk_rows: rows as u32,
+            ..LoadgenConfig::default()
+        };
+        let m_serve = b.run("serve/loadgen", served, || {
+            let report = loadgen::run(&loadgen_cfg).unwrap();
+            assert_eq!(report.numbers, served, "exactly-once over TCP");
+        });
+        drop(server);
+
         let speedup = m_sharded.throughput() / m_single.throughput();
         let overlap_speedup = m_completion.throughput() / m_single.throughput();
         println!(
             "single-thread = {:.3} GRN/s  sharded = {:.3} GRN/s  speedup = {speedup:.2}x \
-             ({} shards)  completion-front = {:.3} GRN/s ({overlap_speedup:.2}x, 1 consumer)",
+             ({} shards)  completion-front = {:.3} GRN/s ({overlap_speedup:.2}x, 1 consumer)  \
+             serve/loadgen = {:.3} GRN/s ({connections} TCP conns)",
             m_single.throughput() / 1e9,
             m_sharded.throughput() / 1e9,
             sharded.n_shards(),
             m_completion.throughput() / 1e9,
+            m_serve.throughput() / 1e9,
         );
 
         let mut rep = JsonReport::new();
@@ -162,9 +197,12 @@ fn main() {
         rep.context_num("completion_overlap_grn_per_s", m_completion.throughput() / 1e9);
         rep.context_num("speedup", speedup);
         rep.context_num("completion_overlap_speedup", overlap_speedup);
+        rep.context_num("serve_loadgen_grn_per_s", m_serve.throughput() / 1e9);
+        rep.context_num("serve_connections", connections as f64);
         rep.push(&m_single);
         rep.push(&m_sharded);
         rep.push(&m_completion);
+        rep.push(&m_serve);
         let out = std::env::var("BENCH_PARALLEL_OUT")
             .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
         match rep.write(&out) {

@@ -50,7 +50,7 @@
 //! posts a `Backend`-error completion on unwind, so ticket accounting
 //! is exact.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::coordinator::source::StreamSource;
@@ -148,6 +148,12 @@ struct InboxState {
     /// Requests claimed and executing right now.
     executing: usize,
     done: VecDeque<Completion>,
+    /// Ticket ids submitted and not yet harvested (mirrors
+    /// `outstanding()` but per ticket), so
+    /// [`CompletionQueue::wait_for`] can tell "still in flight" from
+    /// "already harvested by another consumer" without scanning the
+    /// pending/executing sets.
+    outstanding_tickets: HashSet<u64>,
 }
 
 impl InboxState {
@@ -197,6 +203,31 @@ impl InboxState {
         self.executing += 1;
         Some(p)
     }
+
+    /// Harvest the oldest queued completion, retiring its ticket.
+    fn harvest_front(&mut self) -> Option<Completion> {
+        let c = self.done.pop_front()?;
+        self.outstanding_tickets.remove(&c.ticket.id());
+        Some(c)
+    }
+
+    /// Harvest the queued completion of one specific ticket (if it is
+    /// sitting in the completion queue), retiring it.
+    fn harvest_ticket(&mut self, ticket: Ticket) -> Option<Completion> {
+        let pos = self.done.iter().position(|c| c.ticket == ticket)?;
+        let c = self.done.remove(pos)?;
+        self.outstanding_tickets.remove(&ticket.id());
+        Some(c)
+    }
+
+    /// Append one pending request, assigning its ticket.
+    fn enqueue(&mut self, req: StreamReq, group: usize) -> Ticket {
+        let ticket = Ticket(self.next_ticket);
+        self.next_ticket += 1;
+        self.outstanding_tickets.insert(ticket.id());
+        self.pending.push_back(Pending { ticket, req, group });
+        ticket
+    }
 }
 
 /// The shared submission/completion state between a [`CompletionQueue`]
@@ -231,6 +262,7 @@ impl CompletionInbox {
                 scan_touched: Vec::new(),
                 executing: 0,
                 done: VecDeque::new(),
+                outstanding_tickets: HashSet::new(),
             }),
             cv: Condvar::new(),
             waker: Mutex::new(None),
@@ -263,18 +295,37 @@ impl CompletionInbox {
     /// Enqueue a request (group pre-derived and validated by the
     /// [`CompletionQueue`]), waking executors on both sides.
     fn submit(&self, req: StreamReq, group: usize) -> Ticket {
-        let ticket = {
-            let mut st = self.lock_state();
-            let ticket = Ticket(st.next_ticket);
-            st.next_ticket += 1;
-            st.pending.push_back(Pending { ticket, req, group });
-            ticket
-        };
+        let ticket = self.lock_state().enqueue(req, group);
         // Consumers inside wait_any may claim it; the owning shard
         // re-scans.
         self.cv.notify_all();
         self.wake_engine(group);
         ticket
+    }
+
+    /// Enqueue a whole batch under ONE acquisition of the state mutex
+    /// (`reqs` and `groups` are parallel slices, pre-validated by the
+    /// [`CompletionQueue`]), then wake each involved shard once.
+    fn submit_many(&self, reqs: &[StreamReq], groups: &[usize]) -> Vec<Ticket> {
+        debug_assert_eq!(reqs.len(), groups.len());
+        let tickets = {
+            let mut st = self.lock_state();
+            reqs.iter()
+                .zip(groups)
+                .map(|(req, &group)| st.enqueue(*req, group))
+                .collect()
+        };
+        self.cv.notify_all();
+        // Wake each distinct group's owner once, not once per request —
+        // and dedupe in O(batch), not O(batch²): round batches over
+        // thousands of groups are exactly what submit_many is for.
+        let mut woken: HashSet<usize> = HashSet::with_capacity(groups.len().min(64));
+        for &g in groups {
+            if woken.insert(g) {
+                self.wake_engine(g);
+            }
+        }
+        tickets
     }
 
     /// Claim the oldest pending `eligible` request — the engine-side
@@ -307,6 +358,9 @@ impl CompletionInbox {
                 st.done.push_back(completion);
                 None
             } else {
+                // Handed straight to the executing consumer: the ticket
+                // is harvested the moment it leaves this call.
+                st.outstanding_tickets.remove(&completion.ticket.id());
                 Some(completion)
             }
         };
@@ -458,27 +512,55 @@ impl CompletionQueue {
         self.inbox.lock_state().outstanding()
     }
 
-    /// Submit a request; returns its [`Ticket`]. Targets are validated
-    /// here, so an in-flight request can only fail with a fetch-time
-    /// error (backpressure, backend).
-    pub fn submit(&self, req: StreamReq) -> Result<Ticket, Error> {
-        let group = match req.target() {
+    /// The state-sharing group a request drains, validated against the
+    /// source (submission-time validation: an in-flight request can only
+    /// fail with a fetch-time error).
+    fn group_of(&self, req: StreamReq) -> Result<usize, Error> {
+        match req.target() {
             ReqTarget::Stream(s) => {
                 let have = self.source.n_streams();
                 if s >= have {
                     return Err(Error::UnknownStream { stream: s, have });
                 }
-                (s / self.source.group_width() as u64) as usize
+                Ok((s / self.source.group_width() as u64) as usize)
             }
             ReqTarget::Group(g) => {
                 let have = self.source.n_groups();
                 if g >= have {
                     return Err(Error::GroupOutOfRange { group: g, have });
                 }
-                g
+                Ok(g)
             }
-        };
+        }
+    }
+
+    /// Submit a request; returns its [`Ticket`]. Targets are validated
+    /// here, so an in-flight request can only fail with a fetch-time
+    /// error (backpressure, backend).
+    pub fn submit(&self, req: StreamReq) -> Result<Ticket, Error> {
+        let group = self.group_of(req)?;
         Ok(self.inbox.submit(req, group))
+    }
+
+    /// Submit a whole batch of requests, taking the submission lock
+    /// once, and wake each involved engine shard once — the amortized
+    /// twin of [`submit`](Self::submit) for callers like the serving
+    /// layer's FILL path and the windowed throughput CLI that enqueue
+    /// many requests per decision.
+    ///
+    /// Validation is all-or-nothing: if any request targets an unknown
+    /// stream or group, the error is returned and **nothing** is
+    /// enqueued. On success the returned tickets are in `reqs` order
+    /// (and consecutive in submission order).
+    pub fn submit_many(&self, reqs: &[StreamReq]) -> Result<Vec<Ticket>, Error> {
+        let mut groups = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            groups.push(self.group_of(*req)?);
+        }
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        Ok(self.inbox.submit_many(reqs, &groups))
     }
 
     /// Harvest one completion if one is ready — never blocks, never
@@ -491,7 +573,7 @@ impl CompletionQueue {
     /// consumer may harvest, nor on requests only consumers can
     /// execute — when in doubt, use `wait_any`.
     pub fn poll(&self) -> Option<Completion> {
-        self.inbox.lock_state().done.pop_front()
+        self.inbox.lock_state().harvest_front()
     }
 
     /// Block until a completion is available and harvest it; `None`
@@ -505,7 +587,7 @@ impl CompletionQueue {
     pub fn wait_any(&self) -> Option<Completion> {
         let mut st = self.inbox.lock_state();
         loop {
-            if let Some(c) = st.done.pop_front() {
+            if let Some(c) = st.harvest_front() {
                 return Some(c);
             }
             if st.outstanding() == 0 {
@@ -518,6 +600,44 @@ impl CompletionQueue {
                 return Some(claimed.into_completion(result));
             }
             st = self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Block until **this** ticket's completion is available and harvest
+    /// it. `None` means the ticket is no longer outstanding — another
+    /// consumer already harvested it (or it was never issued by this
+    /// queue); the serving layer's ordered session flush relies on that
+    /// distinction to hand off gracefully to the shared reactor.
+    ///
+    /// Like [`wait_any`](Self::wait_any), the calling thread is an
+    /// executor of last resort: while the target is in flight it claims
+    /// and executes pending requests (oldest first, so per-group FIFO
+    /// holds), routing completions other than the target to the shared
+    /// queue for their own harvesters.
+    pub fn wait_for(&self, ticket: Ticket) -> Option<Completion> {
+        let mut st = self.inbox.lock_state();
+        loop {
+            if let Some(c) = st.harvest_ticket(ticket) {
+                return Some(c);
+            }
+            if !st.outstanding_tickets.contains(&ticket.id()) {
+                return None;
+            }
+            if let Some(p) = st.take_claimable(&|_, _| true) {
+                let is_target = p.ticket == ticket;
+                drop(st);
+                let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
+                let result = self.execute(claimed.req());
+                if is_target {
+                    return Some(claimed.into_completion(result));
+                }
+                // A foreign completion: queue it for whoever waits on
+                // it (complete() notifies them) and keep driving.
+                claimed.complete(result);
+                st = self.inbox.lock_state();
+            } else {
+                st = self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
         }
     }
 
@@ -737,5 +857,99 @@ mod tests {
         }
         let lane1: Vec<u32> = (0..5).map(|_| s1.next_u32()).collect();
         assert_eq!(by_ticket[&t2], lane1, "lane 1 after the block");
+    }
+
+    #[test]
+    fn wait_for_harvests_exactly_the_requested_ticket() {
+        // Several tickets in flight; wait_for must return the target's
+        // completion (bit-identical), leaving the others harvestable —
+        // on both execution modes.
+        for engine in [Engine::Sharded, Engine::Native] {
+            let cq = queue(engine, 4 * 4, 4, 8);
+            let tickets: Vec<_> =
+                (0..4).map(|g| cq.submit(StreamReq::group(g, 8)).unwrap()).collect();
+            let c = cq.wait_for(tickets[2]).expect("target in flight");
+            assert_eq!(c.ticket, tickets[2]);
+            assert_eq!(c.result.unwrap(), oracle_block(2, 4, 0, 8));
+            // The foreign completions it may have executed while waiting
+            // are all still delivered exactly once.
+            let rest = cq.wait_all();
+            assert_eq!(rest.len(), 3);
+            for c in rest {
+                assert_ne!(c.ticket, tickets[2], "double delivery");
+                c.result.unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn wait_for_returns_none_once_another_consumer_harvested() {
+        let cq = queue(Engine::Native, 8, 4, 8);
+        let t = cq.submit(StreamReq::group(0, 8)).unwrap();
+        let c = cq.wait_any().expect("one ticket outstanding");
+        assert_eq!(c.ticket, t);
+        assert!(cq.wait_for(t).is_none(), "already harvested elsewhere");
+        // A ticket this queue never issued is not outstanding either.
+        assert!(cq.wait_for(Ticket(9999)).is_none());
+    }
+
+    #[test]
+    fn wait_for_drives_execution_and_preserves_group_fifo() {
+        // Consumer-driven engine, two requests on one group: waiting for
+        // the SECOND must execute the first one too (oldest first), so
+        // the harvested blocks still replay seamlessly.
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let first = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let second = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let c2 = cq.wait_for(second).expect("in flight");
+        assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 4, 4), "second block");
+        let c1 = cq.wait_for(first).expect("queued while driving");
+        assert_eq!(c1.result.unwrap(), oracle_block(0, 2, 0, 4), "first block");
+    }
+
+    #[test]
+    fn submit_many_is_one_batch_with_ordered_tickets() {
+        for engine in [Engine::Sharded, Engine::Native] {
+            let cq = queue(engine, 4 * 4, 4, 8);
+            let reqs: Vec<StreamReq> = (0..4)
+                .flat_map(|g| [StreamReq::group(g, 8), StreamReq::stream(g as u64 * 4, 3)])
+                .collect();
+            let tickets = cq.submit_many(&reqs).unwrap();
+            assert_eq!(tickets.len(), reqs.len());
+            assert!(tickets.windows(2).all(|w| w[0] < w[1]), "submission order");
+            let mut by_ticket = std::collections::HashMap::new();
+            for c in cq.wait_all() {
+                assert!(by_ticket.insert(c.ticket, c.result.unwrap()).is_none());
+            }
+            assert_eq!(by_ticket.len(), reqs.len(), "exactly-once delivery");
+            for g in 0..4u64 {
+                // Per group: the 8-row block first, then 3 lane numbers
+                // of lane 0 — rows 8..11 of the scalar replay.
+                assert_eq!(
+                    by_ticket[&tickets[g as usize * 2]],
+                    oracle_block(g, 4, 0, 8),
+                    "group {g} block"
+                );
+                let mut s = ThunderingStream::new(splitmix64(42 ^ g), g * 4);
+                for _ in 0..8 {
+                    s.next_u32();
+                }
+                let lane: Vec<u32> = (0..3).map(|_| s.next_u32()).collect();
+                assert_eq!(by_ticket[&tickets[g as usize * 2 + 1]], lane, "group {g} lane");
+            }
+        }
+    }
+
+    #[test]
+    fn submit_many_validation_is_all_or_nothing() {
+        let cq = queue(Engine::Native, 8, 4, 8);
+        let reqs =
+            [StreamReq::group(0, 4), StreamReq::stream(8, 4), StreamReq::group(1, 4)];
+        assert_eq!(
+            cq.submit_many(&reqs).unwrap_err(),
+            Error::UnknownStream { stream: 8, have: 8 }
+        );
+        assert_eq!(cq.outstanding(), 0, "nothing enqueued from a rejected batch");
+        assert!(cq.submit_many(&[]).unwrap().is_empty());
     }
 }

@@ -52,6 +52,11 @@ pub enum Error {
         /// The requested generator name (prefix-matched).
         name: String,
     },
+    /// The serving layer's wire protocol broke down: an I/O failure, a
+    /// malformed or truncated frame, a version mismatch, or a peer that
+    /// closed mid-conversation (`rust/src/serve/`). The connection is
+    /// unusable afterwards — reconnect rather than retry the call.
+    Protocol(String),
 }
 
 impl Error {
@@ -84,6 +89,7 @@ impl std::fmt::Display for Error {
             Error::UnknownGenerator { name } => {
                 write!(f, "generator {name:?} not in the roster")
             }
+            Error::Protocol(msg) => write!(f, "protocol: {msg}"),
         }
     }
 }
@@ -107,6 +113,7 @@ mod tests {
         assert!(!Error::UnknownStream { stream: 9, have: 8 }.is_retryable());
         assert!(!Error::Backend("gone".into()).is_retryable());
         assert!(!Error::UnknownGenerator { name: "WELL".into() }.is_retryable());
+        assert!(!Error::Protocol("short frame".into()).is_retryable());
     }
 
     #[test]

@@ -16,9 +16,15 @@
 //! * [`CompletionQueue`] is the asynchronous front over the same
 //!   service: submit lane/group requests, harvest completed tickets —
 //!   one consumer thread overlaps fills across many groups;
-//! * every engine serves bit-identical streams: stream `s` of group `g`
-//!   replays `ThunderingStream::new(splitmix64(root_seed ^ g), s)`
-//!   exactly, enforced structurally by the shared drain core
+//! * the [`serve`] layer puts the whole service on the network
+//!   (`std::net` only): [`serve::Server`] multiplexes any number of TCP
+//!   clients over one completion queue, and [`serve::RemoteSource`] is
+//!   a remote engine as a local `StreamSource` — handles and app
+//!   drivers work over the wire unchanged;
+//! * every engine serves bit-identical streams — locally or over the
+//!   wire: stream `s` of group `g` replays
+//!   `ThunderingStream::new(splitmix64(root_seed ^ g), s)` exactly,
+//!   enforced structurally by the shared drain core
 //!   ([`coordinator::drain`]).
 //!
 //! This crate is the Layer-3 coordinator of a three-layer stack:
@@ -41,6 +47,7 @@ pub mod fpga;
 pub mod prng;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;
 
@@ -49,3 +56,4 @@ pub use coordinator::{
     ReqTarget, StreamHandle, StreamReq, StreamSource, Ticket,
 };
 pub use error::Error;
+pub use serve::{RemoteSource, ServeConfig, Server};

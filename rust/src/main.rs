@@ -7,11 +7,17 @@
 //!   pi           Monte-Carlo pi estimation (native | sharded | pjrt)
 //!   bs           Monte-Carlo option pricing (native | sharded | pjrt)
 //!   throughput   measure coordinator serving throughput on this host
+//!   serve        serve an engine over TCP (the network serving layer)
+//!   loadgen      hammer a serve endpoint from N connections
 //!   fpga-model   print the FPGA model design point for n instances
 //!
 //! Every engine is reached through the same [`EngineBuilder`] →
 //! [`StreamSource`] surface; `--engine` only changes what generates the
-//! tiles, never the bits.
+//! tiles, never the bits — locally or over the wire.
+//!
+//! Usage errors (unknown command, option, or flag) print the usage to
+//! **stderr** and exit non-zero; only an explicit `help` prints to
+//! stdout.
 
 use std::io::Write;
 
@@ -22,14 +28,21 @@ use thundering::fpga::resources::ResourceModel;
 use thundering::fpga::throughput::thundering_throughput;
 use thundering::report;
 use thundering::runtime::executor::TileExecutor;
+use thundering::serve::{LoadgenConfig, ServeConfig, Server};
 use thundering::stats::Scale;
 use thundering::util::cli::Args;
 use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
 
 const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
-    "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile",
+    "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
+    "connections", "sessions", "window", "chunk-rows", "numbers",
 ];
+
+/// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
+/// options consumed by the shared [`builder`]/[`engine`] plumbing.
+const ENGINE_OPTS: &[&str] =
+    &["engine", "artifacts", "group-width", "rows-per-tile", "seed"];
 
 fn main() {
     let mut argv = std::env::args().skip(1);
@@ -38,9 +51,18 @@ fn main() {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
+            eprintln!("{}", usage());
             std::process::exit(2);
         }
     };
+    // Per-command argument audit: an option, flag, or positional a
+    // command does not take is a usage error — usage to stderr, exit 2,
+    // same as an unknown command.
+    if let Err(e) = audit_args(&cmd, &args) {
+        eprintln!("error: {e}");
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
     let result = match cmd.as_str() {
         "generate" => cmd_generate(&args),
         "quality" => cmd_quality(&args),
@@ -48,14 +70,17 @@ fn main() {
         "pi" => cmd_pi(&args),
         "bs" => cmd_bs(&args),
         "throughput" => cmd_throughput(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "fpga-model" => cmd_fpga_model(&args),
         "help" | "--help" | "-h" => {
-            print_help();
+            println!("{}", usage());
             Ok(())
         }
         other => {
-            print_help();
-            Err(anyhow::anyhow!("unknown command {other:?}"))
+            eprintln!("error: unknown command {other:?}");
+            eprintln!("{}", usage());
+            std::process::exit(2);
         }
     };
     if let Err(e) = result {
@@ -64,19 +89,20 @@ fn main() {
     }
 }
 
-fn print_help() {
-    println!(
-        "thundering — ThundeRiNG (ICS'21) reproduction\n\n\
-         USAGE: thundering <command> [options]\n\n\
-         COMMANDS:\n  \
-         generate    --streams N --count N [--stream I] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
-         quality     --gen NAME [--scale quick|standard|deep]\n  \
-         report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
-         pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
-         bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
-         throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--artifacts DIR]\n  \
-         fpga-model  --n INSTANCES"
-    );
+fn usage() -> String {
+    "thundering — ThundeRiNG (ICS'21) reproduction\n\n\
+     USAGE: thundering <command> [options]\n\n\
+     COMMANDS:\n  \
+     generate    --streams N --count N [--stream I] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
+     quality     --gen NAME [--scale quick|standard|deep]\n  \
+     report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
+     pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
+     bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
+     throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--artifacts DIR]\n  \
+     serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N]\n  \
+     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N]\n  \
+     fpga-model  --n INSTANCES"
+        .to_string()
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -104,6 +130,31 @@ fn builder(args: &Args, streams: u64, default_engine: &str) -> Result<EngineBuil
         .rows_per_tile(args.get_usize("rows-per-tile", 1024)?)
         .lag_window(u64::MAX / 2) // CLI consumers drain one stream/group at a time
         .root_seed(args.get_u64("seed", 42)?))
+}
+
+/// `[ENGINE_OPTS] + extra` — the audit list of a command that goes
+/// through the shared builder plumbing.
+fn with_engine_opts(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut opts = ENGINE_OPTS.to_vec();
+    opts.extend_from_slice(extra);
+    opts
+}
+
+/// What each command accepts ([`Args::expect`] allowlists); `help` and
+/// unknown commands are the dispatcher's business.
+fn audit_args(cmd: &str, args: &Args) -> Result<()> {
+    let (opts, flags, max_pos): (Vec<&'static str>, &[&str], usize) = match cmd {
+        "generate" => (with_engine_opts(&["streams", "count", "stream", "out"]), &[], 0),
+        "quality" => (vec!["gen", "scale"], &[], 0),
+        "report" => (vec!["artifacts"], &["quick"], 1),
+        "pi" | "bs" => (with_engine_opts(&["draws", "threads"]), &[], 0),
+        "throughput" => (with_engine_opts(&["streams", "rows"]), &["completion"], 0),
+        "serve" => (with_engine_opts(&["addr", "streams", "sessions", "window"]), &[], 0),
+        "loadgen" => (vec!["addr", "connections", "numbers", "chunk-rows"], &[], 0),
+        "fpga-model" => (vec!["n"], &[], 0),
+        _ => return Ok(()),
+    };
+    args.expect(&opts, flags, max_pos)
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -305,19 +356,31 @@ fn throughput_completion(
     let t0 = std::time::Instant::now();
     let mut total = 0u64;
     let mut in_flight = 0usize;
-    // Round-major submission keeps every group (hence every shard) hot.
+    // Round-major submission keeps every group (hence every shard) hot;
+    // each round goes in as few batched submissions as the window
+    // allows (submit_many: one inbox-lock acquisition per batch).
     for _ in 0..tiles_per_group {
-        for g in 0..n_groups {
-            if in_flight >= window {
-                if let Some(c) = cq.wait_any() {
-                    let block = c.result?;
-                    total += block.len() as u64;
-                    std::hint::black_box(&block);
-                    in_flight -= 1;
+        let round: Vec<StreamReq> =
+            (0..n_groups).map(|g| StreamReq::group(g, rows_per_tile)).collect();
+        let mut next = 0usize;
+        while next < round.len() {
+            while in_flight >= window {
+                match cq.wait_any() {
+                    Some(c) => {
+                        let block = c.result?;
+                        total += block.len() as u64;
+                        std::hint::black_box(&block);
+                        in_flight -= 1;
+                    }
+                    // Unreachable while tickets are in flight; re-sync
+                    // rather than spin if accounting ever drifts.
+                    None => in_flight = 0,
                 }
             }
-            cq.submit(StreamReq::group(g, rows_per_tile))?;
-            in_flight += 1;
+            let take = (window - in_flight).min(round.len() - next);
+            cq.submit_many(&round[next..next + take])?;
+            in_flight += take;
+            next += take;
         }
     }
     for c in cq.wait_all() {
@@ -335,6 +398,69 @@ fn throughput_completion(
         n_groups * tiles_per_group,
         n_groups,
         cq.source().metrics()
+    );
+    Ok(())
+}
+
+/// `serve`: put an engine on the network (DESIGN.md §6). Builds the
+/// configured engine, binds `--addr`, and serves until `--sessions N`
+/// sessions have closed (0 = forever). The readiness line on stdout
+/// names the resolved address — with `--addr 127.0.0.1:0` the kernel
+/// picks the port.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let streams = args.get_u64("streams", 1024)?;
+    let addr = args.get_or("addr", "127.0.0.1:7777");
+    let sessions = args.get_u64("sessions", 0)?;
+    let source = builder(args, streams, "sharded")?.build_arc()?;
+    let engine = source.engine_kind();
+    let n_groups = source.n_groups();
+    let width = source.group_width();
+    let cfg = ServeConfig {
+        window: args.get_usize("window", ServeConfig::default().window)?,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::start(source, addr, cfg)?;
+    println!(
+        "serving {streams} streams ({n_groups} groups x {width}) on {} [{engine} engine]",
+        server.local_addr()
+    );
+    std::io::stdout().flush()?;
+    if sessions > 0 {
+        server.wait_sessions_closed(sessions);
+        server.shutdown();
+        println!("served {sessions} sessions; shut down cleanly");
+    } else {
+        // Serve until killed.
+        server.wait_sessions_closed(u64::MAX);
+    }
+    Ok(())
+}
+
+/// `loadgen`: hammer a serve endpoint from N connections and report
+/// delivered GRN/s with exactly-once verification (the serving twin of
+/// the `throughput` command).
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let chunk_rows: u32 = args
+        .get_u64("chunk-rows", 0)?
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("--chunk-rows must fit in 32 bits"))?;
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
+        connections: args.get_usize("connections", 8)?,
+        numbers_per_conn: args.get_u64("numbers", 1 << 22)?,
+        chunk_rows,
+        ..LoadgenConfig::default()
+    };
+    let report = thundering::serve::loadgen::run(&cfg)?;
+    println!(
+        "loadgen: {} connections delivered {} numbers ({} chunks, exactly once) \
+         in {:.4}s = {} ({:.4} GRN/s)",
+        report.connections,
+        report.numbers,
+        report.chunks,
+        report.seconds,
+        thundering::util::fmt_rate(report.numbers as f64 / report.seconds),
+        report.grn_per_s(),
     );
     Ok(())
 }

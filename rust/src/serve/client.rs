@@ -1,0 +1,522 @@
+//! The typed client side of the serving layer: [`RemoteClient`] (the
+//! low-level framed connection) and [`RemoteSource`] (a remote engine as
+//! a local [`StreamSource`]).
+//!
+//! `RemoteSource` is the drop-in surface: it implements `StreamSource`,
+//! so everything built on the engine-agnostic API — [`StreamHandle`]
+//! (and through it the `Prng32` and `Iterator` views), the Monte-Carlo
+//! app drivers, the statistical battery — consumes a remote engine
+//! unchanged, and the bytes it reads are bit-identical to a local
+//! source built from the same spec (the determinism contract extends
+//! through the wire; enforced by `rust/tests/serve_roundtrip.rs`).
+//!
+//! `RemoteClient` is for consumers that want pipelining the synchronous
+//! trait cannot express: submit chunked fills on many targets
+//! ([`RemoteClient::submit_fill`]), then harvest interleaved replies per
+//! request ([`RemoteClient::next_chunk`]) — the wire twin of the
+//! [`CompletionQueue`](crate::CompletionQueue) submit/harvest split, and
+//! what the `loadgen` driver uses.
+//!
+//! [`StreamHandle`]: crate::StreamHandle
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::coordinator::{Metrics, MetricsSnapshot, ReqTarget, StreamSource, StreamSpec};
+use crate::error::Error;
+use crate::serve::protocol::{self, Frame};
+
+/// The serving shape a server advertises in WELCOME.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    /// Engine kind behind the endpoint (`"native"`, `"sharded"`, ..).
+    pub engine: String,
+    /// Streams served (ids `0..n_streams`).
+    pub n_streams: u64,
+    /// State-sharing groups served.
+    pub n_groups: u64,
+    /// Streams per group.
+    pub group_width: u32,
+    /// The server's preferred sub-fill granularity, in rows.
+    pub chunk_rows: u32,
+    /// Max numbers one FILL sub-request may ask for.
+    pub max_fill: u64,
+}
+
+/// One sub-request outcome of a chunked fill.
+#[derive(Debug)]
+pub struct Chunk {
+    /// Sub-request index within its fill (`0..repeat`, delivered in
+    /// order).
+    pub seq: u32,
+    /// Is this the fill's final sub-request?
+    pub last: bool,
+    /// The numbers, or the typed error the sub-request produced (a
+    /// failed sub-request consumed nothing server-side, so the fill's
+    /// delivered numbers always concatenate to a contiguous prefix of
+    /// the target's sequence).
+    pub result: Result<Vec<u32>, Error>,
+}
+
+/// A framed connection to a [`Server`](crate::serve::Server): HELLO/
+/// WELCOME negotiation on connect, then LEASE / FILL / chunk harvesting
+/// / BYE. Single-threaded by design — wrap it in [`RemoteSource`] (or
+/// your own lock) to share.
+pub struct RemoteClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    info: ServerInfo,
+    next_req: u64,
+    /// Replies read while looking for a different request's chunk (the
+    /// connection multiplexes any number of in-flight fills).
+    stash: HashMap<u64, VecDeque<Chunk>>,
+}
+
+impl RemoteClient {
+    /// Connect and negotiate: sends HELLO, validates the WELCOME
+    /// (magic, protocol version), and learns the serving shape.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, Error> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::Protocol(format!("connect: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream
+            .try_clone()
+            .map_err(|e| Error::Protocol(format!("clone socket: {e}")))?;
+        let mut reader = BufReader::new(stream);
+        let mut writer = BufWriter::new(write_half);
+        protocol::write_frame(&mut writer, &Frame::Hello { version: protocol::VERSION })?;
+        writer.flush().map_err(protocol::io_protocol)?;
+        let info = match protocol::read_frame(&mut reader)? {
+            Some(Frame::Welcome {
+                version,
+                engine,
+                n_streams,
+                n_groups,
+                group_width,
+                chunk_rows,
+                max_fill,
+            }) => {
+                if version != protocol::VERSION {
+                    return Err(Error::Protocol(format!(
+                        "server speaks protocol v{version}, this client v{}",
+                        protocol::VERSION
+                    )));
+                }
+                ServerInfo { engine, n_streams, n_groups, group_width, chunk_rows, max_fill }
+            }
+            Some(Frame::Err { error, .. }) => return Err(error),
+            Some(other) => {
+                return Err(Error::Protocol(format!(
+                    "expected WELCOME, got {}",
+                    protocol::frame_name(&other)
+                )))
+            }
+            None => return Err(Error::Protocol("server closed during handshake".into())),
+        };
+        Ok(Self { reader, writer, info, next_req: 0, stash: HashMap::new() })
+    }
+
+    /// What the server advertised in WELCOME.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<(), Error> {
+        protocol::write_frame(&mut self.writer, frame)?;
+        self.writer.flush().map_err(protocol::io_protocol)
+    }
+
+    fn stash_chunk(&mut self, req: u64, chunk: Chunk) {
+        self.stash.entry(req).or_default().push_back(chunk);
+    }
+
+    /// Validate-and-identify a target before filling from it (the wire
+    /// twin of [`StreamHandle::new`](crate::StreamHandle::new)'s
+    /// validation): returns the stream's registered identity for stream
+    /// targets, `None` for (valid) group targets, and the server's typed
+    /// error for targets it does not serve.
+    pub fn lease(&mut self, target: ReqTarget) -> Result<Option<StreamSpec>, Error> {
+        let req = self.next_req;
+        self.next_req += 1;
+        self.send(&Frame::Lease { req, target })?;
+        loop {
+            match protocol::read_frame(&mut self.reader)? {
+                Some(Frame::Leased { req: r, h, xs_origin }) if r == req => {
+                    return Ok(match target {
+                        ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
+                        ReqTarget::Group(_) => None,
+                    });
+                }
+                Some(Frame::Err { req: r, error, .. })
+                    if r == req || r == protocol::CONNECTION_REQ =>
+                {
+                    return Err(error)
+                }
+                Some(Frame::Data { req: r, seq, last, values }) => {
+                    self.stash_chunk(r, Chunk { seq, last, result: Ok(values) });
+                }
+                Some(Frame::Err { req: r, seq, last, error }) => {
+                    self.stash_chunk(r, Chunk { seq, last, result: Err(error) });
+                }
+                Some(other) => {
+                    return Err(Error::Protocol(format!(
+                        "unexpected {} frame",
+                        protocol::frame_name(&other)
+                    )))
+                }
+                None => return Err(Error::Protocol("server closed the connection".into())),
+            }
+        }
+    }
+
+    /// Submit a fill of `repeat` consecutive sub-requests of `rows` rows
+    /// each from `target`; returns the request id to harvest with
+    /// [`next_chunk`](Self::next_chunk). Any number of fills may be in
+    /// flight on one connection — the server overlaps them through its
+    /// completion queue.
+    pub fn submit_fill(
+        &mut self,
+        target: ReqTarget,
+        rows: u64,
+        repeat: u32,
+    ) -> Result<u64, Error> {
+        let req = self.next_req;
+        self.next_req += 1;
+        self.send(&Frame::Fill { req, target, rows, repeat })?;
+        Ok(req)
+    }
+
+    /// The next sub-request outcome of fill `req`, in seq order. Chunks
+    /// of other in-flight fills read along the way are stashed for their
+    /// own harvesting.
+    pub fn next_chunk(&mut self, req: u64) -> Result<Chunk, Error> {
+        if let Some(q) = self.stash.get_mut(&req) {
+            if let Some(chunk) = q.pop_front() {
+                if q.is_empty() {
+                    self.stash.remove(&req);
+                }
+                return Ok(chunk);
+            }
+        }
+        loop {
+            match protocol::read_frame(&mut self.reader)? {
+                Some(Frame::Data { req: r, seq, last, values }) => {
+                    let chunk = Chunk { seq, last, result: Ok(values) };
+                    if r == req {
+                        return Ok(chunk);
+                    }
+                    self.stash_chunk(r, chunk);
+                }
+                Some(Frame::Err { req: r, error, .. }) if r == protocol::CONNECTION_REQ => {
+                    // A connection-level failure (malformed frame,
+                    // handshake violation): the server is about to hang
+                    // up — surface its typed reason, don't stash it
+                    // under a request nobody harvests.
+                    return Err(error);
+                }
+                Some(Frame::Err { req: r, seq, last, error }) => {
+                    let chunk = Chunk { seq, last, result: Err(error) };
+                    if r == req {
+                        return Ok(chunk);
+                    }
+                    self.stash_chunk(r, chunk);
+                }
+                Some(other) => {
+                    return Err(Error::Protocol(format!(
+                        "unexpected {} frame",
+                        protocol::frame_name(&other)
+                    )))
+                }
+                None => return Err(Error::Protocol("server closed the connection".into())),
+            }
+        }
+    }
+
+    /// One-shot fill: a single sub-request, answered by exactly one
+    /// chunk. All-or-nothing server-side: on `Err` no cursor moved.
+    pub fn fill(&mut self, target: ReqTarget, rows: u64) -> Result<Vec<u32>, Error> {
+        let req = self.submit_fill(target, rows, 1)?;
+        let chunk = self.next_chunk(req)?;
+        if chunk.seq != 0 || !chunk.last {
+            return Err(Error::Protocol(format!(
+                "single-chunk fill answered with seq {} (last: {})",
+                chunk.seq, chunk.last
+            )));
+        }
+        chunk.result
+    }
+
+    /// Graceful goodbye: the server flushes every in-flight reply (their
+    /// frames are read and discarded here — harvest what you need
+    /// first), acknowledges, and closes.
+    pub fn bye(mut self) -> Result<(), Error> {
+        self.send(&Frame::Bye)?;
+        loop {
+            match protocol::read_frame(&mut self.reader)? {
+                Some(Frame::ByeAck) => return Ok(()),
+                Some(Frame::Err { req, error, .. }) if req == protocol::CONNECTION_REQ => {
+                    return Err(error)
+                }
+                Some(Frame::Data { .. } | Frame::Err { .. }) => {} // undrained fills
+                Some(other) => {
+                    return Err(Error::Protocol(format!(
+                        "unexpected {} frame before BYE_ACK",
+                        protocol::frame_name(&other)
+                    )))
+                }
+                None => {
+                    return Err(Error::Protocol("server closed before BYE_ACK".into()))
+                }
+            }
+        }
+    }
+
+    /// Fire a BYE without waiting for the acknowledgement (the drop
+    /// path: never block in a destructor).
+    fn bye_nowait(&mut self) {
+        let _ = protocol::write_frame(&mut self.writer, &Frame::Bye);
+        let _ = self.writer.flush();
+    }
+}
+
+impl std::fmt::Debug for RemoteClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteClient")
+            .field("server_engine", &self.info.engine)
+            .field("n_streams", &self.info.n_streams)
+            .field("in_flight_reqs", &self.stash.len())
+            .finish()
+    }
+}
+
+/// Max unharvested fills [`RemoteSource`]'s `fetch_many` keeps on the
+/// wire at once. Small enough that the unread FILL frames can never
+/// fill a TCP buffer (a few hundred bytes) regardless of the server's
+/// session window, large enough to keep several groups in flight
+/// through the server's completion queue.
+const FETCH_MANY_PIPELINE: usize = 8;
+
+/// A remote engine as a local [`StreamSource`] — the serving layer's
+/// drop-in client surface.
+///
+/// One TCP connection, shared across client threads by the internal
+/// lock; every trait call is one request/response exchange (except
+/// [`fetch_many`](StreamSource::fetch_many), which keeps a bounded
+/// window of group fills pipelined). [`StreamHandle`](crate::StreamHandle)s
+/// over a `RemoteSource` behave exactly like handles over the local
+/// engine the server wraps, bit for bit.
+///
+/// Divergences from a local source, both inherent to the boundary:
+///
+/// * fetch sizes are bounded by the server's advertised
+///   `max_fill` numbers per request (a larger fetch fails typed with
+///   `InvalidConfig` before anything is sent — split it, or use a
+///   `StreamHandle` whose chunk is within the bound);
+/// * `fetch_many` is atomic per group but **not** across groups: a lag
+///   rejection in one group leaves other groups advanced (a local
+///   source holds every group lock at once; a network peer cannot).
+pub struct RemoteSource {
+    client: Mutex<RemoteClient>,
+    info: ServerInfo,
+    metrics: Metrics,
+}
+
+impl RemoteSource {
+    /// Connect to a serving endpoint (see
+    /// [`Server`](crate::serve::Server)).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, Error> {
+        let client = RemoteClient::connect(addr)?;
+        let info = client.info().clone();
+        Ok(Self { client: Mutex::new(client), info, metrics: Metrics::default() })
+    }
+
+    /// What the server advertised in WELCOME.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    fn client(&self) -> Result<MutexGuard<'_, RemoteClient>, Error> {
+        self.client
+            .lock()
+            .map_err(|_| Error::Backend("remote client poisoned by a panicked thread".into()))
+    }
+
+    fn check_fill(&self, numbers: u64) -> Result<(), Error> {
+        if numbers > self.info.max_fill {
+            return Err(Error::InvalidConfig(format!(
+                "remote fetch of {numbers} numbers exceeds the server's max_fill of {} — \
+                 split it into smaller fetches",
+                self.info.max_fill
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl StreamSource for RemoteSource {
+    fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
+        if stream >= self.info.n_streams {
+            return Err(Error::UnknownStream { stream, have: self.info.n_streams });
+        }
+        if out.is_empty() {
+            return Ok(());
+        }
+        self.check_fill(out.len() as u64)?;
+        let values = self.client()?.fill(ReqTarget::Stream(stream), out.len() as u64)?;
+        if values.len() != out.len() {
+            return Err(Error::Protocol(format!(
+                "fill delivered {} of {} numbers",
+                values.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&values);
+        self.metrics.add(&self.metrics.numbers_delivered, out.len() as u64);
+        Ok(())
+    }
+
+    fn fetch_block(&self, group: usize, rows: usize) -> Result<Vec<u32>, Error> {
+        if group as u64 >= self.info.n_groups {
+            return Err(Error::GroupOutOfRange { group, have: self.info.n_groups as usize });
+        }
+        let numbers = (rows as u64)
+            .checked_mul(self.info.group_width as u64)
+            .ok_or_else(|| Error::InvalidConfig("fetch_block size overflows".into()))?;
+        if numbers == 0 {
+            return Ok(Vec::new());
+        }
+        self.check_fill(numbers)?;
+        let values = self.client()?.fill(ReqTarget::Group(group), rows as u64)?;
+        if values.len() as u64 != numbers {
+            return Err(Error::Protocol(format!(
+                "block fill delivered {} of {numbers} numbers",
+                values.len()
+            )));
+        }
+        self.metrics.add(&self.metrics.numbers_delivered, numbers);
+        Ok(values)
+    }
+
+    fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
+        let numbers = (rows as u64)
+            .checked_mul(self.info.group_width as u64)
+            .ok_or_else(|| Error::InvalidConfig("fetch_many size overflows".into()))?;
+        self.check_fill(numbers)?;
+        let n_groups = self.info.n_groups as usize;
+        if numbers == 0 {
+            // Parity with the local engines, which return one empty
+            // block per group for a zero-row batch.
+            return Ok(vec![Vec::new(); n_groups]);
+        }
+        let mut client = self.client()?;
+        // Pipelined with a bounded client-side window: several fills on
+        // the wire at once (the server overlaps them through its
+        // completion queue), but never more than FETCH_MANY_PIPELINE
+        // unharvested. Submitting ALL groups before reading anything
+        // would deadlock at scale: the server stops reading once its
+        // per-session window fills, this side blocks writing the
+        // remaining FILL frames, and neither ever reads. Responses
+        // arrive strictly in submission order (the session admits
+        // chunks that way), so FIFO harvesting keeps blocks in group
+        // order.
+        let mut blocks = Vec::with_capacity(n_groups);
+        let mut first_err = None;
+        let mut inflight = VecDeque::with_capacity(FETCH_MANY_PIPELINE);
+        let mut collect = |client: &mut RemoteClient, req: u64| -> Result<(), Error> {
+            // Every reply is read even past a failure — the connection
+            // must drain clean for the next call.
+            let chunk = client.next_chunk(req)?;
+            match chunk.result {
+                Ok(values) => blocks.push(values),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    blocks.push(Vec::new());
+                }
+            }
+            Ok(())
+        };
+        for g in 0..n_groups {
+            if inflight.len() == FETCH_MANY_PIPELINE {
+                let req = inflight.pop_front().expect("non-empty window");
+                collect(&mut client, req)?;
+            }
+            inflight.push_back(client.submit_fill(ReqTarget::Group(g), rows as u64, 1)?);
+        }
+        while let Some(req) = inflight.pop_front() {
+            collect(&mut client, req)?;
+        }
+        drop(client);
+        if let Some(e) = first_err {
+            // A local fetch_many is all-or-nothing across groups; over
+            // the wire it is only per-group atomic. If some groups
+            // advanced before the failure, surfacing a *retryable*
+            // error would invite a retry that silently misaligns the
+            // groups — make the broken atomicity explicit and fatal.
+            if e.is_retryable() && blocks.iter().any(|b| !b.is_empty()) {
+                return Err(Error::Backend(format!(
+                    "remote fetch_many partially advanced (atomicity is per-group \
+                     over the wire); the groups are no longer row-aligned: {e}"
+                )));
+            }
+            return Err(e);
+        }
+        for (g, block) in blocks.iter().enumerate() {
+            if block.len() as u64 != numbers {
+                return Err(Error::Protocol(format!(
+                    "group {g} fill delivered {} of {numbers} numbers",
+                    block.len()
+                )));
+            }
+        }
+        self.metrics.add(&self.metrics.numbers_delivered, numbers * n_groups as u64);
+        Ok(blocks)
+    }
+
+    fn n_streams(&self) -> u64 {
+        self.info.n_streams
+    }
+
+    fn n_groups(&self) -> usize {
+        self.info.n_groups as usize
+    }
+
+    fn group_width(&self) -> usize {
+        self.info.group_width as usize
+    }
+
+    fn spec(&self, stream: u64) -> Option<StreamSpec> {
+        self.client.lock().ok()?.lease(ReqTarget::Stream(stream)).ok().flatten()
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    fn engine_kind(&self) -> &'static str {
+        "remote"
+    }
+}
+
+impl Drop for RemoteSource {
+    fn drop(&mut self) {
+        // Best-effort goodbye so the server tears the session down
+        // promptly; never block in drop waiting for the acknowledgement.
+        if let Ok(client) = self.client.get_mut() {
+            client.bye_nowait();
+        }
+    }
+}
+
+impl std::fmt::Debug for RemoteSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteSource")
+            .field("server_engine", &self.info.engine)
+            .field("n_streams", &self.info.n_streams)
+            .field("group_width", &self.info.group_width)
+            .finish()
+    }
+}

@@ -1,0 +1,176 @@
+//! Reusable load generator: hammer a serving endpoint from N concurrent
+//! connections and report delivered GRN/s — the client half of the
+//! `serve`/`loadgen` CLI pair, the serve benchmark row, and the CI
+//! loopback smoke test.
+//!
+//! Each connection leases one group (round-robin over the server's
+//! groups), drains its share through a single chunked FILL (so the
+//! server pipelines `window` sub-requests per session), and verifies
+//! exactly-once in-order delivery as it goes: chunk seqs must arrive as
+//! exactly `0..repeat` with `last` on the final chunk and every chunk
+//! full-size — a lost, duplicated, or reordered sub-request fails the
+//! run with a typed error.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ReqTarget;
+use crate::error::Error;
+use crate::serve::client::RemoteClient;
+
+/// What to throw at the server.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Endpoint to hammer (`host:port`).
+    pub addr: String,
+    /// Concurrent connections (each is one server session). Default 8.
+    pub connections: usize,
+    /// Numbers each connection drains (rounded up to whole sub-fills).
+    /// Default 2²².
+    pub numbers_per_conn: u64,
+    /// Rows per sub-request; 0 (default) uses the server's advertised
+    /// chunk hint. Clamped so one sub-request fits the server's
+    /// `max_fill`.
+    pub chunk_rows: u32,
+    /// Total budget for connect retries — the server may still be
+    /// binding when loadgen starts (the CI smoke test races them).
+    /// Default 10 s.
+    pub connect_budget: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7777".into(),
+            connections: 8,
+            numbers_per_conn: 1 << 22,
+            chunk_rows: 0,
+            connect_budget: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What came back.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Connections that ran (== sessions the server served).
+    pub connections: usize,
+    /// Numbers delivered across all connections, verified exactly-once.
+    pub numbers: u64,
+    /// Sub-request chunks delivered.
+    pub chunks: u64,
+    /// Wall-clock seconds, connect to last BYE_ACK.
+    pub seconds: f64,
+}
+
+impl LoadgenReport {
+    /// Delivered giga-random-numbers per second (the paper's GRN/s).
+    pub fn grn_per_s(&self) -> f64 {
+        self.numbers as f64 / self.seconds / 1e9
+    }
+}
+
+fn connect_retry(addr: &str, budget: Duration) -> Result<RemoteClient, Error> {
+    let t0 = Instant::now();
+    loop {
+        match RemoteClient::connect(addr) {
+            Ok(client) => return Ok(client),
+            Err(e) => {
+                if t0.elapsed() >= budget {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Run the load and verify exactly-once delivery (see the module docs).
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
+    if cfg.connections == 0 {
+        return Err(Error::InvalidConfig("loadgen needs at least one connection".into()));
+    }
+    // The first connection doubles as the endpoint probe (with retries)
+    // and tells us the serving shape.
+    let first = connect_retry(&cfg.addr, cfg.connect_budget)?;
+    let info = first.info().clone();
+    if info.n_groups == 0 {
+        return Err(Error::InvalidConfig("server serves no groups".into()));
+    }
+    let width = u64::from(info.group_width).max(1);
+    let hint = if cfg.chunk_rows == 0 { info.chunk_rows } else { cfg.chunk_rows };
+    let chunk_rows = u64::from(hint).clamp(1, (info.max_fill / width).max(1));
+    let per_chunk = chunk_rows * width;
+    let repeat: u32 = cfg
+        .numbers_per_conn
+        .div_ceil(per_chunk)
+        .max(1)
+        .try_into()
+        .map_err(|_| {
+            Error::InvalidConfig(
+                "workload needs more than 2^32 chunks per connection; raise chunk_rows"
+                    .into(),
+            )
+        })?;
+
+    let info = &info;
+    let mut first = Some(first);
+    let t0 = Instant::now();
+    let results: Vec<Result<(u64, u64), Error>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..cfg.connections {
+            let pre = first.take();
+            handles.push(s.spawn(move || -> Result<(u64, u64), Error> {
+                let mut client = match pre {
+                    Some(client) => client,
+                    None => connect_retry(&cfg.addr, cfg.connect_budget)?,
+                };
+                let group = (i as u64 % info.n_groups) as usize;
+                client.lease(ReqTarget::Group(group))?;
+                let req = client.submit_fill(ReqTarget::Group(group), chunk_rows, repeat)?;
+                let mut numbers = 0u64;
+                for expect_seq in 0..repeat {
+                    let chunk = client.next_chunk(req)?;
+                    if chunk.seq != expect_seq {
+                        return Err(Error::Protocol(format!(
+                            "chunk seq {} delivered where {expect_seq} was due \
+                             (lost, duplicated, or reordered sub-request)",
+                            chunk.seq
+                        )));
+                    }
+                    if chunk.last != (expect_seq + 1 == repeat) {
+                        return Err(Error::Protocol(format!(
+                            "last-chunk flag out of place at seq {expect_seq}"
+                        )));
+                    }
+                    let values = chunk.result?;
+                    if values.len() as u64 != per_chunk {
+                        return Err(Error::Protocol(format!(
+                            "chunk of {} numbers where {per_chunk} were due",
+                            values.len()
+                        )));
+                    }
+                    numbers += values.len() as u64;
+                }
+                client.bye()?;
+                Ok((numbers, u64::from(repeat)))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Backend("loadgen worker panicked".into())))
+            })
+            .collect()
+    });
+    let seconds = t0.elapsed().as_secs_f64();
+
+    let mut numbers = 0u64;
+    let mut chunks = 0u64;
+    for r in results {
+        let (n, c) = r?;
+        numbers += n;
+        chunks += c;
+    }
+    Ok(LoadgenReport { connections: cfg.connections, numbers, chunks, seconds })
+}

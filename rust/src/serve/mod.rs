@@ -1,0 +1,57 @@
+//! Zero-dependency network serving layer: a TCP stream server and a
+//! typed client, multiplexed over the
+//! [`CompletionQueue`](crate::CompletionQueue) front.
+//!
+//! The paper's point is that one generator complex cheaply fans out to a
+//! massive number of independent consumers; this layer is the software
+//! analogue — one engine process serving any number of remote clients,
+//! using nothing but `std::net` (the crate's offline/zero-dependency
+//! policy, DESIGN.md §4, extends to the network layer: no tokio, no
+//! serde, no protobuf).
+//!
+//! ```text
+//!  client A ══TCP══╗                  ┌───────────────────────────────┐
+//!  client B ══TCP══╬══▶ Server ══════▶│ CompletionQueue over any      │
+//!  client C ══TCP══╝   (sessions +    │ StreamSource (sharded engine: │
+//!                       one reactor)  │ worker shards complete)       │
+//!                                     └───────────────────────────────┘
+//! ```
+//!
+//! * [`Server`] binds an address and serves any
+//!   [`StreamSource`](crate::StreamSource): per-connection reader
+//!   threads submit batched requests into one shared completion queue,
+//!   a single reactor thread harvests and routes completions back, and
+//!   a bounded per-session window keeps one slow client from pinning
+//!   completed-block memory (`serve::server`, `serve::session`).
+//! * [`RemoteSource`] is the drop-in client: a remote engine as a local
+//!   `StreamSource`, so [`StreamHandle`](crate::StreamHandle)s, the
+//!   `Prng32`/`Iterator` views, and the Monte-Carlo app drivers consume
+//!   remote streams unchanged ([`RemoteClient`] is the lower-level
+//!   pipelined connection).
+//! * [`protocol`] defines the length-prefixed little-endian frames
+//!   (HELLO/WELCOME negotiation, LEASE, chunked FILL→DATA/ERR, BYE) —
+//!   every [`Error`](crate::Error) variant crosses the wire typed,
+//!   retryable backpressure included.
+//! * [`loadgen`] is the reusable N-connection load driver behind the
+//!   `loadgen` CLI command, the serve benchmark row, and the CI smoke
+//!   test.
+//!
+//! **Determinism over the wire.** The bytes a client reads are exactly
+//! the scalar replay of the server's streams: requests execute through
+//! the same completion front (per-group FIFO, exactly-once delivery) as
+//! in-process consumers, and a failed sub-request consumes nothing, so
+//! delivered chunks always concatenate to a contiguous prefix of the
+//! target's sequence. `rust/tests/serve_roundtrip.rs` pins a remote
+//! fetch against the local `StreamHandle` replay bit for bit, on both
+//! engines.
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+mod session;
+
+pub use client::{Chunk, RemoteClient, RemoteSource, ServerInfo};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use protocol::{Frame, VERSION};
+pub use server::{ServeConfig, Server};

@@ -1,0 +1,579 @@
+//! Wire protocol of the serving layer: length-prefixed little-endian
+//! binary frames over TCP (see [`super`] for the layer overview and
+//! DESIGN.md §6 for the full contract).
+//!
+//! Every frame is `[u32 payload_len (LE)][payload]`, where the payload's
+//! first byte is the frame kind. Integers are little-endian; strings are
+//! `u32 len + UTF-8 bytes`; a target is `u8 kind (0 = stream, 1 =
+//! group) + u64 index`. Frames and direction:
+//!
+//! | frame     | dir | payload                                                      |
+//! |-----------|-----|--------------------------------------------------------------|
+//! | `HELLO`   | c→s | magic `"THNG"`, version `u16`                                |
+//! | `WELCOME` | s→c | version, engine str, n_streams, n_groups, group_width, chunk_rows, max_fill |
+//! | `LEASE`   | c→s | req id, target                                               |
+//! | `LEASED`  | s→c | req id, leaf `h` (`u64`), `xs_origin` (`4 × u32`)            |
+//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`                     |
+//! | `DATA`    | s→c | req id, seq `u32`, last `u8`, count `u32`, values (`count × u32`) |
+//! | `ERR`     | s→c | req id, seq, last, error code `u16` + 2×`u64` + message str  |
+//! | `BYE`     | c→s | (empty)                                                      |
+//! | `BYE_ACK` | s→c | (empty)                                                      |
+//!
+//! Anything malformed — bad magic, unknown kind, oversized or truncated
+//! frames, trailing bytes — decodes to a typed [`Error::Protocol`], never
+//! a panic; a clean close *between* frames reads as `Ok(None)`.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::ReqTarget;
+use crate::error::Error;
+
+/// Protocol version spoken by this crate (negotiated in HELLO/WELCOME).
+pub const VERSION: u16 = 1;
+
+/// Connection magic, first bytes of every HELLO.
+pub const MAGIC: [u8; 4] = *b"THNG";
+
+/// Upper bound on one frame's payload (64 MiB): anything larger is
+/// rejected before allocation, so a garbage length prefix cannot ask the
+/// peer to reserve gigabytes.
+pub const MAX_FRAME: usize = 1 << 26;
+
+/// Request id the server uses on ERR frames about the *connection*
+/// rather than any one request (malformed frame, handshake violation):
+/// clients surface these directly as the failure of whatever call was
+/// in progress. Client-chosen request ids never reach this value (they
+/// count up from 0).
+pub const CONNECTION_REQ: u64 = u64::MAX;
+
+const K_HELLO: u8 = 1;
+const K_WELCOME: u8 = 2;
+const K_LEASE: u8 = 3;
+const K_LEASED: u8 = 4;
+const K_FILL: u8 = 5;
+const K_DATA: u8 = 6;
+const K_ERR: u8 = 7;
+const K_BYE: u8 = 8;
+const K_BYE_ACK: u8 = 9;
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client hello: magic + protocol version (client → server).
+    Hello {
+        /// The client's [`VERSION`].
+        version: u16,
+    },
+    /// Server greeting: the serving shape a client needs to validate
+    /// targets locally and size its fills (server → client).
+    Welcome {
+        /// The server's [`VERSION`].
+        version: u16,
+        /// Engine kind serving this endpoint (`"native"`, `"sharded"`, ..).
+        engine: String,
+        /// Streams served (ids `0..n_streams`).
+        n_streams: u64,
+        /// State-sharing groups served.
+        n_groups: u64,
+        /// Streams per group.
+        group_width: u32,
+        /// The server's preferred sub-fill granularity, in rows.
+        chunk_rows: u32,
+        /// Max numbers one FILL sub-request may ask for.
+        max_fill: u64,
+    },
+    /// Validate-and-identify a target before filling from it.
+    Lease {
+        /// Client-chosen request id, echoed in the reply.
+        req: u64,
+        /// The stream or group to lease.
+        target: ReqTarget,
+    },
+    /// Lease granted; for stream targets carries the registered identity
+    /// (zeroes for group targets).
+    Leased {
+        /// The LEASE's request id.
+        req: u64,
+        /// The stream's leaf constant (0 for groups).
+        h: u64,
+        /// The stream's decorrelator origin state (zeroes for groups).
+        xs_origin: [u32; 4],
+    },
+    /// Fetch `repeat` consecutive sub-requests of `rows` rows each from
+    /// `target`; answered by exactly `repeat` DATA/ERR frames in seq
+    /// order.
+    Fill {
+        /// Client-chosen request id, echoed on every reply chunk.
+        req: u64,
+        /// The stream or group to drain.
+        target: ReqTarget,
+        /// Rows per sub-request (numbers for a stream target, rows ×
+        /// group_width numbers for a group target).
+        rows: u64,
+        /// Sub-requests in this fill (≥ 1).
+        repeat: u32,
+    },
+    /// One successful sub-request's numbers.
+    Data {
+        /// The FILL's request id.
+        req: u64,
+        /// Sub-request index within the fill (`0..repeat`).
+        seq: u32,
+        /// Is this the fill's final sub-request?
+        last: bool,
+        /// The fetched numbers.
+        values: Vec<u32>,
+    },
+    /// One failed sub-request (or a rejected request), as a typed
+    /// [`enum@Error`] — check [`Error::is_retryable`]; a failed
+    /// sub-request consumed nothing, so later sub-requests of the same
+    /// fill continue the sequence seamlessly.
+    Err {
+        /// The offending request id.
+        req: u64,
+        /// Sub-request index within the fill.
+        seq: u32,
+        /// Is this the fill's final sub-request?
+        last: bool,
+        /// What went wrong.
+        error: Error,
+    },
+    /// Graceful goodbye (client → server): the server flushes every
+    /// in-flight reply, answers BYE_ACK, and closes.
+    Bye,
+    /// Goodbye acknowledged — always the connection's last frame.
+    ByeAck,
+}
+
+/// Short frame name for error messages.
+pub(crate) fn frame_name(frame: &Frame) -> &'static str {
+    match frame {
+        Frame::Hello { .. } => "HELLO",
+        Frame::Welcome { .. } => "WELCOME",
+        Frame::Lease { .. } => "LEASE",
+        Frame::Leased { .. } => "LEASED",
+        Frame::Fill { .. } => "FILL",
+        Frame::Data { .. } => "DATA",
+        Frame::Err { .. } => "ERR",
+        Frame::Bye => "BYE",
+        Frame::ByeAck => "BYE_ACK",
+    }
+}
+
+/// Map an I/O failure on the wire to the typed protocol error.
+pub(crate) fn io_protocol(e: std::io::Error) -> Error {
+    Error::Protocol(format!("io: {e}"))
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_target(buf: &mut Vec<u8>, t: ReqTarget) {
+    match t {
+        ReqTarget::Stream(s) => {
+            buf.push(0);
+            put_u64(buf, s);
+        }
+        ReqTarget::Group(g) => {
+            buf.push(1);
+            put_u64(buf, g as u64);
+        }
+    }
+}
+
+/// The `(code, a, b, message)` wire form of every [`enum@Error`] variant.
+fn put_error(buf: &mut Vec<u8>, e: &Error) {
+    let (code, a, b, msg): (u16, u64, u64, &str) = match e {
+        Error::LagWindowExceeded { lead, window } => (1, *lead, *window, ""),
+        Error::UnknownStream { stream, have } => (2, *stream, *have, ""),
+        Error::GroupOutOfRange { group, have } => (3, *group as u64, *have as u64, ""),
+        Error::InvalidConfig(m) => (4, 0, 0, m.as_str()),
+        Error::Backend(m) => (5, 0, 0, m.as_str()),
+        Error::UnknownGenerator { name } => (6, 0, 0, name.as_str()),
+        Error::Protocol(m) => (7, 0, 0, m.as_str()),
+    };
+    put_u16(buf, code);
+    put_u64(buf, a);
+    put_u64(buf, b);
+    put_str(buf, msg);
+}
+
+fn decode_error(code: u16, a: u64, b: u64, msg: String) -> Error {
+    match code {
+        1 => Error::LagWindowExceeded { lead: a, window: b },
+        2 => Error::UnknownStream { stream: a, have: b },
+        3 => Error::GroupOutOfRange { group: a as usize, have: b as usize },
+        4 => Error::InvalidConfig(msg),
+        5 => Error::Backend(msg),
+        6 => Error::UnknownGenerator { name: msg },
+        7 => Error::Protocol(msg),
+        other => Error::Protocol(format!("unknown error code {other} ({msg:?})")),
+    }
+}
+
+/// Serialize one frame onto `w` (length prefix + payload). Large DATA
+/// frames are the serving hot path: the payload is built in one buffer
+/// and written with two `write_all`s (callers wrap the socket in a
+/// `BufWriter` and flush at reply-batch boundaries).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
+    let mut p = Vec::with_capacity(32);
+    match frame {
+        Frame::Hello { version } => {
+            p.push(K_HELLO);
+            p.extend_from_slice(&MAGIC);
+            put_u16(&mut p, *version);
+        }
+        Frame::Welcome {
+            version,
+            engine,
+            n_streams,
+            n_groups,
+            group_width,
+            chunk_rows,
+            max_fill,
+        } => {
+            p.push(K_WELCOME);
+            put_u16(&mut p, *version);
+            put_str(&mut p, engine);
+            put_u64(&mut p, *n_streams);
+            put_u64(&mut p, *n_groups);
+            put_u32(&mut p, *group_width);
+            put_u32(&mut p, *chunk_rows);
+            put_u64(&mut p, *max_fill);
+        }
+        Frame::Lease { req, target } => {
+            p.push(K_LEASE);
+            put_u64(&mut p, *req);
+            put_target(&mut p, *target);
+        }
+        Frame::Leased { req, h, xs_origin } => {
+            p.push(K_LEASED);
+            put_u64(&mut p, *req);
+            put_u64(&mut p, *h);
+            for x in xs_origin {
+                put_u32(&mut p, *x);
+            }
+        }
+        Frame::Fill { req, target, rows, repeat } => {
+            p.push(K_FILL);
+            put_u64(&mut p, *req);
+            put_target(&mut p, *target);
+            put_u64(&mut p, *rows);
+            put_u32(&mut p, *repeat);
+        }
+        Frame::Data { req, seq, last, values } => {
+            p.reserve(18 + values.len() * 4);
+            p.push(K_DATA);
+            put_u64(&mut p, *req);
+            put_u32(&mut p, *seq);
+            p.push(u8::from(*last));
+            put_u32(&mut p, values.len() as u32);
+            for v in values {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::Err { req, seq, last, error } => {
+            p.push(K_ERR);
+            put_u64(&mut p, *req);
+            put_u32(&mut p, *seq);
+            p.push(u8::from(*last));
+            put_error(&mut p, error);
+        }
+        Frame::Bye => p.push(K_BYE),
+        Frame::ByeAck => p.push(K_BYE_ACK),
+    }
+    if p.len() > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large ({} bytes)", p.len())));
+    }
+    w.write_all(&(p.len() as u32).to_le_bytes()).map_err(io_protocol)?;
+    w.write_all(&p).map_err(io_protocol)?;
+    Ok(())
+}
+
+/// Read one frame off `r`. `Ok(None)` is a clean close (EOF exactly at a
+/// frame boundary); EOF anywhere else, a bad length, or a malformed
+/// payload is a typed [`Error::Protocol`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, Error> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::Protocol("connection closed mid frame header".into()))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_protocol(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(Error::Protocol(format!("bad frame length {len}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Protocol("connection closed mid frame".into())
+        } else {
+            io_protocol(e)
+        }
+    })?;
+    decode_frame(&payload).map(Some)
+}
+
+/// Cursor over one frame payload; every accessor fails typed on a short
+/// payload, and [`Dec::finish`] rejects trailing bytes.
+struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], Error> {
+        if self.b.len() < n {
+            return Err(Error::Protocol("truncated frame".into()));
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, Error> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, Error> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32, Error> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, Error> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn string(&mut self) -> Result<String, Error> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Protocol("string is not UTF-8".into()))
+    }
+
+    fn target(&mut self) -> Result<ReqTarget, Error> {
+        match self.u8()? {
+            0 => Ok(ReqTarget::Stream(self.u64()?)),
+            1 => Ok(ReqTarget::Group(self.u64()? as usize)),
+            k => Err(Error::Protocol(format!("unknown target kind {k}"))),
+        }
+    }
+
+    fn finish(self) -> Result<(), Error> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Protocol(format!("{} trailing bytes in frame", self.b.len())))
+        }
+    }
+}
+
+/// Decode one frame payload (the bytes after the length prefix).
+pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
+    let mut d = Dec { b: payload };
+    let frame = match d.u8()? {
+        K_HELLO => {
+            if d.take(4)? != &MAGIC[..] {
+                return Err(Error::Protocol("bad connection magic".into()));
+            }
+            Frame::Hello { version: d.u16()? }
+        }
+        K_WELCOME => Frame::Welcome {
+            version: d.u16()?,
+            engine: d.string()?,
+            n_streams: d.u64()?,
+            n_groups: d.u64()?,
+            group_width: d.u32()?,
+            chunk_rows: d.u32()?,
+            max_fill: d.u64()?,
+        },
+        K_LEASE => Frame::Lease { req: d.u64()?, target: d.target()? },
+        K_LEASED => {
+            let req = d.u64()?;
+            let h = d.u64()?;
+            let mut xs_origin = [0u32; 4];
+            for x in &mut xs_origin {
+                *x = d.u32()?;
+            }
+            Frame::Leased { req, h, xs_origin }
+        }
+        K_FILL => Frame::Fill {
+            req: d.u64()?,
+            target: d.target()?,
+            rows: d.u64()?,
+            repeat: d.u32()?,
+        },
+        K_DATA => {
+            let req = d.u64()?;
+            let seq = d.u32()?;
+            let last = d.u8()? != 0;
+            let count = d.u32()? as usize;
+            let bytes = d.take(
+                count
+                    .checked_mul(4)
+                    .ok_or_else(|| Error::Protocol("value count overflow".into()))?,
+            )?;
+            let values = bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            Frame::Data { req, seq, last, values }
+        }
+        K_ERR => {
+            let req = d.u64()?;
+            let seq = d.u32()?;
+            let last = d.u8()? != 0;
+            let code = d.u16()?;
+            let a = d.u64()?;
+            let b = d.u64()?;
+            let msg = d.string()?;
+            Frame::Err { req, seq, last, error: decode_error(code, a, b, msg) }
+        }
+        K_BYE => Frame::Bye,
+        K_BYE_ACK => Frame::ByeAck,
+        k => return Err(Error::Protocol(format!("unknown frame kind {k}"))),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut r = &buf[..];
+        let back = read_frame(&mut r).unwrap().expect("one frame");
+        assert_eq!(back, frame);
+        assert!(r.is_empty(), "no bytes left over");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF after the frame");
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        roundtrip(Frame::Hello { version: VERSION });
+        roundtrip(Frame::Welcome {
+            version: VERSION,
+            engine: "sharded".into(),
+            n_streams: 1 << 20,
+            n_groups: 1 << 14,
+            group_width: 64,
+            chunk_rows: 1024,
+            max_fill: 1 << 22,
+        });
+        roundtrip(Frame::Lease { req: 7, target: ReqTarget::Stream(42) });
+        roundtrip(Frame::Lease { req: 8, target: ReqTarget::Group(3) });
+        roundtrip(Frame::Leased { req: 7, h: 0xdead_beef, xs_origin: [1, 2, 3, 4] });
+        roundtrip(Frame::Fill {
+            req: 9,
+            target: ReqTarget::Group(5),
+            rows: 1024,
+            repeat: 16,
+        });
+        roundtrip(Frame::Data { req: 9, seq: 3, last: false, values: vec![] });
+        roundtrip(Frame::Data {
+            req: 9,
+            seq: 15,
+            last: true,
+            values: (0..1000u32).map(|i| i.wrapping_mul(2654435761)).collect(),
+        });
+        roundtrip(Frame::Bye);
+        roundtrip(Frame::ByeAck);
+    }
+
+    #[test]
+    fn every_error_variant_crosses_the_wire_typed() {
+        for e in [
+            Error::LagWindowExceeded { lead: 99, window: 64 },
+            Error::UnknownStream { stream: 8, have: 8 },
+            Error::GroupOutOfRange { group: 2, have: 2 },
+            Error::InvalidConfig("zero streams".into()),
+            Error::Backend("shard 3 is gone".into()),
+            Error::UnknownGenerator { name: "WELL".into() },
+            Error::Protocol("short read".into()),
+        ] {
+            let retryable = e.is_retryable();
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &Frame::Err { req: 1, seq: 0, last: true, error: e.clone() })
+                .unwrap();
+            match read_frame(&mut &buf[..]).unwrap().unwrap() {
+                Frame::Err { error, .. } => {
+                    assert_eq!(error, e);
+                    assert_eq!(error.is_retryable(), retryable, "{error}");
+                }
+                other => panic!("expected ERR, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncations_are_typed_protocol_errors() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::Data { req: 1, seq: 0, last: true, values: vec![1, 2, 3] },
+        )
+        .unwrap();
+        // Every proper prefix must fail typed (mid-header, mid-payload),
+        // except the empty one (clean EOF).
+        for cut in 1..buf.len() {
+            let err = read_frame(&mut &buf[..cut]).expect_err("truncated frame must fail");
+            assert!(matches!(err, Error::Protocol(_)), "cut {cut}: {err}");
+        }
+        assert!(read_frame(&mut &buf[..0]).unwrap().is_none());
+    }
+
+    #[test]
+    fn garbage_is_rejected_before_allocation() {
+        // An absurd length prefix must be rejected without reserving it.
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(matches!(read_frame(&mut &huge[..]), Err(Error::Protocol(_))));
+        // Zero-length frames carry no kind byte.
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut &zero[..]), Err(Error::Protocol(_))));
+        // Unknown kind, bad magic, trailing bytes.
+        assert!(matches!(decode_frame(&[200]), Err(Error::Protocol(_))));
+        assert!(matches!(
+            decode_frame(&[K_HELLO, b'X', b'X', b'X', b'X', 1, 0]),
+            Err(Error::Protocol(_))
+        ));
+        assert!(matches!(decode_frame(&[K_BYE, 0xff]), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn frames_stream_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello { version: VERSION }).unwrap();
+        write_frame(&mut buf, &Frame::Bye).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Hello { .. })));
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Bye)));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+}

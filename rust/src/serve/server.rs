@@ -1,0 +1,384 @@
+//! The TCP serving front: one [`Server`] multiplexes any number of
+//! client connections onto one
+//! [`CompletionQueue`](crate::CompletionQueue) over the engine it
+//! serves.
+//!
+//! ```text
+//!  clients ══TCP══▶ accept ─▶ session reader ──submit_many──▶ ┌────────────────┐
+//!                             (one per conn,   + route entry  │ CompletionQueue │
+//!                              windowed)                      │  (shared, one)  │
+//!  clients ◀══TCP══ session writer ◀─outbox─ reactor ◀─wait_any┴────────────────┘
+//!                   (FIFO, bounded)           (one thread, routes by ticket)
+//! ```
+//!
+//! The reactor is the only standing consumer of the queue: it harvests
+//! completions (executing requests itself on engines without workers —
+//! `wait_any`'s executor-of-last-resort discipline) and routes each to
+//! its session's outbox, never blocking on any session's socket (the
+//! outbox is memory-bounded by the session window and written by the
+//! session's own writer thread). Sessions flushing on BYE harvest their
+//! own tickets with `wait_for`; either way every ticket is delivered
+//! exactly once.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Completion, CompletionQueue, StreamSource, Ticket};
+use crate::error::Error;
+use crate::serve::session::{run_session, Reply, Session};
+
+/// Tunables of one [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Sub-requests one session may have submitted-but-unwritten (its
+    /// in-flight window). Bounds the completed-block memory a slow
+    /// client can pin to `window × max_fill` numbers while leaving every
+    /// group the session touches pipelined. Default 16.
+    pub window: usize,
+    /// Sub-fill granularity hint advertised in WELCOME, in rows; clients
+    /// chunk large fills into sub-requests of about this size. Default
+    /// 1024 (one default tile).
+    pub chunk_rows: u32,
+    /// Max numbers one FILL sub-request may ask for; larger requests are
+    /// rejected with a typed `InvalidConfig` ERR frame. Default 2²².
+    pub max_fill: u64,
+    /// How long a fresh connection may take to say HELLO before it is
+    /// dropped. Default 10 s.
+    pub handshake_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            window: 16,
+            chunk_rows: 1024,
+            max_fill: 1 << 22,
+            handshake_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Where one in-flight sub-request's completion is delivered.
+pub(crate) struct Route {
+    pub(crate) session: Arc<Session>,
+    pub(crate) req: u64,
+    pub(crate) seq: u32,
+    pub(crate) last: bool,
+}
+
+/// State shared between the accept loop, the reactor, and every session
+/// thread.
+pub(crate) struct ServerShared {
+    pub(crate) cq: CompletionQueue,
+    pub(crate) cfg: ServeConfig,
+    /// Ticket → completion destination. Entries are inserted *before*
+    /// submission (under this lock) and removed exactly once when the
+    /// completion is routed; size is bounded by the live sessions'
+    /// summed windows.
+    routes: Mutex<HashMap<Ticket, Route>>,
+    /// Live sessions by id (for forced shutdown).
+    sessions: Mutex<HashMap<u64, Arc<Session>>>,
+    /// Sessions fully closed since start; `closed_cv` broadcasts on
+    /// every close (and on deregistration during shutdown).
+    closed: Mutex<u64>,
+    closed_cv: Condvar,
+    /// Reactor parker: generation counter + condvar (the crate's
+    /// lost-wakeup-proof pattern) — submissions nudge it so `wait_any`'s
+    /// "nothing outstanding" idle never misses new work.
+    reactor_gen: Mutex<u64>,
+    reactor_cv: Condvar,
+    stop: AtomicBool,
+    next_session: AtomicU64,
+}
+
+impl ServerShared {
+    pub(crate) fn lock_routes(&self) -> MutexGuard<'_, HashMap<Ticket, Route>> {
+        self.routes.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Is the server shutting down? Sessions abandon multi-chunk fills
+    /// mid-submission when it is — generating gigabytes for a dying
+    /// endpoint would stall the shutdown.
+    pub(crate) fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Wake the reactor: new submissions exist (or we are stopping).
+    pub(crate) fn nudge_reactor(&self) {
+        *self.reactor_gen.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        self.reactor_cv.notify_all();
+    }
+
+    /// Deliver one harvested completion to its session (called by the
+    /// reactor, and by a session's own flush for completions it
+    /// harvested with `wait_for`). The session admits chunks to the
+    /// socket in submission order, so the routing race between the two
+    /// is harmless.
+    pub(crate) fn route_completion(&self, c: Completion) {
+        let route = self.lock_routes().remove(&c.ticket);
+        match route {
+            Some(rt) => rt.session.push_chunk(
+                c.ticket,
+                Reply::Chunk {
+                    req: rt.req,
+                    seq: rt.seq,
+                    last: rt.last,
+                    counted: true,
+                    result: c.result,
+                },
+            ),
+            // Unreachable by construction (routes are inserted before
+            // submission and removed exactly once, here); dropping beats
+            // panicking on the serve path.
+            None => debug_assert!(false, "completion for an unrouted ticket"),
+        }
+    }
+
+    /// A session finished (its threads are gone, its tickets drained):
+    /// deregister and wake anyone counting served sessions.
+    pub(crate) fn session_closed(&self, id: u64) {
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+        *self.closed.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        self.closed_cv.notify_all();
+    }
+}
+
+/// The reactor thread: the standing harvester of the shared queue.
+fn reactor_main(shared: &Arc<ServerShared>) {
+    loop {
+        let gen = *shared.reactor_gen.lock().unwrap_or_else(|e| e.into_inner());
+        while let Some(c) = shared.cq.wait_any() {
+            shared.route_completion(c);
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        // Nothing outstanding: park until a session submits. The
+        // timeout is a backstop only — every submit nudges.
+        let guard = shared.reactor_gen.lock().unwrap_or_else(|e| e.into_inner());
+        if *guard == gen {
+            let _ = shared
+                .reactor_cv
+                .wait_timeout(guard, Duration::from_millis(100))
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The accept thread: register a session and hand the connection to its
+/// own thread (the handshake must never run on the accept loop — a slow
+/// client would block every other connect).
+fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // Transient accept failure (e.g. fd exhaustion): back
+                // off briefly instead of busy-looping on the error.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let id = shared.next_session.fetch_add(1, Ordering::Relaxed);
+        let sess = Arc::new(Session::new(id, stream));
+        shared
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, sess.clone());
+        let server = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("thundering-serve-{id}"))
+            .spawn(move || run_session(server, sess));
+        if spawned.is_err() {
+            // Could not spawn: undo the registration and drop the
+            // connection (counted as closed so waiters see it).
+            if let Some(sess) =
+                shared.sessions.lock().unwrap_or_else(|e| e.into_inner()).get(&id).cloned()
+            {
+                sess.close_socket();
+            }
+            shared.session_closed(id);
+        }
+    }
+}
+
+/// A live serving endpoint: `start` binds, `shutdown` (or drop) closes
+/// every session and joins the service threads.
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use thundering::serve::{RemoteSource, ServeConfig, Server};
+/// use thundering::{Engine, EngineBuilder, StreamHandle};
+///
+/// let source = EngineBuilder::new(1 << 10).engine(Engine::Sharded).build_arc()?;
+/// let server = Server::start(source, "127.0.0.1:0", ServeConfig::default())?;
+///
+/// // Anywhere on the network: the remote engine as a local StreamSource.
+/// let remote = Arc::new(RemoteSource::connect(server.local_addr())?);
+/// let mut h = StreamHandle::new(remote, 7)?; // bit-identical to a local handle
+/// let x = h.next_u32()?;
+/// # Ok::<(), thundering::Error>(())
+/// ```
+pub struct Server {
+    shared: Arc<ServerShared>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    reactor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `source` — any engine, shared with in-process consumers if
+    /// desired — until [`shutdown`](Self::shutdown) or drop.
+    pub fn start(
+        source: Arc<dyn StreamSource>,
+        addr: impl ToSocketAddrs,
+        cfg: ServeConfig,
+    ) -> Result<Server, Error> {
+        if cfg.window == 0 || cfg.chunk_rows == 0 || cfg.max_fill == 0 {
+            return Err(Error::InvalidConfig(
+                "serve window, chunk_rows, and max_fill must all be >= 1".into(),
+            ));
+        }
+        // A max_fill-sized DATA frame (4 bytes per number + header) must
+        // fit the protocol's frame cap — otherwise a FILL the server
+        // *accepts* would produce a frame write_frame rejects, killing
+        // the session without a typed error.
+        let data_cap = (crate::serve::protocol::MAX_FRAME as u64 - 32) / 4;
+        if cfg.max_fill > data_cap {
+            return Err(Error::InvalidConfig(format!(
+                "max_fill {} exceeds the {data_cap} numbers that fit one wire frame",
+                cfg.max_fill
+            )));
+        }
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Protocol(format!("bind: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::Protocol(format!("local_addr: {e}")))?;
+        let shared = Arc::new(ServerShared {
+            cq: CompletionQueue::new(source),
+            cfg,
+            routes: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            closed: Mutex::new(0),
+            closed_cv: Condvar::new(),
+            reactor_gen: Mutex::new(0),
+            reactor_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            next_session: AtomicU64::new(0),
+        });
+        let reactor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("thundering-serve-reactor".into())
+                .spawn(move || reactor_main(&shared))
+                .map_err(|e| Error::Backend(format!("spawning reactor: {e}")))?
+        };
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("thundering-serve-accept".into())
+                .spawn(move || accept_main(&shared, listener))
+        };
+        let accept = match accept {
+            Ok(handle) => handle,
+            Err(e) => {
+                shared.stop.store(true, Ordering::Release);
+                shared.nudge_reactor();
+                let _ = reactor.join();
+                return Err(Error::Backend(format!("spawning acceptor: {e}")));
+            }
+        };
+        Ok(Server { shared, local_addr, accept: Some(accept), reactor: Some(reactor) })
+    }
+
+    /// The bound address (resolves the port when `start` was given
+    /// port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Sessions served and fully closed since start.
+    pub fn sessions_closed(&self) -> u64 {
+        *self.shared.closed.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Block until `n` sessions (total since start) have closed — the
+    /// `serve --sessions n` CLI termination condition.
+    pub fn wait_sessions_closed(&self, n: u64) {
+        let mut closed = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
+        while *closed < n {
+            closed = self.shared.closed_cv.wait(closed).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Stop accepting, force every live session closed (their in-flight
+    /// tickets still complete and drain), then join the service threads.
+    /// Idempotent; drop calls it.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        // Unblock the accept loop with a throwaway loopback connection
+        // (checked against `stop` before any session is created).
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        // Session threads are detached; force their sockets closed and
+        // wait for them to flush their tickets and deregister. The close
+        // runs every sweep, not once: a session the accept loop
+        // registered concurrently with the stop flag would miss a
+        // one-shot close.
+        loop {
+            let live: Vec<Arc<Session>> = self
+                .shared
+                .sessions
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .values()
+                .cloned()
+                .collect();
+            if live.is_empty() {
+                break;
+            }
+            for sess in live {
+                sess.close_socket();
+            }
+            let guard = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = self
+                .shared
+                .closed_cv
+                .wait_timeout(guard, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        self.shared.nudge_reactor();
+        if let Some(handle) = self.reactor.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server")
+            .field("addr", &self.local_addr)
+            .field("engine", &self.shared.cq.source().engine_kind())
+            .field("sessions_closed", &self.sessions_closed())
+            .finish()
+    }
+}

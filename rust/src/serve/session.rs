@@ -1,0 +1,551 @@
+//! Server-side per-connection state and threads.
+//!
+//! Each accepted connection gets two threads and one bounded window
+//! between them:
+//!
+//! * the **reader** parses frames off the socket. A FILL becomes
+//!   `repeat` sub-requests submitted into the server's shared
+//!   [`CompletionQueue`](crate::CompletionQueue) in window-sized batches
+//!   ([`CompletionQueue::submit_many`](crate::CompletionQueue::submit_many),
+//!   one submission-lock acquisition per batch), each with a routing
+//!   entry (ticket → session/req/seq) registered *before* submission so
+//!   no completion can ever arrive unroutable;
+//! * the **writer** drains this session's reply outbox onto the socket
+//!   in FIFO order, releasing one window slot per written sub-request;
+//! * the **window** (`ServeConfig::window`) bounds sub-requests that are
+//!   submitted-but-unwritten, so a slow or stalled client pins at most
+//!   `window × max_fill` completed numbers — the same bounded-in-flight
+//!   discipline as the windowed `--completion` throughput CLI — while
+//!   the shared reactor never blocks on any one session's socket.
+//!
+//! On BYE (and on EOF or a protocol violation) the reader runs the
+//! *ordered flush*: it drives every still-routed ticket of the session
+//! to completion with
+//! [`CompletionQueue::wait_for`](crate::CompletionQueue::wait_for)
+//! (routing whatever it harvests exactly as the reactor would), then
+//! waits for the window to drain — only after every DATA/ERR frame is on
+//! the wire is BYE_ACK queued, so it is always the connection's final
+//! frame.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::coordinator::{ReqTarget, StreamReq, Ticket};
+use crate::error::Error;
+use crate::serve::protocol::{self, Frame};
+use crate::serve::server::{Route, ServerShared};
+
+/// One reply queued for the writer thread.
+pub(crate) enum Reply {
+    /// One sub-request outcome — a DATA or ERR frame. `counted` is
+    /// whether it occupies a window slot (false for validation failures
+    /// the reader produced without submitting anything).
+    Chunk { req: u64, seq: u32, last: bool, counted: bool, result: Result<Vec<u32>, Error> },
+    /// Lease acknowledgement.
+    Leased { req: u64, h: u64, xs_origin: [u32; 4] },
+    /// Graceful goodbye — queued after the ordered flush, so it follows
+    /// every data frame of the session.
+    ByeAck,
+}
+
+struct SessionState {
+    queue: VecDeque<Reply>,
+    /// This session's submitted tickets in submission order — the
+    /// admission order for completed chunks. Two routers race on a
+    /// flushing session (the reactor and the reader's `wait_for` loop),
+    /// so arrival order alone cannot be trusted for the wire.
+    expected: VecDeque<Ticket>,
+    /// Chunks routed ahead of their turn, parked until every earlier
+    /// ticket's chunk has been admitted (bounded by the window).
+    arrived: HashMap<Ticket, Reply>,
+    /// Sub-requests submitted and not yet written to the socket — the
+    /// session's in-flight window occupancy.
+    in_flight: usize,
+    /// No further replies will be queued; the writer exits once drained.
+    closing: bool,
+    /// The socket write side failed: drain replies without writing so
+    /// the window accounting (and the reader's flush) still completes.
+    dead: bool,
+}
+
+impl SessionState {
+    /// Admit every arrived chunk that is next in submission order.
+    fn admit_ready(&mut self) {
+        while let Some(front) = self.expected.front() {
+            match self.arrived.remove(front) {
+                Some(reply) => {
+                    self.expected.pop_front();
+                    self.queue.push_back(reply);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// One client connection's shared state (reader ↔ writer ↔ reactor).
+pub(crate) struct Session {
+    pub(crate) id: u64,
+    state: Mutex<SessionState>,
+    /// Writer waits here for queued replies (or `closing`).
+    reply_ready: Condvar,
+    /// The reader waits here for window slots; also signalled on every
+    /// release so the flush's drain wait wakes.
+    window_open: Condvar,
+    /// Kept for forced shutdown: closing it unblocks both the reader
+    /// (blocked in a frame read) and the writer (blocked in a write to a
+    /// stalled client).
+    stream: TcpStream,
+}
+
+impl Session {
+    pub(crate) fn new(id: u64, stream: TcpStream) -> Self {
+        Self {
+            id,
+            state: Mutex::new(SessionState {
+                queue: VecDeque::new(),
+                expected: VecDeque::new(),
+                arrived: HashMap::new(),
+                in_flight: 0,
+                closing: false,
+                dead: false,
+            }),
+            reply_ready: Condvar::new(),
+            window_open: Condvar::new(),
+            stream,
+        }
+    }
+
+    /// Lock the state, recovering from poisoning (the invariants are a
+    /// queue and three scalars, valid between every update).
+    fn lock(&self) -> MutexGuard<'_, SessionState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Queue one reply for the writer (direct path: leases, validation
+    /// failures, BYE_ACK — replies that never entered the window).
+    pub(crate) fn push_reply(&self, reply: Reply) {
+        self.lock().queue.push_back(reply);
+        self.reply_ready.notify_all();
+    }
+
+    /// Record freshly submitted tickets in submission order (called
+    /// with the routing lock held, so no completion can race ahead of
+    /// the registration).
+    fn register_expected(&self, tickets: &[Ticket]) {
+        let mut st = self.lock();
+        st.expected.extend(tickets.iter().copied());
+        st.admit_ready();
+        drop(st);
+        self.reply_ready.notify_all();
+    }
+
+    /// Deliver one completed chunk: parked until every earlier ticket's
+    /// chunk is admitted, so the wire carries sub-requests strictly in
+    /// submission order no matter which thread routed them.
+    pub(crate) fn push_chunk(&self, ticket: Ticket, reply: Reply) {
+        let mut st = self.lock();
+        st.arrived.insert(ticket, reply);
+        st.admit_ready();
+        drop(st);
+        self.reply_ready.notify_all();
+    }
+
+    /// Reserve up to `want` window slots, blocking while the window is
+    /// full; returns the grant (`1..=want`).
+    fn acquire_window(&self, want: usize, window: usize) -> usize {
+        let mut st = self.lock();
+        while st.in_flight >= window {
+            st = self.window_open.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        let grant = want.min(window - st.in_flight).max(1);
+        st.in_flight += grant;
+        grant
+    }
+
+    /// Return `n` window slots (written to the socket, or dropped after
+    /// a failed submission).
+    fn release_window(&self, n: usize) {
+        let mut st = self.lock();
+        st.in_flight -= n.min(st.in_flight);
+        drop(st);
+        self.window_open.notify_all();
+    }
+
+    /// Has the socket write side failed (client gone or force-closed)?
+    fn is_dead(&self) -> bool {
+        self.lock().dead
+    }
+
+    /// Block until every submitted sub-request's frame has left through
+    /// the writer (`in_flight == 0`). Terminates even for a dead
+    /// session: the writer keeps draining (and releasing) without
+    /// writing.
+    fn wait_window_drained(&self) {
+        let mut st = self.lock();
+        while st.in_flight > 0 {
+            st = self.window_open.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Force both socket directions closed (idempotent).
+    pub(crate) fn close_socket(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Reply for a request rejected before anything was submitted.
+fn err_chunk(req: u64, error: Error) -> Reply {
+    Reply::Chunk { req, seq: 0, last: true, counted: false, result: Err(error) }
+}
+
+/// The per-connection entry point (one thread per accepted connection):
+/// handshake, spawn the writer, then the read → submit loop, the ordered
+/// flush, and teardown.
+pub(crate) fn run_session(server: Arc<ServerShared>, sess: Arc<Session>) {
+    let (reader_stream, writer_stream) =
+        match (sess.stream.try_clone(), sess.stream.try_clone()) {
+            (Ok(r), Ok(w)) => (r, w),
+            _ => {
+                sess.close_socket();
+                server.session_closed(sess.id);
+                return;
+            }
+        };
+
+    // Handshake under a read timeout, so a connection that never says
+    // HELLO cannot pin a session forever.
+    let _ = reader_stream.set_read_timeout(Some(server.cfg.handshake_timeout));
+    let mut r = BufReader::new(reader_stream);
+    let hello = protocol::read_frame(&mut r);
+    let hello_ok =
+        matches!(hello, Ok(Some(Frame::Hello { version })) if version == protocol::VERSION);
+    if !hello_ok {
+        // Answer typed (best effort), then hang up — a malformed or
+        // mismatched hello never reaches the engine.
+        let mut w = BufWriter::new(&writer_stream);
+        let _ = protocol::write_frame(
+            &mut w,
+            &Frame::Err {
+                req: protocol::CONNECTION_REQ,
+                seq: 0,
+                last: true,
+                error: Error::Protocol(format!(
+                    "expected HELLO v{} as the first frame",
+                    protocol::VERSION
+                )),
+            },
+        );
+        let _ = w.flush();
+        sess.close_socket();
+        server.session_closed(sess.id);
+        return;
+    }
+    let _ = r.get_ref().set_read_timeout(None);
+
+    // Greet before the writer exists — no contention on the socket yet.
+    {
+        let src = server.cq.source();
+        let welcome = Frame::Welcome {
+            version: protocol::VERSION,
+            engine: src.engine_kind().to_string(),
+            n_streams: src.n_streams(),
+            n_groups: src.n_groups() as u64,
+            group_width: src.group_width() as u32,
+            chunk_rows: server.cfg.chunk_rows,
+            max_fill: server.cfg.max_fill,
+        };
+        let mut w = BufWriter::new(&writer_stream);
+        let sent = protocol::write_frame(&mut w, &welcome)
+            .and_then(|()| w.flush().map_err(protocol::io_protocol));
+        if sent.is_err() {
+            sess.close_socket();
+            server.session_closed(sess.id);
+            return;
+        }
+    }
+
+    let writer = {
+        let sess = sess.clone();
+        std::thread::Builder::new()
+            .name(format!("thundering-serve-w{}", sess.id))
+            .spawn(move || writer_main(&sess, writer_stream))
+    };
+    let writer = match writer {
+        Ok(handle) => handle,
+        Err(_) => {
+            sess.close_socket();
+            server.session_closed(sess.id);
+            return;
+        }
+    };
+
+    let mut graceful = false;
+    loop {
+        match protocol::read_frame(&mut r) {
+            Ok(Some(Frame::Fill { req, target, rows, repeat })) => {
+                handle_fill(&server, &sess, req, target, rows, repeat);
+            }
+            Ok(Some(Frame::Lease { req, target })) => {
+                handle_lease(&server, &sess, req, target);
+            }
+            Ok(Some(Frame::Bye)) => {
+                graceful = true;
+                break;
+            }
+            Ok(Some(other)) => {
+                // Server-bound connections never carry this frame.
+                sess.push_reply(err_chunk(
+                    protocol::CONNECTION_REQ,
+                    Error::Protocol(format!(
+                        "unexpected {} frame",
+                        protocol::frame_name(&other)
+                    )),
+                ));
+                break;
+            }
+            Err(e) => {
+                sess.push_reply(err_chunk(protocol::CONNECTION_REQ, e));
+                break;
+            }
+            Ok(None) => break, // clean EOF without BYE
+        }
+    }
+
+    flush_session(&server, &sess);
+    {
+        let mut st = sess.lock();
+        if graceful {
+            st.queue.push_back(Reply::ByeAck);
+        }
+        st.closing = true;
+    }
+    sess.reply_ready.notify_all();
+    let _ = writer.join();
+    sess.close_socket();
+    server.session_closed(sess.id);
+}
+
+/// Validate a LEASE and answer with the target's registered identity.
+fn handle_lease(server: &Arc<ServerShared>, sess: &Arc<Session>, req: u64, target: ReqTarget) {
+    let src = server.cq.source();
+    let reply = match target {
+        ReqTarget::Stream(s) => match src.spec(s) {
+            Some(spec) => Reply::Leased { req, h: spec.h, xs_origin: spec.xs_origin },
+            None => {
+                err_chunk(req, Error::UnknownStream { stream: s, have: src.n_streams() })
+            }
+        },
+        ReqTarget::Group(g) if g < src.n_groups() => {
+            Reply::Leased { req, h: 0, xs_origin: [0; 4] }
+        }
+        ReqTarget::Group(g) => {
+            err_chunk(req, Error::GroupOutOfRange { group: g, have: src.n_groups() })
+        }
+    };
+    sess.push_reply(reply);
+}
+
+/// Validate a FILL, then submit its `repeat` sub-requests in
+/// window-bounded batches, registering every ticket's route before the
+/// batch goes in.
+fn handle_fill(
+    server: &Arc<ServerShared>,
+    sess: &Arc<Session>,
+    req: u64,
+    target: ReqTarget,
+    rows: u64,
+    repeat: u32,
+) {
+    let src = server.cq.source();
+    // Target, size, and shape are all vetted here, so a rejected FILL is
+    // one typed ERR frame and no stream cursor has moved.
+    match target {
+        ReqTarget::Stream(s) if s >= src.n_streams() => {
+            sess.push_reply(err_chunk(
+                req,
+                Error::UnknownStream { stream: s, have: src.n_streams() },
+            ));
+            return;
+        }
+        ReqTarget::Group(g) if g >= src.n_groups() => {
+            sess.push_reply(err_chunk(
+                req,
+                Error::GroupOutOfRange { group: g, have: src.n_groups() },
+            ));
+            return;
+        }
+        _ => {}
+    }
+    let numbers = match target {
+        ReqTarget::Stream(_) => Some(rows),
+        ReqTarget::Group(_) => rows.checked_mul(src.group_width() as u64),
+    };
+    let fits = matches!(numbers, Some(n) if n >= 1 && n <= server.cfg.max_fill);
+    if !fits || repeat == 0 {
+        sess.push_reply(err_chunk(
+            req,
+            Error::InvalidConfig(format!(
+                "fill of {rows} rows x {repeat} is outside 1..={} numbers per sub-request",
+                server.cfg.max_fill
+            )),
+        ));
+        return;
+    }
+    // max_fill bounds `rows`, so the usize cast is lossless.
+    let sub = match target {
+        ReqTarget::Stream(s) => StreamReq::stream(s, rows as usize),
+        ReqTarget::Group(g) => StreamReq::group(g, rows as usize),
+    };
+
+    let mut seq: u32 = 0;
+    let mut remaining = repeat as usize;
+    while remaining > 0 {
+        // Abandon a multi-chunk fill whose consumer is gone (write side
+        // dead) or whose server is shutting down: the chunks already
+        // submitted complete and drain; the rest would be generated for
+        // nobody. The stream cursor simply stops where delivery stopped.
+        if server.stopping() || sess.is_dead() {
+            return;
+        }
+        let grant = sess.acquire_window(remaining, server.cfg.window);
+        let batch = vec![sub; grant];
+        // Routes must exist before any completion can be harvested, so
+        // the routing lock is held across the batched submit (the
+        // reactor takes it only after `wait_any` returns, never while
+        // holding queue state — no ordering cycle).
+        let submitted = {
+            let mut routes = server.lock_routes();
+            match server.cq.submit_many(&batch) {
+                Ok(tickets) => {
+                    for &ticket in &tickets {
+                        routes.insert(
+                            ticket,
+                            Route {
+                                session: sess.clone(),
+                                req,
+                                seq,
+                                last: seq + 1 == repeat,
+                            },
+                        );
+                        seq += 1;
+                    }
+                    // Still under the routing lock: admission order must
+                    // be on record before any completion can be routed.
+                    sess.register_expected(&tickets);
+                    true
+                }
+                Err(e) => {
+                    // Unreachable after the validation above; fail the
+                    // fill typed rather than trusting that. The direct
+                    // push bypasses the reorder stage, so let every
+                    // earlier sub-request's frame reach the wire first —
+                    // per-request in-order delivery must hold even here.
+                    drop(routes);
+                    sess.release_window(grant);
+                    sess.wait_window_drained();
+                    sess.push_reply(Reply::Chunk {
+                        req,
+                        seq,
+                        last: true,
+                        counted: false,
+                        result: Err(e),
+                    });
+                    false
+                }
+            }
+        };
+        server.nudge_reactor();
+        if !submitted {
+            return;
+        }
+        remaining -= grant;
+    }
+}
+
+/// The ordered flush (see the module docs): drive every still-routed
+/// ticket of this session to completion, then wait for the writer to put
+/// every frame on the wire.
+fn flush_session(server: &Arc<ServerShared>, sess: &Arc<Session>) {
+    loop {
+        let mine: Vec<Ticket> = {
+            let routes = server.lock_routes();
+            routes
+                .iter()
+                .filter(|(_, rt)| rt.session.id == sess.id)
+                .map(|(t, _)| *t)
+                .collect()
+        };
+        if mine.is_empty() {
+            break;
+        }
+        let mut progress = false;
+        for ticket in mine {
+            if let Some(c) = server.cq.wait_for(ticket) {
+                server.route_completion(c);
+                progress = true;
+            }
+            // None: the reactor harvested it and is routing it now; the
+            // rescan (and the window drain below) covers the handoff.
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // The window drains only when frames hit the socket (or a dead
+    // writer drops them): in_flight == 0 means every DATA/ERR frame of
+    // the session is out.
+    sess.wait_window_drained();
+}
+
+/// The wire form of one queued reply.
+fn frame_of(reply: Reply) -> Frame {
+    match reply {
+        Reply::Chunk { req, seq, last, result: Ok(values), .. } => {
+            Frame::Data { req, seq, last, values }
+        }
+        Reply::Chunk { req, seq, last, result: Err(error), .. } => {
+            Frame::Err { req, seq, last, error }
+        }
+        Reply::Leased { req, h, xs_origin } => Frame::Leased { req, h, xs_origin },
+        Reply::ByeAck => Frame::ByeAck,
+    }
+}
+
+/// The writer thread: drain the outbox in FIFO order, flushing at batch
+/// boundaries, releasing window slots as frames land. A write failure
+/// marks the session dead — replies keep draining (dropped) so the
+/// reader's flush and window accounting still terminate.
+fn writer_main(sess: &Session, stream: TcpStream) {
+    let mut w = BufWriter::new(stream);
+    loop {
+        let next = {
+            let mut st = sess.lock();
+            while st.queue.is_empty() && !st.closing {
+                st = sess.reply_ready.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.queue
+                .pop_front()
+                .map(|reply| (reply, st.queue.is_empty(), st.dead))
+        };
+        let Some((reply, flush_now, dead)) = next else {
+            break; // closing and fully drained
+        };
+        let counted = matches!(reply, Reply::Chunk { counted: true, .. });
+        if !dead {
+            let frame = frame_of(reply);
+            let ok = protocol::write_frame(&mut w, &frame).is_ok()
+                && (!flush_now || w.flush().is_ok());
+            if !ok {
+                sess.lock().dead = true;
+            }
+        }
+        if counted {
+            sess.release_window(1);
+        }
+    }
+    let _ = w.flush();
+}

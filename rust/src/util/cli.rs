@@ -11,15 +11,13 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
-    /// Option keys that take a value (everything else is a flag).
-    known_options: Vec<&'static str>,
 }
 
 impl Args {
     /// Parse raw args. `value_options` lists the long options that consume
     /// a value; any other `--name` is treated as a boolean flag.
     pub fn parse(raw: impl Iterator<Item = String>, value_options: &[&'static str]) -> Result<Args> {
-        let mut out = Args { known_options: value_options.to_vec(), ..Default::default() };
+        let mut out = Args::default();
         let mut it = raw.peekable();
         while let Some(arg) = it.next() {
             if let Some(body) = arg.strip_prefix("--") {
@@ -78,17 +76,27 @@ impl Args {
         }
     }
 
-    /// Error if any option key is unknown (typo detection).
-    pub fn check_known(&self, also_flags: &[&str]) -> Result<()> {
+    /// Per-command audit: error on any option, flag, or extra positional
+    /// this command does not take (typo detection — `--straems 64` must
+    /// fail loudly, not silently serve the default).
+    pub fn expect(
+        &self,
+        value_opts: &[&str],
+        flags: &[&str],
+        max_positional: usize,
+    ) -> Result<()> {
         for k in self.options.keys() {
-            if !self.known_options.contains(&k.as_str()) {
-                bail!("unknown option --{k}");
+            if !value_opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} for this command");
             }
         }
         for f in &self.flags {
-            if !also_flags.contains(&f.as_str()) {
-                bail!("unknown flag --{f}");
+            if !flags.contains(&f.as_str()) {
+                bail!("unknown flag --{f} for this command");
             }
+        }
+        if self.positional.len() > max_positional {
+            bail!("unexpected argument {:?}", self.positional[max_positional]);
         }
         Ok(())
     }
@@ -158,10 +166,19 @@ mod tests {
     }
 
     #[test]
+    fn expect_audits_options_flags_and_positionals() {
+        let a = args(&["report", "--streams", "64", "--quick"], &["streams"]);
+        assert!(a.expect(&["streams"], &["quick"], 1).is_ok());
+        assert!(a.expect(&["rows"], &["quick"], 1).is_err(), "option not taken");
+        assert!(a.expect(&["streams"], &[], 1).is_err(), "flag not taken");
+        assert!(a.expect(&["streams"], &["quick"], 0).is_err(), "extra positional");
+    }
+
+    #[test]
     fn unknown_option_detected() {
         let a = args(&["--bogus=1"], &["streams"]);
-        assert!(a.check_known(&[]).is_err());
+        assert!(a.expect(&["streams"], &[], 0).is_err());
         let a = args(&["--streams=1"], &["streams"]);
-        assert!(a.check_known(&[]).is_ok());
+        assert!(a.expect(&["streams"], &[], 0).is_ok());
     }
 }

@@ -1,0 +1,286 @@
+//! Serving-layer loopback integration: determinism over the wire (the
+//! bytes a client reads are exactly the scalar replay, on both
+//! engines), typed errors across the boundary, chunked-fill
+//! exactly-once ordering, the BYE flush contract, malformed-frame
+//! rejection, and the multi-connection loadgen driver.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
+use thundering::serve::loadgen::{self, LoadgenConfig};
+use thundering::serve::protocol::{self, Frame};
+use thundering::serve::{RemoteClient, RemoteSource, ServeConfig, Server};
+use thundering::{Engine, EngineBuilder, Error, ReqTarget, StreamHandle, StreamSource};
+
+/// A source with the test shape: `groups × width` streams, seed 42.
+fn source(
+    engine: Engine,
+    groups: usize,
+    width: usize,
+    rows_per_tile: usize,
+    lag_window: u64,
+) -> Arc<dyn StreamSource> {
+    EngineBuilder::new((groups * width) as u64)
+        .engine(engine)
+        .group_width(width)
+        .rows_per_tile(rows_per_tile)
+        .lag_window(lag_window)
+        .root_seed(42)
+        .build_arc()
+        .unwrap()
+}
+
+fn serve(src: Arc<dyn StreamSource>) -> Server {
+    Server::start(src, "127.0.0.1:0", ServeConfig::default()).unwrap()
+}
+
+/// Scalar oracle: rows `skip..skip+rows` of one group's block.
+fn oracle_block(group: u64, width: usize, skip: usize, rows: usize) -> Vec<u32> {
+    let mut batch = ThunderingBatch::new(splitmix64(42 ^ group), width, group * width as u64);
+    if skip > 0 {
+        batch.tile(skip);
+    }
+    batch.tile(rows)
+}
+
+#[test]
+fn remote_source_is_bit_identical_to_local_on_both_engines() {
+    for engine in [Engine::Native, Engine::Sharded] {
+        let server = serve(source(engine.clone(), 4, 4, 4, u64::MAX / 2));
+        let remote = RemoteSource::connect(server.local_addr()).unwrap();
+        let local = source(engine, 4, 4, 4, u64::MAX / 2);
+        assert_eq!(remote.n_streams(), 16);
+        assert_eq!(remote.n_groups(), 4);
+        assert_eq!(remote.group_width(), 4);
+
+        // The same mixed call sequence against both; every result must
+        // agree (the local engines are oracle-pinned elsewhere).
+        let mut a = vec![0u32; 7];
+        let mut b = vec![0u32; 7];
+        remote.fetch(5, &mut a).unwrap();
+        local.fetch(5, &mut b).unwrap();
+        assert_eq!(a, b, "fetch over the wire");
+
+        assert_eq!(
+            remote.fetch_block(0, 8).unwrap(),
+            local.fetch_block(0, 8).unwrap(),
+            "fetch_block over the wire"
+        );
+        assert_eq!(
+            remote.fetch_many(4).unwrap(),
+            local.fetch_many(4).unwrap(),
+            "fetch_many over the wire"
+        );
+
+        // Identity metadata crosses through LEASE.
+        assert_eq!(remote.spec(5), local.spec(5), "spec over the wire");
+        assert!(remote.spec(99).is_none());
+
+        // Direct oracle spot-check: stream 5 (group 1, lane 1) consumed
+        // 7 then 4 numbers.
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+        let expect: Vec<u32> = (0..7).map(|_| s.next_u32()).collect();
+        assert_eq!(a, expect, "scalar replay");
+    }
+}
+
+#[test]
+fn stream_handle_over_the_wire_matches_scalar_replay() {
+    let server = serve(source(Engine::Sharded, 2, 4, 16, u64::MAX / 2));
+    let remote: Arc<dyn StreamSource> =
+        Arc::new(RemoteSource::connect(server.local_addr()).unwrap());
+    let mut h = StreamHandle::new(remote, 6).unwrap().with_chunk(7);
+    // Interleave all three handle views; the sequence must stay
+    // seamless across the network boundary.
+    let mut got = Vec::new();
+    for _ in 0..5 {
+        got.push(h.next_u32().unwrap());
+    }
+    let mut buf = vec![0u32; 13];
+    h.fill(&mut buf).unwrap();
+    got.extend_from_slice(&buf);
+    got.extend(h.by_ref().take(6));
+    got.push(Prng32::next_u32(&mut h)); // the Prng32 view
+
+    let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 6);
+    let expect: Vec<u32> = (0..got.len()).map(|_| s.next_u32()).collect();
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn typed_errors_cross_the_wire_including_retryable_backpressure() {
+    // Tight lag window: 2-lane groups, window 8.
+    let server = serve(source(Engine::Native, 1, 2, 4, 8));
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+
+    // Validation errors (client-side fast fail mirrors the server).
+    let mut buf = vec![0u32; 4];
+    assert_eq!(
+        remote.fetch(2, &mut buf).unwrap_err(),
+        Error::UnknownStream { stream: 2, have: 2 }
+    );
+    assert_eq!(
+        remote.fetch_block(1, 4).unwrap_err(),
+        Error::GroupOutOfRange { group: 1, have: 1 }
+    );
+
+    // Backpressure: lane 0 drains the whole window, one more number is
+    // a typed retryable rejection — and consumed nothing.
+    let mut eight = vec![0u32; 8];
+    remote.fetch(0, &mut eight).unwrap();
+    let mut one = vec![0u32; 1];
+    let err = remote.fetch(0, &mut one).unwrap_err();
+    assert_eq!(err, Error::LagWindowExceeded { lead: 9, window: 8 });
+    assert!(err.is_retryable(), "{err}");
+    // Catch the slow lane up over the wire, then the retry continues
+    // seamlessly at row 8.
+    remote.fetch(1, &mut eight).unwrap();
+    remote.fetch(0, &mut one).unwrap();
+    let mut s = ThunderingStream::new(splitmix64(42), 0);
+    let mut expect = 0;
+    for _ in 0..9 {
+        expect = s.next_u32();
+    }
+    assert_eq!(one[0], expect, "row 8 after the rejected fetch");
+}
+
+#[test]
+fn chunked_fill_delivers_in_order_exactly_once() {
+    let server = serve(source(Engine::Sharded, 2, 4, 4, u64::MAX / 2));
+    let mut client = RemoteClient::connect(server.local_addr()).unwrap();
+    assert_eq!(client.info().n_streams, 8);
+    client.lease(ReqTarget::Group(1)).unwrap();
+
+    // One FILL, 5 sub-requests of 4 rows: chunks must arrive as seq
+    // 0..5 with `last` only on the final one, and their concatenation
+    // must equal 20 contiguous oracle rows.
+    let req = client.submit_fill(ReqTarget::Group(1), 4, 5).unwrap();
+    let mut all = Vec::new();
+    for expect_seq in 0..5u32 {
+        let chunk = client.next_chunk(req).unwrap();
+        assert_eq!(chunk.seq, expect_seq, "in-order delivery");
+        assert_eq!(chunk.last, expect_seq == 4, "last flag placement");
+        all.extend(chunk.result.unwrap());
+    }
+    assert_eq!(all, oracle_block(1, 4, 0, 20), "contiguous across chunks");
+    client.bye().unwrap();
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn bye_flushes_every_data_frame_before_the_ack() {
+    // Raw protocol exchange: FILL then an immediate BYE — the server's
+    // ordered flush must still deliver all three DATA frames, in seq
+    // order, before BYE_ACK, and BYE_ACK must be the last frame.
+    let server = serve(source(Engine::Sharded, 1, 4, 4, u64::MAX / 2));
+    let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+    protocol::write_frame(&mut sock, &Frame::Hello { version: protocol::VERSION }).unwrap();
+    assert!(matches!(
+        protocol::read_frame(&mut sock).unwrap(),
+        Some(Frame::Welcome { .. })
+    ));
+    protocol::write_frame(
+        &mut sock,
+        &Frame::Fill { req: 9, target: ReqTarget::Group(0), rows: 4, repeat: 3 },
+    )
+    .unwrap();
+    protocol::write_frame(&mut sock, &Frame::Bye).unwrap();
+
+    let mut all = Vec::new();
+    for expect_seq in 0..3u32 {
+        match protocol::read_frame(&mut sock).unwrap() {
+            Some(Frame::Data { req, seq, last, values }) => {
+                assert_eq!((req, seq, last), (9, expect_seq, expect_seq == 2));
+                all.extend(values);
+            }
+            other => panic!("expected DATA seq {expect_seq}, got {other:?}"),
+        }
+    }
+    assert_eq!(all, oracle_block(0, 4, 0, 12), "flushed chunks replay the oracle");
+    assert!(matches!(protocol::read_frame(&mut sock).unwrap(), Some(Frame::ByeAck)));
+    assert!(protocol::read_frame(&mut sock).unwrap().is_none(), "clean close after ack");
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn malformed_frames_are_rejected_and_the_server_survives() {
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+
+    // A garbage length prefix (4 GiB frame) must be answered with a
+    // typed protocol error, not an allocation or a crash. (Exactly the
+    // 4 header bytes, so the server closes with its receive buffer
+    // drained — a clean FIN, not an RST racing our reply read.)
+    let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+    std::io::Write::write_all(&mut sock, &[0xff; 4]).unwrap();
+    match protocol::read_frame(&mut sock).unwrap() {
+        Some(Frame::Err { error: Error::Protocol(_), .. }) => {}
+        other => panic!("expected a typed protocol ERR, got {other:?}"),
+    }
+    assert!(protocol::read_frame(&mut sock).unwrap().is_none(), "connection closed");
+
+    // A short read (valid header, truncated payload, then half-close)
+    // is rejected the same way.
+    let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+    let mut hello = Vec::new();
+    protocol::write_frame(&mut hello, &Frame::Hello { version: protocol::VERSION }).unwrap();
+    std::io::Write::write_all(&mut sock, &hello[..hello.len() - 2]).unwrap();
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    match protocol::read_frame(&mut sock).unwrap() {
+        Some(Frame::Err { error: Error::Protocol(_), .. }) => {}
+        other => panic!("expected a typed protocol ERR, got {other:?}"),
+    }
+
+    // A bogus frame mid-session (the client must never send WELCOME).
+    let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+    protocol::write_frame(&mut sock, &Frame::Hello { version: protocol::VERSION }).unwrap();
+    assert!(matches!(
+        protocol::read_frame(&mut sock).unwrap(),
+        Some(Frame::Welcome { .. })
+    ));
+    protocol::write_frame(&mut sock, &Frame::ByeAck).unwrap();
+    match protocol::read_frame(&mut sock).unwrap() {
+        Some(Frame::Err { error: Error::Protocol(_), .. }) => {}
+        other => panic!("expected a typed protocol ERR, got {other:?}"),
+    }
+
+    // Three abusive connections later, a clean client still gets
+    // bit-identical service.
+    server.wait_sessions_closed(3);
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    assert_eq!(remote.fetch_block(0, 4).unwrap(), oracle_block(0, 4, 0, 4));
+}
+
+#[test]
+fn loadgen_eight_connections_deliver_exactly_once() {
+    let server = serve(source(Engine::Sharded, 8, 8, 16, u64::MAX / 2));
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 8,
+        numbers_per_conn: 8 * 16 * 8, // 8 chunks of one tile each
+        chunk_rows: 16,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.connections, 8);
+    assert_eq!(report.numbers, 8 * 8 * 16 * 8, "every number delivered exactly once");
+    assert_eq!(report.chunks, 8 * 8);
+    assert!(report.seconds > 0.0);
+    // Every connection said BYE and was fully torn down.
+    server.wait_sessions_closed(8);
+    assert!(server.sessions_closed() >= 8);
+}
+
+#[test]
+fn oversized_fetches_fail_typed_before_touching_the_wire() {
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    let max = remote.info().max_fill;
+    let mut big = vec![0u32; max as usize + 1];
+    assert!(matches!(
+        remote.fetch(0, &mut big).unwrap_err(),
+        Error::InvalidConfig(_)
+    ));
+    // The connection is still healthy afterwards.
+    assert_eq!(remote.fetch_block(0, 4).unwrap(), oracle_block(0, 4, 0, 4));
+}

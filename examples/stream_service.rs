@@ -15,12 +15,12 @@
 //! ```
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use thundering::prng::{splitmix64, ThunderingBatch};
 use thundering::stats::{mini_crush, Scale};
 use thundering::util::cli::Args;
-use thundering::{Engine, EngineBuilder, ReqTarget, StreamHandle, StreamReq};
+use thundering::{Engine, EngineBuilder, ReqTarget, Request, StreamHandle, StreamReq};
 
 const WIDTH: usize = 64;
 
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let mut round_of = std::collections::HashMap::new();
     for round in 0..rounds {
         for g in 0..groups {
-            let ticket = cq.submit(StreamReq::group(g, rows))?;
+            let (ticket, _cancel) = cq.submit(StreamReq::group(g, rows))?;
             round_of.insert(ticket, round);
         }
     }
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
                 s.spawn(|| {
                     let mut harvested = 0u64;
                     let mut group0 = Vec::new();
-                    while let Some(c) = cq.wait_any() {
+                    while let Ok(Some(c)) = cq.wait_any(None) {
                         let block = c.result.expect("completion failed");
                         delivered.fetch_add(block.len() as u64, Ordering::Relaxed);
                         harvested += 1;
@@ -139,6 +139,26 @@ fn main() -> anyhow::Result<()> {
     }
     println!("group 0: {} rounds bit-identical to the scalar replay", kept.len());
     println!("metrics: {}", cq.source().metrics());
+
+    // Lifecycle demo: an already-expired deadline resolves as a typed
+    // Err completion *without consuming stream state* — the deadline
+    // sweep retires the request before any executor can claim it, so
+    // the next fill continues group 0's sequence exactly where the
+    // verified rounds left it.
+    let (expired, _cancel) =
+        cq.submit(Request::group(0).rows(rows).deadline(Duration::ZERO))?;
+    let c = cq.wait_for(expired, None)?.expect("expired ticket still resolves");
+    anyhow::ensure!(
+        c.result == Err(thundering::Error::DeadlineExceeded),
+        "a zero deadline must expire the request"
+    );
+    let (next, _cancel) = cq.submit(StreamReq::group(0, rows))?;
+    let c = cq.wait_for(next, None)?.expect("follow-up fill resolves");
+    anyhow::ensure!(
+        c.result == Ok(oracle.tile(rows)),
+        "the expired fill must not have consumed stream state"
+    );
+    println!("lifecycle: expired fill consumed nothing; follow-up replay bit-identical");
 
     // Quality spot-check on a freshly served stream: a StreamHandle is a
     // Prng32, so it feeds the battery directly.

@@ -137,7 +137,7 @@ fn main() {
                     completion.submit(StreamReq::group(g, rows)).unwrap();
                 }
             }
-            for c in completion.wait_all() {
+            for c in completion.wait_all(None) {
                 black_box(c.result.unwrap());
             }
         });
@@ -156,19 +156,30 @@ fn main() {
         let server =
             Server::start(serve_source, "127.0.0.1:0", ServeConfig::default()).unwrap();
         let connections = 8usize;
+        let fills = 8u32; // sequential fills per connection → latency samples
         let per_chunk = (rows * width) as u64;
-        let per_conn_chunks = (numbers / connections as u64).max(1).div_ceil(per_chunk);
+        // Round the per-connection share up to whole fills of whole
+        // chunks, exactly as loadgen does, so the exactly-once assert
+        // below can demand a precise delivered count.
+        let per_conn_chunks = (numbers / connections as u64)
+            .max(1)
+            .div_ceil(per_chunk)
+            .div_ceil(u64::from(fills))
+            * u64::from(fills);
         let served = per_conn_chunks * per_chunk * connections as u64;
         let loadgen_cfg = LoadgenConfig {
             addr: server.local_addr().to_string(),
             connections,
             numbers_per_conn: per_conn_chunks * per_chunk,
             chunk_rows: rows as u32,
+            fills_per_conn: fills,
             ..LoadgenConfig::default()
         };
+        let mut last_report = None;
         let m_serve = b.run("serve/loadgen", served, || {
             let report = loadgen::run(&loadgen_cfg).unwrap();
             assert_eq!(report.numbers, served, "exactly-once over TCP");
+            last_report = Some(report);
         });
         drop(server);
 
@@ -199,6 +210,15 @@ fn main() {
         rep.context_num("completion_overlap_speedup", overlap_speedup);
         rep.context_num("serve_loadgen_grn_per_s", m_serve.throughput() / 1e9);
         rep.context_num("serve_connections", connections as f64);
+        // Per-fill service latency through the full serving stack
+        // (submit → final chunk over loopback TCP), from the last
+        // loadgen run — the QoS numbers the deadline story is about.
+        if let Some(lg) = &last_report {
+            rep.context_num("serve_fill_p50_ms", lg.latency_percentile(50.0) * 1e3);
+            rep.context_num("serve_fill_p95_ms", lg.latency_percentile(95.0) * 1e3);
+            rep.context_num("serve_fill_p99_ms", lg.latency_percentile(99.0) * 1e3);
+            rep.context_num("serve_fills_sampled", lg.fill_latencies_s.len() as f64);
+        }
         rep.push(&m_single);
         rep.push(&m_sharded);
         rep.push(&m_completion);

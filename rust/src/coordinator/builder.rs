@@ -201,10 +201,14 @@ impl EngineBuilder {
 
     /// Build the configured engine and wrap it in a
     /// [`CompletionQueue`] — the submission/completion front that lets
-    /// one consumer thread overlap fills across many groups. On the
-    /// sharded engine the worker shards complete tickets directly; on
-    /// the other engines consumer threads execute inside `wait_any`
-    /// (see [`CompletionQueue`] for the contracts).
+    /// one consumer thread overlap fills across many groups, with
+    /// per-request deadlines and cancellation
+    /// ([`Request`](super::Request) /
+    /// [`CancelHandle`](super::CancelHandle)). On the sharded engine
+    /// the worker shards complete tickets directly; on the other
+    /// engines consumer threads execute inside `wait_any` (see
+    /// [`CompletionQueue`] for the execution, ordering, delivery, and
+    /// lifecycle contracts).
     pub fn build_completion(self) -> Result<CompletionQueue, Error> {
         Ok(CompletionQueue::new(self.build_arc()?))
     }

@@ -5,8 +5,9 @@
 //! thread per in-flight group fetch: overlapping N groups means N
 //! threads. [`CompletionQueue`] decouples *requesting* numbers from
 //! *receiving* them — clients [`submit`](CompletionQueue::submit) a
-//! [`StreamReq`] (a lane fetch or a whole group block), get back a
-//! [`Ticket`], and later harvest [`Completion`]s with
+//! [`Request`] (a lane fetch or a whole group block, optionally with a
+//! deadline and a caller tag), get back a [`Ticket`] plus a cloneable
+//! [`CancelHandle`], and later harvest [`Completion`]s with
 //! [`poll`](CompletionQueue::poll) / [`wait_any`](CompletionQueue::wait_any)
 //! / [`wait_all`](CompletionQueue::wait_all):
 //!
@@ -49,9 +50,31 @@
 //! error, never a lost ticket. Even an executor that panics mid-request
 //! posts a `Backend`-error completion on unwind, so ticket accounting
 //! is exact.
+//!
+//! **Lifecycle contract (cancellation and deadlines).** Cancellation
+//! and expiry are *pre-execution* events: a request resolved as
+//! [`Error::Cancelled`] (via its [`CancelHandle`] or
+//! [`CompletionQueue::cancel`]) or [`Error::DeadlineExceeded`] (its
+//! [`Request::deadline`] passed, measured on the monotonic clock from
+//! submission) was removed from the pending queue **before any executor
+//! touched it**, so it consumed no stream state — every surviving
+//! request of the same group continues the sequence exactly as if the
+//! dead request was never submitted, and the bit-identical replay
+//! contract holds for the survivors. A request that has already started
+//! executing when the cancel or the deadline lands runs to completion
+//! and delivers its real result (its rows are consumed; dropping them
+//! would tear a hole in the stream), which is why
+//! [`CancelHandle::cancel`] reports whether the cancel won the race.
+//! Either way the ticket always resolves as exactly one completion:
+//! cancelled and expired tickets are typed `Err` completions, never
+//! lost, never delivered twice. Deadlines are swept whenever an
+//! executor scans for work and whenever a consumer waits, so expiry
+//! latency is bounded by the engine's scan backstop (~100 ms worst
+//! case, usually the consumer's own wakeup).
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::source::StreamSource;
 use crate::error::Error;
@@ -67,7 +90,8 @@ pub enum ReqTarget {
     Group(usize),
 }
 
-/// One submitted unit of work for a [`CompletionQueue`].
+/// One submitted unit of work, as recorded on its [`Completion`] — the
+/// target/rows core of a [`Request`], without the lifecycle options.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct StreamReq {
     target: ReqTarget,
@@ -96,6 +120,120 @@ impl StreamReq {
     }
 }
 
+/// A request descriptor with its lifecycle options — the submission
+/// surface of the [`CompletionQueue`] (and, over the wire, of
+/// [`RemoteSource`](crate::serve::RemoteSource)).
+///
+/// Built fluently from a target:
+///
+/// ```
+/// use std::time::Duration;
+/// use thundering::Request;
+///
+/// let req = Request::group(3)
+///     .rows(1024)
+///     .deadline(Duration::from_millis(50))
+///     .tag(0xfeed);
+/// assert_eq!(req.n_rows(), 1024);
+/// ```
+///
+/// * [`rows`](Request::rows) — how much to fetch (default 1);
+/// * [`deadline`](Request::deadline) — how long the request may wait
+///   for service, measured on the monotonic clock from submission. An
+///   expired request resolves as a retryable
+///   [`Error::DeadlineExceeded`] completion and consumes no stream
+///   state. Default: wait forever.
+/// * [`tag`](Request::tag) — an opaque caller correlation value echoed
+///   on the [`Completion`] (default 0).
+///
+/// A bare [`StreamReq`] converts into a `Request` with default
+/// lifecycle options (`From` impl), so `cq.submit(StreamReq::group(g,
+/// n))` still reads naturally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    req: StreamReq,
+    deadline: Option<Duration>,
+    tag: u64,
+}
+
+impl Request {
+    /// A request on one stream (a lane fetch); set the amount with
+    /// [`rows`](Self::rows).
+    pub fn stream(stream: u64) -> Self {
+        StreamReq::stream(stream, 1).into()
+    }
+
+    /// A request on one whole group (a block fetch); set the amount
+    /// with [`rows`](Self::rows).
+    pub fn group(group: usize) -> Self {
+        StreamReq::group(group, 1).into()
+    }
+
+    /// Rows to fetch (numbers for a stream target, rows × group_width
+    /// numbers for a group target).
+    pub fn rows(mut self, rows: usize) -> Self {
+        self.req.rows = rows;
+        self
+    }
+
+    /// How long the request may wait for service before it resolves as
+    /// a retryable [`Error::DeadlineExceeded`] completion, measured on
+    /// the monotonic clock from submission. An expired request never
+    /// executes and consumes no stream state.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// [`deadline`](Self::deadline) with an optional value — for
+    /// callers threading a configured `Option<Duration>` through
+    /// (`None` leaves the request undeadlined).
+    pub fn deadline_opt(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Opaque caller correlation value, echoed on the [`Completion`].
+    pub fn tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    /// The target/rows core of the request.
+    pub fn stream_req(&self) -> StreamReq {
+        self.req
+    }
+
+    /// Rows requested (accessor twin of the [`rows`](Self::rows)
+    /// builder).
+    pub fn n_rows(&self) -> usize {
+        self.req.rows
+    }
+
+    /// The configured deadline, if any.
+    pub fn get_deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// The caller tag.
+    pub fn get_tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// The absolute expiry instant for a submission happening `now`
+    /// (`None` when no deadline is set, or when it is so far out the
+    /// monotonic clock cannot represent it).
+    fn deadline_at(&self, now: Instant) -> Option<Instant> {
+        self.deadline.and_then(|d| now.checked_add(d))
+    }
+}
+
+impl From<StreamReq> for Request {
+    fn from(req: StreamReq) -> Self {
+        Self { req, deadline: None, tag: 0 }
+    }
+}
+
 /// Opaque identity of one submission, unique per queue and monotonic in
 /// submission order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -108,15 +246,61 @@ impl Ticket {
     }
 }
 
+/// A cloneable handle that can cancel one submitted request — returned
+/// by [`CompletionQueue::submit`] (and its wire twin
+/// [`RemoteSource::submit`](crate::serve::RemoteSource::submit)), safe
+/// to move to any thread and to call any number of times.
+///
+/// [`cancel`](Self::cancel) only wins while the request is still
+/// pending: a cancelled request resolves as an [`Error::Cancelled`]
+/// completion and consumes no stream state. Once execution has started
+/// the cancel is a no-op and the real result is delivered. Dropping a
+/// handle does **not** cancel anything.
+#[derive(Clone)]
+pub struct CancelHandle {
+    cancel: Arc<dyn Fn() -> bool + Send + Sync>,
+}
+
+impl CancelHandle {
+    /// Wrap a cancel action (local queues and the remote client both
+    /// construct handles through this).
+    pub(crate) fn from_fn(cancel: impl Fn() -> bool + Send + Sync + 'static) -> Self {
+        Self { cancel: Arc::new(cancel) }
+    }
+
+    /// Ask for the request not to run. Returns whether the cancel won
+    /// the race: `true` means the request was still pending and will
+    /// resolve as a typed [`Error::Cancelled`] completion without
+    /// consuming stream state; `false` means it already started
+    /// executing (its real result will be delivered), already resolved,
+    /// or the service is gone. Over the wire, `true` only means the
+    /// CANCEL was sent — the outcome arrives as the fill's reply
+    /// chunks.
+    pub fn cancel(&self) -> bool {
+        (self.cancel)()
+    }
+}
+
+impl std::fmt::Debug for CancelHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelHandle").finish_non_exhaustive()
+    }
+}
+
 /// A finished request, harvested from the completion side of the queue.
 #[derive(Debug)]
 pub struct Completion {
     /// The ticket [`CompletionQueue::submit`] returned for this request.
     pub ticket: Ticket,
-    /// The request as submitted.
+    /// The request's target/rows core, as submitted.
     pub req: StreamReq,
-    /// The fetched numbers, or the typed error the fetch produced
-    /// (check [`Error::is_retryable`] before giving up on a ticket).
+    /// The caller tag from the submitted [`Request`] (0 if none was
+    /// set).
+    pub tag: u64,
+    /// The fetched numbers, or the typed error the request produced —
+    /// including [`Error::Cancelled`] / [`Error::DeadlineExceeded`] for
+    /// requests that never executed (check [`Error::is_retryable`]
+    /// before giving up on a ticket).
     pub result: Result<Vec<u32>, Error>,
 }
 
@@ -127,6 +311,9 @@ struct Pending {
     /// The state-sharing group the request drains (derived from the
     /// target at submit time); per-group claims serialize on this.
     group: usize,
+    /// Monotonic expiry instant (absolute, fixed at submission).
+    deadline: Option<Instant>,
+    tag: u64,
 }
 
 /// Everything the mutex guards: the submission FIFO, per-group claims,
@@ -154,6 +341,9 @@ struct InboxState {
     /// "already harvested by another consumer" without scanning the
     /// pending/executing sets.
     outstanding_tickets: HashSet<u64>,
+    /// Pending entries carrying a deadline — lets the no-deadline hot
+    /// path skip the expiry scan entirely.
+    armed_deadlines: usize,
 }
 
 impl InboxState {
@@ -161,6 +351,99 @@ impl InboxState {
     /// completed-but-unharvested).
     fn outstanding(&self) -> usize {
         self.pending.len() + self.executing + self.done.len()
+    }
+
+    /// The deadline sweep: resolve every pending request whose deadline
+    /// has passed as a typed [`Error::DeadlineExceeded`] completion.
+    /// Returns how many expired. Survivors keep their relative order,
+    /// so per-group FIFO holds for them; an expired request never
+    /// executed, so it consumed no stream state.
+    ///
+    /// Every claim scan runs this first (under the same lock), so an
+    /// expired request can never be claimed.
+    fn expire_due(&mut self, now: Instant) -> usize {
+        let due = |p: &Pending| p.deadline.is_some_and(|d| d <= now);
+        // Mutation-free fast path: this runs under the inbox mutex on
+        // every claim scan, and almost always nothing is due.
+        if self.armed_deadlines == 0 || !self.pending.iter().any(due) {
+            return 0;
+        }
+        // One order-preserving partition pass — a deadline storm (e.g.
+        // a whole fill's sub-requests sharing one limit) must be O(n),
+        // not O(expired × n) of per-entry VecDeque::remove shifts, all
+        // held under the lock every executor contends on.
+        let mut expired = 0;
+        for p in std::mem::take(&mut self.pending) {
+            if due(&p) {
+                self.armed_deadlines -= 1;
+                self.done.push_back(Completion {
+                    ticket: p.ticket,
+                    req: p.req,
+                    tag: p.tag,
+                    result: Err(Error::DeadlineExceeded),
+                });
+                expired += 1;
+            } else {
+                self.pending.push_back(p);
+            }
+        }
+        expired
+    }
+
+    /// The earliest pending deadline, for deadline-aware parking.
+    fn earliest_deadline(&self) -> Option<Instant> {
+        if self.armed_deadlines == 0 {
+            return None;
+        }
+        self.pending.iter().filter_map(|p| p.deadline).min()
+    }
+
+    /// Cancel every listed ticket that is still pending, resolving each
+    /// as a typed [`Error::Cancelled`] completion; returns how many
+    /// were cancelled. All cancels land under ONE lock acquisition, so
+    /// for tickets of one group the survivors' executed/cancelled split
+    /// is a clean FIFO prefix/suffix — no later ticket can slip into
+    /// execution between two cancels of the same batch.
+    fn cancel_tickets(&mut self, tickets: &[Ticket]) -> usize {
+        // One order-preserving partition pass, like `expire_due`: a
+        // batch cancel must be O(pending + tickets) under the inbox
+        // mutex, not O(tickets × pending) of per-ticket scans. The
+        // single-ticket case (CancelHandle, CompletionQueue::cancel)
+        // skips the set allocation.
+        let mut cancelled = 0;
+        let single = match tickets {
+            [] => return 0,
+            [one] => Some(*one),
+            _ => None,
+        };
+        let set: HashSet<u64> = match single {
+            Some(_) => HashSet::new(),
+            None => tickets.iter().map(|t| t.id()).collect(),
+        };
+        let listed = |p: &Pending| match single {
+            Some(t) => p.ticket == t,
+            None => set.contains(&p.ticket.id()),
+        };
+        if !self.pending.iter().any(|p| listed(p)) {
+            return 0;
+        }
+        for p in std::mem::take(&mut self.pending) {
+            if listed(&p) {
+                if p.deadline.is_some() {
+                    self.armed_deadlines -= 1;
+                }
+                self.done.push_back(Completion {
+                    ticket: p.ticket,
+                    req: p.req,
+                    tag: p.tag,
+                    result: Err(Error::Cancelled),
+                });
+                cancelled += 1;
+            } else {
+                self.pending.push_back(p);
+            }
+        }
+        cancelled
     }
 
     /// Claim the oldest pending request that is unblocked and
@@ -199,6 +482,9 @@ impl InboxState {
             self.scan_blocked[g] = false;
         }
         let p = self.pending.remove(pos?)?;
+        if p.deadline.is_some() {
+            self.armed_deadlines -= 1;
+        }
         self.claimed[p.group] = true;
         self.executing += 1;
         Some(p)
@@ -221,11 +507,20 @@ impl InboxState {
     }
 
     /// Append one pending request, assigning its ticket.
-    fn enqueue(&mut self, req: StreamReq, group: usize) -> Ticket {
+    fn enqueue(
+        &mut self,
+        req: StreamReq,
+        group: usize,
+        deadline: Option<Instant>,
+        tag: u64,
+    ) -> Ticket {
         let ticket = Ticket(self.next_ticket);
         self.next_ticket += 1;
         self.outstanding_tickets.insert(ticket.id());
-        self.pending.push_back(Pending { ticket, req, group });
+        if deadline.is_some() {
+            self.armed_deadlines += 1;
+        }
+        self.pending.push_back(Pending { ticket, req, group, deadline, tag });
         ticket
     }
 }
@@ -263,6 +558,7 @@ impl CompletionInbox {
                 executing: 0,
                 done: VecDeque::new(),
                 outstanding_tickets: HashSet::new(),
+                armed_deadlines: 0,
             }),
             cv: Condvar::new(),
             waker: Mutex::new(None),
@@ -294,8 +590,14 @@ impl CompletionInbox {
 
     /// Enqueue a request (group pre-derived and validated by the
     /// [`CompletionQueue`]), waking executors on both sides.
-    fn submit(&self, req: StreamReq, group: usize) -> Ticket {
-        let ticket = self.lock_state().enqueue(req, group);
+    fn submit(
+        &self,
+        req: StreamReq,
+        group: usize,
+        deadline: Option<Instant>,
+        tag: u64,
+    ) -> Ticket {
+        let ticket = self.lock_state().enqueue(req, group, deadline, tag);
         // Consumers inside wait_any may claim it; the owning shard
         // re-scans.
         self.cv.notify_all();
@@ -305,14 +607,18 @@ impl CompletionInbox {
 
     /// Enqueue a whole batch under ONE acquisition of the state mutex
     /// (`reqs` and `groups` are parallel slices, pre-validated by the
-    /// [`CompletionQueue`]), then wake each involved shard once.
-    fn submit_many(&self, reqs: &[StreamReq], groups: &[usize]) -> Vec<Ticket> {
+    /// [`CompletionQueue`]; deadlines are resolved against one shared
+    /// `now`), then wake each involved shard once.
+    fn submit_many(&self, reqs: &[Request], groups: &[usize]) -> Vec<Ticket> {
         debug_assert_eq!(reqs.len(), groups.len());
+        let now = Instant::now();
         let tickets = {
             let mut st = self.lock_state();
             reqs.iter()
                 .zip(groups)
-                .map(|(req, &group)| st.enqueue(*req, group))
+                .map(|(req, &group)| {
+                    st.enqueue(req.stream_req(), group, req.deadline_at(now), req.tag)
+                })
                 .collect()
         };
         self.cv.notify_all();
@@ -328,16 +634,40 @@ impl CompletionInbox {
         tickets
     }
 
+    /// Cancel every listed ticket that is still pending (one lock
+    /// acquisition for the whole batch — see
+    /// [`InboxState::cancel_tickets`] for why atomicity matters);
+    /// returns how many were cancelled. Waiters are notified so the
+    /// `Cancelled` completions are harvested promptly.
+    pub(crate) fn cancel_many(&self, tickets: &[Ticket]) -> usize {
+        let cancelled = self.lock_state().cancel_tickets(tickets);
+        if cancelled > 0 {
+            self.cv.notify_all();
+        }
+        cancelled
+    }
+
     /// Claim the oldest pending `eligible` request — the engine-side
     /// executor entry point. A shard passes "groups I own, requests
     /// small enough to execute inline"; see
-    /// [`InboxState::take_claimable`] for the per-group FIFO rules.
+    /// [`InboxState::take_claimable`] for the per-group FIFO rules. The
+    /// deadline sweep runs first under the same lock, so an expired
+    /// request is never handed out.
     pub(crate) fn claim_where(
         self: &Arc<Self>,
         eligible: &dyn Fn(usize, StreamReq) -> bool,
     ) -> Option<ClaimedReq> {
-        let p = self.lock_state().take_claimable(eligible)?;
-        Some(ClaimedReq { inbox: self.clone(), inner: Some(p) })
+        let (expired, p) = {
+            let mut st = self.lock_state();
+            let expired = st.expire_due(Instant::now());
+            (expired, st.take_claimable(eligible))
+        };
+        if expired > 0 {
+            // The sweep queued DeadlineExceeded completions: wake any
+            // consumer parked on the completion side.
+            self.cv.notify_all();
+        }
+        Some(ClaimedReq { inbox: self.clone(), inner: Some(p?) })
     }
 
     /// Release bookkeeping shared by every way a claim ends. With
@@ -349,7 +679,7 @@ impl CompletionInbox {
         result: Result<Vec<u32>, Error>,
         to_done: bool,
     ) -> Option<Completion> {
-        let completion = Completion { ticket: p.ticket, req: p.req, result };
+        let completion = Completion { ticket: p.ticket, req: p.req, tag: p.tag, result };
         let handed_back = {
             let mut st = self.lock_state();
             st.claimed[p.group] = false;
@@ -415,6 +745,7 @@ impl ClaimedReq {
             .unwrap_or_else(|| Completion {
                 ticket: Ticket(u64::MAX),
                 req: StreamReq::group(0, 0),
+                tag: 0,
                 result: Err(Error::Backend("claim already finished".into())),
             })
     }
@@ -428,6 +759,9 @@ impl ClaimedReq {
                 let mut st = self.inbox.lock_state();
                 st.claimed[p.group] = false;
                 st.executing -= 1;
+                if p.deadline.is_some() {
+                    st.armed_deadlines += 1;
+                }
                 st.pending.push_front(p);
             }
             // A consumer inside wait_any may pick it up instead.
@@ -448,10 +782,11 @@ impl Drop for ClaimedReq {
     }
 }
 
-/// The submission/completion front: `submit` requests, harvest
+/// The submission/completion front: `submit` requests (with optional
+/// per-request deadlines, tags, and cancellation), harvest
 /// [`Completion`]s — one consumer thread overlaps fills across many
-/// groups (see the module docs for the execution, ordering, and
-/// delivery contracts).
+/// groups (see the module docs for the execution, ordering, delivery,
+/// and lifecycle contracts).
 ///
 /// Built via
 /// [`EngineBuilder::build_completion`](crate::coordinator::EngineBuilder::build_completion)
@@ -459,7 +794,8 @@ impl Drop for ClaimedReq {
 /// consumer threads by reference (`&`/`Arc`); all methods take `&self`.
 ///
 /// ```
-/// use thundering::{CompletionQueue, Engine, EngineBuilder, StreamReq};
+/// use std::time::Duration;
+/// use thundering::{CompletionQueue, Engine, EngineBuilder, Request};
 ///
 /// let cq: CompletionQueue = EngineBuilder::new(128)
 ///     .engine(Engine::Sharded)
@@ -467,12 +803,16 @@ impl Drop for ClaimedReq {
 ///     .rows_per_tile(64)
 ///     .build_completion()
 ///     .unwrap();
-/// // One thread, 32 groups in flight at once.
-/// let tickets: Vec<_> = (0..32)
-///     .map(|g| cq.submit(StreamReq::group(g, 64)).unwrap())
+/// // One thread, 32 groups in flight at once, each fill bounded to
+/// // one second of queueing.
+/// let submitted: Vec<_> = (0..32)
+///     .map(|g| {
+///         cq.submit(Request::group(g).rows(64).deadline(Duration::from_secs(1)))
+///             .unwrap()
+///     })
 ///     .collect();
-/// let done = cq.wait_all();
-/// assert_eq!(done.len(), tickets.len());
+/// let done = cq.wait_all(None);
+/// assert_eq!(done.len(), submitted.len());
 /// ```
 pub struct CompletionQueue {
     source: Arc<dyn StreamSource>,
@@ -534,28 +874,39 @@ impl CompletionQueue {
         }
     }
 
-    /// Submit a request; returns its [`Ticket`]. Targets are validated
-    /// here, so an in-flight request can only fail with a fetch-time
-    /// error (backpressure, backend).
-    pub fn submit(&self, req: StreamReq) -> Result<Ticket, Error> {
-        let group = self.group_of(req)?;
-        Ok(self.inbox.submit(req, group))
+    /// Submit a request; returns its [`Ticket`] and a cloneable
+    /// [`CancelHandle`] (dropping the handle cancels nothing). Targets
+    /// are validated here, so an in-flight request can only fail with a
+    /// fetch- or lifecycle-time error (backpressure, backend,
+    /// cancellation, expiry).
+    pub fn submit(&self, req: impl Into<Request>) -> Result<(Ticket, CancelHandle), Error> {
+        let req = req.into();
+        let group = self.group_of(req.stream_req())?;
+        let deadline = req.deadline_at(Instant::now());
+        let ticket = self.inbox.submit(req.stream_req(), group, deadline, req.tag);
+        let weak = Arc::downgrade(&self.inbox);
+        let handle = CancelHandle::from_fn(move || {
+            weak.upgrade().is_some_and(|inbox| inbox.cancel_many(&[ticket]) == 1)
+        });
+        Ok((ticket, handle))
     }
 
     /// Submit a whole batch of requests, taking the submission lock
     /// once, and wake each involved engine shard once — the amortized
     /// twin of [`submit`](Self::submit) for callers like the serving
     /// layer's FILL path and the windowed throughput CLI that enqueue
-    /// many requests per decision.
+    /// many requests per decision. Cancel by ticket with
+    /// [`cancel`](Self::cancel) / [`cancel_many`](Self::cancel_many)
+    /// (the batch path does not allocate per-request handles).
     ///
     /// Validation is all-or-nothing: if any request targets an unknown
     /// stream or group, the error is returned and **nothing** is
     /// enqueued. On success the returned tickets are in `reqs` order
     /// (and consecutive in submission order).
-    pub fn submit_many(&self, reqs: &[StreamReq]) -> Result<Vec<Ticket>, Error> {
+    pub fn submit_many(&self, reqs: &[Request]) -> Result<Vec<Ticket>, Error> {
         let mut groups = Vec::with_capacity(reqs.len());
         for req in reqs {
-            groups.push(self.group_of(*req)?);
+            groups.push(self.group_of(req.stream_req())?);
         }
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -563,65 +914,140 @@ impl CompletionQueue {
         Ok(self.inbox.submit_many(reqs, &groups))
     }
 
-    /// Harvest one completion if one is ready — never blocks, never
-    /// executes. Only *engine-worker* completions (sharded, requests
-    /// within the inline-execution bound — plus panic-unwind error
-    /// completions) land in the shared queue this reads; a completion
-    /// executed by a consumer inside [`wait_any`](Self::wait_any) is
-    /// delivered directly to that consumer and never appears here. A
-    /// poll-only loop therefore must not wait on a ticket another
-    /// consumer may harvest, nor on requests only consumers can
-    /// execute — when in doubt, use `wait_any`.
-    pub fn poll(&self) -> Option<Completion> {
-        self.inbox.lock_state().harvest_front()
+    /// Cancel one submitted request by ticket. Returns whether the
+    /// cancel won the race (see [`CancelHandle::cancel`] — this is the
+    /// by-ticket twin for callers using [`submit_many`](Self::submit_many)).
+    pub fn cancel(&self, ticket: Ticket) -> bool {
+        self.inbox.cancel_many(&[ticket]) == 1
     }
 
-    /// Block until a completion is available and harvest it; `None`
+    /// Cancel a batch of tickets under one lock acquisition; returns
+    /// how many were still pending and are now resolved as
+    /// [`Error::Cancelled`] completions. For tickets of one group the
+    /// atomic sweep guarantees a clean split: every ticket that
+    /// executed precedes (in submission order) every ticket that was
+    /// cancelled — the serving layer's CANCEL frame relies on that to
+    /// keep a cancelled fill's delivered chunks a contiguous prefix.
+    pub fn cancel_many(&self, tickets: &[Ticket]) -> usize {
+        self.inbox.cancel_many(tickets)
+    }
+
+    /// Harvest one completion if one is ready — never blocks, never
+    /// executes (expired deadlines are swept, which only *retires*
+    /// requests). Only *engine-worker* completions (sharded, requests
+    /// within the inline-execution bound — plus panic-unwind, cancelled,
+    /// and expired completions) land in the shared queue this reads; a
+    /// completion executed by a consumer inside
+    /// [`wait_any`](Self::wait_any) is delivered directly to that
+    /// consumer and never appears here. A poll-only loop therefore must
+    /// not wait on a ticket another consumer may harvest, nor on
+    /// requests only consumers can execute — when in doubt, use
+    /// `wait_any`.
+    pub fn poll(&self) -> Option<Completion> {
+        let mut st = self.inbox.lock_state();
+        st.expire_due(Instant::now());
+        st.harvest_front()
+    }
+
+    /// Block until a completion is available and harvest it; `Ok(None)`
     /// means nothing is outstanding (every submitted ticket was already
-    /// harvested — by this consumer or another).
+    /// harvested — by this consumer or another), and
+    /// `Err(Error::DeadlineExceeded)` means the optional wait deadline
+    /// passed first (nothing is lost: every outstanding ticket remains
+    /// harvestable).
     ///
     /// If no completion is ready and a pending request is claimable,
     /// the calling thread executes it and receives that completion
     /// directly — consumers are executors of last resort, so progress
-    /// never depends on engine workers being present.
-    pub fn wait_any(&self) -> Option<Completion> {
+    /// never depends on engine workers being present. (An execution
+    /// already in progress is not interrupted by the wait deadline.)
+    pub fn wait_any(&self, deadline: Option<Duration>) -> Result<Option<Completion>, Error> {
+        let limit = deadline.and_then(|d| Instant::now().checked_add(d));
         let mut st = self.inbox.lock_state();
         loop {
+            let now = Instant::now();
+            st.expire_due(now);
             if let Some(c) = st.harvest_front() {
-                return Some(c);
+                return Ok(Some(c));
             }
             if st.outstanding() == 0 {
-                return None;
+                return Ok(None);
+            }
+            if limit.is_some_and(|l| now >= l) {
+                return Err(Error::DeadlineExceeded);
             }
             if let Some(p) = st.take_claimable(&|_, _| true) {
                 drop(st);
                 let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
                 let result = self.execute(claimed.req());
-                return Some(claimed.into_completion(result));
+                return Ok(Some(claimed.into_completion(result)));
             }
-            st = self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            st = self.park(st, limit, now);
+        }
+    }
+
+    /// Park on the completion condvar until notified, the wait limit,
+    /// or the earliest pending request deadline — whichever comes
+    /// first. The timed wake is what turns queued deadlines into
+    /// completions even when no other activity nudges the queue.
+    fn park<'a>(
+        &'a self,
+        st: MutexGuard<'a, InboxState>,
+        limit: Option<Instant>,
+        now: Instant,
+    ) -> MutexGuard<'a, InboxState> {
+        let wake = match (limit, st.earliest_deadline()) {
+            (Some(l), Some(d)) => Some(l.min(d)),
+            (Some(l), None) => Some(l),
+            (None, Some(d)) => Some(d),
+            (None, None) => None,
+        };
+        match wake {
+            Some(w) => {
+                let dur = w.saturating_duration_since(now);
+                self.inbox
+                    .cv
+                    .wait_timeout(st, dur.max(Duration::from_micros(1)))
+                    .map(|(g, _)| g)
+                    .unwrap_or_else(|e| e.into_inner().0)
+            }
+            None => self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner()),
         }
     }
 
     /// Block until **this** ticket's completion is available and harvest
-    /// it. `None` means the ticket is no longer outstanding — another
-    /// consumer already harvested it (or it was never issued by this
-    /// queue); the serving layer's ordered session flush relies on that
-    /// distinction to hand off gracefully to the shared reactor.
+    /// it. `Ok(None)` means the ticket is no longer outstanding —
+    /// another consumer already harvested it (or it was never issued by
+    /// this queue); the serving layer's ordered session flush relies on
+    /// that distinction to hand off gracefully to the shared reactor.
+    /// `Err(Error::DeadlineExceeded)` means the optional wait deadline
+    /// passed first — the fix for a caller that would otherwise block
+    /// forever on a ticket that cannot complete (the ticket itself
+    /// stays outstanding and harvestable).
     ///
     /// Like [`wait_any`](Self::wait_any), the calling thread is an
     /// executor of last resort: while the target is in flight it claims
     /// and executes pending requests (oldest first, so per-group FIFO
     /// holds), routing completions other than the target to the shared
     /// queue for their own harvesters.
-    pub fn wait_for(&self, ticket: Ticket) -> Option<Completion> {
+    pub fn wait_for(
+        &self,
+        ticket: Ticket,
+        deadline: Option<Duration>,
+    ) -> Result<Option<Completion>, Error> {
+        let limit = deadline.and_then(|d| Instant::now().checked_add(d));
         let mut st = self.inbox.lock_state();
         loop {
+            let now = Instant::now();
+            st.expire_due(now);
             if let Some(c) = st.harvest_ticket(ticket) {
-                return Some(c);
+                return Ok(Some(c));
             }
             if !st.outstanding_tickets.contains(&ticket.id()) {
-                return None;
+                return Ok(None);
+            }
+            if limit.is_some_and(|l| now >= l) {
+                return Err(Error::DeadlineExceeded);
             }
             if let Some(p) = st.take_claimable(&|_, _| true) {
                 let is_target = p.ticket == ticket;
@@ -629,27 +1055,44 @@ impl CompletionQueue {
                 let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
                 let result = self.execute(claimed.req());
                 if is_target {
-                    return Some(claimed.into_completion(result));
+                    return Ok(Some(claimed.into_completion(result)));
                 }
                 // A foreign completion: queue it for whoever waits on
                 // it (complete() notifies them) and keep driving.
                 claimed.complete(result);
                 st = self.inbox.lock_state();
             } else {
-                st = self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                st = self.park(st, limit, now);
             }
         }
     }
 
-    /// Harvest until nothing is outstanding, returning every completion
-    /// *this* caller harvested (with concurrent consumers, each gets a
-    /// disjoint share; collectively every ticket is delivered once).
-    pub fn wait_all(&self) -> Vec<Completion> {
+    /// Harvest until nothing is outstanding or the optional deadline
+    /// passes, returning every completion *this* caller harvested (with
+    /// concurrent consumers, each gets a disjoint share; collectively
+    /// every ticket is delivered once). On a deadline return the
+    /// harvest may be partial — check [`outstanding`](Self::outstanding)
+    /// and keep waiting if needed; nothing is ever dropped.
+    pub fn wait_all(&self, deadline: Option<Duration>) -> Vec<Completion> {
+        let limit = deadline.and_then(|d| Instant::now().checked_add(d));
         let mut out = Vec::new();
-        while let Some(c) = self.wait_any() {
-            out.push(c);
+        loop {
+            let remaining = match limit {
+                Some(l) => {
+                    let r = l.saturating_duration_since(Instant::now());
+                    if r.is_zero() {
+                        return out;
+                    }
+                    Some(r)
+                }
+                None => None,
+            };
+            match self.wait_any(remaining) {
+                Ok(Some(c)) => out.push(c),
+                Ok(None) => return out,
+                Err(_) => return out, // wait deadline passed
+            }
         }
-        out
     }
 
     /// Execute a request over the source's blocking surface (the
@@ -694,6 +1137,12 @@ mod tests {
             .unwrap()
     }
 
+    /// Submit, keeping only the ticket (most ordering tests don't
+    /// exercise the cancel handle).
+    fn sub(cq: &CompletionQueue, req: impl Into<Request>) -> Ticket {
+        cq.submit(req).unwrap().0
+    }
+
     fn oracle_block(group: u64, width: usize, skip: usize, rows: usize) -> Vec<u32> {
         let mut batch =
             ThunderingBatch::new(splitmix64(42 ^ group), width, group * width as u64);
@@ -713,11 +1162,11 @@ mod tests {
             let mut expect = std::collections::HashMap::new();
             for round in 0..3usize {
                 for g in 0..32u64 {
-                    let t = cq.submit(StreamReq::group(g as usize, 8)).unwrap();
+                    let t = sub(&cq, StreamReq::group(g as usize, 8));
                     expect.insert(t, (g, round));
                 }
             }
-            let done = cq.wait_all();
+            let done = cq.wait_all(None);
             assert_eq!(done.len(), 96);
             for c in done {
                 let (g, round) = expect.remove(&c.ticket).expect("duplicate ticket");
@@ -734,10 +1183,9 @@ mod tests {
         let cq = queue(Engine::Sharded, 8, 4, 16);
         // Three chunks of one stream: harvested blocks, concatenated in
         // ticket order, must replay the scalar stream seamlessly.
-        let t: Vec<_> =
-            (0..3).map(|_| cq.submit(StreamReq::stream(5, 37)).unwrap()).collect();
+        let t: Vec<_> = (0..3).map(|_| sub(&cq, Request::stream(5).rows(37))).collect();
         let mut by_ticket = std::collections::BTreeMap::new();
-        for c in cq.wait_all() {
+        for c in cq.wait_all(None) {
             by_ticket.insert(c.ticket, c.result.unwrap());
         }
         let got: Vec<u32> =
@@ -751,14 +1199,14 @@ mod tests {
     fn invalid_targets_rejected_at_submit() {
         let cq = queue(Engine::Native, 8, 4, 16);
         assert_eq!(
-            cq.submit(StreamReq::stream(8, 4)).unwrap_err(),
+            cq.submit(Request::stream(8).rows(4)).unwrap_err(),
             Error::UnknownStream { stream: 8, have: 8 }
         );
         assert_eq!(
-            cq.submit(StreamReq::group(2, 4)).unwrap_err(),
+            cq.submit(Request::group(2).rows(4)).unwrap_err(),
             Error::GroupOutOfRange { group: 2, have: 2 }
         );
-        assert!(cq.wait_any().is_none());
+        assert!(cq.wait_any(None).unwrap().is_none());
     }
 
     #[test]
@@ -773,13 +1221,13 @@ mod tests {
             .root_seed(42)
             .build_completion()
             .unwrap();
-        let bad = cq.submit(StreamReq::stream(0, 100)).unwrap();
-        let c = cq.wait_any().expect("one outstanding ticket");
+        let bad = sub(&cq, StreamReq::stream(0, 100));
+        let c = cq.wait_any(None).unwrap().expect("one outstanding ticket");
         assert_eq!(c.ticket, bad);
         let err = c.result.unwrap_err();
         assert!(err.is_retryable(), "{err}");
-        cq.submit(StreamReq::group(0, 4)).unwrap();
-        let c2 = cq.wait_any().expect("second ticket");
+        sub(&cq, StreamReq::group(0, 4));
+        let c2 = cq.wait_any(None).unwrap().expect("second ticket");
         assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 0, 4));
     }
 
@@ -787,11 +1235,11 @@ mod tests {
     fn poll_is_pure_harvest_and_wait_any_drives() {
         let cq = queue(Engine::Native, 8, 4, 8);
         // Native engine: nothing executes until a consumer waits.
-        cq.submit(StreamReq::group(1, 8)).unwrap();
+        sub(&cq, StreamReq::group(1, 8));
         assert!(cq.poll().is_none(), "poll must not execute");
-        let c = cq.wait_any().expect("wait_any executes");
+        let c = cq.wait_any(None).unwrap().expect("wait_any executes");
         assert_eq!(c.result.unwrap(), oracle_block(1, 4, 0, 8));
-        assert!(cq.wait_any().is_none());
+        assert!(cq.wait_any(None).unwrap().is_none());
     }
 
     #[test]
@@ -808,10 +1256,10 @@ mod tests {
         assert!(a.engine_driven());
         assert!(!b.engine_driven(), "second front falls back to consumer-driven");
         // Both still serve, and both drain the same underlying cursors.
-        a.submit(StreamReq::group(0, 8)).unwrap();
-        let first = a.wait_any().unwrap().result.unwrap();
-        b.submit(StreamReq::group(0, 8)).unwrap();
-        let second = b.wait_any().unwrap().result.unwrap();
+        sub(&a, StreamReq::group(0, 8));
+        let first = a.wait_any(None).unwrap().unwrap().result.unwrap();
+        sub(&b, StreamReq::group(0, 8));
+        let second = b.wait_any(None).unwrap().unwrap().result.unwrap();
         assert_eq!(first, oracle_block(0, 4, 0, 8));
         assert_eq!(second, oracle_block(0, 4, 8, 8));
     }
@@ -824,10 +1272,10 @@ mod tests {
         // while the later same-group request stays queued behind it —
         // per-group FIFO holds even across executor kinds.
         let cq = queue(Engine::Sharded, 4, 2, 4);
-        let big = cq.submit(StreamReq::group(0, 64)).unwrap();
-        let small = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let big = sub(&cq, StreamReq::group(0, 64));
+        let small = sub(&cq, StreamReq::group(0, 4));
         let mut by_ticket = std::collections::BTreeMap::new();
-        for c in cq.wait_all() {
+        for c in cq.wait_all(None) {
             by_ticket.insert(c.ticket, c.result.unwrap());
         }
         assert_eq!(by_ticket[&big], oracle_block(0, 2, 0, 64), "oversized block");
@@ -839,11 +1287,11 @@ mod tests {
         let cq = queue(Engine::Sharded, 4, 2, 4);
         // lane 0 x3 rows, then a 4-row block, then lane 1 x5 rows: the
         // per-group FIFO must apply them in exactly this order.
-        let t0 = cq.submit(StreamReq::stream(0, 3)).unwrap();
-        let t1 = cq.submit(StreamReq::group(0, 4)).unwrap();
-        let t2 = cq.submit(StreamReq::stream(1, 5)).unwrap();
+        let t0 = sub(&cq, StreamReq::stream(0, 3));
+        let t1 = sub(&cq, StreamReq::group(0, 4));
+        let t2 = sub(&cq, StreamReq::stream(1, 5));
         let mut by_ticket = std::collections::BTreeMap::new();
-        for c in cq.wait_all() {
+        for c in cq.wait_all(None) {
             by_ticket.insert(c.ticket, c.result.unwrap());
         }
         let mut s0 = ThunderingStream::new(splitmix64(42), 0);
@@ -867,13 +1315,13 @@ mod tests {
         for engine in [Engine::Sharded, Engine::Native] {
             let cq = queue(engine, 4 * 4, 4, 8);
             let tickets: Vec<_> =
-                (0..4).map(|g| cq.submit(StreamReq::group(g, 8)).unwrap()).collect();
-            let c = cq.wait_for(tickets[2]).expect("target in flight");
+                (0..4).map(|g| sub(&cq, StreamReq::group(g, 8))).collect();
+            let c = cq.wait_for(tickets[2], None).unwrap().expect("target in flight");
             assert_eq!(c.ticket, tickets[2]);
             assert_eq!(c.result.unwrap(), oracle_block(2, 4, 0, 8));
             // The foreign completions it may have executed while waiting
             // are all still delivered exactly once.
-            let rest = cq.wait_all();
+            let rest = cq.wait_all(None);
             assert_eq!(rest.len(), 3);
             for c in rest {
                 assert_ne!(c.ticket, tickets[2], "double delivery");
@@ -885,12 +1333,12 @@ mod tests {
     #[test]
     fn wait_for_returns_none_once_another_consumer_harvested() {
         let cq = queue(Engine::Native, 8, 4, 8);
-        let t = cq.submit(StreamReq::group(0, 8)).unwrap();
-        let c = cq.wait_any().expect("one ticket outstanding");
+        let t = sub(&cq, StreamReq::group(0, 8));
+        let c = cq.wait_any(None).unwrap().expect("one ticket outstanding");
         assert_eq!(c.ticket, t);
-        assert!(cq.wait_for(t).is_none(), "already harvested elsewhere");
+        assert!(cq.wait_for(t, None).unwrap().is_none(), "already harvested elsewhere");
         // A ticket this queue never issued is not outstanding either.
-        assert!(cq.wait_for(Ticket(9999)).is_none());
+        assert!(cq.wait_for(Ticket(9999), None).unwrap().is_none());
     }
 
     #[test]
@@ -899,11 +1347,11 @@ mod tests {
         // the SECOND must execute the first one too (oldest first), so
         // the harvested blocks still replay seamlessly.
         let cq = queue(Engine::Native, 4, 2, 4);
-        let first = cq.submit(StreamReq::group(0, 4)).unwrap();
-        let second = cq.submit(StreamReq::group(0, 4)).unwrap();
-        let c2 = cq.wait_for(second).expect("in flight");
+        let first = sub(&cq, StreamReq::group(0, 4));
+        let second = sub(&cq, StreamReq::group(0, 4));
+        let c2 = cq.wait_for(second, None).unwrap().expect("in flight");
         assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 4, 4), "second block");
-        let c1 = cq.wait_for(first).expect("queued while driving");
+        let c1 = cq.wait_for(first, None).unwrap().expect("queued while driving");
         assert_eq!(c1.result.unwrap(), oracle_block(0, 2, 0, 4), "first block");
     }
 
@@ -911,14 +1359,19 @@ mod tests {
     fn submit_many_is_one_batch_with_ordered_tickets() {
         for engine in [Engine::Sharded, Engine::Native] {
             let cq = queue(engine, 4 * 4, 4, 8);
-            let reqs: Vec<StreamReq> = (0..4)
-                .flat_map(|g| [StreamReq::group(g, 8), StreamReq::stream(g as u64 * 4, 3)])
+            let reqs: Vec<Request> = (0..4)
+                .flat_map(|g| {
+                    [
+                        Request::group(g).rows(8),
+                        Request::stream(g as u64 * 4).rows(3),
+                    ]
+                })
                 .collect();
             let tickets = cq.submit_many(&reqs).unwrap();
             assert_eq!(tickets.len(), reqs.len());
             assert!(tickets.windows(2).all(|w| w[0] < w[1]), "submission order");
             let mut by_ticket = std::collections::HashMap::new();
-            for c in cq.wait_all() {
+            for c in cq.wait_all(None) {
                 assert!(by_ticket.insert(c.ticket, c.result.unwrap()).is_none());
             }
             assert_eq!(by_ticket.len(), reqs.len(), "exactly-once delivery");
@@ -943,13 +1396,167 @@ mod tests {
     #[test]
     fn submit_many_validation_is_all_or_nothing() {
         let cq = queue(Engine::Native, 8, 4, 8);
-        let reqs =
-            [StreamReq::group(0, 4), StreamReq::stream(8, 4), StreamReq::group(1, 4)];
+        let reqs = [
+            Request::group(0).rows(4),
+            Request::stream(8).rows(4),
+            Request::group(1).rows(4),
+        ];
         assert_eq!(
             cq.submit_many(&reqs).unwrap_err(),
             Error::UnknownStream { stream: 8, have: 8 }
         );
         assert_eq!(cq.outstanding(), 0, "nothing enqueued from a rejected batch");
         assert!(cq.submit_many(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cancel_pending_resolves_typed_and_consumes_nothing() {
+        // Native engine, no consumer running: the request is guaranteed
+        // still pending when the cancel lands.
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let (t, handle) = cq.submit(Request::group(0).rows(4).tag(7)).unwrap();
+        assert!(handle.cancel(), "cancel must win while pending");
+        assert!(!handle.cancel(), "second cancel is a no-op");
+        let c = cq.wait_any(None).unwrap().expect("cancelled ticket still resolves");
+        assert_eq!(c.ticket, t);
+        assert_eq!(c.tag, 7, "caller tag rides through");
+        assert_eq!(c.result.unwrap_err(), Error::Cancelled);
+        assert_eq!(cq.outstanding(), 0, "exactly-once even for cancelled tickets");
+        // The cancelled fill consumed no stream state: a fresh request
+        // delivers the group's sequence from its origin.
+        sub(&cq, StreamReq::group(0, 4));
+        let c2 = cq.wait_any(None).unwrap().unwrap();
+        assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 0, 4));
+    }
+
+    #[test]
+    fn cancel_after_resolution_is_a_noop() {
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let (t, handle) = cq.submit(StreamReq::group(0, 4)).unwrap();
+        let c = cq.wait_any(None).unwrap().unwrap();
+        assert_eq!(c.ticket, t);
+        c.result.unwrap();
+        assert!(!handle.cancel(), "cancel after delivery must lose");
+        assert!(!cq.cancel(t), "by-ticket cancel too");
+    }
+
+    #[test]
+    fn zero_deadline_expires_without_consuming_on_both_engines() {
+        for engine in [Engine::Sharded, Engine::Native] {
+            let cq = queue(engine, 4, 2, 4);
+            // An already-expired deadline: the sweep retires the request
+            // before any executor can claim it (expire_due runs under
+            // the same lock as every claim), deterministically.
+            let t = sub(&cq, Request::group(0).rows(4).deadline(Duration::ZERO));
+            let c = cq.wait_any(None).unwrap().expect("expired ticket still resolves");
+            assert_eq!(c.ticket, t);
+            assert_eq!(c.result.unwrap_err(), Error::DeadlineExceeded);
+            // Nothing consumed: the next fill replays from the origin.
+            sub(&cq, StreamReq::group(0, 4));
+            let c2 = cq.wait_any(None).unwrap().unwrap();
+            assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 0, 4));
+        }
+    }
+
+    #[test]
+    fn generous_deadline_delivers_normally() {
+        let cq = queue(Engine::Sharded, 4, 2, 4);
+        let t = sub(&cq, Request::group(0).rows(4).deadline(Duration::from_secs(60)));
+        let c = cq.wait_for(t, None).unwrap().unwrap();
+        assert_eq!(c.result.unwrap(), oracle_block(0, 2, 0, 4));
+    }
+
+    #[test]
+    fn survivors_keep_fifo_and_replay_across_a_dead_middle_request() {
+        // Group FIFO [A, B(expired), C]: B resolves as DeadlineExceeded
+        // without consuming anything, so A ++ C is the group's
+        // contiguous scalar replay — the per-group FIFO of survivors.
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let a = sub(&cq, Request::group(0).rows(4));
+        let b = sub(&cq, Request::group(0).rows(4).deadline(Duration::ZERO));
+        let c = sub(&cq, Request::group(0).rows(4));
+        let mut by_ticket = std::collections::BTreeMap::new();
+        for done in cq.wait_all(None) {
+            by_ticket.insert(done.ticket, done.result);
+        }
+        assert_eq!(by_ticket.len(), 3, "every ticket resolves exactly once");
+        assert_eq!(
+            by_ticket.remove(&b).unwrap().unwrap_err(),
+            Error::DeadlineExceeded
+        );
+        assert_eq!(by_ticket.remove(&a).unwrap().unwrap(), oracle_block(0, 2, 0, 4));
+        assert_eq!(
+            by_ticket.remove(&c).unwrap().unwrap(),
+            oracle_block(0, 2, 4, 4),
+            "survivor C continues exactly where A ended"
+        );
+    }
+
+    #[test]
+    fn cancel_many_is_one_atomic_sweep() {
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let tickets: Vec<_> =
+            (0..4).map(|_| sub(&cq, StreamReq::group(0, 4))).collect();
+        assert_eq!(cq.cancel_many(&tickets[1..]), 3);
+        let mut results = std::collections::BTreeMap::new();
+        for c in cq.wait_all(None) {
+            results.insert(c.ticket, c.result);
+        }
+        assert_eq!(results.len(), 4);
+        assert_eq!(
+            results.remove(&tickets[0]).unwrap().unwrap(),
+            oracle_block(0, 2, 0, 4),
+            "survivor delivers"
+        );
+        for t in &tickets[1..] {
+            assert_eq!(results.remove(t).unwrap().unwrap_err(), Error::Cancelled);
+        }
+    }
+
+    #[test]
+    fn wait_any_and_wait_for_respect_the_wait_deadline() {
+        // A claim held by a stuck executor: the ticket is outstanding
+        // but cannot complete, so an undeadlined wait would block
+        // forever — the deadline turns that into a typed error, and the
+        // ticket stays harvestable afterwards.
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let t = sub(&cq, StreamReq::group(0, 4));
+        let stuck = cq.inbox.claim_where(&|_, _| true).expect("claimable");
+        let t0 = Instant::now();
+        assert_eq!(
+            cq.wait_for(t, Some(Duration::from_millis(30))).unwrap_err(),
+            Error::DeadlineExceeded
+        );
+        assert_eq!(
+            cq.wait_any(Some(Duration::from_millis(30))).unwrap_err(),
+            Error::DeadlineExceeded
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(60), "the waits actually waited");
+        assert!(
+            cq.wait_all(Some(Duration::from_millis(30))).is_empty(),
+            "partial wait_all harvests nothing while the claim is stuck"
+        );
+        // The executor recovers: the ticket completes and is delivered
+        // exactly once.
+        stuck.complete(Ok(oracle_block(0, 2, 0, 4)));
+        let c = cq.wait_for(t, None).unwrap().expect("still outstanding");
+        assert_eq!(c.result.unwrap(), oracle_block(0, 2, 0, 4));
+    }
+
+    #[test]
+    fn queued_deadline_fires_from_inside_a_parked_wait() {
+        // One armed request nobody will execute (stuck claim on the
+        // same group blocks it): the consumer's deadline-aware park
+        // must wake itself and resolve the expiry without any nudge.
+        let cq = queue(Engine::Native, 4, 2, 4);
+        sub(&cq, StreamReq::group(0, 4)); // will be claimed and stuck
+        let stuck = cq.inbox.claim_where(&|_, _| true).expect("claimable");
+        let armed =
+            sub(&cq, Request::group(0).rows(4).deadline(Duration::from_millis(30)));
+        let c = cq.wait_any(None).unwrap().expect("expiry resolves a completion");
+        assert_eq!(c.ticket, armed);
+        assert_eq!(c.result.unwrap_err(), Error::DeadlineExceeded);
+        stuck.complete(Ok(Vec::new()));
+        cq.wait_all(None);
     }
 }

@@ -47,7 +47,10 @@ use std::sync::{Mutex, MutexGuard};
 use anyhow::anyhow;
 
 pub use builder::{Engine, EngineBuilder};
-pub use completion::{Completion, CompletionInbox, CompletionQueue, ReqTarget, StreamReq, Ticket};
+pub use completion::{
+    CancelHandle, Completion, CompletionInbox, CompletionQueue, ReqTarget, Request, StreamReq,
+    Ticket,
+};
 pub use drain::{DrainState, TileProvider};
 pub use group::{GroupBackend, StreamGroup};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -57,18 +57,34 @@ pub enum Error {
     /// closed mid-conversation (`rust/src/serve/`). The connection is
     /// unusable afterwards — reconnect rather than retry the call.
     Protocol(String),
+    /// The request was cancelled (via a
+    /// [`CancelHandle`](crate::coordinator::CancelHandle) or a wire
+    /// CANCEL) before it started executing. A cancelled request consumed
+    /// no stream state — the stream replays as if it was never
+    /// submitted. Not retryable: the caller (or its peer) asked for the
+    /// work not to happen.
+    Cancelled,
+    /// The request's (or the wait's) deadline passed before service
+    /// began. Like a cancellation, an expired request consumed no stream
+    /// state, so resubmitting with a fresh deadline is always safe —
+    /// which is why this variant *is* retryable.
+    DeadlineExceeded,
 }
 
 impl Error {
     /// Is this a transient condition the caller can recover from by
     /// retrying (after letting the rest of the system make progress)?
     ///
-    /// Today only [`Error::LagWindowExceeded`] qualifies: it is the
-    /// service's backpressure signal, cleared as soon as the group's
-    /// slow lanes catch up. Every other variant is persistent — retrying
-    /// an unknown stream or a dead backend returns the same error.
+    /// [`Error::LagWindowExceeded`] qualifies: it is the service's
+    /// backpressure signal, cleared as soon as the group's slow lanes
+    /// catch up. [`Error::DeadlineExceeded`] qualifies too: an expired
+    /// request (or wait) consumed nothing, so resubmitting with a fresh
+    /// deadline continues the stream seamlessly. Every other variant is
+    /// persistent — retrying an unknown stream or a dead backend returns
+    /// the same error, and retrying a [`Error::Cancelled`] request would
+    /// undo a deliberate caller decision.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, Error::LagWindowExceeded { .. })
+        matches!(self, Error::LagWindowExceeded { .. } | Error::DeadlineExceeded)
     }
 }
 
@@ -90,6 +106,8 @@ impl std::fmt::Display for Error {
                 write!(f, "generator {name:?} not in the roster")
             }
             Error::Protocol(msg) => write!(f, "protocol: {msg}"),
+            Error::Cancelled => write!(f, "request cancelled before execution"),
+            Error::DeadlineExceeded => write!(f, "deadline exceeded before service"),
         }
     }
 }
@@ -108,8 +126,12 @@ mod tests {
     }
 
     #[test]
-    fn only_backpressure_is_retryable() {
+    fn only_backpressure_and_expiry_are_retryable() {
         assert!(Error::LagWindowExceeded { lead: 2, window: 1 }.is_retryable());
+        // An expired request consumed nothing — resubmission is safe.
+        assert!(Error::DeadlineExceeded.is_retryable());
+        // A cancellation is a deliberate caller decision, not transient.
+        assert!(!Error::Cancelled.is_retryable());
         assert!(!Error::UnknownStream { stream: 9, have: 8 }.is_retryable());
         assert!(!Error::Backend("gone".into()).is_retryable());
         assert!(!Error::UnknownGenerator { name: "WELL".into() }.is_retryable());

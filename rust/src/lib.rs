@@ -14,8 +14,11 @@
 //! * [`StreamHandle`] is the recommended per-stream client
 //!   (fill / `next_u32` / iterator views);
 //! * [`CompletionQueue`] is the asynchronous front over the same
-//!   service: submit lane/group requests, harvest completed tickets —
-//!   one consumer thread overlaps fills across many groups;
+//!   service: submit lane/group [`Request`]s (with optional deadlines,
+//!   tags, and a [`CancelHandle`] per submission), harvest completed
+//!   tickets — one consumer thread overlaps fills across many groups,
+//!   and a slow or abandoned consumer's requests expire or cancel as
+//!   typed `Err` completions instead of wedging the shared engine;
 //! * the [`serve`] layer puts the whole service on the network
 //!   (`std::net` only): [`serve::Server`] multiplexes any number of TCP
 //!   clients over one completion queue, and [`serve::RemoteSource`] is
@@ -52,8 +55,8 @@ pub mod stats;
 pub mod util;
 
 pub use coordinator::{
-    Completion, CompletionQueue, Coordinator, Engine, EngineBuilder, ParallelCoordinator,
-    ReqTarget, StreamHandle, StreamReq, StreamSource, Ticket,
+    CancelHandle, Completion, CompletionQueue, Coordinator, Engine, EngineBuilder,
+    ParallelCoordinator, ReqTarget, Request, StreamHandle, StreamReq, StreamSource, Ticket,
 };
 pub use error::Error;
 pub use serve::{RemoteSource, ServeConfig, Server};

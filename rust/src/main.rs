@@ -31,12 +31,13 @@ use thundering::runtime::executor::TileExecutor;
 use thundering::serve::{LoadgenConfig, ServeConfig, Server};
 use thundering::stats::Scale;
 use thundering::util::cli::Args;
-use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
+use thundering::{Engine, EngineBuilder, Request, StreamSource};
 
 const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
     "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
-    "connections", "sessions", "window", "chunk-rows", "numbers",
+    "connections", "sessions", "window", "chunk-rows", "numbers", "deadline-ms",
+    "fills",
 ];
 
 /// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
@@ -98,9 +99,9 @@ fn usage() -> String {
      report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
      pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
-     throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--artifacts DIR]\n  \
+     throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--deadline-ms N] [--artifacts DIR]\n  \
      serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N]\n  \
-     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N]\n  \
+     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--cancel-storm]\n  \
      fpga-model  --n INSTANCES"
         .to_string()
 }
@@ -148,9 +149,15 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
         "quality" => (vec!["gen", "scale"], &[], 0),
         "report" => (vec!["artifacts"], &["quick"], 1),
         "pi" | "bs" => (with_engine_opts(&["draws", "threads"]), &[], 0),
-        "throughput" => (with_engine_opts(&["streams", "rows"]), &["completion"], 0),
+        "throughput" => {
+            (with_engine_opts(&["streams", "rows", "deadline-ms"]), &["completion"], 0)
+        }
         "serve" => (with_engine_opts(&["addr", "streams", "sessions", "window"]), &[], 0),
-        "loadgen" => (vec!["addr", "connections", "numbers", "chunk-rows"], &[], 0),
+        "loadgen" => (
+            vec!["addr", "connections", "numbers", "chunk-rows", "fills", "deadline-ms"],
+            &["cancel-storm"],
+            0,
+        ),
         "fpga-model" => (vec!["n"], &[], 0),
         _ => return Ok(()),
     };
@@ -338,13 +345,19 @@ fn cmd_throughput(args: &Args) -> Result<()> {
 /// shards; other engines execute inside `wait_any`). Each group's fill
 /// is submitted as tile-sized requests so the shards execute every
 /// ticket inline (per-group order is guaranteed by the front) instead
-/// of one oversized request serializing a shard.
+/// of one oversized request serializing a shard. With `--deadline-ms N`
+/// every request carries a deadline: tickets the engine cannot start in
+/// time resolve as typed `DeadlineExceeded` completions and are counted
+/// instead of delivered — the QoS experiment for an overloaded engine.
 fn throughput_completion(
     args: &Args,
     streams: u64,
     rows_aligned: usize,
     rows_per_tile: usize,
 ) -> Result<()> {
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let deadline = (deadline_ms > 0)
+        .then(|| std::time::Duration::from_millis(deadline_ms));
     let cq = builder(args, streams, "sharded")?.build_completion()?;
     let n_groups = cq.source().n_groups();
     let tiles_per_group = rows_aligned / rows_per_tile;
@@ -355,21 +368,37 @@ fn throughput_completion(
     let window = n_groups.saturating_mul(2).max(1);
     let t0 = std::time::Instant::now();
     let mut total = 0u64;
+    let mut expired = 0u64;
     let mut in_flight = 0usize;
+    let account = |c: thundering::Completion,
+                       total: &mut u64,
+                       expired: &mut u64|
+     -> Result<()> {
+        match c.result {
+            Ok(block) => {
+                *total += block.len() as u64;
+                std::hint::black_box(&block);
+            }
+            Err(thundering::Error::DeadlineExceeded) if deadline.is_some() => {
+                *expired += 1;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        Ok(())
+    };
     // Round-major submission keeps every group (hence every shard) hot;
     // each round goes in as few batched submissions as the window
     // allows (submit_many: one inbox-lock acquisition per batch).
     for _ in 0..tiles_per_group {
-        let round: Vec<StreamReq> =
-            (0..n_groups).map(|g| StreamReq::group(g, rows_per_tile)).collect();
+        let round: Vec<Request> = (0..n_groups)
+            .map(|g| Request::group(g).rows(rows_per_tile).deadline_opt(deadline))
+            .collect();
         let mut next = 0usize;
         while next < round.len() {
             while in_flight >= window {
-                match cq.wait_any() {
+                match cq.wait_any(None)? {
                     Some(c) => {
-                        let block = c.result?;
-                        total += block.len() as u64;
-                        std::hint::black_box(&block);
+                        account(c, &mut total, &mut expired)?;
                         in_flight -= 1;
                     }
                     // Unreachable while tickets are in flight; re-sync
@@ -383,15 +412,18 @@ fn throughput_completion(
             next += take;
         }
     }
-    for c in cq.wait_all() {
-        let block = c.result?;
-        total += block.len() as u64;
-        std::hint::black_box(&block);
+    for c in cq.wait_all(None) {
+        account(c, &mut total, &mut expired)?;
     }
     let secs = t0.elapsed().as_secs_f64();
+    let expired_note = if deadline.is_some() {
+        format!(", {expired} tickets expired at {deadline_ms}ms")
+    } else {
+        String::new()
+    };
     println!(
         "served {total} numbers in {secs:.4}s = {} ({:.4} Tb/s) via the completion front \
-         on the {} engine ({} tickets across {} groups, 1 consumer)\nmetrics: {}",
+         on the {} engine ({} tickets across {} groups, 1 consumer{expired_note})\nmetrics: {}",
         thundering::util::fmt_rate(total as f64 / secs),
         total as f64 * 32.0 / secs / 1e12,
         cq.source().engine_kind(),
@@ -444,11 +476,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .get_u64("chunk-rows", 0)?
         .try_into()
         .map_err(|_| anyhow::anyhow!("--chunk-rows must fit in 32 bits"))?;
+    let fills_per_conn: u32 = args
+        .get_u64("fills", 8)?
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("--fills must fit in 32 bits"))?;
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
         connections: args.get_usize("connections", 8)?,
         numbers_per_conn: args.get_u64("numbers", 1 << 22)?,
         chunk_rows,
+        fills_per_conn,
+        deadline_ms: args.get_u64("deadline-ms", 0)?,
+        cancel_storm: args.flag("cancel-storm"),
         ..LoadgenConfig::default()
     };
     let report = thundering::serve::loadgen::run(&cfg)?;
@@ -461,6 +500,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.seconds,
         thundering::util::fmt_rate(report.numbers as f64 / report.seconds),
         report.grn_per_s(),
+    );
+    println!(
+        "loadgen: fill latency p50 = {:.3}ms  p95 = {:.3}ms  p99 = {:.3}ms \
+         ({} fills sampled); {} chunks cancelled, {} chunks expired",
+        report.latency_percentile(50.0) * 1e3,
+        report.latency_percentile(95.0) * 1e3,
+        report.latency_percentile(99.0) * 1e3,
+        report.fill_latencies_s.len(),
+        report.cancelled_chunks,
+        report.expired_chunks,
     );
     Ok(())
 }

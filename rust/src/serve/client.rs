@@ -8,23 +8,34 @@
 //! app drivers, the statistical battery — consumes a remote engine
 //! unchanged, and the bytes it reads are bit-identical to a local
 //! source built from the same spec (the determinism contract extends
-//! through the wire; enforced by `rust/tests/serve_roundtrip.rs`).
+//! through the wire; enforced by `rust/tests/serve_roundtrip.rs`). It
+//! also mirrors the [`CompletionQueue`](crate::CompletionQueue)'s
+//! request-lifecycle surface: [`RemoteSource::submit`] takes the same
+//! [`Request`] (deadline included, carried on the FILL frame) and
+//! returns the same cloneable [`CancelHandle`] (backed by a wire
+//! CANCEL), so local and remote callers are symmetric.
 //!
 //! `RemoteClient` is for consumers that want pipelining the synchronous
 //! trait cannot express: submit chunked fills on many targets
 //! ([`RemoteClient::submit_fill`]), then harvest interleaved replies per
 //! request ([`RemoteClient::next_chunk`]) — the wire twin of the
-//! [`CompletionQueue`](crate::CompletionQueue) submit/harvest split, and
-//! what the `loadgen` driver uses.
+//! completion queue's submit/harvest split, and what the `loadgen`
+//! driver uses. The connection is internally split into a read half and
+//! a write half under separate locks, so every method takes `&self`:
+//! one thread can block harvesting chunks while another submits or
+//! cancels on the same connection — exactly what a mid-fill CANCEL
+//! needs.
 //!
 //! [`StreamHandle`]: crate::StreamHandle
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 
-use crate::coordinator::{Metrics, MetricsSnapshot, ReqTarget, StreamSource, StreamSpec};
+use crate::coordinator::{
+    CancelHandle, Metrics, MetricsSnapshot, ReqTarget, Request, StreamSource, StreamSpec,
+};
 use crate::error::Error;
 use crate::serve::protocol::{self, Frame};
 
@@ -53,25 +64,61 @@ pub struct Chunk {
     pub seq: u32,
     /// Is this the fill's final sub-request?
     pub last: bool,
-    /// The numbers, or the typed error the sub-request produced (a
-    /// failed sub-request consumed nothing server-side, so the fill's
-    /// delivered numbers always concatenate to a contiguous prefix of
-    /// the target's sequence).
+    /// The numbers, or the typed error the sub-request produced — a
+    /// failed sub-request (including a cancelled or expired one)
+    /// consumed nothing server-side, so the fill's delivered numbers
+    /// always concatenate to a contiguous prefix of the target's
+    /// sequence.
     pub result: Result<Vec<u32>, Error>,
 }
 
-/// A framed connection to a [`Server`](crate::serve::Server): HELLO/
-/// WELCOME negotiation on connect, then LEASE / FILL / chunk harvesting
-/// / BYE. Single-threaded by design — wrap it in [`RemoteSource`] (or
-/// your own lock) to share.
-pub struct RemoteClient {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
-    info: ServerInfo,
+/// The socket's read side plus everything harvested out of order while
+/// some caller was looking for a different reply.
+struct ReadHalf {
+    r: BufReader<TcpStream>,
+    /// Fill chunks read while looking for a different request's chunk
+    /// (the connection multiplexes any number of in-flight fills).
+    chunks: HashMap<u64, VecDeque<Chunk>>,
+    /// Lease grants read while looking for something else.
+    leases: HashMap<u64, (u64, [u32; 4])>,
+}
+
+/// The socket's write side plus the request-id counter.
+struct WriteHalf {
+    w: BufWriter<TcpStream>,
     next_req: u64,
-    /// Replies read while looking for a different request's chunk (the
-    /// connection multiplexes any number of in-flight fills).
-    stash: HashMap<u64, VecDeque<Chunk>>,
+}
+
+impl WriteHalf {
+    fn send(&mut self, frame: &Frame) -> Result<(), Error> {
+        protocol::write_frame(&mut self.w, frame)?;
+        self.w.flush().map_err(protocol::io_protocol)
+    }
+}
+
+/// Wire deadline field for a request: milliseconds, 0 = none.
+/// Fractional milliseconds round *up* (never down): truncation would
+/// silently tighten the caller's deadline — and turn a sub-ms one into
+/// "wait forever".
+fn deadline_ms_of(req: &Request) -> u64 {
+    match req.get_deadline() {
+        None => 0,
+        Some(d) => {
+            let ms = d.as_nanos().div_ceil(1_000_000);
+            u64::try_from(ms).unwrap_or(u64::MAX).max(1)
+        }
+    }
+}
+
+/// A framed connection to a [`Server`](crate::serve::Server): HELLO/
+/// WELCOME negotiation on connect, then LEASE / FILL / CANCEL / chunk
+/// harvesting / BYE. Shareable across threads (`&self` methods; read
+/// and write sides are independently locked) — [`RemoteSource`] wraps
+/// it in an `Arc`.
+pub struct RemoteClient {
+    read: Mutex<ReadHalf>,
+    write: Mutex<WriteHalf>,
+    info: ServerInfo,
 }
 
 impl RemoteClient {
@@ -115,7 +162,15 @@ impl RemoteClient {
             }
             None => return Err(Error::Protocol("server closed during handshake".into())),
         };
-        Ok(Self { reader, writer, info, next_req: 0, stash: HashMap::new() })
+        Ok(Self {
+            read: Mutex::new(ReadHalf {
+                r: reader,
+                chunks: HashMap::new(),
+                leases: HashMap::new(),
+            }),
+            write: Mutex::new(WriteHalf { w: writer, next_req: 0 }),
+            info,
+        })
     }
 
     /// What the server advertised in WELCOME.
@@ -123,13 +178,16 @@ impl RemoteClient {
         &self.info
     }
 
-    fn send(&mut self, frame: &Frame) -> Result<(), Error> {
-        protocol::write_frame(&mut self.writer, frame)?;
-        self.writer.flush().map_err(protocol::io_protocol)
+    /// Lock one connection half. Poison recovery matches the rest of
+    /// the crate: the halves' invariants (a buffered socket, reply
+    /// stashes, a counter) hold between every update, so a peer
+    /// thread's panic does not invalidate them.
+    fn lock_read(&self) -> MutexGuard<'_, ReadHalf> {
+        self.read.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    fn stash_chunk(&mut self, req: u64, chunk: Chunk) {
-        self.stash.entry(req).or_default().push_back(chunk);
+    fn lock_write(&self) -> MutexGuard<'_, WriteHalf> {
+        self.write.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Validate-and-identify a target before filling from it (the wire
@@ -137,28 +195,47 @@ impl RemoteClient {
     /// validation): returns the stream's registered identity for stream
     /// targets, `None` for (valid) group targets, and the server's typed
     /// error for targets it does not serve.
-    pub fn lease(&mut self, target: ReqTarget) -> Result<Option<StreamSpec>, Error> {
-        let req = self.next_req;
-        self.next_req += 1;
-        self.send(&Frame::Lease { req, target })?;
+    pub fn lease(&self, target: ReqTarget) -> Result<Option<StreamSpec>, Error> {
+        let req = {
+            let mut w = self.lock_write();
+            let req = w.next_req;
+            w.next_req += 1;
+            w.send(&Frame::Lease { req, target })?;
+            req
+        };
+        let mut rd = self.lock_read();
         loop {
-            match protocol::read_frame(&mut self.reader)? {
-                Some(Frame::Leased { req: r, h, xs_origin }) if r == req => {
-                    return Ok(match target {
-                        ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
-                        ReqTarget::Group(_) => None,
-                    });
+            if let Some((h, xs_origin)) = rd.leases.remove(&req) {
+                return Ok(match target {
+                    ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
+                    ReqTarget::Group(_) => None,
+                });
+            }
+            // A rejected lease answers as an ERR chunk; it may have
+            // been stashed by a concurrent harvester.
+            if let Some(q) = rd.chunks.get_mut(&req) {
+                if let Some(chunk) = q.pop_front() {
+                    if q.is_empty() {
+                        rd.chunks.remove(&req);
+                    }
+                    return Err(chunk
+                        .result
+                        .err()
+                        .unwrap_or_else(|| Error::Protocol("DATA answered a LEASE".into())));
                 }
-                Some(Frame::Err { req: r, error, .. })
-                    if r == req || r == protocol::CONNECTION_REQ =>
-                {
+            }
+            match protocol::read_frame(&mut rd.r)? {
+                Some(Frame::Leased { req: r, h, xs_origin }) => {
+                    rd.leases.insert(r, (h, xs_origin));
+                }
+                Some(Frame::Err { req: r, error, .. }) if r == protocol::CONNECTION_REQ => {
                     return Err(error)
                 }
                 Some(Frame::Data { req: r, seq, last, values }) => {
-                    self.stash_chunk(r, Chunk { seq, last, result: Ok(values) });
+                    stash_chunk(&mut rd, r, Chunk { seq, last, result: Ok(values) });
                 }
                 Some(Frame::Err { req: r, seq, last, error }) => {
-                    self.stash_chunk(r, Chunk { seq, last, result: Err(error) });
+                    stash_chunk(&mut rd, r, Chunk { seq, last, result: Err(error) });
                 }
                 Some(other) => {
                     return Err(Error::Protocol(format!(
@@ -171,43 +248,61 @@ impl RemoteClient {
         }
     }
 
-    /// Submit a fill of `repeat` consecutive sub-requests of `rows` rows
-    /// each from `target`; returns the request id to harvest with
-    /// [`next_chunk`](Self::next_chunk). Any number of fills may be in
-    /// flight on one connection — the server overlaps them through its
+    /// Submit a fill of `repeat` consecutive sub-requests described by
+    /// `req` (target, rows per sub-request, optional deadline — the
+    /// deadline rides the FILL frame and is enforced server-side);
+    /// returns the request id to harvest with
+    /// [`next_chunk`](Self::next_chunk) or abort with
+    /// [`cancel`](Self::cancel). Any number of fills may be in flight
+    /// on one connection — the server overlaps them through its
     /// completion queue.
-    pub fn submit_fill(
-        &mut self,
-        target: ReqTarget,
-        rows: u64,
-        repeat: u32,
-    ) -> Result<u64, Error> {
-        let req = self.next_req;
-        self.next_req += 1;
-        self.send(&Frame::Fill { req, target, rows, repeat })?;
-        Ok(req)
+    pub fn submit_fill(&self, req: &Request, repeat: u32) -> Result<u64, Error> {
+        let core = req.stream_req();
+        let mut w = self.lock_write();
+        let id = w.next_req;
+        w.next_req += 1;
+        w.send(&Frame::Fill {
+            req: id,
+            target: core.target(),
+            rows: core.rows() as u64,
+            repeat,
+            deadline_ms: deadline_ms_of(req),
+        })?;
+        Ok(id)
+    }
+
+    /// Ask the server to abort fill `req`'s not-yet-executed
+    /// sub-requests (wire CANCEL; see the
+    /// [`Frame::Cancel`](crate::serve::protocol::Frame::Cancel) docs
+    /// for the exact contract). Safe to call from any thread while
+    /// another harvests — the outcome arrives as the fill's remaining
+    /// chunks: delivered DATA stays a contiguous prefix, the rest
+    /// resolve as `Cancelled` ERR chunks.
+    pub fn cancel(&self, req: u64) -> Result<(), Error> {
+        self.lock_write().send(&Frame::Cancel { req })
     }
 
     /// The next sub-request outcome of fill `req`, in seq order. Chunks
     /// of other in-flight fills read along the way are stashed for their
     /// own harvesting.
-    pub fn next_chunk(&mut self, req: u64) -> Result<Chunk, Error> {
-        if let Some(q) = self.stash.get_mut(&req) {
+    pub fn next_chunk(&self, req: u64) -> Result<Chunk, Error> {
+        let mut rd = self.lock_read();
+        if let Some(q) = rd.chunks.get_mut(&req) {
             if let Some(chunk) = q.pop_front() {
                 if q.is_empty() {
-                    self.stash.remove(&req);
+                    rd.chunks.remove(&req);
                 }
                 return Ok(chunk);
             }
         }
         loop {
-            match protocol::read_frame(&mut self.reader)? {
+            match protocol::read_frame(&mut rd.r)? {
                 Some(Frame::Data { req: r, seq, last, values }) => {
                     let chunk = Chunk { seq, last, result: Ok(values) };
                     if r == req {
                         return Ok(chunk);
                     }
-                    self.stash_chunk(r, chunk);
+                    stash_chunk(&mut rd, r, chunk);
                 }
                 Some(Frame::Err { req: r, error, .. }) if r == protocol::CONNECTION_REQ => {
                     // A connection-level failure (malformed frame,
@@ -221,7 +316,10 @@ impl RemoteClient {
                     if r == req {
                         return Ok(chunk);
                     }
-                    self.stash_chunk(r, chunk);
+                    stash_chunk(&mut rd, r, chunk);
+                }
+                Some(Frame::Leased { req: r, h, xs_origin }) => {
+                    rd.leases.insert(r, (h, xs_origin));
                 }
                 Some(other) => {
                     return Err(Error::Protocol(format!(
@@ -234,32 +332,28 @@ impl RemoteClient {
         }
     }
 
-    /// One-shot fill: a single sub-request, answered by exactly one
-    /// chunk. All-or-nothing server-side: on `Err` no cursor moved.
-    pub fn fill(&mut self, target: ReqTarget, rows: u64) -> Result<Vec<u32>, Error> {
-        let req = self.submit_fill(target, rows, 1)?;
-        let chunk = self.next_chunk(req)?;
-        if chunk.seq != 0 || !chunk.last {
-            return Err(Error::Protocol(format!(
-                "single-chunk fill answered with seq {} (last: {})",
-                chunk.seq, chunk.last
-            )));
-        }
-        chunk.result
+    /// One-shot fill: a single sub-request described by `req`, answered
+    /// by exactly one chunk. All-or-nothing server-side: on `Err` no
+    /// cursor moved.
+    pub fn fill(&self, req: &Request) -> Result<Vec<u32>, Error> {
+        let id = self.submit_fill(req, 1)?;
+        single_chunk(self.next_chunk(id)?)
     }
 
     /// Graceful goodbye: the server flushes every in-flight reply (their
     /// frames are read and discarded here — harvest what you need
     /// first), acknowledges, and closes.
-    pub fn bye(mut self) -> Result<(), Error> {
-        self.send(&Frame::Bye)?;
+    pub fn bye(self) -> Result<(), Error> {
+        self.lock_write().send(&Frame::Bye)?;
+        let mut rd = self.lock_read();
         loop {
-            match protocol::read_frame(&mut self.reader)? {
+            match protocol::read_frame(&mut rd.r)? {
                 Some(Frame::ByeAck) => return Ok(()),
                 Some(Frame::Err { req, error, .. }) if req == protocol::CONNECTION_REQ => {
                     return Err(error)
                 }
-                Some(Frame::Data { .. } | Frame::Err { .. }) => {} // undrained fills
+                // Undrained fills and leases flush past us.
+                Some(Frame::Data { .. } | Frame::Err { .. } | Frame::Leased { .. }) => {}
                 Some(other) => {
                     return Err(Error::Protocol(format!(
                         "unexpected {} frame before BYE_ACK",
@@ -275,10 +369,30 @@ impl RemoteClient {
 
     /// Fire a BYE without waiting for the acknowledgement (the drop
     /// path: never block in a destructor).
-    fn bye_nowait(&mut self) {
-        let _ = protocol::write_frame(&mut self.writer, &Frame::Bye);
-        let _ = self.writer.flush();
+    fn bye_nowait(&self) {
+        let mut w = self.lock_write();
+        let _ = protocol::write_frame(&mut w.w, &Frame::Bye);
+        let _ = w.w.flush();
     }
+}
+
+/// Park a reply chunk for its own harvester.
+fn stash_chunk(rd: &mut ReadHalf, req: u64, chunk: Chunk) {
+    rd.chunks.entry(req).or_default().push_back(chunk);
+}
+
+/// Validate the reply shape of a `repeat == 1` fill (exactly one chunk,
+/// seq 0, `last` set) and unwrap its outcome — the one place the
+/// single-chunk contract is enforced, shared by [`RemoteClient::fill`]
+/// and [`RemoteSource::wait`].
+fn single_chunk(chunk: Chunk) -> Result<Vec<u32>, Error> {
+    if chunk.seq != 0 || !chunk.last {
+        return Err(Error::Protocol(format!(
+            "single-chunk fill answered with seq {} (last: {})",
+            chunk.seq, chunk.last
+        )));
+    }
+    chunk.result
 }
 
 impl std::fmt::Debug for RemoteClient {
@@ -286,8 +400,7 @@ impl std::fmt::Debug for RemoteClient {
         f.debug_struct("RemoteClient")
             .field("server_engine", &self.info.engine)
             .field("n_streams", &self.info.n_streams)
-            .field("in_flight_reqs", &self.stash.len())
-            .finish()
+            .finish_non_exhaustive()
     }
 }
 
@@ -301,14 +414,29 @@ const FETCH_MANY_PIPELINE: usize = 8;
 /// A remote engine as a local [`StreamSource`] — the serving layer's
 /// drop-in client surface.
 ///
-/// One TCP connection, shared across client threads by the internal
-/// lock; every trait call is one request/response exchange (except
+/// One TCP connection, shared across client threads (the read and
+/// write sides are independently locked); every trait call is one
+/// request/response exchange (except
 /// [`fetch_many`](StreamSource::fetch_many), which keeps a bounded
 /// window of group fills pipelined). [`StreamHandle`](crate::StreamHandle)s
 /// over a `RemoteSource` behave exactly like handles over the local
 /// engine the server wraps, bit for bit.
 ///
-/// Divergences from a local source, both inherent to the boundary:
+/// Beyond the synchronous trait, the source mirrors the
+/// [`CompletionQueue`](crate::CompletionQueue)'s lifecycle surface:
+///
+/// * [`submit`](Self::submit) takes a [`Request`] — deadline included —
+///   and returns a request id plus the same cloneable [`CancelHandle`]
+///   a local queue returns (wire-backed: cancelling sends a CANCEL
+///   frame); harvest with [`wait`](Self::wait).
+/// * [`with_default_deadline`](Self::with_default_deadline) arms every
+///   *synchronous* fetch with a deadline, so a drop-in caller gets the
+///   same QoS bound without touching its call sites — an expired fetch
+///   fails with the typed, retryable
+///   [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded) and
+///   consumes nothing.
+///
+/// Divergences from a local source, all inherent to the boundary:
 ///
 /// * fetch sizes are bounded by the server's advertised
 ///   `max_fill` numbers per request (a larger fetch fails typed with
@@ -316,10 +444,24 @@ const FETCH_MANY_PIPELINE: usize = 8;
 ///   `StreamHandle` whose chunk is within the bound);
 /// * `fetch_many` is atomic per group but **not** across groups: a lag
 ///   rejection in one group leaves other groups advanced (a local
-///   source holds every group lock at once; a network peer cannot).
+///   source holds every group lock at once; a network peer cannot);
+/// * the deadline clock starts when the **server reads the FILL**, has
+///   millisecond wire granularity (fractions round up), and bounds
+///   *queueing at the server*, not end-to-end latency — so unlike the
+///   local queue, where a zero deadline is deterministically dead, a
+///   `Duration::ZERO` deadline crosses the wire as 1 ms and may still
+///   be served by an idle engine. The typed-outcome contract is
+///   identical on both surfaces (`DeadlineExceeded` is retryable and
+///   an expired fill consumed nothing); only the clock's anchor
+///   differs.
 pub struct RemoteSource {
-    client: Mutex<RemoteClient>,
+    client: Arc<RemoteClient>,
     info: ServerInfo,
+    /// Deadline armed on every synchronous fetch (None = wait forever).
+    deadline: Option<std::time::Duration>,
+    /// [`submit`](Self::submit)ted-but-not-[`wait`](Self::wait)ed fills
+    /// (bounds the async pipeline — see [`Self::submit`]).
+    submitted: std::sync::atomic::AtomicUsize,
     metrics: Metrics,
 }
 
@@ -329,7 +471,13 @@ impl RemoteSource {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, Error> {
         let client = RemoteClient::connect(addr)?;
         let info = client.info().clone();
-        Ok(Self { client: Mutex::new(client), info, metrics: Metrics::default() })
+        Ok(Self {
+            client: Arc::new(client),
+            info,
+            deadline: None,
+            submitted: std::sync::atomic::AtomicUsize::new(0),
+            metrics: Metrics::default(),
+        })
     }
 
     /// What the server advertised in WELCOME.
@@ -337,10 +485,109 @@ impl RemoteSource {
         &self.info
     }
 
-    fn client(&self) -> Result<MutexGuard<'_, RemoteClient>, Error> {
-        self.client
-            .lock()
-            .map_err(|_| Error::Backend("remote client poisoned by a panicked thread".into()))
+    /// Arm every synchronous fetch of this source with `deadline`: a
+    /// fetch still queued server-side when it passes fails with the
+    /// typed, retryable `DeadlineExceeded` instead of waiting forever —
+    /// the QoS bound for drop-in consumers.
+    pub fn with_default_deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// A fill request for `target`/`rows` carrying this source's
+    /// default deadline (if any).
+    fn request(&self, target: ReqTarget, rows: usize) -> Request {
+        let req = match target {
+            ReqTarget::Stream(s) => Request::stream(s).rows(rows),
+            ReqTarget::Group(g) => Request::group(g).rows(rows),
+        };
+        req.deadline_opt(self.deadline)
+    }
+
+    /// Submit an asynchronous single-chunk fill — the wire twin of
+    /// [`CompletionQueue::submit`](crate::CompletionQueue::submit):
+    /// same [`Request`] in (deadline enforced server-side), same
+    /// cloneable [`CancelHandle`] out. Harvest with
+    /// [`wait`](Self::wait).
+    ///
+    /// Unlike the local queue, in-flight submissions are bounded (at
+    /// `FETCH_MANY_PIPELINE` = 8, the same bound `fetch_many` uses):
+    /// unread replies sit in kernel socket buffers, so a caller that
+    /// submitted past the server's per-session window without
+    /// harvesting would wedge the connection — the server stops
+    /// reading FILL frames while this side blocks writing them (and a
+    /// CANCEL could not get through either, as it shares the write
+    /// side). Submissions beyond the bound fail fast with a typed
+    /// `InvalidConfig` instead; `wait` frees a slot.
+    pub fn submit(&self, req: Request) -> Result<(u64, CancelHandle), Error> {
+        use std::sync::atomic::Ordering;
+        // Optimistic reserve; undone on any failure below. The cap is
+        // small and advisory (protects liveness, not exactness), so a
+        // transient overshoot between racing submitters is harmless —
+        // what matters is that it can never grow unboundedly.
+        if self.submitted.fetch_add(1, Ordering::AcqRel) >= FETCH_MANY_PIPELINE {
+            self.submitted.fetch_sub(1, Ordering::AcqRel);
+            return Err(Error::InvalidConfig(format!(
+                "too many in-flight submissions (bound {FETCH_MANY_PIPELINE}): \
+                 wait() on an outstanding fill first, or the connection would \
+                 deadlock against the server's session window"
+            )));
+        }
+        match self.submit_inner(req) {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                self.submitted.fetch_sub(1, Ordering::AcqRel);
+                Err(e)
+            }
+        }
+    }
+
+    fn submit_inner(&self, req: Request) -> Result<(u64, CancelHandle), Error> {
+        let core = req.stream_req();
+        match core.target() {
+            ReqTarget::Stream(s) if s >= self.info.n_streams => {
+                return Err(Error::UnknownStream { stream: s, have: self.info.n_streams })
+            }
+            ReqTarget::Group(g) if g as u64 >= self.info.n_groups => {
+                return Err(Error::GroupOutOfRange {
+                    group: g,
+                    have: self.info.n_groups as usize,
+                })
+            }
+            _ => {}
+        }
+        let numbers = match core.target() {
+            ReqTarget::Stream(_) => Some(core.rows() as u64),
+            ReqTarget::Group(_) => {
+                (core.rows() as u64).checked_mul(self.info.group_width as u64)
+            }
+        };
+        match numbers {
+            Some(n) => self.check_fill(n)?,
+            None => return Err(Error::InvalidConfig("fill size overflows".into())),
+        }
+        let id = self.client.submit_fill(&req, 1)?;
+        let weak = Arc::downgrade(&self.client);
+        Ok((id, CancelHandle::from_fn(move || cancel_remote(&weak, id))))
+    }
+
+    /// Harvest one [`submit`](Self::submit)ted fill: blocks until its
+    /// chunk arrives and returns the numbers or the typed error
+    /// (`Cancelled` / `DeadlineExceeded` for a fill the lifecycle
+    /// retired — either way it consumed nothing). Each request id must
+    /// be waited on exactly once; waiting frees one slot of the
+    /// bounded submission pipeline.
+    pub fn wait(&self, req: u64) -> Result<Vec<u32>, Error> {
+        use std::sync::atomic::Ordering;
+        let chunk = self.client.next_chunk(req);
+        // One reply consumed (or the connection is dead and every slot
+        // is moot): release the pipeline slot on every path.
+        let _ = self.submitted.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+            n.checked_sub(1)
+        });
+        let values = single_chunk(chunk?)?;
+        self.metrics.add(&self.metrics.numbers_delivered, values.len() as u64);
+        Ok(values)
     }
 
     fn check_fill(&self, numbers: u64) -> Result<(), Error> {
@@ -355,6 +602,13 @@ impl RemoteSource {
     }
 }
 
+/// The cancel action behind a remote [`CancelHandle`]: best-effort wire
+/// CANCEL, `true` only means the frame was sent (the authoritative
+/// outcome arrives as the fill's reply chunks).
+fn cancel_remote(client: &Weak<RemoteClient>, req: u64) -> bool {
+    client.upgrade().is_some_and(|c| c.cancel(req).is_ok())
+}
+
 impl StreamSource for RemoteSource {
     fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
         if stream >= self.info.n_streams {
@@ -364,7 +618,8 @@ impl StreamSource for RemoteSource {
             return Ok(());
         }
         self.check_fill(out.len() as u64)?;
-        let values = self.client()?.fill(ReqTarget::Stream(stream), out.len() as u64)?;
+        let values =
+            self.client.fill(&self.request(ReqTarget::Stream(stream), out.len()))?;
         if values.len() != out.len() {
             return Err(Error::Protocol(format!(
                 "fill delivered {} of {} numbers",
@@ -388,7 +643,7 @@ impl StreamSource for RemoteSource {
             return Ok(Vec::new());
         }
         self.check_fill(numbers)?;
-        let values = self.client()?.fill(ReqTarget::Group(group), rows as u64)?;
+        let values = self.client.fill(&self.request(ReqTarget::Group(group), rows))?;
         if values.len() as u64 != numbers {
             return Err(Error::Protocol(format!(
                 "block fill delivered {} of {numbers} numbers",
@@ -410,24 +665,22 @@ impl StreamSource for RemoteSource {
             // block per group for a zero-row batch.
             return Ok(vec![Vec::new(); n_groups]);
         }
-        let mut client = self.client()?;
         // Pipelined with a bounded client-side window: several fills on
         // the wire at once (the server overlaps them through its
         // completion queue), but never more than FETCH_MANY_PIPELINE
         // unharvested. Submitting ALL groups before reading anything
         // would deadlock at scale: the server stops reading once its
         // per-session window fills, this side blocks writing the
-        // remaining FILL frames, and neither ever reads. Responses
-        // arrive strictly in submission order (the session admits
-        // chunks that way), so FIFO harvesting keeps blocks in group
-        // order.
+        // remaining FILL frames, and neither ever reads. Replies are
+        // keyed by request id, so concurrent callers on other threads
+        // interleave harmlessly.
         let mut blocks = Vec::with_capacity(n_groups);
         let mut first_err = None;
         let mut inflight = VecDeque::with_capacity(FETCH_MANY_PIPELINE);
-        let mut collect = |client: &mut RemoteClient, req: u64| -> Result<(), Error> {
+        let mut collect = |req: u64| -> Result<(), Error> {
             // Every reply is read even past a failure — the connection
             // must drain clean for the next call.
-            let chunk = client.next_chunk(req)?;
+            let chunk = self.client.next_chunk(req)?;
             match chunk.result {
                 Ok(values) => blocks.push(values),
                 Err(e) => {
@@ -442,14 +695,14 @@ impl StreamSource for RemoteSource {
         for g in 0..n_groups {
             if inflight.len() == FETCH_MANY_PIPELINE {
                 let req = inflight.pop_front().expect("non-empty window");
-                collect(&mut client, req)?;
+                collect(req)?;
             }
-            inflight.push_back(client.submit_fill(ReqTarget::Group(g), rows as u64, 1)?);
+            inflight
+                .push_back(self.client.submit_fill(&self.request(ReqTarget::Group(g), rows), 1)?);
         }
         while let Some(req) = inflight.pop_front() {
-            collect(&mut client, req)?;
+            collect(req)?;
         }
-        drop(client);
         if let Some(e) = first_err {
             // A local fetch_many is all-or-nothing across groups; over
             // the wire it is only per-group atomic. If some groups
@@ -489,7 +742,7 @@ impl StreamSource for RemoteSource {
     }
 
     fn spec(&self, stream: u64) -> Option<StreamSpec> {
-        self.client.lock().ok()?.lease(ReqTarget::Stream(stream)).ok().flatten()
+        self.client.lease(ReqTarget::Stream(stream)).ok().flatten()
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -505,9 +758,7 @@ impl Drop for RemoteSource {
     fn drop(&mut self) {
         // Best-effort goodbye so the server tears the session down
         // promptly; never block in drop waiting for the acknowledgement.
-        if let Ok(client) = self.client.get_mut() {
-            client.bye_nowait();
-        }
+        self.client.bye_nowait();
     }
 }
 
@@ -517,6 +768,7 @@ impl std::fmt::Debug for RemoteSource {
             .field("server_engine", &self.info.engine)
             .field("n_streams", &self.info.n_streams)
             .field("group_width", &self.info.group_width)
+            .field("default_deadline", &self.deadline)
             .finish()
     }
 }

@@ -1,21 +1,32 @@
 //! Reusable load generator: hammer a serving endpoint from N concurrent
-//! connections and report delivered GRN/s — the client half of the
-//! `serve`/`loadgen` CLI pair, the serve benchmark row, and the CI
-//! loopback smoke test.
+//! connections and report delivered GRN/s plus per-fill latency
+//! percentiles — the client half of the `serve`/`loadgen` CLI pair, the
+//! serve benchmark row, and the CI loopback smoke test.
 //!
 //! Each connection leases one group (round-robin over the server's
-//! groups), drains its share through a single chunked FILL (so the
-//! server pipelines `window` sub-requests per session), and verifies
-//! exactly-once in-order delivery as it goes: chunk seqs must arrive as
-//! exactly `0..repeat` with `last` on the final chunk and every chunk
-//! full-size — a lost, duplicated, or reordered sub-request fails the
-//! run with a typed error.
+//! groups) and drains its share through a sequence of chunked FILLs
+//! (so the server pipelines `window` sub-requests per session and every
+//! fill yields one latency sample), verifying exactly-once in-order
+//! delivery as it goes: chunk seqs must arrive as exactly `0..repeat`
+//! with `last` on the final chunk and every delivered chunk full-size —
+//! a lost, duplicated, or reordered sub-request fails the run with a
+//! typed error.
+//!
+//! The lifecycle knobs exercise the request-lifecycle API end to end:
+//! [`LoadgenConfig::deadline_ms`] puts a deadline on every FILL
+//! (sub-requests the server cannot start in time come back as typed
+//! `DeadlineExceeded` chunks, counted in the report), and
+//! [`LoadgenConfig::cancel_storm`] cancels every second fill right
+//! after submitting it — the delivered chunks of a cancelled fill must
+//! still be a contiguous, bit-exact prefix followed only by `Cancelled`
+//! chunks, and the server must tear every session down cleanly.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::ReqTarget;
+use crate::coordinator::{ReqTarget, Request};
 use crate::error::Error;
 use crate::serve::client::RemoteClient;
+use crate::util::bench;
 
 /// What to throw at the server.
 #[derive(Debug, Clone)]
@@ -31,6 +42,19 @@ pub struct LoadgenConfig {
     /// chunk hint. Clamped so one sub-request fits the server's
     /// `max_fill`.
     pub chunk_rows: u32,
+    /// Sequential FILLs each connection splits its share across — each
+    /// is one latency sample for the report's percentiles. Default 8.
+    pub fills_per_conn: u32,
+    /// Deadline carried on every FILL, in milliseconds (0 = none).
+    /// Sub-requests the server cannot start in time resolve as typed
+    /// retryable `DeadlineExceeded` chunks, tallied in
+    /// [`LoadgenReport::expired_chunks`].
+    pub deadline_ms: u64,
+    /// Cancel every second fill immediately after submitting it (the
+    /// cancel-storm smoke): its delivered chunks must stay a
+    /// contiguous prefix, the rest arriving as `Cancelled` chunks
+    /// (tallied in [`LoadgenReport::cancelled_chunks`]).
+    pub cancel_storm: bool,
     /// Total budget for connect retries — the server may still be
     /// binding when loadgen starts (the CI smoke test races them).
     /// Default 10 s.
@@ -44,6 +68,9 @@ impl Default for LoadgenConfig {
             connections: 8,
             numbers_per_conn: 1 << 22,
             chunk_rows: 0,
+            fills_per_conn: 8,
+            deadline_ms: 0,
+            cancel_storm: false,
             connect_budget: Duration::from_secs(10),
         }
     }
@@ -56,16 +83,32 @@ pub struct LoadgenReport {
     pub connections: usize,
     /// Numbers delivered across all connections, verified exactly-once.
     pub numbers: u64,
-    /// Sub-request chunks delivered.
+    /// Sub-request chunks delivered with data.
     pub chunks: u64,
+    /// Chunks resolved as typed `Cancelled` errors (cancel storm).
+    pub cancelled_chunks: u64,
+    /// Chunks resolved as typed `DeadlineExceeded` errors.
+    pub expired_chunks: u64,
     /// Wall-clock seconds, connect to last BYE_ACK.
     pub seconds: f64,
+    /// Per-fill service latency samples in seconds (submit → final
+    /// chunk), one per fully-serviced fill; cancelled and expired
+    /// fills are excluded so the percentiles describe served work,
+    /// not time-to-fail-fast.
+    pub fill_latencies_s: Vec<f64>,
 }
 
 impl LoadgenReport {
     /// Delivered giga-random-numbers per second (the paper's GRN/s).
     pub fn grn_per_s(&self) -> f64 {
         self.numbers as f64 / self.seconds / 1e9
+    }
+
+    /// A per-fill latency percentile in seconds (`NaN` with no
+    /// samples) — `p50`/`p95`/`p99` are what the CLI and the bench
+    /// report.
+    pub fn latency_percentile(&self, pct: f64) -> f64 {
+        bench::percentile(&self.fill_latencies_s, pct)
     }
 }
 
@@ -84,6 +127,102 @@ fn connect_retry(addr: &str, budget: Duration) -> Result<RemoteClient, Error> {
     }
 }
 
+/// What one connection tallied.
+struct ConnResult {
+    numbers: u64,
+    chunks: u64,
+    cancelled: u64,
+    expired: u64,
+    latencies_s: Vec<f64>,
+}
+
+/// Drive one connection: lease its group, run `fills` sequential
+/// chunked FILLs (cancelling every second one under the storm), verify
+/// ordering/shape, tally outcomes.
+fn run_conn(
+    client: &RemoteClient,
+    cfg: &LoadgenConfig,
+    group: usize,
+    chunk_rows: u64,
+    per_chunk: u64,
+    fills: u32,
+    repeat: u32,
+) -> Result<ConnResult, Error> {
+    client.lease(ReqTarget::Group(group))?;
+    let request = Request::group(group)
+        .rows(chunk_rows as usize)
+        .deadline_opt((cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)));
+    let mut out = ConnResult {
+        numbers: 0,
+        chunks: 0,
+        cancelled: 0,
+        expired: 0,
+        latencies_s: Vec::with_capacity(fills as usize),
+    };
+    for fill_idx in 0..fills {
+        let storm_cancel = cfg.cancel_storm && fill_idx % 2 == 1;
+        let t_fill = Instant::now();
+        let req = client.submit_fill(&request, repeat)?;
+        if storm_cancel {
+            client.cancel(req)?;
+        }
+        let mut fill_cancelled = 0u64;
+        let mut fill_expired = 0u64;
+        for expect_seq in 0..repeat {
+            let chunk = client.next_chunk(req)?;
+            if chunk.seq != expect_seq {
+                return Err(Error::Protocol(format!(
+                    "chunk seq {} delivered where {expect_seq} was due \
+                     (lost, duplicated, or reordered sub-request)",
+                    chunk.seq
+                )));
+            }
+            if chunk.last != (expect_seq + 1 == repeat) {
+                return Err(Error::Protocol(format!(
+                    "last-chunk flag out of place at seq {expect_seq}"
+                )));
+            }
+            match chunk.result {
+                Ok(values) => {
+                    if fill_cancelled > 0 {
+                        // The atomic server-side cancel sweep guarantees
+                        // the delivered chunks form a contiguous prefix.
+                        return Err(Error::Protocol(format!(
+                            "DATA chunk at seq {expect_seq} after a Cancelled chunk \
+                             (cancelled fill delivered a non-contiguous prefix)"
+                        )));
+                    }
+                    if values.len() as u64 != per_chunk {
+                        return Err(Error::Protocol(format!(
+                            "chunk of {} numbers where {per_chunk} were due",
+                            values.len()
+                        )));
+                    }
+                    out.numbers += values.len() as u64;
+                    out.chunks += 1;
+                }
+                Err(Error::Cancelled) if storm_cancel => {
+                    fill_cancelled += 1;
+                }
+                Err(Error::DeadlineExceeded) if cfg.deadline_ms > 0 => {
+                    fill_expired += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        out.cancelled += fill_cancelled;
+        out.expired += fill_expired;
+        // Only fully-serviced fills are latency samples: a cancelled or
+        // expired fill measures time-to-fail-fast, and folding that in
+        // would understate the served-work percentiles exactly when the
+        // deadline bites.
+        if fill_cancelled == 0 && fill_expired == 0 {
+            out.latencies_s.push(t_fill.elapsed().as_secs_f64());
+        }
+    }
+    Ok(out)
+}
+
 /// Run the load and verify exactly-once delivery (see the module docs).
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     if cfg.connections == 0 {
@@ -100,14 +239,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     let hint = if cfg.chunk_rows == 0 { info.chunk_rows } else { cfg.chunk_rows };
     let chunk_rows = u64::from(hint).clamp(1, (info.max_fill / width).max(1));
     let per_chunk = chunk_rows * width;
+    let fills = cfg.fills_per_conn.max(1);
     let repeat: u32 = cfg
         .numbers_per_conn
-        .div_ceil(per_chunk)
+        .div_ceil(per_chunk.saturating_mul(u64::from(fills)))
         .max(1)
         .try_into()
         .map_err(|_| {
             Error::InvalidConfig(
-                "workload needs more than 2^32 chunks per connection; raise chunk_rows"
+                "workload needs more than 2^32 chunks per fill; raise chunk_rows or fills"
                     .into(),
             )
         })?;
@@ -115,44 +255,20 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     let info = &info;
     let mut first = Some(first);
     let t0 = Instant::now();
-    let results: Vec<Result<(u64, u64), Error>> = std::thread::scope(|s| {
+    let results: Vec<Result<ConnResult, Error>> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for i in 0..cfg.connections {
             let pre = first.take();
-            handles.push(s.spawn(move || -> Result<(u64, u64), Error> {
-                let mut client = match pre {
+            handles.push(s.spawn(move || -> Result<ConnResult, Error> {
+                let client = match pre {
                     Some(client) => client,
                     None => connect_retry(&cfg.addr, cfg.connect_budget)?,
                 };
                 let group = (i as u64 % info.n_groups) as usize;
-                client.lease(ReqTarget::Group(group))?;
-                let req = client.submit_fill(ReqTarget::Group(group), chunk_rows, repeat)?;
-                let mut numbers = 0u64;
-                for expect_seq in 0..repeat {
-                    let chunk = client.next_chunk(req)?;
-                    if chunk.seq != expect_seq {
-                        return Err(Error::Protocol(format!(
-                            "chunk seq {} delivered where {expect_seq} was due \
-                             (lost, duplicated, or reordered sub-request)",
-                            chunk.seq
-                        )));
-                    }
-                    if chunk.last != (expect_seq + 1 == repeat) {
-                        return Err(Error::Protocol(format!(
-                            "last-chunk flag out of place at seq {expect_seq}"
-                        )));
-                    }
-                    let values = chunk.result?;
-                    if values.len() as u64 != per_chunk {
-                        return Err(Error::Protocol(format!(
-                            "chunk of {} numbers where {per_chunk} were due",
-                            values.len()
-                        )));
-                    }
-                    numbers += values.len() as u64;
-                }
+                let out =
+                    run_conn(&client, cfg, group, chunk_rows, per_chunk, fills, repeat)?;
                 client.bye()?;
-                Ok((numbers, u64::from(repeat)))
+                Ok(out)
             }));
         }
         handles
@@ -165,12 +281,22 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     });
     let seconds = t0.elapsed().as_secs_f64();
 
-    let mut numbers = 0u64;
-    let mut chunks = 0u64;
+    let mut report = LoadgenReport {
+        connections: cfg.connections,
+        numbers: 0,
+        chunks: 0,
+        cancelled_chunks: 0,
+        expired_chunks: 0,
+        seconds,
+        fill_latencies_s: Vec::new(),
+    };
     for r in results {
-        let (n, c) = r?;
-        numbers += n;
-        chunks += c;
+        let c = r?;
+        report.numbers += c.numbers;
+        report.chunks += c.chunks;
+        report.cancelled_chunks += c.cancelled;
+        report.expired_chunks += c.expired;
+        report.fill_latencies_s.extend(c.latencies_s);
     }
-    Ok(LoadgenReport { connections: cfg.connections, numbers, chunks, seconds })
+    Ok(report)
 }

@@ -29,12 +29,23 @@
 //!   remote streams unchanged ([`RemoteClient`] is the lower-level
 //!   pipelined connection).
 //! * [`protocol`] defines the length-prefixed little-endian frames
-//!   (HELLO/WELCOME negotiation, LEASE, chunked FILL→DATA/ERR, BYE) —
-//!   every [`Error`](crate::Error) variant crosses the wire typed,
-//!   retryable backpressure included.
+//!   (HELLO/WELCOME negotiation, LEASE, chunked FILL→DATA/ERR with a
+//!   per-fill deadline, CANCEL, BYE) — every [`Error`](crate::Error)
+//!   variant crosses the wire typed, retryable backpressure and the
+//!   lifecycle errors (`Cancelled`, `DeadlineExceeded`) included.
 //! * [`loadgen`] is the reusable N-connection load driver behind the
 //!   `loadgen` CLI command, the serve benchmark row, and the CI smoke
-//!   test.
+//!   test — it reports per-fill latency percentiles and can run with
+//!   deadlines and a cancel storm.
+//!
+//! **Request lifecycle over the wire.** The completion front's
+//! deadline/cancellation contract (DESIGN.md "Request lifecycle")
+//! extends through the socket: a FILL's deadline rides the frame and is
+//! enforced by the server's queue, a CANCEL frame aborts a fill's
+//! not-yet-executed sub-requests in one atomic sweep, and either way
+//! every sub-request answers with exactly one DATA/ERR frame in seq
+//! order — a cancelled or expired sub-request consumed no stream state,
+//! so the delivered chunks always form a contiguous, bit-exact prefix.
 //!
 //! **Determinism over the wire.** The bytes a client reads are exactly
 //! the scalar replay of the server's streams: requests execute through

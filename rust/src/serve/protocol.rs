@@ -13,9 +13,10 @@
 //! | `WELCOME` | s→c | version, engine str, n_streams, n_groups, group_width, chunk_rows, max_fill |
 //! | `LEASE`   | c→s | req id, target                                               |
 //! | `LEASED`  | s→c | req id, leaf `h` (`u64`), `xs_origin` (`4 × u32`)            |
-//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`                     |
+//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`, deadline_ms `u64` (0 = none) |
 //! | `DATA`    | s→c | req id, seq `u32`, last `u8`, count `u32`, values (`count × u32`) |
 //! | `ERR`     | s→c | req id, seq, last, error code `u16` + 2×`u64` + message str  |
+//! | `CANCEL`  | c→s | req id — abort the fill's not-yet-executed sub-requests      |
 //! | `BYE`     | c→s | (empty)                                                      |
 //! | `BYE_ACK` | s→c | (empty)                                                      |
 //!
@@ -29,7 +30,9 @@ use crate::coordinator::ReqTarget;
 use crate::error::Error;
 
 /// Protocol version spoken by this crate (negotiated in HELLO/WELCOME).
-pub const VERSION: u16 = 1;
+/// v2 added the request-lifecycle surface: the FILL deadline field and
+/// the CANCEL frame.
+pub const VERSION: u16 = 2;
 
 /// Connection magic, first bytes of every HELLO.
 pub const MAGIC: [u8; 4] = *b"THNG";
@@ -55,6 +58,7 @@ const K_DATA: u8 = 6;
 const K_ERR: u8 = 7;
 const K_BYE: u8 = 8;
 const K_BYE_ACK: u8 = 9;
+const K_CANCEL: u8 = 10;
 
 /// One decoded wire frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,7 +105,8 @@ pub enum Frame {
     },
     /// Fetch `repeat` consecutive sub-requests of `rows` rows each from
     /// `target`; answered by exactly `repeat` DATA/ERR frames in seq
-    /// order.
+    /// order (a cancelled or expired sub-request answers as a typed
+    /// ERR — the reply count never changes).
     Fill {
         /// Client-chosen request id, echoed on every reply chunk.
         req: u64,
@@ -112,6 +117,31 @@ pub enum Frame {
         rows: u64,
         /// Sub-requests in this fill (≥ 1).
         repeat: u32,
+        /// Milliseconds the fill may wait for service before its
+        /// remaining sub-requests expire as retryable
+        /// `DeadlineExceeded` ERR chunks (0 = no deadline). The clock
+        /// is the server's monotonic clock, started when the FILL is
+        /// read off the socket.
+        deadline_ms: u64,
+    },
+    /// Abort a fill's not-yet-executed sub-requests (client → server).
+    /// Best-effort and idempotent: sub-requests already executed (or
+    /// executing) deliver their real DATA; the rest resolve as
+    /// `Cancelled` ERR chunks. Delivered chunks always form a
+    /// contiguous prefix of the fill.
+    ///
+    /// Frames are processed in order by one reader per session, so a
+    /// CANCEL takes effect only once the preceding FILL's submission
+    /// loop has finished — and that loop blocks while the session
+    /// window is full of frames the client is not reading. A client
+    /// that wants responsive cancellation should keep reading replies
+    /// (the window then never blocks for long), split huge fills
+    /// across several FILLs, or — the hard abort — close the
+    /// connection, which makes the server abandon the fill's
+    /// unsubmitted remainder outright.
+    Cancel {
+        /// The FILL's request id.
+        req: u64,
     },
     /// One successful sub-request's numbers.
     Data {
@@ -155,6 +185,7 @@ pub(crate) fn frame_name(frame: &Frame) -> &'static str {
         Frame::Fill { .. } => "FILL",
         Frame::Data { .. } => "DATA",
         Frame::Err { .. } => "ERR",
+        Frame::Cancel { .. } => "CANCEL",
         Frame::Bye => "BYE",
         Frame::ByeAck => "BYE_ACK",
     }
@@ -205,6 +236,8 @@ fn put_error(buf: &mut Vec<u8>, e: &Error) {
         Error::Backend(m) => (5, 0, 0, m.as_str()),
         Error::UnknownGenerator { name } => (6, 0, 0, name.as_str()),
         Error::Protocol(m) => (7, 0, 0, m.as_str()),
+        Error::Cancelled => (8, 0, 0, ""),
+        Error::DeadlineExceeded => (9, 0, 0, ""),
     };
     put_u16(buf, code);
     put_u64(buf, a);
@@ -221,6 +254,8 @@ fn decode_error(code: u16, a: u64, b: u64, msg: String) -> Error {
         5 => Error::Backend(msg),
         6 => Error::UnknownGenerator { name: msg },
         7 => Error::Protocol(msg),
+        8 => Error::Cancelled,
+        9 => Error::DeadlineExceeded,
         other => Error::Protocol(format!("unknown error code {other} ({msg:?})")),
     }
 }
@@ -268,12 +303,17 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
                 put_u32(&mut p, *x);
             }
         }
-        Frame::Fill { req, target, rows, repeat } => {
+        Frame::Fill { req, target, rows, repeat, deadline_ms } => {
             p.push(K_FILL);
             put_u64(&mut p, *req);
             put_target(&mut p, *target);
             put_u64(&mut p, *rows);
             put_u32(&mut p, *repeat);
+            put_u64(&mut p, *deadline_ms);
+        }
+        Frame::Cancel { req } => {
+            p.push(K_CANCEL);
+            put_u64(&mut p, *req);
         }
         Frame::Data { req, seq, last, values } => {
             p.reserve(18 + values.len() * 4);
@@ -426,7 +466,9 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             target: d.target()?,
             rows: d.u64()?,
             repeat: d.u32()?,
+            deadline_ms: d.u64()?,
         },
+        K_CANCEL => Frame::Cancel { req: d.u64()? },
         K_DATA => {
             let req = d.u64()?;
             let seq = d.u32()?;
@@ -495,7 +537,16 @@ mod tests {
             target: ReqTarget::Group(5),
             rows: 1024,
             repeat: 16,
+            deadline_ms: 0,
         });
+        roundtrip(Frame::Fill {
+            req: 10,
+            target: ReqTarget::Stream(3),
+            rows: 64,
+            repeat: 2,
+            deadline_ms: 2_500,
+        });
+        roundtrip(Frame::Cancel { req: 9 });
         roundtrip(Frame::Data { req: 9, seq: 3, last: false, values: vec![] });
         roundtrip(Frame::Data {
             req: 9,
@@ -517,6 +568,8 @@ mod tests {
             Error::Backend("shard 3 is gone".into()),
             Error::UnknownGenerator { name: "WELL".into() },
             Error::Protocol("short read".into()),
+            Error::Cancelled,
+            Error::DeadlineExceeded,
         ] {
             let retryable = e.is_retryable();
             let mut buf = Vec::new();

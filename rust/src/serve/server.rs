@@ -151,7 +151,11 @@ impl ServerShared {
 fn reactor_main(shared: &Arc<ServerShared>) {
     loop {
         let gen = *shared.reactor_gen.lock().unwrap_or_else(|e| e.into_inner());
-        while let Some(c) = shared.cq.wait_any() {
+        // No wait deadline: the reactor is the standing consumer, and
+        // wait_any's deadline-aware park sweeps queued request
+        // deadlines on its own, so expired fills resolve even on an
+        // otherwise idle server.
+        while let Ok(Some(c)) = shared.cq.wait_any(None) {
             shared.route_completion(c);
         }
         if shared.stop.load(Ordering::Acquire) {

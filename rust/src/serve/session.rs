@@ -26,14 +26,27 @@
 //! waits for the window to drain — only after every DATA/ERR frame is on
 //! the wire is BYE_ACK queued, so it is always the connection's final
 //! frame.
+//!
+//! **Request lifecycle on the wire.** A FILL's `deadline_ms` becomes
+//! one absolute monotonic deadline for every sub-request (fixed when
+//! the FILL is read, so a window-blocked submission loop cannot extend
+//! it); sub-requests still queued when it passes resolve as retryable
+//! `DeadlineExceeded` ERR chunks. A CANCEL frame aborts the named
+//! fill's not-yet-executed sub-requests in one atomic sweep
+//! ([`CompletionQueue::cancel_many`](crate::CompletionQueue::cancel_many)),
+//! so a cancelled fill's DATA chunks always form a contiguous prefix
+//! followed only by `Cancelled` ERR chunks. Either way every
+//! sub-request answers with exactly one frame, in seq order, through
+//! the same reorder stage — cancellation and expiry never change the
+//! reply count, and a dead sub-request consumed no stream state.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpStream};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{ReqTarget, StreamReq, Ticket};
+use crate::coordinator::{ReqTarget, Request, StreamReq, Ticket};
 use crate::error::Error;
 use crate::serve::protocol::{self, Frame};
 use crate::serve::server::{Route, ServerShared};
@@ -61,6 +74,12 @@ struct SessionState {
     /// Chunks routed ahead of their turn, parked until every earlier
     /// ticket's chunk has been admitted (bounded by the window).
     arrived: HashMap<Ticket, Reply>,
+    /// Per-request CANCEL index: this session's submitted-but-unrouted
+    /// tickets by client request id, so a wire CANCEL resolves in
+    /// O(window) against the session instead of scanning every
+    /// session's routes under the global routing lock. Entries are
+    /// pruned as chunks route and the whole map dies with the session.
+    inflight_by_req: HashMap<u64, Vec<Ticket>>,
     /// Sub-requests submitted and not yet written to the socket — the
     /// session's in-flight window occupancy.
     in_flight: usize,
@@ -109,6 +128,7 @@ impl Session {
                 queue: VecDeque::new(),
                 expected: VecDeque::new(),
                 arrived: HashMap::new(),
+                inflight_by_req: HashMap::new(),
                 in_flight: 0,
                 closing: false,
                 dead: false,
@@ -132,22 +152,44 @@ impl Session {
         self.reply_ready.notify_all();
     }
 
-    /// Record freshly submitted tickets in submission order (called
-    /// with the routing lock held, so no completion can race ahead of
-    /// the registration).
-    fn register_expected(&self, tickets: &[Ticket]) {
+    /// Record freshly submitted tickets of client request `req` — both
+    /// the submission-order admission queue and the CANCEL index —
+    /// (called with the routing lock held, so no completion can race
+    /// ahead of the registration).
+    fn register_expected(&self, req: u64, tickets: &[Ticket]) {
         let mut st = self.lock();
         st.expected.extend(tickets.iter().copied());
+        st.inflight_by_req.entry(req).or_default().extend_from_slice(tickets);
         st.admit_ready();
         drop(st);
         self.reply_ready.notify_all();
     }
 
+    /// This session's still-unrouted tickets of client request `req`
+    /// (the CANCEL index; stale entries are harmless — cancelling an
+    /// already-resolved ticket is a no-op).
+    pub(crate) fn req_tickets(&self, req: u64) -> Vec<Ticket> {
+        self.lock().inflight_by_req.get(&req).cloned().unwrap_or_default()
+    }
+
     /// Deliver one completed chunk: parked until every earlier ticket's
     /// chunk is admitted, so the wire carries sub-requests strictly in
-    /// submission order no matter which thread routed them.
+    /// submission order no matter which thread routed them. Routing a
+    /// chunk also retires the ticket from the CANCEL index.
     pub(crate) fn push_chunk(&self, ticket: Ticket, reply: Reply) {
+        let req = match &reply {
+            Reply::Chunk { req, .. } => Some(*req),
+            _ => None,
+        };
         let mut st = self.lock();
+        if let Some(req) = req {
+            if let Some(tickets) = st.inflight_by_req.get_mut(&req) {
+                tickets.retain(|t| *t != ticket);
+                if tickets.is_empty() {
+                    st.inflight_by_req.remove(&req);
+                }
+            }
+        }
         st.arrived.insert(ticket, reply);
         st.admit_ready();
         drop(st);
@@ -286,11 +328,14 @@ pub(crate) fn run_session(server: Arc<ServerShared>, sess: Arc<Session>) {
     let mut graceful = false;
     loop {
         match protocol::read_frame(&mut r) {
-            Ok(Some(Frame::Fill { req, target, rows, repeat })) => {
-                handle_fill(&server, &sess, req, target, rows, repeat);
+            Ok(Some(Frame::Fill { req, target, rows, repeat, deadline_ms })) => {
+                handle_fill(&server, &sess, req, target, rows, repeat, deadline_ms);
             }
             Ok(Some(Frame::Lease { req, target })) => {
                 handle_lease(&server, &sess, req, target);
+            }
+            Ok(Some(Frame::Cancel { req })) => {
+                handle_cancel(&server, &sess, req);
             }
             Ok(Some(Frame::Bye)) => {
                 graceful = true;
@@ -349,9 +394,33 @@ fn handle_lease(server: &Arc<ServerShared>, sess: &Arc<Session>, req: u64, targe
     sess.push_reply(reply);
 }
 
+/// Abort a fill's not-yet-executed sub-requests (wire CANCEL). The
+/// session's own per-request index resolves the ticket set in
+/// O(window) — a cancel storm must not serialize the whole server on a
+/// scan of the global routing map — and one atomic sweep over the
+/// completion queue cancels them, so the fill's executed / cancelled
+/// split is a clean submission-order prefix/suffix; the `Cancelled`
+/// completions route back through the normal reorder stage as ERR
+/// chunks. Best-effort and idempotent — an unknown or finished request
+/// id (or a ticket that resolved between lookup and sweep) cancels
+/// nothing.
+fn handle_cancel(server: &Arc<ServerShared>, sess: &Arc<Session>, req: u64) {
+    let mine = sess.req_tickets(req);
+    if !mine.is_empty() {
+        server.cq.cancel_many(&mine);
+        // The sweep queued Cancelled completions; make sure the parked
+        // reactor harvests them promptly.
+        server.nudge_reactor();
+    }
+}
+
 /// Validate a FILL, then submit its `repeat` sub-requests in
 /// window-bounded batches, registering every ticket's route before the
-/// batch goes in.
+/// batch goes in. `deadline_ms` (0 = none) fixes ONE absolute monotonic
+/// deadline for the whole fill at read time; each batch carries the
+/// remaining budget, so sub-requests submitted after a long
+/// window-blocked wait expire instead of silently stretching the fill.
+#[allow(clippy::too_many_arguments)]
 fn handle_fill(
     server: &Arc<ServerShared>,
     sess: &Arc<Session>,
@@ -359,6 +428,7 @@ fn handle_fill(
     target: ReqTarget,
     rows: u64,
     repeat: u32,
+    deadline_ms: u64,
 ) {
     let src = server.cq.source();
     // Target, size, and shape are all vetted here, so a rejected FILL is
@@ -400,6 +470,14 @@ fn handle_fill(
         ReqTarget::Stream(s) => StreamReq::stream(s, rows as usize),
         ReqTarget::Group(g) => StreamReq::group(g, rows as usize),
     };
+    // One absolute deadline for the whole fill, fixed now (checked_add:
+    // an absurd deadline_ms that overflows the monotonic clock means
+    // "no deadline", same as 0).
+    let limit: Option<Instant> = if deadline_ms == 0 {
+        None
+    } else {
+        Instant::now().checked_add(Duration::from_millis(deadline_ms))
+    };
 
     let mut seq: u32 = 0;
     let mut remaining = repeat as usize;
@@ -412,7 +490,13 @@ fn handle_fill(
             return;
         }
         let grant = sess.acquire_window(remaining, server.cfg.window);
-        let batch = vec![sub; grant];
+        // Remaining deadline budget for this batch: an already-expired
+        // limit becomes a zero deadline, so the sub-requests still
+        // submit and resolve as typed DeadlineExceeded ERR chunks — the
+        // reply count stays exactly `repeat` on every path.
+        let request = Request::from(sub)
+            .deadline_opt(limit.map(|l| l.saturating_duration_since(Instant::now())));
+        let batch = vec![request; grant];
         // Routes must exist before any completion can be harvested, so
         // the routing lock is held across the batched submit (the
         // reactor takes it only after `wait_any` returns, never while
@@ -433,9 +517,10 @@ fn handle_fill(
                         );
                         seq += 1;
                     }
-                    // Still under the routing lock: admission order must
-                    // be on record before any completion can be routed.
-                    sess.register_expected(&tickets);
+                    // Still under the routing lock: admission order and
+                    // the CANCEL index must be on record before any
+                    // completion can be routed.
+                    sess.register_expected(req, &tickets);
                     true
                 }
                 Err(e) => {
@@ -484,12 +569,15 @@ fn flush_session(server: &Arc<ServerShared>, sess: &Arc<Session>) {
         }
         let mut progress = false;
         for ticket in mine {
-            if let Some(c) = server.cq.wait_for(ticket) {
+            if let Ok(Some(c)) = server.cq.wait_for(ticket, None) {
                 server.route_completion(c);
                 progress = true;
             }
-            // None: the reactor harvested it and is routing it now; the
-            // rescan (and the window drain below) covers the handoff.
+            // Ok(None): the reactor harvested it and is routing it now;
+            // the rescan (and the window drain below) covers the
+            // handoff. (No wait deadline here — the flush must drive
+            // every ticket out; cancelled/expired tickets resolve as
+            // typed Err completions, so this always terminates.)
         }
         if !progress {
             std::thread::sleep(Duration::from_millis(1));

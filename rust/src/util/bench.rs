@@ -48,6 +48,12 @@ impl Measurement {
         percentile(&self.samples, 95.0)
     }
 
+    /// An arbitrary sample percentile (e.g. `99.0` for the tail the
+    /// serving layer's latency reports track).
+    pub fn percentile(&self, pct: f64) -> f64 {
+        percentile(&self.samples, pct)
+    }
+
     /// Items/second at the median sample.
     pub fn throughput(&self) -> f64 {
         if self.items_per_run == 0 {
@@ -127,7 +133,10 @@ impl JsonReport {
     }
 }
 
-fn percentile(samples: &[f64], pct: f64) -> f64 {
+/// Nearest-rank percentile of a sample set (`NaN` for an empty set) —
+/// shared by [`Measurement`] and the serving layer's per-fill latency
+/// reports.
+pub fn percentile(samples: &[f64], pct: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
@@ -205,6 +214,9 @@ mod tests {
         assert_eq!(m.median(), 3.0);
         assert_eq!(m.mean(), 3.0);
         assert_eq!(m.p95(), 5.0);
+        assert_eq!(m.percentile(99.0), 5.0);
+        assert_eq!(m.percentile(25.0), 2.0);
+        assert!(percentile(&[], 50.0).is_nan(), "empty sample set is NaN");
         assert!((m.throughput() - 10.0 / 3.0).abs() < 1e-12);
     }
 

@@ -2,12 +2,14 @@
 //! (proptest is unavailable offline; cases are driven by our own
 //! splitmix64 with fixed seeds, so failures are perfectly reproducible.)
 
+use std::time::Duration;
+
 use thundering::coordinator::StreamRegistry;
 use thundering::prng::lcg::{lcg_jump, lcg_step, LCG_A, LCG_C};
 use thundering::prng::thundering::leaf_h;
 use thundering::prng::xorshift::{pack, unpack, xs128_jump, xs128_step_packed};
-use thundering::prng::{splitmix64, Prng32, SplitMix64, ThunderingStream};
-use thundering::{Engine, EngineBuilder, Error, StreamSource};
+use thundering::prng::{splitmix64, Prng32, SplitMix64, ThunderingBatch, ThunderingStream};
+use thundering::{Engine, EngineBuilder, Error, Request, StreamSource};
 
 /// Property: any fetch schedule delivers each stream's exact scalar
 /// sequence, regardless of interleaving, chunk sizes, and group shape.
@@ -146,6 +148,144 @@ fn prop_engines_bit_identical_under_random_interleaving() {
                     let ra = native.fetch_many(rows);
                     let rb = sharded.fetch_many(rows);
                     assert_eq!(ra, rb, "case {case} op {op}: fetch_many({rows})");
+                }
+            }
+        }
+    }
+}
+
+/// What the lifecycle mix did to one submitted request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Fate {
+    /// Left alone (or armed with a deadline far too generous to fire):
+    /// must deliver `Ok`.
+    Normal,
+    /// Cancelled via its handle right after submission: resolves as
+    /// `Err(Cancelled)` — unless an engine worker won the race and
+    /// executed it first, in which case its real data is delivered.
+    Cancelled,
+    /// Armed with an already-expired deadline: the sweep retires it
+    /// before any executor can claim it, deterministically —
+    /// `Err(DeadlineExceeded)`, never data, never lost.
+    Expired,
+}
+
+/// Property (the request-lifecycle contract, both engines): a
+/// randomized mix of normal / cancelled / expired submissions across
+/// block- and lane-targeted groups preserves exactly-once delivery,
+/// per-group FIFO among the survivors, and bit-identical scalar replay
+/// of everything actually delivered — a dead request consumes no
+/// stream state, so the survivors' concatenation is always a
+/// contiguous oracle prefix.
+#[test]
+fn prop_lifecycle_mix_preserves_exactly_once_fifo_and_replay() {
+    let mut rng = SplitMix64::new(0x11F3_C1C1);
+    for engine in [Engine::Native, Engine::Sharded] {
+        for case in 0..4 {
+            let width = [2usize, 4][rng.next_u32() as usize % 2];
+            let n_groups = 2 + rng.next_u32() as usize % 3;
+            let rows_per_tile = [4usize, 8][rng.next_u32() as usize % 2];
+            let seed = rng.next_u64();
+            let cq = EngineBuilder::new((n_groups * width) as u64)
+                .engine(engine.clone())
+                .group_width(width)
+                .rows_per_tile(rows_per_tile)
+                .lag_window(u64::MAX / 2)
+                .root_seed(seed)
+                .build_completion()
+                .unwrap();
+
+            // Half the groups serve whole-group blocks, half a single
+            // fixed lane — so each group's Ok payloads concatenate to
+            // one well-defined scalar oracle prefix.
+            let lane_of: Vec<Option<u64>> = (0..n_groups)
+                .map(|g| {
+                    (rng.next_u32() % 2 == 0)
+                        .then(|| (g * width) as u64 + rng.next_u64() % width as u64)
+                })
+                .collect();
+
+            let mut submissions = Vec::new(); // ticket order == submission order
+            for _ in 0..40 {
+                let g = rng.next_u32() as usize % n_groups;
+                let rows = 1 + rng.next_u32() as usize % 20;
+                let base = match lane_of[g] {
+                    Some(lane) => Request::stream(lane).rows(rows),
+                    None => Request::group(g).rows(rows),
+                };
+                let (req, fate) = match rng.next_u32() % 4 {
+                    0 => (base, Fate::Cancelled),
+                    1 => (base.deadline(Duration::ZERO), Fate::Expired),
+                    2 => (base.deadline(Duration::from_secs(600)), Fate::Normal),
+                    _ => (base, Fate::Normal),
+                };
+                let (ticket, handle) = cq.submit(req).unwrap();
+                if fate == Fate::Cancelled {
+                    handle.cancel();
+                }
+                submissions.push((ticket, g, rows, fate));
+            }
+
+            let mut results = std::collections::HashMap::new();
+            for c in cq.wait_all(None) {
+                assert!(
+                    results.insert(c.ticket, c.result).is_none(),
+                    "case {case}: ticket delivered twice"
+                );
+            }
+            assert_eq!(
+                results.len(),
+                submissions.len(),
+                "case {case}: every ticket resolves exactly once"
+            );
+            assert_eq!(cq.outstanding(), 0);
+
+            // Replay every group's Ok payloads, in submission order,
+            // against its scalar oracle.
+            let mut block_oracles: Vec<ThunderingBatch> = (0..n_groups)
+                .map(|g| {
+                    ThunderingBatch::new(
+                        splitmix64(seed ^ g as u64),
+                        width,
+                        (g * width) as u64,
+                    )
+                })
+                .collect();
+            let mut lane_oracles: Vec<Option<ThunderingStream>> = (0..n_groups)
+                .map(|g| {
+                    lane_of[g]
+                        .map(|lane| ThunderingStream::new(splitmix64(seed ^ g as u64), lane))
+                })
+                .collect();
+            for (ticket, g, rows, fate) in submissions {
+                match results.remove(&ticket).expect("resolved above") {
+                    Ok(values) => {
+                        assert_ne!(
+                            fate,
+                            Fate::Expired,
+                            "case {case}: an already-expired request must never execute"
+                        );
+                        // Normal, or a cancel that lost the race to an
+                        // engine worker: either way the payload must be
+                        // the group's next contiguous oracle rows.
+                        let expect = match &mut lane_oracles[g] {
+                            Some(s) => (0..values.len()).map(|_| s.next_u32()).collect(),
+                            None => block_oracles[g].tile(rows),
+                        };
+                        assert_eq!(
+                            values, expect,
+                            "case {case}: survivor FIFO / replay broke on group {g}"
+                        );
+                    }
+                    Err(Error::Cancelled) => {
+                        assert_eq!(fate, Fate::Cancelled, "case {case}: spurious cancel")
+                    }
+                    Err(Error::DeadlineExceeded) => assert_eq!(
+                        fate,
+                        Fate::Expired,
+                        "case {case}: spurious expiry (600 s deadlines must not fire)"
+                    ),
+                    Err(e) => panic!("case {case}: unexpected error {e}"),
                 }
             }
         }

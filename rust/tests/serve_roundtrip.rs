@@ -6,12 +6,15 @@
 
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
 use thundering::serve::loadgen::{self, LoadgenConfig};
 use thundering::serve::protocol::{self, Frame};
 use thundering::serve::{RemoteClient, RemoteSource, ServeConfig, Server};
-use thundering::{Engine, EngineBuilder, Error, ReqTarget, StreamHandle, StreamSource};
+use thundering::{
+    Engine, EngineBuilder, Error, ReqTarget, Request, StreamHandle, StreamSource,
+};
 
 /// A source with the test shape: `groups × width` streams, seed 42.
 fn source(
@@ -148,14 +151,14 @@ fn typed_errors_cross_the_wire_including_retryable_backpressure() {
 #[test]
 fn chunked_fill_delivers_in_order_exactly_once() {
     let server = serve(source(Engine::Sharded, 2, 4, 4, u64::MAX / 2));
-    let mut client = RemoteClient::connect(server.local_addr()).unwrap();
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
     assert_eq!(client.info().n_streams, 8);
     client.lease(ReqTarget::Group(1)).unwrap();
 
     // One FILL, 5 sub-requests of 4 rows: chunks must arrive as seq
     // 0..5 with `last` only on the final one, and their concatenation
     // must equal 20 contiguous oracle rows.
-    let req = client.submit_fill(ReqTarget::Group(1), 4, 5).unwrap();
+    let req = client.submit_fill(&Request::group(1).rows(4), 5).unwrap();
     let mut all = Vec::new();
     for expect_seq in 0..5u32 {
         let chunk = client.next_chunk(req).unwrap();
@@ -182,7 +185,13 @@ fn bye_flushes_every_data_frame_before_the_ack() {
     ));
     protocol::write_frame(
         &mut sock,
-        &Frame::Fill { req: 9, target: ReqTarget::Group(0), rows: 4, repeat: 3 },
+        &Frame::Fill {
+            req: 9,
+            target: ReqTarget::Group(0),
+            rows: 4,
+            repeat: 3,
+            deadline_ms: 0,
+        },
     )
     .unwrap();
     protocol::write_frame(&mut sock, &Frame::Bye).unwrap();
@@ -269,6 +278,226 @@ fn loadgen_eight_connections_deliver_exactly_once() {
     // Every connection said BYE and was fully torn down.
     server.wait_sessions_closed(8);
     assert!(server.sessions_closed() >= 8);
+}
+
+/// One big fill (2²⁰ numbers, several ms of generation) that occupies
+/// its group while a second request queues behind it — the window the
+/// lifecycle tests race their cancels/deadlines into.
+const BIG_ROWS: usize = 1 << 18; // × width 4 = 2^20 numbers
+
+#[test]
+fn cancel_over_the_wire_resolves_typed_and_preserves_stream_state() {
+    // Fill A is large and claims the group; fill B queues behind it.
+    // CANCEL(B) is processed by the server's reader thread (µs) while A
+    // is still generating (ms), so B is almost surely still pending and
+    // resolves as a typed Cancelled chunk. The assertions also hold if
+    // B wins the race and executes: either way every chunk arrives, in
+    // order, and the stream state is consistent with exactly the DATA
+    // the client received — a cancelled fill consumes nothing.
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
+    let a = client.submit_fill(&Request::group(0).rows(BIG_ROWS), 1).unwrap();
+    let b = client.submit_fill(&Request::group(0).rows(4), 1).unwrap();
+    client.cancel(b).unwrap();
+
+    let chunk_a = client.next_chunk(a).unwrap();
+    assert_eq!((chunk_a.seq, chunk_a.last), (0, true));
+    assert_eq!(
+        chunk_a.result.unwrap(),
+        oracle_block(0, 4, 0, BIG_ROWS),
+        "fill A delivers the group's origin rows"
+    );
+    let chunk_b = client.next_chunk(b).unwrap();
+    let b_rows = match chunk_b.result {
+        Err(Error::Cancelled) => 0,
+        Ok(values) => {
+            // Cancel lost the race: B executed and must be bit-exact.
+            assert_eq!(values, oracle_block(0, 4, BIG_ROWS, 4));
+            4
+        }
+        Err(e) => panic!("unexpected error for the cancelled fill: {e}"),
+    };
+    // The stream cursor sits exactly past the delivered rows: a fresh
+    // fill continues seamlessly from there.
+    let next = client.submit_fill(&Request::group(0).rows(4), 1).unwrap();
+    assert_eq!(
+        client.next_chunk(next).unwrap().result.unwrap(),
+        oracle_block(0, 4, BIG_ROWS + b_rows, 4),
+        "post-cancel fill continues exactly after the delivered rows"
+    );
+    client.bye().unwrap();
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn cancelled_multi_chunk_fill_keeps_a_contiguous_prefix() {
+    // A chunked fill cancelled mid-flight: every one of its `repeat`
+    // chunks still arrives, in seq order, as a contiguous bit-exact
+    // DATA prefix followed only by Cancelled chunks (the server's
+    // atomic cancel sweep guarantees no DATA after the first Cancelled).
+    let server = serve(source(Engine::Sharded, 1, 4, 4, u64::MAX / 2));
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
+    let repeat = 32u32;
+    let req = client.submit_fill(&Request::group(0).rows(4), repeat).unwrap();
+    client.cancel(req).unwrap();
+    let mut delivered_rows = 0usize;
+    let mut cancelled = 0u32;
+    for expect_seq in 0..repeat {
+        let chunk = client.next_chunk(req).unwrap();
+        assert_eq!(chunk.seq, expect_seq, "in-order even under cancellation");
+        assert_eq!(chunk.last, expect_seq + 1 == repeat);
+        match chunk.result {
+            Ok(values) => {
+                assert_eq!(cancelled, 0, "DATA after a Cancelled chunk");
+                assert_eq!(
+                    values,
+                    oracle_block(0, 4, delivered_rows, 4),
+                    "prefix chunk {expect_seq} bit-exact"
+                );
+                delivered_rows += 4;
+            }
+            Err(Error::Cancelled) => cancelled += 1,
+            Err(e) => panic!("unexpected error at seq {expect_seq}: {e}"),
+        }
+    }
+    // The cancelled tail consumed nothing: the next fill continues at
+    // the prefix end.
+    let next = client.submit_fill(&Request::group(0).rows(4), 1).unwrap();
+    assert_eq!(
+        client.next_chunk(next).unwrap().result.unwrap(),
+        oracle_block(0, 4, delivered_rows, 4)
+    );
+    client.bye().unwrap();
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn expired_fill_resolves_typed_and_consumes_nothing_over_the_wire() {
+    // Fill A occupies the group for several ms; fill B carries a 1 ms
+    // deadline and queues behind it, so B's deadline passes before an
+    // executor can reach it — it resolves as a typed, retryable
+    // DeadlineExceeded chunk and consumes no stream state. (Should B
+    // ever win the race on a pathologically slow-clock host, the
+    // alternate arm still verifies bit-exactness.)
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
+    let a = client.submit_fill(&Request::group(0).rows(BIG_ROWS), 1).unwrap();
+    let b = client
+        .submit_fill(&Request::group(0).rows(4).deadline(Duration::from_millis(1)), 1)
+        .unwrap();
+    assert_eq!(
+        client.next_chunk(a).unwrap().result.unwrap(),
+        oracle_block(0, 4, 0, BIG_ROWS)
+    );
+    let b_rows = match client.next_chunk(b).unwrap().result {
+        Err(e) => {
+            assert_eq!(e, Error::DeadlineExceeded);
+            assert!(e.is_retryable(), "expiry must be retryable over the wire");
+            0
+        }
+        Ok(values) => {
+            assert_eq!(values, oracle_block(0, 4, BIG_ROWS, 4));
+            4
+        }
+    };
+    // Retrying (the whole point of the retryable classification)
+    // continues the sequence seamlessly.
+    let retry = client.submit_fill(&Request::group(0).rows(4), 1).unwrap();
+    assert_eq!(
+        client.next_chunk(retry).unwrap().result.unwrap(),
+        oracle_block(0, 4, BIG_ROWS + b_rows, 4)
+    );
+    client.bye().unwrap();
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn remote_submit_mirrors_the_local_lifecycle_surface() {
+    // RemoteSource::submit/wait/CancelHandle — the wire twin of
+    // CompletionQueue::submit. A generous deadline delivers normally;
+    // the cancel handle is cloneable and cancel-after-delivery is a
+    // harmless no-op.
+    let server = serve(source(Engine::Sharded, 2, 4, 4, u64::MAX / 2));
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    let (id, cancel) = remote
+        .submit(Request::group(1).rows(8).deadline(Duration::from_secs(60)))
+        .unwrap();
+    let _clone = cancel.clone();
+    assert_eq!(remote.wait(id).unwrap(), oracle_block(1, 4, 0, 8));
+    cancel.cancel(); // best-effort, already delivered — must not break anything
+    // Validation happens before anything touches the wire.
+    assert!(matches!(
+        remote.submit(Request::group(7).rows(1)).unwrap_err(),
+        Error::GroupOutOfRange { group: 7, have: 2 }
+    ));
+    // The async pipeline is bounded: submissions past the cap fail
+    // fast (typed) instead of wedging the connection against the
+    // server's session window, and waiting frees the slots.
+    let ids: Vec<u64> = (0..8)
+        .map(|_| remote.submit(Request::group(0).rows(2)).unwrap().0)
+        .collect();
+    assert!(matches!(
+        remote.submit(Request::group(0).rows(2)).unwrap_err(),
+        Error::InvalidConfig(_)
+    ));
+    let mut drained = 0usize;
+    for id in ids {
+        drained += remote.wait(id).unwrap().len();
+    }
+    assert_eq!(drained, 8 * 2 * 4, "all bounded submissions delivered");
+    remote.submit(Request::group(0).rows(2)).unwrap();
+    // The connection stays healthy for the synchronous surface.
+    assert_eq!(remote.fetch_block(1, 4).unwrap(), oracle_block(1, 4, 8, 4));
+}
+
+#[test]
+fn default_deadline_arms_the_synchronous_surface() {
+    // A RemoteSource with a generous default deadline serves the
+    // drop-in surface unchanged (the deadline rides every FILL).
+    let server = serve(source(Engine::Native, 2, 4, 4, u64::MAX / 2));
+    let remote = RemoteSource::connect(server.local_addr())
+        .unwrap()
+        .with_default_deadline(Duration::from_secs(60));
+    let mut buf = vec![0u32; 7];
+    remote.fetch(5, &mut buf).unwrap();
+    let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+    let expect: Vec<u32> = (0..7).map(|_| s.next_u32()).collect();
+    assert_eq!(buf, expect);
+    assert_eq!(remote.fetch_block(0, 4).unwrap(), oracle_block(0, 4, 0, 4));
+}
+
+#[test]
+fn loadgen_cancel_storm_and_deadline_survive_cleanly() {
+    // The CI cancel-storm shape in-process: every second fill of every
+    // connection is cancelled right after submission, all fills carry a
+    // generous deadline. Delivery invariants (seq order, contiguous
+    // prefixes) are verified inside the driver; here we check the
+    // accounting adds up and every session tears down cleanly.
+    let server = serve(source(Engine::Sharded, 4, 8, 16, u64::MAX / 2));
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 4,
+        numbers_per_conn: 8 * 16 * 8,
+        chunk_rows: 16,
+        fills_per_conn: 4,
+        deadline_ms: 60_000,
+        cancel_storm: true,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.connections, 4);
+    // Every chunk resolved exactly once, one way or another.
+    assert_eq!(
+        report.chunks + report.cancelled_chunks + report.expired_chunks,
+        4 * 4 * 2, // connections × fills × chunks-per-fill
+        "chunk accounting: {report:?}"
+    );
+    assert_eq!(report.numbers, report.chunks * 8 * 16, "delivered chunks are full-size");
+    assert!(
+        !report.fill_latencies_s.is_empty(),
+        "uncancelled fills produce latency samples"
+    );
+    server.wait_sessions_closed(4);
 }
 
 #[test]

@@ -164,7 +164,7 @@ fn completion_front_four_consumers_thirty_two_groups_exact_delivery() {
     let mut round_of: HashMap<Ticket, (usize, usize)> = HashMap::new();
     for round in 0..rounds {
         for g in 0..groups {
-            let t = cq.submit(StreamReq::group(g, rows)).unwrap();
+            let (t, _cancel) = cq.submit(StreamReq::group(g, rows)).unwrap();
             round_of.insert(t, (g, round));
         }
     }
@@ -181,9 +181,9 @@ fn completion_front_four_consumers_thirty_two_groups_exact_delivery() {
                 // Vary the harvest pattern per consumer: some poll
                 // first (pure harvest), all fall back to wait_any.
                 let c = if mine % 4 == k {
-                    cq.poll().or_else(|| cq.wait_any())
+                    cq.poll().or_else(|| cq.wait_any(None).unwrap())
                 } else {
-                    cq.wait_any()
+                    cq.wait_any(None).unwrap()
                 };
                 match c {
                     Some(c) => {

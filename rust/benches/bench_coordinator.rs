@@ -15,6 +15,29 @@ use thundering::serve::{ServeConfig, Server};
 use thundering::util::bench::{black_box, Bench, JsonReport};
 use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
 
+/// Server threads alive right now, by their `thng-` comm prefix — the
+/// O(cores) half of the scaling claim. Linux-only (reads /proc).
+#[cfg(target_os = "linux")]
+fn thng_thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|entries| {
+            entries
+                .filter_map(|e| {
+                    let stat = std::fs::read_to_string(e.ok()?.path().join("stat")).ok()?;
+                    let open = stat.find('(')?;
+                    let close = stat.rfind(')')?;
+                    stat[open + 1..close].starts_with("thng-").then_some(())
+                })
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn thng_thread_count() -> usize {
+    0
+}
+
 fn native(streams: u64, width: usize, rows: usize) -> Box<dyn StreamSource> {
     EngineBuilder::new(streams)
         .engine(Engine::Native)
@@ -183,6 +206,60 @@ fn main() {
         });
         drop(server);
 
+        // Multi-tenant scaling: N short sessions (default 1000, override
+        // with BENCH_SERVE_SESSIONS=n) against one readiness-loop server
+        // with two weighted QoS classes — the scaling claim is that the
+        // thread bill stays O(cores) while the session count grows two
+        // orders of magnitude, with per-fill p99 staying sane. Run once,
+        // not iterated: the report's own wall clock is the measurement.
+        // Needs an open-files limit above ~2N (CI raises ulimit -n).
+        let sessions: usize = std::env::var("BENCH_SERVE_SESSIONS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1000);
+        let scale_rows = 256u32;
+        let scale_fills = 4u32;
+        let scale_per_conn = u64::from(scale_rows) * width as u64 * u64::from(scale_fills);
+        let (scale_report, scale_threads) = {
+            let scale_source = EngineBuilder::new((n_groups * width) as u64)
+                .engine(Engine::Sharded)
+                .group_width(width)
+                .rows_per_tile(rows)
+                .lag_window(u64::MAX / 2)
+                .build_arc()
+                .unwrap();
+            let server = Server::start(
+                scale_source,
+                "127.0.0.1:0",
+                ServeConfig { qos_weights: vec![(1, 4), (2, 1)], ..ServeConfig::default() },
+            )
+            .unwrap();
+            let scale_cfg = LoadgenConfig {
+                addr: server.local_addr().to_string(),
+                connections: sessions,
+                numbers_per_conn: scale_per_conn,
+                chunk_rows: scale_rows,
+                fills_per_conn: scale_fills,
+                tags: vec![1, 2],
+                ..LoadgenConfig::default()
+            };
+            let report = loadgen::run(&scale_cfg).unwrap();
+            assert_eq!(
+                report.numbers,
+                scale_per_conn * sessions as u64,
+                "exactly-once across {sessions} sessions"
+            );
+            let threads = thng_thread_count();
+            (report, threads)
+        };
+        println!(
+            "serve/scale: {sessions} sessions  {:.3} GRN/s  p50 = {:.2} ms  \
+             p99 = {:.2} ms  server threads = {scale_threads}",
+            scale_report.grn_per_s(),
+            scale_report.latency_percentile(50.0) * 1e3,
+            scale_report.latency_percentile(99.0) * 1e3,
+        );
+
         let speedup = m_sharded.throughput() / m_single.throughput();
         let overlap_speedup = m_completion.throughput() / m_single.throughput();
         println!(
@@ -219,6 +296,14 @@ fn main() {
             rep.context_num("serve_fill_p99_ms", lg.latency_percentile(99.0) * 1e3);
             rep.context_num("serve_fills_sampled", lg.fill_latencies_s.len() as f64);
         }
+        // The multi-tenant scaling point: N sessions through O(cores)
+        // server threads, with the fair-drain p50/p99 across two QoS
+        // classes. `serve_scale_threads` is 0 off-Linux (no /proc).
+        rep.context_num("serve_scale_sessions", sessions as f64);
+        rep.context_num("serve_scale_grn_per_s", scale_report.grn_per_s());
+        rep.context_num("serve_scale_p50_ms", scale_report.latency_percentile(50.0) * 1e3);
+        rep.context_num("serve_scale_p99_ms", scale_report.latency_percentile(99.0) * 1e3);
+        rep.context_num("serve_scale_threads", scale_threads as f64);
         rep.push(&m_single);
         rep.push(&m_sharded);
         rep.push(&m_completion);

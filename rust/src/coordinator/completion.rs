@@ -986,6 +986,33 @@ impl CompletionQueue {
         }
     }
 
+    /// Harvest up to `max` completions: block (executing pending work
+    /// like [`wait_any`](Self::wait_any)) until the first one is
+    /// available, then drain whatever else is already resolved without
+    /// blocking again. An empty vec means nothing is outstanding — the
+    /// serving layer's reactor threads park on that instead of spinning.
+    ///
+    /// The blocking wait is deadline-aware (expired requests complete as
+    /// `DeadlineExceeded` on their own), so a caller looping on
+    /// `wait_batch` never needs a timeout of its own.
+    pub fn wait_batch(&self, max: usize) -> Result<Vec<Completion>, Error> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return Ok(out);
+        }
+        match self.wait_any(None)? {
+            None => return Ok(out),
+            Some(c) => out.push(c),
+        }
+        while out.len() < max {
+            match self.poll() {
+                Some(c) => out.push(c),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
     /// Park on the completion condvar until notified, the wait limit,
     /// or the earliest pending request deadline — whichever comes
     /// first. The timed wake is what turns queued deadlines into
@@ -1240,6 +1267,27 @@ mod tests {
         let c = cq.wait_any(None).unwrap().expect("wait_any executes");
         assert_eq!(c.result.unwrap(), oracle_block(1, 4, 0, 8));
         assert!(cq.wait_any(None).unwrap().is_none());
+    }
+
+    #[test]
+    fn wait_batch_blocks_for_one_then_drains_without_blocking() {
+        let cq = queue(Engine::Native, 32, 4, 8);
+        assert!(cq.wait_batch(64).unwrap().is_empty(), "idle queue returns empty");
+        let tickets: Vec<Ticket> =
+            (0..5usize).map(|g| sub(&cq, StreamReq::group(g, 8))).collect();
+        let mut got = Vec::new();
+        while got.len() < tickets.len() {
+            let batch = cq.wait_batch(64).unwrap();
+            assert!(!batch.is_empty(), "outstanding work must yield a batch");
+            got.extend(batch);
+        }
+        assert_eq!(got.len(), 5);
+        for c in got {
+            let g = tickets.iter().position(|&t| t == c.ticket).expect("known ticket");
+            assert_eq!(c.result.unwrap(), oracle_block(g as u64, 4, 0, 8));
+        }
+        assert!(cq.wait_batch(0).unwrap().is_empty(), "max 0 is a no-op");
+        assert!(cq.wait_batch(64).unwrap().is_empty(), "drained queue returns empty");
     }
 
     #[test]

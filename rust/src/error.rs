@@ -69,6 +69,18 @@ pub enum Error {
     /// state, so resubmitting with a fresh deadline is always safe —
     /// which is why this variant *is* retryable.
     DeadlineExceeded,
+    /// The serving layer's per-tenant admission control rejected the
+    /// request: admitting it would push the tenant's in-flight
+    /// sub-request count past its quota. The rejected request consumed
+    /// no stream state, so retrying once earlier work drains is always
+    /// safe — this is the multi-tenant analogue of
+    /// [`Error::LagWindowExceeded`].
+    QuotaExceeded {
+        /// The tenant's in-flight sub-request count at rejection time.
+        in_flight: u64,
+        /// The configured per-tenant bound.
+        quota: u64,
+    },
 }
 
 impl Error {
@@ -79,12 +91,20 @@ impl Error {
     /// backpressure signal, cleared as soon as the group's slow lanes
     /// catch up. [`Error::DeadlineExceeded`] qualifies too: an expired
     /// request (or wait) consumed nothing, so resubmitting with a fresh
-    /// deadline continues the stream seamlessly. Every other variant is
-    /// persistent — retrying an unknown stream or a dead backend returns
-    /// the same error, and retrying a [`Error::Cancelled`] request would
-    /// undo a deliberate caller decision.
+    /// deadline continues the stream seamlessly. So does
+    /// [`Error::QuotaExceeded`]: admission control rejected the request
+    /// whole, and the tenant's earlier work draining clears it. Every
+    /// other variant is persistent — retrying an unknown stream or a
+    /// dead backend returns the same error, and retrying a
+    /// [`Error::Cancelled`] request would undo a deliberate caller
+    /// decision.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, Error::LagWindowExceeded { .. } | Error::DeadlineExceeded)
+        matches!(
+            self,
+            Error::LagWindowExceeded { .. }
+                | Error::DeadlineExceeded
+                | Error::QuotaExceeded { .. }
+        )
     }
 }
 
@@ -108,6 +128,9 @@ impl std::fmt::Display for Error {
             Error::Protocol(msg) => write!(f, "protocol: {msg}"),
             Error::Cancelled => write!(f, "request cancelled before execution"),
             Error::DeadlineExceeded => write!(f, "deadline exceeded before service"),
+            Error::QuotaExceeded { in_flight, quota } => {
+                write!(f, "tenant quota exceeded ({in_flight} in flight, quota {quota})")
+            }
         }
     }
 }
@@ -130,6 +153,8 @@ mod tests {
         assert!(Error::LagWindowExceeded { lead: 2, window: 1 }.is_retryable());
         // An expired request consumed nothing — resubmission is safe.
         assert!(Error::DeadlineExceeded.is_retryable());
+        // A quota rejection consumed nothing either — retry after drain.
+        assert!(Error::QuotaExceeded { in_flight: 9, quota: 8 }.is_retryable());
         // A cancellation is a deliberate caller decision, not transient.
         assert!(!Error::Cancelled.is_retryable());
         assert!(!Error::UnknownStream { stream: 9, have: 8 }.is_retryable());

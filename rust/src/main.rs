@@ -37,7 +37,7 @@ const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
     "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
     "connections", "sessions", "window", "chunk-rows", "numbers", "deadline-ms",
-    "fills",
+    "fills", "workers", "quota", "tags",
 ];
 
 /// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
@@ -100,8 +100,8 @@ fn usage() -> String {
      pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--deadline-ms N] [--artifacts DIR]\n  \
-     serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N]\n  \
-     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--cancel-storm]\n  \
+     serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N] [--workers N] [--quota N]\n  \
+     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--tags A,B,..] [--cancel-storm]\n  \
      fpga-model  --n INSTANCES"
         .to_string()
 }
@@ -152,9 +152,21 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
         "throughput" => {
             (with_engine_opts(&["streams", "rows", "deadline-ms"]), &["completion"], 0)
         }
-        "serve" => (with_engine_opts(&["addr", "streams", "sessions", "window"]), &[], 0),
+        "serve" => (
+            with_engine_opts(&["addr", "streams", "sessions", "window", "workers", "quota"]),
+            &[],
+            0,
+        ),
         "loadgen" => (
-            vec!["addr", "connections", "numbers", "chunk-rows", "fills", "deadline-ms"],
+            vec![
+                "addr",
+                "connections",
+                "numbers",
+                "chunk-rows",
+                "fills",
+                "deadline-ms",
+                "tags",
+            ],
             &["cancel-storm"],
             0,
         ),
@@ -449,6 +461,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let width = source.group_width();
     let cfg = ServeConfig {
         window: args.get_usize("window", ServeConfig::default().window)?,
+        workers: args.get_usize("workers", 0)?,
+        quota: args.get_u64("quota", 0)?,
         ..ServeConfig::default()
     };
     let mut server = Server::start(source, addr, cfg)?;
@@ -480,6 +494,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .get_u64("fills", 8)?
         .try_into()
         .map_err(|_| anyhow::anyhow!("--fills must fit in 32 bits"))?;
+    let tags: Vec<u64> = match args.get("tags") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("bad --tags entry {s:?} (want u64 list)"))
+            })
+            .collect::<Result<_>>()?,
+    };
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7777").to_string(),
         connections: args.get_usize("connections", 8)?,
@@ -488,6 +514,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         fills_per_conn,
         deadline_ms: args.get_u64("deadline-ms", 0)?,
         cancel_storm: args.flag("cancel-storm"),
+        tags,
         ..LoadgenConfig::default()
     };
     let report = thundering::serve::loadgen::run(&cfg)?;

@@ -30,8 +30,9 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Mutex, MutexGuard, Weak};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, Weak};
+use std::time::Duration;
 
 use crate::coordinator::{
     CancelHandle, Metrics, MetricsSnapshot, ReqTarget, Request, StreamSource, StreamSpec,
@@ -79,8 +80,9 @@ struct ReadHalf {
     /// Fill chunks read while looking for a different request's chunk
     /// (the connection multiplexes any number of in-flight fills).
     chunks: HashMap<u64, VecDeque<Chunk>>,
-    /// Lease grants read while looking for something else.
-    leases: HashMap<u64, (u64, [u32; 4])>,
+    /// Lease grants read while looking for something else:
+    /// `req → (h, xs_origin, server row cursor)`.
+    leases: HashMap<u64, (u64, [u32; 4], u64)>,
 }
 
 /// The socket's write side plus the request-id counter.
@@ -90,6 +92,18 @@ struct WriteHalf {
 }
 
 impl WriteHalf {
+    /// Allocate the next request id, never the reserved connection-level
+    /// sentinel (`CONNECTION_REQ = u64::MAX`) — the server rejects
+    /// client frames carrying it at decode time.
+    fn alloc_req(&mut self) -> u64 {
+        if self.next_req == protocol::CONNECTION_REQ {
+            self.next_req = 0;
+        }
+        let req = self.next_req;
+        self.next_req += 1;
+        req
+    }
+
     fn send(&mut self, frame: &Frame) -> Result<(), Error> {
         protocol::write_frame(&mut self.w, frame)?;
         self.w.flush().map_err(protocol::io_protocol)
@@ -119,6 +133,7 @@ pub struct RemoteClient {
     read: Mutex<ReadHalf>,
     write: Mutex<WriteHalf>,
     info: ServerInfo,
+    peer: SocketAddr,
 }
 
 impl RemoteClient {
@@ -128,6 +143,9 @@ impl RemoteClient {
         let stream =
             TcpStream::connect(addr).map_err(|e| Error::Protocol(format!("connect: {e}")))?;
         let _ = stream.set_nodelay(true);
+        let peer = stream
+            .peer_addr()
+            .map_err(|e| Error::Protocol(format!("peer_addr: {e}")))?;
         let write_half = stream
             .try_clone()
             .map_err(|e| Error::Protocol(format!("clone socket: {e}")))?;
@@ -170,12 +188,19 @@ impl RemoteClient {
             }),
             write: Mutex::new(WriteHalf { w: writer, next_req: 0 }),
             info,
+            peer,
         })
     }
 
     /// What the server advertised in WELCOME.
     pub fn info(&self) -> &ServerInfo {
         &self.info
+    }
+
+    /// The server endpoint this connection reached (what a reconnecting
+    /// wrapper dials again).
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.peer
     }
 
     /// Lock one connection half. Poison recovery matches the rest of
@@ -196,20 +221,40 @@ impl RemoteClient {
     /// targets, `None` for (valid) group targets, and the server's typed
     /// error for targets it does not serve.
     pub fn lease(&self, target: ReqTarget) -> Result<Option<StreamSpec>, Error> {
+        let (h, xs_origin, _) = self.lease_inner(target, None)?;
+        Ok(match target {
+            ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
+            ReqTarget::Group(_) => None,
+        })
+    }
+
+    /// Tracked lease with resumption: asks the server to retain a
+    /// bounded tail of everything it generates for `target`, and to
+    /// replay the rows between `cursor` (the caller's confirmed row
+    /// count) and the server's own cursor before fresh generation — the
+    /// reconnect path after a dropped connection. Returns the server's
+    /// row cursor. A cursor outside the retained window (or ahead of
+    /// the server) fails typed with `InvalidConfig`.
+    pub fn lease_resume(&self, target: ReqTarget, cursor: u64) -> Result<u64, Error> {
+        let (_, _, server_cursor) = self.lease_inner(target, Some(cursor))?;
+        Ok(server_cursor)
+    }
+
+    fn lease_inner(
+        &self,
+        target: ReqTarget,
+        resume: Option<u64>,
+    ) -> Result<(u64, [u32; 4], u64), Error> {
         let req = {
             let mut w = self.lock_write();
-            let req = w.next_req;
-            w.next_req += 1;
-            w.send(&Frame::Lease { req, target })?;
+            let req = w.alloc_req();
+            w.send(&Frame::Lease { req, target, resume })?;
             req
         };
         let mut rd = self.lock_read();
         loop {
-            if let Some((h, xs_origin)) = rd.leases.remove(&req) {
-                return Ok(match target {
-                    ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
-                    ReqTarget::Group(_) => None,
-                });
+            if let Some(grant) = rd.leases.remove(&req) {
+                return Ok(grant);
             }
             // A rejected lease answers as an ERR chunk; it may have
             // been stashed by a concurrent harvester.
@@ -225,8 +270,8 @@ impl RemoteClient {
                 }
             }
             match protocol::read_frame(&mut rd.r)? {
-                Some(Frame::Leased { req: r, h, xs_origin }) => {
-                    rd.leases.insert(r, (h, xs_origin));
+                Some(Frame::Leased { req: r, h, xs_origin, cursor }) => {
+                    rd.leases.insert(r, (h, xs_origin, cursor));
                 }
                 Some(Frame::Err { req: r, error, .. }) if r == protocol::CONNECTION_REQ => {
                     return Err(error)
@@ -259,14 +304,14 @@ impl RemoteClient {
     pub fn submit_fill(&self, req: &Request, repeat: u32) -> Result<u64, Error> {
         let core = req.stream_req();
         let mut w = self.lock_write();
-        let id = w.next_req;
-        w.next_req += 1;
+        let id = w.alloc_req();
         w.send(&Frame::Fill {
             req: id,
             target: core.target(),
             rows: core.rows() as u64,
             repeat,
             deadline_ms: deadline_ms_of(req),
+            tag: req.get_tag(),
         })?;
         Ok(id)
     }
@@ -318,8 +363,8 @@ impl RemoteClient {
                     }
                     stash_chunk(&mut rd, r, chunk);
                 }
-                Some(Frame::Leased { req: r, h, xs_origin }) => {
-                    rd.leases.insert(r, (h, xs_origin));
+                Some(Frame::Leased { req: r, h, xs_origin, cursor }) => {
+                    rd.leases.insert(r, (h, xs_origin, cursor));
                 }
                 Some(other) => {
                     return Err(Error::Protocol(format!(
@@ -455,7 +500,10 @@ const FETCH_MANY_PIPELINE: usize = 8;
 ///   an expired fill consumed nothing); only the clock's anchor
 ///   differs.
 pub struct RemoteSource {
-    client: Arc<RemoteClient>,
+    /// The live connection — swapped wholesale on a resumption
+    /// reconnect, so in-flight users of the old connection fail typed
+    /// instead of crossing sessions.
+    client: RwLock<Arc<RemoteClient>>,
     info: ServerInfo,
     /// Deadline armed on every synchronous fetch (None = wait forever).
     deadline: Option<std::time::Duration>,
@@ -463,6 +511,34 @@ pub struct RemoteSource {
     /// (bounds the async pipeline — see [`Self::submit`]).
     submitted: std::sync::atomic::AtomicUsize,
     metrics: Metrics,
+    /// Auto-reconnect + lease-resumption state
+    /// ([`with_resumption`](Self::with_resumption); None = fail fast).
+    resume: Option<Resumption>,
+}
+
+/// [`RemoteSource::with_resumption`]'s reconnect policy and per-target
+/// cursor ledger.
+struct Resumption {
+    addr: SocketAddr,
+    /// Reconnect attempts per failed fetch before the error surfaces.
+    attempts: u32,
+    /// Pause between reconnect attempts.
+    backoff: Duration,
+    /// Confirmed-row cursors per target. One lock for the whole ledger:
+    /// resilient fetches serialize, which the single shared socket
+    /// mostly forces anyway.
+    cursors: Mutex<HashMap<ReqTarget, Cursor>>,
+}
+
+/// One target's resumption bookkeeping.
+struct Cursor {
+    /// Rows fully received — advanced only by whole Ok chunks, so a
+    /// half-delivered fill is simply re-served after a reconnect.
+    rows: u64,
+    /// The server-side replay install can no longer be trusted (fresh
+    /// target, any fetch error, or a connection swap): re-LEASE with
+    /// the confirmed cursor before the next fill.
+    dirty: bool,
 }
 
 impl RemoteSource {
@@ -472,17 +548,100 @@ impl RemoteSource {
         let client = RemoteClient::connect(addr)?;
         let info = client.info().clone();
         Ok(Self {
-            client: Arc::new(client),
+            client: RwLock::new(Arc::new(client)),
             info,
             deadline: None,
             submitted: std::sync::atomic::AtomicUsize::new(0),
             metrics: Metrics::default(),
+            resume: None,
         })
     }
 
     /// What the server advertised in WELCOME.
     pub fn info(&self) -> &ServerInfo {
         &self.info
+    }
+
+    /// The current connection.
+    fn client(&self) -> Arc<RemoteClient> {
+        self.client.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Turn on auto-reconnect with lease resumption for the synchronous
+    /// fetch surface: every target this source fetches is LEASEd with a
+    /// resume cursor (making the server retain a bounded tail per
+    /// target — see `ServeConfig::retain_rows`), and a fetch that dies
+    /// with its TCP connection reconnects — up to `attempts` times,
+    /// `backoff` apart — re-LEASEs at the confirmed row cursor, and
+    /// continues **bit-identically**: rows the server generated but the
+    /// dead connection never delivered replay out of the retention ring.
+    ///
+    /// Scope: [`fetch`](StreamSource::fetch) and
+    /// [`fetch_block`](StreamSource::fetch_block) (and everything built
+    /// on them, e.g. [`StreamHandle`](crate::StreamHandle)). The
+    /// pipelined surfaces (`fetch_many`, [`submit`](Self::submit)) do
+    /// not auto-reconnect — their multi-request atomicity cannot be
+    /// resumed safely.
+    pub fn with_resumption(mut self, attempts: u32, backoff: Duration) -> Self {
+        let addr = self.client().peer_addr();
+        self.resume =
+            Some(Resumption { addr, attempts, backoff, cursors: Mutex::new(HashMap::new()) });
+        self
+    }
+
+    /// One synchronous single-chunk fill, resilient when resumption is
+    /// on: any error marks the target dirty (the next attempt re-LEASEs
+    /// so the server replays what the failure lost), and a transport
+    /// error additionally reconnects and retries within the attempt
+    /// budget.
+    fn fill_one(&self, target: ReqTarget, rows: usize) -> Result<Vec<u32>, Error> {
+        let req = self.request(target, rows);
+        let Some(rs) = &self.resume else {
+            return self.client().fill(&req);
+        };
+        let mut cursors = rs.cursors.lock().unwrap_or_else(|e| e.into_inner());
+        cursors.entry(target).or_insert(Cursor { rows: 0, dirty: true });
+        let mut attempt: u32 = 0;
+        loop {
+            let client = self.client();
+            let state = cursors.get_mut(&target).expect("inserted above");
+            let res = if state.dirty {
+                match client.lease_resume(target, state.rows) {
+                    Ok(_) => {
+                        state.dirty = false;
+                        client.fill(&req)
+                    }
+                    Err(e) => Err(e),
+                }
+            } else {
+                client.fill(&req)
+            };
+            match res {
+                Ok(values) => {
+                    state.rows += rows as u64;
+                    return Ok(values);
+                }
+                Err(e) => {
+                    state.dirty = true;
+                    // Typed server rejections (quota, deadline, lag,
+                    // validation) surface unchanged — the connection is
+                    // fine; only transport-level failures reconnect.
+                    if !matches!(e, Error::Protocol(_)) || attempt >= rs.attempts {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    std::thread::sleep(rs.backoff);
+                    if let Ok(fresh) = RemoteClient::connect(rs.addr) {
+                        *self.client.write().unwrap_or_else(|p| p.into_inner()) =
+                            Arc::new(fresh);
+                        // Every replay install died with the old session.
+                        for c in cursors.values_mut() {
+                            c.dirty = true;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Arm every synchronous fetch of this source with `deadline`: a
@@ -566,8 +725,9 @@ impl RemoteSource {
             Some(n) => self.check_fill(n)?,
             None => return Err(Error::InvalidConfig("fill size overflows".into())),
         }
-        let id = self.client.submit_fill(&req, 1)?;
-        let weak = Arc::downgrade(&self.client);
+        let client = self.client();
+        let id = client.submit_fill(&req, 1)?;
+        let weak = Arc::downgrade(&client);
         Ok((id, CancelHandle::from_fn(move || cancel_remote(&weak, id))))
     }
 
@@ -579,7 +739,7 @@ impl RemoteSource {
     /// bounded submission pipeline.
     pub fn wait(&self, req: u64) -> Result<Vec<u32>, Error> {
         use std::sync::atomic::Ordering;
-        let chunk = self.client.next_chunk(req);
+        let chunk = self.client().next_chunk(req);
         // One reply consumed (or the connection is dead and every slot
         // is moot): release the pipeline slot on every path.
         let _ = self.submitted.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
@@ -618,8 +778,7 @@ impl StreamSource for RemoteSource {
             return Ok(());
         }
         self.check_fill(out.len() as u64)?;
-        let values =
-            self.client.fill(&self.request(ReqTarget::Stream(stream), out.len()))?;
+        let values = self.fill_one(ReqTarget::Stream(stream), out.len())?;
         if values.len() != out.len() {
             return Err(Error::Protocol(format!(
                 "fill delivered {} of {} numbers",
@@ -643,7 +802,7 @@ impl StreamSource for RemoteSource {
             return Ok(Vec::new());
         }
         self.check_fill(numbers)?;
-        let values = self.client.fill(&self.request(ReqTarget::Group(group), rows))?;
+        let values = self.fill_one(ReqTarget::Group(group), rows)?;
         if values.len() as u64 != numbers {
             return Err(Error::Protocol(format!(
                 "block fill delivered {} of {numbers} numbers",
@@ -674,13 +833,14 @@ impl StreamSource for RemoteSource {
         // remaining FILL frames, and neither ever reads. Replies are
         // keyed by request id, so concurrent callers on other threads
         // interleave harmlessly.
+        let client = self.client();
         let mut blocks = Vec::with_capacity(n_groups);
         let mut first_err = None;
         let mut inflight = VecDeque::with_capacity(FETCH_MANY_PIPELINE);
         let mut collect = |req: u64| -> Result<(), Error> {
             // Every reply is read even past a failure — the connection
             // must drain clean for the next call.
-            let chunk = self.client.next_chunk(req)?;
+            let chunk = client.next_chunk(req)?;
             match chunk.result {
                 Ok(values) => blocks.push(values),
                 Err(e) => {
@@ -698,7 +858,7 @@ impl StreamSource for RemoteSource {
                 collect(req)?;
             }
             inflight
-                .push_back(self.client.submit_fill(&self.request(ReqTarget::Group(g), rows), 1)?);
+                .push_back(client.submit_fill(&self.request(ReqTarget::Group(g), rows), 1)?);
         }
         while let Some(req) = inflight.pop_front() {
             collect(req)?;
@@ -742,7 +902,7 @@ impl StreamSource for RemoteSource {
     }
 
     fn spec(&self, stream: u64) -> Option<StreamSpec> {
-        self.client.lease(ReqTarget::Stream(stream)).ok().flatten()
+        self.client().lease(ReqTarget::Stream(stream)).ok().flatten()
     }
 
     fn metrics(&self) -> MetricsSnapshot {
@@ -758,7 +918,7 @@ impl Drop for RemoteSource {
     fn drop(&mut self) {
         // Best-effort goodbye so the server tears the session down
         // promptly; never block in drop waiting for the acknowledgement.
-        self.client.bye_nowait();
+        self.client().bye_nowait();
     }
 }
 
@@ -769,6 +929,7 @@ impl std::fmt::Debug for RemoteSource {
             .field("n_streams", &self.info.n_streams)
             .field("group_width", &self.info.group_width)
             .field("default_deadline", &self.deadline)
+            .field("resumption", &self.resume.is_some())
             .finish()
     }
 }

@@ -1,0 +1,173 @@
+//! Server-side retention rings behind LEASE resumption.
+//!
+//! A tracked LEASE (wire `resume` flag set) makes the server retain the
+//! tail of everything it generates for that target: each completed
+//! sub-request's values append to a bounded ring alongside a row cursor
+//! counting every row ever generated for the target. When a client
+//! reconnects after a dropped TCP connection it re-LEASEs with the row
+//! cursor it had confirmed receiving; the gap between that cursor and
+//! the server's — rows generated but lost with the connection — is
+//! served back out of the ring, bit-identical, before fresh generation
+//! resumes. A cursor too far behind (evicted from the ring) or ahead of
+//! the server is rejected with a typed [`Error::InvalidConfig`] so the
+//! client fails loudly instead of silently skipping rows.
+//!
+//! The table is server-global (keyed on the *global* target, before
+//! multi-engine rebasing) and survives the session that created it —
+//! that is the whole point. Appends come only from engine completions
+//! that produced values; failed sub-requests consumed no stream state
+//! and therefore retain nothing.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::coordinator::ReqTarget;
+use crate::error::Error;
+
+struct LeaseState {
+    /// Rows ever generated for this target (monotone).
+    cursor_rows: u64,
+    /// The retained tail, newest at the back; at most `cap_values`.
+    ring: VecDeque<u32>,
+    /// Ring bound in values (`retain_rows × width`).
+    cap_values: usize,
+}
+
+/// The server-global retention table (see the module docs).
+pub(crate) struct LeaseTable {
+    /// Rows of tail to retain per tracked target.
+    retain_rows: u64,
+    inner: Mutex<HashMap<ReqTarget, LeaseState>>,
+}
+
+impl LeaseTable {
+    pub(crate) fn new(retain_rows: u64) -> Self {
+        Self { retain_rows, inner: Mutex::new(HashMap::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HashMap<ReqTarget, LeaseState>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Is this target under retention? (FILL admission snapshots this to
+    /// decide whether completions should append to the ring.)
+    pub(crate) fn is_tracked(&self, target: ReqTarget) -> bool {
+        self.lock().contains_key(&target)
+    }
+
+    /// Begin (or resume) tracking `target`. `cursor` is the row count
+    /// the client confirms having received; `width` is values per row.
+    ///
+    /// Returns the server's own row cursor plus the replay values
+    /// covering `cursor..server_cursor` — the rows the client lost with
+    /// its previous connection, drained bit-identically before fresh
+    /// generation.
+    pub(crate) fn resume(
+        &self,
+        target: ReqTarget,
+        cursor: u64,
+        width: u64,
+    ) -> Result<(u64, VecDeque<u32>), Error> {
+        let mut inner = self.lock();
+        let cap = usize::try_from(self.retain_rows.saturating_mul(width))
+            .unwrap_or(usize::MAX);
+        let state = inner.entry(target).or_insert_with(|| LeaseState {
+            cursor_rows: 0,
+            ring: VecDeque::new(),
+            cap_values: cap,
+        });
+        if cursor > state.cursor_rows {
+            return Err(Error::InvalidConfig(format!(
+                "resume cursor {cursor} is ahead of the server cursor {} for {target:?}",
+                state.cursor_rows
+            )));
+        }
+        let gap_rows = state.cursor_rows - cursor;
+        let gap_values = usize::try_from(gap_rows.saturating_mul(width)).unwrap_or(usize::MAX);
+        if gap_values > state.ring.len() {
+            return Err(Error::InvalidConfig(format!(
+                "resume cursor {cursor} is outside the retained window \
+                 ({} rows retained, server cursor {}) for {target:?}",
+                state.ring.len() as u64 / width.max(1),
+                state.cursor_rows
+            )));
+        }
+        let start = state.ring.len() - gap_values;
+        let replay: VecDeque<u32> = state.ring.iter().skip(start).copied().collect();
+        Ok((state.cursor_rows, replay))
+    }
+
+    /// Record freshly generated values for a tracked target (no-op for
+    /// untracked ones). `values.len()` is a whole number of rows.
+    pub(crate) fn append(&self, target: ReqTarget, values: &[u32], width: u64) {
+        let mut inner = self.lock();
+        let Some(state) = inner.get_mut(&target) else { return };
+        state.cursor_rows += values.len() as u64 / width.max(1);
+        state.ring.extend(values.iter().copied());
+        while state.ring.len() > state.cap_values {
+            // Evict whole rows from the front so replays stay row-aligned.
+            for _ in 0..width {
+                state.ring.pop_front();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resume_replays_exactly_the_gap() {
+        let t = ReqTarget::Group(3);
+        let table = LeaseTable::new(16);
+        // First resume at cursor 0 starts tracking with nothing to replay.
+        let (cursor, replay) = table.resume(t, 0, 4).expect("fresh track");
+        assert_eq!(cursor, 0);
+        assert!(replay.is_empty());
+        assert!(table.is_tracked(t));
+        assert!(!table.is_tracked(ReqTarget::Group(4)));
+        // Generate 3 rows of width 4.
+        let rows: Vec<u32> = (0..12).collect();
+        table.append(t, &rows, 4);
+        // Client confirmed 1 row, lost 2: replay is the last 8 values.
+        let (cursor, replay) = table.resume(t, 1, 4).expect("resume");
+        assert_eq!(cursor, 3);
+        assert_eq!(Vec::from(replay), (4..12).collect::<Vec<u32>>());
+        // Confirming everything replays nothing.
+        let (_, replay) = table.resume(t, 3, 4).expect("caught up");
+        assert!(replay.is_empty());
+    }
+
+    #[test]
+    fn out_of_window_cursors_fail_typed() {
+        let t = ReqTarget::Stream(0);
+        let table = LeaseTable::new(2); // retain 2 rows of width 1
+        table.resume(t, 0, 1).expect("track");
+        table.append(t, &[10, 11, 12, 13], 1); // rows 0..4, ring keeps [12, 13]
+        // Cursor ahead of the server is a client bug.
+        let err = table.resume(t, 9, 1).expect_err("ahead");
+        assert!(matches!(err, Error::InvalidConfig(_)));
+        assert!(format!("{err}").contains("ahead of the server cursor"));
+        // Cursor behind the retained tail was evicted.
+        let err = table.resume(t, 1, 1).expect_err("evicted");
+        assert!(matches!(err, Error::InvalidConfig(_)));
+        assert!(format!("{err}").contains("outside the retained window"));
+        // The edge of the window still replays.
+        let (cursor, replay) = table.resume(t, 2, 1).expect("edge");
+        assert_eq!(cursor, 4);
+        assert_eq!(Vec::from(replay), vec![12, 13]);
+    }
+
+    #[test]
+    fn eviction_stays_row_aligned() {
+        let t = ReqTarget::Group(0);
+        let table = LeaseTable::new(2); // 2 rows of width 3 = 6 values
+        table.resume(t, 0, 3).expect("track");
+        table.append(t, &(0..9).collect::<Vec<u32>>(), 3); // 3 rows
+        let (cursor, replay) = table.resume(t, 1, 3).expect("resume");
+        assert_eq!(cursor, 3);
+        // Rows 1 and 2 survive; row 0 was evicted whole.
+        assert_eq!(Vec::from(replay), (3..9).collect::<Vec<u32>>());
+    }
+}

@@ -55,10 +55,18 @@ pub struct LoadgenConfig {
     /// contiguous prefix, the rest arriving as `Cancelled` chunks
     /// (tallied in [`LoadgenReport::cancelled_chunks`]).
     pub cancel_storm: bool,
-    /// Total budget for connect retries — the server may still be
-    /// binding when loadgen starts (the CI smoke test races them).
-    /// Default 10 s.
-    pub connect_budget: Duration,
+    /// Connect attempts per connection before the failure surfaces
+    /// typed — the server may still be binding when loadgen starts (the
+    /// CI smoke test races them), but a misconfigured endpoint must
+    /// fail loudly instead of retrying forever. Default 100.
+    pub connect_attempts: u32,
+    /// Pause between connect attempts. Default 100 ms.
+    pub connect_backoff: Duration,
+    /// QoS tags assigned round-robin across connections; every FILL a
+    /// connection submits carries its tag, so the server fair-drains
+    /// and quota-checks the load per tenant class. Empty (the default)
+    /// puts every fill on tag 0.
+    pub tags: Vec<u64>,
 }
 
 impl Default for LoadgenConfig {
@@ -71,7 +79,9 @@ impl Default for LoadgenConfig {
             fills_per_conn: 8,
             deadline_ms: 0,
             cancel_storm: false,
-            connect_budget: Duration::from_secs(10),
+            connect_attempts: 100,
+            connect_backoff: Duration::from_millis(100),
+            tags: Vec::new(),
         }
     }
 }
@@ -112,19 +122,25 @@ impl LoadgenReport {
     }
 }
 
-fn connect_retry(addr: &str, budget: Duration) -> Result<RemoteClient, Error> {
-    let t0 = Instant::now();
-    loop {
+/// Dial with a bounded retry schedule: `attempts` tries, `backoff`
+/// apart. The final failure surfaces typed, naming the schedule, so a
+/// dead endpoint is a loud error — not an unbounded sleep loop.
+fn connect_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<RemoteClient, Error> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for i in 0..attempts {
+        if i > 0 {
+            std::thread::sleep(backoff);
+        }
         match RemoteClient::connect(addr) {
             Ok(client) => return Ok(client),
-            Err(e) => {
-                if t0.elapsed() >= budget {
-                    return Err(e);
-                }
-                std::thread::sleep(Duration::from_millis(100));
-            }
+            Err(e) => last = Some(e),
         }
     }
+    let e = last.expect("attempts >= 1");
+    Err(Error::Protocol(format!(
+        "could not connect to {addr} after {attempts} attempts ({backoff:?} apart): {e}"
+    )))
 }
 
 /// What one connection tallied.
@@ -139,10 +155,12 @@ struct ConnResult {
 /// Drive one connection: lease its group, run `fills` sequential
 /// chunked FILLs (cancelling every second one under the storm), verify
 /// ordering/shape, tally outcomes.
+#[allow(clippy::too_many_arguments)]
 fn run_conn(
     client: &RemoteClient,
     cfg: &LoadgenConfig,
     group: usize,
+    tag: u64,
     chunk_rows: u64,
     per_chunk: u64,
     fills: u32,
@@ -151,7 +169,8 @@ fn run_conn(
     client.lease(ReqTarget::Group(group))?;
     let request = Request::group(group)
         .rows(chunk_rows as usize)
-        .deadline_opt((cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)));
+        .deadline_opt((cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)))
+        .tag(tag);
     let mut out = ConnResult {
         numbers: 0,
         chunks: 0,
@@ -230,7 +249,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     }
     // The first connection doubles as the endpoint probe (with retries)
     // and tells us the serving shape.
-    let first = connect_retry(&cfg.addr, cfg.connect_budget)?;
+    let first = connect_retry(&cfg.addr, cfg.connect_attempts, cfg.connect_backoff)?;
     let info = first.info().clone();
     if info.n_groups == 0 {
         return Err(Error::InvalidConfig("server serves no groups".into()));
@@ -262,11 +281,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
             handles.push(s.spawn(move || -> Result<ConnResult, Error> {
                 let client = match pre {
                     Some(client) => client,
-                    None => connect_retry(&cfg.addr, cfg.connect_budget)?,
+                    None => {
+                        connect_retry(&cfg.addr, cfg.connect_attempts, cfg.connect_backoff)?
+                    }
                 };
                 let group = (i as u64 % info.n_groups) as usize;
+                let tag = if cfg.tags.is_empty() { 0 } else { cfg.tags[i % cfg.tags.len()] };
                 let out =
-                    run_conn(&client, cfg, group, chunk_rows, per_chunk, fills, repeat)?;
+                    run_conn(&client, cfg, group, tag, chunk_rows, per_chunk, fills, repeat)?;
                 client.bye()?;
                 Ok(out)
             }));

@@ -10,33 +10,57 @@
 //! serde, no protobuf).
 //!
 //! ```text
-//!  client A ══TCP══╗                  ┌───────────────────────────────┐
-//!  client B ══TCP══╬══▶ Server ══════▶│ CompletionQueue over any      │
-//!  client C ══TCP══╝   (sessions +    │ StreamSource (sharded engine: │
-//!                       one reactor)  │ worker shards complete)       │
-//!                                     └───────────────────────────────┘
+//!  1000 clients ══TCP══╗   poll thread    worker pool   reactors (1/engine)
+//!  (nonblocking        ╬══▶ readiness ══▶ parse+submit ══▶ CompletionQueue A
+//!   sockets)           ╝    sweep         (QoS fair     ══▶ CompletionQueue B
+//!                           O(cores)       drain, quota)    ...
+//!                           threads total, not O(sessions)
 //! ```
 //!
-//! * [`Server`] binds an address and serves any
-//!   [`StreamSource`](crate::StreamSource): per-connection reader
-//!   threads submit batched requests into one shared completion queue,
-//!   a single reactor thread harvests and routes completions back, and
-//!   a bounded per-session window keeps one slow client from pinning
-//!   completed-block memory (`serve::server`, `serve::session`).
+//! * [`Server`] binds an address and serves one or more
+//!   [`StreamSource`](crate::StreamSource)s ([`Server::start_multi`]
+//!   fronts several engines behind one flat stream/group namespace).
+//!   The thread model is O(cores), not O(sessions): one accept thread,
+//!   one poll thread sweeping every session's non-blocking socket for
+//!   readable frames and writable backlogs, a bounded worker pool
+//!   (`--workers`, default `available_parallelism`) that parses frames
+//!   and submits sub-requests, and one reactor per engine harvesting
+//!   completions in batches (`serve::server`, `serve::session`).
+//! * The scheduler (`serve::sched`) fair-drains fills by weighted QoS
+//!   class (the request `tag` crosses the wire on every FILL) and
+//!   enforces per-tenant in-flight quotas — an over-quota fill answers
+//!   with a typed retryable [`Error::QuotaExceeded`](crate::Error) and
+//!   consumes nothing.
+//! * The lease table (`serve::lease`) retains a bounded tail of every
+//!   leased target so a LEASE carrying a resume cursor replays the rows
+//!   a dropped connection never saw — [`RemoteSource`] with
+//!   [`RemoteSource::with_resumption`] reconnects and resumes
+//!   bit-identically.
 //! * [`RemoteSource`] is the drop-in client: a remote engine as a local
 //!   `StreamSource`, so [`StreamHandle`](crate::StreamHandle)s, the
 //!   `Prng32`/`Iterator` views, and the Monte-Carlo app drivers consume
 //!   remote streams unchanged ([`RemoteClient`] is the lower-level
 //!   pipelined connection).
 //! * [`protocol`] defines the length-prefixed little-endian frames
-//!   (HELLO/WELCOME negotiation, LEASE, chunked FILL→DATA/ERR with a
-//!   per-fill deadline, CANCEL, BYE) — every [`Error`](crate::Error)
-//!   variant crosses the wire typed, retryable backpressure and the
-//!   lifecycle errors (`Cancelled`, `DeadlineExceeded`) included.
+//!   (HELLO/WELCOME negotiation, LEASE with an optional resume cursor,
+//!   chunked FILL→DATA/ERR with a per-fill deadline and QoS tag,
+//!   CANCEL, BYE) — every [`Error`](crate::Error) variant crosses the
+//!   wire typed, retryable backpressure and the lifecycle errors
+//!   (`Cancelled`, `DeadlineExceeded`, `QuotaExceeded`) included. The
+//!   reserved connection-control id (`u64::MAX`) is rejected at
+//!   frame-decode time.
 //! * [`loadgen`] is the reusable N-connection load driver behind the
 //!   `loadgen` CLI command, the serve benchmark row, and the CI smoke
-//!   test — it reports per-fill latency percentiles and can run with
+//!   test — it reports per-fill latency percentiles, assigns QoS tags
+//!   round-robin, bounds its connect retries, and can run with
 //!   deadlines and a cancel storm.
+//!
+//! **No idle spin.** Every serve thread parks on a generation-counted
+//! condvar ([`server`]'s `Parker`) when it has nothing to do: the poll
+//! thread backs off its sweep tick exponentially and parks indefinitely
+//! at zero connections, workers and reactors park until nudged, and
+//! shutdown is driven entirely by edges (stop flag → nudge → socket
+//! close → session-closed barrier), never by timeout polling.
 //!
 //! **Request lifecycle over the wire.** The completion front's
 //! deadline/cancellation contract (DESIGN.md "Request lifecycle")
@@ -57,8 +81,10 @@
 //! engines.
 
 pub mod client;
+mod lease;
 pub mod loadgen;
 pub mod protocol;
+mod sched;
 pub mod server;
 mod session;
 

@@ -11,9 +11,9 @@
 //! |-----------|-----|--------------------------------------------------------------|
 //! | `HELLO`   | c→s | magic `"THNG"`, version `u16`                                |
 //! | `WELCOME` | s→c | version, engine str, n_streams, n_groups, group_width, chunk_rows, max_fill |
-//! | `LEASE`   | c→s | req id, target                                               |
-//! | `LEASED`  | s→c | req id, leaf `h` (`u64`), `xs_origin` (`4 × u32`)            |
-//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`, deadline_ms `u64` (0 = none) |
+//! | `LEASE`   | c→s | req id, target, resume `u8` (0 = plain, 1 = tracked), cursor `u64` |
+//! | `LEASED`  | s→c | req id, leaf `h` (`u64`), `xs_origin` (`4 × u32`), cursor `u64` |
+//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`, deadline_ms `u64` (0 = none), tag `u64` |
 //! | `DATA`    | s→c | req id, seq `u32`, last `u8`, count `u32`, values (`count × u32`) |
 //! | `ERR`     | s→c | req id, seq, last, error code `u16` + 2×`u64` + message str  |
 //! | `CANCEL`  | c→s | req id — abort the fill's not-yet-executed sub-requests      |
@@ -21,8 +21,10 @@
 //! | `BYE_ACK` | s→c | (empty)                                                      |
 //!
 //! Anything malformed — bad magic, unknown kind, oversized or truncated
-//! frames, trailing bytes — decodes to a typed [`Error::Protocol`], never
-//! a panic; a clean close *between* frames reads as `Ok(None)`.
+//! frames, trailing bytes, or a client frame carrying the reserved
+//! [`CONNECTION_REQ`] request id — decodes to a typed
+//! [`Error::Protocol`], never a panic; a clean close *between* frames
+//! reads as `Ok(None)`.
 
 use std::io::{Read, Write};
 
@@ -31,8 +33,10 @@ use crate::error::Error;
 
 /// Protocol version spoken by this crate (negotiated in HELLO/WELCOME).
 /// v2 added the request-lifecycle surface: the FILL deadline field and
-/// the CANCEL frame.
-pub const VERSION: u16 = 2;
+/// the CANCEL frame. v3 added the multi-tenant surface: the FILL QoS
+/// tag, tracked LEASEs with resumption cursors, and the reserved-req-id
+/// rejection.
+pub const VERSION: u16 = 3;
 
 /// Connection magic, first bytes of every HELLO.
 pub const MAGIC: [u8; 4] = *b"THNG";
@@ -45,8 +49,11 @@ pub const MAX_FRAME: usize = 1 << 26;
 /// Request id the server uses on ERR frames about the *connection*
 /// rather than any one request (malformed frame, handshake violation):
 /// clients surface these directly as the failure of whatever call was
-/// in progress. Client-chosen request ids never reach this value (they
-/// count up from 0).
+/// in progress. The sentinel is *reserved*: a client frame carrying it
+/// as its request id is rejected at decode time as a typed
+/// [`Error::Protocol`] (it would otherwise collide with connection-level
+/// error routing), and [`RemoteClient`](super::RemoteClient) never
+/// allocates it.
 pub const CONNECTION_REQ: u64 = u64::MAX;
 
 const K_HELLO: u8 = 1;
@@ -92,6 +99,14 @@ pub enum Frame {
         req: u64,
         /// The stream or group to lease.
         target: ReqTarget,
+        /// `None` is a plain (untracked) lease. `Some(cursor)` asks the
+        /// server to *track* this target — retain a bounded tail of
+        /// delivered values and a row cursor — and to resume delivery
+        /// from absolute row `cursor`: rows the server already pushed
+        /// past the cursor (e.g. down a connection that died mid-fill)
+        /// are replayed from the retention ring before fresh generation
+        /// continues. `Some(0)` on first contact just turns tracking on.
+        resume: Option<u64>,
     },
     /// Lease granted; for stream targets carries the registered identity
     /// (zeroes for group targets).
@@ -102,6 +117,9 @@ pub enum Frame {
         h: u64,
         /// The stream's decorrelator origin state (zeroes for groups).
         xs_origin: [u32; 4],
+        /// The server's row cursor for a tracked target (how many rows
+        /// it has routed to clients so far); 0 for plain leases.
+        cursor: u64,
     },
     /// Fetch `repeat` consecutive sub-requests of `rows` rows each from
     /// `target`; answered by exactly `repeat` DATA/ERR frames in seq
@@ -123,6 +141,11 @@ pub enum Frame {
         /// is the server's monotonic clock, started when the FILL is
         /// read off the socket.
         deadline_ms: u64,
+        /// QoS class (tenant tag) of this fill: the server drains
+        /// pending fills weighted-fair across tags and enforces the
+        /// per-tenant in-flight quota per tag. Tag 0 is the default
+        /// class.
+        tag: u64,
     },
     /// Abort a fill's not-yet-executed sub-requests (client → server).
     /// Best-effort and idempotent: sub-requests already executed (or
@@ -238,6 +261,7 @@ fn put_error(buf: &mut Vec<u8>, e: &Error) {
         Error::Protocol(m) => (7, 0, 0, m.as_str()),
         Error::Cancelled => (8, 0, 0, ""),
         Error::DeadlineExceeded => (9, 0, 0, ""),
+        Error::QuotaExceeded { in_flight, quota } => (10, *in_flight, *quota, ""),
     };
     put_u16(buf, code);
     put_u64(buf, a);
@@ -256,6 +280,7 @@ fn decode_error(code: u16, a: u64, b: u64, msg: String) -> Error {
         7 => Error::Protocol(msg),
         8 => Error::Cancelled,
         9 => Error::DeadlineExceeded,
+        10 => Error::QuotaExceeded { in_flight: a, quota: b },
         other => Error::Protocol(format!("unknown error code {other} ({msg:?})")),
     }
 }
@@ -290,26 +315,30 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
             put_u32(&mut p, *chunk_rows);
             put_u64(&mut p, *max_fill);
         }
-        Frame::Lease { req, target } => {
+        Frame::Lease { req, target, resume } => {
             p.push(K_LEASE);
             put_u64(&mut p, *req);
             put_target(&mut p, *target);
+            p.push(u8::from(resume.is_some()));
+            put_u64(&mut p, resume.unwrap_or(0));
         }
-        Frame::Leased { req, h, xs_origin } => {
+        Frame::Leased { req, h, xs_origin, cursor } => {
             p.push(K_LEASED);
             put_u64(&mut p, *req);
             put_u64(&mut p, *h);
             for x in xs_origin {
                 put_u32(&mut p, *x);
             }
+            put_u64(&mut p, *cursor);
         }
-        Frame::Fill { req, target, rows, repeat, deadline_ms } => {
+        Frame::Fill { req, target, rows, repeat, deadline_ms, tag } => {
             p.push(K_FILL);
             put_u64(&mut p, *req);
             put_target(&mut p, *target);
             put_u64(&mut p, *rows);
             put_u32(&mut p, *repeat);
             put_u64(&mut p, *deadline_ms);
+            put_u64(&mut p, *tag);
         }
         Frame::Cancel { req } => {
             p.push(K_CANCEL);
@@ -432,6 +461,19 @@ impl<'a> Dec<'a> {
     }
 }
 
+/// Reject the reserved [`CONNECTION_REQ`] sentinel in client-chosen
+/// request ids (LEASE/FILL/CANCEL): letting it through would corrupt the
+/// server's reply routing — its DATA/ERR frames would be
+/// indistinguishable from connection-level errors.
+fn client_req(req: u64) -> Result<u64, Error> {
+    if req == CONNECTION_REQ {
+        return Err(Error::Protocol(format!(
+            "request id {req} is reserved for connection-level errors"
+        )));
+    }
+    Ok(req)
+}
+
 /// Decode one frame payload (the bytes after the length prefix).
 pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
     let mut d = Dec { b: payload };
@@ -451,7 +493,21 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             chunk_rows: d.u32()?,
             max_fill: d.u64()?,
         },
-        K_LEASE => Frame::Lease { req: d.u64()?, target: d.target()? },
+        K_LEASE => {
+            let req = client_req(d.u64()?)?;
+            let target = d.target()?;
+            let resume = match (d.u8()?, d.u64()?) {
+                (0, 0) => None,
+                (0, c) => {
+                    return Err(Error::Protocol(format!(
+                        "plain LEASE carries cursor {c}"
+                    )))
+                }
+                (1, c) => Some(c),
+                (k, _) => return Err(Error::Protocol(format!("unknown resume kind {k}"))),
+            };
+            Frame::Lease { req, target, resume }
+        }
         K_LEASED => {
             let req = d.u64()?;
             let h = d.u64()?;
@@ -459,16 +515,18 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             for x in &mut xs_origin {
                 *x = d.u32()?;
             }
-            Frame::Leased { req, h, xs_origin }
+            let cursor = d.u64()?;
+            Frame::Leased { req, h, xs_origin, cursor }
         }
         K_FILL => Frame::Fill {
-            req: d.u64()?,
+            req: client_req(d.u64()?)?,
             target: d.target()?,
             rows: d.u64()?,
             repeat: d.u32()?,
             deadline_ms: d.u64()?,
+            tag: d.u64()?,
         },
-        K_CANCEL => Frame::Cancel { req: d.u64()? },
+        K_CANCEL => Frame::Cancel { req: client_req(d.u64()?)? },
         K_DATA => {
             let req = d.u64()?;
             let seq = d.u32()?;
@@ -529,15 +587,27 @@ mod tests {
             chunk_rows: 1024,
             max_fill: 1 << 22,
         });
-        roundtrip(Frame::Lease { req: 7, target: ReqTarget::Stream(42) });
-        roundtrip(Frame::Lease { req: 8, target: ReqTarget::Group(3) });
-        roundtrip(Frame::Leased { req: 7, h: 0xdead_beef, xs_origin: [1, 2, 3, 4] });
+        roundtrip(Frame::Lease { req: 7, target: ReqTarget::Stream(42), resume: None });
+        roundtrip(Frame::Lease { req: 8, target: ReqTarget::Group(3), resume: Some(0) });
+        roundtrip(Frame::Lease {
+            req: 11,
+            target: ReqTarget::Group(3),
+            resume: Some(1 << 40),
+        });
+        roundtrip(Frame::Leased {
+            req: 7,
+            h: 0xdead_beef,
+            xs_origin: [1, 2, 3, 4],
+            cursor: 0,
+        });
+        roundtrip(Frame::Leased { req: 8, h: 0, xs_origin: [0; 4], cursor: 123_456 });
         roundtrip(Frame::Fill {
             req: 9,
             target: ReqTarget::Group(5),
             rows: 1024,
             repeat: 16,
             deadline_ms: 0,
+            tag: 0,
         });
         roundtrip(Frame::Fill {
             req: 10,
@@ -545,6 +615,7 @@ mod tests {
             rows: 64,
             repeat: 2,
             deadline_ms: 2_500,
+            tag: 7,
         });
         roundtrip(Frame::Cancel { req: 9 });
         roundtrip(Frame::Data { req: 9, seq: 3, last: false, values: vec![] });
@@ -570,6 +641,7 @@ mod tests {
             Error::Protocol("short read".into()),
             Error::Cancelled,
             Error::DeadlineExceeded,
+            Error::QuotaExceeded { in_flight: 65, quota: 64 },
         ] {
             let retryable = e.is_retryable();
             let mut buf = Vec::new();
@@ -617,6 +689,56 @@ mod tests {
             Err(Error::Protocol(_))
         ));
         assert!(matches!(decode_frame(&[K_BYE, 0xff]), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn reserved_req_id_is_rejected_at_decode_time() {
+        // CONNECTION_REQ is the server's connection-level sentinel; a
+        // client frame carrying it must fail typed, not corrupt routing.
+        for frame in [
+            Frame::Lease { req: CONNECTION_REQ, target: ReqTarget::Stream(0), resume: None },
+            Frame::Fill {
+                req: CONNECTION_REQ,
+                target: ReqTarget::Group(0),
+                rows: 1,
+                repeat: 1,
+                deadline_ms: 0,
+                tag: 0,
+            },
+            Frame::Cancel { req: CONNECTION_REQ },
+        ] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            let err = read_frame(&mut &buf[..]).expect_err("reserved req id must fail");
+            assert!(matches!(err, Error::Protocol(_)), "{err}");
+            assert!(format!("{err}").contains("reserved"), "{err}");
+        }
+        // The sentinel stays legal where the *server* speaks it.
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::Err {
+                req: CONNECTION_REQ,
+                seq: 0,
+                last: true,
+                error: Error::Protocol("bad frame".into()),
+            },
+        )
+        .unwrap();
+        assert!(matches!(read_frame(&mut &buf[..]).unwrap(), Some(Frame::Err { .. })));
+    }
+
+    #[test]
+    fn plain_lease_with_cursor_is_rejected() {
+        // resume kind 0 must carry cursor 0 — anything else is a
+        // malformed frame, not silently ignored state.
+        let mut p = vec![K_LEASE];
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.push(0); // target kind: stream
+        p.extend_from_slice(&3u64.to_le_bytes());
+        p.push(0); // resume kind: plain
+        p.extend_from_slice(&99u64.to_le_bytes()); // …but a cursor anyway
+        assert!(matches!(decode_frame(&p), Err(Error::Protocol(_))));
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Weighted fair drain and per-tenant admission control for the serve
+//! layer's worker pool.
+//!
+//! Every FILL a session admits becomes one [`FillJob`] queued here under
+//! its QoS class (the FILL's `tag`). Workers drain the scheduler in
+//! weighted round-robin: each visit pops one job of the front class and
+//! submits up to `weight` sub-requests before the class rotates to the
+//! back — so a hot tenant streaming gigabytes shares the engine with a
+//! quiet tenant at the configured ratio instead of starving it. The
+//! scheduler also owns the per-tenant in-flight ledger behind admission
+//! control: [`Sched::admit`] reserves a FILL's `repeat` sub-requests
+//! against the tenant's quota up front (rejecting the whole FILL with a
+//! typed, retryable [`Error::QuotaExceeded`] when it does not fit), and
+//! every sub-request releases its reservation exactly once when its
+//! reply leaves the server (written, dropped on a dead session, or
+//! abandoned).
+//!
+//! Lock discipline: the scheduler's internal lock is always taken alone
+//! (never nested inside the routing or session locks) — callers that
+//! discover releases while holding a session lock collect them in an
+//! `AfterLock` and apply them here afterwards.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::coordinator::ReqTarget;
+use crate::error::Error;
+use crate::serve::session::Session;
+
+/// One admitted FILL's not-yet-submitted remainder: everything a worker
+/// needs to turn the next sub-request into an engine submission.
+pub(crate) struct FillJob {
+    /// The session the FILL arrived on (replies route back here).
+    pub(crate) session: Arc<Session>,
+    /// Client request id, echoed on every reply chunk.
+    pub(crate) req: u64,
+    /// Index of the engine serving the (resolved) target.
+    pub(crate) engine: usize,
+    /// Engine-local target (global indices already rebased).
+    pub(crate) local: ReqTarget,
+    /// Global target key when the target is tracked for lease
+    /// resumption (`None` for untracked targets): completed chunks
+    /// append to the retention ring under this key.
+    pub(crate) retain: Option<ReqTarget>,
+    /// Rows per sub-request.
+    pub(crate) rows: u64,
+    /// Numbers per row (the group width; 1 for stream targets).
+    pub(crate) width: u64,
+    /// Next sub-request index to submit (`0..repeat`).
+    pub(crate) next_seq: u32,
+    /// Total sub-requests in the fill.
+    pub(crate) repeat: u32,
+    /// One absolute deadline for the whole fill, fixed when the FILL
+    /// was admitted; each submission carries the remaining budget.
+    pub(crate) limit: Option<Instant>,
+    /// QoS class (and quota ledger key).
+    pub(crate) tag: u64,
+    /// Retained values to replay before fresh generation (lease
+    /// resumption); always a whole number of rows.
+    pub(crate) replay: VecDeque<u32>,
+}
+
+impl FillJob {
+    /// Sub-requests not yet submitted (the quota still reserved for
+    /// this job when it is dropped or abandoned).
+    pub(crate) fn remaining(&self) -> u32 {
+        self.repeat - self.next_seq
+    }
+}
+
+/// One QoS class's pending jobs plus its drain weight.
+struct ClassQ {
+    weight: u32,
+    jobs: VecDeque<FillJob>,
+}
+
+struct SchedInner {
+    classes: HashMap<u64, ClassQ>,
+    /// Round-robin rotation of classes that currently hold jobs.
+    active: VecDeque<u64>,
+    /// Per-tenant in-flight sub-request reservations (admission ledger).
+    inflight: HashMap<u64, u64>,
+}
+
+/// The server-wide fair queue + admission ledger (see the module docs).
+pub(crate) struct Sched {
+    inner: Mutex<SchedInner>,
+    /// Per-tenant in-flight sub-request bound (0 = unlimited).
+    quota: u64,
+    /// Configured drain weights by tag (unlisted tags weigh 1).
+    weights: HashMap<u64, u32>,
+}
+
+impl Sched {
+    pub(crate) fn new(quota: u64, weights: &[(u64, u32)]) -> Self {
+        Self {
+            inner: Mutex::new(SchedInner {
+                classes: HashMap::new(),
+                active: VecDeque::new(),
+                inflight: HashMap::new(),
+            }),
+            quota,
+            weights: weights.iter().map(|&(t, w)| (t, w.max(1))).collect(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, SchedInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Reserve `repeat` sub-requests against tenant `tag`'s quota —
+    /// all-or-nothing, so a rejected FILL consumed neither stream state
+    /// nor ledger space. The reservation is repaid one sub-request at a
+    /// time through [`release`](Self::release).
+    pub(crate) fn admit(&self, tag: u64, repeat: u32) -> Result<(), Error> {
+        let mut inner = self.lock();
+        let held = inner.inflight.get(&tag).copied().unwrap_or(0);
+        if self.quota > 0 && held + u64::from(repeat) > self.quota {
+            return Err(Error::QuotaExceeded { in_flight: held, quota: self.quota });
+        }
+        *inner.inflight.entry(tag).or_insert(0) = held + u64::from(repeat);
+        Ok(())
+    }
+
+    /// Repay `n` sub-requests of tenant `tag`'s reservation.
+    pub(crate) fn release(&self, tag: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let mut inner = self.lock();
+        if let Some(held) = inner.inflight.get_mut(&tag) {
+            *held = held.saturating_sub(n);
+            if *held == 0 {
+                inner.inflight.remove(&tag);
+            }
+        }
+    }
+
+    /// Tenant `tag`'s current in-flight reservation (introspection).
+    pub(crate) fn in_flight(&self, tag: u64) -> u64 {
+        self.lock().inflight.get(&tag).copied().unwrap_or(0)
+    }
+
+    /// Queue a job under its class (newly non-empty classes join the
+    /// round-robin rotation).
+    pub(crate) fn push(&self, job: FillJob) {
+        let weight = self.weights.get(&job.tag).copied().unwrap_or(1);
+        let tag = job.tag;
+        let mut inner = self.lock();
+        let class = inner
+            .classes
+            .entry(tag)
+            .or_insert_with(|| ClassQ { weight, jobs: VecDeque::new() });
+        let was_empty = class.jobs.is_empty();
+        class.jobs.push_back(job);
+        if was_empty && !inner.active.contains(&tag) {
+            inner.active.push_back(tag);
+        }
+    }
+
+    /// Take the next job in weighted round-robin order. Returns the job
+    /// plus its visit budget (the class weight): the worker submits up
+    /// to that many sub-requests, then pushes the job back so the next
+    /// class gets its turn.
+    pub(crate) fn pop(&self) -> Option<(FillJob, u32)> {
+        let mut inner = self.lock();
+        loop {
+            let tag = inner.active.pop_front()?;
+            if let Some(class) = inner.classes.get_mut(&tag) {
+                if let Some(job) = class.jobs.pop_front() {
+                    let budget = class.weight;
+                    if !class.jobs.is_empty() {
+                        inner.active.push_back(tag);
+                    }
+                    return Some((job, budget));
+                }
+            }
+        }
+    }
+
+    /// Are any jobs queued? (Worker-exit check; jobs a worker currently
+    /// owns are not queued.)
+    pub(crate) fn has_work(&self) -> bool {
+        !self.lock().active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    fn dummy_session() -> Arc<Session> {
+        // A socket pair just to satisfy the Session constructor; the
+        // scheduler never touches it.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        Arc::new(Session::new(0, stream, Instant::now()))
+    }
+
+    fn job(sess: &Arc<Session>, tag: u64, req: u64) -> FillJob {
+        FillJob {
+            session: sess.clone(),
+            req,
+            engine: 0,
+            local: ReqTarget::Group(0),
+            retain: None,
+            rows: 8,
+            width: 4,
+            next_seq: 0,
+            repeat: 4,
+            limit: None,
+            tag,
+            replay: VecDeque::new(),
+        }
+    }
+
+    #[test]
+    fn weighted_round_robin_visits_follow_the_weights() {
+        let sess = dummy_session();
+        let sched = Sched::new(0, &[(1, 3), (2, 1)]);
+        sched.push(job(&sess, 1, 10));
+        sched.push(job(&sess, 2, 20));
+        // Two classes with jobs: visits alternate, budgets differ 3:1.
+        let (a, budget_a) = sched.pop().expect("first visit");
+        let (b, budget_b) = sched.pop().expect("second visit");
+        let budgets: HashMap<u64, u32> = [(a.tag, budget_a), (b.tag, budget_b)].into();
+        assert_eq!(budgets[&1], 3, "configured weight");
+        assert_eq!(budgets[&2], 1, "default-free configured weight");
+        assert_ne!(a.tag, b.tag, "one visit per class per rotation");
+        assert!(sched.pop().is_none(), "both jobs are owned now");
+        // Requeue: the class re-enters the rotation.
+        sched.push(a);
+        assert!(sched.has_work());
+        let (again, _) = sched.pop().expect("requeued job");
+        assert_eq!(again.req, 10);
+    }
+
+    #[test]
+    fn admission_rejects_over_quota_whole_fills_typed() {
+        let sched = Sched::new(8, &[]);
+        sched.admit(7, 6).expect("within quota");
+        assert_eq!(sched.in_flight(7), 6);
+        // 6 + 3 > 8: the whole FILL is rejected, nothing was consumed.
+        let err = sched.admit(7, 3).expect_err("over quota");
+        assert_eq!(err, Error::QuotaExceeded { in_flight: 6, quota: 8 });
+        assert!(err.is_retryable());
+        assert_eq!(sched.in_flight(7), 6, "rejection reserved nothing");
+        // Other tenants are unaffected.
+        sched.admit(8, 8).expect("separate ledger per tenant");
+        // Releases repay one sub-request at a time; capacity returns.
+        sched.release(7, 4);
+        sched.admit(7, 6).expect("freed capacity readmits");
+        // Quota 0 = unlimited.
+        let open = Sched::new(0, &[]);
+        open.admit(1, 1_000_000).expect("unlimited");
+    }
+
+    #[test]
+    fn empty_classes_leave_the_rotation() {
+        let sess = dummy_session();
+        let sched = Sched::new(0, &[]);
+        assert!(!sched.has_work());
+        assert!(sched.pop().is_none());
+        sched.push(job(&sess, 5, 1));
+        let (j, budget) = sched.pop().expect("the one job");
+        assert_eq!(budget, 1, "unlisted tags weigh 1");
+        assert_eq!(j.remaining(), 4);
+        assert!(!sched.has_work(), "owned jobs are not queued");
+    }
+}

@@ -1,35 +1,51 @@
 //! The TCP serving front: one [`Server`] multiplexes any number of
-//! client connections onto one
-//! [`CompletionQueue`](crate::CompletionQueue) over the engine it
-//! serves.
+//! client connections onto one or more
+//! [`CompletionQueue`](crate::CompletionQueue)s with a fixed, O(cores)
+//! thread budget.
 //!
 //! ```text
-//!  clients ══TCP══▶ accept ─▶ session reader ──submit_many──▶ ┌────────────────┐
-//!                             (one per conn,   + route entry  │ CompletionQueue │
-//!                              windowed)                      │  (shared, one)  │
-//!  clients ◀══TCP══ session writer ◀─outbox─ reactor ◀─wait_any┴────────────────┘
-//!                   (FIFO, bounded)           (one thread, routes by ticket)
+//!             ┌──────── accept (1) ── registers sessions ──┐
+//!  clients ══TCP══▶ poll (1): non-blocking read/write sweep over every
+//!             │     session socket; extracts frames, drains outboxes
+//!             ▼
+//!        ready queue ─▶ workers (N ≈ cores): parse frames, admission
+//!             ▲         control, weighted-fair FillJob visits ──submit──▶
+//!             │                                               ┌─────────┐
+//!        fair sched ◀── requeued jobs                         │ engines │
+//!                                                             │ (CQ × E)│
+//!  clients ◀══TCP══ poll ◀─ outbox ◀─ reactors (1/engine) ◀───┴─────────┘
 //! ```
 //!
-//! The reactor is the only standing consumer of the queue: it harvests
-//! completions (executing requests itself on engines without workers —
-//! `wait_any`'s executor-of-last-resort discipline) and routes each to
-//! its session's outbox, never blocking on any session's socket (the
-//! outbox is memory-bounded by the session window and written by the
-//! session's own writer thread). Sessions flushing on BYE harvest their
-//! own tickets with `wait_for`; either way every ticket is delivered
-//! exactly once.
+//! Thread count is `2 + workers + engines` regardless of how many
+//! sessions are connected — the scaling contract the 1k-session bench
+//! asserts. Every thread parks on a generation-counter
+//! [`Parker`] (condvar + epoch, the crate's lost-wakeup-proof pattern);
+//! nothing in the serve layer sleeps on a polling timer at idle. The
+//! poll thread's only timed wait is its adaptive tick (1 ms after
+//! progress, backing off to 16 ms at idle), and even that parks — any
+//! state change nudges it awake early.
+//!
+//! Multi-tenancy: FILL frames carry a QoS tag; admitted fills drain
+//! through the weighted-fair [`Sched`](crate::serve::sched::Sched) and
+//! per-tenant in-flight quotas reject over-budget fills with typed,
+//! retryable errors before they touch an engine. Multi-engine: one
+//! server fronts several `CompletionQueue`s behind a flat stream/group
+//! namespace ([`Server::start_multi`]), with one reactor per engine.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{Completion, CompletionQueue, StreamSource, Ticket};
+use crate::coordinator::{Completion, CompletionQueue, ReqTarget, StreamSource, Ticket};
 use crate::error::Error;
-use crate::serve::session::{run_session, Reply, Session};
+use crate::serve::lease::LeaseTable;
+use crate::serve::sched::Sched;
+use crate::serve::session::{
+    deliver_chunk, poll_session, process_frames, run_visit, AfterLock, ChunkReply, Session,
+};
 
 /// Tunables of one [`Server`].
 #[derive(Debug, Clone)]
@@ -49,6 +65,22 @@ pub struct ServeConfig {
     /// How long a fresh connection may take to say HELLO before it is
     /// dropped. Default 10 s.
     pub handshake_timeout: Duration,
+    /// Worker threads parsing frames and submitting fills. 0 (the
+    /// default) means one per available core.
+    pub workers: usize,
+    /// Per-tenant in-flight sub-request quota: a FILL that would push
+    /// its tag's reserved sub-requests past this bound is rejected whole
+    /// with a typed, retryable `QuotaExceeded` ERR. 0 (the default)
+    /// disables admission control.
+    pub quota: u64,
+    /// Weighted-fair drain ratios by QoS tag: a class with weight `w`
+    /// submits up to `w` sub-requests per scheduler rotation. Unlisted
+    /// tags weigh 1. Empty (the default) means plain round-robin.
+    pub qos_weights: Vec<(u64, u32)>,
+    /// Rows of generated tail the server retains per *tracked* target
+    /// (a LEASE with a resume cursor) so a reconnecting client can
+    /// replay what a dropped connection lost. Default 2¹⁶.
+    pub retain_rows: u64,
 }
 
 impl Default for ServeConfig {
@@ -58,8 +90,66 @@ impl Default for ServeConfig {
             chunk_rows: 1024,
             max_fill: 1 << 22,
             handshake_timeout: Duration::from_secs(10),
+            workers: 0,
+            quota: 0,
+            qos_weights: Vec::new(),
+            retain_rows: 1 << 16,
         }
     }
+}
+
+/// Generation-counter parker: the crate's lost-wakeup-proof idle
+/// pattern. Readers snapshot [`epoch`](Self::epoch) *before* scanning
+/// for work; [`nudge`](Self::nudge) bumps the generation, so a wake
+/// that lands between the snapshot and the park turns the park into a
+/// no-op instead of a lost wakeup.
+pub(crate) struct Parker {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Parker {
+    pub(crate) fn new() -> Self {
+        Self { gen: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Snapshot the generation (take this *before* checking for work).
+    pub(crate) fn epoch(&self) -> u64 {
+        *self.gen.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Wake every parked thread.
+    pub(crate) fn nudge(&self) {
+        *self.gen.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        self.cv.notify_all();
+    }
+
+    /// Sleep until a nudge lands after `epoch` was taken (no-op if one
+    /// already did), or until `timeout` passes (`None` = indefinitely).
+    pub(crate) fn park(&self, epoch: u64, timeout: Option<Duration>) {
+        let mut gen = self.gen.lock().unwrap_or_else(|e| e.into_inner());
+        match timeout {
+            None => {
+                while *gen == epoch {
+                    gen = self.cv.wait(gen).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+            Some(t) => {
+                if *gen == epoch {
+                    let _ = self.cv.wait_timeout(gen, t).unwrap_or_else(|e| e.into_inner());
+                }
+            }
+        }
+    }
+}
+
+/// One engine behind the server's flat target namespace.
+pub(crate) struct EngineSlot {
+    pub(crate) cq: CompletionQueue,
+    stream_base: u64,
+    n_streams: u64,
+    group_base: usize,
+    n_groups: usize,
 }
 
 /// Where one in-flight sub-request's completion is delivered.
@@ -68,151 +158,345 @@ pub(crate) struct Route {
     pub(crate) req: u64,
     pub(crate) seq: u32,
     pub(crate) last: bool,
+    /// QoS tag whose quota reservation the chunk repays.
+    pub(crate) tag: u64,
+    /// Global target key for retention (tracked targets only).
+    pub(crate) retain: Option<ReqTarget>,
+    /// Values per row of the target (retention + stitching geometry).
+    pub(crate) width: u64,
+    /// Replayed values fronting this chunk: stitched before the fresh
+    /// engine output so the client still sees one full-size chunk.
+    pub(crate) prefix: Vec<u32>,
 }
 
-/// State shared between the accept loop, the reactor, and every session
-/// thread.
+/// State shared by the accept, poll, worker, and reactor threads.
 pub(crate) struct ServerShared {
-    pub(crate) cq: CompletionQueue,
+    pub(crate) engines: Vec<EngineSlot>,
     pub(crate) cfg: ServeConfig,
-    /// Ticket → completion destination. Entries are inserted *before*
-    /// submission (under this lock) and removed exactly once when the
-    /// completion is routed; size is bounded by the live sessions'
-    /// summed windows.
-    routes: Mutex<HashMap<Ticket, Route>>,
+    pub(crate) sched: Sched,
+    pub(crate) leases: LeaseTable,
+    /// `(engine, ticket)` → completion destination. Entries are
+    /// inserted *before* submission (under this lock) and removed
+    /// exactly once when the completion is routed.
+    routes: Mutex<HashMap<(usize, Ticket), Route>>,
     /// Live sessions by id (for forced shutdown).
     sessions: Mutex<HashMap<u64, Arc<Session>>>,
     /// Sessions fully closed since start; `closed_cv` broadcasts on
-    /// every close (and on deregistration during shutdown).
+    /// every close.
     closed: Mutex<u64>,
     closed_cv: Condvar,
-    /// Reactor parker: generation counter + condvar (the crate's
-    /// lost-wakeup-proof pattern) — submissions nudge it so `wait_any`'s
-    /// "nothing outstanding" idle never misses new work.
-    reactor_gen: Mutex<u64>,
-    reactor_cv: Condvar,
+    /// Frame-ready sessions awaiting a worker (deduped by the session's
+    /// `enqueued` flag).
+    ready: Mutex<VecDeque<Arc<Session>>>,
+    /// Freshly accepted sessions the poll thread has not adopted yet.
+    pending: Mutex<Vec<Arc<Session>>>,
+    pub(crate) poll_parker: Parker,
+    pub(crate) worker_parker: Parker,
+    pub(crate) reactor_parker: Parker,
+    accept_parker: Parker,
     stop: AtomicBool,
+    /// The accept thread exited: the session set can only shrink.
+    accept_done: AtomicBool,
     next_session: AtomicU64,
+    /// WELCOME facts (summed over engines).
+    pub(crate) engine_kind: String,
+    pub(crate) n_streams: u64,
+    pub(crate) n_groups: usize,
+    pub(crate) group_width: usize,
 }
 
 impl ServerShared {
-    pub(crate) fn lock_routes(&self) -> MutexGuard<'_, HashMap<Ticket, Route>> {
+    pub(crate) fn lock_routes(
+        &self,
+    ) -> MutexGuard<'_, HashMap<(usize, Ticket), Route>> {
         self.routes.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Is the server shutting down? Sessions abandon multi-chunk fills
-    /// mid-submission when it is — generating gigabytes for a dying
-    /// endpoint would stall the shutdown.
+    /// Is the server shutting down? Workers abandon fills mid-visit when
+    /// it is — generating gigabytes for a dying endpoint would stall the
+    /// shutdown.
     pub(crate) fn stopping(&self) -> bool {
         self.stop.load(Ordering::Acquire)
     }
 
-    /// Wake the reactor: new submissions exist (or we are stopping).
-    pub(crate) fn nudge_reactor(&self) {
-        *self.reactor_gen.lock().unwrap_or_else(|e| e.into_inner()) += 1;
-        self.reactor_cv.notify_all();
+    /// Every session ever accepted has fully closed (only meaningful
+    /// once `accept_done` holds, which freezes the created count).
+    fn all_closed(&self) -> bool {
+        let created = self.next_session.load(Ordering::Acquire);
+        *self.closed.lock().unwrap_or_else(|e| e.into_inner()) >= created
     }
 
-    /// Deliver one harvested completion to its session (called by the
-    /// reactor, and by a session's own flush for completions it
-    /// harvested with `wait_for`). The session admits chunks to the
-    /// socket in submission order, so the routing race between the two
-    /// is harmless.
-    pub(crate) fn route_completion(&self, c: Completion) {
-        let route = self.lock_routes().remove(&c.ticket);
-        match route {
-            Some(rt) => rt.session.push_chunk(
-                c.ticket,
-                Reply::Chunk {
-                    req: rt.req,
-                    seq: rt.seq,
-                    last: rt.last,
-                    counted: true,
-                    result: c.result,
-                },
-            ),
-            // Unreachable by construction (routes are inserted before
-            // submission and removed exactly once, here); dropping beats
-            // panicking on the serve path.
-            None => debug_assert!(false, "completion for an unrouted ticket"),
+    /// Map a global wire target onto its engine and the engine-local
+    /// target, or fail typed with the *server-wide* totals.
+    pub(crate) fn resolve(&self, target: ReqTarget) -> Result<(usize, ReqTarget), Error> {
+        match target {
+            ReqTarget::Stream(s) => {
+                for (i, slot) in self.engines.iter().enumerate() {
+                    if s >= slot.stream_base && s - slot.stream_base < slot.n_streams {
+                        return Ok((i, ReqTarget::Stream(s - slot.stream_base)));
+                    }
+                }
+                Err(Error::UnknownStream { stream: s, have: self.n_streams })
+            }
+            ReqTarget::Group(g) => {
+                for (i, slot) in self.engines.iter().enumerate() {
+                    if g >= slot.group_base && g - slot.group_base < slot.n_groups {
+                        return Ok((i, ReqTarget::Group(g - slot.group_base)));
+                    }
+                }
+                Err(Error::GroupOutOfRange { group: g, have: self.n_groups })
+            }
         }
     }
 
-    /// A session finished (its threads are gone, its tickets drained):
-    /// deregister and wake anyone counting served sessions.
+    /// Apply the deferred effects of a session-state update after its
+    /// lock was released: quota repayments and job pushes on the
+    /// scheduler, engine-side cancels, ready-queue entries, parker
+    /// nudges, and final deregistration.
+    pub(crate) fn apply(&self, sess: &Arc<Session>, after: AfterLock) {
+        let AfterLock {
+            quota,
+            to_sched,
+            cancels,
+            wrote,
+            nudge_reactors,
+            enqueue,
+            nudge_workers,
+            finalized,
+        } = after;
+        for (tag, n) in quota {
+            self.sched.release(tag, n);
+        }
+        let pushed = !to_sched.is_empty();
+        for job in to_sched {
+            self.sched.push(job);
+        }
+        let had_cancels = !cancels.is_empty();
+        for (engine, tickets) in cancels {
+            self.engines[engine].cq.cancel_many(&tickets);
+        }
+        if enqueue {
+            self.ready.lock().unwrap_or_else(|e| e.into_inner()).push_back(sess.clone());
+        }
+        if enqueue || nudge_workers || pushed {
+            self.worker_parker.nudge();
+        }
+        if nudge_reactors || had_cancels {
+            self.reactor_parker.nudge();
+        }
+        if wrote {
+            self.poll_parker.nudge();
+        }
+        if finalized {
+            self.session_closed(sess.id);
+        }
+    }
+
+    /// Deliver one harvested completion: retention append (fresh values
+    /// only — a failed sub-request consumed no stream state), replay
+    /// prefix stitching, then in-order delivery on the session.
+    pub(crate) fn route_completion(&self, engine: usize, c: Completion) {
+        let route = self.lock_routes().remove(&(engine, c.ticket));
+        let Some(rt) = route else {
+            // Unreachable by construction (routes are inserted before
+            // submission and removed exactly once, here); dropping beats
+            // panicking on the serve path.
+            debug_assert!(false, "completion for an unrouted ticket");
+            return;
+        };
+        if let (Some(key), Ok(values)) = (rt.retain, &c.result) {
+            self.leases.append(key, values, rt.width);
+        }
+        let result = match c.result {
+            Ok(fresh) => {
+                if rt.prefix.is_empty() {
+                    Ok(fresh)
+                } else {
+                    let mut full = rt.prefix;
+                    full.extend_from_slice(&fresh);
+                    Ok(full)
+                }
+            }
+            Err(e) => Err(e),
+        };
+        let mut after = AfterLock::default();
+        deliver_chunk(
+            &rt.session,
+            engine,
+            c.ticket,
+            ChunkReply {
+                req: rt.req,
+                seq: rt.seq,
+                last: rt.last,
+                counted: true,
+                quota: Some(rt.tag),
+                result,
+            },
+            &mut after,
+        );
+        self.apply(&rt.session, after);
+    }
+
+    /// A session fully finished: deregister it and wake everyone whose
+    /// exit (or count) predicate includes the closed tally.
     pub(crate) fn session_closed(&self, id: u64) {
         self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
         *self.closed.lock().unwrap_or_else(|e| e.into_inner()) += 1;
         self.closed_cv.notify_all();
+        self.worker_parker.nudge();
+        self.reactor_parker.nudge();
+        self.poll_parker.nudge();
     }
 }
 
-/// The reactor thread: the standing harvester of the shared queue.
-fn reactor_main(shared: &Arc<ServerShared>) {
+/// The poll thread: one non-blocking sweep over every session socket
+/// per tick. Progress resets the tick to 1 ms; idle sweeps back off
+/// exponentially to 16 ms; with no sessions at all it parks
+/// indefinitely. Any nudge (new outbox frames, registrations, stop)
+/// wakes it early.
+fn poll_main(shared: &Arc<ServerShared>) {
+    let mut conns: Vec<Arc<Session>> = Vec::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut tick = Duration::from_millis(1);
     loop {
-        let gen = *shared.reactor_gen.lock().unwrap_or_else(|e| e.into_inner());
-        // No wait deadline: the reactor is the standing consumer, and
-        // wait_any's deadline-aware park sweeps queued request
-        // deadlines on its own, so expired fills resolve even on an
-        // otherwise idle server.
-        while let Ok(Some(c)) = shared.cq.wait_any(None) {
-            shared.route_completion(c);
+        let epoch = shared.poll_parker.epoch();
+        {
+            let mut pending = shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+            conns.append(&mut pending);
         }
-        if shared.stop.load(Ordering::Acquire) {
+        let now = Instant::now();
+        let mut progress = false;
+        conns.retain(|sess| {
+            let out = poll_session(shared, sess, &mut buf, now);
+            progress |= out.progress;
+            !out.remove
+        });
+        if shared.stopping()
+            && shared.accept_done.load(Ordering::Acquire)
+            && conns.is_empty()
+            && shared.pending.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
+        {
             break;
         }
-        // Nothing outstanding: park until a session submits. The
-        // timeout is a backstop only — every submit nudges.
-        let guard = shared.reactor_gen.lock().unwrap_or_else(|e| e.into_inner());
-        if *guard == gen {
-            let _ = shared
-                .reactor_cv
-                .wait_timeout(guard, Duration::from_millis(100))
-                .unwrap_or_else(|e| e.into_inner());
+        if progress {
+            tick = Duration::from_millis(1);
+            continue;
+        }
+        tick = (tick * 2).min(Duration::from_millis(16));
+        if conns.is_empty() {
+            shared.poll_parker.park(epoch, None);
+            tick = Duration::from_millis(1);
+        } else {
+            shared.poll_parker.park(epoch, Some(tick));
         }
     }
 }
 
-/// The accept thread: register a session and hand the connection to its
-/// own thread (the handshake must never run on the accept loop — a slow
-/// client would block every other connect).
-fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
-    for stream in listener.incoming() {
-        if shared.stop.load(Ordering::Acquire) {
-            break;
-        }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => {
-                // Transient accept failure (e.g. fd exhaustion): back
-                // off briefly instead of busy-looping on the error.
-                std::thread::sleep(Duration::from_millis(10));
+/// A worker thread: drain frame-ready sessions, then fair-scheduled
+/// fill visits; park when both queues are dry. Exits only once the
+/// server is stopping *and* every session has closed — a session being
+/// torn down may still promote parked jobs that need an executor.
+fn worker_main(shared: &Arc<ServerShared>) {
+    loop {
+        let epoch = shared.worker_parker.epoch();
+        loop {
+            let next = shared.ready.lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+            if let Some(sess) = next {
+                process_frames(shared, &sess);
                 continue;
             }
-        };
-        let _ = stream.set_nodelay(true);
-        let id = shared.next_session.fetch_add(1, Ordering::Relaxed);
-        let sess = Arc::new(Session::new(id, stream));
-        shared
-            .sessions
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert(id, sess.clone());
-        let server = shared.clone();
-        let spawned = std::thread::Builder::new()
-            .name(format!("thundering-serve-{id}"))
-            .spawn(move || run_session(server, sess));
-        if spawned.is_err() {
-            // Could not spawn: undo the registration and drop the
-            // connection (counted as closed so waiters see it).
-            if let Some(sess) =
-                shared.sessions.lock().unwrap_or_else(|e| e.into_inner()).get(&id).cloned()
-            {
-                sess.close_socket();
+            if let Some((job, budget)) = shared.sched.pop() {
+                run_visit(shared, job, budget);
+                continue;
             }
-            shared.session_closed(id);
+            break;
+        }
+        if shared.stopping()
+            && shared.accept_done.load(Ordering::Acquire)
+            && shared.all_closed()
+        {
+            break;
+        }
+        shared.worker_parker.park(epoch, None);
+    }
+}
+
+/// A reactor thread (one per engine): the standing harvester of that
+/// engine's completion queue. `wait_batch` blocks while work is
+/// outstanding (its deadline-aware park sweeps request expiry on its
+/// own) and returns empty when nothing is — then the reactor parks on
+/// the shared parker until a worker submits again. Exits once stopping
+/// and every session has closed, so no straggling submission can ever
+/// find its reactor gone.
+fn reactor_main(shared: &Arc<ServerShared>, engine: usize) {
+    loop {
+        let epoch = shared.reactor_parker.epoch();
+        loop {
+            match shared.engines[engine].cq.wait_batch(64) {
+                Ok(batch) if batch.is_empty() => break,
+                Ok(batch) => {
+                    for c in batch {
+                        shared.route_completion(engine, c);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        if shared.stopping()
+            && shared.accept_done.load(Ordering::Acquire)
+            && shared.all_closed()
+        {
+            break;
+        }
+        shared.reactor_parker.park(epoch, None);
+    }
+}
+
+/// The accept thread: register sessions with the poll thread. On accept
+/// errors (fd exhaustion) it *parks* with escalating backoff instead of
+/// sleeping blind — a shutdown nudge wakes it instantly.
+fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        if shared.stopping() {
+            break;
+        }
+        let epoch = shared.accept_parker.epoch();
+        match listener.accept() {
+            Ok((stream, _)) => {
+                backoff = Duration::from_millis(10);
+                if shared.stopping() {
+                    break;
+                }
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let now = Instant::now();
+                let hs_deadline = now
+                    .checked_add(shared.cfg.handshake_timeout)
+                    .unwrap_or_else(|| now + Duration::from_secs(86_400));
+                let id = shared.next_session.fetch_add(1, Ordering::AcqRel);
+                let sess = Arc::new(Session::new(id, stream, hs_deadline));
+                shared
+                    .sessions
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(id, sess.clone());
+                shared.pending.lock().unwrap_or_else(|e| e.into_inner()).push(sess);
+                shared.poll_parker.nudge();
+            }
+            Err(_) => {
+                shared.accept_parker.park(epoch, Some(backoff));
+                backoff = (backoff * 2).min(Duration::from_millis(250));
+            }
         }
     }
+    shared.accept_done.store(true, Ordering::Release);
+    // Exit predicates include accept_done: wake everyone to re-check.
+    shared.poll_parker.nudge();
+    shared.worker_parker.nudge();
+    shared.reactor_parker.nudge();
 }
 
 /// A live serving endpoint: `start` binds, `shutdown` (or drop) closes
@@ -236,7 +520,7 @@ pub struct Server {
     shared: Arc<ServerShared>,
     local_addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
-    reactor: Option<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
 }
 
 impl Server {
@@ -248,6 +532,22 @@ impl Server {
         addr: impl ToSocketAddrs,
         cfg: ServeConfig,
     ) -> Result<Server, Error> {
+        Self::start_multi(vec![source], addr, cfg)
+    }
+
+    /// Like [`start`](Self::start), but front several engines behind one
+    /// endpoint: clients see a flat namespace — engine 0's streams and
+    /// groups first, then engine 1's, and so on. All engines that serve
+    /// groups must agree on the group width (the wire protocol
+    /// advertises a single one).
+    pub fn start_multi(
+        sources: Vec<Arc<dyn StreamSource>>,
+        addr: impl ToSocketAddrs,
+        cfg: ServeConfig,
+    ) -> Result<Server, Error> {
+        if sources.is_empty() {
+            return Err(Error::InvalidConfig("a server needs at least one engine".into()));
+        }
         if cfg.window == 0 || cfg.chunk_rows == 0 || cfg.max_fill == 0 {
             return Err(Error::InvalidConfig(
                 "serve window, chunk_rows, and max_fill must all be >= 1".into(),
@@ -264,46 +564,143 @@ impl Server {
                 cfg.max_fill
             )));
         }
+        let mut group_width: usize = 0;
+        for src in &sources {
+            if src.n_groups() > 0 {
+                let w = src.group_width();
+                if group_width == 0 {
+                    group_width = w;
+                } else if w != group_width {
+                    return Err(Error::InvalidConfig(format!(
+                        "engines disagree on group width ({group_width} vs {w})"
+                    )));
+                }
+            }
+        }
+        if group_width == 0 {
+            group_width = sources[0].group_width();
+        }
+        let engine_kind = if sources.len() == 1 {
+            sources[0].engine_kind().to_string()
+        } else {
+            "multi".to_string()
+        };
+        let mut engines = Vec::with_capacity(sources.len());
+        let (mut stream_base, mut group_base) = (0u64, 0usize);
+        for src in sources {
+            let (n_streams, n_groups) = (src.n_streams(), src.n_groups());
+            engines.push(EngineSlot {
+                cq: CompletionQueue::new(src),
+                stream_base,
+                n_streams,
+                group_base,
+                n_groups,
+            });
+            stream_base += n_streams;
+            group_base += n_groups;
+        }
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+        .min(256);
         let listener =
             TcpListener::bind(addr).map_err(|e| Error::Protocol(format!("bind: {e}")))?;
         let local_addr = listener
             .local_addr()
             .map_err(|e| Error::Protocol(format!("local_addr: {e}")))?;
+        let n_engines = engines.len();
         let shared = Arc::new(ServerShared {
-            cq: CompletionQueue::new(source),
+            sched: Sched::new(cfg.quota, &cfg.qos_weights),
+            leases: LeaseTable::new(cfg.retain_rows),
+            engine_kind,
+            n_streams: stream_base,
+            n_groups: group_base,
+            group_width,
+            engines,
             cfg,
             routes: Mutex::new(HashMap::new()),
             sessions: Mutex::new(HashMap::new()),
             closed: Mutex::new(0),
             closed_cv: Condvar::new(),
-            reactor_gen: Mutex::new(0),
-            reactor_cv: Condvar::new(),
+            ready: Mutex::new(VecDeque::new()),
+            pending: Mutex::new(Vec::new()),
+            poll_parker: Parker::new(),
+            worker_parker: Parker::new(),
+            reactor_parker: Parker::new(),
+            accept_parker: Parker::new(),
             stop: AtomicBool::new(false),
+            accept_done: AtomicBool::new(false),
             next_session: AtomicU64::new(0),
         });
-        let reactor = {
-            let shared = shared.clone();
+        // Thread names carry the `thng-` prefix (and fit the 15-char
+        // /proc comm limit) so the no-spin and thread-count tests can
+        // account for exactly the serve layer's threads.
+        let mut threads: Vec<JoinHandle<()>> = Vec::with_capacity(1 + workers + n_engines);
+        let mut spawn_err: Option<Error> = None;
+        let spawn = |name: String, f: Box<dyn FnOnce() + Send>| {
             std::thread::Builder::new()
-                .name("thundering-serve-reactor".into())
-                .spawn(move || reactor_main(&shared))
-                .map_err(|e| Error::Backend(format!("spawning reactor: {e}")))?
+                .name(name.clone())
+                .spawn(f)
+                .map_err(|e| Error::Backend(format!("spawning {name}: {e}")))
         };
-        let accept = {
+        {
             let shared = shared.clone();
-            std::thread::Builder::new()
-                .name("thundering-serve-accept".into())
-                .spawn(move || accept_main(&shared, listener))
-        };
-        let accept = match accept {
-            Ok(handle) => handle,
-            Err(e) => {
-                shared.stop.store(true, Ordering::Release);
-                shared.nudge_reactor();
-                let _ = reactor.join();
-                return Err(Error::Backend(format!("spawning acceptor: {e}")));
+            match spawn("thng-poll".into(), Box::new(move || poll_main(&shared))) {
+                Ok(h) => threads.push(h),
+                Err(e) => spawn_err = Some(e),
             }
+        }
+        for i in 0..workers {
+            if spawn_err.is_some() {
+                break;
+            }
+            let shared = shared.clone();
+            match spawn(format!("thng-worker-{i}"), Box::new(move || worker_main(&shared)))
+            {
+                Ok(h) => threads.push(h),
+                Err(e) => spawn_err = Some(e),
+            }
+        }
+        for i in 0..n_engines {
+            if spawn_err.is_some() {
+                break;
+            }
+            let shared = shared.clone();
+            match spawn(
+                format!("thng-reactor-{i}"),
+                Box::new(move || reactor_main(&shared, i)),
+            ) {
+                Ok(h) => threads.push(h),
+                Err(e) => spawn_err = Some(e),
+            }
+        }
+        let accept = if spawn_err.is_none() {
+            let shared = shared.clone();
+            match spawn("thng-accept".into(), Box::new(move || accept_main(&shared, listener)))
+            {
+                Ok(h) => Some(h),
+                Err(e) => {
+                    spawn_err = Some(e);
+                    None
+                }
+            }
+        } else {
+            None
         };
-        Ok(Server { shared, local_addr, accept: Some(accept), reactor: Some(reactor) })
+        if let Some(e) = spawn_err {
+            shared.stop.store(true, Ordering::Release);
+            shared.accept_done.store(true, Ordering::Release);
+            shared.poll_parker.nudge();
+            shared.worker_parker.nudge();
+            shared.reactor_parker.nudge();
+            for handle in threads {
+                let _ = handle.join();
+            }
+            return Err(e);
+        }
+        Ok(Server { shared, local_addr, accept, threads })
     }
 
     /// The bound address (resolves the port when `start` was given
@@ -328,44 +725,46 @@ impl Server {
 
     /// Stop accepting, force every live session closed (their in-flight
     /// tickets still complete and drain), then join the service threads.
-    /// Idempotent; drop calls it.
+    /// Timeout-free: closed sockets drive every session through its
+    /// kill path, `stopping` makes workers abandon queued fills, and
+    /// engines resolve every outstanding ticket (executed, cancelled,
+    /// or expired), so the closed count always reaches the created
+    /// count. Idempotent; drop calls it.
     pub fn shutdown(&mut self) {
         self.shared.stop.store(true, Ordering::Release);
+        self.shared.poll_parker.nudge();
+        self.shared.worker_parker.nudge();
+        self.shared.reactor_parker.nudge();
+        self.shared.accept_parker.nudge();
         // Unblock the accept loop with a throwaway loopback connection
         // (checked against `stop` before any session is created).
         let _ = TcpStream::connect(self.local_addr);
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
-        // Session threads are detached; force their sockets closed and
-        // wait for them to flush their tickets and deregister. The close
-        // runs every sweep, not once: a session the accept loop
-        // registered concurrently with the stop flag would miss a
-        // one-shot close.
-        loop {
-            let live: Vec<Arc<Session>> = self
-                .shared
-                .sessions
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .values()
-                .cloned()
-                .collect();
-            if live.is_empty() {
-                break;
-            }
-            for sess in live {
-                sess.close_socket();
-            }
-            let guard = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
-            let _ = self
-                .shared
-                .closed_cv
-                .wait_timeout(guard, Duration::from_millis(50))
-                .unwrap_or_else(|e| e.into_inner());
+        // Accept is joined: the session set can only shrink. One forced
+        // close per live session starts every teardown.
+        let live: Vec<Arc<Session>> = self
+            .shared
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .cloned()
+            .collect();
+        for sess in live {
+            sess.close_socket();
         }
-        self.shared.nudge_reactor();
-        if let Some(handle) = self.reactor.take() {
+        self.shared.poll_parker.nudge();
+        let created = self.shared.next_session.load(Ordering::Acquire);
+        {
+            let mut closed = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
+            while *closed < created {
+                closed =
+                    self.shared.closed_cv.wait(closed).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        for handle in self.threads.drain(..) {
             let _ = handle.join();
         }
     }
@@ -381,7 +780,8 @@ impl std::fmt::Debug for Server {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Server")
             .field("addr", &self.local_addr)
-            .field("engine", &self.shared.cq.source().engine_kind())
+            .field("engine", &self.shared.engine_kind)
+            .field("engines", &self.shared.engines.len())
             .field("sessions_closed", &self.sessions_closed())
             .finish()
     }

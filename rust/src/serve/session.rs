@@ -1,236 +1,227 @@
-//! Server-side per-connection state and threads.
+//! Server-side per-connection state machine for the readiness-loop
+//! architecture.
 //!
-//! Each accepted connection gets two threads and one bounded window
-//! between them:
+//! A session no longer owns threads. Its entire life is a state machine
+//! behind one mutex, driven from three places:
 //!
-//! * the **reader** parses frames off the socket. A FILL becomes
-//!   `repeat` sub-requests submitted into the server's shared
-//!   [`CompletionQueue`](crate::CompletionQueue) in window-sized batches
-//!   ([`CompletionQueue::submit_many`](crate::CompletionQueue::submit_many),
-//!   one submission-lock acquisition per batch), each with a routing
-//!   entry (ticket → session/req/seq) registered *before* submission so
-//!   no completion can ever arrive unroutable;
-//! * the **writer** drains this session's reply outbox onto the socket
-//!   in FIFO order, releasing one window slot per written sub-request;
-//! * the **window** (`ServeConfig::window`) bounds sub-requests that are
-//!   submitted-but-unwritten, so a slow or stalled client pins at most
-//!   `window × max_fill` completed numbers — the same bounded-in-flight
-//!   discipline as the windowed `--completion` throughput CLI — while
-//!   the shared reactor never blocks on any one session's socket.
+//! * the **poll thread** ([`poll_session`]) does all socket I/O
+//!   non-blocking: it drains the session's outbox onto the wire
+//!   (releasing window slots and tenant quota as frames land), reads
+//!   whatever bytes are available, extracts length-prefixed frames, and
+//!   hands frame-ready sessions to the worker pool;
+//! * **workers** ([`process_frames`]) parse and execute frames — a FILL
+//!   passes admission control and becomes a
+//!   [`FillJob`](crate::serve::sched::FillJob) in the weighted fair
+//!   scheduler; [`run_visit`] later turns that job into engine
+//!   submissions in window-bounded slices;
+//! * **reactors** deliver engine completions back through
+//!   [`deliver_chunk`], which re-orders them into submission order
+//!   before they may touch the outbox.
 //!
-//! On BYE (and on EOF or a protocol violation) the reader runs the
-//! *ordered flush*: it drives every still-routed ticket of the session
-//! to completion with
-//! [`CompletionQueue::wait_for`](crate::CompletionQueue::wait_for)
-//! (routing whatever it harvests exactly as the reactor would), then
-//! waits for the window to drain — only after every DATA/ERR frame is on
-//! the wire is BYE_ACK queued, so it is always the connection's final
-//! frame.
+//! Replies reach the wire through two paths. Sub-request outcomes
+//! (DATA/ERR chunks of an admitted fill) go through the `expected`
+//! queue, which pins the wire order to submission order no matter which
+//! reactor routed them. Everything else — WELCOME, LEASED, validation
+//! and admission rejections, connection-level ERRs, BYE_ACK — is pushed
+//! straight to the outbox, exactly as the previous writer-thread design
+//! did.
 //!
-//! **Request lifecycle on the wire.** A FILL's `deadline_ms` becomes
-//! one absolute monotonic deadline for every sub-request (fixed when
-//! the FILL is read, so a window-blocked submission loop cannot extend
-//! it); sub-requests still queued when it passes resolve as retryable
-//! `DeadlineExceeded` ERR chunks. A CANCEL frame aborts the named
-//! fill's not-yet-executed sub-requests in one atomic sweep
-//! ([`CompletionQueue::cancel_many`](crate::CompletionQueue::cancel_many)),
-//! so a cancelled fill's DATA chunks always form a contiguous prefix
-//! followed only by `Cancelled` ERR chunks. Either way every
-//! sub-request answers with exactly one frame, in seq order, through
-//! the same reorder stage — cancellation and expiry never change the
-//! reply count, and a dead sub-request consumed no stream state.
+//! **Lock discipline.** The session lock never nests around the
+//! scheduler lock or the routing lock (the one allowed nesting is
+//! routing → session, used when freshly submitted tickets are
+//! registered and when completions are delivered). Work that must
+//! happen on those other locks — quota releases, parked-job promotion,
+//! engine-side cancels, parker nudges — is collected in an
+//! [`AfterLock`] while the session lock is held and applied by
+//! [`ServerShared::apply`](crate::serve::server::ServerShared) after it
+//! is released.
+//!
+//! **Teardown.** A session dies exactly once, in [`kill_session`]: the
+//! socket error (or clean finish) marks it dead, cancels its submitted
+//! tickets, drops its queued frames and parked jobs, and releases every
+//! window slot and quota reservation they held. Sub-requests already
+//! inside an engine release their quota when their completion routes to
+//! the dead session. The session finalizes — deregisters from the
+//! server — only when its last job, slot, and frame is accounted for,
+//! so the quota ledger balances on every path.
 
-use std::collections::{HashMap, VecDeque};
-use std::io::{BufReader, BufWriter, Write};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{ReqTarget, Request, StreamReq, Ticket};
 use crate::error::Error;
 use crate::serve::protocol::{self, Frame};
+use crate::serve::sched::FillJob;
 use crate::serve::server::{Route, ServerShared};
 
-/// One reply queued for the writer thread.
-pub(crate) enum Reply {
-    /// One sub-request outcome — a DATA or ERR frame. `counted` is
-    /// whether it occupies a window slot (false for validation failures
-    /// the reader produced without submitting anything).
-    Chunk { req: u64, seq: u32, last: bool, counted: bool, result: Result<Vec<u32>, Error> },
-    /// Lease acknowledgement.
-    Leased { req: u64, h: u64, xs_origin: [u32; 4] },
-    /// Graceful goodbye — queued after the ordered flush, so it follows
-    /// every data frame of the session.
-    ByeAck,
+/// Connection lifecycle phase.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Phase {
+    /// Accepted; waiting for HELLO.
+    Handshake,
+    /// Greeted; serving FILL/LEASE/CANCEL.
+    Open,
+    /// No further input (BYE, EOF, or a protocol violation): finish
+    /// admitted work, flush the outbox, close.
+    Draining,
 }
 
-struct SessionState {
-    queue: VecDeque<Reply>,
-    /// This session's submitted tickets in submission order — the
-    /// admission order for completed chunks. Two routers race on a
-    /// flushing session (the reactor and the reader's `wait_for` loop),
-    /// so arrival order alone cannot be trusted for the wire.
-    expected: VecDeque<Ticket>,
-    /// Chunks routed ahead of their turn, parked until every earlier
-    /// ticket's chunk has been admitted (bounded by the window).
-    arrived: HashMap<Ticket, Reply>,
-    /// Per-request CANCEL index: this session's submitted-but-unrouted
-    /// tickets by client request id, so a wire CANCEL resolves in
-    /// O(window) against the session instead of scanning every
-    /// session's routes under the global routing lock. Entries are
-    /// pruned as chunks route and the whole map dies with the session.
-    inflight_by_req: HashMap<u64, Vec<Ticket>>,
-    /// Sub-requests submitted and not yet written to the socket — the
-    /// session's in-flight window occupancy.
-    in_flight: usize,
-    /// No further replies will be queued; the writer exits once drained.
-    closing: bool,
-    /// The socket write side failed: drain replies without writing so
-    /// the window accounting (and the reader's flush) still completes.
-    dead: bool,
+/// One resolved sub-request outcome, not yet serialized.
+pub(crate) struct ChunkReply {
+    pub(crate) req: u64,
+    pub(crate) seq: u32,
+    pub(crate) last: bool,
+    /// Does this chunk occupy a window slot (engine-submitted) — false
+    /// for replayed, cancelled-before-submission, and validation chunks.
+    pub(crate) counted: bool,
+    /// Tenant tag whose quota reservation this chunk repays when it
+    /// leaves the server (`None` for chunks that were never admitted).
+    pub(crate) quota: Option<u64>,
+    pub(crate) result: Result<Vec<u32>, Error>,
 }
 
-impl SessionState {
-    /// Admit every arrived chunk that is next in submission order.
-    fn admit_ready(&mut self) {
-        while let Some(front) = self.expected.front() {
-            match self.arrived.remove(front) {
-                Some(reply) => {
-                    self.expected.pop_front();
-                    self.queue.push_back(reply);
-                }
-                None => break,
-            }
-        }
-    }
+/// One position in the session's reply order.
+pub(crate) enum Slot {
+    /// Waiting on an engine completion (engine index, ticket).
+    Ticket(usize, Ticket),
+    /// Already resolved without an engine round-trip (replay, cancelled
+    /// remainder, submission failure).
+    Ready(ChunkReply),
 }
 
-/// One client connection's shared state (reader ↔ writer ↔ reactor).
+/// One serialized frame queued for the poll thread's write sweep.
+struct OutFrame {
+    bytes: Vec<u8>,
+    written: usize,
+    counted: bool,
+    quota: Option<u64>,
+}
+
+/// Deferred effects of a session-state update, applied by
+/// `ServerShared::apply` after the session lock is released (see the
+/// module docs' lock discipline).
+#[derive(Default)]
+pub(crate) struct AfterLock {
+    /// `(tag, count)` quota reservations to repay on the scheduler.
+    pub(crate) quota: Vec<(u64, u64)>,
+    /// Parked jobs promoted back into the scheduler (window reopened).
+    pub(crate) to_sched: Vec<FillJob>,
+    /// Tickets to cancel, grouped by engine.
+    pub(crate) cancels: Vec<(usize, Vec<Ticket>)>,
+    /// The outbox gained frames (or must be re-examined): nudge poll.
+    pub(crate) wrote: bool,
+    /// Fresh engine submissions exist: nudge the reactors.
+    pub(crate) nudge_reactors: bool,
+    /// Push this session onto the worker ready queue.
+    pub(crate) enqueue: bool,
+    /// Wake the worker pool (new scheduler work, or a kill that
+    /// scheduler-owned jobs must notice).
+    pub(crate) nudge_workers: bool,
+    /// The session fully finished: deregister it from the server.
+    pub(crate) finalized: bool,
+}
+
+pub(crate) struct SessionState {
+    pub(crate) phase: Phase,
+    /// Did the client say BYE (vs. EOF / violation)? Gates BYE_ACK.
+    pub(crate) graceful: bool,
+    /// Socket is gone (or being torn down): frames drop, chunks drain.
+    pub(crate) dead: bool,
+    /// [`kill_session`] ran (dead-state cleanup is idempotent).
+    pub(crate) killed: bool,
+    /// Deregistered from the server; the poll thread drops the session.
+    pub(crate) finalized: bool,
+    /// The Draining finish line was crossed (BYE_ACK queued if graceful).
+    pub(crate) bye_queued: bool,
+    /// Raw bytes read off the socket, not yet a whole frame.
+    pub(crate) inbuf: Vec<u8>,
+    /// The read side returned EOF.
+    pub(crate) read_closed: bool,
+    /// Extracted frame payloads awaiting a worker.
+    pub(crate) frames: VecDeque<Vec<u8>>,
+    /// A worker is currently processing this session's frames.
+    pub(crate) claimed: bool,
+    /// The session sits in the worker ready queue (dedup flag).
+    pub(crate) enqueued: bool,
+    /// Reply order: submission-order slots (see [`Slot`]).
+    pub(crate) expected: VecDeque<Slot>,
+    /// Completions routed ahead of their turn, parked until admitted.
+    pub(crate) arrived: HashMap<(usize, Ticket), ChunkReply>,
+    /// CANCEL index: submitted-but-unrouted tickets by client req id.
+    pub(crate) inflight_by_req: HashMap<u64, Vec<(usize, Ticket)>>,
+    /// Serialized frames awaiting the poll thread's write sweep.
+    out: VecDeque<OutFrame>,
+    /// Engine-submitted chunks not yet written — window occupancy.
+    pub(crate) in_flight: usize,
+    /// Jobs waiting for a window slot on this session.
+    pub(crate) parked: Vec<FillJob>,
+    /// Live fill jobs of this session (parked + queued + worker-owned).
+    pub(crate) jobs: usize,
+    /// Replay values installed by a resumed LEASE, consumed by the next
+    /// FILL on the same target (exclusive-consumer semantics).
+    pub(crate) replay: HashMap<ReqTarget, VecDeque<u32>>,
+    /// Request ids a wire CANCEL named; their jobs convert remainders
+    /// to `Cancelled` chunks at the next visit.
+    pub(crate) cancelled: HashSet<u64>,
+}
+
+/// One client connection: a socket plus the state machine above.
 pub(crate) struct Session {
     pub(crate) id: u64,
-    state: Mutex<SessionState>,
-    /// Writer waits here for queued replies (or `closing`).
-    reply_ready: Condvar,
-    /// The reader waits here for window slots; also signalled on every
-    /// release so the flush's drain wait wakes.
-    window_open: Condvar,
-    /// Kept for forced shutdown: closing it unblocks both the reader
-    /// (blocked in a frame read) and the writer (blocked in a write to a
-    /// stalled client).
     stream: TcpStream,
+    /// The handshake must complete before this instant.
+    pub(crate) hs_deadline: Instant,
+    state: Mutex<SessionState>,
 }
 
 impl Session {
-    pub(crate) fn new(id: u64, stream: TcpStream) -> Self {
+    pub(crate) fn new(id: u64, stream: TcpStream, hs_deadline: Instant) -> Self {
         Self {
             id,
+            stream,
+            hs_deadline,
             state: Mutex::new(SessionState {
-                queue: VecDeque::new(),
+                phase: Phase::Handshake,
+                graceful: false,
+                dead: false,
+                killed: false,
+                finalized: false,
+                bye_queued: false,
+                inbuf: Vec::new(),
+                read_closed: false,
+                frames: VecDeque::new(),
+                claimed: false,
+                enqueued: false,
                 expected: VecDeque::new(),
                 arrived: HashMap::new(),
                 inflight_by_req: HashMap::new(),
+                out: VecDeque::new(),
                 in_flight: 0,
-                closing: false,
-                dead: false,
+                parked: Vec::new(),
+                jobs: 0,
+                replay: HashMap::new(),
+                cancelled: HashSet::new(),
             }),
-            reply_ready: Condvar::new(),
-            window_open: Condvar::new(),
-            stream,
         }
     }
 
-    /// Lock the state, recovering from poisoning (the invariants are a
-    /// queue and three scalars, valid between every update).
-    fn lock(&self) -> MutexGuard<'_, SessionState> {
+    /// Lock the state, recovering from poisoning (every update leaves
+    /// the maps and counters consistent).
+    pub(crate) fn lock(&self) -> MutexGuard<'_, SessionState> {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Queue one reply for the writer (direct path: leases, validation
-    /// failures, BYE_ACK — replies that never entered the window).
-    pub(crate) fn push_reply(&self, reply: Reply) {
-        self.lock().queue.push_back(reply);
-        self.reply_ready.notify_all();
+    /// Non-blocking read (the socket is in non-blocking mode).
+    fn read_some(&self, buf: &mut [u8]) -> std::io::Result<usize> {
+        (&self.stream).read(buf)
     }
 
-    /// Record freshly submitted tickets of client request `req` — both
-    /// the submission-order admission queue and the CANCEL index —
-    /// (called with the routing lock held, so no completion can race
-    /// ahead of the registration).
-    fn register_expected(&self, req: u64, tickets: &[Ticket]) {
-        let mut st = self.lock();
-        st.expected.extend(tickets.iter().copied());
-        st.inflight_by_req.entry(req).or_default().extend_from_slice(tickets);
-        st.admit_ready();
-        drop(st);
-        self.reply_ready.notify_all();
-    }
-
-    /// This session's still-unrouted tickets of client request `req`
-    /// (the CANCEL index; stale entries are harmless — cancelling an
-    /// already-resolved ticket is a no-op).
-    pub(crate) fn req_tickets(&self, req: u64) -> Vec<Ticket> {
-        self.lock().inflight_by_req.get(&req).cloned().unwrap_or_default()
-    }
-
-    /// Deliver one completed chunk: parked until every earlier ticket's
-    /// chunk is admitted, so the wire carries sub-requests strictly in
-    /// submission order no matter which thread routed them. Routing a
-    /// chunk also retires the ticket from the CANCEL index.
-    pub(crate) fn push_chunk(&self, ticket: Ticket, reply: Reply) {
-        let req = match &reply {
-            Reply::Chunk { req, .. } => Some(*req),
-            _ => None,
-        };
-        let mut st = self.lock();
-        if let Some(req) = req {
-            if let Some(tickets) = st.inflight_by_req.get_mut(&req) {
-                tickets.retain(|t| *t != ticket);
-                if tickets.is_empty() {
-                    st.inflight_by_req.remove(&req);
-                }
-            }
-        }
-        st.arrived.insert(ticket, reply);
-        st.admit_ready();
-        drop(st);
-        self.reply_ready.notify_all();
-    }
-
-    /// Reserve up to `want` window slots, blocking while the window is
-    /// full; returns the grant (`1..=want`).
-    fn acquire_window(&self, want: usize, window: usize) -> usize {
-        let mut st = self.lock();
-        while st.in_flight >= window {
-            st = self.window_open.wait(st).unwrap_or_else(|e| e.into_inner());
-        }
-        let grant = want.min(window - st.in_flight).max(1);
-        st.in_flight += grant;
-        grant
-    }
-
-    /// Return `n` window slots (written to the socket, or dropped after
-    /// a failed submission).
-    fn release_window(&self, n: usize) {
-        let mut st = self.lock();
-        st.in_flight -= n.min(st.in_flight);
-        drop(st);
-        self.window_open.notify_all();
-    }
-
-    /// Has the socket write side failed (client gone or force-closed)?
-    fn is_dead(&self) -> bool {
-        self.lock().dead
-    }
-
-    /// Block until every submitted sub-request's frame has left through
-    /// the writer (`in_flight == 0`). Terminates even for a dead
-    /// session: the writer keeps draining (and releasing) without
-    /// writing.
-    fn wait_window_drained(&self) {
-        let mut st = self.lock();
-        while st.in_flight > 0 {
-            st = self.window_open.wait(st).unwrap_or_else(|e| e.into_inner());
-        }
+    /// Non-blocking write.
+    fn write_some(&self, buf: &[u8]) -> std::io::Result<usize> {
+        (&self.stream).write(buf)
     }
 
     /// Force both socket directions closed (idempotent).
@@ -239,401 +230,929 @@ impl Session {
     }
 }
 
-/// Reply for a request rejected before anything was submitted.
-fn err_chunk(req: u64, error: Error) -> Reply {
-    Reply::Chunk { req, seq: 0, last: true, counted: false, result: Err(error) }
-}
-
-/// The per-connection entry point (one thread per accepted connection):
-/// handshake, spawn the writer, then the read → submit loop, the ordered
-/// flush, and teardown.
-pub(crate) fn run_session(server: Arc<ServerShared>, sess: Arc<Session>) {
-    let (reader_stream, writer_stream) =
-        match (sess.stream.try_clone(), sess.stream.try_clone()) {
-            (Ok(r), Ok(w)) => (r, w),
-            _ => {
-                sess.close_socket();
-                server.session_closed(sess.id);
-                return;
-            }
-        };
-
-    // Handshake under a read timeout, so a connection that never says
-    // HELLO cannot pin a session forever.
-    let _ = reader_stream.set_read_timeout(Some(server.cfg.handshake_timeout));
-    let mut r = BufReader::new(reader_stream);
-    let hello = protocol::read_frame(&mut r);
-    let hello_ok =
-        matches!(hello, Ok(Some(Frame::Hello { version })) if version == protocol::VERSION);
-    if !hello_ok {
-        // Answer typed (best effort), then hang up — a malformed or
-        // mismatched hello never reaches the engine.
-        let mut w = BufWriter::new(&writer_stream);
-        let _ = protocol::write_frame(
-            &mut w,
-            &Frame::Err {
-                req: protocol::CONNECTION_REQ,
-                seq: 0,
-                last: true,
-                error: Error::Protocol(format!(
-                    "expected HELLO v{} as the first frame",
-                    protocol::VERSION
-                )),
-            },
-        );
-        let _ = w.flush();
-        sess.close_socket();
-        server.session_closed(sess.id);
+/// Serialize `frame` onto the session's outbox. Dead sessions drop the
+/// frame but still repay its quota — the ledger must balance on every
+/// path.
+fn push_out(
+    st: &mut SessionState,
+    frame: &Frame,
+    counted: bool,
+    quota: Option<u64>,
+    after: &mut AfterLock,
+) {
+    if st.dead {
+        if let Some(tag) = quota {
+            after.quota.push((tag, 1));
+        }
         return;
     }
-    let _ = r.get_ref().set_read_timeout(None);
-
-    // Greet before the writer exists — no contention on the socket yet.
-    {
-        let src = server.cq.source();
-        let welcome = Frame::Welcome {
-            version: protocol::VERSION,
-            engine: src.engine_kind().to_string(),
-            n_streams: src.n_streams(),
-            n_groups: src.n_groups() as u64,
-            group_width: src.group_width() as u32,
-            chunk_rows: server.cfg.chunk_rows,
-            max_fill: server.cfg.max_fill,
-        };
-        let mut w = BufWriter::new(&writer_stream);
-        let sent = protocol::write_frame(&mut w, &welcome)
-            .and_then(|()| w.flush().map_err(protocol::io_protocol));
-        if sent.is_err() {
-            sess.close_socket();
-            server.session_closed(sess.id);
-            return;
+    let mut bytes = Vec::new();
+    if protocol::write_frame(&mut bytes, frame).is_err() {
+        // Unreachable: start() validates max_fill against the frame cap,
+        // and writes to a Vec cannot fail.
+        debug_assert!(false, "server-built frame failed to serialize");
+        if let Some(tag) = quota {
+            after.quota.push((tag, 1));
         }
+        return;
     }
+    st.out.push_back(OutFrame { bytes, written: 0, counted, quota });
+    after.wrote = true;
+}
 
-    let writer = {
-        let sess = sess.clone();
-        std::thread::Builder::new()
-            .name(format!("thundering-serve-w{}", sess.id))
-            .spawn(move || writer_main(&sess, writer_stream))
+/// A chunk's wire form.
+fn chunk_frame(reply: ChunkReply) -> (Frame, bool, Option<u64>) {
+    let ChunkReply { req, seq, last, counted, quota, result } = reply;
+    let frame = match result {
+        Ok(values) => Frame::Data { req, seq, last, values },
+        Err(error) => Frame::Err { req, seq, last, error },
     };
-    let writer = match writer {
-        Ok(handle) => handle,
-        Err(_) => {
-            sess.close_socket();
-            server.session_closed(sess.id);
-            return;
-        }
-    };
+    (frame, counted, quota)
+}
 
-    let mut graceful = false;
+/// Move every reply that is next in submission order from
+/// `expected`/`arrived` onto the outbox.
+fn admit_ready(st: &mut SessionState, after: &mut AfterLock) {
     loop {
-        match protocol::read_frame(&mut r) {
-            Ok(Some(Frame::Fill { req, target, rows, repeat, deadline_ms })) => {
-                handle_fill(&server, &sess, req, target, rows, repeat, deadline_ms);
-            }
-            Ok(Some(Frame::Lease { req, target })) => {
-                handle_lease(&server, &sess, req, target);
-            }
-            Ok(Some(Frame::Cancel { req })) => {
-                handle_cancel(&server, &sess, req);
-            }
-            Ok(Some(Frame::Bye)) => {
-                graceful = true;
-                break;
-            }
-            Ok(Some(other)) => {
-                // Server-bound connections never carry this frame.
-                sess.push_reply(err_chunk(
-                    protocol::CONNECTION_REQ,
-                    Error::Protocol(format!(
-                        "unexpected {} frame",
-                        protocol::frame_name(&other)
-                    )),
-                ));
-                break;
-            }
-            Err(e) => {
-                sess.push_reply(err_chunk(protocol::CONNECTION_REQ, e));
-                break;
-            }
-            Ok(None) => break, // clean EOF without BYE
+        let ready = match st.expected.front() {
+            Some(Slot::Ready(_)) => true,
+            Some(Slot::Ticket(e, t)) => st.arrived.contains_key(&(*e, *t)),
+            None => false,
+        };
+        if !ready {
+            return;
         }
+        let reply = match st.expected.pop_front().expect("front checked") {
+            Slot::Ready(r) => r,
+            Slot::Ticket(e, t) => st.arrived.remove(&(e, t)).expect("arrival checked"),
+        };
+        let (frame, counted, quota) = chunk_frame(reply);
+        push_out(st, &frame, counted, quota, after);
     }
+}
 
-    flush_session(&server, &sess);
+/// Cross the finish line if the session is done: a dead session
+/// finalizes once every job, slot, and frame is accounted for; a
+/// draining one queues BYE_ACK (if the goodbye was graceful) once its
+/// admitted work has fully resolved.
+fn maybe_finish(st: &mut SessionState, after: &mut AfterLock) {
+    if st.finalized {
+        return;
+    }
+    if st.dead {
+        if st.jobs == 0
+            && st.expected.is_empty()
+            && st.arrived.is_empty()
+            && st.out.is_empty()
+        {
+            st.finalized = true;
+            after.finalized = true;
+        }
+        return;
+    }
+    if st.phase == Phase::Draining && st.jobs == 0 && st.expected.is_empty() && !st.bye_queued
     {
-        let mut st = sess.lock();
-        if graceful {
-            st.queue.push_back(Reply::ByeAck);
+        st.bye_queued = true;
+        if st.graceful {
+            // Every admitted chunk is already on the outbox (FIFO), so
+            // BYE_ACK is the connection's last frame by construction.
+            push_out(st, &Frame::ByeAck, false, None, after);
+        } else {
+            // Nothing to add, but poll must notice the outbox drain and
+            // close the socket.
+            after.wrote = true;
         }
-        st.closing = true;
     }
-    sess.reply_ready.notify_all();
-    let _ = writer.join();
-    sess.close_socket();
-    server.session_closed(sess.id);
 }
 
-/// Validate a LEASE and answer with the target's registered identity.
-fn handle_lease(server: &Arc<ServerShared>, sess: &Arc<Session>, req: u64, target: ReqTarget) {
-    let src = server.cq.source();
-    let reply = match target {
-        ReqTarget::Stream(s) => match src.spec(s) {
-            Some(spec) => Reply::Leased { req, h: spec.h, xs_origin: spec.xs_origin },
-            None => {
-                err_chunk(req, Error::UnknownStream { stream: s, have: src.n_streams() })
+/// Tear the session down (idempotent): cancel submitted work, drop
+/// everything queued, and repay every reservation it held. Completions
+/// already inside an engine repay theirs when they route back dead.
+pub(crate) fn kill_session(st: &mut SessionState, after: &mut AfterLock) {
+    if st.killed {
+        maybe_finish(st, after);
+        return;
+    }
+    st.killed = true;
+    st.dead = true;
+    st.phase = Phase::Draining;
+    st.frames.clear();
+    st.inbuf.clear();
+    let mut by_engine: HashMap<usize, Vec<Ticket>> = HashMap::new();
+    for (_, tickets) in st.inflight_by_req.drain() {
+        for (engine, ticket) in tickets {
+            by_engine.entry(engine).or_default().push(ticket);
+        }
+    }
+    after.cancels.extend(by_engine);
+    for slot in st.expected.drain(..) {
+        if let Slot::Ready(reply) = slot {
+            if let Some(tag) = reply.quota {
+                after.quota.push((tag, 1));
             }
-        },
-        ReqTarget::Group(g) if g < src.n_groups() => {
-            Reply::Leased { req, h: 0, xs_origin: [0; 4] }
         }
-        ReqTarget::Group(g) => {
-            err_chunk(req, Error::GroupOutOfRange { group: g, have: src.n_groups() })
-        }
-    };
-    sess.push_reply(reply);
-}
-
-/// Abort a fill's not-yet-executed sub-requests (wire CANCEL). The
-/// session's own per-request index resolves the ticket set in
-/// O(window) — a cancel storm must not serialize the whole server on a
-/// scan of the global routing map — and one atomic sweep over the
-/// completion queue cancels them, so the fill's executed / cancelled
-/// split is a clean submission-order prefix/suffix; the `Cancelled`
-/// completions route back through the normal reorder stage as ERR
-/// chunks. Best-effort and idempotent — an unknown or finished request
-/// id (or a ticket that resolved between lookup and sweep) cancels
-/// nothing.
-fn handle_cancel(server: &Arc<ServerShared>, sess: &Arc<Session>, req: u64) {
-    let mine = sess.req_tickets(req);
-    if !mine.is_empty() {
-        server.cq.cancel_many(&mine);
-        // The sweep queued Cancelled completions; make sure the parked
-        // reactor harvests them promptly.
-        server.nudge_reactor();
+        // Ticket slots repay when their completion routes back dead.
     }
+    for (_, reply) in st.arrived.drain() {
+        if let Some(tag) = reply.quota {
+            after.quota.push((tag, 1));
+        }
+    }
+    for frame in st.out.drain(..) {
+        if let Some(tag) = frame.quota {
+            after.quota.push((tag, 1));
+        }
+    }
+    st.in_flight = 0;
+    for job in st.parked.drain(..) {
+        after.quota.push((job.tag, u64::from(job.remaining())));
+        st.jobs -= 1;
+    }
+    // Scheduler-owned jobs of this session notice `dead` at their next
+    // visit and repay their own remainders.
+    after.nudge_workers = true;
+    maybe_finish(st, after);
 }
 
-/// Validate a FILL, then submit its `repeat` sub-requests in
-/// window-bounded batches, registering every ticket's route before the
-/// batch goes in. `deadline_ms` (0 = none) fixes ONE absolute monotonic
-/// deadline for the whole fill at read time; each batch carries the
-/// remaining budget, so sub-requests submitted after a long
-/// window-blocked wait expire instead of silently stretching the fill.
+/// Deliver one routed completion (called by a reactor with the reply
+/// already stitched and retained). Dead sessions just repay the quota.
+pub(crate) fn deliver_chunk(
+    sess: &Arc<Session>,
+    engine: usize,
+    ticket: Ticket,
+    reply: ChunkReply,
+    after: &mut AfterLock,
+) {
+    let mut st = sess.lock();
+    if let Some(tickets) = st.inflight_by_req.get_mut(&reply.req) {
+        tickets.retain(|&(e, t)| !(e == engine && t == ticket));
+        if tickets.is_empty() {
+            st.inflight_by_req.remove(&reply.req);
+        }
+    }
+    if st.dead {
+        if let Some(tag) = reply.quota {
+            after.quota.push((tag, 1));
+        }
+        return;
+    }
+    st.arrived.insert((engine, ticket), reply);
+    admit_ready(&mut st, after);
+    maybe_finish(&mut st, after);
+}
+
+/// Queue a direct (non-admitted) typed rejection for `req`.
+fn direct_err(sess: &Arc<Session>, after: &mut AfterLock, req: u64, error: Error) {
+    let mut st = sess.lock();
+    push_out(&mut st, &Frame::Err { req, seq: 0, last: true, error }, false, None, after);
+}
+
+/// Enter Draining with a connection-level ERR (malformed frame,
+/// handshake violation, unexpected kind). Pending unparsed input drops:
+/// the connection's framing can no longer be trusted.
+fn protocol_fail(sess: &Arc<Session>, after: &mut AfterLock, error: Error) {
+    let mut st = sess.lock();
+    if st.phase == Phase::Draining || st.killed {
+        return;
+    }
+    push_out(
+        &mut st,
+        &Frame::Err { req: protocol::CONNECTION_REQ, seq: 0, last: true, error },
+        false,
+        None,
+        after,
+    );
+    st.phase = Phase::Draining;
+    st.graceful = false;
+    st.frames.clear();
+    st.inbuf.clear();
+    maybe_finish(&mut st, after);
+}
+
+/// Convert a job's unsubmitted remainder into `Cancelled` chunks,
+/// keeping the reply count at exactly `repeat`. The caller owns the job
+/// (or just removed it from `parked`) and decrements `jobs`.
+fn convert_remainder(st: &mut SessionState, job: &FillJob, after: &mut AfterLock) {
+    for seq in job.next_seq..job.repeat {
+        st.expected.push_back(Slot::Ready(ChunkReply {
+            req: job.req,
+            seq,
+            last: seq + 1 == job.repeat,
+            counted: false,
+            quota: Some(job.tag),
+            result: Err(Error::Cancelled),
+        }));
+    }
+    admit_ready(st, after);
+}
+
+/// Worker entry: claim the session's extracted frames and execute them
+/// in order. One claimer at a time keeps per-session frame order; the
+/// loop re-claims while new frames keep arriving.
+pub(crate) fn process_frames(server: &Arc<ServerShared>, sess: &Arc<Session>) {
+    let mut after = AfterLock::default();
+    loop {
+        let batch: Vec<Vec<u8>> = {
+            let mut st = sess.lock();
+            st.enqueued = false;
+            if st.claimed || st.killed || st.phase == Phase::Draining {
+                break;
+            }
+            if st.frames.is_empty() {
+                break;
+            }
+            st.claimed = true;
+            st.frames.drain(..).collect()
+        };
+        for payload in batch {
+            let frame = match protocol::decode_frame(&payload) {
+                Ok(frame) => frame,
+                Err(e) => {
+                    protocol_fail(sess, &mut after, e);
+                    break;
+                }
+            };
+            let phase = {
+                let st = sess.lock();
+                if st.killed || st.phase == Phase::Draining {
+                    // Input after the goodbye (or a violation): discard.
+                    break;
+                }
+                st.phase
+            };
+            match (phase, frame) {
+                (Phase::Handshake, Frame::Hello { version }) if version == protocol::VERSION =>
+                {
+                    let mut st = sess.lock();
+                    st.phase = Phase::Open;
+                    let welcome = Frame::Welcome {
+                        version: protocol::VERSION,
+                        engine: server.engine_kind.clone(),
+                        n_streams: server.n_streams,
+                        n_groups: server.n_groups as u64,
+                        group_width: server.group_width as u32,
+                        chunk_rows: server.cfg.chunk_rows,
+                        max_fill: server.cfg.max_fill,
+                    };
+                    push_out(&mut st, &welcome, false, None, &mut after);
+                }
+                (Phase::Handshake, _) => {
+                    // Malformed or mismatched hello — never reaches an
+                    // engine.
+                    protocol_fail(
+                        sess,
+                        &mut after,
+                        Error::Protocol(format!(
+                            "expected HELLO v{} as the first frame",
+                            protocol::VERSION
+                        )),
+                    );
+                }
+                (_, Frame::Fill { req, target, rows, repeat, deadline_ms, tag }) => {
+                    handle_fill(
+                        server, sess, &mut after, req, target, rows, repeat, deadline_ms,
+                        tag,
+                    );
+                }
+                (_, Frame::Lease { req, target, resume }) => {
+                    handle_lease(server, sess, &mut after, req, target, resume);
+                }
+                (_, Frame::Cancel { req }) => {
+                    handle_cancel(sess, &mut after, req);
+                }
+                (_, Frame::Bye) => {
+                    let mut st = sess.lock();
+                    st.phase = Phase::Draining;
+                    st.graceful = true;
+                    maybe_finish(&mut st, &mut after);
+                }
+                (_, other) => {
+                    // Server-bound connections never carry this frame.
+                    protocol_fail(
+                        sess,
+                        &mut after,
+                        Error::Protocol(format!(
+                            "unexpected {} frame",
+                            protocol::frame_name(&other)
+                        )),
+                    );
+                }
+            }
+        }
+        let more = {
+            let mut st = sess.lock();
+            st.claimed = false;
+            !st.frames.is_empty() && !st.killed && st.phase != Phase::Draining
+        };
+        if !more {
+            break;
+        }
+        // New frames arrived while we held the claim: process them
+        // ourselves (nobody enqueued the session — `enqueued` was
+        // false and `claimed` was true throughout).
+    }
+    server.apply(sess, after);
+}
+
+/// Validate and admit one FILL: target resolution, size/shape checks,
+/// then per-tenant admission control — a rejection on any of these is
+/// one typed ERR frame and neither an engine cursor nor the quota
+/// ledger has moved. Admitted fills become scheduler jobs; the fill's
+/// deadline is fixed here, so queueing delay counts against it.
 #[allow(clippy::too_many_arguments)]
 fn handle_fill(
     server: &Arc<ServerShared>,
     sess: &Arc<Session>,
+    after: &mut AfterLock,
     req: u64,
     target: ReqTarget,
     rows: u64,
     repeat: u32,
     deadline_ms: u64,
+    tag: u64,
 ) {
-    let src = server.cq.source();
-    // Target, size, and shape are all vetted here, so a rejected FILL is
-    // one typed ERR frame and no stream cursor has moved.
-    match target {
-        ReqTarget::Stream(s) if s >= src.n_streams() => {
-            sess.push_reply(err_chunk(
-                req,
-                Error::UnknownStream { stream: s, have: src.n_streams() },
-            ));
+    let (engine, local) = match server.resolve(target) {
+        Ok(pair) => pair,
+        Err(e) => {
+            direct_err(sess, after, req, e);
             return;
         }
-        ReqTarget::Group(g) if g >= src.n_groups() => {
-            sess.push_reply(err_chunk(
-                req,
-                Error::GroupOutOfRange { group: g, have: src.n_groups() },
-            ));
-            return;
-        }
-        _ => {}
-    }
-    let numbers = match target {
-        ReqTarget::Stream(_) => Some(rows),
-        ReqTarget::Group(_) => rows.checked_mul(src.group_width() as u64),
     };
+    let width: u64 = match target {
+        ReqTarget::Stream(_) => 1,
+        ReqTarget::Group(_) => server.group_width as u64,
+    };
+    let numbers = rows.checked_mul(width);
     let fits = matches!(numbers, Some(n) if n >= 1 && n <= server.cfg.max_fill);
     if !fits || repeat == 0 {
-        sess.push_reply(err_chunk(
+        direct_err(
+            sess,
+            after,
             req,
             Error::InvalidConfig(format!(
                 "fill of {rows} rows x {repeat} is outside 1..={} numbers per sub-request",
                 server.cfg.max_fill
             )),
-        ));
+        );
         return;
     }
-    // max_fill bounds `rows`, so the usize cast is lossless.
-    let sub = match target {
-        ReqTarget::Stream(s) => StreamReq::stream(s, rows as usize),
-        ReqTarget::Group(g) => StreamReq::group(g, rows as usize),
-    };
-    // One absolute deadline for the whole fill, fixed now (checked_add:
-    // an absurd deadline_ms that overflows the monotonic clock means
-    // "no deadline", same as 0).
+    if let Err(e) = server.sched.admit(tag, repeat) {
+        direct_err(sess, after, req, e);
+        return;
+    }
+    // One absolute deadline for the whole fill, fixed at admission
+    // (checked_add: an absurd deadline_ms that overflows the monotonic
+    // clock means "no deadline", same as 0).
     let limit: Option<Instant> = if deadline_ms == 0 {
         None
     } else {
         Instant::now().checked_add(Duration::from_millis(deadline_ms))
     };
-
-    let mut seq: u32 = 0;
-    let mut remaining = repeat as usize;
-    while remaining > 0 {
-        // Abandon a multi-chunk fill whose consumer is gone (write side
-        // dead) or whose server is shutting down: the chunks already
-        // submitted complete and drain; the rest would be generated for
-        // nobody. The stream cursor simply stops where delivery stopped.
-        if server.stopping() || sess.is_dead() {
+    let retain = if server.leases.is_tracked(target) { Some(target) } else { None };
+    let replay;
+    {
+        let mut st = sess.lock();
+        if st.dead {
+            after.quota.push((tag, u64::from(repeat)));
             return;
         }
-        let grant = sess.acquire_window(remaining, server.cfg.window);
-        // Remaining deadline budget for this batch: an already-expired
-        // limit becomes a zero deadline, so the sub-requests still
-        // submit and resolve as typed DeadlineExceeded ERR chunks — the
-        // reply count stays exactly `repeat` on every path.
-        let request = Request::from(sub)
-            .deadline_opt(limit.map(|l| l.saturating_duration_since(Instant::now())));
-        let batch = vec![request; grant];
-        // Routes must exist before any completion can be harvested, so
-        // the routing lock is held across the batched submit (the
-        // reactor takes it only after `wait_any` returns, never while
-        // holding queue state — no ordering cycle).
-        let submitted = {
-            let mut routes = server.lock_routes();
-            match server.cq.submit_many(&batch) {
-                Ok(tickets) => {
-                    for &ticket in &tickets {
-                        routes.insert(
-                            ticket,
-                            Route {
-                                session: sess.clone(),
-                                req,
-                                seq,
-                                last: seq + 1 == repeat,
-                            },
-                        );
-                        seq += 1;
-                    }
-                    // Still under the routing lock: admission order and
-                    // the CANCEL index must be on record before any
-                    // completion can be routed.
-                    sess.register_expected(req, &tickets);
-                    true
+        st.jobs += 1;
+        replay = st.replay.remove(&target).unwrap_or_default();
+    }
+    server.sched.push(FillJob {
+        session: sess.clone(),
+        req,
+        engine,
+        local,
+        retain,
+        rows,
+        width,
+        next_seq: 0,
+        repeat,
+        limit,
+        tag,
+        replay,
+    });
+    after.nudge_workers = true;
+}
+
+/// Validate a LEASE and answer with the target's registered identity;
+/// a resume cursor additionally starts retention and installs the
+/// replay gap on this session.
+fn handle_lease(
+    server: &Arc<ServerShared>,
+    sess: &Arc<Session>,
+    after: &mut AfterLock,
+    req: u64,
+    target: ReqTarget,
+    resume: Option<u64>,
+) {
+    let (engine, local) = match server.resolve(target) {
+        Ok(pair) => pair,
+        Err(e) => {
+            direct_err(sess, after, req, e);
+            return;
+        }
+    };
+    let (h, xs_origin) = match local {
+        ReqTarget::Stream(s) => match server.engines[engine].cq.source().spec(s) {
+            Some(spec) => (spec.h, spec.xs_origin),
+            None => {
+                // Unreachable after resolve(); answer typed regardless.
+                let ReqTarget::Stream(global) = target else { unreachable!() };
+                direct_err(
+                    sess,
+                    after,
+                    req,
+                    Error::UnknownStream { stream: global, have: server.n_streams },
+                );
+                return;
+            }
+        },
+        ReqTarget::Group(_) => (0, [0u32; 4]),
+    };
+    let mut cursor = 0;
+    if let Some(client_cursor) = resume {
+        let width: u64 = match target {
+            ReqTarget::Stream(_) => 1,
+            ReqTarget::Group(_) => server.group_width as u64,
+        };
+        match server.leases.resume(target, client_cursor, width) {
+            Ok((server_cursor, replay)) => {
+                cursor = server_cursor;
+                let mut st = sess.lock();
+                if !st.dead {
+                    st.replay.insert(target, replay);
                 }
-                Err(e) => {
-                    // Unreachable after the validation above; fail the
-                    // fill typed rather than trusting that. The direct
-                    // push bypasses the reorder stage, so let every
-                    // earlier sub-request's frame reach the wire first —
-                    // per-request in-order delivery must hold even here.
-                    drop(routes);
-                    sess.release_window(grant);
-                    sess.wait_window_drained();
-                    sess.push_reply(Reply::Chunk {
-                        req,
+            }
+            Err(e) => {
+                direct_err(sess, after, req, e);
+                return;
+            }
+        }
+    }
+    let mut st = sess.lock();
+    push_out(&mut st, &Frame::Leased { req, h, xs_origin, cursor }, false, None, after);
+}
+
+/// Abort a fill's not-yet-executed sub-requests (wire CANCEL). The
+/// session's own index resolves submitted tickets in O(window); jobs
+/// still parked convert their remainders here, and jobs a worker owns
+/// (or the scheduler queues) convert at their next visit via the
+/// `cancelled` set. Best-effort and idempotent.
+fn handle_cancel(sess: &Arc<Session>, after: &mut AfterLock, req: u64) {
+    let submitted: Vec<(usize, Ticket)> = {
+        let mut st = sess.lock();
+        st.cancelled.insert(req);
+        let parked = std::mem::take(&mut st.parked);
+        let (mine, rest): (Vec<FillJob>, Vec<FillJob>) =
+            parked.into_iter().partition(|j| j.req == req);
+        st.parked = rest;
+        for job in &mine {
+            convert_remainder(&mut st, job, after);
+            st.jobs -= 1;
+        }
+        if !mine.is_empty() {
+            maybe_finish(&mut st, after);
+        }
+        st.inflight_by_req.get(&req).cloned().unwrap_or_default()
+    };
+    if !submitted.is_empty() {
+        let mut by_engine: HashMap<usize, Vec<Ticket>> = HashMap::new();
+        for (engine, ticket) in submitted {
+            by_engine.entry(engine).or_default().push(ticket);
+        }
+        after.cancels.extend(by_engine);
+    }
+    // Scheduler-owned jobs of this request notice `cancelled` at their
+    // next visit.
+    after.nudge_workers = true;
+}
+
+/// What one visit iteration decided under the session lock. Variants
+/// carry the job back out of the decision block when the visit
+/// continues (the Parked/Done paths consume it inside the block).
+enum Step {
+    /// The job ended (dead, cancelled, complete) or parked on the
+    /// session window: nothing more to do this visit.
+    Done,
+    /// Visit budget exhausted: requeue for the next rotation.
+    Requeue(FillJob),
+    /// A replay chunk resolved without the engine: loop again.
+    Replayed(FillJob),
+    /// Submit `grant` sub-requests, the first carrying `prefix`.
+    Submit { job: FillJob, grant: u32, prefix: Vec<u32> },
+}
+
+/// Worker entry: one weighted-fair visit of an owned job. Submits up to
+/// `budget` sub-requests in window-bounded slices, then returns the job
+/// to the scheduler so other classes get their turn.
+pub(crate) fn run_visit(server: &Arc<ServerShared>, job: FillJob, mut budget: u32) {
+    let sess = job.session.clone();
+    let mut after = AfterLock::default();
+    let mut job = Some(job);
+    loop {
+        let step = {
+            let mut job = job.take().expect("job present at loop top");
+            let mut st = sess.lock();
+            if st.dead || server.stopping() {
+                // Abandon: the consumer is gone (or the server is).
+                // Chunks already submitted drain through the dead path.
+                after.quota.push((job.tag, u64::from(job.remaining())));
+                st.jobs -= 1;
+                maybe_finish(&mut st, &mut after);
+                Step::Done
+            } else if st.cancelled.contains(&job.req) {
+                convert_remainder(&mut st, &job, &mut after);
+                st.jobs -= 1;
+                maybe_finish(&mut st, &mut after);
+                Step::Done
+            } else if job.next_seq == job.repeat {
+                // Fill complete. Leftover replay (the client resumed
+                // behind more retained data than this fill asked for)
+                // returns to the session for the target's next fill.
+                if !job.replay.is_empty() {
+                    if let Some(key) = job.retain {
+                        st.replay.insert(key, std::mem::take(&mut job.replay));
+                    }
+                }
+                st.jobs -= 1;
+                maybe_finish(&mut st, &mut after);
+                Step::Done
+            } else if budget == 0 {
+                Step::Requeue(job)
+            } else {
+                let numbers = (job.rows * job.width) as usize;
+                if job.replay.len() >= numbers {
+                    // A whole chunk straight from the retention replay —
+                    // no engine round-trip, no window slot.
+                    let values: Vec<u32> = job.replay.drain(..numbers).collect();
+                    let seq = job.next_seq;
+                    st.expected.push_back(Slot::Ready(ChunkReply {
+                        req: job.req,
                         seq,
-                        last: true,
+                        last: seq + 1 == job.repeat,
                         counted: false,
-                        result: Err(e),
-                    });
-                    false
+                        quota: Some(job.tag),
+                        result: Ok(values),
+                    }));
+                    admit_ready(&mut st, &mut after);
+                    job.next_seq += 1;
+                    budget -= 1;
+                    Step::Replayed(job)
+                } else {
+                    let free = server.cfg.window.saturating_sub(st.in_flight);
+                    if free == 0 {
+                        // Park atomically with the decision: the
+                        // promotion sweep (a window release under this
+                        // same lock) can never miss the job.
+                        st.parked.push(job);
+                        Step::Done
+                    } else {
+                        let mut grant =
+                            free.min(budget as usize).min(job.remaining() as usize) as u32;
+                        let prefix: Vec<u32> = if job.replay.is_empty() {
+                            Vec::new()
+                        } else {
+                            // A partial replay fronts exactly one fresh
+                            // sub-request: the engine generates the
+                            // remainder of the chunk and the route
+                            // stitches prefix + fresh back together.
+                            grant = 1;
+                            job.replay.drain(..).collect()
+                        };
+                        st.in_flight += grant as usize;
+                        Step::Submit { job, grant, prefix }
+                    }
                 }
             }
         };
-        server.nudge_reactor();
-        if !submitted {
-            return;
+        match step {
+            Step::Done => break,
+            Step::Replayed(j) => {
+                job = Some(j);
+            }
+            Step::Requeue(j) => {
+                server.sched.push(j);
+                after.nudge_workers = true;
+                break;
+            }
+            Step::Submit { job: mut j, grant, prefix } => {
+                if !submit_slice(server, &sess, &mut j, grant, prefix, &mut after) {
+                    break;
+                }
+                budget -= grant;
+                job = Some(j);
+            }
         }
-        remaining -= grant;
+    }
+    server.apply(&sess, after);
+}
+
+/// Submit `grant` sub-requests of `job` (the first fronted by `prefix`
+/// replay values). Routes are registered under the routing lock across
+/// the batched submit, so no completion can ever arrive unroutable.
+/// Returns false when the job ended here (submission failure).
+fn submit_slice(
+    server: &Arc<ServerShared>,
+    sess: &Arc<Session>,
+    job: &mut FillJob,
+    grant: u32,
+    prefix: Vec<u32>,
+    after: &mut AfterLock,
+) -> bool {
+    let prefix_rows = prefix.len() as u64 / job.width;
+    let deadline = job.limit.map(|l| l.saturating_duration_since(Instant::now()));
+    let mut batch = Vec::with_capacity(grant as usize);
+    for i in 0..grant {
+        // max_fill bounds `rows`, so the usize cast is lossless. Only
+        // the first sub-request of a slice can carry a prefix (the
+        // replay was drained whole), so later ones ask for full rows.
+        let rows = if i == 0 { job.rows - prefix_rows } else { job.rows } as usize;
+        let sub = match job.local {
+            ReqTarget::Stream(s) => StreamReq::stream(s, rows),
+            ReqTarget::Group(g) => StreamReq::group(g, rows),
+        };
+        // An already-expired limit becomes a zero deadline: the
+        // sub-requests still submit and resolve as typed
+        // DeadlineExceeded ERR chunks — the reply count stays exactly
+        // `repeat` on every path.
+        batch.push(Request::from(sub).deadline_opt(deadline).tag(job.tag));
+    }
+    let mut routes = server.lock_routes();
+    match server.engines[job.engine].cq.submit_many(&batch) {
+        Ok(tickets) => {
+            let mut prefix = Some(prefix);
+            for (i, &ticket) in tickets.iter().enumerate() {
+                let seq = job.next_seq + i as u32;
+                routes.insert(
+                    (job.engine, ticket),
+                    Route {
+                        session: sess.clone(),
+                        req: job.req,
+                        seq,
+                        last: seq + 1 == job.repeat,
+                        tag: job.tag,
+                        retain: job.retain,
+                        width: job.width,
+                        prefix: prefix.take().unwrap_or_default(),
+                    },
+                );
+            }
+            // Routing → session nesting (the one allowed order): the
+            // admission order and the CANCEL index must be on record
+            // before any completion can be routed.
+            let mut st = sess.lock();
+            if st.dead {
+                // Killed between the window grant and here: the routes
+                // stand, and each completion repays its quota through
+                // the dead delivery path.
+                st.in_flight = 0;
+            } else {
+                for &ticket in &tickets {
+                    st.expected.push_back(Slot::Ticket(job.engine, ticket));
+                }
+                st.inflight_by_req
+                    .entry(job.req)
+                    .or_default()
+                    .extend(tickets.iter().map(|&t| (job.engine, t)));
+            }
+            drop(st);
+            drop(routes);
+            after.nudge_reactors = true;
+            job.next_seq += grant;
+            true
+        }
+        Err(e) => {
+            // Unreachable after validation; fail the fill typed rather
+            // than trusting that. The ERR takes this seq's reply slot
+            // (order preserved through `expected`) and the rest of the
+            // reservation is repaid.
+            drop(routes);
+            let mut st = sess.lock();
+            st.in_flight = st.in_flight.saturating_sub(grant as usize);
+            let seq = job.next_seq;
+            st.expected.push_back(Slot::Ready(ChunkReply {
+                req: job.req,
+                seq,
+                last: true,
+                counted: false,
+                quota: Some(job.tag),
+                result: Err(e),
+            }));
+            after.quota.push((job.tag, u64::from(job.remaining()) - 1));
+            admit_ready(&mut st, after);
+            st.jobs -= 1;
+            maybe_finish(&mut st, after);
+            false
+        }
     }
 }
 
-/// The ordered flush (see the module docs): drive every still-routed
-/// ticket of this session to completion, then wait for the writer to put
-/// every frame on the wire.
-fn flush_session(server: &Arc<ServerShared>, sess: &Arc<Session>) {
-    loop {
-        let mine: Vec<Ticket> = {
-            let routes = server.lock_routes();
-            routes
-                .iter()
-                .filter(|(_, rt)| rt.session.id == sess.id)
-                .map(|(t, _)| *t)
-                .collect()
-        };
-        if mine.is_empty() {
-            break;
+/// What one poll sweep learned about a session.
+pub(crate) struct PollOutcome {
+    /// Any byte moved or state advanced (resets the poll tick).
+    pub(crate) progress: bool,
+    /// The session finalized: drop it from the poll set.
+    pub(crate) remove: bool,
+}
+
+/// Poll-thread entry: one non-blocking sweep of the session's socket —
+/// write the outbox, read and extract frames, and run the edge checks
+/// (clean finish, EOF, handshake timeout).
+pub(crate) fn poll_session(
+    server: &Arc<ServerShared>,
+    sess: &Arc<Session>,
+    buf: &mut [u8],
+    now: Instant,
+) -> PollOutcome {
+    let mut after = AfterLock::default();
+    let mut progress = false;
+    let remove;
+    {
+        let mut st = sess.lock();
+        if st.finalized {
+            return PollOutcome { progress: false, remove: true };
         }
-        let mut progress = false;
-        for ticket in mine {
-            if let Ok(Some(c)) = server.cq.wait_for(ticket, None) {
-                server.route_completion(c);
+        // -- Write sweep: outbox → socket, releasing window + quota. --
+        if !st.dead {
+            let mut freed_window = false;
+            let mut io_dead = false;
+            loop {
+                let (res, done) = {
+                    let Some(f) = st.out.front_mut() else { break };
+                    let r = sess.write_some(&f.bytes[f.written..]);
+                    if let Ok(n) = r {
+                        f.written += n;
+                    }
+                    let done = matches!(r, Ok(_)) && f.written == f.bytes.len();
+                    (r, done)
+                };
+                match res {
+                    Ok(0) => {
+                        io_dead = true;
+                        break;
+                    }
+                    Ok(_) if done => {
+                        let f = st.out.pop_front().expect("front exists");
+                        progress = true;
+                        if f.counted {
+                            st.in_flight -= 1;
+                            freed_window = true;
+                        }
+                        if let Some(tag) = f.quota {
+                            after.quota.push((tag, 1));
+                        }
+                    }
+                    Ok(_) => {
+                        // Partial write: the socket buffer is full.
+                        progress = true;
+                        break;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        io_dead = true;
+                        break;
+                    }
+                }
+            }
+            if freed_window && !st.parked.is_empty() {
+                // Window slots reopened: promote every parked job (they
+                // re-park if it filled again).
+                after.to_sched.extend(st.parked.drain(..));
+            }
+            if io_dead {
+                kill_session(&mut st, &mut after);
                 progress = true;
             }
-            // Ok(None): the reactor harvested it and is routing it now;
-            // the rescan (and the window drain below) covers the
-            // handoff. (No wait deadline here — the flush must drive
-            // every ticket out; cancelled/expired tickets resolve as
-            // typed Err completions, so this always terminates.)
         }
-        if !progress {
-            std::thread::sleep(Duration::from_millis(1));
+        // -- Clean finish: goodbye complete and outbox flushed. --
+        if !st.dead && st.bye_queued && st.out.is_empty() {
+            sess.close_socket();
+            kill_session(&mut st, &mut after);
+            progress = true;
         }
-    }
-    // The window drains only when frames hit the socket (or a dead
-    // writer drops them): in_flight == 0 means every DATA/ERR frame of
-    // the session is out.
-    sess.wait_window_drained();
-}
-
-/// The wire form of one queued reply.
-fn frame_of(reply: Reply) -> Frame {
-    match reply {
-        Reply::Chunk { req, seq, last, result: Ok(values), .. } => {
-            Frame::Data { req, seq, last, values }
-        }
-        Reply::Chunk { req, seq, last, result: Err(error), .. } => {
-            Frame::Err { req, seq, last, error }
-        }
-        Reply::Leased { req, h, xs_origin } => Frame::Leased { req, h, xs_origin },
-        Reply::ByeAck => Frame::ByeAck,
-    }
-}
-
-/// The writer thread: drain the outbox in FIFO order, flushing at batch
-/// boundaries, releasing window slots as frames land. A write failure
-/// marks the session dead — replies keep draining (dropped) so the
-/// reader's flush and window accounting still terminate.
-fn writer_main(sess: &Session, stream: TcpStream) {
-    let mut w = BufWriter::new(stream);
-    loop {
-        let next = {
-            let mut st = sess.lock();
-            while st.queue.is_empty() && !st.closing {
-                st = sess.reply_ready.wait(st).unwrap_or_else(|e| e.into_inner());
-            }
-            st.queue
-                .pop_front()
-                .map(|reply| (reply, st.queue.is_empty(), st.dead))
-        };
-        let Some((reply, flush_now, dead)) = next else {
-            break; // closing and fully drained
-        };
-        let counted = matches!(reply, Reply::Chunk { counted: true, .. });
-        if !dead {
-            let frame = frame_of(reply);
-            let ok = protocol::write_frame(&mut w, &frame).is_ok()
-                && (!flush_now || w.flush().is_ok());
-            if !ok {
-                sess.lock().dead = true;
+        // -- Read sweep: socket → inbuf. --
+        if !st.dead && !st.read_closed {
+            loop {
+                match sess.read_some(buf) {
+                    Ok(0) => {
+                        st.read_closed = true;
+                        progress = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        st.inbuf.extend_from_slice(&buf[..n]);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        kill_session(&mut st, &mut after);
+                        progress = true;
+                        break;
+                    }
+                }
             }
         }
-        if counted {
-            sess.release_window(1);
+        // -- Frame extraction: inbuf → frames, then hand to a worker. --
+        if !st.dead && st.phase != Phase::Draining {
+            while st.inbuf.len() >= 4 {
+                let len =
+                    u32::from_le_bytes(st.inbuf[..4].try_into().expect("4 bytes")) as usize;
+                if len == 0 || len > protocol::MAX_FRAME {
+                    push_out(
+                        &mut st,
+                        &Frame::Err {
+                            req: protocol::CONNECTION_REQ,
+                            seq: 0,
+                            last: true,
+                            error: Error::Protocol(format!("bad frame length {len}")),
+                        },
+                        false,
+                        None,
+                        &mut after,
+                    );
+                    st.phase = Phase::Draining;
+                    st.graceful = false;
+                    st.inbuf.clear();
+                    st.frames.clear();
+                    maybe_finish(&mut st, &mut after);
+                    progress = true;
+                    break;
+                }
+                if st.inbuf.len() < 4 + len {
+                    break;
+                }
+                let payload = st.inbuf[4..4 + len].to_vec();
+                st.inbuf.drain(..4 + len);
+                st.frames.push_back(payload);
+                progress = true;
+            }
+            if !st.frames.is_empty() && !st.claimed && !st.enqueued {
+                st.enqueued = true;
+                after.enqueue = true;
+            }
         }
+        // -- EOF without BYE: drain once pending frames are executed. --
+        if !st.dead
+            && st.read_closed
+            && st.phase != Phase::Draining
+            && st.frames.is_empty()
+            && !st.claimed
+        {
+            if !st.inbuf.is_empty() {
+                // The peer died mid-frame: answer typed before draining.
+                push_out(
+                    &mut st,
+                    &Frame::Err {
+                        req: protocol::CONNECTION_REQ,
+                        seq: 0,
+                        last: true,
+                        error: Error::Protocol("connection closed mid frame".into()),
+                    },
+                    false,
+                    None,
+                    &mut after,
+                );
+                st.inbuf.clear();
+            }
+            st.phase = Phase::Draining;
+            st.graceful = false;
+            maybe_finish(&mut st, &mut after);
+            progress = true;
+        }
+        // -- Handshake timeout: a connection that never says HELLO. --
+        if !st.dead
+            && st.phase == Phase::Handshake
+            && now >= sess.hs_deadline
+            && st.frames.is_empty()
+            && !st.claimed
+        {
+            push_out(
+                &mut st,
+                &Frame::Err {
+                    req: protocol::CONNECTION_REQ,
+                    seq: 0,
+                    last: true,
+                    error: Error::Protocol(format!(
+                        "expected HELLO v{} as the first frame",
+                        protocol::VERSION
+                    )),
+                },
+                false,
+                None,
+                &mut after,
+            );
+            st.phase = Phase::Draining;
+            st.graceful = false;
+            st.inbuf.clear();
+            maybe_finish(&mut st, &mut after);
+            progress = true;
+        }
+        remove = st.finalized;
     }
-    let _ = w.flush();
+    server.apply(sess, after);
+    PollOutcome { progress, remove }
 }

@@ -1,0 +1,93 @@
+//! No-spin regression for the serving layer, isolated in its own test
+//! binary so `/proc/self/task` contains only this server's `thng-`
+//! threads: the thread count must be O(cores) — independent of the
+//! session count — and an idle server must burn ~zero CPU (a polling
+//! sleep loop shows up as tens of scheduler ticks here).
+#![cfg(target_os = "linux")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use thundering::serve::{RemoteClient, RemoteSource, ServeConfig, Server};
+use thundering::{Engine, EngineBuilder, StreamSource};
+
+/// Every serve thread carries a `thng-` comm prefix (≤ 15 chars, the
+/// kernel's comm limit). Returns `(comm, utime + stime)` per thread,
+/// in clock ticks, from `/proc/self/task/*/stat`.
+fn thng_threads() -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir("/proc/self/task").unwrap() {
+        let path = entry.unwrap().path().join("stat");
+        // A thread may exit between readdir and read; skip the gone.
+        let Ok(stat) = std::fs::read_to_string(&path) else { continue };
+        // comm sits in parens and may itself contain spaces; everything
+        // after the closing paren is space-separated, with utime and
+        // stime at (1-based stat) fields 14 and 15.
+        let (Some(open), Some(close)) = (stat.find('('), stat.rfind(')')) else { continue };
+        let comm = &stat[open + 1..close];
+        if !comm.starts_with("thng-") {
+            continue;
+        }
+        let rest: Vec<&str> = stat[close + 2..].split_whitespace().collect();
+        let utime: u64 = rest[11].parse().unwrap();
+        let stime: u64 = rest[12].parse().unwrap();
+        out.push((comm.to_string(), utime + stime));
+    }
+    out
+}
+
+#[test]
+fn serve_threads_are_o_cores_and_do_not_spin_at_idle() {
+    let source: Arc<dyn StreamSource> = EngineBuilder::new(4)
+        .engine(Engine::Native)
+        .group_width(4)
+        .rows_per_tile(4)
+        .lag_window(u64::MAX / 2)
+        .root_seed(42)
+        .build_arc()
+        .unwrap();
+    let server = Server::start(
+        source,
+        "127.0.0.1:0",
+        ServeConfig { workers: 2, ..ServeConfig::default() },
+    )
+    .unwrap();
+
+    // O(cores), not O(sessions): accept + poll + 2 workers + 1 reactor.
+    let baseline = thng_threads();
+    assert_eq!(baseline.len(), 5, "serve thread set: {baseline:?}");
+    for want in ["thng-accept", "thng-poll", "thng-worker-0", "thng-worker-1", "thng-reactor-0"] {
+        assert!(
+            baseline.iter().any(|(name, _)| name == want),
+            "missing {want} in {baseline:?}"
+        );
+    }
+
+    let clients: Vec<RemoteClient> = (0..32)
+        .map(|_| RemoteClient::connect(server.local_addr()).unwrap())
+        .collect();
+    assert_eq!(thng_threads().len(), 5, "32 more sessions added zero threads");
+
+    // Warm the path once so every thread has woken at least once, then
+    // let the whole server go idle with 33 open sessions.
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    remote.fetch_block(0, 4).unwrap();
+
+    let before: u64 = thng_threads().iter().map(|(_, t)| t).sum();
+    std::thread::sleep(Duration::from_millis(600));
+    let after: u64 = thng_threads().iter().map(|(_, t)| t).sum();
+    // Parked threads burn nothing over 600 ms; a busy-wait or a tight
+    // sleep-poll loop burns tens of ticks. Allow 5 (~50 ms at the usual
+    // 100 Hz) for scheduler noise and the poll thread's backed-off tick.
+    assert!(
+        after.saturating_sub(before) <= 5,
+        "idle serve threads burned {} ticks over 600 ms",
+        after.saturating_sub(before)
+    );
+
+    drop(remote);
+    for client in clients {
+        client.bye().unwrap();
+    }
+    server.wait_sessions_closed(33);
+}

@@ -4,9 +4,9 @@
 //! exactly-once ordering, the BYE flush contract, malformed-frame
 //! rejection, and the multi-connection loadgen driver.
 
-use std::net::TcpStream;
+use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
 use thundering::serve::loadgen::{self, LoadgenConfig};
@@ -191,6 +191,7 @@ fn bye_flushes_every_data_frame_before_the_ack() {
             rows: 4,
             repeat: 3,
             deadline_ms: 0,
+            tag: 0,
         },
     )
     .unwrap();
@@ -498,6 +499,300 @@ fn loadgen_cancel_storm_and_deadline_survive_cleanly() {
         "uncancelled fills produce latency samples"
     );
     server.wait_sessions_closed(4);
+}
+
+#[test]
+fn quota_rejection_is_typed_retryable_and_consumes_nothing() {
+    // Per-tenant admission control: a FILL that would push its tag past
+    // the in-flight quota is rejected whole — one typed, retryable ERR,
+    // no stream state consumed, no quota reserved.
+    let server = Server::start(
+        source(Engine::Native, 1, 4, 4, u64::MAX / 2),
+        "127.0.0.1:0",
+        ServeConfig { quota: 8, ..ServeConfig::default() },
+    )
+    .unwrap();
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
+    let rejected = client.submit_fill(&Request::group(0).rows(4), 9).unwrap();
+    let chunk = client.next_chunk(rejected).unwrap();
+    assert_eq!((chunk.seq, chunk.last), (0, true), "rejected whole, one reply");
+    let err = chunk.result.unwrap_err();
+    assert_eq!(err, Error::QuotaExceeded { in_flight: 0, quota: 8 });
+    assert!(err.is_retryable(), "{err}");
+    // The rejection consumed nothing: an in-quota fill starts at row 0
+    // and is bit-exact.
+    let ok = client.submit_fill(&Request::group(0).rows(4), 8).unwrap();
+    let mut all = Vec::new();
+    for expect_seq in 0..8u32 {
+        let chunk = client.next_chunk(ok).unwrap();
+        assert_eq!(chunk.seq, expect_seq);
+        all.extend(chunk.result.unwrap());
+    }
+    assert_eq!(all, oracle_block(0, 4, 0, 32), "post-rejection fill starts at row 0");
+    client.bye().unwrap();
+    server.wait_sessions_closed(1);
+}
+
+#[test]
+fn qos_tags_flow_end_to_end_through_the_weighted_scheduler() {
+    // Two tenants with configured drain weights, concurrently, on
+    // distinct groups: the tag rides every FILL frame, both classes
+    // drain through the weighted-fair scheduler, and each tenant's
+    // bytes stay bit-exact. (The fairness ratio itself is pinned by the
+    // scheduler's unit tests; this is the wire-to-engine plumbing.)
+    let server = Server::start(
+        source(Engine::Sharded, 2, 4, 4, u64::MAX / 2),
+        "127.0.0.1:0",
+        ServeConfig { qos_weights: vec![(1, 4), (2, 1)], ..ServeConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    std::thread::scope(|s| {
+        for (tag, group) in [(1u64, 0usize), (2, 1)] {
+            s.spawn(move || {
+                let client = RemoteClient::connect(addr).unwrap();
+                let req = client
+                    .submit_fill(&Request::group(group).rows(4).tag(tag), 8)
+                    .unwrap();
+                let mut all = Vec::new();
+                for expect_seq in 0..8u32 {
+                    let chunk = client.next_chunk(req).unwrap();
+                    assert_eq!(chunk.seq, expect_seq, "tenant {tag} in order");
+                    all.extend(chunk.result.unwrap());
+                }
+                assert_eq!(
+                    all,
+                    oracle_block(group as u64, 4, 0, 32),
+                    "tenant {tag} bit-exact under fair drain"
+                );
+                client.bye().unwrap();
+            });
+        }
+    });
+    server.wait_sessions_closed(2);
+}
+
+#[test]
+fn lease_resumption_replays_lost_rows_bit_identically() {
+    // Connection 1 tracks group 0, draws 8 rows, and dies without a
+    // goodbye. Connection 2 resumes from cursor 0: the dead
+    // connection's rows replay out of the retention ring, stitched
+    // seamlessly into fresh generation.
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let conn1 = RemoteClient::connect(server.local_addr()).unwrap();
+    assert_eq!(conn1.lease_resume(ReqTarget::Group(0), 0).unwrap(), 0, "fresh track");
+    let first = conn1.fill(&Request::group(0).rows(8)).unwrap();
+    assert_eq!(first, oracle_block(0, 4, 0, 8));
+    drop(conn1); // dies mid-lease, no BYE
+    server.wait_sessions_closed(1);
+
+    let conn2 = RemoteClient::connect(server.local_addr()).unwrap();
+    assert_eq!(
+        conn2.lease_resume(ReqTarget::Group(0), 0).unwrap(),
+        8,
+        "server cursor counts every generated row"
+    );
+    // 12 rows against an 8-row replay gap: the replay fronts the chunk
+    // and the engine generates only the remainder — one full-size,
+    // bit-exact chunk covering rows 0..12.
+    assert_eq!(
+        conn2.fill(&Request::group(0).rows(12)).unwrap(),
+        oracle_block(0, 4, 0, 12),
+        "replay prefix + fresh remainder stitch into one chunk"
+    );
+    assert_eq!(
+        conn2.fill(&Request::group(0).rows(4)).unwrap(),
+        oracle_block(0, 4, 12, 4),
+        "fresh generation continues past the stitched fill"
+    );
+    // A cursor ahead of the server is a client bug, typed.
+    match conn2.lease_resume(ReqTarget::Group(0), 999) {
+        Err(Error::InvalidConfig(m)) => assert!(m.contains("ahead"), "{m}"),
+        other => panic!("expected a typed cursor rejection, got {other:?}"),
+    }
+    conn2.bye().unwrap();
+    server.wait_sessions_closed(2);
+}
+
+#[test]
+fn resumption_client_survives_a_dropped_connection_bit_identically() {
+    use std::io::{Read, Write};
+    use std::sync::mpsc;
+
+    // The client dials a tiny in-test TCP proxy, so an ordered kill
+    // looks exactly like a lost network path — and the reconnect dials
+    // the proxy again, reaching a fresh server session.
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let upstream = server.local_addr();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy_addr = listener.local_addr().unwrap();
+    let (kill_tx, kill_rx) = mpsc::channel::<()>();
+    std::thread::spawn(move || {
+        for inbound in listener.incoming() {
+            let Ok(client_side) = inbound else { break };
+            let Ok(server_side) = TcpStream::connect(upstream) else { break };
+            let kill_c = client_side.try_clone().unwrap();
+            let kill_s = server_side.try_clone().unwrap();
+            let back = (server_side.try_clone().unwrap(), client_side.try_clone().unwrap());
+            let pump = |mut from: TcpStream, mut to: TcpStream| {
+                move || {
+                    let mut buf = [0u8; 4096];
+                    loop {
+                        match from.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => {
+                                if to.write_all(&buf[..n]).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    let _ = to.shutdown(std::net::Shutdown::Both);
+                }
+            };
+            std::thread::spawn(pump(client_side, server_side));
+            std::thread::spawn(pump(back.0, back.1));
+            match kill_rx.recv() {
+                Ok(()) => {
+                    let _ = kill_c.shutdown(std::net::Shutdown::Both);
+                    let _ = kill_s.shutdown(std::net::Shutdown::Both);
+                }
+                Err(_) => break, // test over; leave the last connection be
+            }
+        }
+    });
+
+    let remote = RemoteSource::connect(proxy_addr)
+        .unwrap()
+        .with_resumption(10, Duration::from_millis(20));
+    let first = remote.fetch_block(0, 8).unwrap();
+    assert_eq!(first, oracle_block(0, 4, 0, 8));
+
+    kill_tx.send(()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the kill land
+    // The next fetch rides the reconnect: re-LEASE at the confirmed
+    // cursor, then continue exactly where the dead connection stopped.
+    assert_eq!(
+        remote.fetch_block(0, 8).unwrap(),
+        oracle_block(0, 4, 8, 8),
+        "bit-identical continuation across the dropped connection"
+    );
+    assert_eq!(remote.fetch_block(0, 4).unwrap(), oracle_block(0, 4, 16, 4));
+    drop(remote);
+    server.wait_sessions_closed(2);
+}
+
+#[test]
+fn reserved_request_id_is_rejected_over_the_wire() {
+    // CONNECTION_REQ (u64::MAX) is the server's connection-level error
+    // sentinel: a client FILL carrying it must die at frame decode with
+    // a typed Protocol ERR — before it can corrupt reply routing.
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let mut sock = TcpStream::connect(server.local_addr()).unwrap();
+    protocol::write_frame(&mut sock, &Frame::Hello { version: protocol::VERSION }).unwrap();
+    assert!(matches!(
+        protocol::read_frame(&mut sock).unwrap(),
+        Some(Frame::Welcome { .. })
+    ));
+    protocol::write_frame(
+        &mut sock,
+        &Frame::Fill {
+            req: protocol::CONNECTION_REQ,
+            target: ReqTarget::Group(0),
+            rows: 1,
+            repeat: 1,
+            deadline_ms: 0,
+            tag: 0,
+        },
+    )
+    .unwrap();
+    match protocol::read_frame(&mut sock).unwrap() {
+        Some(Frame::Err { req, error: Error::Protocol(m), .. }) => {
+            assert_eq!(req, protocol::CONNECTION_REQ);
+            assert!(m.contains("reserved"), "{m}");
+        }
+        other => panic!("expected a typed protocol ERR, got {other:?}"),
+    }
+    assert!(protocol::read_frame(&mut sock).unwrap().is_none(), "connection closed");
+    server.wait_sessions_closed(1);
+    // The server survives to serve a clean client bit-identically.
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    assert_eq!(remote.fetch_block(0, 4).unwrap(), oracle_block(0, 4, 0, 4));
+}
+
+#[test]
+fn loadgen_connect_failure_is_bounded_and_typed() {
+    // A dead endpoint: the retry schedule is bounded (attempts ×
+    // backoff) and the final failure is a typed error naming it — not
+    // an unbounded sleep loop.
+    let addr = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+        // listener drops here; the port has no listener when loadgen dials
+    };
+    let cfg = LoadgenConfig {
+        addr,
+        connections: 1,
+        connect_attempts: 2,
+        connect_backoff: Duration::from_millis(1),
+        ..LoadgenConfig::default()
+    };
+    let t0 = Instant::now();
+    let err = loadgen::run(&cfg).unwrap_err();
+    assert!(matches!(err, Error::Protocol(_)), "{err}");
+    let msg = format!("{err}");
+    assert!(msg.contains("after 2 attempts"), "schedule named in the error: {msg}");
+    assert!(t0.elapsed() < Duration::from_secs(30), "bounded retry, not a spin");
+}
+
+#[test]
+fn multi_engine_server_routes_a_flat_namespace() {
+    // One server fronting two engines: clients see engine 0's streams
+    // and groups first, then engine 1's. Independent local twins of
+    // each engine are the bit-exactness oracle.
+    let server = Server::start_multi(
+        vec![
+            source(Engine::Native, 2, 4, 4, u64::MAX / 2), // streams 0..8,  groups 0..2
+            source(Engine::Sharded, 3, 4, 4, u64::MAX / 2), // streams 8..20, groups 2..5
+        ],
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let local_a = source(Engine::Native, 2, 4, 4, u64::MAX / 2);
+    let local_b = source(Engine::Sharded, 3, 4, 4, u64::MAX / 2);
+    let remote = RemoteSource::connect(server.local_addr()).unwrap();
+    assert_eq!(remote.n_streams(), 20);
+    assert_eq!(remote.n_groups(), 5);
+    assert_eq!(remote.info().engine, "multi");
+    for g in 0..5usize {
+        let expect = if g < 2 {
+            local_a.fetch_block(g, 8).unwrap()
+        } else {
+            local_b.fetch_block(g - 2, 8).unwrap()
+        };
+        assert_eq!(remote.fetch_block(g, 8).unwrap(), expect, "group {g} routes bit-exact");
+    }
+    // Streams rebase across the boundary too (global 10 = engine B's 2).
+    let mut got = vec![0u32; 6];
+    remote.fetch(10, &mut got).unwrap();
+    let mut expect = vec![0u32; 6];
+    local_b.fetch(2, &mut expect).unwrap();
+    assert_eq!(got, expect, "stream fetch across the engine boundary");
+    // Server-side resolve failures carry the *summed* totals (a raw
+    // client bypasses RemoteSource's local validation).
+    let client = RemoteClient::connect(server.local_addr()).unwrap();
+    let req = client.submit_fill(&Request::stream(20).rows(1), 1).unwrap();
+    assert_eq!(
+        client.next_chunk(req).unwrap().result.unwrap_err(),
+        Error::UnknownStream { stream: 20, have: 20 }
+    );
+    let req = client.submit_fill(&Request::group(5).rows(1), 1).unwrap();
+    assert_eq!(
+        client.next_chunk(req).unwrap().result.unwrap_err(),
+        Error::GroupOutOfRange { group: 5, have: 5 }
+    );
+    client.bye().unwrap();
 }
 
 #[test]

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use thundering::serve::loadgen::{self, LoadgenConfig};
 use thundering::serve::{ServeConfig, Server};
 use thundering::util::bench::{black_box, Bench, JsonReport};
-use thundering::{Engine, EngineBuilder, StreamReq, StreamSource};
+use thundering::{DistSpec, Engine, EngineBuilder, Request, StreamReq, StreamSource};
 
 /// Server threads alive right now, by their `thng-` comm prefix — the
 /// O(cores) half of the scaling claim. Linux-only (reads /proc).
@@ -165,6 +165,33 @@ fn main() {
             }
         });
 
+        // Distribution shaping (DESIGN.md §7) on the same completion
+        // front: rows/2 shaped rows at 2 raw draws each, so every
+        // iteration consumes exactly the raw generation of
+        // engine/completion_overlap and the throughput ratio is the
+        // pure cost of shaping on the shard threads. Items stay counted
+        // in raw-draw equivalents for that reason.
+        let dist_rows = rows / 2;
+        let dist_specs =
+            [DistSpec::Normal { mean: 0.0, std: 1.0 }, DistSpec::Exponential { rate: 1.0 }];
+        let m_dist: Vec<_> = dist_specs
+            .iter()
+            .map(|&spec| {
+                b.run(&format!("engine/dist_{}", spec.name()), numbers, || {
+                    for _ in 0..rounds {
+                        for g in 0..n_groups {
+                            completion
+                                .submit(Request::group(g).rows(dist_rows).dist(spec))
+                                .unwrap();
+                        }
+                    }
+                    for c in completion.wait_all(None) {
+                        black_box(c.result.unwrap());
+                    }
+                })
+            })
+            .collect();
+
         // Serving layer: the same engine behind loopback TCP, hammered
         // by 8 connections through the loadgen driver — what one
         // network hop plus framing costs relative to in-process drains
@@ -287,6 +314,18 @@ fn main() {
         rep.context_num("completion_overlap_speedup", overlap_speedup);
         rep.context_num("serve_loadgen_grn_per_s", m_serve.throughput() / 1e9);
         rep.context_num("serve_connections", connections as f64);
+        // Shaped-vs-raw on the completion front, in raw-draw GRN/s; the
+        // ratio (> 1) is what shaping costs at equal raw generation.
+        for (spec, m) in dist_specs.iter().zip(&m_dist) {
+            rep.context_num(
+                &format!("dist_{}_grn_per_s", spec.name()),
+                m.throughput() / 1e9,
+            );
+            rep.context_num(
+                &format!("dist_{}_overhead_ratio", spec.name()),
+                m_completion.throughput() / m.throughput(),
+            );
+        }
         // Per-fill service latency through the full serving stack
         // (submit → final chunk over loopback TCP), from the last
         // loadgen run — the QoS numbers the deadline story is about.
@@ -307,6 +346,9 @@ fn main() {
         rep.push(&m_single);
         rep.push(&m_sharded);
         rep.push(&m_completion);
+        for m in &m_dist {
+            rep.push(m);
+        }
         rep.push(&m_serve);
         let out = std::env::var("BENCH_PARALLEL_OUT")
             .unwrap_or_else(|_| "BENCH_parallel.json".to_string());

@@ -1,0 +1,227 @@
+//! Monte-Carlo option pricing under Merton jump-diffusion, driven
+//! entirely by shaped streams (DESIGN.md §7): the diffusion normal from
+//! stream 0, the jump-aggregate normal from stream 1, and the jump
+//! count from a Poisson-shaped stream 2.
+//!
+//! Per path the terminal price is
+//!
+//! ```text
+//! S_T = s0 · exp((r − σ²/2 − λκ)T + σ√T·Z + N·μJ + δ·√N·W)
+//! ```
+//!
+//! with `Z, W ~ Normal(0,1)`, `N ~ Poisson(λT)`, and compensator
+//! `κ = e^{μJ + δ²/2} − 1`. Conditioning on `N`, the summed jump sizes
+//! are exactly `Normal(N·μJ, N·δ²)` — so one normal (`W`) per path
+//! replaces a variable-length sum of per-jump normals, keeping raw
+//! consumption **fixed** per path (the determinism contract shaped
+//! streams require). The accuracy oracle is Merton's closed-form
+//! series of Black–Scholes prices ([`merton_call`]).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::apps::black_scholes_call;
+use crate::coordinator::{CompletionQueue, Request, StreamSource};
+use crate::dist::{decode_f64, DistSpec};
+use crate::error::Error;
+
+/// Market plus jump parameters of the Merton model.
+#[derive(Debug, Clone, Copy)]
+pub struct JumpParams {
+    /// Spot price.
+    pub s0: f64,
+    /// Strike.
+    pub k: f64,
+    /// Risk-free rate.
+    pub r: f64,
+    /// Diffusion volatility σ.
+    pub sigma: f64,
+    /// Maturity in years.
+    pub t: f64,
+    /// Jump intensity λ (expected jumps per year); must be > 0.
+    pub jump_rate: f64,
+    /// Mean log jump size μJ.
+    pub jump_mean: f64,
+    /// Log jump size standard deviation δ (≥ 0).
+    pub jump_std: f64,
+}
+
+impl Default for JumpParams {
+    fn default() -> Self {
+        Self {
+            s0: 100.0,
+            k: 100.0,
+            r: 0.05,
+            sigma: 0.2,
+            t: 1.0,
+            jump_rate: 0.5,
+            jump_mean: -0.1,
+            jump_std: 0.15,
+        }
+    }
+}
+
+/// A measured jump-diffusion run.
+#[derive(Debug, Clone)]
+pub struct JumpRun {
+    /// Engine identifier of the source behind the queue.
+    pub engine: &'static str,
+    /// Monte-Carlo paths simulated.
+    pub paths: u64,
+    /// The Monte-Carlo call price.
+    pub price: f64,
+    /// Merton's closed-form price for the same parameters.
+    pub closed_form: f64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+/// Merton's closed-form call price: a Poisson-weighted series of
+/// Black–Scholes prices with jump-adjusted rate and volatility,
+/// `λ' = λ(1+κ)`, `σ_n² = σ² + nδ²/T`, `r_n = r − λκ + n·ln(1+κ)/T`.
+pub fn merton_call(p: JumpParams) -> f64 {
+    let kappa = (p.jump_mean + 0.5 * p.jump_std * p.jump_std).exp() - 1.0;
+    let lam_t = p.jump_rate * (1.0 + kappa) * p.t;
+    let mut weight = (-lam_t).exp(); // e^{−λ'T}·(λ'T)^n/n!, iteratively
+    let mut price = 0.0;
+    for n in 0..64u32 {
+        let nf = f64::from(n);
+        let sigma_n = (p.sigma * p.sigma + nf * p.jump_std * p.jump_std / p.t).sqrt();
+        let r_n = p.r - p.jump_rate * kappa
+            + nf * (p.jump_mean + 0.5 * p.jump_std * p.jump_std) / p.t;
+        price += weight * black_scholes_call(p.s0, p.k, r_n, sigma_n.max(1e-12), p.t);
+        weight *= lam_t / f64::from(n + 1);
+    }
+    price
+}
+
+/// Paths simulated per trio of shaped sub-requests.
+const CHUNK: usize = 8192;
+
+/// Price a European call under Merton jump-diffusion over `paths`
+/// Monte-Carlo paths, all randomness drawn through shaped fills.
+pub fn run(
+    source: Arc<dyn StreamSource>,
+    paths: u64,
+    params: JumpParams,
+) -> Result<JumpRun, Error> {
+    let p = params;
+    let finite = [p.s0, p.k, p.r, p.sigma, p.t, p.jump_rate, p.jump_mean, p.jump_std]
+        .iter()
+        .all(|v| v.is_finite());
+    if !finite || p.s0 <= 0.0 || p.k <= 0.0 || p.sigma <= 0.0 || p.t <= 0.0 {
+        return Err(Error::InvalidConfig(
+            "jumpdiff needs finite parameters with s0, k, sigma, t > 0".into(),
+        ));
+    }
+    if !(p.jump_rate > 0.0) || p.jump_std < 0.0 {
+        return Err(Error::InvalidConfig(format!(
+            "jumpdiff needs jump_rate > 0 and jump_std >= 0 \
+             (got rate {}, std {})",
+            p.jump_rate, p.jump_std
+        )));
+    }
+    if paths == 0 {
+        return Err(Error::InvalidConfig("jumpdiff needs at least one path".into()));
+    }
+    if source.n_streams() < 3 {
+        return Err(Error::InvalidConfig(
+            "jumpdiff needs at least 3 streams (Z on 0, W on 1, N on 2)".into(),
+        ));
+    }
+    // Poisson(λT) shaping validates its own rate bound.
+    let count_spec = DistSpec::Poisson { rate: p.jump_rate * p.t };
+    count_spec.validate()?;
+    let normal = DistSpec::Normal { mean: 0.0, std: 1.0 };
+    let engine = source.engine_kind();
+    let t0 = Instant::now();
+    let cq = CompletionQueue::new(source);
+    let kappa = (p.jump_mean + 0.5 * p.jump_std * p.jump_std).exp() - 1.0;
+    let drift = (p.r - 0.5 * p.sigma * p.sigma - p.jump_rate * kappa) * p.t;
+    let vol = p.sigma * p.t.sqrt();
+    let disc = (-p.r * p.t).exp();
+    let mut sum = 0f64;
+    let mut done = 0u64;
+    while done < paths {
+        let n = CHUNK.min((paths - done) as usize);
+        let (t_z, _) = cq.submit(Request::stream(0).rows(n).dist(normal))?;
+        let (t_w, _) = cq.submit(Request::stream(1).rows(n).dist(normal))?;
+        let (t_n, _) = cq.submit(Request::stream(2).rows(n).dist(count_spec))?;
+        let harvest = |r: Result<Option<crate::Completion>, Error>| {
+            r?.ok_or_else(|| {
+                Error::Backend("jumpdiff ticket harvested by a foreign consumer".into())
+            })?
+            .result
+        };
+        let z = decode_f64(&harvest(cq.wait_for(t_z, None))?);
+        let w = decode_f64(&harvest(cq.wait_for(t_w, None))?);
+        let counts = harvest(cq.wait_for(t_n, None))?;
+        for i in 0..n {
+            let jumps = f64::from(counts[i]);
+            let jumpsum = jumps * p.jump_mean + p.jump_std * jumps.sqrt() * w[i];
+            let st = p.s0 * (drift + vol * z[i] + jumpsum).exp();
+            sum += (st - p.k).max(0.0);
+        }
+        done += n as u64;
+    }
+    Ok(JumpRun {
+        engine,
+        paths,
+        price: disc * sum / paths as f64,
+        closed_form: merton_call(p),
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, EngineBuilder};
+
+    fn source(engine: Engine, seed: u64) -> Arc<dyn StreamSource> {
+        EngineBuilder::new(192).engine(engine).root_seed(seed).build_arc().unwrap()
+    }
+
+    #[test]
+    fn closed_form_degenerates_to_black_scholes() {
+        // Vanishing jump sizes: every jump multiplies the price by
+        // e^0 = 1, so the series must collapse to the plain BS price.
+        let p = JumpParams { jump_mean: 0.0, jump_std: 0.0, ..JumpParams::default() };
+        let bs = black_scholes_call(p.s0, p.k, p.r, p.sigma, p.t);
+        assert!((merton_call(p) - bs).abs() < 1e-9, "{} vs {bs}", merton_call(p));
+    }
+
+    #[test]
+    fn mc_price_near_closed_form() {
+        let run = run(source(Engine::Native, 42), 300_000, JumpParams::default()).unwrap();
+        assert!(
+            (run.price - run.closed_form).abs() < 0.25,
+            "{} vs {}",
+            run.price,
+            run.closed_form
+        );
+    }
+
+    #[test]
+    fn engines_agree_bit_for_bit() {
+        let a = run(source(Engine::Native, 9), 60_000, JumpParams::default()).unwrap();
+        let b = run(source(Engine::Sharded, 9), 60_000, JumpParams::default()).unwrap();
+        assert_eq!(a.price, b.price, "shaped rows are engine-invariant");
+    }
+
+    #[test]
+    fn rejects_out_of_domain_parameters() {
+        let src = source(Engine::Native, 1);
+        let bad = [
+            JumpParams { jump_rate: 0.0, ..JumpParams::default() },
+            JumpParams { jump_rate: -1.0, ..JumpParams::default() },
+            JumpParams { jump_std: -0.1, ..JumpParams::default() },
+            JumpParams { sigma: 0.0, ..JumpParams::default() },
+            JumpParams { t: f64::NAN, ..JumpParams::default() },
+        ];
+        for p in bad {
+            let err = run(src.clone(), 100, p).unwrap_err();
+            assert!(matches!(err, Error::InvalidConfig(_)), "{p:?}: {err}");
+        }
+    }
+}

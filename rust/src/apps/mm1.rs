@@ -1,0 +1,158 @@
+//! M/M/1 queue simulation on shaped exponential streams (DESIGN.md §7):
+//! interarrival times are `Exponential(lambda)` draws from stream 0,
+//! service times `Exponential(mu)` draws from stream 1, and the mean
+//! waiting time in queue follows the Lindley recursion
+//! `W_{n+1} = max(0, W_n + S_n − A_{n+1})`. The closed-form M/M/1 mean
+//! wait `Wq = λ / (μ(μ − λ))` is the accuracy oracle.
+//!
+//! The driver consumes shaped fills through the
+//! [`CompletionQueue`](crate::CompletionQueue): both streams' chunks
+//! are submitted together, so on the sharded engine arrival and
+//! service shaping overlap. Deterministic for a given source
+//! `(root_seed, ..)` — the shaped rows are a pure function of the
+//! streams' raw tiles, identical on every engine.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{CompletionQueue, Request, StreamSource};
+use crate::dist::{decode_f64, DistSpec};
+use crate::error::Error;
+
+/// Arrival/service rates of the queue.
+#[derive(Debug, Clone, Copy)]
+pub struct Mm1Params {
+    /// Arrival rate λ (customers per unit time).
+    pub lambda: f64,
+    /// Service rate μ; the queue is stable only when `mu > lambda`.
+    pub mu: f64,
+}
+
+impl Default for Mm1Params {
+    fn default() -> Self {
+        Self { lambda: 0.8, mu: 1.0 }
+    }
+}
+
+/// A measured M/M/1 run.
+#[derive(Debug, Clone)]
+pub struct Mm1Run {
+    /// Engine identifier of the source behind the queue.
+    pub engine: &'static str,
+    /// Customers simulated.
+    pub customers: u64,
+    /// Measured mean waiting time in queue (the Lindley average).
+    pub mean_wait: f64,
+    /// Closed-form `Wq = λ / (μ(μ − λ))`.
+    pub expected_wait: f64,
+    /// Utilization `ρ = λ / μ`.
+    pub utilization: f64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+}
+
+/// Customers simulated per pair of shaped sub-requests.
+const CHUNK: usize = 8192;
+
+/// Simulate `customers` arrivals through the queue and return the
+/// measured against the closed-form mean wait.
+pub fn run(
+    source: Arc<dyn StreamSource>,
+    customers: u64,
+    params: Mm1Params,
+) -> Result<Mm1Run, Error> {
+    let Mm1Params { lambda, mu } = params;
+    if !(lambda.is_finite() && mu.is_finite() && lambda > 0.0 && mu > lambda) {
+        return Err(Error::InvalidConfig(format!(
+            "mm1 needs 0 < lambda < mu for a stable queue (got lambda {lambda}, mu {mu})"
+        )));
+    }
+    if customers == 0 {
+        return Err(Error::InvalidConfig("mm1 needs at least one customer".into()));
+    }
+    if source.n_streams() < 2 {
+        return Err(Error::InvalidConfig(
+            "mm1 needs at least 2 streams (arrivals on 0, services on 1)".into(),
+        ));
+    }
+    let engine = source.engine_kind();
+    let t0 = Instant::now();
+    let cq = CompletionQueue::new(source);
+    let mut wait = 0f64; // current customer's time in queue
+    let mut sum_wait = 0f64;
+    let mut done = 0u64;
+    while done < customers {
+        let n = CHUNK.min((customers - done) as usize);
+        let (t_arrive, _) = cq.submit(
+            Request::stream(0).rows(n).dist(DistSpec::Exponential { rate: lambda }),
+        )?;
+        let (t_serve, _) = cq
+            .submit(Request::stream(1).rows(n).dist(DistSpec::Exponential { rate: mu }))?;
+        let take = |r: Result<Option<crate::Completion>, Error>| -> Result<Vec<f64>, Error> {
+            let c = r?.ok_or_else(|| {
+                Error::Backend("mm1 ticket harvested by a foreign consumer".into())
+            })?;
+            Ok(decode_f64(&c.result?))
+        };
+        let arrivals = take(cq.wait_for(t_arrive, None))?;
+        let services = take(cq.wait_for(t_serve, None))?;
+        for (a, s) in arrivals.iter().zip(&services) {
+            sum_wait += wait;
+            wait = (wait + s - a).max(0.0);
+        }
+        done += n as u64;
+    }
+    Ok(Mm1Run {
+        engine,
+        customers,
+        mean_wait: sum_wait / customers as f64,
+        expected_wait: lambda / (mu * (mu - lambda)),
+        utilization: lambda / mu,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, EngineBuilder};
+
+    fn source(engine: Engine, seed: u64) -> Arc<dyn StreamSource> {
+        EngineBuilder::new(128).engine(engine).root_seed(seed).build_arc().unwrap()
+    }
+
+    #[test]
+    fn mean_wait_near_closed_form() {
+        let run = run(source(Engine::Native, 42), 200_000, Mm1Params::default()).unwrap();
+        // Wq = 0.8 / (1.0 · 0.2) = 4.0; the Lindley average over 200k
+        // customers of a ρ = 0.8 queue is noisy, so the gate is loose.
+        assert_eq!(run.expected_wait, 4.0);
+        assert!(
+            (run.mean_wait - run.expected_wait).abs() / run.expected_wait < 0.25,
+            "Wq {} vs {}",
+            run.mean_wait,
+            run.expected_wait
+        );
+    }
+
+    #[test]
+    fn engines_agree_bit_for_bit() {
+        let p = Mm1Params { lambda: 0.5, mu: 1.25 };
+        let a = run(source(Engine::Native, 9), 50_000, p).unwrap();
+        let b = run(source(Engine::Sharded, 9), 50_000, p).unwrap();
+        assert_eq!(a.mean_wait, b.mean_wait, "shaped rows are engine-invariant");
+    }
+
+    #[test]
+    fn rejects_unstable_or_degenerate_parameters() {
+        let src = source(Engine::Native, 1);
+        for (lambda, mu) in
+            [(1.0, 1.0), (2.0, 1.0), (0.0, 1.0), (-1.0, 1.0), (f64::NAN, 1.0)]
+        {
+            let err = run(src.clone(), 100, Mm1Params { lambda, mu }).unwrap_err();
+            assert!(matches!(err, Error::InvalidConfig(_)), "{lambda}/{mu}: {err}");
+        }
+        let err = run(src, 0, Mm1Params::default()).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+}

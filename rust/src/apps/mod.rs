@@ -1,5 +1,8 @@
 //! Case-study applications (paper Sec. 6): Monte-Carlo π estimation and
-//! Black–Scholes option pricing.
+//! Black–Scholes option pricing, plus two drivers built on shaped
+//! streams (DESIGN.md §7) — an M/M/1 queue on exponential fills
+//! ([`mm1`]) and Merton jump-diffusion pricing on normal + Poisson
+//! fills ([`jump_diffusion`]).
 //!
 //! Each app has **one** engine-agnostic driver — `run(&dyn StreamSource,
 //! ..)` — that consumes whichever engine the caller built
@@ -10,6 +13,8 @@
 //! ([`gpu_model`]).
 
 pub mod gpu_model;
+pub mod jump_diffusion;
+pub mod mm1;
 pub mod option_pricing;
 pub mod pi;
 

@@ -75,8 +75,9 @@ impl PayoffKernel {
 
     #[inline]
     fn pair(&self, a: u32, b: u32) -> f64 {
-        let u1 = ((a >> 8) as f64 * (1.0 / 16_777_216.0)).max(5.96e-8);
-        let u2 = (b >> 8) as f64 * (1.0 / 16_777_216.0);
+        // Floor keeps ln(u1) finite when the top 24 bits are all zero.
+        let u1 = crate::util::unit::f64_24(a).max(5.96e-8);
+        let u2 = crate::util::unit::f64_24(b);
         let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
         let st = self.s0 * (self.drift + self.vol * z).exp();
         (st - self.k).max(0.0) * self.disc

@@ -43,8 +43,8 @@ pub fn run_pjrt(executor: &TileExecutor, draws: u64, seed: u64) -> Result<AppRun
 /// quarter-circle hit test (1.0 or 0.0; exact in f64 up to 2^53 draws).
 #[inline]
 fn pair_hit(a: u32, b: u32) -> f64 {
-    let x = (a >> 8) as f32 * (1.0 / 16_777_216.0);
-    let y = (b >> 8) as f32 * (1.0 / 16_777_216.0);
+    let x = crate::util::unit::f32_24(a);
+    let y = crate::util::unit::f32_24(b);
     if x * x + y * y < 1.0 {
         1.0
     } else {

@@ -77,6 +77,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::source::StreamSource;
+use crate::dist::{self, DistSpec};
 use crate::error::Error;
 
 /// What one submitted request targets.
@@ -145,6 +146,11 @@ impl StreamReq {
 ///   state. Default: wait forever.
 /// * [`tag`](Request::tag) — an opaque caller correlation value echoed
 ///   on the [`Completion`] (default 0).
+/// * [`dist`](Request::dist) — shape the fill into a distribution
+///   ([`DistSpec`]): `rows` then counts *shaped samples*, the engine
+///   consumes `rows × draws_per_row` raw words from the same stream
+///   cursor, and the completion payload carries the shaped encoding
+///   (see [`crate::dist`]). Default: raw u32 words.
 ///
 /// A bare [`StreamReq`] converts into a `Request` with default
 /// lifecycle options (`From` impl), so `cq.submit(StreamReq::group(g,
@@ -154,6 +160,7 @@ pub struct Request {
     req: StreamReq,
     deadline: Option<Duration>,
     tag: u64,
+    dist: Option<DistSpec>,
 }
 
 impl Request {
@@ -199,6 +206,22 @@ impl Request {
         self
     }
 
+    /// Shape the fill into `spec` ([`rows`](Self::rows) then counts
+    /// shaped samples; the payload carries the shaped encoding — see
+    /// [`crate::dist`]). The spec is validated at submission.
+    pub fn dist(mut self, spec: DistSpec) -> Self {
+        self.dist = Some(spec);
+        self
+    }
+
+    /// [`dist`](Self::dist) with an optional value — for callers
+    /// threading a configured `Option<DistSpec>` through (`None` keeps
+    /// the fill raw).
+    pub fn dist_opt(mut self, spec: Option<DistSpec>) -> Self {
+        self.dist = spec;
+        self
+    }
+
     /// The target/rows core of the request.
     pub fn stream_req(&self) -> StreamReq {
         self.req
@@ -220,6 +243,11 @@ impl Request {
         self.tag
     }
 
+    /// The shaping spec, if any.
+    pub fn get_dist(&self) -> Option<DistSpec> {
+        self.dist
+    }
+
     /// The absolute expiry instant for a submission happening `now`
     /// (`None` when no deadline is set, or when it is so far out the
     /// monotonic clock cannot represent it).
@@ -230,7 +258,7 @@ impl Request {
 
 impl From<StreamReq> for Request {
     fn from(req: StreamReq) -> Self {
-        Self { req, deadline: None, tag: 0 }
+        Self { req, deadline: None, tag: 0, dist: None }
     }
 }
 
@@ -292,11 +320,18 @@ impl std::fmt::Debug for CancelHandle {
 pub struct Completion {
     /// The ticket [`CompletionQueue::submit`] returned for this request.
     pub ticket: Ticket,
-    /// The request's target/rows core, as submitted.
+    /// The request's target/rows core, as submitted (for a shaped
+    /// request, `rows` counts shaped samples — the raw-draw
+    /// amplification is internal).
     pub req: StreamReq,
     /// The caller tag from the submitted [`Request`] (0 if none was
     /// set).
     pub tag: u64,
+    /// The shaping spec from the submitted [`Request`] (`None` for a
+    /// raw fill). When set, `result`'s payload is the shaped encoding
+    /// ([`crate::dist`]): 2 LE words per f64 sample, 1 word per
+    /// discrete sample — decode with [`shaped_f64`](Self::shaped_f64).
+    pub dist: Option<DistSpec>,
     /// The fetched numbers, or the typed error the request produced —
     /// including [`Error::Cancelled`] / [`Error::DeadlineExceeded`] for
     /// requests that never executed (check [`Error::is_retryable`]
@@ -304,10 +339,34 @@ pub struct Completion {
     pub result: Result<Vec<u32>, Error>,
 }
 
+impl Completion {
+    /// Decode a shaped f64 payload; `None` if the request was raw, a
+    /// discrete distribution (the words ARE the samples), or an error.
+    pub fn shaped_f64(&self) -> Option<Vec<f64>> {
+        match (&self.result, self.dist) {
+            (Ok(words), Some(spec)) if spec.is_f64() => Some(dist::decode_f64(words)),
+            _ => None,
+        }
+    }
+}
+
 /// A submitted-but-unfinished request (submission-queue entry).
 struct Pending {
     ticket: Ticket,
+    /// The request the engine executes: for a raw fill this is the
+    /// submission verbatim; for a shaped fill the rows are
+    /// pre-multiplied by the spec's raw-draw amplification
+    /// (`CompletionQueue::exec_shape`). Eligibility predicates and
+    /// executors only ever see this.
     req: StreamReq,
+    /// The request as the CALLER submitted it (shaped rows) — what the
+    /// completion echoes.
+    user: StreamReq,
+    /// The shaping spec; applied in `finish` to the executed payload.
+    dist: Option<DistSpec>,
+    /// Lane count of the raw payload (group_width for a group target,
+    /// 1 for a lane target) — the shape transform is lane-structured.
+    width: usize,
     /// The state-sharing group the request drains (derived from the
     /// target at submit time); per-group claims serialize on this.
     group: usize,
@@ -378,8 +437,9 @@ impl InboxState {
                 self.armed_deadlines -= 1;
                 self.done.push_back(Completion {
                     ticket: p.ticket,
-                    req: p.req,
+                    req: p.user,
                     tag: p.tag,
+                    dist: p.dist,
                     result: Err(Error::DeadlineExceeded),
                 });
                 expired += 1;
@@ -434,8 +494,9 @@ impl InboxState {
                 }
                 self.done.push_back(Completion {
                     ticket: p.ticket,
-                    req: p.req,
+                    req: p.user,
                     tag: p.tag,
+                    dist: p.dist,
                     result: Err(Error::Cancelled),
                 });
                 cancelled += 1;
@@ -507,22 +568,38 @@ impl InboxState {
     }
 
     /// Append one pending request, assigning its ticket.
-    fn enqueue(
-        &mut self,
-        req: StreamReq,
-        group: usize,
-        deadline: Option<Instant>,
-        tag: u64,
-    ) -> Ticket {
+    fn enqueue(&mut self, prep: Prepared, deadline: Option<Instant>, tag: u64) -> Ticket {
         let ticket = Ticket(self.next_ticket);
         self.next_ticket += 1;
         self.outstanding_tickets.insert(ticket.id());
         if deadline.is_some() {
             self.armed_deadlines += 1;
         }
-        self.pending.push_back(Pending { ticket, req, group, deadline, tag });
+        self.pending.push_back(Pending {
+            ticket,
+            req: prep.exec,
+            user: prep.user,
+            dist: prep.dist,
+            width: prep.width,
+            group: prep.group,
+            deadline,
+            tag,
+        });
         ticket
     }
+}
+
+/// A validated submission ready to enqueue: the request the engine will
+/// execute (shaped rows pre-multiplied into raw draws), the caller's
+/// original request core, and the shaping metadata — produced by
+/// `CompletionQueue::exec_shape`.
+#[derive(Clone, Copy)]
+struct Prepared {
+    exec: StreamReq,
+    user: StreamReq,
+    dist: Option<DistSpec>,
+    width: usize,
+    group: usize,
 }
 
 /// The shared submission/completion state between a [`CompletionQueue`]
@@ -588,47 +665,39 @@ impl CompletionInbox {
         }
     }
 
-    /// Enqueue a request (group pre-derived and validated by the
-    /// [`CompletionQueue`]), waking executors on both sides.
-    fn submit(
-        &self,
-        req: StreamReq,
-        group: usize,
-        deadline: Option<Instant>,
-        tag: u64,
-    ) -> Ticket {
-        let ticket = self.lock_state().enqueue(req, group, deadline, tag);
+    /// Enqueue a request (group pre-derived, target and spec validated
+    /// by the [`CompletionQueue`]), waking executors on both sides.
+    fn submit(&self, prep: Prepared, deadline: Option<Instant>, tag: u64) -> Ticket {
+        let ticket = self.lock_state().enqueue(prep, deadline, tag);
         // Consumers inside wait_any may claim it; the owning shard
         // re-scans.
         self.cv.notify_all();
-        self.wake_engine(group);
+        self.wake_engine(prep.group);
         ticket
     }
 
     /// Enqueue a whole batch under ONE acquisition of the state mutex
-    /// (`reqs` and `groups` are parallel slices, pre-validated by the
+    /// (`reqs` and `preps` are parallel slices, pre-validated by the
     /// [`CompletionQueue`]; deadlines are resolved against one shared
     /// `now`), then wake each involved shard once.
-    fn submit_many(&self, reqs: &[Request], groups: &[usize]) -> Vec<Ticket> {
-        debug_assert_eq!(reqs.len(), groups.len());
+    fn submit_many(&self, reqs: &[Request], preps: &[Prepared]) -> Vec<Ticket> {
+        debug_assert_eq!(reqs.len(), preps.len());
         let now = Instant::now();
         let tickets = {
             let mut st = self.lock_state();
             reqs.iter()
-                .zip(groups)
-                .map(|(req, &group)| {
-                    st.enqueue(req.stream_req(), group, req.deadline_at(now), req.tag)
-                })
+                .zip(preps)
+                .map(|(req, &prep)| st.enqueue(prep, req.deadline_at(now), req.tag))
                 .collect()
         };
         self.cv.notify_all();
         // Wake each distinct group's owner once, not once per request —
         // and dedupe in O(batch), not O(batch²): round batches over
         // thousands of groups are exactly what submit_many is for.
-        let mut woken: HashSet<usize> = HashSet::with_capacity(groups.len().min(64));
-        for &g in groups {
-            if woken.insert(g) {
-                self.wake_engine(g);
+        let mut woken: HashSet<usize> = HashSet::with_capacity(preps.len().min(64));
+        for p in preps {
+            if woken.insert(p.group) {
+                self.wake_engine(p.group);
             }
         }
         tickets
@@ -679,7 +748,17 @@ impl CompletionInbox {
         result: Result<Vec<u32>, Error>,
         to_done: bool,
     ) -> Option<Completion> {
-        let completion = Completion { ticket: p.ticket, req: p.req, tag: p.tag, result };
+        // Shaping runs HERE, outside the state lock: on the sharded
+        // engine that is the shard thread right after it generated the
+        // raw tile (shaping overlaps other groups' generation); on
+        // consumer-driven engines it is the consumer that executed the
+        // fill. Errors pass through unshaped.
+        let result = match (p.dist, result) {
+            (Some(spec), Ok(raw)) => Ok(dist::shape_words(spec, &raw, p.width)),
+            (_, r) => r,
+        };
+        let completion =
+            Completion { ticket: p.ticket, req: p.user, tag: p.tag, dist: p.dist, result };
         let handed_back = {
             let mut st = self.lock_state();
             st.claimed[p.group] = false;
@@ -746,6 +825,7 @@ impl ClaimedReq {
                 ticket: Ticket(u64::MAX),
                 req: StreamReq::group(0, 0),
                 tag: 0,
+                dist: None,
                 result: Err(Error::Backend("claim already finished".into())),
             })
     }
@@ -874,16 +954,47 @@ impl CompletionQueue {
         }
     }
 
+    /// Resolve a request into what the engine will execute: validate
+    /// the shaping spec (if any) and pre-multiply the rows by its
+    /// raw-draw amplification — a shaped request for `n` rows is a raw
+    /// request for `n · draws_per_row` rows on the same stream cursor,
+    /// which is what keeps shaped fills on the per-group FIFO and
+    /// bit-identical replay contracts with zero engine changes.
+    fn exec_shape(&self, req: &Request, group: usize) -> Result<Prepared, Error> {
+        let user = req.stream_req();
+        let (exec, width) = match req.get_dist() {
+            None => (user, 1),
+            Some(spec) => {
+                spec.validate()?;
+                let k = spec.draws_per_row();
+                let rows = user.rows().checked_mul(k).ok_or_else(|| {
+                    Error::InvalidConfig(format!(
+                        "shaped request overflows: {} rows × {k} draws/row",
+                        user.rows()
+                    ))
+                })?;
+                match user.target() {
+                    ReqTarget::Stream(s) => (StreamReq::stream(s, rows), 1),
+                    ReqTarget::Group(g) => {
+                        (StreamReq::group(g, rows), self.source.group_width())
+                    }
+                }
+            }
+        };
+        Ok(Prepared { exec, user, dist: req.get_dist(), width, group })
+    }
+
     /// Submit a request; returns its [`Ticket`] and a cloneable
     /// [`CancelHandle`] (dropping the handle cancels nothing). Targets
-    /// are validated here, so an in-flight request can only fail with a
-    /// fetch- or lifecycle-time error (backpressure, backend,
-    /// cancellation, expiry).
+    /// and shaping specs are validated here, so an in-flight request
+    /// can only fail with a fetch- or lifecycle-time error
+    /// (backpressure, backend, cancellation, expiry).
     pub fn submit(&self, req: impl Into<Request>) -> Result<(Ticket, CancelHandle), Error> {
         let req = req.into();
         let group = self.group_of(req.stream_req())?;
+        let prep = self.exec_shape(&req, group)?;
         let deadline = req.deadline_at(Instant::now());
-        let ticket = self.inbox.submit(req.stream_req(), group, deadline, req.tag);
+        let ticket = self.inbox.submit(prep, deadline, req.tag);
         let weak = Arc::downgrade(&self.inbox);
         let handle = CancelHandle::from_fn(move || {
             weak.upgrade().is_some_and(|inbox| inbox.cancel_many(&[ticket]) == 1)
@@ -900,18 +1011,20 @@ impl CompletionQueue {
     /// (the batch path does not allocate per-request handles).
     ///
     /// Validation is all-or-nothing: if any request targets an unknown
-    /// stream or group, the error is returned and **nothing** is
-    /// enqueued. On success the returned tickets are in `reqs` order
-    /// (and consecutive in submission order).
+    /// stream or group or carries an invalid shaping spec, the error is
+    /// returned and **nothing** is enqueued. On success the returned
+    /// tickets are in `reqs` order (and consecutive in submission
+    /// order).
     pub fn submit_many(&self, reqs: &[Request]) -> Result<Vec<Ticket>, Error> {
-        let mut groups = Vec::with_capacity(reqs.len());
+        let mut preps = Vec::with_capacity(reqs.len());
         for req in reqs {
-            groups.push(self.group_of(req.stream_req())?);
+            let group = self.group_of(req.stream_req())?;
+            preps.push(self.exec_shape(req, group)?);
         }
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        Ok(self.inbox.submit_many(reqs, &groups))
+        Ok(self.inbox.submit_many(reqs, &preps))
     }
 
     /// Cancel one submitted request by ticket. Returns whether the
@@ -1606,5 +1719,72 @@ mod tests {
         assert_eq!(c.result.unwrap_err(), Error::DeadlineExceeded);
         stuck.complete(Ok(Vec::new()));
         cq.wait_all(None);
+    }
+
+    #[test]
+    fn shaped_fill_is_the_shaped_oracle_on_both_engines() {
+        // A shaped group fill must equal shape_words over the exact raw
+        // oracle tile — on the shard-executing engine AND the
+        // consumer-driven one, so the replay contract extends through
+        // shaping structurally.
+        let spec = DistSpec::Normal { mean: 0.0, std: 1.0 };
+        for engine in [Engine::Sharded, Engine::Native] {
+            let cq = queue(engine, 8, 4, 8);
+            sub(&cq, Request::group(1).rows(8).dist(spec));
+            let c = cq.wait_any(None).unwrap().expect("one ticket outstanding");
+            assert_eq!(c.req.rows(), 8, "completion echoes shaped rows");
+            assert_eq!(c.dist, Some(spec));
+            let decoded = c.shaped_f64().expect("normal payload decodes as f64");
+            assert_eq!(decoded.len(), 8 * 4);
+            let words = c.result.unwrap();
+            assert_eq!(words.len(), 8 * 4 * 2, "2 LE words per f64 sample");
+            // 8 shaped rows consume 16 raw rows (2 draws/sample).
+            let raw = oracle_block(1, 4, 0, 16);
+            assert_eq!(words, dist::shape_words(spec, &raw, 4));
+        }
+    }
+
+    #[test]
+    fn shaped_lane_fetch_advances_the_stream_cursor_by_raw_draws() {
+        // 6 shaped exponential samples consume 12 raw words of the
+        // lane; a raw fetch behind it must continue at word 12.
+        let spec = DistSpec::Exponential { rate: 1.5 };
+        let cq = queue(Engine::Native, 8, 4, 8);
+        let t_shaped = sub(&cq, Request::stream(5).rows(6).dist(spec));
+        let t_raw = sub(&cq, StreamReq::stream(5, 4));
+        let mut by_ticket = std::collections::BTreeMap::new();
+        for c in cq.wait_all(None) {
+            by_ticket.insert(c.ticket, c.result.unwrap());
+        }
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+        let raw: Vec<u32> = (0..12).map(|_| s.next_u32()).collect();
+        let after: Vec<u32> = (0..4).map(|_| s.next_u32()).collect();
+        assert_eq!(by_ticket[&t_shaped], dist::shape_words(spec, &raw, 1));
+        assert_eq!(by_ticket[&t_raw], after, "raw fill continues after the shaped one");
+    }
+
+    #[test]
+    fn invalid_spec_rejected_at_submit_and_lifecycle_echoes_dist() {
+        let cq = queue(Engine::Native, 4, 2, 4);
+        let bad = Request::group(0).rows(4).dist(DistSpec::Bernoulli { p: 1.5 });
+        assert!(matches!(cq.submit(bad), Err(Error::InvalidConfig(_))));
+        assert!(matches!(
+            cq.submit_many(&[Request::group(0).rows(4), bad]),
+            Err(Error::InvalidConfig(_))
+        ));
+        assert_eq!(cq.outstanding(), 0, "nothing enqueued from rejected submissions");
+        // A cancelled shaped ticket resolves typed, echoing the shaped
+        // request (user rows + spec), and consumes no stream state.
+        let spec = DistSpec::Poisson { rate: 4.0 };
+        let (t, handle) = cq.submit(Request::group(0).rows(4).dist(spec)).unwrap();
+        assert!(handle.cancel());
+        let c = cq.wait_any(None).unwrap().expect("cancelled ticket still resolves");
+        assert_eq!(c.ticket, t);
+        assert_eq!(c.dist, Some(spec));
+        assert_eq!(c.req.rows(), 4, "echoes shaped rows, not raw draws");
+        assert_eq!(c.result.unwrap_err(), Error::Cancelled);
+        sub(&cq, StreamReq::group(0, 4));
+        let c2 = cq.wait_any(None).unwrap().unwrap();
+        assert_eq!(c2.result.unwrap(), oracle_block(0, 2, 0, 4));
     }
 }

@@ -1,0 +1,686 @@
+//! Distribution shaping: "give me N normals from stream 7" as a
+//! first-class request, everywhere a raw fill is one today.
+//!
+//! ThundeRiNG serves independent *uniform* u32 streams; every real
+//! consumer (π estimation, option pricing, queueing simulation)
+//! immediately transforms them. Following the programmable-statistics
+//! direction of Wu et al. (arXiv 2501.00193), this module makes the
+//! *distribution* part of the request surface: a [`DistSpec`] rides a
+//! [`Request`](crate::Request) (and, over the wire, the FILL/LEASE
+//! frames of protocol v4), and the engine delivers shaped output
+//! instead of raw words.
+//!
+//! **The replay contract is structural.** [`shape_words`] is a
+//! deterministic pure function from a raw u32 tile to shaped output
+//! with a FIXED raw-draw consumption per shaped sample
+//! ([`DistSpec::draws_per_row`]): same tile → same shaped rows, on
+//! every engine and over the wire, and a shaped cursor advances by a
+//! known raw amount — which is what makes lease resumption and
+//! bit-identical cross-engine replay work for shaped streams exactly
+//! as they do for raw ones.
+//!
+//! **Fixed consumption over rejection sampling.** A classic ziggurat
+//! draws a *variable* number of raw words per normal (rejection steps),
+//! which would break the fixed-consumption replay contract; accepting
+//! the ziggurat fast path and falling back to a different transform *on
+//! the same bits* is statistically biased. The normative normal
+//! transform is therefore a pinned Box–Muller (one `(ln, sqrt, cos)`
+//! per sample from two raw draws) evaluated in the same SoA-style
+//! flat loops as the generators — vectorizable, branch-free per lane,
+//! and exactly reproducible. The same policy gives the exponential its
+//! inverse-CDF form and the Poisson its bounded component
+//! decomposition. See DESIGN.md §7.
+//!
+//! **Payload encoding.** Shaped output is carried as u32 words so the
+//! whole installed base — `Completion { result: Result<Vec<u32>, _> }`,
+//! DATA frames, retention rings, replay stitching — works unchanged:
+//! an f64 sample is its IEEE bits split into two little-endian words
+//! (low word first, [`decode_f64`] recovers the values); Bernoulli and
+//! Poisson samples are one u32 word each. [`DistSpec::words_per_sample`]
+//! gives the per-sample width.
+//!
+//! **Lane structure.** For a `width`-lane group block, sample `(row i,
+//! lane j)` consumes raw draws `raw[(i·k + t)·width + j]` for `t <
+//! k = draws_per_row` — i.e. each lane consumes its own column, in
+//! order. A stream fetch (`width = 1`) therefore produces exactly the
+//! lane-`j` column of the containing group's shaped block: shaped
+//! streams inherit the raw streams' lane/block consistency.
+
+use crate::error::Error;
+use crate::util::unit;
+
+/// Upper bound on [`DistSpec::Poisson`]'s `rate`: the fixed raw-draw
+/// consumption per sample is `2·ceil(rate/16)` words, so the cap bounds
+/// the raw amplification of one shaped row (at the cap: 1250 draws per
+/// sample). Enforced by [`DistSpec::validate`] — i.e. at CLI parse time
+/// and at wire decode time, before any allocation.
+pub const MAX_POISSON_RATE: f64 = 1e4;
+
+/// Component cap for the Poisson decomposition: λ is split into
+/// `ceil(λ/16)` equal components, each ≤ 16, summed — exact by Poisson
+/// additivity, with `e^{-λᵢ} ≥ e^{-16}` keeping the inverse-CDF scan
+/// well-conditioned and short.
+const POISSON_COMPONENT_MAX: f64 = 16.0;
+
+/// Hard iteration bound for one inverse-CDF scan (λ ≤ 16 puts the mass
+/// far below this; the bound only matters when rounding plateaus the
+/// CDF just under a draw at `1 - 2⁻⁵³`). Deterministic either way.
+const POISSON_SCAN_CAP: u32 = 1024;
+
+/// A distribution to shape a stream into — the spec a shaped
+/// [`Request`](crate::Request) carries, and the unit the wire protocol
+/// (v4) encodes on FILL/LEASE.
+///
+/// `Eq`/`Hash` compare parameter *bits* (`f64::to_bits`), so specs are
+/// usable as retention/replay map keys; `-0.0` and `0.0` are distinct
+/// keys (they also shape identically, so the distinction is harmless).
+#[derive(Debug, Clone, Copy)]
+pub enum DistSpec {
+    /// `f64` uniform on `[0, 1)` (32-bit density; 1 draw/sample).
+    Uniform01,
+    /// `f64` uniform on `[lo, hi)` (1 draw/sample).
+    UniformRange { lo: f64, hi: f64 },
+    /// `f64` normal via the pinned Box–Muller transform (2
+    /// draws/sample; see the module docs for the ziggurat policy).
+    Normal { mean: f64, std: f64 },
+    /// `f64` exponential, `-ln(1-u)/rate` on a 53-bit uniform (2
+    /// draws/sample).
+    Exponential { rate: f64 },
+    /// `u32` in `{0, 1}`, `P(1) = p` (1 draw/sample).
+    Bernoulli { p: f64 },
+    /// `u32` count, Poisson(`rate`) via bounded inverse-CDF over
+    /// `ceil(rate/16)` components (`2·ceil(rate/16)` draws/sample;
+    /// `rate ≤` [`MAX_POISSON_RATE`]).
+    Poisson { rate: f64 },
+}
+
+impl DistSpec {
+    /// The wire encoding: `(kind, param_a, param_b)` — kind 1–6 in
+    /// declaration order, unused params 0. Kind 0 is reserved on the
+    /// wire for "no shaping" (a raw fill).
+    pub fn wire_parts(&self) -> (u8, f64, f64) {
+        match *self {
+            DistSpec::Uniform01 => (1, 0.0, 0.0),
+            DistSpec::UniformRange { lo, hi } => (2, lo, hi),
+            DistSpec::Normal { mean, std } => (3, mean, std),
+            DistSpec::Exponential { rate } => (4, rate, 0.0),
+            DistSpec::Bernoulli { p } => (5, p, 0.0),
+            DistSpec::Poisson { rate } => (6, rate, 0.0),
+        }
+    }
+
+    /// Decode the wire encoding, validating the parameter domain —
+    /// out-of-domain or non-finite parameters and unknown kinds fail
+    /// typed *before* any payload is allocated (the serve codec maps
+    /// the message into [`Error::Protocol`]).
+    pub fn from_wire(kind: u8, a: f64, b: f64) -> Result<Self, Error> {
+        let spec = match kind {
+            1 => DistSpec::Uniform01,
+            2 => DistSpec::UniformRange { lo: a, hi: b },
+            3 => DistSpec::Normal { mean: a, std: b },
+            4 => DistSpec::Exponential { rate: a },
+            5 => DistSpec::Bernoulli { p: a },
+            6 => DistSpec::Poisson { rate: a },
+            k => {
+                return Err(Error::InvalidConfig(format!("unknown distribution kind {k}")))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject non-finite or out-of-domain parameters with a typed
+    /// [`Error::InvalidConfig`] naming the offender. Runs at CLI parse,
+    /// at wire decode (mapped to `Error::Protocol` there), and at
+    /// submission — a spec inside an accepted request is always sane.
+    pub fn validate(&self) -> Result<(), Error> {
+        let fail = |msg: String| Err(Error::InvalidConfig(msg));
+        match *self {
+            DistSpec::Uniform01 => Ok(()),
+            DistSpec::UniformRange { lo, hi } => {
+                if !lo.is_finite() || !hi.is_finite() {
+                    fail(format!("range bounds must be finite (got {lo}, {hi})"))
+                } else if lo >= hi {
+                    fail(format!("range lo ({lo}) must be < hi ({hi})"))
+                } else {
+                    Ok(())
+                }
+            }
+            DistSpec::Normal { mean, std } => {
+                if !mean.is_finite() || !std.is_finite() {
+                    fail(format!("normal parameters must be finite (got {mean}, {std})"))
+                } else if std < 0.0 {
+                    fail(format!("normal std ({std}) must be >= 0"))
+                } else {
+                    Ok(())
+                }
+            }
+            DistSpec::Exponential { rate } => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    fail(format!("exponential rate ({rate}) must be finite and > 0"))
+                } else {
+                    Ok(())
+                }
+            }
+            DistSpec::Bernoulli { p } => {
+                if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                    fail(format!("bernoulli p ({p}) must be in [0, 1]"))
+                } else {
+                    Ok(())
+                }
+            }
+            DistSpec::Poisson { rate } => {
+                if !rate.is_finite() || rate <= 0.0 {
+                    fail(format!("poisson rate ({rate}) must be finite and > 0"))
+                } else if rate > MAX_POISSON_RATE {
+                    fail(format!(
+                        "poisson rate ({rate}) exceeds the fixed-consumption cap \
+                         ({MAX_POISSON_RATE})"
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Parse the CLI syntax: `uniform` | `range:lo,hi` |
+    /// `normal[:mean,std]` (bare `normal` = standard normal) |
+    /// `exp:rate` | `bernoulli:p` | `poisson:rate`. Validates the
+    /// domain, so a parsed spec is always submittable.
+    pub fn parse(s: &str) -> Result<Self, Error> {
+        fn num(tok: &str, what: &str) -> Result<f64, Error> {
+            tok.trim()
+                .parse::<f64>()
+                .map_err(|_| Error::InvalidConfig(format!("bad {what} '{tok}' in --dist")))
+        }
+        let (name, args) = s.split_once(':').map_or((s, ""), |(n, a)| (n, a));
+        let spec = match name {
+            "uniform" => {
+                if !args.is_empty() {
+                    return Err(Error::InvalidConfig(format!(
+                        "uniform takes no parameters (got '{args}')"
+                    )));
+                }
+                DistSpec::Uniform01
+            }
+            "range" => {
+                let (lo, hi) = args.split_once(',').ok_or_else(|| {
+                    Error::InvalidConfig(format!("range needs lo,hi (got '{args}')"))
+                })?;
+                DistSpec::UniformRange { lo: num(lo, "range lo")?, hi: num(hi, "range hi")? }
+            }
+            "normal" => {
+                if args.is_empty() {
+                    DistSpec::Normal { mean: 0.0, std: 1.0 }
+                } else {
+                    let (m, sd) = args.split_once(',').ok_or_else(|| {
+                        Error::InvalidConfig(format!("normal needs mean,std (got '{args}')"))
+                    })?;
+                    DistSpec::Normal {
+                        mean: num(m, "normal mean")?,
+                        std: num(sd, "normal std")?,
+                    }
+                }
+            }
+            "exp" => DistSpec::Exponential { rate: num(args, "exponential rate")? },
+            "bernoulli" => DistSpec::Bernoulli { p: num(args, "bernoulli p")? },
+            "poisson" => DistSpec::Poisson { rate: num(args, "poisson rate")? },
+            other => {
+                return Err(Error::InvalidConfig(format!(
+                    "unknown distribution '{other}' (expected uniform | range:lo,hi | \
+                     normal[:mean,std] | exp:rate | bernoulli:p | poisson:rate)"
+                )))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The distribution family name (CLI keyword / bench-row label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistSpec::Uniform01 => "uniform",
+            DistSpec::UniformRange { .. } => "range",
+            DistSpec::Normal { .. } => "normal",
+            DistSpec::Exponential { .. } => "exp",
+            DistSpec::Bernoulli { .. } => "bernoulli",
+            DistSpec::Poisson { .. } => "poisson",
+        }
+    }
+
+    /// Raw u32 draws consumed per shaped sample — FIXED per spec, which
+    /// is what keeps shaped streams on the bit-identical replay
+    /// contract (see the module docs). A shaped request for `n` rows
+    /// executes as a raw request for `n · draws_per_row` rows.
+    pub fn draws_per_row(&self) -> usize {
+        match *self {
+            DistSpec::Uniform01 | DistSpec::UniformRange { .. } | DistSpec::Bernoulli { .. } => {
+                1
+            }
+            DistSpec::Normal { .. } | DistSpec::Exponential { .. } => 2,
+            DistSpec::Poisson { rate } => 2 * poisson_components(rate),
+        }
+    }
+
+    /// u32 words per shaped sample in the output payload: 2 for the f64
+    /// families (IEEE bits, low word first), 1 for the discrete ones.
+    pub fn words_per_sample(&self) -> usize {
+        if self.is_f64() {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Whether shaped samples are f64 values (decode with
+    /// [`decode_f64`]) rather than plain u32 words.
+    pub fn is_f64(&self) -> bool {
+        !matches!(self, DistSpec::Bernoulli { .. } | DistSpec::Poisson { .. })
+    }
+}
+
+// Eq/Hash over parameter bits so specs can key retention/replay maps
+// (f64 has no derived Eq; NaN params never pass validate, and bitwise
+// identity is exactly the replay-compatibility relation we want).
+impl PartialEq for DistSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for DistSpec {}
+
+impl std::hash::Hash for DistSpec {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.key().hash(state);
+    }
+}
+
+impl DistSpec {
+    fn key(&self) -> (u8, u64, u64) {
+        let (k, a, b) = self.wire_parts();
+        (k, a.to_bits(), b.to_bits())
+    }
+}
+
+impl std::fmt::Display for DistSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DistSpec::Uniform01 => write!(f, "uniform"),
+            DistSpec::UniformRange { lo, hi } => write!(f, "range:{lo},{hi}"),
+            DistSpec::Normal { mean, std } => write!(f, "normal:{mean},{std}"),
+            DistSpec::Exponential { rate } => write!(f, "exp:{rate}"),
+            DistSpec::Bernoulli { p } => write!(f, "bernoulli:{p}"),
+            DistSpec::Poisson { rate } => write!(f, "poisson:{rate}"),
+        }
+    }
+}
+
+fn poisson_components(rate: f64) -> usize {
+    // Validated domain: 0 < rate <= MAX_POISSON_RATE.
+    ((rate / POISSON_COMPONENT_MAX).ceil() as usize).max(1)
+}
+
+/// One bounded inverse-CDF scan: the smallest `k` with `u < CDF(k)`
+/// for Poisson(λ), λ ≤ 16.
+#[inline]
+fn poisson_inverse(lambda: f64, u: f64) -> u32 {
+    let mut p = (-lambda).exp();
+    let mut cum = p;
+    let mut k = 0u32;
+    while u >= cum && k < POISSON_SCAN_CAP {
+        k += 1;
+        p *= lambda / f64::from(k);
+        cum += p;
+    }
+    k
+}
+
+#[inline]
+fn put_f64(out: &mut [u32], at: usize, v: f64) {
+    let bits = v.to_bits();
+    out[at] = bits as u32;
+    out[at + 1] = (bits >> 32) as u32;
+}
+
+/// Recompose one f64 sample from its two little-endian payload words.
+#[inline]
+pub fn f64_from_words(lo: u32, hi: u32) -> f64 {
+    f64::from_bits(u64::from(lo) | (u64::from(hi) << 32))
+}
+
+/// Decode a shaped f64 payload (2 LE words per sample, as produced by
+/// [`shape_words`] for the f64 families) back into values.
+pub fn decode_f64(words: &[u32]) -> Vec<f64> {
+    words.chunks_exact(2).map(|w| f64_from_words(w[0], w[1])).collect()
+}
+
+/// Shape a raw row-major block of `width` lanes into the shaped
+/// payload — THE deterministic pure function the whole subsystem rests
+/// on (see the module docs for the layout and replay contract).
+///
+/// `raw.len()` must be `rows · draws_per_row · width` for some integer
+/// `rows`; the output is `rows · width · words_per_sample` u32 words,
+/// row-major with `words_per_sample` consecutive words per sample.
+/// Sample `(i, j)` consumes `raw[(i·k + t)·width + j]`, `t < k`, so a
+/// `width = 1` call reproduces any one lane column of a wider call.
+pub fn shape_words(spec: DistSpec, raw: &[u32], width: usize) -> Vec<u32> {
+    let k = spec.draws_per_row();
+    let wps = spec.words_per_sample();
+    assert!(width > 0, "shape_words: width must be > 0");
+    assert!(
+        raw.len() % (k * width) == 0,
+        "shape_words: raw len {} is not a whole number of {}-draw rows of width {width}",
+        raw.len(),
+        k
+    );
+    let rows = raw.len() / (k * width);
+    let mut out = vec![0u32; rows * width * wps];
+    match spec {
+        DistSpec::Uniform01 => {
+            for (s, &x) in raw.iter().enumerate() {
+                put_f64(&mut out, s * 2, unit::f64_32(x));
+            }
+        }
+        DistSpec::UniformRange { lo, hi } => {
+            let span = hi - lo;
+            for (s, &x) in raw.iter().enumerate() {
+                put_f64(&mut out, s * 2, lo + span * unit::f64_32(x));
+            }
+        }
+        DistSpec::Normal { mean, std } => {
+            // Pinned Box–Muller: z = sqrt(-2·ln(1-u1)) · cos(2π·u2).
+            // u1 ∈ [0,1) keeps the log argument in (0,1] — no ±inf.
+            for i in 0..rows {
+                let (r0, r1) = (i * 2 * width, (i * 2 + 1) * width);
+                for j in 0..width {
+                    let u1 = unit::f64_32(raw[r0 + j]);
+                    let u2 = unit::f64_32(raw[r1 + j]);
+                    let r = (-2.0 * (1.0 - u1).ln()).sqrt();
+                    let z = r * (std::f64::consts::TAU * u2).cos();
+                    put_f64(&mut out, (i * width + j) * 2, mean + std * z);
+                }
+            }
+        }
+        DistSpec::Exponential { rate } => {
+            // Inverse CDF on a 53-bit uniform: -ln(1-u)/rate, u < 1.
+            for i in 0..rows {
+                let (r0, r1) = (i * 2 * width, (i * 2 + 1) * width);
+                for j in 0..width {
+                    let u = unit::f64_53(raw[r0 + j], raw[r1 + j]);
+                    put_f64(&mut out, (i * width + j) * 2, -(-u).ln_1p() / rate);
+                }
+            }
+        }
+        DistSpec::Bernoulli { p } => {
+            for (s, &x) in raw.iter().enumerate() {
+                out[s] = u32::from(unit::f64_32(x) < p);
+            }
+        }
+        DistSpec::Poisson { rate } => {
+            let parts = poisson_components(rate);
+            let lambda = rate / parts as f64;
+            for i in 0..rows {
+                for j in 0..width {
+                    let mut count = 0u32;
+                    for c in 0..parts {
+                        let hi = raw[(i * k + 2 * c) * width + j];
+                        let lo = raw[(i * k + 2 * c + 1) * width + j];
+                        count = count.saturating_add(poisson_inverse(
+                            lambda,
+                            unit::f64_53(hi, lo),
+                        ));
+                    }
+                    out[i * width + j] = count;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, SplitMix64};
+
+    fn raw(n: usize, seed: u64) -> Vec<u32> {
+        let mut g = SplitMix64::new(seed);
+        (0..n).map(|_| g.next_u32()).collect()
+    }
+
+    const ALL: [DistSpec; 6] = [
+        DistSpec::Uniform01,
+        DistSpec::UniformRange { lo: -2.0, hi: 3.0 },
+        DistSpec::Normal { mean: 1.0, std: 2.0 },
+        DistSpec::Exponential { rate: 0.5 },
+        DistSpec::Bernoulli { p: 0.25 },
+        DistSpec::Poisson { rate: 40.0 },
+    ];
+
+    #[test]
+    fn draw_and_word_counts() {
+        assert_eq!(DistSpec::Uniform01.draws_per_row(), 1);
+        assert_eq!(DistSpec::UniformRange { lo: 0.0, hi: 1.0 }.draws_per_row(), 1);
+        assert_eq!(DistSpec::Normal { mean: 0.0, std: 1.0 }.draws_per_row(), 2);
+        assert_eq!(DistSpec::Exponential { rate: 1.0 }.draws_per_row(), 2);
+        assert_eq!(DistSpec::Bernoulli { p: 0.5 }.draws_per_row(), 1);
+        // ceil(40/16) = 3 components, 2 draws each.
+        assert_eq!(DistSpec::Poisson { rate: 40.0 }.draws_per_row(), 6);
+        assert_eq!(DistSpec::Poisson { rate: 0.5 }.draws_per_row(), 2);
+        assert_eq!(DistSpec::Poisson { rate: MAX_POISSON_RATE }.draws_per_row(), 1250);
+        for d in ALL {
+            assert_eq!(d.words_per_sample(), if d.is_f64() { 2 } else { 1 }, "{d}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_out_of_domain_parameters() {
+        for bad in [
+            DistSpec::UniformRange { lo: 1.0, hi: 1.0 },
+            DistSpec::UniformRange { lo: 2.0, hi: 1.0 },
+            DistSpec::UniformRange { lo: f64::NAN, hi: 1.0 },
+            DistSpec::UniformRange { lo: 0.0, hi: f64::INFINITY },
+            DistSpec::Normal { mean: 0.0, std: -1.0 },
+            DistSpec::Normal { mean: f64::NAN, std: 1.0 },
+            DistSpec::Normal { mean: 0.0, std: f64::INFINITY },
+            DistSpec::Exponential { rate: 0.0 },
+            DistSpec::Exponential { rate: -1.0 },
+            DistSpec::Exponential { rate: f64::NAN },
+            DistSpec::Bernoulli { p: -0.1 },
+            DistSpec::Bernoulli { p: 1.1 },
+            DistSpec::Bernoulli { p: f64::NAN },
+            DistSpec::Poisson { rate: 0.0 },
+            DistSpec::Poisson { rate: f64::NAN },
+            DistSpec::Poisson { rate: MAX_POISSON_RATE * 2.0 },
+        ] {
+            assert!(
+                matches!(bad.validate(), Err(Error::InvalidConfig(_))),
+                "{bad:?} should be rejected"
+            );
+        }
+        for good in ALL {
+            good.validate().unwrap_or_else(|e| panic!("{good} rejected: {e}"));
+        }
+        // std = 0 is a (degenerate but valid) constant stream.
+        DistSpec::Normal { mean: 5.0, std: 0.0 }.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_covers_the_cli_syntax() {
+        assert_eq!(DistSpec::parse("uniform").unwrap(), DistSpec::Uniform01);
+        assert_eq!(
+            DistSpec::parse("range:-1,1").unwrap(),
+            DistSpec::UniformRange { lo: -1.0, hi: 1.0 }
+        );
+        // Bare `normal` is the standard normal (the CI smoke's form).
+        assert_eq!(
+            DistSpec::parse("normal").unwrap(),
+            DistSpec::Normal { mean: 0.0, std: 1.0 }
+        );
+        assert_eq!(
+            DistSpec::parse("normal:2.5,0.5").unwrap(),
+            DistSpec::Normal { mean: 2.5, std: 0.5 }
+        );
+        assert_eq!(
+            DistSpec::parse("exp:1.5").unwrap(),
+            DistSpec::Exponential { rate: 1.5 }
+        );
+        assert_eq!(
+            DistSpec::parse("bernoulli:0.75").unwrap(),
+            DistSpec::Bernoulli { p: 0.75 }
+        );
+        assert_eq!(DistSpec::parse("poisson:4").unwrap(), DistSpec::Poisson { rate: 4.0 });
+        for bad in [
+            "gamma:1",         // unknown family
+            "uniform:0,1",     // uniform takes no params
+            "range:1",         // missing hi
+            "range:2,1",       // lo >= hi
+            "normal:1",        // missing std
+            "normal:0,-1",     // std < 0
+            "normal:0,nan",    // non-finite parses as NaN, rejected by domain
+            "exp:0",           // rate <= 0
+            "exp:abc",         // not a number
+            "bernoulli:1.5",   // p out of [0,1]
+            "poisson:-2",      // rate <= 0
+            "poisson:1e9",     // over the consumption cap
+            "poisson:inf",     // non-finite
+        ] {
+            assert!(
+                matches!(DistSpec::parse(bad), Err(Error::InvalidConfig(_))),
+                "'{bad}' should fail to parse"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_parts_roundtrip_and_reject() {
+        for d in ALL {
+            let (k, a, b) = d.wire_parts();
+            assert_eq!(DistSpec::from_wire(k, a, b).unwrap(), d, "{d}");
+        }
+        assert!(DistSpec::from_wire(7, 0.0, 0.0).is_err(), "unknown kind");
+        assert!(DistSpec::from_wire(5, 1.5, 0.0).is_err(), "p out of domain");
+        assert!(DistSpec::from_wire(3, 0.0, -1.0).is_err(), "negative std");
+        assert!(DistSpec::from_wire(4, f64::NAN, 0.0).is_err(), "NaN rate");
+    }
+
+    #[test]
+    fn eq_and_hash_are_bitwise_on_parameters() {
+        use std::collections::HashMap;
+        let mut m: HashMap<DistSpec, u32> = HashMap::new();
+        m.insert(DistSpec::Normal { mean: 0.0, std: 1.0 }, 1);
+        m.insert(DistSpec::Normal { mean: 0.0, std: 2.0 }, 2);
+        m.insert(DistSpec::Uniform01, 3);
+        assert_eq!(m[&DistSpec::Normal { mean: 0.0, std: 1.0 }], 1);
+        assert_eq!(m[&DistSpec::Normal { mean: 0.0, std: 2.0 }], 2);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn known_answer_samples() {
+        // Hand-checkable exact points pin the transforms' bits.
+        let u = |words: &[u32]| decode_f64(words);
+
+        // Uniform01: 0 → 0.0, 2^31 → 0.5 exactly.
+        assert_eq!(u(&shape_words(DistSpec::Uniform01, &[0, 1 << 31], 1)), [0.0, 0.5]);
+        // Range [2,4): midpoint draw lands on 3.0 exactly.
+        assert_eq!(
+            u(&shape_words(DistSpec::UniformRange { lo: 2.0, hi: 4.0 }, &[1 << 31], 1)),
+            [3.0]
+        );
+        // Normal with std 0 is the constant mean; u1 = 0 → z = 0 exactly.
+        assert_eq!(
+            u(&shape_words(DistSpec::Normal { mean: 5.0, std: 0.0 }, &[7, 9, 1, 2], 1)),
+            [5.0, 5.0]
+        );
+        assert_eq!(
+            u(&shape_words(DistSpec::Normal { mean: 1.5, std: 3.0 }, &[0, 0], 1)),
+            [1.5]
+        );
+        // Exponential: u = 0 → sample 0.0 exactly.
+        assert_eq!(
+            u(&shape_words(DistSpec::Exponential { rate: 2.0 }, &[0, 0], 1)),
+            [0.0]
+        );
+        // Bernoulli: u = 0 < p always hits; u near 1 with p = 0.5 misses;
+        // p = 1.0 always hits (u < 1 strictly); p = 0.0 never does.
+        assert_eq!(shape_words(DistSpec::Bernoulli { p: 0.5 }, &[0, u32::MAX], 1), [1, 0]);
+        assert_eq!(shape_words(DistSpec::Bernoulli { p: 1.0 }, &[u32::MAX], 1), [1]);
+        assert_eq!(shape_words(DistSpec::Bernoulli { p: 0.0 }, &[0], 1), [0]);
+        // Poisson: u = 0 < e^{-λ} → count 0 in every component.
+        assert_eq!(shape_words(DistSpec::Poisson { rate: 40.0 }, &[0; 6], 1), [0]);
+    }
+
+    #[test]
+    fn shaping_is_deterministic() {
+        for d in ALL {
+            let r = raw(d.draws_per_row() * 4 * 16, 99);
+            assert_eq!(shape_words(d, &r, 4), shape_words(d, &r, 4), "{d}");
+        }
+    }
+
+    #[test]
+    fn stream_column_matches_group_block_lane() {
+        // The lane-structure contract: shaping one lane's raw column at
+        // width 1 reproduces that lane's column of the full-width block.
+        let width = 4;
+        let rows = 16;
+        for d in ALL {
+            let k = d.draws_per_row();
+            let wps = d.words_per_sample();
+            let block_raw = raw(rows * k * width, 7);
+            let block = shape_words(d, &block_raw, width);
+            for j in 0..width {
+                let lane_raw: Vec<u32> =
+                    (0..rows * k).map(|t| block_raw[t * width + j]).collect();
+                let lane = shape_words(d, &lane_raw, 1);
+                let from_block: Vec<u32> = (0..rows)
+                    .flat_map(|i| {
+                        let at = (i * width + j) * wps;
+                        block[at..at + wps].to_vec()
+                    })
+                    .collect();
+                assert_eq!(lane, from_block, "{d} lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn f64_payload_roundtrips_exactly() {
+        let vals = [0.0, -0.0, 1.5, -2.75, f64::MIN_POSITIVE, 1e300, -1e-300];
+        let mut words = Vec::new();
+        for v in vals {
+            let bits = v.to_bits();
+            words.push(bits as u32);
+            words.push((bits >> 32) as u32);
+        }
+        let back = decode_f64(&words);
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sample_moments_are_roughly_right() {
+        // Coarse sanity only — the real goodness-of-fit probes live in
+        // rust/tests/quality_probe.rs.
+        let n = 1 << 14;
+        let mean_of = |d: DistSpec, seed: u64| -> f64 {
+            let r = raw(n * d.draws_per_row(), seed);
+            let w = shape_words(d, &r, 1);
+            if d.is_f64() {
+                decode_f64(&w).iter().sum::<f64>() / n as f64
+            } else {
+                w.iter().map(|&x| f64::from(x)).sum::<f64>() / n as f64
+            }
+        };
+        assert!((mean_of(DistSpec::Uniform01, 1) - 0.5).abs() < 0.02);
+        assert!((mean_of(DistSpec::UniformRange { lo: -2.0, hi: 3.0 }, 2) - 0.5).abs() < 0.1);
+        assert!((mean_of(DistSpec::Normal { mean: 1.0, std: 2.0 }, 3) - 1.0).abs() < 0.1);
+        assert!((mean_of(DistSpec::Exponential { rate: 0.5 }, 4) - 2.0).abs() < 0.1);
+        assert!((mean_of(DistSpec::Bernoulli { p: 0.25 }, 5) - 0.25).abs() < 0.02);
+        assert!((mean_of(DistSpec::Poisson { rate: 40.0 }, 6) - 40.0).abs() < 0.3);
+    }
+}

@@ -45,6 +45,7 @@
 
 pub mod apps;
 pub mod coordinator;
+pub mod dist;
 pub mod error;
 pub mod fpga;
 pub mod prng;
@@ -58,5 +59,6 @@ pub use coordinator::{
     CancelHandle, Completion, CompletionQueue, Coordinator, Engine, EngineBuilder,
     ParallelCoordinator, ReqTarget, Request, StreamHandle, StreamReq, StreamSource, Ticket,
 };
+pub use dist::DistSpec;
 pub use error::Error;
 pub use serve::{RemoteSource, ServeConfig, Server};

@@ -9,6 +9,8 @@
 //!   throughput   measure coordinator serving throughput on this host
 //!   serve        serve an engine over TCP (the network serving layer)
 //!   loadgen      hammer a serve endpoint from N connections
+//!   mm1          M/M/1 queue simulation on shaped exponential streams
+//!   jumpdiff     Merton jump-diffusion pricing on shaped normal/Poisson streams
 //!   fpga-model   print the FPGA model design point for n instances
 //!
 //! Every engine is reached through the same [`EngineBuilder`] →
@@ -37,7 +39,8 @@ const VALUE_OPTS: &[&str] = &[
     "streams", "count", "stream", "engine", "artifacts", "gen", "scale", "draws",
     "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
     "connections", "sessions", "window", "chunk-rows", "numbers", "deadline-ms",
-    "fills", "workers", "quota", "tags",
+    "fills", "workers", "quota", "tags", "dist", "customers", "lambda", "mu",
+    "paths",
 ];
 
 /// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
@@ -73,6 +76,8 @@ fn main() {
         "throughput" => cmd_throughput(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "mm1" => cmd_mm1(&args),
+        "jumpdiff" => cmd_jumpdiff(&args),
         "fpga-model" => cmd_fpga_model(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -94,15 +99,19 @@ fn usage() -> String {
     "thundering — ThundeRiNG (ICS'21) reproduction\n\n\
      USAGE: thundering <command> [options]\n\n\
      COMMANDS:\n  \
-     generate    --streams N --count N [--stream I] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
+     generate    --streams N --count N [--stream I] [--dist SPEC] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
      quality     --gen NAME [--scale quick|standard|deep]\n  \
      report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
      pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--deadline-ms N] [--artifacts DIR]\n  \
      serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N] [--workers N] [--quota N]\n  \
-     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--tags A,B,..] [--cancel-storm]\n  \
-     fpga-model  --n INSTANCES"
+     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--tags A,B,..] [--dist SPEC] [--cancel-storm]\n  \
+     mm1         --customers N [--lambda F] [--mu F] [--streams N] [--engine sharded|native]\n  \
+     jumpdiff    --paths N [--streams N] [--engine sharded|native]\n  \
+     fpga-model  --n INSTANCES\n\n\
+     DIST SPECS (shaped fills, DESIGN.md 7):\n  \
+     uniform | range:LO,HI | normal[:MEAN,STD] | exp:RATE | bernoulli:P | poisson:RATE"
         .to_string()
 }
 
@@ -145,7 +154,9 @@ fn with_engine_opts(extra: &[&'static str]) -> Vec<&'static str> {
 /// unknown commands are the dispatcher's business.
 fn audit_args(cmd: &str, args: &Args) -> Result<()> {
     let (opts, flags, max_pos): (Vec<&'static str>, &[&str], usize) = match cmd {
-        "generate" => (with_engine_opts(&["streams", "count", "stream", "out"]), &[], 0),
+        "generate" => {
+            (with_engine_opts(&["streams", "count", "stream", "out", "dist"]), &[], 0)
+        }
         "quality" => (vec!["gen", "scale"], &[], 0),
         "report" => (vec!["artifacts"], &["quick"], 1),
         "pi" | "bs" => (with_engine_opts(&["draws", "threads"]), &[], 0),
@@ -166,20 +177,43 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
                 "fills",
                 "deadline-ms",
                 "tags",
+                "dist",
             ],
             &["cancel-storm"],
             0,
         ),
+        "mm1" => (with_engine_opts(&["streams", "customers", "lambda", "mu"]), &[], 0),
+        "jumpdiff" => (with_engine_opts(&["streams", "paths"]), &[], 0),
         "fpga-model" => (vec!["n"], &[], 0),
         _ => return Ok(()),
     };
     args.expect(&opts, flags, max_pos)
 }
 
+/// `--dist SPEC` → validated [`DistSpec`](thundering::DistSpec), or
+/// `None` when the option is absent. A malformed or out-of-domain spec
+/// (NaN rate, p outside [0,1], lo ≥ hi, …) is a **usage** error —
+/// usage to stderr, exit 2 — not a runtime failure: the parameters
+/// never reach an engine.
+fn dist_opt(args: &Args) -> Option<thundering::DistSpec> {
+    let spec = args.get("dist")?;
+    match thundering::DistSpec::parse(spec) {
+        Ok(d) => Some(d),
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let streams = args.get_u64("streams", 64)?;
     let count = args.get_usize("count", 1024)?;
     let stream = args.get_u64("stream", 0)?;
+    if let Some(spec) = dist_opt(args) {
+        return generate_shaped(args, streams, count, stream, spec);
+    }
     let source = builder(args, streams, "native")?.build()?;
     let mut buf = vec![0u32; count];
     source.fetch(stream, &mut buf)?;
@@ -198,6 +232,44 @@ fn cmd_generate(args: &Args) -> Result<()> {
         other => bail!("unknown --out {other:?}"),
     }
     eprintln!("metrics: {}", source.metrics());
+    Ok(())
+}
+
+/// `generate --dist`: the same stream, shaped through the completion
+/// front (the only shaped fetch path; `StreamSource::fetch` stays raw).
+/// One sample per output line — decoded f64 for the continuous
+/// families, the u32 count/indicator for the discrete ones.
+fn generate_shaped(
+    args: &Args,
+    streams: u64,
+    count: usize,
+    stream: u64,
+    spec: thundering::DistSpec,
+) -> Result<()> {
+    let cq = thundering::CompletionQueue::new(builder(args, streams, "native")?.build_arc()?);
+    let (ticket, _) = cq.submit(Request::stream(stream).rows(count).dist(spec))?;
+    let c = cq
+        .wait_for(ticket, None)?
+        .ok_or_else(|| anyhow::anyhow!("shaped fill harvested by a foreign consumer"))?;
+    let words = c.result?;
+    match args.get_or("out", "hex") {
+        "hex" => {
+            let stdout = std::io::stdout();
+            let mut w = stdout.lock();
+            if spec.is_f64() {
+                for v in thundering::dist::decode_f64(&words) {
+                    writeln!(w, "{v}")?;
+                }
+            } else {
+                for v in &words {
+                    writeln!(w, "{v}")?;
+                }
+            }
+        }
+        "none" => {}
+        other => bail!("unknown --out {other:?}"),
+    }
+    eprintln!("metrics: {}", cq.source().metrics());
     Ok(())
 }
 
@@ -515,6 +587,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         deadline_ms: args.get_u64("deadline-ms", 0)?,
         cancel_storm: args.flag("cancel-storm"),
         tags,
+        dist: dist_opt(args),
         ..LoadgenConfig::default()
     };
     let report = thundering::serve::loadgen::run(&cfg)?;
@@ -537,6 +610,57 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.fill_latencies_s.len(),
         report.cancelled_chunks,
         report.expired_chunks,
+    );
+    Ok(())
+}
+
+/// `mm1`: M/M/1 queue simulation on shaped exponential streams —
+/// arrivals from stream 0, services from stream 1, mean wait checked
+/// against the closed form `Wq = λ/(μ(μ−λ))`.
+fn cmd_mm1(args: &Args) -> Result<()> {
+    let customers = args.get_u64("customers", 200_000)?;
+    let params = apps::mm1::Mm1Params {
+        lambda: args.get_f64("lambda", 0.8)?,
+        mu: args.get_f64("mu", 1.0)?,
+    };
+    let streams = args.get_u64("streams", 128)?;
+    let source = builder(args, streams, "sharded")?.build_arc()?;
+    let run = apps::mm1::run(source, customers, params)?;
+    println!(
+        "mm1({} customers, {}, rho = {:.3}): Wq = {:.4}  closed-form = {:.4}  \
+         |err| = {:.2e}  time = {:.4}s",
+        run.customers,
+        run.engine,
+        run.utilization,
+        run.mean_wait,
+        run.expected_wait,
+        (run.mean_wait - run.expected_wait).abs(),
+        run.seconds,
+    );
+    Ok(())
+}
+
+/// `jumpdiff`: Merton jump-diffusion call pricing — diffusion and
+/// jump-aggregate normals from streams 0/1, jump counts from a
+/// Poisson-shaped stream 2, priced against Merton's closed-form series.
+fn cmd_jumpdiff(args: &Args) -> Result<()> {
+    let paths = args.get_u64("paths", 200_000)?;
+    let streams = args.get_u64("streams", 128)?;
+    let source = builder(args, streams, "sharded")?.build_arc()?;
+    let run = apps::jump_diffusion::run(
+        source,
+        paths,
+        apps::jump_diffusion::JumpParams::default(),
+    )?;
+    println!(
+        "jumpdiff({} paths, {}): call = {:.4}  closed-form = {:.4}  \
+         |err| = {:.2e}  time = {:.4}s",
+        run.paths,
+        run.engine,
+        run.price,
+        run.closed_form,
+        (run.price - run.closed_form).abs(),
+        run.seconds,
     );
     Ok(())
 }

@@ -44,14 +44,14 @@ pub trait Prng32: Send {
     /// Next f32 uniform in [0, 1) from the top 24 bits (matches the Layer-2
     /// `uniforms_f32` conversion bit-for-bit).
     fn next_f32(&mut self) -> f32 {
-        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+        crate::util::unit::f32_24(self.next_u32())
     }
 
     /// Next f64 uniform in [0, 1) built from 53 bits across two outputs.
     fn next_f64(&mut self) -> f64 {
-        let hi = (self.next_u32() >> 6) as u64; // 26 bits
-        let lo = (self.next_u32() >> 5) as u64; // 27 bits
-        ((hi << 27) | lo) as f64 * (1.0 / 9_007_199_254_740_992.0)
+        let hi = self.next_u32();
+        let lo = self.next_u32();
+        crate::util::unit::f64_53(hi, lo)
     }
 }
 

@@ -37,6 +37,7 @@ use std::time::Duration;
 use crate::coordinator::{
     CancelHandle, Metrics, MetricsSnapshot, ReqTarget, Request, StreamSource, StreamSpec,
 };
+use crate::dist::DistSpec;
 use crate::error::Error;
 use crate::serve::protocol::{self, Frame};
 
@@ -221,7 +222,7 @@ impl RemoteClient {
     /// targets, `None` for (valid) group targets, and the server's typed
     /// error for targets it does not serve.
     pub fn lease(&self, target: ReqTarget) -> Result<Option<StreamSpec>, Error> {
-        let (h, xs_origin, _) = self.lease_inner(target, None)?;
+        let (h, xs_origin, _) = self.lease_inner(target, None, None)?;
         Ok(match target {
             ReqTarget::Stream(s) => Some(StreamSpec { id: s, h, xs_origin }),
             ReqTarget::Group(_) => None,
@@ -236,7 +237,21 @@ impl RemoteClient {
     /// row cursor. A cursor outside the retained window (or ahead of
     /// the server) fails typed with `InvalidConfig`.
     pub fn lease_resume(&self, target: ReqTarget, cursor: u64) -> Result<u64, Error> {
-        let (_, _, server_cursor) = self.lease_inner(target, Some(cursor))?;
+        let (_, _, server_cursor) = self.lease_inner(target, Some(cursor), None)?;
+        Ok(server_cursor)
+    }
+
+    /// [`lease_resume`](Self::lease_resume) for a shaped delivery:
+    /// retention and replay are keyed on the target *plus* `dist`, and
+    /// the cursor counts shaped rows — a raw lease on the same target
+    /// tracks independently.
+    pub fn lease_resume_shaped(
+        &self,
+        target: ReqTarget,
+        cursor: u64,
+        dist: Option<DistSpec>,
+    ) -> Result<u64, Error> {
+        let (_, _, server_cursor) = self.lease_inner(target, Some(cursor), dist)?;
         Ok(server_cursor)
     }
 
@@ -244,11 +259,12 @@ impl RemoteClient {
         &self,
         target: ReqTarget,
         resume: Option<u64>,
+        dist: Option<DistSpec>,
     ) -> Result<(u64, [u32; 4], u64), Error> {
         let req = {
             let mut w = self.lock_write();
             let req = w.alloc_req();
-            w.send(&Frame::Lease { req, target, resume })?;
+            w.send(&Frame::Lease { req, target, resume, dist })?;
             req
         };
         let mut rd = self.lock_read();
@@ -312,6 +328,7 @@ impl RemoteClient {
             repeat,
             deadline_ms: deadline_ms_of(req),
             tag: req.get_tag(),
+            dist: req.get_dist(),
         })?;
         Ok(id)
     }
@@ -524,10 +541,11 @@ struct Resumption {
     attempts: u32,
     /// Pause between reconnect attempts.
     backoff: Duration,
-    /// Confirmed-row cursors per target. One lock for the whole ledger:
-    /// resilient fetches serialize, which the single shared socket
-    /// mostly forces anyway.
-    cursors: Mutex<HashMap<ReqTarget, Cursor>>,
+    /// Confirmed-row cursors per retention key (target + shaping spec —
+    /// shaped and raw deliveries of one target resume independently).
+    /// One lock for the whole ledger: resilient fetches serialize,
+    /// which the single shared socket mostly forces anyway.
+    cursors: Mutex<HashMap<(ReqTarget, Option<DistSpec>), Cursor>>,
 }
 
 /// One target's resumption bookkeeping.
@@ -594,19 +612,25 @@ impl RemoteSource {
     /// so the server replays what the failure lost), and a transport
     /// error additionally reconnects and retries within the attempt
     /// budget.
-    fn fill_one(&self, target: ReqTarget, rows: usize) -> Result<Vec<u32>, Error> {
-        let req = self.request(target, rows);
+    fn fill_one(
+        &self,
+        target: ReqTarget,
+        rows: usize,
+        dist: Option<DistSpec>,
+    ) -> Result<Vec<u32>, Error> {
+        let req = self.request(target, rows, dist);
         let Some(rs) = &self.resume else {
             return self.client().fill(&req);
         };
+        let key = (target, dist);
         let mut cursors = rs.cursors.lock().unwrap_or_else(|e| e.into_inner());
-        cursors.entry(target).or_insert(Cursor { rows: 0, dirty: true });
+        cursors.entry(key).or_insert(Cursor { rows: 0, dirty: true });
         let mut attempt: u32 = 0;
         loop {
             let client = self.client();
-            let state = cursors.get_mut(&target).expect("inserted above");
+            let state = cursors.get_mut(&key).expect("inserted above");
             let res = if state.dirty {
-                match client.lease_resume(target, state.rows) {
+                match client.lease_resume_shaped(target, state.rows, dist) {
                     Ok(_) => {
                         state.dirty = false;
                         client.fill(&req)
@@ -654,13 +678,68 @@ impl RemoteSource {
     }
 
     /// A fill request for `target`/`rows` carrying this source's
-    /// default deadline (if any).
-    fn request(&self, target: ReqTarget, rows: usize) -> Request {
+    /// default deadline (if any) and the shaping spec (if any).
+    fn request(&self, target: ReqTarget, rows: usize, dist: Option<DistSpec>) -> Request {
         let req = match target {
             ReqTarget::Stream(s) => Request::stream(s).rows(rows),
             ReqTarget::Group(g) => Request::group(g).rows(rows),
         };
-        req.deadline_opt(self.deadline)
+        req.deadline_opt(self.deadline).dist_opt(dist)
+    }
+
+    /// Fetch `rows` shaped rows of `target` under `spec`, returned in
+    /// the [`crate::dist`] payload encoding (f64 families: two little-
+    /// endian words per sample, decode with
+    /// [`crate::dist::decode_f64`]; discrete families: one word per
+    /// sample). Bit-identical to shaping the same fetch locally — and,
+    /// with [`with_resumption`](Self::with_resumption) on, resumes
+    /// across reconnects exactly like the raw surface (the shaped
+    /// delivery has its own retention ring and cursor).
+    pub fn fetch_shaped(
+        &self,
+        target: ReqTarget,
+        rows: usize,
+        spec: DistSpec,
+    ) -> Result<Vec<u32>, Error> {
+        spec.validate()?;
+        let lane_width: u64 = match target {
+            ReqTarget::Stream(s) => {
+                if s >= self.info.n_streams {
+                    return Err(Error::UnknownStream { stream: s, have: self.info.n_streams });
+                }
+                1
+            }
+            ReqTarget::Group(g) => {
+                if g as u64 >= self.info.n_groups {
+                    return Err(Error::GroupOutOfRange {
+                        group: g,
+                        have: self.info.n_groups as usize,
+                    });
+                }
+                self.info.group_width as u64
+            }
+        };
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        // Both the wire payload and the raw-draw amplification must fit
+        // one sub-request (the same bound the server enforces).
+        let words = (rows as u64)
+            .checked_mul(lane_width * spec.words_per_sample() as u64)
+            .ok_or_else(|| Error::InvalidConfig("shaped fetch size overflows".into()))?;
+        let draws = (rows as u64)
+            .checked_mul(lane_width * spec.draws_per_row() as u64)
+            .ok_or_else(|| Error::InvalidConfig("shaped fetch size overflows".into()))?;
+        self.check_fill(words.max(draws))?;
+        let values = self.fill_one(target, rows, Some(spec))?;
+        if values.len() as u64 != words {
+            return Err(Error::Protocol(format!(
+                "shaped fill delivered {} of {words} payload words",
+                values.len()
+            )));
+        }
+        self.metrics.add(&self.metrics.numbers_delivered, words);
+        Ok(values)
     }
 
     /// Submit an asynchronous single-chunk fill — the wire twin of
@@ -715,12 +794,15 @@ impl RemoteSource {
             }
             _ => {}
         }
-        let numbers = match core.target() {
-            ReqTarget::Stream(_) => Some(core.rows() as u64),
-            ReqTarget::Group(_) => {
-                (core.rows() as u64).checked_mul(self.info.group_width as u64)
-            }
+        let lane_width = match core.target() {
+            ReqTarget::Stream(_) => 1u64,
+            ReqTarget::Group(_) => self.info.group_width as u64,
         };
+        // For a shaped request, both the payload words and the raw-draw
+        // amplification must fit the server's per-sub-request bound.
+        let per_row =
+            req.get_dist().map_or(1, |d| d.words_per_sample().max(d.draws_per_row()) as u64);
+        let numbers = (core.rows() as u64).checked_mul(lane_width.saturating_mul(per_row));
         match numbers {
             Some(n) => self.check_fill(n)?,
             None => return Err(Error::InvalidConfig("fill size overflows".into())),
@@ -778,7 +860,7 @@ impl StreamSource for RemoteSource {
             return Ok(());
         }
         self.check_fill(out.len() as u64)?;
-        let values = self.fill_one(ReqTarget::Stream(stream), out.len())?;
+        let values = self.fill_one(ReqTarget::Stream(stream), out.len(), None)?;
         if values.len() != out.len() {
             return Err(Error::Protocol(format!(
                 "fill delivered {} of {} numbers",
@@ -802,7 +884,7 @@ impl StreamSource for RemoteSource {
             return Ok(Vec::new());
         }
         self.check_fill(numbers)?;
-        let values = self.fill_one(ReqTarget::Group(group), rows)?;
+        let values = self.fill_one(ReqTarget::Group(group), rows, None)?;
         if values.len() as u64 != numbers {
             return Err(Error::Protocol(format!(
                 "block fill delivered {} of {numbers} numbers",
@@ -857,8 +939,9 @@ impl StreamSource for RemoteSource {
                 let req = inflight.pop_front().expect("non-empty window");
                 collect(req)?;
             }
-            inflight
-                .push_back(client.submit_fill(&self.request(ReqTarget::Group(g), rows), 1)?);
+            inflight.push_back(
+                client.submit_fill(&self.request(ReqTarget::Group(g), rows, None), 1)?,
+            );
         }
         while let Some(req) = inflight.pop_front() {
             collect(req)?;

@@ -13,16 +13,27 @@
 //! client fails loudly instead of silently skipping rows.
 //!
 //! The table is server-global (keyed on the *global* target, before
-//! multi-engine rebasing) and survives the session that created it —
-//! that is the whole point. Appends come only from engine completions
-//! that produced values; failed sub-requests consumed no stream state
-//! and therefore retain nothing.
+//! multi-engine rebasing, PLUS the shaping spec — see [`RetainKey`])
+//! and survives the session that created it — that is the whole point.
+//! Appends come only from engine completions that produced values;
+//! failed sub-requests consumed no stream state and therefore retain
+//! nothing.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Mutex, MutexGuard};
 
 use crate::coordinator::ReqTarget;
+use crate::dist::DistSpec;
 use crate::error::Error;
+
+/// Retention/replay identity: the global target plus the shaping spec
+/// its rows were delivered under (`None` = raw). Shaped and raw
+/// deliveries of one target retain separately — a cursor counts rows in
+/// ONE consistent encoding, and mixing them in one ring would corrupt
+/// the bit-identical replay a resuming client depends on. (DistSpec's
+/// `Eq`/`Hash` compare parameter bits, which is exactly the
+/// replay-compatibility relation.)
+pub(crate) type RetainKey = (ReqTarget, Option<DistSpec>);
 
 struct LeaseState {
     /// Rows ever generated for this target (monotone).
@@ -37,7 +48,7 @@ struct LeaseState {
 pub(crate) struct LeaseTable {
     /// Rows of tail to retain per tracked target.
     retain_rows: u64,
-    inner: Mutex<HashMap<ReqTarget, LeaseState>>,
+    inner: Mutex<HashMap<RetainKey, LeaseState>>,
 }
 
 impl LeaseTable {
@@ -45,18 +56,19 @@ impl LeaseTable {
         Self { retain_rows, inner: Mutex::new(HashMap::new()) }
     }
 
-    fn lock(&self) -> MutexGuard<'_, HashMap<ReqTarget, LeaseState>> {
+    fn lock(&self) -> MutexGuard<'_, HashMap<RetainKey, LeaseState>> {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Is this target under retention? (FILL admission snapshots this to
+    /// Is this key under retention? (FILL admission snapshots this to
     /// decide whether completions should append to the ring.)
-    pub(crate) fn is_tracked(&self, target: ReqTarget) -> bool {
-        self.lock().contains_key(&target)
+    pub(crate) fn is_tracked(&self, key: RetainKey) -> bool {
+        self.lock().contains_key(&key)
     }
 
-    /// Begin (or resume) tracking `target`. `cursor` is the row count
-    /// the client confirms having received; `width` is values per row.
+    /// Begin (or resume) tracking `key`. `cursor` is the row count the
+    /// client confirms having received; `width` is values per row (for
+    /// a shaped key: payload words per shaped row).
     ///
     /// Returns the server's own row cursor plus the replay values
     /// covering `cursor..server_cursor` — the rows the client lost with
@@ -64,21 +76,21 @@ impl LeaseTable {
     /// generation.
     pub(crate) fn resume(
         &self,
-        target: ReqTarget,
+        key: RetainKey,
         cursor: u64,
         width: u64,
     ) -> Result<(u64, VecDeque<u32>), Error> {
         let mut inner = self.lock();
         let cap = usize::try_from(self.retain_rows.saturating_mul(width))
             .unwrap_or(usize::MAX);
-        let state = inner.entry(target).or_insert_with(|| LeaseState {
+        let state = inner.entry(key).or_insert_with(|| LeaseState {
             cursor_rows: 0,
             ring: VecDeque::new(),
             cap_values: cap,
         });
         if cursor > state.cursor_rows {
             return Err(Error::InvalidConfig(format!(
-                "resume cursor {cursor} is ahead of the server cursor {} for {target:?}",
+                "resume cursor {cursor} is ahead of the server cursor {} for {key:?}",
                 state.cursor_rows
             )));
         }
@@ -87,7 +99,7 @@ impl LeaseTable {
         if gap_values > state.ring.len() {
             return Err(Error::InvalidConfig(format!(
                 "resume cursor {cursor} is outside the retained window \
-                 ({} rows retained, server cursor {}) for {target:?}",
+                 ({} rows retained, server cursor {}) for {key:?}",
                 state.ring.len() as u64 / width.max(1),
                 state.cursor_rows
             )));
@@ -97,11 +109,11 @@ impl LeaseTable {
         Ok((state.cursor_rows, replay))
     }
 
-    /// Record freshly generated values for a tracked target (no-op for
+    /// Record freshly generated values for a tracked key (no-op for
     /// untracked ones). `values.len()` is a whole number of rows.
-    pub(crate) fn append(&self, target: ReqTarget, values: &[u32], width: u64) {
+    pub(crate) fn append(&self, key: RetainKey, values: &[u32], width: u64) {
         let mut inner = self.lock();
-        let Some(state) = inner.get_mut(&target) else { return };
+        let Some(state) = inner.get_mut(&key) else { return };
         state.cursor_rows += values.len() as u64 / width.max(1);
         state.ring.extend(values.iter().copied());
         while state.ring.len() > state.cap_values {
@@ -119,14 +131,14 @@ mod tests {
 
     #[test]
     fn resume_replays_exactly_the_gap() {
-        let t = ReqTarget::Group(3);
+        let t = (ReqTarget::Group(3), None);
         let table = LeaseTable::new(16);
         // First resume at cursor 0 starts tracking with nothing to replay.
         let (cursor, replay) = table.resume(t, 0, 4).expect("fresh track");
         assert_eq!(cursor, 0);
         assert!(replay.is_empty());
         assert!(table.is_tracked(t));
-        assert!(!table.is_tracked(ReqTarget::Group(4)));
+        assert!(!table.is_tracked((ReqTarget::Group(4), None)));
         // Generate 3 rows of width 4.
         let rows: Vec<u32> = (0..12).collect();
         table.append(t, &rows, 4);
@@ -141,7 +153,7 @@ mod tests {
 
     #[test]
     fn out_of_window_cursors_fail_typed() {
-        let t = ReqTarget::Stream(0);
+        let t = (ReqTarget::Stream(0), None);
         let table = LeaseTable::new(2); // retain 2 rows of width 1
         table.resume(t, 0, 1).expect("track");
         table.append(t, &[10, 11, 12, 13], 1); // rows 0..4, ring keeps [12, 13]
@@ -161,7 +173,7 @@ mod tests {
 
     #[test]
     fn eviction_stays_row_aligned() {
-        let t = ReqTarget::Group(0);
+        let t = (ReqTarget::Group(0), None);
         let table = LeaseTable::new(2); // 2 rows of width 3 = 6 values
         table.resume(t, 0, 3).expect("track");
         table.append(t, &(0..9).collect::<Vec<u32>>(), 3); // 3 rows
@@ -169,5 +181,25 @@ mod tests {
         assert_eq!(cursor, 3);
         // Rows 1 and 2 survive; row 0 was evicted whole.
         assert_eq!(Vec::from(replay), (3..9).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn raw_and_shaped_keys_track_independently() {
+        let target = ReqTarget::Group(2);
+        let raw = (target, None);
+        let shaped = (target, Some(DistSpec::Normal { mean: 0.0, std: 1.0 }));
+        let table = LeaseTable::new(16);
+        table.resume(raw, 0, 4).expect("track raw");
+        assert!(!table.is_tracked(shaped), "shaping spec is part of the key");
+        table.resume(shaped, 0, 8).expect("track shaped");
+        // Appends under one key never bleed into the other's ring or cursor.
+        table.append(raw, &(0..8).collect::<Vec<u32>>(), 4);
+        table.append(shaped, &(100..116).collect::<Vec<u32>>(), 8);
+        let (cursor, replay) = table.resume(raw, 0, 4).expect("raw resume");
+        assert_eq!(cursor, 2);
+        assert_eq!(Vec::from(replay), (0..8).collect::<Vec<u32>>());
+        let (cursor, replay) = table.resume(shaped, 1, 8).expect("shaped resume");
+        assert_eq!(cursor, 2);
+        assert_eq!(Vec::from(replay), (108..116).collect::<Vec<u32>>());
     }
 }

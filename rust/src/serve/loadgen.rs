@@ -24,6 +24,7 @@
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{ReqTarget, Request};
+use crate::dist::DistSpec;
 use crate::error::Error;
 use crate::serve::client::RemoteClient;
 use crate::util::bench;
@@ -67,6 +68,12 @@ pub struct LoadgenConfig {
     /// and quota-checks the load per tenant class. Empty (the default)
     /// puts every fill on tag 0.
     pub tags: Vec<u64>,
+    /// Shape every fill through this distribution (`None` = raw words).
+    /// Delivered chunks then carry the [`crate::dist`] payload encoding
+    /// and [`LoadgenReport::numbers`] counts payload words; chunk sizing
+    /// accounts for the spec's raw-draw amplification so every
+    /// sub-request still fits the server's `max_fill`.
+    pub dist: Option<DistSpec>,
 }
 
 impl Default for LoadgenConfig {
@@ -82,6 +89,7 @@ impl Default for LoadgenConfig {
             connect_attempts: 100,
             connect_backoff: Duration::from_millis(100),
             tags: Vec::new(),
+            dist: None,
         }
     }
 }
@@ -170,7 +178,8 @@ fn run_conn(
     let request = Request::group(group)
         .rows(chunk_rows as usize)
         .deadline_opt((cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)))
-        .tag(tag);
+        .tag(tag)
+        .dist_opt(cfg.dist);
     let mut out = ConnResult {
         numbers: 0,
         chunks: 0,
@@ -254,9 +263,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
     if info.n_groups == 0 {
         return Err(Error::InvalidConfig("server serves no groups".into()));
     }
-    let width = u64::from(info.group_width).max(1);
+    if let Some(spec) = cfg.dist {
+        spec.validate()?;
+    }
+    let lane_width = u64::from(info.group_width).max(1);
+    // Rows are bounded by whichever is larger per row: the shaped
+    // payload (words_per_sample) or the raw draws feeding it
+    // (draws_per_row) — both must fit one max_fill sub-request.
+    let per_row_cost = lane_width
+        * cfg.dist.map_or(1, |d| d.words_per_sample().max(d.draws_per_row()) as u64);
+    let width = lane_width * cfg.dist.map_or(1, |d| d.words_per_sample() as u64);
     let hint = if cfg.chunk_rows == 0 { info.chunk_rows } else { cfg.chunk_rows };
-    let chunk_rows = u64::from(hint).clamp(1, (info.max_fill / width).max(1));
+    let chunk_rows = u64::from(hint).clamp(1, (info.max_fill / per_row_cost).max(1));
     let per_chunk = chunk_rows * width;
     let fills = cfg.fills_per_conn.max(1);
     let repeat: u32 = cfg

@@ -11,14 +11,21 @@
 //! |-----------|-----|--------------------------------------------------------------|
 //! | `HELLO`   | c→s | magic `"THNG"`, version `u16`                                |
 //! | `WELCOME` | s→c | version, engine str, n_streams, n_groups, group_width, chunk_rows, max_fill |
-//! | `LEASE`   | c→s | req id, target, resume `u8` (0 = plain, 1 = tracked), cursor `u64` |
+//! | `LEASE`   | c→s | req id, target, resume `u8` (0 = plain, 1 = tracked), cursor `u64`, dist |
 //! | `LEASED`  | s→c | req id, leaf `h` (`u64`), `xs_origin` (`4 × u32`), cursor `u64` |
-//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`, deadline_ms `u64` (0 = none), tag `u64` |
+//! | `FILL`    | c→s | req id, target, rows `u64`, repeat `u32`, deadline_ms `u64` (0 = none), tag `u64`, dist |
 //! | `DATA`    | s→c | req id, seq `u32`, last `u8`, count `u32`, values (`count × u32`) |
 //! | `ERR`     | s→c | req id, seq, last, error code `u16` + 2×`u64` + message str  |
 //! | `CANCEL`  | c→s | req id — abort the fill's not-yet-executed sub-requests      |
 //! | `BYE`     | c→s | (empty)                                                      |
 //! | `BYE_ACK` | s→c | (empty)                                                      |
+//!
+//! A `dist` field is `u8 kind` (0 = raw fill) followed, for kind ≠ 0,
+//! by two `u64` carrying the [`DistSpec`] parameters as `f64` bits; the
+//! decoder validates the parameter domain through
+//! [`DistSpec::from_wire`], so an out-of-domain or non-finite spec is a
+//! typed [`Error::Protocol`] before the server allocates anything for
+//! the fill.
 //!
 //! Anything malformed — bad magic, unknown kind, oversized or truncated
 //! frames, trailing bytes, or a client frame carrying the reserved
@@ -29,14 +36,16 @@
 use std::io::{Read, Write};
 
 use crate::coordinator::ReqTarget;
+use crate::dist::DistSpec;
 use crate::error::Error;
 
 /// Protocol version spoken by this crate (negotiated in HELLO/WELCOME).
 /// v2 added the request-lifecycle surface: the FILL deadline field and
 /// the CANCEL frame. v3 added the multi-tenant surface: the FILL QoS
 /// tag, tracked LEASEs with resumption cursors, and the reserved-req-id
-/// rejection.
-pub const VERSION: u16 = 3;
+/// rejection. v4 added distribution shaping: the FILL/LEASE dist field
+/// (DATA then carries shaped rows in the [`crate::dist`] encoding).
+pub const VERSION: u16 = 4;
 
 /// Connection magic, first bytes of every HELLO.
 pub const MAGIC: [u8; 4] = *b"THNG";
@@ -107,6 +116,11 @@ pub enum Frame {
         /// are replayed from the retention ring before fresh generation
         /// continues. `Some(0)` on first contact just turns tracking on.
         resume: Option<u64>,
+        /// Shaping spec this lease's fills (and its retention/replay
+        /// state) are keyed on: shaped and raw deliveries of one target
+        /// are tracked separately, so a resumption cursor counts rows
+        /// in ONE consistent encoding. `None` is a raw lease.
+        dist: Option<DistSpec>,
     },
     /// Lease granted; for stream targets carries the registered identity
     /// (zeroes for group targets).
@@ -146,6 +160,11 @@ pub enum Frame {
         /// per-tenant in-flight quota per tag. Tag 0 is the default
         /// class.
         tag: u64,
+        /// Shape the fill into a distribution: `rows` then counts
+        /// shaped samples and the reply DATA frames carry the shaped
+        /// encoding ([`crate::dist`] — 2 LE words per f64 sample, 1
+        /// word per discrete sample). `None` is a raw fill.
+        dist: Option<DistSpec>,
     },
     /// Abort a fill's not-yet-executed sub-requests (client → server).
     /// Best-effort and idempotent: sub-requests already executed (or
@@ -236,6 +255,20 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
+/// `u8 kind` (0 = none/raw), then for kind ≠ 0 the two spec parameters
+/// as `f64` bits — 1 byte on the raw path, 17 on the shaped one.
+fn put_dist(buf: &mut Vec<u8>, d: Option<DistSpec>) {
+    match d {
+        None => buf.push(0),
+        Some(spec) => {
+            let (k, a, b) = spec.wire_parts();
+            buf.push(k);
+            put_u64(buf, a.to_bits());
+            put_u64(buf, b.to_bits());
+        }
+    }
+}
+
 fn put_target(buf: &mut Vec<u8>, t: ReqTarget) {
     match t {
         ReqTarget::Stream(s) => {
@@ -315,12 +348,13 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
             put_u32(&mut p, *chunk_rows);
             put_u64(&mut p, *max_fill);
         }
-        Frame::Lease { req, target, resume } => {
+        Frame::Lease { req, target, resume, dist } => {
             p.push(K_LEASE);
             put_u64(&mut p, *req);
             put_target(&mut p, *target);
             p.push(u8::from(resume.is_some()));
             put_u64(&mut p, resume.unwrap_or(0));
+            put_dist(&mut p, *dist);
         }
         Frame::Leased { req, h, xs_origin, cursor } => {
             p.push(K_LEASED);
@@ -331,7 +365,7 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
             }
             put_u64(&mut p, *cursor);
         }
-        Frame::Fill { req, target, rows, repeat, deadline_ms, tag } => {
+        Frame::Fill { req, target, rows, repeat, deadline_ms, tag, dist } => {
             p.push(K_FILL);
             put_u64(&mut p, *req);
             put_target(&mut p, *target);
@@ -339,6 +373,7 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
             put_u32(&mut p, *repeat);
             put_u64(&mut p, *deadline_ms);
             put_u64(&mut p, *tag);
+            put_dist(&mut p, *dist);
         }
         Frame::Cancel { req } => {
             p.push(K_CANCEL);
@@ -452,6 +487,23 @@ impl<'a> Dec<'a> {
         }
     }
 
+    /// Decode a dist field, validating the parameter domain: an unknown
+    /// kind or an out-of-domain/non-finite parameter is a typed
+    /// [`Error::Protocol`] — the frame is rejected before the server
+    /// allocates anything for the request.
+    fn dist(&mut self) -> Result<Option<DistSpec>, Error> {
+        match self.u8()? {
+            0 => Ok(None),
+            k => {
+                let a = f64::from_bits(self.u64()?);
+                let b = f64::from_bits(self.u64()?);
+                DistSpec::from_wire(k, a, b)
+                    .map(Some)
+                    .map_err(|e| Error::Protocol(format!("bad dist field: {e}")))
+            }
+        }
+    }
+
     fn finish(self) -> Result<(), Error> {
         if self.b.is_empty() {
             Ok(())
@@ -506,7 +558,7 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
                 (1, c) => Some(c),
                 (k, _) => return Err(Error::Protocol(format!("unknown resume kind {k}"))),
             };
-            Frame::Lease { req, target, resume }
+            Frame::Lease { req, target, resume, dist: d.dist()? }
         }
         K_LEASED => {
             let req = d.u64()?;
@@ -525,6 +577,7 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             repeat: d.u32()?,
             deadline_ms: d.u64()?,
             tag: d.u64()?,
+            dist: d.dist()?,
         },
         K_CANCEL => Frame::Cancel { req: client_req(d.u64()?)? },
         K_DATA => {
@@ -587,12 +640,23 @@ mod tests {
             chunk_rows: 1024,
             max_fill: 1 << 22,
         });
-        roundtrip(Frame::Lease { req: 7, target: ReqTarget::Stream(42), resume: None });
-        roundtrip(Frame::Lease { req: 8, target: ReqTarget::Group(3), resume: Some(0) });
+        roundtrip(Frame::Lease {
+            req: 7,
+            target: ReqTarget::Stream(42),
+            resume: None,
+            dist: None,
+        });
+        roundtrip(Frame::Lease {
+            req: 8,
+            target: ReqTarget::Group(3),
+            resume: Some(0),
+            dist: None,
+        });
         roundtrip(Frame::Lease {
             req: 11,
             target: ReqTarget::Group(3),
             resume: Some(1 << 40),
+            dist: Some(DistSpec::Normal { mean: -1.25, std: 0.5 }),
         });
         roundtrip(Frame::Leased {
             req: 7,
@@ -608,6 +672,7 @@ mod tests {
             repeat: 16,
             deadline_ms: 0,
             tag: 0,
+            dist: None,
         });
         roundtrip(Frame::Fill {
             req: 10,
@@ -616,7 +681,26 @@ mod tests {
             repeat: 2,
             deadline_ms: 2_500,
             tag: 7,
+            dist: None,
         });
+        for spec in [
+            DistSpec::Uniform01,
+            DistSpec::UniformRange { lo: -2.0, hi: 3.0 },
+            DistSpec::Normal { mean: 0.0, std: 1.0 },
+            DistSpec::Exponential { rate: 1.5 },
+            DistSpec::Bernoulli { p: 0.25 },
+            DistSpec::Poisson { rate: 40.0 },
+        ] {
+            roundtrip(Frame::Fill {
+                req: 12,
+                target: ReqTarget::Group(1),
+                rows: 256,
+                repeat: 4,
+                deadline_ms: 0,
+                tag: 3,
+                dist: Some(spec),
+            });
+        }
         roundtrip(Frame::Cancel { req: 9 });
         roundtrip(Frame::Data { req: 9, seq: 3, last: false, values: vec![] });
         roundtrip(Frame::Data {
@@ -696,7 +780,12 @@ mod tests {
         // CONNECTION_REQ is the server's connection-level sentinel; a
         // client frame carrying it must fail typed, not corrupt routing.
         for frame in [
-            Frame::Lease { req: CONNECTION_REQ, target: ReqTarget::Stream(0), resume: None },
+            Frame::Lease {
+                req: CONNECTION_REQ,
+                target: ReqTarget::Stream(0),
+                resume: None,
+                dist: None,
+            },
             Frame::Fill {
                 req: CONNECTION_REQ,
                 target: ReqTarget::Group(0),
@@ -704,6 +793,7 @@ mod tests {
                 repeat: 1,
                 deadline_ms: 0,
                 tag: 0,
+                dist: None,
             },
             Frame::Cancel { req: CONNECTION_REQ },
         ] {
@@ -726,6 +816,61 @@ mod tests {
         )
         .unwrap();
         assert!(matches!(read_frame(&mut &buf[..]).unwrap(), Some(Frame::Err { .. })));
+    }
+
+    #[test]
+    fn out_of_domain_dist_params_are_rejected_typed_at_decode() {
+        // The encoder doesn't validate (it writes whatever the struct
+        // holds), so these produce byte-exact malicious frames; the
+        // decoder must reject each typed — before any allocation for
+        // the fill — rather than admit an unshapeable spec.
+        for bad in [
+            DistSpec::Bernoulli { p: 1.5 },
+            DistSpec::Bernoulli { p: -0.5 },
+            DistSpec::Exponential { rate: 0.0 },
+            DistSpec::Exponential { rate: -1.0 },
+            DistSpec::Exponential { rate: f64::NAN },
+            DistSpec::Normal { mean: 0.0, std: -1.0 },
+            DistSpec::Normal { mean: f64::INFINITY, std: 1.0 },
+            DistSpec::UniformRange { lo: 2.0, hi: 1.0 },
+            DistSpec::Poisson { rate: 1e9 },
+        ] {
+            for frame in [
+                Frame::Fill {
+                    req: 1,
+                    target: ReqTarget::Group(0),
+                    rows: 8,
+                    repeat: 1,
+                    deadline_ms: 0,
+                    tag: 0,
+                    dist: Some(bad),
+                },
+                Frame::Lease {
+                    req: 1,
+                    target: ReqTarget::Group(0),
+                    resume: Some(0),
+                    dist: Some(bad),
+                },
+            ] {
+                let mut buf = Vec::new();
+                write_frame(&mut buf, &frame).unwrap();
+                let err = read_frame(&mut &buf[..]).expect_err("bad dist must fail");
+                assert!(matches!(err, Error::Protocol(_)), "{bad:?}: {err}");
+            }
+        }
+        // Unknown dist kind: frame bytes with kind 9 after a valid FILL.
+        let mut p = vec![K_FILL];
+        p.extend_from_slice(&1u64.to_le_bytes()); // req
+        p.push(1); // target kind: group
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&8u64.to_le_bytes()); // rows
+        p.extend_from_slice(&1u32.to_le_bytes()); // repeat
+        p.extend_from_slice(&0u64.to_le_bytes()); // deadline_ms
+        p.extend_from_slice(&0u64.to_le_bytes()); // tag
+        p.push(9); // dist kind: unknown
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(decode_frame(&p), Err(Error::Protocol(_))));
     }
 
     #[test]

@@ -25,7 +25,9 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::coordinator::ReqTarget;
+use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::serve::lease::RetainKey;
 use crate::serve::session::Session;
 
 /// One admitted FILL's not-yet-submitted remainder: everything a worker
@@ -39,13 +41,17 @@ pub(crate) struct FillJob {
     pub(crate) engine: usize,
     /// Engine-local target (global indices already rebased).
     pub(crate) local: ReqTarget,
-    /// Global target key when the target is tracked for lease
+    /// Global retention key when the target is tracked for lease
     /// resumption (`None` for untracked targets): completed chunks
     /// append to the retention ring under this key.
-    pub(crate) retain: Option<ReqTarget>,
+    pub(crate) retain: Option<RetainKey>,
+    /// Distribution spec forwarded onto each sub-request (`None` = raw
+    /// fill); the engine shapes completions before they reach routing.
+    pub(crate) dist: Option<DistSpec>,
     /// Rows per sub-request.
     pub(crate) rows: u64,
-    /// Numbers per row (the group width; 1 for stream targets).
+    /// Payload words per row on the wire (lane width × words per
+    /// sample; for a raw fill just the group width, 1 for streams).
     pub(crate) width: u64,
     /// Next sub-request index to submit (`0..repeat`).
     pub(crate) next_seq: u32,
@@ -206,6 +212,7 @@ mod tests {
             engine: 0,
             local: ReqTarget::Group(0),
             retain: None,
+            dist: None,
             rows: 8,
             width: 4,
             next_seq: 0,

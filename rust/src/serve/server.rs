@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{Completion, CompletionQueue, ReqTarget, StreamSource, Ticket};
 use crate::error::Error;
-use crate::serve::lease::LeaseTable;
+use crate::serve::lease::{LeaseTable, RetainKey};
 use crate::serve::sched::Sched;
 use crate::serve::session::{
     deliver_chunk, poll_session, process_frames, run_visit, AfterLock, ChunkReply, Session,
@@ -160,9 +160,10 @@ pub(crate) struct Route {
     pub(crate) last: bool,
     /// QoS tag whose quota reservation the chunk repays.
     pub(crate) tag: u64,
-    /// Global target key for retention (tracked targets only).
-    pub(crate) retain: Option<ReqTarget>,
-    /// Values per row of the target (retention + stitching geometry).
+    /// Global retention key — target plus shaping spec (tracked
+    /// targets only).
+    pub(crate) retain: Option<RetainKey>,
+    /// Payload words per wire row (retention + stitching geometry).
     pub(crate) width: u64,
     /// Replayed values fronting this chunk: stitched before the fresh
     /// engine output so the client still sees one full-size chunk.

@@ -52,7 +52,9 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{ReqTarget, Request, StreamReq, Ticket};
+use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::serve::lease::RetainKey;
 use crate::serve::protocol::{self, Frame};
 use crate::serve::sched::FillJob;
 use crate::serve::server::{Route, ServerShared};
@@ -161,8 +163,9 @@ pub(crate) struct SessionState {
     /// Live fill jobs of this session (parked + queued + worker-owned).
     pub(crate) jobs: usize,
     /// Replay values installed by a resumed LEASE, consumed by the next
-    /// FILL on the same target (exclusive-consumer semantics).
-    pub(crate) replay: HashMap<ReqTarget, VecDeque<u32>>,
+    /// FILL on the same retention key — target plus shaping spec
+    /// (exclusive-consumer semantics).
+    pub(crate) replay: HashMap<RetainKey, VecDeque<u32>>,
     /// Request ids a wire CANCEL named; their jobs convert remainders
     /// to `Cancelled` chunks at the next visit.
     pub(crate) cancelled: HashSet<u64>,
@@ -508,14 +511,14 @@ pub(crate) fn process_frames(server: &Arc<ServerShared>, sess: &Arc<Session>) {
                         )),
                     );
                 }
-                (_, Frame::Fill { req, target, rows, repeat, deadline_ms, tag }) => {
+                (_, Frame::Fill { req, target, rows, repeat, deadline_ms, tag, dist }) => {
                     handle_fill(
                         server, sess, &mut after, req, target, rows, repeat, deadline_ms,
-                        tag,
+                        tag, dist,
                     );
                 }
-                (_, Frame::Lease { req, target, resume }) => {
-                    handle_lease(server, sess, &mut after, req, target, resume);
+                (_, Frame::Lease { req, target, resume, dist }) => {
+                    handle_lease(server, sess, &mut after, req, target, resume, dist);
                 }
                 (_, Frame::Cancel { req }) => {
                     handle_cancel(sess, &mut after, req);
@@ -559,6 +562,12 @@ pub(crate) fn process_frames(server: &Arc<ServerShared>, sess: &Arc<Session>) {
 /// one typed ERR frame and neither an engine cursor nor the quota
 /// ledger has moved. Admitted fills become scheduler jobs; the fill's
 /// deadline is fixed here, so queueing delay counts against it.
+///
+/// For a shaped fill (`dist` set), `rows` counts shaped output rows:
+/// the wire width becomes lane width × payload words per sample, and
+/// the raw-draw amplification (`draws_per_row`) is bounded against
+/// `max_fill` as well, so a shaped sub-request never consumes more
+/// engine work per chunk than a maximal raw one.
 #[allow(clippy::too_many_arguments)]
 fn handle_fill(
     server: &Arc<ServerShared>,
@@ -570,6 +579,7 @@ fn handle_fill(
     repeat: u32,
     deadline_ms: u64,
     tag: u64,
+    dist: Option<DistSpec>,
 ) {
     let (engine, local) = match server.resolve(target) {
         Ok(pair) => pair,
@@ -578,13 +588,18 @@ fn handle_fill(
             return;
         }
     };
-    let width: u64 = match target {
+    let lane_width: u64 = match target {
         ReqTarget::Stream(_) => 1,
         ReqTarget::Group(_) => server.group_width as u64,
     };
+    let k = dist.map_or(1, |d| d.draws_per_row() as u64);
+    let wps = dist.map_or(1, |d| d.words_per_sample() as u64);
+    let width = lane_width * wps;
     let numbers = rows.checked_mul(width);
-    let fits = matches!(numbers, Some(n) if n >= 1 && n <= server.cfg.max_fill);
-    if !fits || repeat == 0 {
+    let draws = rows.checked_mul(k).and_then(|n| n.checked_mul(lane_width));
+    let in_bounds =
+        |n: Option<u64>| matches!(n, Some(n) if n >= 1 && n <= server.cfg.max_fill);
+    if !in_bounds(numbers) || !in_bounds(draws) || repeat == 0 {
         direct_err(
             sess,
             after,
@@ -608,7 +623,8 @@ fn handle_fill(
     } else {
         Instant::now().checked_add(Duration::from_millis(deadline_ms))
     };
-    let retain = if server.leases.is_tracked(target) { Some(target) } else { None };
+    let key: RetainKey = (target, dist);
+    let retain = if server.leases.is_tracked(key) { Some(key) } else { None };
     let replay;
     {
         let mut st = sess.lock();
@@ -617,7 +633,7 @@ fn handle_fill(
             return;
         }
         st.jobs += 1;
-        replay = st.replay.remove(&target).unwrap_or_default();
+        replay = st.replay.remove(&key).unwrap_or_default();
     }
     server.sched.push(FillJob {
         session: sess.clone(),
@@ -625,6 +641,7 @@ fn handle_fill(
         engine,
         local,
         retain,
+        dist,
         rows,
         width,
         next_seq: 0,
@@ -646,6 +663,7 @@ fn handle_lease(
     req: u64,
     target: ReqTarget,
     resume: Option<u64>,
+    dist: Option<DistSpec>,
 ) {
     let (engine, local) = match server.resolve(target) {
         Ok(pair) => pair,
@@ -673,16 +691,20 @@ fn handle_lease(
     };
     let mut cursor = 0;
     if let Some(client_cursor) = resume {
-        let width: u64 = match target {
+        // Retention rows are stored in their wire encoding, so the ring
+        // width is the wire width: lane width × payload words per sample.
+        let lane_width: u64 = match target {
             ReqTarget::Stream(_) => 1,
             ReqTarget::Group(_) => server.group_width as u64,
         };
-        match server.leases.resume(target, client_cursor, width) {
+        let width = lane_width * dist.map_or(1, |d| d.words_per_sample() as u64);
+        let key: RetainKey = (target, dist);
+        match server.leases.resume(key, client_cursor, width) {
             Ok((server_cursor, replay)) => {
                 cursor = server_cursor;
                 let mut st = sess.lock();
                 if !st.dead {
-                    st.replay.insert(target, replay);
+                    st.replay.insert(key, replay);
                 }
             }
             Err(e) => {
@@ -877,7 +899,7 @@ fn submit_slice(
         // sub-requests still submit and resolve as typed
         // DeadlineExceeded ERR chunks — the reply count stays exactly
         // `repeat` on every path.
-        batch.push(Request::from(sub).deadline_opt(deadline).tag(job.tag));
+        batch.push(Request::from(sub).deadline_opt(deadline).tag(job.tag).dist_opt(job.dist));
     }
     let mut routes = server.lock_routes();
     match server.engines[job.engine].cq.submit_many(&batch) {

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod unit;
 
 /// Format a throughput in numbers/second with an SI suffix.
 pub fn fmt_rate(per_sec: f64) -> String {

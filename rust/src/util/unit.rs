@@ -1,0 +1,131 @@
+//! Canonical unit-interval conversions: u32/u64 draws → `[0, 1)` floats.
+//!
+//! Every consumer that turns raw stream words into floats — the
+//! Monte-Carlo apps, the `Prng32` float views, the distribution-shaping
+//! samplers (`crate::dist`) — goes through these functions, so the
+//! exact output bits are pinned in ONE place (known-answer tests below)
+//! instead of being re-derived per call site. The conversions differ in
+//! how many input bits survive:
+//!
+//! | fn              | input        | density | form                          |
+//! |-----------------|--------------|---------|-------------------------------|
+//! | [`f32_24`]      | 1 × u32      | 24-bit  | `(x >> 8) · 2⁻²⁴` (f32 mantissa capacity) |
+//! | [`f64_24`]      | 1 × u32      | 24-bit  | same bits widened to f64      |
+//! | [`f64_32`]      | 1 × u32      | 32-bit  | `x · 2⁻³²` (exact in f64)     |
+//! | [`f64_53`]      | 2 × u32      | 53-bit  | 26 + 27 bits → `· 2⁻⁵³`       |
+//! | [`f64_from_u64`]| 1 × u64      | 53-bit  | `(x >> 11) · 2⁻⁵³`            |
+//!
+//! All outputs lie in `[0, 1)` — 1.0 is never produced.
+
+/// f32 in `[0, 1)` from the top 24 bits of one draw (the f32 mantissa
+/// capacity) — the π app's conversion.
+#[inline]
+pub fn f32_24(x: u32) -> f32 {
+    (x >> 8) as f32 * (1.0 / 16_777_216.0)
+}
+
+/// f64 in `[0, 1)` from the top 24 bits of one draw — the
+/// option-pricing kernel's conversion (24-bit density kept so the
+/// pre-`util::unit` bits are preserved exactly).
+#[inline]
+pub fn f64_24(x: u32) -> f64 {
+    (x >> 8) as f64 * (1.0 / 16_777_216.0)
+}
+
+/// f64 in `[0, 1)` from all 32 bits of one draw (exact: an f64 mantissa
+/// holds 53 bits) — the single-draw shaping conversion.
+#[inline]
+pub fn f64_32(x: u32) -> f64 {
+    f64::from(x) * (1.0 / 4_294_967_296.0)
+}
+
+/// f64 in `[0, 1)` with full 53-bit density from two draws (26 bits of
+/// `hi`, 27 bits of `lo`) — `Prng32::next_f64`'s pairing, also used by
+/// the shaping samplers that need fine tail resolution (exponential,
+/// Poisson inverse-CDF).
+#[inline]
+pub fn f64_53(hi: u32, lo: u32) -> f64 {
+    let hi = u64::from(hi >> 6); // 26 bits
+    let lo = u64::from(lo >> 5); // 27 bits
+    ((hi << 27) | lo) as f64 * (1.0 / 9_007_199_254_740_992.0)
+}
+
+/// f64 in `[0, 1)` from the top 53 bits of one u64 draw.
+#[inline]
+pub fn f64_from_u64(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Known-answer tests: the exact output BITS are part of the
+    // contract (the apps' published results and the shaped-stream
+    // replay contract both depend on them), so the expectations are
+    // hex bit patterns, not approximate comparisons.
+    #[test]
+    fn f32_24_known_answers() {
+        assert_eq!(f32_24(0).to_bits(), 0);
+        // 2^-24: exponent 127-24 = 103.
+        assert_eq!(f32_24(0x0000_0100).to_bits(), 103u32 << 23);
+        // 1 - 2^-24: all-ones mantissa just below 1.0.
+        assert_eq!(f32_24(u32::MAX).to_bits(), 0x3F7F_FFFF);
+        // Low 8 bits are discarded.
+        assert_eq!(f32_24(0x1234_56FF), f32_24(0x1234_5600));
+    }
+
+    #[test]
+    fn f64_24_known_answers() {
+        assert_eq!(f64_24(0).to_bits(), 0);
+        // 2^-24: exponent 1023-24 = 999.
+        assert_eq!(f64_24(0x0000_0100).to_bits(), 999u64 << 52);
+        // 1 - 2^-24.
+        assert_eq!(f64_24(u32::MAX).to_bits(), 0x3FEF_FFFF_E000_0000);
+        assert_eq!(f64_24(0xABCD_EFFF), f64_24(0xABCD_EF00));
+    }
+
+    #[test]
+    fn f64_32_known_answers() {
+        assert_eq!(f64_32(0).to_bits(), 0);
+        // 2^-32: exponent 1023-32 = 991.
+        assert_eq!(f64_32(1).to_bits(), 991u64 << 52);
+        assert_eq!(f64_32(1 << 31), 0.5);
+        // 1 - 2^-32.
+        assert_eq!(f64_32(u32::MAX).to_bits(), 0x3FEF_FFFF_FFE0_0000);
+    }
+
+    #[test]
+    fn f64_53_known_answers() {
+        assert_eq!(f64_53(0, 0).to_bits(), 0);
+        // Lowest surviving bit of `lo`: 2^-53 (exponent 1023-53 = 970).
+        assert_eq!(f64_53(0, 1 << 5).to_bits(), 970u64 << 52);
+        // Lowest surviving bit of `hi`: 2^-26 (exponent 1023-26 = 997).
+        assert_eq!(f64_53(1 << 6, 0).to_bits(), 997u64 << 52);
+        // 1 - 2^-53: the largest producible value.
+        assert_eq!(f64_53(u32::MAX, u32::MAX).to_bits(), 0x3FEF_FFFF_FFFF_FFFF);
+        // Discarded bits: low 6 of hi, low 5 of lo.
+        assert_eq!(f64_53(0xFFFF_FFC0, 0xFFFF_FFE0), f64_53(u32::MAX, u32::MAX));
+    }
+
+    #[test]
+    fn f64_from_u64_known_answers() {
+        assert_eq!(f64_from_u64(0).to_bits(), 0);
+        assert_eq!(f64_from_u64(1 << 11).to_bits(), 970u64 << 52);
+        assert_eq!(f64_from_u64(u64::MAX).to_bits(), 0x3FEF_FFFF_FFFF_FFFF);
+        assert_eq!(f64_from_u64(1 << 63), 0.5);
+    }
+
+    #[test]
+    fn everything_stays_in_the_unit_interval() {
+        for x in [0u32, 1, 0x8000_0000, 0xDEAD_BEEF, u32::MAX] {
+            assert!((0.0..1.0).contains(&f64::from(f32_24(x))), "f32_24({x:#x})");
+            assert!((0.0..1.0).contains(&f64_24(x)), "f64_24({x:#x})");
+            assert!((0.0..1.0).contains(&f64_32(x)), "f64_32({x:#x})");
+            for y in [0u32, u32::MAX] {
+                assert!((0.0..1.0).contains(&f64_53(x, y)), "f64_53({x:#x},{y:#x})");
+            }
+        }
+        assert!((0.0..1.0).contains(&f64_from_u64(u64::MAX)));
+    }
+}

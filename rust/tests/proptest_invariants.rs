@@ -292,6 +292,99 @@ fn prop_lifecycle_mix_preserves_exactly_once_fifo_and_replay() {
     }
 }
 
+/// Property (DESIGN.md §7): shaped fills are bit-identical across the
+/// native and sharded engines AND equal to shaping the raw scalar
+/// oracle directly — for random specs, targets, row counts, and
+/// interleavings with raw fills on the same groups. Shaping is a pure
+/// function of the raw tiles, so where the shaping runs (shard thread
+/// vs consumer thread) must never show in the payload.
+#[test]
+fn prop_shaped_fills_bit_identical_across_engines_and_oracle() {
+    use thundering::dist::shape_words;
+    use thundering::DistSpec;
+    let specs = [
+        DistSpec::Uniform01,
+        DistSpec::UniformRange { lo: -1.0, hi: 3.0 },
+        DistSpec::Normal { mean: 0.0, std: 1.0 },
+        DistSpec::Exponential { rate: 1.5 },
+        DistSpec::Bernoulli { p: 0.4 },
+        DistSpec::Poisson { rate: 3.0 },
+    ];
+    let mut rng = SplitMix64::new(0x5AFE_D157);
+    for case in 0..6 {
+        let width = [2usize, 4][rng.next_u32() as usize % 2];
+        let n_groups = 1 + rng.next_u32() as usize % 3;
+        let seed = rng.next_u64();
+        let build = |engine: Engine| {
+            EngineBuilder::new((n_groups * width) as u64)
+                .engine(engine)
+                .group_width(width)
+                .rows_per_tile(8)
+                .lag_window(u64::MAX / 2)
+                .root_seed(seed)
+                .build_completion()
+                .unwrap()
+        };
+        let native = build(Engine::Native);
+        let sharded = build(Engine::Sharded);
+
+        // As in the lifecycle property: a group serves either whole-group
+        // blocks or one fixed lane, so each group's raw consumption is a
+        // single well-defined oracle sequence.
+        let lane_of: Vec<Option<u64>> = (0..n_groups)
+            .map(|g| {
+                (rng.next_u32() % 2 == 0)
+                    .then(|| (g * width) as u64 + rng.next_u64() % width as u64)
+            })
+            .collect();
+        let mut block_oracles: Vec<ThunderingBatch> = (0..n_groups)
+            .map(|g| {
+                ThunderingBatch::new(splitmix64(seed ^ g as u64), width, (g * width) as u64)
+            })
+            .collect();
+        let mut lane_oracles: Vec<Option<ThunderingStream>> = (0..n_groups)
+            .map(|g| {
+                lane_of[g].map(|lane| ThunderingStream::new(splitmix64(seed ^ g as u64), lane))
+            })
+            .collect();
+
+        for op in 0..24 {
+            let g = rng.next_u32() as usize % n_groups;
+            let rows = 1 + rng.next_u32() as usize % 12;
+            // Every 4th op stays raw so shaped and raw fills interleave
+            // on the same stream state.
+            let spec = (rng.next_u32() % 4 != 0)
+                .then(|| specs[rng.next_u32() as usize % specs.len()]);
+            let k = spec.map_or(1, |d| d.draws_per_row());
+            let (raw, shape_width) = match &mut lane_oracles[g] {
+                Some(s) => ((0..rows * k).map(|_| s.next_u32()).collect::<Vec<u32>>(), 1),
+                None => (block_oracles[g].tile(rows * k), width),
+            };
+            let expect = match spec {
+                Some(d) => shape_words(d, &raw, shape_width),
+                None => raw,
+            };
+            let request = || {
+                let base = match lane_of[g] {
+                    Some(lane) => Request::stream(lane).rows(rows),
+                    None => Request::group(g).rows(rows),
+                };
+                base.dist_opt(spec)
+            };
+            for (name, cq) in [("native", &native), ("sharded", &sharded)] {
+                let (ticket, _) = cq.submit(request()).unwrap();
+                let c = cq.wait_for(ticket, None).unwrap().expect("sole consumer");
+                assert_eq!(c.dist, spec, "case {case} op {op} {name}: dist echo");
+                let values = c.result.unwrap();
+                assert_eq!(
+                    values, expect,
+                    "case {case} op {op} {name}: group {g} rows {rows} spec {spec:?}"
+                );
+            }
+        }
+    }
+}
+
 /// Property: lag-window rejections never corrupt subsequent delivery.
 #[test]
 fn prop_lag_rejection_is_clean() {

@@ -2,9 +2,17 @@
 //! in the sequence, since the coordinator serves arbitrary offsets (this
 //! is also the regression test for the p≈1 verdict-saturation bug: a
 //! dead-center collision count once misread as a failure).
+//!
+//! Plus goodness-of-fit probes for the distribution shaping layer
+//! (DESIGN.md §7): every continuous sampler must pass a KS test after
+//! the probability integral transform through its analytic CDF, every
+//! discrete sampler a Pearson chi-square test against its pmf.
 
-use thundering::prng::{splitmix64, ThunderingStream};
+use thundering::dist::{decode_f64, shape_words};
+use thundering::prng::{splitmix64, Prng32, ThunderingStream};
+use thundering::stats::special::{chi2_test, ks_test_uniform, ln_gamma, normal_sf};
 use thundering::stats::{mini_crush, Scale};
+use thundering::DistSpec;
 
 #[test]
 fn battery_passes_at_deep_offsets() {
@@ -14,4 +22,84 @@ fn battery_passes_at_deep_offsets() {
         let rep = mini_crush(&mut s, Scale::Quick);
         assert_eq!(rep.failures(), 0, "offset {offset}: {}", rep.summary());
     }
+}
+
+/// Samples per goodness-of-fit probe. Fixed seeds make the p-values
+/// deterministic; the 1e-6 gate leaves no room for flakiness.
+const GOF_N: usize = 1 << 16;
+const GOF_GATE: f64 = 1e-6;
+
+/// `n` shaped f64 samples of `spec` from one MISRN stream.
+fn shaped_f64(spec: DistSpec, seed: u64, n: usize) -> Vec<f64> {
+    decode_f64(&shaped_words(spec, seed, n))
+}
+
+fn shaped_words(spec: DistSpec, seed: u64, n: usize) -> Vec<u32> {
+    let mut s = ThunderingStream::new(splitmix64(seed), 0);
+    let raw: Vec<u32> = (0..n * spec.draws_per_row()).map(|_| s.next_u32()).collect();
+    shape_words(spec, &raw, 1)
+}
+
+/// KS after the probability integral transform: `cdf(x)` of a correct
+/// sampler is U(0,1).
+fn assert_ks(spec: DistSpec, seed: u64, cdf: impl Fn(f64) -> f64) {
+    let mut u: Vec<f64> = shaped_f64(spec, seed, GOF_N).into_iter().map(cdf).collect();
+    u.sort_by(f64::total_cmp);
+    let p = ks_test_uniform(&u);
+    assert!(p > GOF_GATE, "{spec}: KS p = {p:.3e}");
+}
+
+#[test]
+fn continuous_samplers_pass_ks() {
+    assert_ks(DistSpec::Uniform01, 101, |x| x);
+    let (lo, hi) = (-3.0, 7.0);
+    assert_ks(DistSpec::UniformRange { lo, hi }, 102, |x| (x - lo) / (hi - lo));
+    let (mean, std) = (1.5, 2.0);
+    assert_ks(DistSpec::Normal { mean, std }, 103, |x| {
+        1.0 - normal_sf((x - mean) / std)
+    });
+    let rate = 0.75;
+    assert_ks(DistSpec::Exponential { rate }, 104, |x| 1.0 - (-rate * x).exp());
+}
+
+#[test]
+fn bernoulli_passes_chi2() {
+    let p = 0.3;
+    let words = shaped_words(DistSpec::Bernoulli { p }, 105, GOF_N);
+    let ones = words.iter().filter(|&&w| w == 1).count();
+    assert_eq!(
+        words.iter().filter(|&&w| w > 1).count(),
+        0,
+        "Bernoulli output must be 0/1"
+    );
+    let n = GOF_N as f64;
+    let observed = [(GOF_N - ones) as f64, ones as f64];
+    let expected = [n * (1.0 - p), n * p];
+    let (stat, pval) = chi2_test(&observed, &expected);
+    assert!(pval > GOF_GATE, "Bernoulli chi2 = {stat:.2}, p = {pval:.3e}");
+}
+
+#[test]
+fn poisson_passes_chi2() {
+    let rate = 4.0;
+    let words = shaped_words(DistSpec::Poisson { rate }, 106, GOF_N);
+    // Bins 0..=12 plus one ≥13 tail bin; at λ=4 and 64k samples every
+    // expected count clears the >5 rule chi2_test assumes.
+    const BINS: usize = 13;
+    let mut observed = [0f64; BINS + 1];
+    for &w in &words {
+        observed[(w as usize).min(BINS)] += 1.0;
+    }
+    let n = GOF_N as f64;
+    let mut expected = [0f64; BINS + 1];
+    let mut head = 0.0;
+    for (k, e) in expected.iter_mut().enumerate().take(BINS) {
+        let pmf =
+            (f64::from(k as u32) * rate.ln() - rate - ln_gamma(k as f64 + 1.0)).exp();
+        *e = n * pmf;
+        head += pmf;
+    }
+    expected[BINS] = n * (1.0 - head);
+    let (stat, pval) = chi2_test(&observed, &expected);
+    assert!(pval > GOF_GATE, "Poisson chi2 = {stat:.2}, p = {pval:.3e}");
 }

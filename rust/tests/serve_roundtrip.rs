@@ -8,7 +8,9 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use thundering::dist::shape_words;
 use thundering::prng::{splitmix64, Prng32, ThunderingBatch, ThunderingStream};
+use thundering::DistSpec;
 use thundering::serve::loadgen::{self, LoadgenConfig};
 use thundering::serve::protocol::{self, Frame};
 use thundering::serve::{RemoteClient, RemoteSource, ServeConfig, Server};
@@ -45,6 +47,20 @@ fn oracle_block(group: u64, width: usize, skip: usize, rows: usize) -> Vec<u32> 
         batch.tile(skip);
     }
     batch.tile(rows)
+}
+
+/// Shaped oracle (DESIGN.md §7): shaped rows `skip..skip+rows` of one
+/// group, i.e. the raw oracle rows scaled by the spec's fixed
+/// draws-per-row and shaped lane-by-lane.
+fn shaped_oracle(
+    spec: DistSpec,
+    group: u64,
+    width: usize,
+    skip: usize,
+    rows: usize,
+) -> Vec<u32> {
+    let k = spec.draws_per_row();
+    shape_words(spec, &oracle_block(group, width, skip * k, rows * k), width)
 }
 
 #[test]
@@ -192,6 +208,7 @@ fn bye_flushes_every_data_frame_before_the_ack() {
             repeat: 3,
             deadline_ms: 0,
             tag: 0,
+            dist: None,
         },
     )
     .unwrap();
@@ -703,6 +720,7 @@ fn reserved_request_id_is_rejected_over_the_wire() {
             repeat: 1,
             deadline_ms: 0,
             tag: 0,
+            dist: None,
         },
     )
     .unwrap();
@@ -793,6 +811,157 @@ fn multi_engine_server_routes_a_flat_namespace() {
         Error::GroupOutOfRange { group: 5, have: 5 }
     );
     client.bye().unwrap();
+}
+
+#[test]
+fn shaped_fetches_over_the_wire_match_the_shaped_oracle() {
+    // DESIGN.md §7: DATA carries shaped rows; shaping server-side must
+    // be bit-identical to shaping the same raw fetch locally, on both
+    // engines, for group and stream targets, continuous and discrete
+    // families.
+    let normal = DistSpec::Normal { mean: 0.0, std: 1.0 };
+    for engine in [Engine::Native, Engine::Sharded] {
+        let server = serve(source(engine, 2, 4, 4, u64::MAX / 2));
+        let remote = RemoteSource::connect(server.local_addr()).unwrap();
+        // 6 shaped rows consume 12 raw rows (Box–Muller k = 2); the
+        // follow-up continues at shaped row 6 = raw row 12.
+        assert_eq!(
+            remote.fetch_shaped(ReqTarget::Group(0), 6, normal).unwrap(),
+            shaped_oracle(normal, 0, 4, 0, 6)
+        );
+        assert_eq!(
+            remote.fetch_shaped(ReqTarget::Group(0), 2, normal).unwrap(),
+            shaped_oracle(normal, 0, 4, 6, 2),
+            "shaped fetches advance the raw cursor by draws, not rows"
+        );
+        // Stream target: lane width 1, scalar oracle.
+        let exp = DistSpec::Exponential { rate: 2.0 };
+        let mut s = ThunderingStream::new(splitmix64(42 ^ 1), 5);
+        let raw: Vec<u32> = (0..10).map(|_| s.next_u32()).collect();
+        assert_eq!(
+            remote.fetch_shaped(ReqTarget::Stream(5), 5, exp).unwrap(),
+            shape_words(exp, &raw, 1),
+            "stream-target shaping over the wire"
+        );
+        // A discrete family crosses as one word per sample.
+        let bern = DistSpec::Bernoulli { p: 0.5 };
+        let got = remote.fetch_shaped(ReqTarget::Group(1), 4, bern).unwrap();
+        assert_eq!(got, shaped_oracle(bern, 1, 4, 0, 4));
+        assert_eq!(got.len(), 16, "4 rows × lane width 4 × 1 word");
+    }
+}
+
+#[test]
+fn shaped_lease_resumption_replays_shaped_rows_bit_identically() {
+    // The shaped twin of lease_resumption_replays_lost_rows_bit_identically:
+    // retention and the resume cursor are keyed on (target, spec), count
+    // shaped rows, and the ring holds shaped words — so a reconnecting
+    // client replays the exact shaped tail the dead connection lost.
+    let spec = DistSpec::Normal { mean: 1.0, std: 0.5 };
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let conn1 = RemoteClient::connect(server.local_addr()).unwrap();
+    assert_eq!(
+        conn1.lease_resume_shaped(ReqTarget::Group(0), 0, Some(spec)).unwrap(),
+        0,
+        "fresh shaped track"
+    );
+    assert_eq!(
+        conn1.fill(&Request::group(0).rows(8).dist(spec)).unwrap(),
+        shaped_oracle(spec, 0, 4, 0, 8)
+    );
+    drop(conn1); // dies mid-lease, no BYE
+    server.wait_sessions_closed(1);
+
+    let conn2 = RemoteClient::connect(server.local_addr()).unwrap();
+    assert_eq!(
+        conn2.lease_resume_shaped(ReqTarget::Group(0), 0, Some(spec)).unwrap(),
+        8,
+        "the shaped cursor counts shaped rows"
+    );
+    assert_eq!(
+        conn2.fill(&Request::group(0).rows(12).dist(spec)).unwrap(),
+        shaped_oracle(spec, 0, 4, 0, 12),
+        "shaped replay prefix + fresh remainder stitch into one chunk"
+    );
+    assert_eq!(
+        conn2.fill(&Request::group(0).rows(4).dist(spec)).unwrap(),
+        shaped_oracle(spec, 0, 4, 12, 4),
+        "fresh shaped generation continues past the stitched fill"
+    );
+    conn2.bye().unwrap();
+    server.wait_sessions_closed(2);
+}
+
+#[test]
+fn shaped_resumption_survives_a_dropped_connection_bit_identically() {
+    use std::io::{Read, Write};
+    use std::sync::mpsc;
+
+    // The shaped twin of the proxy-kill test: fetch_shaped through
+    // RemoteSource::with_resumption must reconnect, re-LEASE under the
+    // (target, spec) key, and continue the shaped sequence bit-exactly.
+    let server = serve(source(Engine::Native, 1, 4, 4, u64::MAX / 2));
+    let upstream = server.local_addr();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let proxy_addr = listener.local_addr().unwrap();
+    let (kill_tx, kill_rx) = mpsc::channel::<()>();
+    std::thread::spawn(move || {
+        for inbound in listener.incoming() {
+            let Ok(client_side) = inbound else { break };
+            let Ok(server_side) = TcpStream::connect(upstream) else { break };
+            let kill_c = client_side.try_clone().unwrap();
+            let kill_s = server_side.try_clone().unwrap();
+            let back = (server_side.try_clone().unwrap(), client_side.try_clone().unwrap());
+            let pump = |mut from: TcpStream, mut to: TcpStream| {
+                move || {
+                    let mut buf = [0u8; 4096];
+                    loop {
+                        match from.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => {
+                                if to.write_all(&buf[..n]).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    let _ = to.shutdown(std::net::Shutdown::Both);
+                }
+            };
+            std::thread::spawn(pump(client_side, server_side));
+            std::thread::spawn(pump(back.0, back.1));
+            match kill_rx.recv() {
+                Ok(()) => {
+                    let _ = kill_c.shutdown(std::net::Shutdown::Both);
+                    let _ = kill_s.shutdown(std::net::Shutdown::Both);
+                }
+                Err(_) => break, // test over; leave the last connection be
+            }
+        }
+    });
+
+    let spec = DistSpec::Exponential { rate: 1.5 };
+    let remote = RemoteSource::connect(proxy_addr)
+        .unwrap()
+        .with_resumption(10, Duration::from_millis(20));
+    assert_eq!(
+        remote.fetch_shaped(ReqTarget::Group(0), 8, spec).unwrap(),
+        shaped_oracle(spec, 0, 4, 0, 8)
+    );
+
+    kill_tx.send(()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the kill land
+    assert_eq!(
+        remote.fetch_shaped(ReqTarget::Group(0), 8, spec).unwrap(),
+        shaped_oracle(spec, 0, 4, 8, 8),
+        "bit-identical shaped continuation across the dropped connection"
+    );
+    assert_eq!(
+        remote.fetch_shaped(ReqTarget::Group(0), 4, spec).unwrap(),
+        shaped_oracle(spec, 0, 4, 16, 4)
+    );
+    drop(remote);
+    server.wait_sessions_closed(2);
 }
 
 #[test]

@@ -1,0 +1,166 @@
+//! `thng-check` — the repo-native static-analysis binary.
+//!
+//! ```text
+//! thng-check [--root DIR] [--json] [--baseline FILE] [--write-baseline FILE]
+//! ```
+//!
+//! Walks `rust/src` (or `--root`) and runs the lint catalog
+//! ([`thundering::check`]). Exit status:
+//!
+//! * `0` — no unjustified deny-level findings (or, with `--baseline`,
+//!   none beyond the committed baseline);
+//! * `1` — violations;
+//! * `2` — usage or I/O error.
+//!
+//! `--json` prints the full machine-readable report (CI uploads it next
+//! to `BENCH_parallel.json`); `--write-baseline LINT.json` refreshes
+//! the committed findings-trajectory file.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use thundering::check;
+
+struct Args {
+    root: Option<PathBuf>,
+    json: bool,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args =
+        Args { root: None, json: false, baseline: None, write_baseline: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => args.root = Some(need(&mut it, "--root")?.into()),
+            "--json" => args.json = true,
+            "--baseline" => args.baseline = Some(need(&mut it, "--baseline")?.into()),
+            "--write-baseline" => {
+                args.write_baseline = Some(need(&mut it, "--write-baseline")?.into())
+            }
+            "--help" | "-h" => {
+                return Err("usage: thng-check [--root DIR] [--json] \
+                            [--baseline FILE] [--write-baseline FILE]"
+                    .into())
+            }
+            other => return Err(format!("unknown argument `{other}` (try --help)")),
+        }
+    }
+    Ok(args)
+}
+
+fn need(it: &mut impl Iterator<Item = String>, flag: &str) -> Result<String, String> {
+    it.next().ok_or_else(|| format!("{flag} needs a value"))
+}
+
+/// `--root` if given, else `rust/src` under the working directory, else
+/// under `CARGO_MANIFEST_DIR` (so `cargo run --bin thng-check` works
+/// from anywhere in the checkout).
+fn resolve_root(args: &Args) -> Result<PathBuf, String> {
+    if let Some(r) = &args.root {
+        return Ok(r.clone());
+    }
+    let cwd = PathBuf::from("rust/src");
+    if cwd.is_dir() {
+        return Ok(cwd);
+    }
+    if let Some(dir) = std::env::var_os("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(dir).join("rust/src");
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    Err("cannot find rust/src — pass --root".into())
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("thng-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let root = match resolve_root(&args) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("thng-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match check::analyze_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("thng-check: scanning {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &args.write_baseline {
+        if let Err(e) = std::fs::write(path, report.baseline_json()) {
+            eprintln!("thng-check: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("thng-check: baseline written to {}", path.display());
+    }
+
+    if args.json {
+        print!("{}", report.full_json());
+    } else {
+        print_text(&report);
+    }
+
+    if let Some(path) = &args.baseline {
+        let baseline = match std::fs::read_to_string(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("thng-check: reading baseline {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let regressions = check::regressions_vs_baseline(&report, &baseline);
+        if regressions.is_empty() {
+            eprintln!("thng-check: clean against baseline {}", path.display());
+            return ExitCode::SUCCESS;
+        }
+        for r in &regressions {
+            eprintln!("thng-check: regression — {r}");
+        }
+        return ExitCode::FAILURE;
+    }
+
+    if report.deny_total() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn print_text(report: &check::Report) {
+    for f in &report.findings {
+        let sev = if f.justified {
+            "justified"
+        } else if f.lint.advisory() {
+            "advisory"
+        } else {
+            "DENY"
+        };
+        // Only surface what a human must act on; advisory/justified
+        // detail lives in --json.
+        if sev == "DENY" {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.lint.name(), f.msg);
+        }
+    }
+    let t = report.tallies();
+    println!(
+        "thng-check: {} file(s), {} unjustified finding(s), {} advisory, {} justified \
+         ({} pragma(s))",
+        report.files_scanned,
+        report.deny_total(),
+        t.values().map(|t| t.advisory).sum::<usize>(),
+        t.values().map(|t| t.justified).sum::<usize>(),
+        report.justified_pragmas,
+    );
+}

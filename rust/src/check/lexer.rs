@@ -1,0 +1,396 @@
+//! A hand-rolled, token-level Rust lexer — just enough structure for
+//! the lints: identifiers, punctuation, literals, brace depth, and
+//! comments (kept separately, because pragmas live in them). No `syn`,
+//! no dependencies, per the offline build policy (DESIGN.md §4).
+//!
+//! The lexer is deliberately forgiving: on input it cannot classify it
+//! produces punctuation tokens and moves on. The lints built on top are
+//! conservative pattern matchers, so a mis-lexed corner costs a missed
+//! finding, never a crash.
+
+/// One source token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tok {
+    /// 1-based source line.
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// String literal (cooked/raw/byte), quotes stripped, escapes kept
+    /// verbatim — the lints only prefix-match.
+    Str(String),
+    /// Char or byte-char literal.
+    Char,
+    /// Numeric literal.
+    Num,
+    /// Lifetime (`'a`) — distinguished from char literals.
+    Lifetime,
+    /// A single punctuation character (`::` is two `Punct(':')`).
+    Punct(char),
+}
+
+/// A comment, kept out of the token stream (pragmas are parsed from
+/// these; everything else about comments is noise to the lints).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Text without the `//` / `/*` markers.
+    pub text: String,
+}
+
+/// Lex `src` into tokens plus the comment side channel.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = b.len();
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                // Line comment (incl. doc comments).
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != '\n' {
+                    j += 1;
+                }
+                comments.push(Comment { line, text: b[start..j].iter().collect() });
+                i = j;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // Block comment, nesting honoured.
+                let cstart_line = line;
+                let start = i + 2;
+                let mut j = start;
+                let mut depth = 1;
+                while j < n && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if j + 1 < n && b[j] == '/' && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < n && b[j] == '*' && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let end = j.saturating_sub(2).max(start);
+                comments
+                    .push(Comment { line: cstart_line, text: b[start..end].iter().collect() });
+                i = j;
+            }
+            '"' => {
+                let (text, j, nl) = cooked_string(&b, i + 1);
+                toks.push(Tok { line, kind: TokKind::Str(text) });
+                line += nl;
+                i = j;
+            }
+            'r' | 'b' if raw_or_byte_string(&b, i) => {
+                let (tok, j, nl) = prefixed_string(&b, i);
+                toks.push(Tok { line, kind: tok });
+                line += nl;
+                i = j;
+            }
+            '\'' => {
+                // Lifetime vs char literal.
+                if i + 1 < n && b[i + 1] == '\\' {
+                    // Escaped char literal: scan to the closing quote.
+                    let mut j = i + 2;
+                    if j < n {
+                        j += 1; // the escaped char
+                    }
+                    while j < n && b[j] != '\'' {
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Char });
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && is_ident_start(b[i + 1]) && b[i + 2] != '\'' {
+                    // `'static`, `'a` — a lifetime: consume the ident.
+                    let mut j = i + 1;
+                    while j < n && is_ident(b[j]) {
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Lifetime });
+                    i = j;
+                } else {
+                    // `'x'`, `'('` — a char literal.
+                    let mut j = i + 1;
+                    while j < n && b[j] != '\'' {
+                        if b[j] == '\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                    toks.push(Tok { line, kind: TokKind::Char });
+                    i = (j + 1).min(n);
+                }
+            }
+            c if is_ident_start(c) => {
+                let mut j = i + 1;
+                while j < n && is_ident(b[j]) {
+                    j += 1;
+                }
+                let ident: String = b[i..j].iter().collect();
+                toks.push(Tok { line, kind: TokKind::Ident(ident) });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i + 1;
+                // Numbers incl. suffixes/underscores/hex; `1.5` stays
+                // one token, `1..2` does not eat the range dots.
+                while j < n
+                    && (is_ident(b[j])
+                        || (b[j] == '.'
+                            && j + 1 < n
+                            && b[j + 1].is_ascii_digit()
+                            && b[j - 1] != '.'))
+                {
+                    j += 1;
+                }
+                toks.push(Tok { line, kind: TokKind::Num });
+                i = j;
+            }
+            other => {
+                toks.push(Tok { line, kind: TokKind::Punct(other) });
+                i += 1;
+            }
+        }
+    }
+    (toks, comments)
+}
+
+/// Scan a cooked string body starting just past the opening quote;
+/// returns (content, index past closing quote, newlines crossed).
+fn cooked_string(b: &[char], start: usize) -> (String, usize, u32) {
+    let n = b.len();
+    let mut j = start;
+    let mut nl = 0u32;
+    while j < n {
+        match b[j] {
+            '\\' => j = (j + 2).min(n),
+            '"' => break,
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (b[start..j.min(n)].iter().collect(), (j + 1).min(n), nl)
+}
+
+/// Does `b[i..]` start a raw string (`r"`, `r#"`), byte string (`b"`),
+/// or raw byte string (`br"`, `br#"`)? (Otherwise `r`/`b` is just an
+/// identifier start.)
+fn raw_or_byte_string(b: &[char], i: usize) -> bool {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j < n && b[j] == 'r' {
+            j += 1;
+        }
+    } else if b[j] == 'r' {
+        j += 1;
+    } else {
+        return false;
+    }
+    while j < n && b[j] == '#' {
+        j += 1;
+    }
+    j < n && b[j] == '"' && j > i
+}
+
+/// Lex the raw/byte string at `i`; returns (token, next index,
+/// newlines crossed).
+fn prefixed_string(b: &[char], i: usize) -> (TokKind, usize, u32) {
+    let n = b.len();
+    let mut j = i;
+    while j < n && (b[j] == 'b' || b[j] == 'r') {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while j < n && b[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    // b[j] == '"' guaranteed by raw_or_byte_string.
+    j += 1;
+    let start = j;
+    let mut nl = 0u32;
+    if hashes == 0 && b[i] == 'b' && (i + 1 >= n || b[i + 1] != 'r') {
+        // Plain byte string: escapes apply.
+        let (s, j2, nl2) = cooked_string(b, start);
+        return (TokKind::Str(s), j2, nl2);
+    }
+    // Raw (byte) string: ends at `"` + hashes `#`s, no escapes.
+    while j < n {
+        if b[j] == '\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < n && b[k] == '#' && h < hashes {
+                k += 1;
+                h += 1;
+            }
+            if h == hashes {
+                return (TokKind::Str(b[start..j].iter().collect()), k, nl);
+            }
+        }
+        j += 1;
+    }
+    (TokKind::Str(b[start..j.min(n)].iter().collect()), n, nl)
+}
+
+/// Convenience for the lints: is this token the identifier `s`?
+pub fn is_ident_tok(t: &Tok, s: &str) -> bool {
+    matches!(&t.kind, TokKind::Ident(i) if i == s)
+}
+
+/// Convenience for the lints: is this token the punctuation `c`?
+pub fn is_punct(t: &Tok, c: char) -> bool {
+    matches!(&t.kind, TokKind::Punct(p) if *p == c)
+}
+
+/// Mark which tokens sit inside `#[cfg(test)]` items (the lints skip
+/// them). Recognises the attribute immediately followed (modulo other
+/// attributes) by an item whose body is the next `{...}` block.
+pub fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // Find the opening brace of the annotated item and mask to
+            // its matching close.
+            let mut j = i;
+            let mut depth = 0i32;
+            let mut opened = false;
+            while j < toks.len() {
+                if is_punct(&toks[j], '{') {
+                    depth += 1;
+                    opened = true;
+                } else if is_punct(&toks[j], '}') {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        break;
+                    }
+                } else if !opened && is_punct(&toks[j], ';') {
+                    // `#[cfg(test)] use ...;` — no body.
+                    break;
+                }
+                j += 1;
+            }
+            for m in mask.iter_mut().take((j + 1).min(toks.len())).skip(i) {
+                *m = true;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Does `#` at `toks[i]` open exactly `#[cfg(test)]` (whitespace and
+/// nothing else)?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && is_punct(&toks[i], '#')
+        && is_punct(&toks[i + 1], '[')
+        && is_ident_tok(&toks[i + 2], "cfg")
+        && is_punct(&toks[i + 3], '(')
+        && is_ident_tok(&toks[i + 4], "test")
+        && is_punct(&toks[i + 5], ')')
+        && is_punct(&toks[i + 6], ']')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_do_not_leak_tokens() {
+        let src = r##"
+            // has unwrap() in a comment
+            /* and panic!() in /* a nested */ block */
+            let s = "unwrap() inside a string";
+            let r = r#"raw with "quote" and unwrap()"#;
+            let c = '{'; let lt: &'static str = s;
+        "##;
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("unwrap"));
+        let idents: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert!(!idents.contains(&"unwrap"), "idents: {idents:?}");
+        assert!(!idents.contains(&"panic"));
+        // The raw string kept its content, the char literal did not
+        // unbalance anything, the lifetime is not a char literal.
+        assert!(toks
+            .iter()
+            .any(|t| matches!(&t.kind, TokKind::Str(s) if s.contains("\"quote\""))));
+        assert_eq!(toks.iter().filter(|t| matches!(t.kind, TokKind::Char)).count(), 1);
+        assert_eq!(toks.iter().filter(|t| matches!(t.kind, TokKind::Lifetime)).count(), 1);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "let a = \"x\ny\";\nfoo();";
+        let (toks, _) = lex(src);
+        let foo = toks.iter().find(|t| is_ident_tok(t, "foo")).expect("foo token");
+        assert_eq!(foo.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_masked() {
+        let src = r#"
+            fn live() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                fn helper() { y.unwrap(); }
+            }
+            fn also_live() {}
+        "#;
+        let (toks, _) = lex(src);
+        let mask = test_mask(&toks);
+        let unwraps: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| is_ident_tok(t, "unwrap"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(unwraps.len(), 2);
+        assert!(!mask[unwraps[0]], "live unwrap not masked");
+        assert!(mask[unwraps[1]], "test unwrap masked");
+        let also = toks.iter().position(|t| is_ident_tok(t, "also_live")).expect("present");
+        assert!(!mask[also], "code after the test mod is live again");
+    }
+}

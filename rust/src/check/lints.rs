@@ -1,0 +1,787 @@
+//! The lint passes `thng-check` runs over each source file's token
+//! stream (see [`crate::check::lexer`]). All passes are conservative,
+//! intraprocedural pattern matchers: a miss costs a finding, never a
+//! false build break — the runtime facade ([`crate::sync`]) is the
+//! interprocedural backstop for the lock order.
+
+use crate::check::lexer::{is_ident_tok, is_punct, Comment, Tok, TokKind};
+use crate::check::lock_order::{class_of, AcqKind, LockRank};
+
+/// The lint catalog. `name()` is both the report key and the pragma
+/// spelling (`// thng: allow(<name>, "<why>")`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lint {
+    /// `unwrap()`/`expect()`/`panic!`-family in non-test engine code.
+    Panic,
+    /// Slice indexing in non-test engine code (advisory).
+    Index,
+    /// Nested lock acquisition descending the declared hierarchy.
+    LockOrder,
+    /// Spawns that bypass a named `thng-` `thread::Builder`.
+    ThreadName,
+    /// Wall-clock/env reads in replay-critical paths.
+    Determinism,
+    /// A raw `Mutex::new`/`RwLock::new` where the ranked facade is
+    /// mandatory (`serve/`, `coordinator/`).
+    UnrankedLock,
+    /// A malformed or unknown `thng:` pragma.
+    Pragma,
+}
+
+/// Every lint, in report order.
+pub const ALL_LINTS: [Lint; 7] = [
+    Lint::Panic,
+    Lint::Index,
+    Lint::LockOrder,
+    Lint::ThreadName,
+    Lint::Determinism,
+    Lint::UnrankedLock,
+    Lint::Pragma,
+];
+
+impl Lint {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::Panic => "panic",
+            Lint::Index => "index",
+            Lint::LockOrder => "lock-order",
+            Lint::ThreadName => "thread-name",
+            Lint::Determinism => "determinism",
+            Lint::UnrankedLock => "unranked-lock",
+            Lint::Pragma => "pragma",
+        }
+    }
+
+    /// Advisory lints are counted and reported but never fail the run
+    /// (slice indexing is pervasive in legitimate hot-loop code; the
+    /// panic-class sites are what the policy gates — DESIGN.md §8).
+    pub fn advisory(self) -> bool {
+        matches!(self, Lint::Index)
+    }
+}
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: Lint,
+    /// Path relative to the scanned root.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    pub msg: String,
+    /// Suppressed by a justified pragma on the same or previous line.
+    pub justified: bool,
+}
+
+/// A parsed `// thng: allow(<lint>, "<why>")` pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: u32,
+    pub lint: Lint,
+    /// Non-empty justification (required — see [`parse_pragmas`]).
+    pub reason: String,
+}
+
+/// Extract pragmas from a file's comments. Malformed pragmas (unknown
+/// lint name, missing or empty justification, unparseable call) are
+/// themselves findings — a pragma that silently failed to parse would
+/// otherwise *unsuppress* a violation three edits later. Only a comment
+/// that **is** a directive (its text starts with `thng:`) is parsed;
+/// prose that merely mentions the grammar — e.g. doc comments, whose
+/// text starts with an extra `/` — is not.
+pub fn parse_pragmas(file: &str, comments: &[Comment]) -> (Vec<Pragma>, Vec<Finding>) {
+    let mut pragmas = Vec::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        let Some(rest) = c.text.trim_start().strip_prefix("thng:") else { continue };
+        let rest = rest.trim_start();
+        let mut fail = |msg: String| {
+            findings.push(Finding {
+                lint: Lint::Pragma,
+                file: file.to_string(),
+                line: c.line,
+                msg,
+                justified: false,
+            });
+        };
+        let Some(args) = rest.strip_prefix("allow").map(|r| r.trim_start()) else {
+            fail(format!("unknown thng: directive `{}`", rest.trim()));
+            continue;
+        };
+        let Some(body) = args.strip_prefix('(').and_then(|r| r.split(')').next()) else {
+            fail("malformed pragma: expected `allow(<lint>, \"<why>\")`".into());
+            continue;
+        };
+        let (name, reason) = match body.split_once(',') {
+            Some((n, r)) => (n.trim(), r.trim()),
+            None => (body.trim(), ""),
+        };
+        let Some(lint) = ALL_LINTS.iter().copied().find(|l| l.name() == name) else {
+            fail(format!("pragma names unknown lint `{name}`"));
+            continue;
+        };
+        let reason = reason.trim_matches('"').trim();
+        if reason.is_empty() {
+            fail(format!(
+                "pragma for `{name}` has no justification — `allow({name}, \"<why>\")`"
+            ));
+            continue;
+        }
+        pragmas.push(Pragma { line: c.line, lint, reason: reason.to_string() });
+    }
+    (pragmas, findings)
+}
+
+/// Mark findings justified where a same-lint pragma sits on the same
+/// line (trailing) or the line directly above (standalone).
+pub fn apply_pragmas(findings: &mut [Finding], pragmas: &[Pragma]) {
+    for f in findings.iter_mut() {
+        if f.lint == Lint::Pragma {
+            continue;
+        }
+        f.justified = pragmas
+            .iter()
+            .any(|p| p.lint == f.lint && (p.line == f.line || p.line + 1 == f.line));
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
+    "pub", "ref", "return", "static", "struct", "super", "trait", "type", "unsafe", "use",
+    "where", "while", "yield",
+];
+
+fn ident_of(t: &Tok) -> Option<&str> {
+    match &t.kind {
+        TokKind::Ident(s) => Some(s),
+        _ => None,
+    }
+}
+
+/// Is the replay-critical determinism scope in force for this file?
+fn determinism_scope(rel: &str) -> bool {
+    rel.starts_with("dist") || rel.starts_with("prng/") || rel == "coordinator/drain.rs"
+}
+
+/// Is the panic/index policy scope in force for this file?
+fn panic_scope(rel: &str) -> bool {
+    rel.starts_with("serve/") || rel.starts_with("coordinator/") || rel.starts_with("dist")
+}
+
+/// Is the ranked-lock-facade mandate in force for this file?
+fn facade_scope(rel: &str) -> bool {
+    rel.starts_with("serve/") || rel.starts_with("coordinator/")
+}
+
+/// Run every lint over one file's tokens. `mask[i]` marks tokens inside
+/// `#[cfg(test)]` items (most lints skip them; thread discipline does
+/// not — a test thread outside the `thng-` bill still skews the
+/// `serve_idle` audit).
+pub fn lint_tokens(rel: &str, toks: &[Tok], mask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if panic_scope(rel) {
+        panic_lint(rel, toks, mask, &mut out);
+    }
+    if facade_scope(rel) {
+        unranked_lock_lint(rel, toks, mask, &mut out);
+    }
+    if determinism_scope(rel) {
+        determinism_lint(rel, toks, mask, &mut out);
+    }
+    thread_name_lint(rel, toks, &mut out);
+    lock_order_lint(rel, toks, mask, &mut out);
+    out
+}
+
+fn push(out: &mut Vec<Finding>, lint: Lint, rel: &str, line: u32, msg: String) {
+    out.push(Finding { lint, file: rel.to_string(), line, msg, justified: false });
+}
+
+// ---------------------------------------------------------------------------
+// panic policy
+
+fn panic_lint(rel: &str, toks: &[Tok], mask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        match ident_of(t) {
+            Some(m @ ("unwrap" | "expect"))
+                if i > 0
+                    && is_punct(&toks[i - 1], '.')
+                    && i + 1 < toks.len()
+                    && is_punct(&toks[i + 1], '(') =>
+            {
+                push(
+                    out,
+                    Lint::Panic,
+                    rel,
+                    t.line,
+                    format!("`.{m}()` in engine code — return a typed Error or justify"),
+                );
+            }
+            Some(m @ ("panic" | "unreachable" | "todo" | "unimplemented"))
+                if i + 1 < toks.len() && is_punct(&toks[i + 1], '!') =>
+            {
+                push(
+                    out,
+                    Lint::Panic,
+                    rel,
+                    t.line,
+                    format!("`{m}!` in engine code — return a typed Error or justify"),
+                );
+            }
+            _ => {}
+        }
+        // Advisory: slice indexing (`x[i]`, `f()[i]`, `x[i][j]`).
+        if is_punct(t, '[') && i > 0 && !mask[i - 1] {
+            let prev = &toks[i - 1];
+            let indexes = match &prev.kind {
+                TokKind::Ident(s) => !KEYWORDS.contains(&s.as_str()),
+                TokKind::Punct(']') | TokKind::Punct(')') => true,
+                _ => false,
+            };
+            if indexes {
+                push(
+                    out,
+                    Lint::Index,
+                    rel,
+                    t.line,
+                    "slice index can panic — prefer get()/iterators on untrusted lengths"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ranked-facade mandate
+
+fn unranked_lock_lint(rel: &str, toks: &[Tok], mask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len().saturating_sub(3) {
+        if mask[i] {
+            continue;
+        }
+        if matches!(ident_of(&toks[i]), Some("Mutex" | "RwLock"))
+            && is_punct(&toks[i + 1], ':')
+            && is_punct(&toks[i + 2], ':')
+            && is_ident_tok(&toks[i + 3], "new")
+        {
+            push(
+                out,
+                Lint::UnrankedLock,
+                rel,
+                toks[i].line,
+                "raw std::sync lock in the concurrency core — use sync::OrderedMutex/\
+                 OrderedRwLock with a declared rank"
+                    .into(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// determinism
+
+fn determinism_lint(rel: &str, toks: &[Tok], mask: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        let path2 = |a: &str, b: &str| {
+            is_ident_tok(&toks[i], a)
+                && i + 3 < toks.len()
+                && is_punct(&toks[i + 1], ':')
+                && is_punct(&toks[i + 2], ':')
+                && is_ident_tok(&toks[i + 3], b)
+        };
+        let hit = if path2("Instant", "now") {
+            Some("Instant::now")
+        } else if is_ident_tok(&toks[i], "SystemTime") {
+            Some("SystemTime")
+        } else if path2("env", "var") || path2("env", "var_os") || path2("env", "vars") {
+            Some("std::env read")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            push(
+                out,
+                Lint::Determinism,
+                rel,
+                toks[i].line,
+                format!(
+                    "{what} in a replay-critical path — bit-identical replay forbids \
+                     wall-clock and environment inputs here"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread discipline
+
+fn thread_name_lint(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    let n = toks.len();
+    for i in 0..n {
+        // Raw `thread::spawn` (any code, tests included — anonymous
+        // threads evade the /proc comm audit in serve_idle.rs).
+        if is_ident_tok(&toks[i], "thread")
+            && i + 3 < n
+            && is_punct(&toks[i + 1], ':')
+            && is_punct(&toks[i + 2], ':')
+            && is_ident_tok(&toks[i + 3], "spawn")
+        {
+            push(
+                out,
+                Lint::ThreadName,
+                rel,
+                toks[i].line,
+                "raw thread::spawn — use thread::Builder with a `thng-` name".into(),
+            );
+        }
+        // `thread::Builder::new()` chains must carry `.name("thng-…")`.
+        if is_ident_tok(&toks[i], "thread")
+            && i + 6 < n
+            && is_punct(&toks[i + 1], ':')
+            && is_punct(&toks[i + 2], ':')
+            && is_ident_tok(&toks[i + 3], "Builder")
+            && is_punct(&toks[i + 4], ':')
+            && is_punct(&toks[i + 5], ':')
+            && is_ident_tok(&toks[i + 6], "new")
+        {
+            check_builder_chain(rel, toks, i, out);
+        }
+    }
+}
+
+/// Walk the builder method chain from `thread::Builder::new` for a
+/// `.name(…)` whose first string literal starts with `thng-`.
+fn check_builder_chain(rel: &str, toks: &[Tok], start: usize, out: &mut Vec<Finding>) {
+    let n = toks.len();
+    let line = toks[start].line;
+    let mut j = start + 7;
+    let mut depth = 0i32;
+    while j < n {
+        match &toks[j].kind {
+            TokKind::Punct('(') | TokKind::Punct('{') | TokKind::Punct('[') => depth += 1,
+            TokKind::Punct(')') | TokKind::Punct('}') | TokKind::Punct(']') => depth -= 1,
+            TokKind::Punct(';') if depth <= 0 => break,
+            TokKind::Ident(m)
+                if depth == 0 && j > 0 && is_punct(&toks[j - 1], '.') && m == "name" =>
+            {
+                // Scan the argument group for its first string literal.
+                let mut k = j + 1;
+                let mut d = 0i32;
+                while k < n {
+                    match &toks[k].kind {
+                        TokKind::Punct('(') => d += 1,
+                        TokKind::Punct(')') => {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        TokKind::Str(s) => {
+                            if !s.starts_with("thng-") {
+                                push(
+                                    out,
+                                    Lint::ThreadName,
+                                    rel,
+                                    toks[k].line,
+                                    format!("thread name `{s}` lacks the `thng-` prefix"),
+                                );
+                            }
+                            return;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                push(
+                    out,
+                    Lint::ThreadName,
+                    rel,
+                    toks[j].line,
+                    "thread name is not a literal — cannot verify the `thng-` prefix; \
+                     justify if call sites guarantee it"
+                        .into(),
+                );
+                return;
+            }
+            TokKind::Ident(m)
+                if depth == 0 && j > 0 && is_punct(&toks[j - 1], '.') && m == "spawn" =>
+            {
+                push(
+                    out,
+                    Lint::ThreadName,
+                    rel,
+                    line,
+                    "thread::Builder spawn without .name(\"thng-…\")".into(),
+                );
+                return;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lock order
+
+/// One tracked held lock inside the current function region.
+struct HeldLock {
+    rank: &'static LockRank,
+    /// Brace depth at acquisition — popped when the block closes.
+    depth: usize,
+    /// `let` binding name, if the guard was bound (enables `drop(x)`).
+    binding: Option<String>,
+}
+
+const ACQ_MUTEX: &[&str] = &["lock", "lock_checked", "try_lock", "try_lock_checked"];
+const ACQ_RW: &[&str] = &["read", "write"];
+/// Wrapper methods that acquire a known lock regardless of receiver.
+static WRAPPERS: &[(&str, &str, &LockRank)] = &[
+    ("serve/", "lock_routes", &crate::check::lock_order::ROUTES),
+    ("coordinator/", "lock_state", &crate::check::lock_order::INBOX),
+];
+
+fn lock_order_lint(rel: &str, toks: &[Tok], mask: &[bool], out: &mut Vec<Finding>) {
+    let mut held: Vec<HeldLock> = Vec::new();
+    let mut depth = 0usize;
+    let n = toks.len();
+    for i in 0..n {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if is_punct(t, '{') {
+            depth += 1;
+            continue;
+        }
+        if is_punct(t, '}') {
+            depth = depth.saturating_sub(1);
+            held.retain(|h| h.depth <= depth);
+            continue;
+        }
+        // `drop(binding)` releases a tracked guard early.
+        if is_ident_tok(t, "drop")
+            && i + 3 < n
+            && is_punct(&toks[i + 1], '(')
+            && is_punct(&toks[i + 3], ')')
+        {
+            if let Some(name) = ident_of(&toks[i + 2]) {
+                if let Some(p) =
+                    held.iter().rposition(|h| h.binding.as_deref() == Some(name))
+                {
+                    held.remove(p);
+                }
+            }
+            continue;
+        }
+        // Acquisition?
+        let Some(m) = ident_of(t) else { continue };
+        let rank = if i > 0
+            && is_punct(&toks[i - 1], '.')
+            && i + 1 < n
+            && is_punct(&toks[i + 1], '(')
+        {
+            if ACQ_MUTEX.contains(&m) {
+                receiver_field(toks, i).and_then(|f| class_of(rel, f, AcqKind::Mutex))
+            } else if ACQ_RW.contains(&m) {
+                receiver_field(toks, i).and_then(|f| class_of(rel, f, AcqKind::RwLock))
+            } else {
+                WRAPPERS
+                    .iter()
+                    .find(|(p, w, _)| rel.starts_with(p) && *w == m)
+                    .map(|&(_, _, r)| r)
+            }
+        } else {
+            None
+        };
+        let Some(rank) = rank else { continue };
+        if let Some(top) = held.iter().map(|h| h.rank).max_by_key(|r| r.rank) {
+            let ok = rank.rank > top.rank || (rank.rank == top.rank && rank.multi);
+            if !ok {
+                push(
+                    out,
+                    Lint::LockOrder,
+                    rel,
+                    t.line,
+                    format!(
+                        "acquiring `{}` (rank {}) while `{}` (rank {}) is held — \
+                         violates the order declared in check/lock_order.rs",
+                        rank.name, rank.rank, top.name, top.rank
+                    ),
+                );
+            }
+        }
+        if guard_kept(toks, i) {
+            if let Some(binding) = binding_of(toks, i) {
+                held.push(HeldLock { rank, depth, binding: Some(binding) });
+            }
+        }
+    }
+}
+
+/// Does the guard from the acquisition at method token `i` outlive its
+/// statement? `x.lock().pop()` and `*x.lock()` consume a *temporary*
+/// guard that drops at the semicolon — tracking those as held would
+/// flag perfectly ordered code downstream. The guard is kept only when
+/// the call's closing paren (modulo one `?`) ends the statement.
+fn guard_kept(toks: &[Tok], i: usize) -> bool {
+    let n = toks.len();
+    let mut j = i + 1; // the '('
+    let mut d = 0i32;
+    while j < n {
+        match &toks[j].kind {
+            TokKind::Punct('(') => d += 1,
+            TokKind::Punct(')') => {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j += 1;
+    if j < n && is_punct(&toks[j], '?') {
+        j += 1;
+    }
+    j < n && is_punct(&toks[j], ';')
+}
+
+/// The receiver's final field identifier for `<recv>.m(...)` at the
+/// method token index `i`: `self.state.lock()` → `state`,
+/// `groups[g].lock()` → `groups`. `None` when the receiver is not a
+/// simple field chain.
+fn receiver_field(toks: &[Tok], i: usize) -> Option<&str> {
+    if i < 2 {
+        return None;
+    }
+    let mut k = i - 2; // token before the '.'
+    if is_punct(&toks[k], ']') {
+        // Skip one balanced index group.
+        let mut d = 0i32;
+        loop {
+            match &toks[k].kind {
+                TokKind::Punct(']') => d += 1,
+                TokKind::Punct('[') => {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            if k == 0 {
+                return None;
+            }
+            k -= 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        k -= 1;
+    }
+    ident_of(&toks[k]).filter(|f| !KEYWORDS.contains(f))
+}
+
+/// The `let` (or plain-assignment) binding receiving the acquisition at
+/// token `i`, scanning back to the start of the statement.
+fn binding_of(toks: &[Tok], i: usize) -> Option<String> {
+    let mut k = i;
+    let mut steps = 0;
+    while k > 0 && steps < 40 {
+        k -= 1;
+        steps += 1;
+        match &toks[k].kind {
+            TokKind::Punct(';') | TokKind::Punct('{') | TokKind::Punct('}') => return None,
+            TokKind::Ident(s) if s == "let" => {
+                // `let [mut] NAME = …` (a pattern like `let (a, b)` has
+                // no single guard binding — treat as untracked).
+                let mut j = k + 1;
+                if is_ident_tok(&toks[j], "mut") {
+                    j += 1;
+                }
+                // `let v = *x.lock();` binds the *copied value*; the
+                // temporary guard drops at the semicolon.
+                if j + 2 < toks.len()
+                    && is_punct(&toks[j + 1], '=')
+                    && is_punct(&toks[j + 2], '*')
+                {
+                    return None;
+                }
+                return ident_of(&toks[j]).map(str::to_string);
+            }
+            TokKind::Punct('=') if k >= 1 => {
+                if k + 1 < toks.len() && is_punct(&toks[k + 1], '*') {
+                    return None; // value copy out of a temporary guard
+                }
+                if let Some(name) = ident_of(&toks[k - 1]) {
+                    // Plain reassignment `st = inbox.lock_state();`.
+                    if !KEYWORDS.contains(&name) {
+                        return Some(name.to_string());
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::lexer::{lex, test_mask};
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let (toks, comments) = lex(src);
+        let mask = test_mask(&toks);
+        let mut f = lint_tokens(rel, &toks, &mask);
+        let (pragmas, mut perrs) = parse_pragmas(rel, &comments);
+        apply_pragmas(&mut f, &pragmas);
+        f.append(&mut perrs);
+        f
+    }
+
+    #[test]
+    fn unwrap_fires_only_in_scope_and_outside_tests() {
+        let src = "fn f() { x.unwrap(); }";
+        assert_eq!(run("serve/x.rs", src).iter().filter(|f| f.lint == Lint::Panic).count(), 1);
+        assert_eq!(run("prng/x.rs", src).iter().filter(|f| f.lint == Lint::Panic).count(), 0);
+    }
+
+    #[test]
+    fn pragma_justifies_and_malformed_pragma_is_a_finding() {
+        let src = r#"
+            fn f() {
+                // thng: allow(panic, "length checked on the line above")
+                x.unwrap();
+                y.unwrap(); // thng: allow(panic)
+            }
+        "#;
+        let f = run("serve/x.rs", src);
+        let panics: Vec<_> = f.iter().filter(|f| f.lint == Lint::Panic).collect();
+        assert_eq!(panics.len(), 2);
+        assert!(panics[0].justified, "reasoned pragma suppresses");
+        assert!(!panics[1].justified, "reasonless pragma does not");
+        assert_eq!(f.iter().filter(|f| f.lint == Lint::Pragma).count(), 1);
+    }
+
+    #[test]
+    fn lock_order_flags_descending_nesting_only() {
+        let bad = r#"
+            fn f(server: &S, sess: &Session) {
+                let mut st = sess.lock();
+                let mut routes = server.lock_routes();
+            }
+        "#;
+        let f = run("serve/session.rs", bad);
+        assert_eq!(f.iter().filter(|f| f.lint == Lint::LockOrder).count(), 1, "{f:?}");
+
+        let good = r#"
+            fn f(server: &S, sess: &Session) {
+                let mut routes = server.lock_routes();
+                let mut st = sess.lock();
+                drop(st);
+                drop(routes);
+            }
+        "#;
+        assert!(run("serve/session.rs", good).iter().all(|f| f.lint != Lint::LockOrder));
+    }
+
+    #[test]
+    fn drop_and_block_end_release_tracked_guards() {
+        let src = r#"
+            fn f(sess: &Session, server: &S) {
+                {
+                    let st = sess.lock();
+                }
+                let routes = server.lock_routes();
+            }
+        "#;
+        assert!(run("serve/session.rs", src).iter().all(|f| f.lint != Lint::LockOrder));
+    }
+
+    #[test]
+    fn temporary_guards_do_not_count_as_held() {
+        // The shard scan-loop shape: value copies (`*….lock()`) and
+        // chained calls (`.lock().len()`) drop their guard at the
+        // semicolon — downstream acquisitions are unordered, not nested.
+        let src = r#"
+            fn scan(park: &Park, queue: &Q, shared: &S) {
+                let pre = *park.generation.lock();
+                let has_room = queue.ready.lock().len() < 4;
+                let mut buf = shared.pool.lock().pop();
+                let mut q = queue.ready.lock();
+                q.push_back(buf);
+                drop(q);
+                let guard = park.generation.lock();
+            }
+        "#;
+        let f = run("coordinator/sharded.rs", src);
+        assert!(f.iter().all(|f| f.lint != Lint::LockOrder), "{f:?}");
+
+        // A genuinely bound guard still flags descending nesting.
+        let bad = r#"
+            fn scan(park: &Park, queue: &Q) {
+                let guard = park.generation.lock();
+                let q = queue.ready.lock();
+            }
+        "#;
+        let f = run("coordinator/sharded.rs", bad);
+        assert_eq!(f.iter().filter(|f| f.lint == Lint::LockOrder).count(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn doc_comments_describing_the_grammar_are_not_pragmas() {
+        let src = r#"
+            /// Suppress with `// thng: allow(<lint>, "<why>")` as shown.
+            // A stray thng: mention mid-prose is not a directive either?
+            fn f() {}
+        "#;
+        let f = run("serve/x.rs", src);
+        assert!(f.iter().all(|f| f.lint != Lint::Pragma), "{f:?}");
+    }
+
+    #[test]
+    fn thread_lint_catches_raw_spawn_and_bad_names() {
+        let raw = "fn f() { std::thread::spawn(|| {}); }";
+        assert_eq!(run("util/x.rs", raw).len(), 1);
+        let unnamed = "fn f() { std::thread::Builder::new().spawn(|| {}); }";
+        assert_eq!(run("util/x.rs", unnamed).len(), 1);
+        let bad = r#"fn f() { std::thread::Builder::new().name("worker-0".into()).spawn(f); }"#;
+        assert_eq!(run("util/x.rs", bad).len(), 1);
+        let good =
+            r#"fn f() { std::thread::Builder::new().name(format!("thng-w{i}")).spawn(f); }"#;
+        assert_eq!(run("util/x.rs", good).len(), 0);
+    }
+
+    #[test]
+    fn determinism_scope_is_the_replay_paths() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(run("coordinator/drain.rs", src).len(), 1);
+        assert_eq!(run("dist/mod.rs", src).len(), 1);
+        // Deadline arithmetic in the serve layer is allowed.
+        assert_eq!(
+            run("serve/session.rs", src).iter().filter(|f| f.lint == Lint::Determinism).count(),
+            0
+        );
+    }
+
+    #[test]
+    fn unranked_lock_is_flagged_in_the_core_only() {
+        let src = "fn f() { let m = Mutex::new(0); }";
+        assert_eq!(run("coordinator/x.rs", src).len(), 1);
+        assert_eq!(run("stats/x.rs", src).len(), 0);
+    }
+}

@@ -1,0 +1,259 @@
+//! The crate-wide lock hierarchy, declared once.
+//!
+//! Every lock in `serve/` and `coordinator/` carries one of the ranks
+//! below through the [`crate::sync`] facade; a thread may only acquire
+//! a lock whose rank is **strictly greater** than every rank it already
+//! holds (equal ranks are allowed only for classes marked `multi`,
+//! which are acquired as an index-ordered set — e.g. `fetch_many`
+//! taking every group's drain lock in group order). The same table
+//! drives two independent enforcers:
+//!
+//! * **statically** — `thng-check`'s lock-order lint maps `.lock()` /
+//!   `.try_lock()` / `.read()` / `.write()` receivers onto these ranks
+//!   (via [`CLASSES`]) and flags any nested acquisition that descends
+//!   the order within a function body;
+//! * **dynamically** — [`crate::sync::OrderedMutex`] asserts the same
+//!   order against a thread-local held-rank stack on every acquisition
+//!   in debug builds (zero cost in release).
+//!
+//! The numeric gaps are deliberate: rank a new lock by slotting it
+//! between its outermost holder and the innermost lock its critical
+//! sections acquire, and leave room for the next one (DESIGN.md §8
+//! walks through the procedure).
+
+/// One rung of the hierarchy: a named rank plus whether multiple locks
+/// of this class may be held at once (index-ordered set acquisition).
+#[derive(Debug)]
+pub struct LockRank {
+    /// Human-readable class name (reported by both enforcers).
+    pub name: &'static str,
+    /// Position in the total order; lower = acquired first (outermost).
+    pub rank: u16,
+    /// Allow holding several same-rank locks of this class, acquired
+    /// in a canonical index order by the caller.
+    pub multi: bool,
+}
+
+/// `ServerShared::routes` — the completion-ticket routing map. The
+/// outermost serve-layer lock: held across engine submission so a
+/// reactor can never observe a ticket before its route exists.
+pub static ROUTES: LockRank = LockRank { name: "routes", rank: 10, multi: false };
+
+/// `ServerShared::sessions` — the live-session registry.
+pub static SESSIONS: LockRank = LockRank { name: "sessions", rank: 12, multi: false };
+
+/// `ServerShared::ready` / `pending` — the readiness work queues.
+pub static WORKQ: LockRank = LockRank { name: "workq", rank: 14, multi: false };
+
+/// `ServerShared::closed` — the closed-session counter (shutdown gate).
+pub static CLOSED: LockRank = LockRank { name: "closed", rank: 16, multi: false };
+
+/// `Session::state` — one connection's protocol state. Nests inside
+/// `routes` (the one allowed serve-layer nesting, see the session
+/// module docs); never wraps the scheduler or another session.
+pub static SESSION: LockRank = LockRank { name: "session", rank: 20, multi: false };
+
+/// `Sched::inner` — the weighted-fair queue + admission ledger. Always
+/// taken alone today (`AfterLock` defers cross-lock effects); ranked
+/// below the engine locks so an admission check could consult them.
+pub static SCHED: LockRank = LockRank { name: "sched", rank: 30, multi: false };
+
+/// `Resumption::cursors` — client-side resume cursors, held across the
+/// reconnect/replay sequence (which takes the connection locks below).
+pub static CLIENT_CURSORS: LockRank = LockRank { name: "client-cursors", rank: 34, multi: false };
+
+/// `RemoteSource::client` — the swappable connection slot (RwLock).
+pub static CLIENT_CONN: LockRank = LockRank { name: "client-conn", rank: 36, multi: false };
+
+/// `RemoteClient::write` — the wire write half.
+pub static CLIENT_WRITE: LockRank = LockRank { name: "client-write", rank: 37, multi: false };
+
+/// `RemoteClient::read` — the wire read half (never held together with
+/// the write half; ranked inside it so either nesting direction that
+/// appears is caught, not silently tolerated).
+pub static CLIENT_READ: LockRank = LockRank { name: "client-read", rank: 38, multi: false };
+
+/// `CompletionInbox::state` — the submission/completion front. Nests
+/// inside `routes` (serve submission) and outside nothing: consumers
+/// drop it before executing, engines take it with no lock held.
+pub static INBOX: LockRank = LockRank { name: "inbox", rank: 40, multi: false };
+
+/// `Coordinator::groups[g]` — one native engine group's stream state.
+/// `multi`: `fetch_many` holds every group in index order.
+pub static GROUP: LockRank = LockRank { name: "group", rank: 50, multi: true };
+
+/// `GroupSlot::drain` — one sharded group's drain/lag core. `multi`:
+/// `fetch_many` holds every group's drain in index order. Anything a
+/// drain critical section touches (tiles, pool, parking) ranks below;
+/// the completion inbox ranks **above**, which is why a shard must drop
+/// the drain lock before posting a completion.
+pub static DRAIN: LockRank = LockRank { name: "drain", rank: 55, multi: true };
+
+/// `TileQueue::ready` — one group's prefetched-tile queue.
+pub static TILES: LockRank = LockRank { name: "tiles", rank: 60, multi: false };
+
+/// `Shared::pool` — the recycled tile-buffer pool.
+pub static POOL: LockRank = LockRank { name: "pool", rank: 65, multi: false };
+
+/// `Shared::completion` — the engine's registered completion-front
+/// slot; held while installing the inbox waker.
+pub static COMPLETION_SLOT: LockRank =
+    LockRank { name: "completion-slot", rank: 70, multi: false };
+
+/// `CompletionInbox::waker` — the engine-wake callback slot; held while
+/// invoking the callback, which parks/unparks (below).
+pub static WAKER: LockRank = LockRank { name: "waker", rank: 75, multi: false };
+
+/// `Parker::gen` / `Park::generation` — lost-wakeup-proof parking
+/// generation counters. Innermost of the engine locks: `nudge` runs
+/// under a drain lock and under the waker slot.
+pub static PARK: LockRank = LockRank { name: "park", rank: 80, multi: false };
+
+/// `LeaseTable::inner` — the retention rings. Last in the order:
+/// retention appends happen after every other lock is released, and a
+/// retention critical section may acquire nothing.
+pub static RETENTION: LockRank = LockRank { name: "retention", rank: 90, multi: false };
+
+/// How a lock class is acquired on the wire of the source text — which
+/// facade methods the lock-order lint should recognise for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcqKind {
+    /// `.lock()`, `.lock_checked()`, `.try_lock()`, `.try_lock_checked()`.
+    Mutex,
+    /// `.read()` / `.write()`.
+    RwLock,
+}
+
+/// One lint-side mapping: a receiver field name (the last identifier
+/// before the acquisition method), scoped to the files whose relative
+/// path starts with `path` (`""` = any file), resolves to `rank`.
+#[derive(Debug)]
+pub struct LockClass {
+    /// Relative-path prefix under `rust/src` (`""` matches everywhere).
+    pub path: &'static str,
+    /// Receiver field identifier as it appears in source.
+    pub field: &'static str,
+    /// Acquisition surface to recognise.
+    pub kind: AcqKind,
+    /// The declared rank.
+    pub rank: &'static LockRank,
+}
+
+/// The lint's receiver table. Order matters only for readability; the
+/// lint picks the first entry whose path prefix and field both match.
+pub static CLASSES: &[LockClass] = &[
+    LockClass { path: "serve/server.rs", field: "routes", kind: AcqKind::Mutex, rank: &ROUTES },
+    LockClass { path: "serve/server.rs", field: "sessions", kind: AcqKind::Mutex, rank: &SESSIONS },
+    LockClass { path: "serve/server.rs", field: "ready", kind: AcqKind::Mutex, rank: &WORKQ },
+    LockClass { path: "serve/server.rs", field: "pending", kind: AcqKind::Mutex, rank: &WORKQ },
+    LockClass { path: "serve/server.rs", field: "closed", kind: AcqKind::Mutex, rank: &CLOSED },
+    LockClass { path: "serve/server.rs", field: "gen", kind: AcqKind::Mutex, rank: &PARK },
+    LockClass { path: "serve/session.rs", field: "state", kind: AcqKind::Mutex, rank: &SESSION },
+    // Session guards taken through the `Session::lock` wrapper at call
+    // sites anywhere in the serve layer.
+    LockClass { path: "serve/", field: "sess", kind: AcqKind::Mutex, rank: &SESSION },
+    LockClass { path: "serve/", field: "session", kind: AcqKind::Mutex, rank: &SESSION },
+    LockClass { path: "serve/sched.rs", field: "inner", kind: AcqKind::Mutex, rank: &SCHED },
+    LockClass {
+        path: "serve/client.rs",
+        field: "cursors",
+        kind: AcqKind::Mutex,
+        rank: &CLIENT_CURSORS,
+    },
+    LockClass {
+        path: "serve/client.rs",
+        field: "client",
+        kind: AcqKind::RwLock,
+        rank: &CLIENT_CONN,
+    },
+    LockClass {
+        path: "serve/client.rs",
+        field: "write",
+        kind: AcqKind::Mutex,
+        rank: &CLIENT_WRITE,
+    },
+    LockClass { path: "serve/client.rs", field: "read", kind: AcqKind::Mutex, rank: &CLIENT_READ },
+    LockClass {
+        path: "coordinator/completion.rs",
+        field: "state",
+        kind: AcqKind::Mutex,
+        rank: &INBOX,
+    },
+    LockClass {
+        path: "coordinator/completion.rs",
+        field: "waker",
+        kind: AcqKind::Mutex,
+        rank: &WAKER,
+    },
+    LockClass { path: "coordinator/mod.rs", field: "groups", kind: AcqKind::Mutex, rank: &GROUP },
+    LockClass { path: "coordinator/mod.rs", field: "group", kind: AcqKind::Mutex, rank: &GROUP },
+    LockClass {
+        path: "coordinator/sharded.rs",
+        field: "drain",
+        kind: AcqKind::Mutex,
+        rank: &DRAIN,
+    },
+    LockClass {
+        path: "coordinator/sharded.rs",
+        field: "ready",
+        kind: AcqKind::Mutex,
+        rank: &TILES,
+    },
+    LockClass { path: "coordinator/sharded.rs", field: "pool", kind: AcqKind::Mutex, rank: &POOL },
+    LockClass {
+        path: "coordinator/sharded.rs",
+        field: "completion",
+        kind: AcqKind::Mutex,
+        rank: &COMPLETION_SLOT,
+    },
+    LockClass {
+        path: "coordinator/sharded.rs",
+        field: "generation",
+        kind: AcqKind::Mutex,
+        rank: &PARK,
+    },
+    LockClass { path: "serve/lease.rs", field: "inner", kind: AcqKind::Mutex, rank: &RETENTION },
+];
+
+/// Look up the rank for an acquisition of `field` via `kind` in the
+/// file at `rel_path` (relative to `rust/src`).
+pub fn class_of(rel_path: &str, field: &str, kind: AcqKind) -> Option<&'static LockRank> {
+    CLASSES
+        .iter()
+        .find(|c| c.kind == kind && c.field == field && rel_path.starts_with(c.path))
+        .map(|c| c.rank)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_are_unique_per_name_and_consistent() {
+        let mut seen = std::collections::HashMap::new();
+        for c in CLASSES {
+            // One name = one rank value, everywhere it appears.
+            let prev = seen.insert(c.rank.name, c.rank.rank);
+            assert!(prev.is_none() || prev == Some(c.rank.rank), "rank {}", c.rank.name);
+        }
+    }
+
+    #[test]
+    fn lookup_is_path_scoped() {
+        assert_eq!(
+            class_of("serve/sched.rs", "inner", AcqKind::Mutex).map(|r| r.name),
+            Some("sched")
+        );
+        assert_eq!(
+            class_of("serve/lease.rs", "inner", AcqKind::Mutex).map(|r| r.name),
+            Some("retention")
+        );
+        assert_eq!(class_of("prng/xorshift.rs", "inner", AcqKind::Mutex), None);
+        // RwLock surface does not match Mutex classes.
+        assert_eq!(class_of("serve/client.rs", "client", AcqKind::Mutex), None);
+        assert_eq!(
+            class_of("serve/client.rs", "client", AcqKind::RwLock).map(|r| r.rank),
+            Some(36)
+        );
+    }
+}

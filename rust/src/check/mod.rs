@@ -1,0 +1,293 @@
+//! `thng-check` — the repo-native static-analysis pass.
+//!
+//! Walks `rust/src` and enforces the crate's written concurrency and
+//! determinism contracts (see DESIGN.md §8 for the full catalog):
+//!
+//! * **panic policy** — no `unwrap()`/`expect()`/`panic!`-family in
+//!   non-test code under `serve/`, `coordinator/`, `dist/` without a
+//!   justified pragma; slice indexing is tracked as advisory;
+//! * **lock order** — nested acquisitions must ascend the hierarchy
+//!   declared once in [`lock_order`];
+//! * **thread discipline** — every spawn goes through a named `thng-`
+//!   `thread::Builder`;
+//! * **determinism** — no wall-clock or environment reads in the
+//!   replay-critical paths;
+//! * **ranked-facade mandate** — no raw `std::sync` lock construction
+//!   in `serve/`/`coordinator/`.
+//!
+//! Findings are suppressed (and counted as *justified*) by a
+//! `// thng: allow(<lint>, "<why>")` pragma on the same or previous
+//! line. The pass is zero-dependency by construction: a hand-rolled
+//! lexer ([`lexer`]), pattern-matching lints ([`lints`]), and a
+//! hand-rolled JSON emitter below — nothing to download, per the
+//! offline build policy.
+
+pub mod lexer;
+pub mod lints;
+pub mod lock_order;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use lints::{Finding, Lint, ALL_LINTS};
+
+/// Aggregated results of one tree scan.
+#[derive(Debug)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Every finding, in (file, line) order.
+    pub findings: Vec<Finding>,
+    /// Justified pragmas encountered (the trajectory metric).
+    pub justified_pragmas: usize,
+}
+
+/// Per-lint tallies derived from a [`Report`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Tally {
+    /// Unjustified, non-advisory findings — the gating quantity.
+    pub deny: usize,
+    /// Advisory findings (reported, never gating).
+    pub advisory: usize,
+    /// Findings suppressed by a justified pragma.
+    pub justified: usize,
+}
+
+impl Report {
+    /// Tallies keyed by lint name (BTreeMap: deterministic JSON order).
+    pub fn tallies(&self) -> BTreeMap<&'static str, Tally> {
+        let mut t: BTreeMap<&'static str, Tally> =
+            ALL_LINTS.iter().map(|l| (l.name(), Tally::default())).collect();
+        for f in &self.findings {
+            let e = t.entry(f.lint.name()).or_default();
+            if f.justified {
+                e.justified += 1;
+            } else if f.lint.advisory() {
+                e.advisory += 1;
+            } else {
+                e.deny += 1;
+            }
+        }
+        t
+    }
+
+    /// Total unjustified deny-level findings — zero means the tree is
+    /// clean and the binary exits 0.
+    pub fn deny_total(&self) -> usize {
+        self.tallies().values().map(|t| t.deny).sum()
+    }
+
+    /// The committed-baseline body (`LINT.json`): gating counts only —
+    /// deny per lint plus the justified-pragma trajectory. Advisory
+    /// counts are deliberately excluded (they would churn the baseline
+    /// without gating anything).
+    pub fn baseline_json(&self) -> String {
+        let t = self.tallies();
+        let mut s = String::from("{\n  \"schema\": 1,\n  \"deny\": {\n");
+        let items: Vec<String> =
+            t.iter().map(|(name, t)| format!("    \"{name}\": {}", t.deny)).collect();
+        s.push_str(&items.join(",\n"));
+        s.push_str("\n  },\n");
+        s.push_str(&format!("  \"justified_pragmas\": {}\n}}\n", self.justified_pragmas));
+        s
+    }
+
+    /// The full `--json` report: tallies plus every finding.
+    pub fn full_json(&self) -> String {
+        let t = self.tallies();
+        let mut s = String::from("{\n  \"schema\": 1,\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"justified_pragmas\": {},\n", self.justified_pragmas));
+        s.push_str("  \"counts\": {\n");
+        let items: Vec<String> = t
+            .iter()
+            .map(|(name, t)| {
+                format!(
+                    "    \"{name}\": {{\"deny\": {}, \"advisory\": {}, \"justified\": {}}}",
+                    t.deny, t.advisory, t.justified
+                )
+            })
+            .collect();
+        s.push_str(&items.join(",\n"));
+        s.push_str("\n  },\n  \"findings\": [\n");
+        let items: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| {
+                format!(
+                    "    {{\"lint\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                     \"justified\": {}, \"advisory\": {}, \"msg\": \"{}\"}}",
+                    f.lint.name(),
+                    json_escape(&f.file),
+                    f.line,
+                    f.justified,
+                    f.lint.advisory(),
+                    json_escape(&f.msg)
+                )
+            })
+            .collect();
+        s.push_str(&items.join(",\n"));
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Analyze one file's source text under its path relative to the scan
+/// root (scoping is path-based — fixtures reuse this directly).
+pub fn analyze_source(rel_path: &str, src: &str) -> (Vec<Finding>, usize) {
+    let (toks, comments) = lexer::lex(src);
+    let mask = lexer::test_mask(&toks);
+    let mut findings = lints::lint_tokens(rel_path, &toks, &mask);
+    let (pragmas, mut pragma_errors) = lints::parse_pragmas(rel_path, &comments);
+    lints::apply_pragmas(&mut findings, &pragmas);
+    findings.append(&mut pragma_errors);
+    let justified = findings.iter().filter(|f| f.justified).count();
+    (findings, justified)
+}
+
+/// Walk `src_root` (normally `rust/src`) and analyze every `.rs` file.
+pub fn analyze_tree(src_root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut report = Report { files_scanned: 0, findings: Vec::new(), justified_pragmas: 0 };
+    for path in files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        let (mut findings, justified) = analyze_source(&rel, &src);
+        findings.sort_by(|a, b| a.line.cmp(&b.line));
+        report.findings.extend(findings);
+        report.justified_pragmas += justified;
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Compare a report against a committed baseline (`LINT.json`): returns
+/// the list of lints whose unjustified deny count exceeds the baseline.
+/// The baseline reader is a targeted scanner for the exact shape
+/// [`Report::baseline_json`] writes — not a general JSON parser.
+pub fn regressions_vs_baseline(report: &Report, baseline: &str) -> Vec<String> {
+    let mut regressions = Vec::new();
+    for (name, tally) in report.tallies() {
+        let allowed = baseline_count(baseline, name).unwrap_or(0);
+        if tally.deny > allowed {
+            regressions.push(format!(
+                "{name}: {} unjustified finding(s), baseline allows {allowed}",
+                tally.deny
+            ));
+        }
+    }
+    regressions
+}
+
+/// Extract `"<lint>": N` from the baseline's `deny` table.
+fn baseline_count(baseline: &str, lint: &str) -> Option<usize> {
+    let key = format!("\"{lint}\":");
+    let at = baseline.find(&key)?;
+    let rest = baseline[at + key.len()..].trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_roundtrip_and_regression_gate() {
+        let report = Report {
+            files_scanned: 3,
+            findings: vec![
+                Finding {
+                    lint: Lint::Panic,
+                    file: "serve/x.rs".into(),
+                    line: 4,
+                    msg: "unwrap".into(),
+                    justified: false,
+                },
+                Finding {
+                    lint: Lint::Panic,
+                    file: "serve/x.rs".into(),
+                    line: 9,
+                    msg: "expect".into(),
+                    justified: true,
+                },
+                Finding {
+                    lint: Lint::Index,
+                    file: "dist/mod.rs".into(),
+                    line: 2,
+                    msg: "idx".into(),
+                    justified: false,
+                },
+            ],
+            justified_pragmas: 1,
+        };
+        let t = report.tallies();
+        assert_eq!(t["panic"], Tally { deny: 1, advisory: 0, justified: 1 });
+        assert_eq!(t["index"], Tally { deny: 0, advisory: 1, justified: 0 });
+        assert_eq!(report.deny_total(), 1, "advisory findings never gate");
+
+        let baseline = report.baseline_json();
+        assert!(baseline.contains("\"panic\": 1"));
+        assert!(baseline.contains("\"justified_pragmas\": 1"));
+        // Against its own baseline: no regression.
+        assert!(regressions_vs_baseline(&report, &baseline).is_empty());
+        // Against a clean baseline: the panic finding is a regression.
+        let clean = Report { files_scanned: 0, findings: vec![], justified_pragmas: 0 };
+        let regs = regressions_vs_baseline(&report, &clean.baseline_json());
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].starts_with("panic:"));
+    }
+
+    #[test]
+    fn full_json_escapes_and_lists_findings() {
+        let report = Report {
+            files_scanned: 1,
+            findings: vec![Finding {
+                lint: Lint::ThreadName,
+                file: "a\\b.rs".into(),
+                line: 1,
+                msg: "say \"thng-\"".into(),
+                justified: false,
+            }],
+            justified_pragmas: 0,
+        };
+        let j = report.full_json();
+        assert!(j.contains("\"thread-name\""));
+        assert!(j.contains("say \\\"thng-\\\""));
+        assert!(j.contains("a\\\\b.rs"));
+    }
+}

@@ -73,12 +73,14 @@
 //! case, usually the consumer's own wakeup).
 
 use std::collections::{HashSet, VecDeque};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
+use crate::check::lock_order::{INBOX, WAKER};
 use crate::coordinator::source::StreamSource;
 use crate::dist::{self, DistSpec};
 use crate::error::Error;
+use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// What one submitted request targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -610,7 +612,7 @@ struct Prepared {
 /// claim/complete calls; clients only ever touch the [`CompletionQueue`]
 /// wrapper.
 pub struct CompletionInbox {
-    state: Mutex<InboxState>,
+    state: OrderedMutex<InboxState>,
     /// Consumer-side waker: notified on every completion post and claim
     /// release, with the condition re-checked under `state`'s lock (the
     /// classic lost-wakeup-proof parker).
@@ -620,13 +622,13 @@ pub struct CompletionInbox {
     /// *owning* shard park's generation counter and notify, so that
     /// parked shard re-scans for claimable requests — waking every
     /// shard on every submit would cost O(tickets × shards)).
-    waker: Mutex<Option<Box<dyn Fn(usize) + Send + Sync>>>,
+    waker: OrderedMutex<Option<Box<dyn Fn(usize) + Send + Sync>>>,
 }
 
 impl CompletionInbox {
     pub(crate) fn new(n_groups: usize) -> Self {
         Self {
-            state: Mutex::new(InboxState {
+            state: OrderedMutex::new(&INBOX, InboxState {
                 next_ticket: 0,
                 pending: VecDeque::new(),
                 claimed: vec![false; n_groups],
@@ -638,7 +640,7 @@ impl CompletionInbox {
                 armed_deadlines: 0,
             }),
             cv: Condvar::new(),
-            waker: Mutex::new(None),
+            waker: OrderedMutex::new(&WAKER, None),
         }
     }
 
@@ -646,21 +648,21 @@ impl CompletionInbox {
     /// `attach_completion`). The argument passed on each wake is the
     /// group index of the request that needs an executor.
     pub(crate) fn set_waker(&self, waker: Box<dyn Fn(usize) + Send + Sync>) {
-        *self.waker.lock().unwrap_or_else(|e| e.into_inner()) = Some(waker);
+        *self.waker.lock() = Some(waker);
     }
 
     /// Lock the state, recovering from poisoning: the state's invariants
     /// hold between every lock/unlock pair (each critical section is a
     /// handful of panic-free queue/flag updates), so a poisoned mutex
     /// only records that some *other* code panicked while holding it.
-    fn lock_state(&self) -> MutexGuard<'_, InboxState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock_state(&self) -> OrderedGuard<'_, InboxState> {
+        self.state.lock()
     }
 
     /// Wake the engine executor responsible for `group`, if an engine
     /// registered a waker.
     fn wake_engine(&self, group: usize) {
-        if let Some(w) = &*self.waker.lock().unwrap_or_else(|e| e.into_inner()) {
+        if let Some(w) = &*self.waker.lock() {
             w(group);
         }
     }
@@ -1132,10 +1134,10 @@ impl CompletionQueue {
     /// completions even when no other activity nudges the queue.
     fn park<'a>(
         &'a self,
-        st: MutexGuard<'a, InboxState>,
+        st: OrderedGuard<'a, InboxState>,
         limit: Option<Instant>,
         now: Instant,
-    ) -> MutexGuard<'a, InboxState> {
+    ) -> OrderedGuard<'a, InboxState> {
         let wake = match (limit, st.earliest_deadline()) {
             (Some(l), Some(d)) => Some(l.min(d)),
             (Some(l), None) => Some(l),
@@ -1145,13 +1147,11 @@ impl CompletionQueue {
         match wake {
             Some(w) => {
                 let dur = w.saturating_duration_since(now);
-                self.inbox
-                    .cv
-                    .wait_timeout(st, dur.max(Duration::from_micros(1)))
-                    .map(|(g, _)| g)
-                    .unwrap_or_else(|e| e.into_inner().0)
+                let (st, _) =
+                    st.wait_timeout(&self.inbox.cv, dur.max(Duration::from_micros(1)));
+                st
             }
-            None => self.inbox.cv.wait(st).unwrap_or_else(|e| e.into_inner()),
+            None => st.wait(&self.inbox.cv),
         }
     }
 

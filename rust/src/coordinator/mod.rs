@@ -42,8 +42,6 @@ pub mod registry;
 pub mod sharded;
 pub mod source;
 
-use std::sync::{Mutex, MutexGuard};
-
 use anyhow::anyhow;
 
 pub use builder::{Engine, EngineBuilder};
@@ -58,20 +56,13 @@ pub use registry::{StreamRegistry, StreamSpec};
 pub use sharded::ParallelCoordinator;
 pub use source::{StreamHandle, StreamSource};
 
-/// Lock a serve-path mutex, mapping poisoning (a peer thread panicked
-/// while holding the lock) to a typed [`Error::Backend`] instead of
-/// unwinding every subsequent caller — one client's panic must not
-/// cascade into a panic in every thread that later touches the group.
-pub(crate) fn lock_serve<T>(m: &Mutex<T>) -> Result<MutexGuard<'_, T>, Error> {
-    m.lock()
-        .map_err(|_| Error::Backend("group state poisoned by a panicked thread".into()))
-}
-
 pub use crate::error::Error;
 
+use crate::check::lock_order::GROUP;
 use crate::prng::ThunderingBatch;
 use crate::runtime::executor::{TileExecutor, TileExecutorGuard};
 use crate::runtime::TileState;
+use crate::sync::OrderedMutex;
 
 /// The inline-generation MISRN coordinator (native or PJRT engine).
 /// Built via [`EngineBuilder`]; tiles are generated on whichever client
@@ -80,7 +71,7 @@ pub struct Coordinator {
     group_width: usize,
     /// Immutable after construction — reads need no lock.
     registry: StreamRegistry,
-    groups: Vec<Mutex<StreamGroup>>,
+    groups: Vec<OrderedMutex<StreamGroup>>,
     metrics: Metrics,
     executor: Option<TileExecutor>,
     _executor_guard: Option<TileExecutorGuard>,
@@ -123,12 +114,10 @@ impl Coordinator {
                 },
                 _ => GroupBackend::Native(ThunderingBatch::new(seed, b.group_width, first)),
             };
-            groups.push(Mutex::new(StreamGroup::new(
-                first,
-                backend,
-                b.rows_per_tile,
-                b.lag_window,
-            )));
+            groups.push(OrderedMutex::new(
+                &GROUP,
+                StreamGroup::new(first, backend, b.rows_per_tile, b.lag_window),
+            ));
         }
 
         Ok(Self {
@@ -207,7 +196,7 @@ impl Coordinator {
     /// Fill `out` with the next numbers of `stream`.
     pub fn fetch(&self, stream: u64, out: &mut [u32]) -> Result<(), Error> {
         let (g, lane) = self.locate(stream)?;
-        let mut group = lock_serve(&self.groups[g])?;
+        let mut group = self.groups[g].lock_checked()?;
         group.fetch(lane, out, &self.metrics)
     }
 
@@ -218,7 +207,7 @@ impl Coordinator {
             .groups
             .get(group)
             .ok_or(Error::GroupOutOfRange { group, have: self.groups.len() })?;
-        lock_serve(g)?.fetch_block(rows, &self.metrics)
+        g.lock_checked()?.fetch_block(rows, &self.metrics)
     }
 
     /// Batched fetch: one `rows × group_width` block for **every** group,
@@ -232,7 +221,7 @@ impl Coordinator {
     pub fn fetch_many(&self, rows: usize) -> Result<Vec<Vec<u32>>, Error> {
         let mut guards = Vec::with_capacity(self.groups.len());
         for g in &self.groups {
-            guards.push(lock_serve(g)?);
+            guards.push(g.lock_checked()?);
         }
         for d in guards.iter() {
             if let Err(e) = d.block_lag_check(rows) {
@@ -368,16 +357,20 @@ mod tests {
         let mut handles = Vec::new();
         for t in 0..8u64 {
             let c = c.clone();
-            handles.push(std::thread::spawn(move || {
-                let stream = t * 8 + (t % 8);
-                let mut buf = vec![0u32; 257];
-                let mut all = Vec::new();
-                for _ in 0..4 {
-                    c.fetch(stream, &mut buf).unwrap();
-                    all.extend_from_slice(&buf);
-                }
-                (stream, all)
-            }));
+            let handle = std::thread::Builder::new()
+                .name(format!("thng-test-f{t}"))
+                .spawn(move || {
+                    let stream = t * 8 + (t % 8);
+                    let mut buf = vec![0u32; 257];
+                    let mut all = Vec::new();
+                    for _ in 0..4 {
+                        c.fetch(stream, &mut buf).unwrap();
+                        all.extend_from_slice(&buf);
+                    }
+                    (stream, all)
+                })
+                .expect("spawn");
+            handles.push(handle);
         }
         for h in handles {
             let (stream, got) = h.join().unwrap();

@@ -45,32 +45,33 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, TryLockError, Weak};
+use std::sync::{Arc, Condvar, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::check::lock_order::{COMPLETION_SLOT, DRAIN, PARK, POOL, TILES};
 use crate::coordinator::builder::EngineBuilder;
 use crate::coordinator::completion::{CompletionInbox, ReqTarget, StreamReq};
 use crate::coordinator::drain::{DrainState, TileProvider};
-use crate::coordinator::lock_serve;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::registry::{StreamRegistry, StreamSpec};
 use crate::coordinator::source::StreamSource;
 use crate::error::Error;
 use crate::prng::ThunderingBatch;
+use crate::sync::OrderedMutex;
 
 /// Producer→consumer handoff for one group: a bounded FIFO of finished
 /// tiles. Single producer (the owning shard), any number of consumers
 /// (serialized by the group's drain lock).
 struct TileQueue {
-    ready: Mutex<VecDeque<Vec<u32>>>,
+    ready: OrderedMutex<VecDeque<Vec<u32>>>,
     /// Signalled by the producer after pushing a tile.
     tile_ready: Condvar,
 }
 
 struct GroupSlot {
     queue: TileQueue,
-    drain: Mutex<DrainState>,
+    drain: OrderedMutex<DrainState>,
     /// Demand gate: shards only prefetch groups a consumer has touched,
     /// so buffer memory scales with *active* groups, not total groups.
     active: AtomicBool,
@@ -82,7 +83,7 @@ struct GroupSlot {
 /// the producer reads it before scanning and only sleeps if no nudge
 /// arrived in between, so a wakeup can never be lost.
 struct Park {
-    generation: Mutex<u64>,
+    generation: OrderedMutex<u64>,
     cv: Condvar,
 }
 
@@ -95,12 +96,12 @@ struct Shared {
     /// by panic) so blocked consumers fail typed instead of forever.
     shard_alive: Vec<AtomicBool>,
     /// Recycled tile buffers (all tiles are `rows_per_tile × width`).
-    pool: Mutex<Vec<Vec<u32>>>,
+    pool: OrderedMutex<Vec<Vec<u32>>>,
     stop: AtomicBool,
     /// The completion front attached to this engine, if any (weak: the
     /// front owns the engine through its `Arc<dyn StreamSource>`, never
     /// the other way around).
-    completion: Mutex<Weak<CompletionInbox>>,
+    completion: OrderedMutex<Weak<CompletionInbox>>,
     metrics: Metrics,
     width: usize,
     rows_per_tile: usize,
@@ -119,7 +120,7 @@ impl Shared {
             slot.active.store(true, Ordering::Release);
             Self::nudge(&self.parks[owner]);
         }
-        let mut q = lock_serve(&slot.queue.ready)?;
+        let mut q = slot.queue.ready.lock_checked()?;
         loop {
             if let Some(tile) = q.pop_front() {
                 drop(q);
@@ -135,13 +136,8 @@ impl Shared {
                     "worker shard {owner} is gone; group {g} cannot be served"
                 )));
             }
-            let (guard, _timed_out) = slot
-                .queue
-                .tile_ready
-                .wait_timeout(q, Duration::from_millis(50))
-                .map_err(|_| {
-                    Error::Backend("group state poisoned by a panicked thread".into())
-                })?;
+            let (guard, _timed_out) =
+                q.wait_timeout_checked(&slot.queue.tile_ready, Duration::from_millis(50), &TILES)?;
             q = guard;
         }
     }
@@ -150,13 +146,13 @@ impl Shared {
     /// Tolerates poisoning — the generation counter is a plain integer,
     /// valid no matter where a holder panicked.
     fn nudge(park: &Park) {
-        *park.generation.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        *park.generation.lock() += 1;
         park.cv.notify_all();
     }
 
     /// Return a fully consumed tile buffer to the shared pool (bounded).
     fn recycle(&self, buf: Vec<u32>) {
-        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        let mut pool = self.pool.lock();
         if pool.len() < 2 * self.groups.len() {
             pool.push(buf);
         }
@@ -165,7 +161,7 @@ impl Shared {
     /// The attached completion inbox, if a front registered one and is
     /// still alive.
     fn completion_inbox(&self) -> Option<Arc<CompletionInbox>> {
-        self.completion.lock().unwrap_or_else(|e| e.into_inner()).upgrade()
+        self.completion.lock().upgrade()
     }
 }
 
@@ -218,7 +214,7 @@ struct OwnedTiles<'a> {
 
 impl OwnedTiles<'_> {
     fn try_pop(&self) -> Result<Option<Vec<u32>>, Error> {
-        Ok(lock_serve(&self.shared.groups[self.g].queue.ready)?.pop_front())
+        Ok(self.shared.groups[self.g].queue.ready.lock_checked()?.pop_front())
     }
 
     /// Generate `rows` rows straight into `out`, with the same metrics
@@ -243,7 +239,6 @@ impl TileProvider for OwnedTiles<'_> {
             .shared
             .pool
             .lock()
-            .unwrap_or_else(|e| e.into_inner())
             .pop()
             .unwrap_or_else(|| vec![0u32; rows * self.shared.width]);
         debug_assert_eq!(buf.len(), rows * self.shared.width);
@@ -312,8 +307,7 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
     let rows = shared.rows_per_tile;
     let width = shared.width;
     while !shared.stop.load(Ordering::Acquire) {
-        let pre_scan_generation =
-            *shared.parks[shard].generation.lock().unwrap_or_else(|e| e.into_inner());
+        let pre_scan_generation = *shared.parks[shard].generation.lock();
         let mut progress = false;
         for (g, batch) in groups.iter_mut() {
             let slot = &shared.groups[*g];
@@ -325,24 +319,19 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
             }
             // Single producer per queue: a length check now cannot be
             // invalidated by anyone but us (consumers only shrink it).
-            let has_room = slot.queue.ready.lock().unwrap_or_else(|e| e.into_inner()).len()
-                < shared.prefetch_depth;
+            let has_room = slot.queue.ready.lock().len() < shared.prefetch_depth;
             if !has_room {
                 continue;
             }
-            let mut buf = shared
-                .pool
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .pop()
-                .unwrap_or_else(|| vec![0u32; rows * width]);
+            let mut buf =
+                shared.pool.lock().pop().unwrap_or_else(|| vec![0u32; rows * width]);
             debug_assert_eq!(buf.len(), rows * width);
             let t0 = Instant::now();
             batch.fill_rows(rows, &mut buf);
             shared.metrics.add(&shared.metrics.backend_ns, t0.elapsed().as_nanos() as u64);
             shared.metrics.add(&shared.metrics.tiles_executed, 1);
             shared.metrics.add(&shared.metrics.rows_generated, rows as u64);
-            let mut q = slot.queue.ready.lock().unwrap_or_else(|e| e.into_inner());
+            let mut q = slot.queue.ready.lock();
             q.push_back(buf);
             drop(q);
             slot.queue.tile_ready.notify_all();
@@ -364,12 +353,9 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
             // only a backstop (e.g. a completion claim released under
             // drain-lock contention with no later nudge).
             let park = &shared.parks[shard];
-            let guard = park.generation.lock().unwrap_or_else(|e| e.into_inner());
+            let guard = park.generation.lock();
             if *guard == pre_scan_generation && !shared.stop.load(Ordering::Acquire) {
-                let _ = park
-                    .cv
-                    .wait_timeout(guard, Duration::from_millis(100))
-                    .unwrap_or_else(|e| e.into_inner());
+                let _ = guard.wait_timeout(&park.cv, Duration::from_millis(100));
             }
         }
     }
@@ -405,8 +391,8 @@ fn serve_completion_request(
     if !slot.active.load(Ordering::Acquire) {
         slot.active.store(true, Ordering::Release);
     }
-    match slot.drain.try_lock() {
-        Ok(mut drain) => {
+    match slot.drain.try_lock_checked() {
+        Ok(Some(mut drain)) => {
             let req = claimed.req();
             let result = match groups.iter_mut().find(|(owned, _)| *owned == g) {
                 Some((_, batch)) => {
@@ -425,14 +411,12 @@ fn serve_completion_request(
         // waiting on tiles only this shard can generate. Hand the claim
         // back (to the queue front, preserving per-group order); a
         // consumer inside wait_any or a later scan picks it up.
-        Err(TryLockError::WouldBlock) => {
+        Ok(None) => {
             claimed.release();
             false
         }
-        Err(TryLockError::Poisoned(_)) => {
-            claimed.complete(Err(Error::Backend(
-                "group state poisoned by a panicked thread".into(),
-            )));
+        Err(e) => {
+            claimed.complete(Err(e));
             true
         }
     }
@@ -473,10 +457,13 @@ impl ParallelCoordinator {
         let groups = (0..n_groups)
             .map(|_| GroupSlot {
                 queue: TileQueue {
-                    ready: Mutex::new(VecDeque::with_capacity(b.prefetch_depth)),
+                    ready: OrderedMutex::new(&TILES, VecDeque::with_capacity(b.prefetch_depth)),
                     tile_ready: Condvar::new(),
                 },
-                drain: Mutex::new(DrainState::new(width, b.rows_per_tile, b.lag_window)),
+                drain: OrderedMutex::new(
+                    &DRAIN,
+                    DrainState::new(width, b.rows_per_tile, b.lag_window),
+                ),
                 active: AtomicBool::new(false),
             })
             .collect();
@@ -484,12 +471,12 @@ impl ParallelCoordinator {
             groups,
             shard_of: (0..n_groups).map(|g| g % n_shards).collect(),
             parks: (0..n_shards)
-                .map(|_| Park { generation: Mutex::new(0), cv: Condvar::new() })
+                .map(|_| Park { generation: OrderedMutex::new(&PARK, 0), cv: Condvar::new() })
                 .collect(),
             shard_alive: (0..n_shards).map(|_| AtomicBool::new(true)).collect(),
-            pool: Mutex::new(Vec::new()),
+            pool: OrderedMutex::new(&POOL, Vec::new()),
             stop: AtomicBool::new(false),
-            completion: Mutex::new(Weak::new()),
+            completion: OrderedMutex::new(&COMPLETION_SLOT, Weak::new()),
             metrics: Metrics::default(),
             width,
             rows_per_tile: b.rows_per_tile,
@@ -511,7 +498,7 @@ impl ParallelCoordinator {
         for (s, owned) in per_shard.into_iter().enumerate() {
             let worker_shared = shared.clone();
             let spawned = std::thread::Builder::new()
-                .name(format!("thundering-shard-{s}"))
+                .name(format!("thng-shard-{s}"))
                 .spawn(move || shard_main(worker_shared, s, owned));
             match spawned {
                 Ok(handle) => threads.push(handle),
@@ -567,7 +554,7 @@ impl ParallelCoordinator {
             return Err(Error::UnknownStream { stream, have: self.n_streams() });
         }
         let lane = (stream % width) as usize;
-        let mut drain = lock_serve(&self.shared.groups[g].drain)?;
+        let mut drain = self.shared.groups[g].drain.lock_checked()?;
         let mut provider = QueueTiles { shared: &*self.shared, g };
         drain.fetch_lane(lane, out, &mut provider, &self.shared.metrics)
     }
@@ -578,7 +565,7 @@ impl ParallelCoordinator {
         if group >= self.shared.groups.len() {
             return Err(Error::GroupOutOfRange { group, have: self.n_groups() });
         }
-        let mut drain = lock_serve(&self.shared.groups[group].drain)?;
+        let mut drain = self.shared.groups[group].drain.lock_checked()?;
         let mut provider = QueueTiles { shared: &*self.shared, g: group };
         drain.fetch_block(rows, &mut provider, &self.shared.metrics)
     }
@@ -608,7 +595,7 @@ impl ParallelCoordinator {
         let shared = &*self.shared;
         let mut guards = Vec::with_capacity(shared.groups.len());
         for slot in &shared.groups {
-            guards.push(lock_serve(&slot.drain)?);
+            guards.push(slot.drain.lock_checked()?);
         }
         for d in guards.iter() {
             if let Err(e) = d.block_lag_check(rows) {
@@ -750,7 +737,7 @@ impl StreamSource for ParallelCoordinator {
     /// generation counter so that parked worker re-scans for claimable
     /// requests (targeted, not a broadcast over all shards).
     fn attach_completion(&self, inbox: Arc<CompletionInbox>) -> bool {
-        let mut slot = self.shared.completion.lock().unwrap_or_else(|e| e.into_inner());
+        let mut slot = self.shared.completion.lock();
         if slot.upgrade().is_some() {
             return false;
         }

@@ -273,6 +273,7 @@ impl Iterator for StreamHandle {
 impl Prng32 for StreamHandle {
     /// The [`Prng32`] view panics on fetch errors (see type docs).
     fn next_u32(&mut self) -> u32 {
+        // thng: allow(panic, "documented contract: the Prng32 view trades typed errors for panics")
         StreamHandle::next_u32(self).expect("StreamHandle fetch failed")
     }
 
@@ -377,11 +378,14 @@ mod tests {
         assert_eq!(first.len(), 8);
         // Lane 0 now sits at the window edge: the next refill is
         // rejected until lane 1 advances, which a peer does shortly.
-        let peer = std::thread::spawn(move || {
-            std::thread::sleep(std::time::Duration::from_millis(30));
-            let mut other = vec![0u32; 8];
-            source.fetch(1, &mut other).unwrap();
-        });
+        let peer = std::thread::Builder::new()
+            .name("thng-test-peer".into())
+            .spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                let mut other = vec![0u32; 8];
+                source.fetch(1, &mut other).unwrap();
+            })
+            .expect("spawn");
         let got = h.next().expect("retryable backpressure must not end iteration");
         peer.join().unwrap();
         let mut s = ThunderingStream::new(splitmix64(42), 0);

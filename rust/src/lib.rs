@@ -44,6 +44,7 @@
 //! kernels once; everything else is this self-contained binary.
 
 pub mod apps;
+pub mod check;
 pub mod coordinator;
 pub mod dist;
 pub mod error;
@@ -53,6 +54,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod stats;
+pub mod sync;
 pub mod util;
 
 pub use coordinator::{

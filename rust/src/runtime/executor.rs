@@ -37,7 +37,7 @@ impl TileExecutor {
         let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth);
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
         let handle = std::thread::Builder::new()
-            .name("pjrt-device".into())
+            .name("thng-pjrt-dev".into())
             .spawn(move || {
                 let rt = match Runtime::new(&artifacts_dir) {
                     Ok(rt) => {

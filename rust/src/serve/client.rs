@@ -31,15 +31,17 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Mutex, MutexGuard, RwLock, Weak};
+use std::sync::{Arc, Weak};
 use std::time::Duration;
 
+use crate::check::lock_order::{CLIENT_CONN, CLIENT_CURSORS, CLIENT_READ, CLIENT_WRITE};
 use crate::coordinator::{
     CancelHandle, Metrics, MetricsSnapshot, ReqTarget, Request, StreamSource, StreamSpec,
 };
 use crate::dist::DistSpec;
 use crate::error::Error;
 use crate::serve::protocol::{self, Frame};
+use crate::sync::{OrderedGuard, OrderedMutex, OrderedRwLock};
 
 /// The serving shape a server advertises in WELCOME.
 #[derive(Debug, Clone)]
@@ -131,8 +133,8 @@ fn deadline_ms_of(req: &Request) -> u64 {
 /// and write sides are independently locked) — [`RemoteSource`] wraps
 /// it in an `Arc`.
 pub struct RemoteClient {
-    read: Mutex<ReadHalf>,
-    write: Mutex<WriteHalf>,
+    read: OrderedMutex<ReadHalf>,
+    write: OrderedMutex<WriteHalf>,
     info: ServerInfo,
     peer: SocketAddr,
 }
@@ -182,12 +184,12 @@ impl RemoteClient {
             None => return Err(Error::Protocol("server closed during handshake".into())),
         };
         Ok(Self {
-            read: Mutex::new(ReadHalf {
+            read: OrderedMutex::new(&CLIENT_READ, ReadHalf {
                 r: reader,
                 chunks: HashMap::new(),
                 leases: HashMap::new(),
             }),
-            write: Mutex::new(WriteHalf { w: writer, next_req: 0 }),
+            write: OrderedMutex::new(&CLIENT_WRITE, WriteHalf { w: writer, next_req: 0 }),
             info,
             peer,
         })
@@ -208,12 +210,12 @@ impl RemoteClient {
     /// the crate: the halves' invariants (a buffered socket, reply
     /// stashes, a counter) hold between every update, so a peer
     /// thread's panic does not invalidate them.
-    fn lock_read(&self) -> MutexGuard<'_, ReadHalf> {
-        self.read.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock_read(&self) -> OrderedGuard<'_, ReadHalf> {
+        self.read.lock()
     }
 
-    fn lock_write(&self) -> MutexGuard<'_, WriteHalf> {
-        self.write.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock_write(&self) -> OrderedGuard<'_, WriteHalf> {
+        self.write.lock()
     }
 
     /// Validate-and-identify a target before filling from it (the wire
@@ -520,7 +522,7 @@ pub struct RemoteSource {
     /// The live connection — swapped wholesale on a resumption
     /// reconnect, so in-flight users of the old connection fail typed
     /// instead of crossing sessions.
-    client: RwLock<Arc<RemoteClient>>,
+    client: OrderedRwLock<Arc<RemoteClient>>,
     info: ServerInfo,
     /// Deadline armed on every synchronous fetch (None = wait forever).
     deadline: Option<std::time::Duration>,
@@ -545,7 +547,7 @@ struct Resumption {
     /// shaped and raw deliveries of one target resume independently).
     /// One lock for the whole ledger: resilient fetches serialize,
     /// which the single shared socket mostly forces anyway.
-    cursors: Mutex<HashMap<(ReqTarget, Option<DistSpec>), Cursor>>,
+    cursors: OrderedMutex<HashMap<(ReqTarget, Option<DistSpec>), Cursor>>,
 }
 
 /// One target's resumption bookkeeping.
@@ -566,7 +568,7 @@ impl RemoteSource {
         let client = RemoteClient::connect(addr)?;
         let info = client.info().clone();
         Ok(Self {
-            client: RwLock::new(Arc::new(client)),
+            client: OrderedRwLock::new(&CLIENT_CONN, Arc::new(client)),
             info,
             deadline: None,
             submitted: std::sync::atomic::AtomicUsize::new(0),
@@ -582,7 +584,7 @@ impl RemoteSource {
 
     /// The current connection.
     fn client(&self) -> Arc<RemoteClient> {
-        self.client.read().unwrap_or_else(|e| e.into_inner()).clone()
+        self.client.read().clone()
     }
 
     /// Turn on auto-reconnect with lease resumption for the synchronous
@@ -603,7 +605,12 @@ impl RemoteSource {
     pub fn with_resumption(mut self, attempts: u32, backoff: Duration) -> Self {
         let addr = self.client().peer_addr();
         self.resume =
-            Some(Resumption { addr, attempts, backoff, cursors: Mutex::new(HashMap::new()) });
+            Some(Resumption {
+                addr,
+                attempts,
+                backoff,
+                cursors: OrderedMutex::new(&CLIENT_CURSORS, HashMap::new()),
+            });
         self
     }
 
@@ -623,12 +630,11 @@ impl RemoteSource {
             return self.client().fill(&req);
         };
         let key = (target, dist);
-        let mut cursors = rs.cursors.lock().unwrap_or_else(|e| e.into_inner());
-        cursors.entry(key).or_insert(Cursor { rows: 0, dirty: true });
+        let mut cursors = rs.cursors.lock();
         let mut attempt: u32 = 0;
         loop {
             let client = self.client();
-            let state = cursors.get_mut(&key).expect("inserted above");
+            let state = cursors.entry(key).or_insert(Cursor { rows: 0, dirty: true });
             let res = if state.dirty {
                 match client.lease_resume_shaped(target, state.rows, dist) {
                     Ok(_) => {
@@ -656,8 +662,7 @@ impl RemoteSource {
                     attempt += 1;
                     std::thread::sleep(rs.backoff);
                     if let Ok(fresh) = RemoteClient::connect(rs.addr) {
-                        *self.client.write().unwrap_or_else(|p| p.into_inner()) =
-                            Arc::new(fresh);
+                        *self.client.write() = Arc::new(fresh);
                         // Every replay install died with the old session.
                         for c in cursors.values_mut() {
                             c.dirty = true;
@@ -935,8 +940,8 @@ impl StreamSource for RemoteSource {
             Ok(())
         };
         for g in 0..n_groups {
-            if inflight.len() == FETCH_MANY_PIPELINE {
-                let req = inflight.pop_front().expect("non-empty window");
+            while inflight.len() >= FETCH_MANY_PIPELINE {
+                let Some(req) = inflight.pop_front() else { break };
                 collect(req)?;
             }
             inflight.push_back(

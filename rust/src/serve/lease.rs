@@ -20,11 +20,12 @@
 //! nothing.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Mutex, MutexGuard};
 
+use crate::check::lock_order::RETENTION;
 use crate::coordinator::ReqTarget;
 use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// Retention/replay identity: the global target plus the shaping spec
 /// its rows were delivered under (`None` = raw). Shaped and raw
@@ -48,16 +49,16 @@ struct LeaseState {
 pub(crate) struct LeaseTable {
     /// Rows of tail to retain per tracked target.
     retain_rows: u64,
-    inner: Mutex<HashMap<RetainKey, LeaseState>>,
+    inner: OrderedMutex<HashMap<RetainKey, LeaseState>>,
 }
 
 impl LeaseTable {
     pub(crate) fn new(retain_rows: u64) -> Self {
-        Self { retain_rows, inner: Mutex::new(HashMap::new()) }
+        Self { retain_rows, inner: OrderedMutex::new(&RETENTION, HashMap::new()) }
     }
 
-    fn lock(&self) -> MutexGuard<'_, HashMap<RetainKey, LeaseState>> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedGuard<'_, HashMap<RetainKey, LeaseState>> {
+        self.inner.lock()
     }
 
     /// Is this key under retention? (FILL admission snapshots this to

@@ -145,9 +145,9 @@ fn connect_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<RemoteC
             Err(e) => last = Some(e),
         }
     }
-    let e = last.expect("attempts >= 1");
+    let detail = last.map(|e| format!(": {e}")).unwrap_or_default();
     Err(Error::Protocol(format!(
-        "could not connect to {addr} after {attempts} attempts ({backoff:?} apart): {e}"
+        "could not connect to {addr} after {attempts} attempts ({backoff:?} apart){detail}"
     )))
 }
 

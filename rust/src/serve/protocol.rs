@@ -456,20 +456,28 @@ impl<'a> Dec<'a> {
         Ok(head)
     }
 
+    /// Exactly `N` bytes as an array (`take` already failed typed on a
+    /// short payload, so the copy length always matches).
+    fn word<const N: usize>(&mut self) -> Result<[u8; N], Error> {
+        let mut out = [0u8; N];
+        out.copy_from_slice(self.take(N)?);
+        Ok(out)
+    }
+
     fn u8(&mut self) -> Result<u8, Error> {
         Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16, Error> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+        Ok(u16::from_le_bytes(self.word()?))
     }
 
     fn u32(&mut self) -> Result<u32, Error> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        Ok(u32::from_le_bytes(self.word()?))
     }
 
     fn u64(&mut self) -> Result<u64, Error> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(self.word()?))
     }
 
     fn string(&mut self) -> Result<String, Error> {
@@ -592,7 +600,7 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             )?;
             let values = bytes
                 .chunks_exact(4)
-                .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             Frame::Data { req, seq, last, values }
         }

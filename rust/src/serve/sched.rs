@@ -21,14 +21,16 @@
 //! `AfterLock` and apply them here afterwards.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::check::lock_order::SCHED;
 use crate::coordinator::ReqTarget;
 use crate::dist::DistSpec;
 use crate::error::Error;
 use crate::serve::lease::RetainKey;
 use crate::serve::session::Session;
+use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// One admitted FILL's not-yet-submitted remainder: everything a worker
 /// needs to turn the next sub-request into an engine submission.
@@ -91,7 +93,7 @@ struct SchedInner {
 
 /// The server-wide fair queue + admission ledger (see the module docs).
 pub(crate) struct Sched {
-    inner: Mutex<SchedInner>,
+    inner: OrderedMutex<SchedInner>,
     /// Per-tenant in-flight sub-request bound (0 = unlimited).
     quota: u64,
     /// Configured drain weights by tag (unlisted tags weigh 1).
@@ -101,7 +103,7 @@ pub(crate) struct Sched {
 impl Sched {
     pub(crate) fn new(quota: u64, weights: &[(u64, u32)]) -> Self {
         Self {
-            inner: Mutex::new(SchedInner {
+            inner: OrderedMutex::new(&SCHED, SchedInner {
                 classes: HashMap::new(),
                 active: VecDeque::new(),
                 inflight: HashMap::new(),
@@ -111,8 +113,8 @@ impl Sched {
         }
     }
 
-    fn lock(&self) -> MutexGuard<'_, SchedInner> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    fn lock(&self) -> OrderedGuard<'_, SchedInner> {
+        self.inner.lock()
     }
 
     /// Reserve `repeat` sub-requests against tenant `tag`'s quota —

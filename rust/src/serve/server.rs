@@ -35,11 +35,13 @@
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::check::lock_order::{CLOSED, PARK, ROUTES, SESSIONS, WORKQ};
 use crate::coordinator::{Completion, CompletionQueue, ReqTarget, StreamSource, Ticket};
+use crate::sync::{OrderedGuard, OrderedMutex};
 use crate::error::Error;
 use crate::serve::lease::{LeaseTable, RetainKey};
 use crate::serve::sched::Sched;
@@ -104,39 +106,39 @@ impl Default for ServeConfig {
 /// that lands between the snapshot and the park turns the park into a
 /// no-op instead of a lost wakeup.
 pub(crate) struct Parker {
-    gen: Mutex<u64>,
+    gen: OrderedMutex<u64>,
     cv: Condvar,
 }
 
 impl Parker {
     pub(crate) fn new() -> Self {
-        Self { gen: Mutex::new(0), cv: Condvar::new() }
+        Self { gen: OrderedMutex::new(&PARK, 0), cv: Condvar::new() }
     }
 
     /// Snapshot the generation (take this *before* checking for work).
     pub(crate) fn epoch(&self) -> u64 {
-        *self.gen.lock().unwrap_or_else(|e| e.into_inner())
+        *self.gen.lock()
     }
 
     /// Wake every parked thread.
     pub(crate) fn nudge(&self) {
-        *self.gen.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        *self.gen.lock() += 1;
         self.cv.notify_all();
     }
 
     /// Sleep until a nudge lands after `epoch` was taken (no-op if one
     /// already did), or until `timeout` passes (`None` = indefinitely).
     pub(crate) fn park(&self, epoch: u64, timeout: Option<Duration>) {
-        let mut gen = self.gen.lock().unwrap_or_else(|e| e.into_inner());
+        let mut gen = self.gen.lock();
         match timeout {
             None => {
                 while *gen == epoch {
-                    gen = self.cv.wait(gen).unwrap_or_else(|e| e.into_inner());
+                    gen = gen.wait(&self.cv);
                 }
             }
             Some(t) => {
                 if *gen == epoch {
-                    let _ = self.cv.wait_timeout(gen, t).unwrap_or_else(|e| e.into_inner());
+                    let _ = gen.wait_timeout(&self.cv, t);
                 }
             }
         }
@@ -179,18 +181,18 @@ pub(crate) struct ServerShared {
     /// `(engine, ticket)` → completion destination. Entries are
     /// inserted *before* submission (under this lock) and removed
     /// exactly once when the completion is routed.
-    routes: Mutex<HashMap<(usize, Ticket), Route>>,
+    routes: OrderedMutex<HashMap<(usize, Ticket), Route>>,
     /// Live sessions by id (for forced shutdown).
-    sessions: Mutex<HashMap<u64, Arc<Session>>>,
+    sessions: OrderedMutex<HashMap<u64, Arc<Session>>>,
     /// Sessions fully closed since start; `closed_cv` broadcasts on
     /// every close.
-    closed: Mutex<u64>,
+    closed: OrderedMutex<u64>,
     closed_cv: Condvar,
     /// Frame-ready sessions awaiting a worker (deduped by the session's
     /// `enqueued` flag).
-    ready: Mutex<VecDeque<Arc<Session>>>,
+    ready: OrderedMutex<VecDeque<Arc<Session>>>,
     /// Freshly accepted sessions the poll thread has not adopted yet.
-    pending: Mutex<Vec<Arc<Session>>>,
+    pending: OrderedMutex<Vec<Arc<Session>>>,
     pub(crate) poll_parker: Parker,
     pub(crate) worker_parker: Parker,
     pub(crate) reactor_parker: Parker,
@@ -209,8 +211,8 @@ pub(crate) struct ServerShared {
 impl ServerShared {
     pub(crate) fn lock_routes(
         &self,
-    ) -> MutexGuard<'_, HashMap<(usize, Ticket), Route>> {
-        self.routes.lock().unwrap_or_else(|e| e.into_inner())
+    ) -> OrderedGuard<'_, HashMap<(usize, Ticket), Route>> {
+        self.routes.lock()
     }
 
     /// Is the server shutting down? Workers abandon fills mid-visit when
@@ -224,7 +226,7 @@ impl ServerShared {
     /// once `accept_done` holds, which freezes the created count).
     fn all_closed(&self) -> bool {
         let created = self.next_session.load(Ordering::Acquire);
-        *self.closed.lock().unwrap_or_else(|e| e.into_inner()) >= created
+        *self.closed.lock() >= created
     }
 
     /// Map a global wire target onto its engine and the engine-local
@@ -277,7 +279,7 @@ impl ServerShared {
             self.engines[engine].cq.cancel_many(&tickets);
         }
         if enqueue {
-            self.ready.lock().unwrap_or_else(|e| e.into_inner()).push_back(sess.clone());
+            self.ready.lock().push_back(sess.clone());
         }
         if enqueue || nudge_workers || pushed {
             self.worker_parker.nudge();
@@ -341,8 +343,8 @@ impl ServerShared {
     /// A session fully finished: deregister it and wake everyone whose
     /// exit (or count) predicate includes the closed tally.
     pub(crate) fn session_closed(&self, id: u64) {
-        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
-        *self.closed.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+        self.sessions.lock().remove(&id);
+        *self.closed.lock() += 1;
         self.closed_cv.notify_all();
         self.worker_parker.nudge();
         self.reactor_parker.nudge();
@@ -362,7 +364,7 @@ fn poll_main(shared: &Arc<ServerShared>) {
     loop {
         let epoch = shared.poll_parker.epoch();
         {
-            let mut pending = shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let mut pending = shared.pending.lock();
             conns.append(&mut pending);
         }
         let now = Instant::now();
@@ -375,7 +377,7 @@ fn poll_main(shared: &Arc<ServerShared>) {
         if shared.stopping()
             && shared.accept_done.load(Ordering::Acquire)
             && conns.is_empty()
-            && shared.pending.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
+            && shared.pending.lock().is_empty()
         {
             break;
         }
@@ -401,7 +403,7 @@ fn worker_main(shared: &Arc<ServerShared>) {
     loop {
         let epoch = shared.worker_parker.epoch();
         loop {
-            let next = shared.ready.lock().unwrap_or_else(|e| e.into_inner()).pop_front();
+            let next = shared.ready.lock().pop_front();
             if let Some(sess) = next {
                 process_frames(shared, &sess);
                 continue;
@@ -479,12 +481,8 @@ fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
                     .unwrap_or_else(|| now + Duration::from_secs(86_400));
                 let id = shared.next_session.fetch_add(1, Ordering::AcqRel);
                 let sess = Arc::new(Session::new(id, stream, hs_deadline));
-                shared
-                    .sessions
-                    .lock()
-                    .unwrap_or_else(|e| e.into_inner())
-                    .insert(id, sess.clone());
-                shared.pending.lock().unwrap_or_else(|e| e.into_inner()).push(sess);
+                shared.sessions.lock().insert(id, sess.clone());
+                shared.pending.lock().push(sess);
                 shared.poll_parker.nudge();
             }
             Err(_) => {
@@ -621,12 +619,12 @@ impl Server {
             group_width,
             engines,
             cfg,
-            routes: Mutex::new(HashMap::new()),
-            sessions: Mutex::new(HashMap::new()),
-            closed: Mutex::new(0),
+            routes: OrderedMutex::new(&ROUTES, HashMap::new()),
+            sessions: OrderedMutex::new(&SESSIONS, HashMap::new()),
+            closed: OrderedMutex::new(&CLOSED, 0),
             closed_cv: Condvar::new(),
-            ready: Mutex::new(VecDeque::new()),
-            pending: Mutex::new(Vec::new()),
+            ready: OrderedMutex::new(&WORKQ, VecDeque::new()),
+            pending: OrderedMutex::new(&WORKQ, Vec::new()),
             poll_parker: Parker::new(),
             worker_parker: Parker::new(),
             reactor_parker: Parker::new(),
@@ -642,6 +640,7 @@ impl Server {
         let mut spawn_err: Option<Error> = None;
         let spawn = |name: String, f: Box<dyn FnOnce() + Send>| {
             std::thread::Builder::new()
+                // thng: allow(thread-name, "runtime string; every caller below passes a thng- literal")
                 .name(name.clone())
                 .spawn(f)
                 .map_err(|e| Error::Backend(format!("spawning {name}: {e}")))
@@ -712,15 +711,15 @@ impl Server {
 
     /// Sessions served and fully closed since start.
     pub fn sessions_closed(&self) -> u64 {
-        *self.shared.closed.lock().unwrap_or_else(|e| e.into_inner())
+        *self.shared.closed.lock()
     }
 
     /// Block until `n` sessions (total since start) have closed — the
     /// `serve --sessions n` CLI termination condition.
     pub fn wait_sessions_closed(&self, n: u64) {
-        let mut closed = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
+        let mut closed = self.shared.closed.lock();
         while *closed < n {
-            closed = self.shared.closed_cv.wait(closed).unwrap_or_else(|e| e.into_inner());
+            closed = closed.wait(&self.shared.closed_cv);
         }
     }
 
@@ -745,24 +744,17 @@ impl Server {
         }
         // Accept is joined: the session set can only shrink. One forced
         // close per live session starts every teardown.
-        let live: Vec<Arc<Session>> = self
-            .shared
-            .sessions
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .values()
-            .cloned()
-            .collect();
+        let live: Vec<Arc<Session>> =
+            self.shared.sessions.lock().values().cloned().collect();
         for sess in live {
             sess.close_socket();
         }
         self.shared.poll_parker.nudge();
         let created = self.shared.next_session.load(Ordering::Acquire);
         {
-            let mut closed = self.shared.closed.lock().unwrap_or_else(|e| e.into_inner());
+            let mut closed = self.shared.closed.lock();
             while *closed < created {
-                closed =
-                    self.shared.closed_cv.wait(closed).unwrap_or_else(|e| e.into_inner());
+                closed = closed.wait(&self.shared.closed_cv);
             }
         }
         for handle in self.threads.drain(..) {

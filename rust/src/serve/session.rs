@@ -48,9 +48,10 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::check::lock_order::SESSION;
 use crate::coordinator::{ReqTarget, Request, StreamReq, Ticket};
 use crate::dist::DistSpec;
 use crate::error::Error;
@@ -58,6 +59,7 @@ use crate::serve::lease::RetainKey;
 use crate::serve::protocol::{self, Frame};
 use crate::serve::sched::FillJob;
 use crate::serve::server::{Route, ServerShared};
+use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// Connection lifecycle phase.
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -177,7 +179,7 @@ pub(crate) struct Session {
     stream: TcpStream,
     /// The handshake must complete before this instant.
     pub(crate) hs_deadline: Instant,
-    state: Mutex<SessionState>,
+    state: OrderedMutex<SessionState>,
 }
 
 impl Session {
@@ -186,7 +188,7 @@ impl Session {
             id,
             stream,
             hs_deadline,
-            state: Mutex::new(SessionState {
+            state: OrderedMutex::new(&SESSION, SessionState {
                 phase: Phase::Handshake,
                 graceful: false,
                 dead: false,
@@ -213,8 +215,8 @@ impl Session {
 
     /// Lock the state, recovering from poisoning (every update leaves
     /// the maps and counters consistent).
-    pub(crate) fn lock(&self) -> MutexGuard<'_, SessionState> {
-        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    pub(crate) fn lock(&self) -> OrderedGuard<'_, SessionState> {
+        self.state.lock()
     }
 
     /// Non-blocking read (the socket is in non-blocking mode).
@@ -285,9 +287,15 @@ fn admit_ready(st: &mut SessionState, after: &mut AfterLock) {
         if !ready {
             return;
         }
-        let reply = match st.expected.pop_front().expect("front checked") {
-            Slot::Ready(r) => r,
-            Slot::Ticket(e, t) => st.arrived.remove(&(e, t)).expect("arrival checked"),
+        // The `ready` probe above guarantees both lookups; degrade to
+        // "nothing ready" rather than panicking the worker if not.
+        let reply = match st.expected.pop_front() {
+            Some(Slot::Ready(r)) => r,
+            Some(Slot::Ticket(e, t)) => match st.arrived.remove(&(e, t)) {
+                Some(r) => r,
+                None => return,
+            },
+            None => return,
         };
         let (frame, counted, quota) = chunk_frame(reply);
         push_out(st, &frame, counted, quota, after);
@@ -676,8 +684,12 @@ fn handle_lease(
         ReqTarget::Stream(s) => match server.engines[engine].cq.source().spec(s) {
             Some(spec) => (spec.h, spec.xs_origin),
             None => {
-                // Unreachable after resolve(); answer typed regardless.
-                let ReqTarget::Stream(global) = target else { unreachable!() };
+                // Unreachable after resolve(); answer typed regardless
+                // (resolve preserves the variant, so Group cannot occur).
+                let global = match target {
+                    ReqTarget::Stream(s) => s,
+                    ReqTarget::Group(_) => 0,
+                };
                 direct_err(
                     sess,
                     after,
@@ -775,6 +787,7 @@ pub(crate) fn run_visit(server: &Arc<ServerShared>, job: FillJob, mut budget: u3
     let mut job = Some(job);
     loop {
         let step = {
+            // thng: allow(panic, "loop invariant: job is re-stowed before every continue")
             let mut job = job.take().expect("job present at loop top");
             let mut st = sess.lock();
             if st.dead || server.stopping() {
@@ -1016,7 +1029,8 @@ pub(crate) fn poll_session(
                         break;
                     }
                     Ok(_) if done => {
-                        let f = st.out.pop_front().expect("front exists");
+                        // `done` was computed from the front frame.
+                        let Some(f) = st.out.pop_front() else { break };
                         progress = true;
                         if f.counted {
                             st.in_flight -= 1;
@@ -1081,8 +1095,8 @@ pub(crate) fn poll_session(
         // -- Frame extraction: inbuf → frames, then hand to a worker. --
         if !st.dead && st.phase != Phase::Draining {
             while st.inbuf.len() >= 4 {
-                let len =
-                    u32::from_le_bytes(st.inbuf[..4].try_into().expect("4 bytes")) as usize;
+                let word = [st.inbuf[0], st.inbuf[1], st.inbuf[2], st.inbuf[3]];
+                let len = u32::from_le_bytes(word) as usize;
                 if len == 0 || len > protocol::MAX_FRAME {
                     push_out(
                         &mut st,

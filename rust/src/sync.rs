@@ -1,0 +1,488 @@
+//! Ranked lock facade: `std::sync` newtypes that carry their position
+//! in the declared lock hierarchy ([`crate::check::lock_order`]).
+//!
+//! Every `Mutex`/`RwLock` in `serve/` and `coordinator/` is an
+//! [`OrderedMutex`]/[`OrderedRwLock`]. In release builds the wrappers
+//! compile down to the bare `std::sync` primitive — the rank is not
+//! even stored. In debug builds (every test run) each acquisition is
+//! checked against a thread-local stack of held ranks:
+//!
+//! * acquiring a rank **lower or equal** to one already held panics
+//!   (equal is allowed for classes marked `multi`, which callers
+//!   acquire as an index-ordered set — e.g. `fetch_many`'s per-group
+//!   drain locks);
+//! * re-acquiring the **same lock instance** on one thread panics
+//!   (`std::sync::Mutex` would deadlock or abort; this names the lock
+//!   and the order instead).
+//!
+//! So the hierarchy `thng-check` lints at rest is also asserted under
+//! load, on every test, interleaving included.
+//!
+//! Poisoning policy mirrors the crate's two established idioms:
+//! [`OrderedMutex::lock`] recovers the guard (every critical section
+//! here leaves state consistent between updates), while
+//! [`OrderedMutex::lock_checked`] maps poisoning to the typed
+//! [`Error::Backend`] for drain-state locks whose mid-fetch panic may
+//! leave a partially advanced cursor.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock};
+use std::time::Duration;
+
+use crate::check::lock_order::LockRank;
+use crate::error::Error;
+
+/// The typed poisoning error `lock_checked` surfaces (same contract the
+/// old `coordinator::lock_serve` helper had).
+fn poisoned(rank: &'static LockRank) -> Error {
+    Error::Backend(format!(
+        "lock `{}` poisoned: a thread panicked inside the critical section \
+         and its state may be inconsistent",
+        rank.name
+    ))
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    //! The per-thread held-rank stack behind the debug assertions.
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// `(rank, lock address)` for every ordered lock this thread
+        /// holds, in acquisition order.
+        static HELD: RefCell<Vec<(u16, usize)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub(super) fn acquire(rank: &'static LockRank, addr: usize) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if h.iter().any(|&(_, a)| a == addr) {
+                panic!(
+                    "lock-order: reentrant acquisition of `{}` (rank {}) on one thread \
+                     — std::sync::Mutex would deadlock here",
+                    rank.name, rank.rank
+                );
+            }
+            if let Some(&(top, _)) = h.last() {
+                let ok = rank.rank > top || (rank.rank == top && rank.multi);
+                assert!(
+                    ok,
+                    "lock-order: acquiring `{}` (rank {}) while holding rank {} — \
+                     violates the hierarchy declared in check::lock_order",
+                    rank.name, rank.rank, top
+                );
+            }
+            h.push((rank.rank, addr));
+        });
+    }
+
+    pub(super) fn release(addr: usize) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(i) = h.iter().rposition(|&(_, a)| a == addr) {
+                h.remove(i);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedMutex
+
+/// A [`std::sync::Mutex`] that knows its rank in the declared lock
+/// hierarchy (see the module docs).
+pub struct OrderedMutex<T> {
+    #[cfg(debug_assertions)]
+    rank: &'static LockRank,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` under the declared `rank`.
+    pub fn new(rank: &'static LockRank, value: T) -> Self {
+        #[cfg(not(debug_assertions))]
+        let _ = rank;
+        Self {
+            #[cfg(debug_assertions)]
+            rank,
+            inner: Mutex::new(value),
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn addr(&self) -> usize {
+        self as *const Self as *const u8 as usize
+    }
+
+    #[cfg(debug_assertions)]
+    fn note_acquire(&self) {
+        held::acquire(self.rank, self.addr());
+    }
+
+    /// Lock, recovering the guard from poisoning (the crate-wide
+    /// default: critical sections keep their invariants between every
+    /// update, so a peer's panic does not invalidate the state).
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        self.note_acquire();
+        let g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        OrderedGuard {
+            guard: Some(g),
+            #[cfg(debug_assertions)]
+            addr: self.addr(),
+        }
+    }
+
+    /// Lock, mapping poisoning to the typed [`Error::Backend`] — for
+    /// locks (the drain cores) whose mid-update panic can leave a
+    /// partially advanced cursor behind.
+    pub fn lock_checked(&self) -> Result<OrderedGuard<'_, T>, Error> {
+        #[cfg(debug_assertions)]
+        self.note_acquire();
+        match self.inner.lock() {
+            Ok(g) => Ok(OrderedGuard {
+                guard: Some(g),
+                #[cfg(debug_assertions)]
+                addr: self.addr(),
+            }),
+            Err(_) => {
+                #[cfg(debug_assertions)]
+                held::release(self.addr());
+                Err(self.poison_error())
+            }
+        }
+    }
+
+    /// Non-blocking [`lock_checked`](Self::lock_checked): `Ok(None)`
+    /// when the lock is currently held elsewhere, `Err` on poisoning.
+    pub fn try_lock_checked(&self) -> Result<Option<OrderedGuard<'_, T>>, Error> {
+        use std::sync::TryLockError;
+        match self.inner.try_lock() {
+            Ok(g) => {
+                #[cfg(debug_assertions)]
+                self.note_acquire();
+                Ok(Some(OrderedGuard {
+                    guard: Some(g),
+                    #[cfg(debug_assertions)]
+                    addr: self.addr(),
+                }))
+            }
+            Err(TryLockError::WouldBlock) => Ok(None),
+            Err(TryLockError::Poisoned(_)) => Err(self.poison_error()),
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn poison_error(&self) -> Error {
+        poisoned(self.rank)
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn poison_error(&self) -> Error {
+        Error::Backend(
+            "lock poisoned: a thread panicked inside the critical section \
+             and its state may be inconsistent"
+                .into(),
+        )
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// RAII guard of an [`OrderedMutex`]; releases the rank (debug builds)
+/// and the lock on drop. Carries the [`Condvar`] surface so waiting
+/// keeps the rank accounting intact — the rank stays on the held stack
+/// while the thread is blocked, which is correct: the lock is re-held
+/// the moment `wait` returns.
+pub struct OrderedGuard<'a, T> {
+    /// `Some` except transiently inside the wait methods.
+    guard: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    addr: usize,
+}
+
+impl<'a, T> OrderedGuard<'a, T> {
+    fn inner(&self) -> &MutexGuard<'a, T> {
+        // Infallible: `guard` is only `None` mid-wait, and the wait
+        // methods consume `self`.
+        self.guard.as_ref().expect("guard present outside wait")
+    }
+
+    fn inner_mut(&mut self) -> &mut MutexGuard<'a, T> {
+        self.guard.as_mut().expect("guard present outside wait")
+    }
+
+    /// Block on `cv` until notified, recovering from poisoning.
+    pub fn wait(mut self, cv: &Condvar) -> Self {
+        let g = self.guard.take().expect("guard present outside wait");
+        let g = cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        self.guard = Some(g);
+        self
+    }
+
+    /// Block on `cv` for at most `dur`, recovering from poisoning.
+    /// Returns the reacquired guard and whether the wait timed out.
+    pub fn wait_timeout(mut self, cv: &Condvar, dur: Duration) -> (Self, bool) {
+        let g = self.guard.take().expect("guard present outside wait");
+        let (g, t) = match cv.wait_timeout(g, dur) {
+            Ok((g, t)) => (g, t.timed_out()),
+            Err(e) => {
+                let (g, t) = e.into_inner();
+                (g, t.timed_out())
+            }
+        };
+        self.guard = Some(g);
+        (self, t)
+    }
+
+    /// [`wait_timeout`](Self::wait_timeout) with the typed-poisoning
+    /// contract of [`OrderedMutex::lock_checked`]: a poisoned wake
+    /// releases the lock and surfaces [`Error::Backend`].
+    pub fn wait_timeout_checked(
+        mut self,
+        cv: &Condvar,
+        dur: Duration,
+        rank: &'static LockRank,
+    ) -> Result<(Self, bool), Error> {
+        let g = self.guard.take().expect("guard present outside wait");
+        match cv.wait_timeout(g, dur) {
+            Ok((g, t)) => {
+                self.guard = Some(g);
+                Ok((self, t.timed_out()))
+            }
+            // `self` (guard already taken) drops below and pops the
+            // rank; the poisoned inner guard drops here.
+            Err(_) => Err(poisoned(rank)),
+        }
+    }
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner()
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner_mut()
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::release(self.addr);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OrderedRwLock
+
+/// A [`std::sync::RwLock`] that knows its rank. Read and write
+/// acquisitions are ranked identically — a reader-vs-writer inversion
+/// deadlocks exactly like a mutex inversion.
+pub struct OrderedRwLock<T> {
+    #[cfg(debug_assertions)]
+    rank: &'static LockRank,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub fn new(rank: &'static LockRank, value: T) -> Self {
+        #[cfg(not(debug_assertions))]
+        let _ = rank;
+        Self {
+            #[cfg(debug_assertions)]
+            rank,
+            inner: RwLock::new(value),
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    fn addr(&self) -> usize {
+        self as *const Self as *const u8 as usize
+    }
+
+    /// Shared lock, recovering from poisoning.
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        held::acquire(self.rank, self.addr());
+        OrderedReadGuard {
+            guard: self.inner.read().unwrap_or_else(|e| e.into_inner()),
+            #[cfg(debug_assertions)]
+            addr: self.addr(),
+        }
+    }
+
+    /// Exclusive lock, recovering from poisoning.
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        held::acquire(self.rank, self.addr());
+        OrderedWriteGuard {
+            guard: self.inner.write().unwrap_or_else(|e| e.into_inner()),
+            #[cfg(debug_assertions)]
+            addr: self.addr(),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Shared-access guard of an [`OrderedRwLock`].
+pub struct OrderedReadGuard<'a, T> {
+    guard: std::sync::RwLockReadGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    addr: usize,
+}
+
+impl<T> Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> Drop for OrderedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::release(self.addr);
+    }
+}
+
+/// Exclusive-access guard of an [`OrderedRwLock`].
+pub struct OrderedWriteGuard<'a, T> {
+    guard: std::sync::RwLockWriteGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    addr: usize,
+}
+
+impl<T> Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for OrderedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::release(self.addr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::lock_order::{DRAIN, INBOX, PARK, ROUTES, SESSION};
+
+    #[test]
+    fn ascending_acquisition_is_clean() {
+        let a = OrderedMutex::new(&ROUTES, 1u32);
+        let b = OrderedMutex::new(&SESSION, 2u32);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+        drop(ga); // out-of-order release is fine
+        drop(gb);
+        // Sequential re-acquisition after release is fine too.
+        assert_eq!(*a.lock(), 1);
+    }
+
+    #[test]
+    fn same_rank_multi_class_allows_an_ordered_set() {
+        let drains: Vec<_> = (0..4).map(|i| OrderedMutex::new(&DRAIN, i)).collect();
+        let guards: Vec<_> = drains.iter().map(|d| d.lock()).collect();
+        assert_eq!(guards.iter().map(|g| **g).sum::<i32>(), 6);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn descending_acquisition_panics_in_debug() {
+        let hi = OrderedMutex::new(&PARK, ());
+        let lo = OrderedMutex::new(&INBOX, ());
+        let _g = hi.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = lo.lock();
+        }))
+        .expect_err("descending order must be rejected");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-order"), "got: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn same_thread_reentrancy_panics_in_debug() {
+        let m = OrderedMutex::new(&SESSION, ());
+        let _g = m.lock();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = m.lock();
+        }))
+        .expect_err("reentrancy must be rejected, not deadlock");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("reentrant"), "got: {msg}");
+    }
+
+    #[test]
+    fn condvar_wait_keeps_rank_accounting() {
+        use std::sync::Arc;
+        use std::time::Duration;
+        let m = Arc::new(OrderedMutex::new(&PARK, 0u64));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let t = std::thread::Builder::new()
+            .name("thng-test-cv".into())
+            .spawn(move || {
+                let mut g = m2.lock();
+                *g += 1;
+                cv2.notify_all();
+            })
+            .expect("spawn");
+        let mut g = m.lock();
+        while *g == 0 {
+            let (g2, _timed_out) = g.wait_timeout(&cv, Duration::from_millis(50));
+            g = g2;
+        }
+        assert_eq!(*g, 1);
+        drop(g);
+        t.join().expect("join");
+        // After the waits the held stack is balanced: a fresh
+        // descending-order pair would still be the only way to panic.
+        let again = m.lock();
+        assert_eq!(*again, 1);
+    }
+
+    #[test]
+    fn try_lock_reports_contention_as_none() {
+        let m = OrderedMutex::new(&DRAIN, 7u8);
+        let g = m.lock();
+        // Same thread: the reentrancy debug check would fire before the
+        // inner try_lock, so probe from another thread.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let r = m.try_lock_checked().expect("not poisoned");
+                assert!(r.is_none(), "held elsewhere means WouldBlock");
+            });
+        });
+        drop(g);
+        let r = m.try_lock_checked().expect("not poisoned");
+        assert_eq!(*r.expect("free now"), 7);
+    }
+}

@@ -1,0 +1,9 @@
+//! FAIL fixture (scanned as `dist/shape.rs` — a replay-critical path):
+//! three wall-clock/environment reads.
+
+pub fn sample() -> u64 {
+    let t = std::time::Instant::now();
+    let epoch = std::time::SystemTime::now();
+    let seed = std::env::var("THNG_SEED");
+    0
+}

@@ -1,0 +1,6 @@
+//! PASS fixture (scanned as `dist/shape.rs`): pure arithmetic on an
+//! explicit seed — nothing environmental.
+
+pub fn sample(seed: u64) -> u64 {
+    seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407)
+}

@@ -1,0 +1,6 @@
+//! Advisory fixture (scanned as `serve/frame.rs`): slice indexing is
+//! reported but never gates a run.
+
+pub fn word(buf: &[u8]) -> u32 {
+    u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+}

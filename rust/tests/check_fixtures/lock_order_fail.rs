@@ -1,0 +1,9 @@
+//! FAIL fixture (scanned as `serve/session.rs`): `session` (rank 20)
+//! is held while `routes` (rank 10) is acquired — descending nesting.
+
+pub fn visit(server: &Server, sess: &Session) {
+    let st = sess.lock();
+    let routes = server.lock_routes();
+    drop(routes);
+    drop(st);
+}

@@ -1,0 +1,19 @@
+//! PASS fixture (scanned as `serve/session.rs`): the same two locks in
+//! declared order, plus an early drop and a temporary guard.
+
+pub fn visit(server: &Server, sess: &Session) {
+    let routes = server.lock_routes();
+    let st = sess.lock();
+    drop(st);
+    drop(routes);
+}
+
+pub fn peek(server: &Server, sess: &Session) {
+    let n = sess.lock().queue_len();
+    {
+        let st = sess.lock();
+        drop(st);
+    }
+    let routes = server.lock_routes();
+    drop(routes);
+}

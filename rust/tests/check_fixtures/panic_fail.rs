@@ -1,0 +1,14 @@
+//! FAIL fixture (scanned as `serve/frame.rs`): every panic-family site
+//! below is an unjustified deny finding.
+
+pub fn decode(buf: &[u8]) -> u32 {
+    let head = buf.first().unwrap();
+    let tail = buf.last().expect("non-empty");
+    if *head == 0 {
+        panic!("zero header");
+    }
+    if *tail == 0 {
+        unreachable!();
+    }
+    todo!()
+}

@@ -1,0 +1,19 @@
+//! PASS fixture (scanned as `serve/frame.rs`): typed errors, one
+//! justified pragma, and test-only unwraps behind `#[cfg(test)]`.
+
+pub fn decode(buf: &[u8]) -> Result<u32, Error> {
+    let head = buf.first().ok_or(Error::Short)?;
+    // thng: allow(panic, "invariant: caller validated the length above")
+    let tail = buf.last().expect("non-empty");
+    Ok(u32::from(*head) + u32::from(*tail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        decode(&[1, 2]).unwrap();
+    }
+}

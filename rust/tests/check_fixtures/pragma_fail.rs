@@ -1,0 +1,8 @@
+//! FAIL fixture (any path): three malformed pragmas — each is itself a
+//! deny finding so a broken suppression cannot rot silently.
+
+pub fn f() {
+    // thng: allow(panic)
+    // thng: allow(frobnicate, "no such lint")
+    // thng: deny(panic, "unknown directive")
+}

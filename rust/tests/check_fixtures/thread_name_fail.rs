@@ -1,0 +1,10 @@
+//! FAIL fixture (scanned as `util/spawn.rs`): three thread-discipline
+//! violations — raw spawn, unnamed Builder, name without the prefix.
+
+pub fn start() {
+    std::thread::spawn(|| {});
+    let a = std::thread::Builder::new().spawn(|| {});
+    let b = std::thread::Builder::new()
+        .name("worker-1".into())
+        .spawn(|| {});
+}

@@ -1,0 +1,11 @@
+//! PASS fixture (scanned as `util/spawn.rs`): named `thng-` Builder
+//! spawns, literal and formatted.
+
+pub fn start(i: usize) {
+    let a = std::thread::Builder::new()
+        .name(format!("thng-w{i}"))
+        .spawn(|| {});
+    let b = std::thread::Builder::new()
+        .name("thng-fixed".into())
+        .spawn(|| {});
+}

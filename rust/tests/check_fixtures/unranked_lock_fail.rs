@@ -1,0 +1,6 @@
+//! FAIL fixture (scanned as `coordinator/cache.rs`): raw std::sync
+//! lock construction where the ranked facade is mandatory.
+
+pub fn build() -> (Mutex<u64>, RwLock<Vec<u8>>) {
+    (Mutex::new(0), RwLock::new(Vec::new()))
+}

@@ -1,0 +1,9 @@
+//! PASS fixture (scanned as `coordinator/cache.rs`): the ranked facade
+//! with a declared rank.
+
+use crate::check::lock_order::INBOX;
+use crate::sync::OrderedMutex;
+
+pub fn build() -> OrderedMutex<u64> {
+    OrderedMutex::new(&INBOX, 0)
+}

@@ -1,0 +1,130 @@
+//! Fixture and live-tree tests for the `thng-check` static-analysis
+//! pass (ISSUE 8). Each lint has at least one *failing* fixture — a
+//! lint that cannot fail is a lint that silently stopped working — and
+//! a passing one showing the sanctioned idiom. The meta-tests then run
+//! the real pass over `rust/src` and pin it to the committed
+//! `LINT.json` baseline.
+
+use std::path::Path;
+
+use thundering::check::{analyze_source, analyze_tree, regressions_vs_baseline, Lint, Report};
+
+/// Scan fixture text under a chosen relative path (lint scoping is
+/// path-based, so the same fixture can probe in- and out-of-scope).
+fn scan(rel: &str, src: &str) -> Vec<thundering::check::Finding> {
+    analyze_source(rel, src).0
+}
+
+fn count(findings: &[thundering::check::Finding], lint: Lint, justified: bool) -> usize {
+    findings.iter().filter(|f| f.lint == lint && f.justified == justified).count()
+}
+
+// ---------------------------------------------------------------------------
+// per-lint fixtures
+
+#[test]
+fn panic_fixture_fails_and_pass_variant_is_clean() {
+    let fail = scan("serve/frame.rs", include_str!("check_fixtures/panic_fail.rs"));
+    assert_eq!(count(&fail, Lint::Panic, false), 5, "{fail:?}");
+
+    let pass = scan("serve/frame.rs", include_str!("check_fixtures/panic_pass.rs"));
+    assert_eq!(count(&pass, Lint::Panic, false), 0, "{pass:?}");
+    assert_eq!(count(&pass, Lint::Panic, true), 1, "the pragma'd expect is justified");
+    // The same text outside the policy scope raises nothing.
+    let out = scan("prng/frame.rs", include_str!("check_fixtures/panic_fail.rs"));
+    assert_eq!(count(&out, Lint::Panic, false), 0);
+}
+
+#[test]
+fn index_fixture_is_advisory_only() {
+    let f = scan("serve/frame.rs", include_str!("check_fixtures/index_advisory.rs"));
+    assert_eq!(count(&f, Lint::Index, false), 4, "{f:?}");
+    assert!(Lint::Index.advisory() && !Lint::Panic.advisory());
+}
+
+#[test]
+fn lock_order_fixture_fails_on_descending_nesting_only() {
+    let fail = scan("serve/session.rs", include_str!("check_fixtures/lock_order_fail.rs"));
+    assert_eq!(count(&fail, Lint::LockOrder, false), 1, "{fail:?}");
+
+    let pass = scan("serve/session.rs", include_str!("check_fixtures/lock_order_pass.rs"));
+    assert_eq!(count(&pass, Lint::LockOrder, false), 0, "{pass:?}");
+}
+
+#[test]
+fn thread_name_fixture_fails_all_three_ways() {
+    let fail = scan("util/spawn.rs", include_str!("check_fixtures/thread_name_fail.rs"));
+    assert_eq!(count(&fail, Lint::ThreadName, false), 3, "{fail:?}");
+
+    let pass = scan("util/spawn.rs", include_str!("check_fixtures/thread_name_pass.rs"));
+    assert_eq!(count(&pass, Lint::ThreadName, false), 0, "{pass:?}");
+}
+
+#[test]
+fn determinism_fixture_fails_in_replay_scope_only() {
+    let fail = scan("dist/shape.rs", include_str!("check_fixtures/determinism_fail.rs"));
+    assert_eq!(count(&fail, Lint::Determinism, false), 3, "{fail:?}");
+
+    // Deadline arithmetic outside the replay paths is legitimate.
+    let out = scan("serve/shape.rs", include_str!("check_fixtures/determinism_fail.rs"));
+    assert_eq!(count(&out, Lint::Determinism, false), 0, "{out:?}");
+
+    let pass = scan("dist/shape.rs", include_str!("check_fixtures/determinism_pass.rs"));
+    assert_eq!(count(&pass, Lint::Determinism, false), 0, "{pass:?}");
+}
+
+#[test]
+fn unranked_lock_fixture_fails_in_the_core_only() {
+    let fail = scan("coordinator/cache.rs", include_str!("check_fixtures/unranked_lock_fail.rs"));
+    assert_eq!(count(&fail, Lint::UnrankedLock, false), 2, "{fail:?}");
+
+    let out = scan("stats/cache.rs", include_str!("check_fixtures/unranked_lock_fail.rs"));
+    assert_eq!(count(&out, Lint::UnrankedLock, false), 0, "{out:?}");
+
+    let pass = scan("coordinator/cache.rs", include_str!("check_fixtures/unranked_lock_pass.rs"));
+    assert_eq!(count(&pass, Lint::UnrankedLock, false), 0, "{pass:?}");
+}
+
+#[test]
+fn pragma_fixture_fails_every_malformed_shape() {
+    let f = scan("serve/any.rs", include_str!("check_fixtures/pragma_fail.rs"));
+    assert_eq!(count(&f, Lint::Pragma, false), 3, "{f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// live tree
+
+fn live_report() -> Report {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src"));
+    analyze_tree(root).expect("rust/src scans")
+}
+
+/// Acceptance gate: the pass runs clean over its own repository — zero
+/// unjustified deny-level findings, exactly the committed pragmas.
+#[test]
+fn live_tree_is_clean() {
+    let report = live_report();
+    let offenders: Vec<_> = report
+        .findings
+        .iter()
+        .filter(|f| !f.justified && !f.lint.advisory())
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.lint.name(), f.msg))
+        .collect();
+    assert!(offenders.is_empty(), "unjustified findings:\n{}", offenders.join("\n"));
+    assert_eq!(report.deny_total(), 0);
+}
+
+/// The committed `LINT.json` is byte-identical to what the pass emits —
+/// regenerate with `cargo run --bin thng-check -- --write-baseline`
+/// whenever a pragma is added or retired.
+#[test]
+fn committed_baseline_matches_the_tree() {
+    let report = live_report();
+    let committed = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/LINT.json"));
+    assert_eq!(
+        report.baseline_json(),
+        committed,
+        "LINT.json is stale — regenerate with `thng-check --write-baseline`"
+    );
+    assert!(regressions_vs_baseline(&report, committed).is_empty());
+}

@@ -109,10 +109,30 @@ pub static WAKER: LockRank = LockRank { name: "waker", rank: 75, multi: false };
 /// under a drain lock and under the waker slot.
 pub static PARK: LockRank = LockRank { name: "park", rank: 80, multi: false };
 
-/// `LeaseTable::inner` — the retention rings. Last in the order:
-/// retention appends happen after every other lock is released, and a
-/// retention critical section may acquire nothing.
+/// `LeaseTable::inner` — the retention rings. Retention appends happen
+/// after every other serve/engine lock is released, and a retention
+/// critical section may acquire nothing (the observability leaves below
+/// are atomics-only on the hot paths).
 pub static RETENTION: LockRank = LockRank { name: "retention", rank: 90, multi: false };
+
+/// `obs::Registry::inner` — the metric-name → handle map (RwLock).
+/// A leaf below every subsystem lock: handle resolution may run from
+/// any thread with any lock held, and a registry critical section
+/// acquires nothing but the snapshot ring below.
+pub static OBS_REGISTRY: LockRank = LockRank { name: "obs-registry", rank: 94, multi: false };
+
+/// `obs::DeltaRing::ring` — retained snapshots for delta-since-cursor
+/// STATS replies; taken under the registry read lock while assembling.
+pub static OBS_RING: LockRank = LockRank { name: "obs-ring", rank: 95, multi: false };
+
+/// `obs::trace` global ring list — registry of per-thread span rings,
+/// held while registering a thread or sweeping a dump.
+pub static TRACE_LIST: LockRank = LockRank { name: "trace-list", rank: 96, multi: false };
+
+/// One per-thread span ring. Innermost lock in the crate: a recording
+/// thread takes only its own ring (uncontended except against a dump
+/// sweep), and a ring critical section acquires nothing.
+pub static TRACE_RING: LockRank = LockRank { name: "trace-ring", rank: 97, multi: false };
 
 /// How a lock class is acquired on the wire of the source text — which
 /// facade methods the lock-order lint should recognise for it.
@@ -213,6 +233,10 @@ pub static CLASSES: &[LockClass] = &[
         rank: &PARK,
     },
     LockClass { path: "serve/lease.rs", field: "inner", kind: AcqKind::Mutex, rank: &RETENTION },
+    LockClass { path: "obs/", field: "inner", kind: AcqKind::RwLock, rank: &OBS_REGISTRY },
+    LockClass { path: "obs/", field: "ring", kind: AcqKind::Mutex, rank: &OBS_RING },
+    LockClass { path: "obs/", field: "list", kind: AcqKind::Mutex, rank: &TRACE_LIST },
+    LockClass { path: "obs/", field: "events", kind: AcqKind::Mutex, rank: &TRACE_RING },
 ];
 
 /// Look up the rank for an acquisition of `field` via `kind` in the

@@ -18,9 +18,16 @@
 //! Findings are suppressed (and counted as *justified*) by a
 //! `// thng: allow(<lint>, "<why>")` pragma on the same or previous
 //! line. The pass is zero-dependency by construction: a hand-rolled
-//! lexer ([`lexer`]), pattern-matching lints ([`lints`]), and a
-//! hand-rolled JSON emitter below — nothing to download, per the
-//! offline build policy.
+//! lexer ([`lexer`]), pattern-matching lints ([`lints`]), and report
+//! output through the crate's one JSON writer ([`crate::util::json`])
+//! — nothing to download, per the offline build policy.
+//!
+//! The committed `LINT.json` carries two kinds of numbers: **deny**
+//! counts (exact — the tree must match them, zero today) and an
+//! **advisory ceiling** for the slice-index census (a ratchet — the
+//! live count may sit below it, but `--baseline` fails the run the
+//! moment it rises above). `--write-baseline` tightens the ceiling to
+//! the current live count.
 
 pub mod lexer;
 pub mod lints;
@@ -30,6 +37,8 @@ use std::collections::BTreeMap;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
+
+use crate::util::json::{uint, Json};
 
 pub use lints::{Finding, Lint, ALL_LINTS};
 
@@ -78,73 +87,67 @@ impl Report {
         self.tallies().values().map(|t| t.deny).sum()
     }
 
-    /// The committed-baseline body (`LINT.json`): gating counts only —
-    /// deny per lint plus the justified-pragma trajectory. Advisory
-    /// counts are deliberately excluded (they would churn the baseline
-    /// without gating anything).
-    pub fn baseline_json(&self) -> String {
-        let t = self.tallies();
-        let mut s = String::from("{\n  \"schema\": 1,\n  \"deny\": {\n");
-        let items: Vec<String> =
-            t.iter().map(|(name, t)| format!("    \"{name}\": {}", t.deny)).collect();
-        s.push_str(&items.join(",\n"));
-        s.push_str("\n  },\n");
-        s.push_str(&format!("  \"justified_pragmas\": {}\n}}\n", self.justified_pragmas));
-        s
+    /// Total advisory findings (the slice-index census the baseline's
+    /// ratchet ceiling bounds).
+    pub fn advisory_total(&self) -> usize {
+        self.tallies().values().map(|t| t.advisory).sum()
     }
 
-    /// The full `--json` report: tallies plus every finding.
-    pub fn full_json(&self) -> String {
+    /// The committed-baseline body (`LINT.json`): exact deny counts per
+    /// lint, the justified-pragma trajectory, and the advisory census
+    /// as a per-lint ratchet ceiling (`--write-baseline` records the
+    /// live count; `--baseline` fails only when the live count rises
+    /// above it).
+    pub fn baseline_json(&self) -> String {
         let t = self.tallies();
-        let mut s = String::from("{\n  \"schema\": 1,\n");
-        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
-        s.push_str(&format!("  \"justified_pragmas\": {},\n", self.justified_pragmas));
-        s.push_str("  \"counts\": {\n");
-        let items: Vec<String> = t
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), uint(1));
+        let deny: BTreeMap<String, Json> =
+            t.iter().map(|(name, t)| (name.to_string(), uint(t.deny as u64))).collect();
+        top.insert("deny".to_string(), Json::Obj(deny));
+        let advisory: BTreeMap<String, Json> = t
             .iter()
-            .map(|(name, t)| {
-                format!(
-                    "    \"{name}\": {{\"deny\": {}, \"advisory\": {}, \"justified\": {}}}",
-                    t.deny, t.advisory, t.justified
-                )
-            })
+            .filter(|(name, _)| ALL_LINTS.iter().any(|l| l.advisory() && l.name() == *name))
+            .map(|(name, t)| (name.to_string(), uint(t.advisory as u64)))
             .collect();
-        s.push_str(&items.join(",\n"));
-        s.push_str("\n  },\n  \"findings\": [\n");
-        let items: Vec<String> = self
+        top.insert("advisory".to_string(), Json::Obj(advisory));
+        top.insert("justified_pragmas".to_string(), uint(self.justified_pragmas as u64));
+        Json::Obj(top).pretty()
+    }
+
+    /// The full `--json` report: tallies plus every finding, one JSON
+    /// document through the shared writer.
+    pub fn full_json(&self) -> String {
+        let mut counts = BTreeMap::new();
+        for (name, t) in self.tallies() {
+            let mut o = BTreeMap::new();
+            o.insert("deny".to_string(), uint(t.deny as u64));
+            o.insert("advisory".to_string(), uint(t.advisory as u64));
+            o.insert("justified".to_string(), uint(t.justified as u64));
+            counts.insert(name.to_string(), Json::Obj(o));
+        }
+        let findings: Vec<Json> = self
             .findings
             .iter()
             .map(|f| {
-                format!(
-                    "    {{\"lint\": \"{}\", \"file\": \"{}\", \"line\": {}, \
-                     \"justified\": {}, \"advisory\": {}, \"msg\": \"{}\"}}",
-                    f.lint.name(),
-                    json_escape(&f.file),
-                    f.line,
-                    f.justified,
-                    f.lint.advisory(),
-                    json_escape(&f.msg)
-                )
+                let mut o = BTreeMap::new();
+                o.insert("lint".to_string(), Json::Str(f.lint.name().to_string()));
+                o.insert("file".to_string(), Json::Str(f.file.clone()));
+                o.insert("line".to_string(), uint(u64::from(f.line)));
+                o.insert("justified".to_string(), Json::Bool(f.justified));
+                o.insert("advisory".to_string(), Json::Bool(f.lint.advisory()));
+                o.insert("msg".to_string(), Json::Str(f.msg.clone()));
+                Json::Obj(o)
             })
             .collect();
-        s.push_str(&items.join(",\n"));
-        s.push_str("\n  ]\n}\n");
-        s
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), uint(1));
+        top.insert("files_scanned".to_string(), uint(self.files_scanned as u64));
+        top.insert("justified_pragmas".to_string(), uint(self.justified_pragmas as u64));
+        top.insert("counts".to_string(), Json::Obj(counts));
+        top.insert("findings".to_string(), Json::Arr(findings));
+        Json::Obj(top).pretty()
     }
-}
-
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
 }
 
 /// Analyze one file's source text under its path relative to the scan
@@ -196,8 +199,10 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
 }
 
 /// Compare a report against a committed baseline (`LINT.json`): returns
-/// the list of lints whose unjustified deny count exceeds the baseline.
-/// The baseline reader is a targeted scanner for the exact shape
+/// the list of lints whose unjustified deny count exceeds the baseline,
+/// plus — when the baseline carries an `advisory` section — any
+/// advisory lint whose live count rose above its recorded ratchet
+/// ceiling. The baseline reader is a targeted scanner for the shape
 /// [`Report::baseline_json`] writes — not a general JSON parser.
 pub fn regressions_vs_baseline(report: &Report, baseline: &str) -> Vec<String> {
     let mut regressions = Vec::new();
@@ -209,16 +214,74 @@ pub fn regressions_vs_baseline(report: &Report, baseline: &str) -> Vec<String> {
                 tally.deny
             ));
         }
+        if let Some(ceiling) = advisory_ceiling(baseline, name) {
+            if tally.advisory > ceiling {
+                regressions.push(format!(
+                    "{name}: {} advisory finding(s), ratchet ceiling is {ceiling} — \
+                     fix the new sites or regenerate with `thng-check --write-baseline`",
+                    tally.advisory
+                ));
+            }
+        }
     }
     regressions
 }
 
-/// Extract `"<lint>": N` from the baseline's `deny` table.
+/// Is the committed baseline stale? Exact-match drift checks for the
+/// numbers the baseline pins hard — deny counts and the pragma
+/// trajectory — plus presence of the advisory ratchet section. Ceiling
+/// *compliance* (live ≤ recorded) is [`regressions_vs_baseline`]'s job;
+/// the ceiling's slack is allowed to shrink without regenerating.
+pub fn baseline_drift(report: &Report, baseline: &str) -> Vec<String> {
+    let mut drift = Vec::new();
+    for (name, tally) in report.tallies() {
+        match baseline_count(baseline, name) {
+            Some(n) if n == tally.deny => {}
+            committed => drift.push(format!(
+                "{name}: live deny count {} vs committed {committed:?}",
+                tally.deny
+            )),
+        }
+    }
+    match scan_usize(baseline, 0, "justified_pragmas") {
+        Some(n) if n == report.justified_pragmas => {}
+        committed => drift.push(format!(
+            "justified_pragmas: live {} vs committed {committed:?}",
+            report.justified_pragmas
+        )),
+    }
+    if ALL_LINTS.iter().any(|l| l.advisory() && advisory_ceiling(baseline, l.name()).is_none())
+    {
+        drift.push("baseline lacks the advisory ratchet section".into());
+    }
+    if !drift.is_empty() {
+        drift.push("regenerate with `thng-check --write-baseline LINT.json`".into());
+    }
+    drift
+}
+
+/// Extract `"<lint>": N` from the baseline's `deny` table (anchored on
+/// the section key so member order never misleads the scan).
 fn baseline_count(baseline: &str, lint: &str) -> Option<usize> {
-    let key = format!("\"{lint}\":");
-    let at = baseline.find(&key)?;
-    let rest = baseline[at + key.len()..].trim_start();
-    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    let at = baseline.find("\"deny\"")?;
+    scan_usize(baseline, at, lint)
+}
+
+/// The committed ratchet ceiling for an advisory lint — `None` when the
+/// baseline predates the `advisory` section (the ratchet is then
+/// simply not armed).
+fn advisory_ceiling(baseline: &str, lint: &str) -> Option<usize> {
+    let at = baseline.find("\"advisory\"")?;
+    scan_usize(baseline, at, lint)
+}
+
+/// First `"<key>": N` at or after byte offset `from`.
+fn scan_usize(baseline: &str, from: usize, key: &str) -> Option<usize> {
+    let rest = baseline.get(from..)?;
+    let pat = format!("\"{key}\":");
+    let at = rest.find(&pat)?;
+    let tail = rest.get(at + pat.len()..)?.trim_start();
+    let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
     digits.parse().ok()
 }
 
@@ -261,15 +324,60 @@ mod tests {
         assert_eq!(report.deny_total(), 1, "advisory findings never gate");
 
         let baseline = report.baseline_json();
-        assert!(baseline.contains("\"panic\": 1"));
+        assert!(baseline.contains("\"panic\": 1"), "{baseline}");
         assert!(baseline.contains("\"justified_pragmas\": 1"));
-        // Against its own baseline: no regression.
+        // The advisory census rides along as the ratchet ceiling.
+        assert!(baseline.contains("\"advisory\""), "{baseline}");
+        assert_eq!(advisory_ceiling(&baseline, "index"), Some(1));
+        // The deny scan is section-anchored: `index` resolves to the
+        // deny table's zero even though the advisory section (also
+        // carrying an `index` member) serializes first.
+        assert_eq!(baseline_count(&baseline, "index"), Some(0));
+        // Against its own baseline: no regression, no drift.
         assert!(regressions_vs_baseline(&report, &baseline).is_empty());
-        // Against a clean baseline: the panic finding is a regression.
+        assert!(baseline_drift(&report, &baseline).is_empty());
+        // Against a clean baseline: the panic finding is a regression
+        // and the advisory count broke its (zero) ceiling.
         let clean = Report { files_scanned: 0, findings: vec![], justified_pragmas: 0 };
         let regs = regressions_vs_baseline(&report, &clean.baseline_json());
-        assert_eq!(regs.len(), 1);
-        assert!(regs[0].starts_with("panic:"));
+        assert_eq!(regs.len(), 2, "{regs:?}");
+        assert!(regs.iter().any(|r| r.starts_with("panic:")));
+        assert!(regs.iter().any(|r| r.starts_with("index:") && r.contains("ratchet")));
+    }
+
+    #[test]
+    fn advisory_ratchet_allows_slack_but_not_growth() {
+        let finding = |line: u32| Finding {
+            lint: Lint::Index,
+            file: "serve/x.rs".into(),
+            line,
+            msg: "idx".into(),
+            justified: false,
+        };
+        let live = Report {
+            files_scanned: 1,
+            findings: vec![finding(1), finding(2)],
+            justified_pragmas: 0,
+        };
+        // Ceiling above the live count: compliant (slack is fine) and
+        // not drift (the ceiling only ever ratchets on regeneration).
+        let roomy = live.baseline_json().replace("\"index\": 2", "\"index\": 5");
+        assert_eq!(advisory_ceiling(&roomy, "index"), Some(5));
+        assert!(regressions_vs_baseline(&live, &roomy).is_empty());
+        assert!(baseline_drift(&live, &roomy).is_empty());
+        // Ceiling below: the census grew — that is the gated event.
+        let tight = live.baseline_json().replace("\"index\": 2", "\"index\": 1");
+        let regs = regressions_vs_baseline(&live, &tight);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("ceiling is 1"), "{regs:?}");
+        // A pre-ratchet baseline (no advisory section) gates nothing
+        // but is drift: regenerating arms the ratchet.
+        let legacy = "{\n  \"deny\": {\n    \"index\": 0,\n    \"panic\": 0\n  },\n  \
+                      \"justified_pragmas\": 0\n}\n";
+        assert!(regressions_vs_baseline(&live, legacy).is_empty());
+        assert!(baseline_drift(&live, legacy)
+            .iter()
+            .any(|d| d.contains("advisory ratchet section")));
     }
 
     #[test]

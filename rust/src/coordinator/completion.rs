@@ -80,6 +80,7 @@ use crate::check::lock_order::{INBOX, WAKER};
 use crate::coordinator::source::StreamSource;
 use crate::dist::{self, DistSpec};
 use crate::error::Error;
+use crate::obs::trace;
 use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// What one submitted request targets.
@@ -738,7 +739,9 @@ impl CompletionInbox {
             // consumer parked on the completion side.
             self.cv.notify_all();
         }
-        Some(ClaimedReq { inbox: self.clone(), inner: Some(p?) })
+        let p = p?;
+        trace::event("claim", p.ticket.id());
+        Some(ClaimedReq { inbox: self.clone(), inner: Some(p) })
     }
 
     /// Release bookkeeping shared by every way a claim ends. With
@@ -756,7 +759,12 @@ impl CompletionInbox {
         // consumer-driven engines it is the consumer that executed the
         // fill. Errors pass through unshaped.
         let result = match (p.dist, result) {
-            (Some(spec), Ok(raw)) => Ok(dist::shape_words(spec, &raw, p.width)),
+            (Some(spec), Ok(raw)) => {
+                // The span wraps the *call site*; `dist` itself stays
+                // inside the determinism fence, instrumentation-free.
+                let _shape = trace::span("shape", p.ticket.id());
+                Ok(dist::shape_words(spec, &raw, p.width))
+            }
             (_, r) => r,
         };
         let completion =
@@ -802,6 +810,12 @@ impl ClaimedReq {
     /// The state-sharing group the claim serializes on.
     pub(crate) fn group(&self) -> usize {
         self.inner.as_ref().map(|p| p.group).unwrap_or(0)
+    }
+
+    /// The claimed ticket's id — the span key correlating this claim's
+    /// trace events with the submit that created it.
+    pub(crate) fn ticket_id(&self) -> u64 {
+        self.inner.as_ref().map(|p| p.ticket.id()).unwrap_or(u64::MAX)
     }
 
     /// Finish engine-side: the completion goes to the shared completion
@@ -1094,7 +1108,10 @@ impl CompletionQueue {
             if let Some(p) = st.take_claimable(&|_, _| true) {
                 drop(st);
                 let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
-                let result = self.execute(claimed.req());
+                let result = {
+                    let _exec = trace::span("execute", claimed.ticket_id());
+                    self.execute(claimed.req())
+                };
                 return Ok(Some(claimed.into_completion(result)));
             }
             st = self.park(st, limit, now);
@@ -1193,7 +1210,10 @@ impl CompletionQueue {
                 let is_target = p.ticket == ticket;
                 drop(st);
                 let claimed = ClaimedReq { inbox: self.inbox.clone(), inner: Some(p) };
-                let result = self.execute(claimed.req());
+                let result = {
+                    let _exec = trace::span("execute", claimed.ticket_id());
+                    self.execute(claimed.req())
+                };
                 if is_target {
                     return Ok(Some(claimed.into_completion(result)));
                 }

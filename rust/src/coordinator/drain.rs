@@ -217,6 +217,14 @@ impl DrainState {
             *c += rows as u64;
         }
         self.base_row += rows as u64;
+        // The fast path only applies with nothing buffered
+        // ([`Self::fast_block_ready`]), so the block's tiles were
+        // obtained from the provider on demand: one fetch miss per
+        // block, on both engines — the native inline generator and the
+        // sharded tile-streaming path land here alike, which is what
+        // keeps the hit/miss accounting engine-agnostic (the
+        // cross-engine parity test pins it).
+        metrics.add(&metrics.fetch_misses, 1);
         metrics.add(&metrics.numbers_delivered, (rows * self.width) as u64);
     }
 

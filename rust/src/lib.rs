@@ -49,6 +49,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod error;
 pub mod fpga;
+pub mod obs;
 pub mod prng;
 pub mod report;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //!   throughput   measure coordinator serving throughput on this host
 //!   serve        serve an engine over TCP (the network serving layer)
 //!   loadgen      hammer a serve endpoint from N connections
+//!   stats        pull a serve endpoint's metrics (or trace) over the wire
 //!   mm1          M/M/1 queue simulation on shaped exponential streams
 //!   jumpdiff     Merton jump-diffusion pricing on shaped normal/Poisson streams
 //!   fpga-model   print the FPGA model design point for n instances
@@ -40,7 +41,7 @@ const VALUE_OPTS: &[&str] = &[
     "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
     "connections", "sessions", "window", "chunk-rows", "numbers", "deadline-ms",
     "fills", "workers", "quota", "tags", "dist", "customers", "lambda", "mu",
-    "paths",
+    "paths", "stats-json", "stats-period-ms", "cursor",
 ];
 
 /// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
@@ -76,6 +77,7 @@ fn main() {
         "throughput" => cmd_throughput(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "stats" => cmd_stats(&args),
         "mm1" => cmd_mm1(&args),
         "jumpdiff" => cmd_jumpdiff(&args),
         "fpga-model" => cmd_fpga_model(&args),
@@ -105,8 +107,9 @@ fn usage() -> String {
      pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      throughput  --streams N --rows N [--engine native|sharded|pjrt] [--completion] [--deadline-ms N] [--artifacts DIR]\n  \
-     serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N] [--workers N] [--quota N]\n  \
-     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--tags A,B,..] [--dist SPEC] [--cancel-storm]\n  \
+     serve       --addr HOST:PORT --streams N [--engine sharded|native|pjrt] [--sessions N] [--window N] [--workers N] [--quota N] [--stats-json PATH] [--stats-period-ms N] [--trace]\n  \
+     loadgen     --addr HOST:PORT [--connections N] [--numbers N/conn] [--chunk-rows N] [--fills N/conn] [--deadline-ms N] [--tags A,B,..] [--dist SPEC] [--cancel-storm] [--stats]\n  \
+     stats       --addr HOST:PORT [--cursor N] [--json] [--trace]\n  \
      mm1         --customers N [--lambda F] [--mu F] [--streams N] [--engine sharded|native]\n  \
      jumpdiff    --paths N [--streams N] [--engine sharded|native]\n  \
      fpga-model  --n INSTANCES\n\n\
@@ -164,8 +167,17 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
             (with_engine_opts(&["streams", "rows", "deadline-ms"]), &["completion"], 0)
         }
         "serve" => (
-            with_engine_opts(&["addr", "streams", "sessions", "window", "workers", "quota"]),
-            &[],
+            with_engine_opts(&[
+                "addr",
+                "streams",
+                "sessions",
+                "window",
+                "workers",
+                "quota",
+                "stats-json",
+                "stats-period-ms",
+            ]),
+            &["trace"],
             0,
         ),
         "loadgen" => (
@@ -179,9 +191,10 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
                 "tags",
                 "dist",
             ],
-            &["cancel-storm"],
+            &["cancel-storm", "stats"],
             0,
         ),
+        "stats" => (vec!["addr", "cursor"], &["json", "trace"], 0),
         "mm1" => (with_engine_opts(&["streams", "customers", "lambda", "mu"]), &[], 0),
         "jumpdiff" => (with_engine_opts(&["streams", "paths"]), &[], 0),
         "fpga-model" => (vec!["n"], &[], 0),
@@ -535,6 +548,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         window: args.get_usize("window", ServeConfig::default().window)?,
         workers: args.get_usize("workers", 0)?,
         quota: args.get_u64("quota", 0)?,
+        stats_json: args.get("stats-json").map(std::path::PathBuf::from),
+        stats_period: std::time::Duration::from_millis(
+            args.get_u64("stats-period-ms", 1000)?.max(10),
+        ),
+        trace: args.flag("trace"),
         ..ServeConfig::default()
     };
     let mut server = Server::start(source, addr, cfg)?;
@@ -588,6 +606,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cancel_storm: args.flag("cancel-storm"),
         tags,
         dist: dist_opt(args),
+        stats: args.flag("stats"),
         ..LoadgenConfig::default()
     };
     let report = thundering::serve::loadgen::run(&cfg)?;
@@ -611,6 +630,63 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         report.cancelled_chunks,
         report.expired_chunks,
     );
+    if let Some(snap) = &report.server_stats {
+        // Server-side percentiles next to the client-side line above:
+        // submit→deliver is measured inside the server, so the gap
+        // between the two is wire + client overhead, not engine time.
+        let h = snap.hist("serve.submit_deliver_ns");
+        let p = |pct: f64| h.map_or(0, |h| h.percentile(pct)) as f64 / 1e6;
+        println!(
+            "server: submit->deliver p50 = {:.3}ms  p95 = {:.3}ms  p99 = {:.3}ms \
+             ({} sub-requests); {} frames out, {} numbers out",
+            p(50.0),
+            p(95.0),
+            p(99.0),
+            h.map_or(0, |h| h.count),
+            snap.counter("serve.frames_out").unwrap_or(0),
+            snap.counter("serve.numbers_out").unwrap_or(0),
+        );
+    }
+    Ok(())
+}
+
+/// `stats`: pull a serve endpoint's own metrics over the wire (the
+/// protocol v5 STATS frame) — full snapshot by default, a delta when
+/// `--cursor` names a previous reply's cursor, the raw JSON document
+/// with `--json`, or the server's span rings as Chrome trace-event
+/// JSON with `--trace` (load the output at chrome://tracing).
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7777");
+    let client = thundering::serve::RemoteClient::connect(addr)?;
+    if args.flag("trace") {
+        println!("{}", client.trace_dump()?);
+        client.bye()?;
+        return Ok(());
+    }
+    let reply = client.stats(args.get_u64("cursor", 0)?)?;
+    client.bye()?;
+    if args.flag("json") {
+        println!("{}", reply.snap.to_json().pretty());
+        return Ok(());
+    }
+    let kind = if reply.delta { "delta" } else { "snapshot" };
+    println!("stats {kind} from {addr} (pass --cursor {} for the next delta)", reply.cursor);
+    for (name, v) in &reply.snap.counters {
+        println!("  {name} = {v}");
+    }
+    for (name, v) in &reply.snap.gauges {
+        println!("  {name} = {v} (gauge)");
+    }
+    for (name, h) in &reply.snap.hists {
+        println!(
+            "  {name}: n = {}  mean = {:.0}  p50 = {}  p95 = {}  p99 = {}",
+            h.count,
+            h.mean(),
+            h.percentile(50.0),
+            h.percentile(95.0),
+            h.percentile(99.0),
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,32 @@
+//! Crate-wide observability (ISSUE 9, DESIGN.md §9): a zero-dependency
+//! metric registry and request-lifecycle tracer shared by the serve
+//! stack, both engines, and the CLI.
+//!
+//! Two halves:
+//!
+//! - [`registry`] — named [`Counter`]s, [`Gauge`]s, and fixed-bucket
+//!   log2 latency [`Hist`]ograms behind a [`Registry`]. Recording is
+//!   lock-free (relaxed atomics on pre-resolved `Arc` handles); the
+//!   registry lock ([`OBS_REGISTRY`][crate::check::lock_order::OBS_REGISTRY],
+//!   rank 94) is touched only at handle creation and snapshot time.
+//!   [`StatsSnapshot`] is the wire-portable point-in-time view; a
+//!   [`DeltaRing`] serves delta-since-cursor queries for pollers.
+//! - [`trace`] — bounded per-thread span rings following one FILL
+//!   from socket read to flush, dumped on demand as Chrome
+//!   trace-event JSON. Disabled by default; a disarmed span costs one
+//!   relaxed atomic load.
+//!
+//! Neither half touches the determinism fence: `dist*`, `prng/`, and
+//! `coordinator/drain.rs` contain no clock reads from this module —
+//! fenced code may bump counters (pure arithmetic, replay-safe) but
+//! never opens spans. All observability locks are leaves (ranks
+//! 94–97), so instrumentation can be added inside any existing
+//! critical section without re-litigating the hierarchy.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    bucket_of, bucket_upper, Counter, DeltaRing, Gauge, Hist, HistSnapshot, Registry,
+    StatsReply, StatsSnapshot, HIST_BUCKETS,
+};

@@ -1,0 +1,666 @@
+//! The metric registry: named counters, gauges, and fixed-bucket log2
+//! histograms behind lock-free handles.
+//!
+//! Handle resolution ([`Registry::counter`] & co.) takes the registry
+//! lock once; the returned `Arc` handle is then a bare relaxed atomic —
+//! hot paths (frame sweeps, completion routing, parker wakes) hold a
+//! pre-resolved handle and never touch a lock or a map. Histograms
+//! quantize into 64 log2 buckets (bucket 0 is exactly `{0}`, bucket
+//! `k ≥ 1` covers `[2^(k-1), 2^k)`, bucket 63 absorbs the open tail),
+//! so recording is two relaxed adds and percentile extraction is a
+//! 64-entry walk over a snapshot — no sample vectors, no allocation
+//! per observation.
+//!
+//! [`DeltaRing`] implements the STATS frame's delta-since-cursor
+//! contract: every assembled snapshot is retained under a fresh cursor;
+//! a request carrying a cursor still in the ring gets the counter-wise
+//! difference (gauges stay absolute), anything else gets a full
+//! snapshot. Counters only grow, so per-name deltas telescope: the sum
+//! of a delta chain equals the final full value, which is what the
+//! snapshot/delta consistency test pins.
+//!
+//! Lock ranks: the registry map is [`OBS_REGISTRY`] and the delta ring
+//! [`OBS_RING`] — leaves of the declared hierarchy, so resolution and
+//! assembly are safe from any thread regardless of what it holds.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::check::lock_order::{OBS_REGISTRY, OBS_RING};
+use crate::sync::{OrderedMutex, OrderedRwLock};
+use crate::util::json::{uint, Json};
+
+/// Log2 buckets per histogram (`u64` value range ⇒ 64 is exhaustive).
+pub const HIST_BUCKETS: usize = 64;
+
+/// How many assembled snapshots [`DeltaRing`] retains for delta
+/// requests; an older cursor degrades to a full snapshot.
+const RING_KEEP: usize = 8;
+
+/// A monotonically increasing counter (relaxed atomics — observability
+/// never orders the data it observes).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time level (outbox depth, queued jobs): settable both
+/// ways, `sub` saturating so a racing decrement can never wrap.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        // Saturating CAS loop: gauges sit off the per-word hot paths
+        // (one update per frame at most), and a wrapped gauge would
+        // poison every later snapshot.
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The log2 bucket index of a value: 0 for 0, else `floor(log2(v)) + 1`
+/// capped at 63 (the open tail bucket).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// The largest value bucket `k` can hold exactly (the representative a
+/// percentile walk reports); the tail bucket reports its lower edge's
+/// doubling point like every other bucket.
+pub fn bucket_upper(k: usize) -> u64 {
+    if k == 0 {
+        0
+    } else {
+        (1u64 << k.min(63)) - 1
+    }
+}
+
+/// A fixed-bucket log2 latency histogram (see the module docs).
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (nanoseconds by crate convention — the
+    /// metric name carries the `_ns` suffix).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One histogram's state at a point in time; merges, subtracts, and
+/// answers percentiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold `other` in (bucket-wise addition — associative and
+    /// commutative, so shard-local histograms merge in any grouping).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// This snapshot minus an `earlier` one (saturating per bucket —
+    /// a torn read across concurrent increments may observe a bucket
+    /// slightly behind its count, never a negative delta).
+    pub fn delta_since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
+    }
+
+    /// Nearest-rank percentile, reported as the containing bucket's
+    /// upper value (the same rank rule as [`crate::util::bench::percentile`],
+    /// so server-side and client-side percentiles are comparable).
+    /// Zero with no observations.
+    pub fn percentile(&self, pct: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((pct / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen > rank {
+                return bucket_upper(k);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    /// Arithmetic mean of the recorded values (exact — `sum` is exact
+    /// even though the buckets quantize). Zero with no observations.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Everything a registry (plus any merged-in engine counters) held at
+/// one instant. Names are sorted; reads are per-atomic relaxed loads,
+/// so the snapshot is per-metric consistent, not a global cut.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl StatsSnapshot {
+    /// Append a counter from outside the registry (the server merges
+    /// each engine's `coordinator::Metrics` snapshot in under
+    /// `engine<i>.<name>` here), keeping the name order sorted.
+    pub fn push_counter(&mut self, name: String, value: u64) {
+        let at = self.counters.partition_point(|(n, _)| *n < name);
+        self.counters.insert(at, (name, value));
+    }
+
+    /// A counter's value by exact name (`None` when absent).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// A histogram's snapshot by exact name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// This snapshot minus an `earlier` one: counters and histograms
+    /// subtract by name (names absent earlier pass through whole);
+    /// gauges are levels and stay absolute.
+    pub fn delta_since(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(n, v)| {
+                let base = earlier.counter(n).unwrap_or(0);
+                (n.clone(), v.saturating_sub(base))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(n, h)| match earlier.hist(n) {
+                Some(base) => (n.clone(), h.delta_since(base)),
+                None => (n.clone(), h.clone()),
+            })
+            .collect();
+        StatsSnapshot { counters, gauges: self.gauges.clone(), hists }
+    }
+
+    /// One JSON document through the shared writer: counters and gauges
+    /// as name → value maps, histograms with count/sum/percentiles and
+    /// a sparse `buckets` map (log2 index → count).
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(n, v)| (n.clone(), uint(*v))).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(n, v)| (n.clone(), uint(*v))).collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(n, h)| {
+                let mut o = BTreeMap::new();
+                o.insert("count".to_string(), uint(h.count));
+                o.insert("sum".to_string(), uint(h.sum));
+                o.insert("p50".to_string(), uint(h.percentile(50.0)));
+                o.insert("p95".to_string(), uint(h.percentile(95.0)));
+                o.insert("p99".to_string(), uint(h.percentile(99.0)));
+                let buckets: BTreeMap<String, Json> = h
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, c)| *c > 0)
+                    .map(|(k, c)| (format!("{k:02}"), uint(*c)))
+                    .collect();
+                o.insert("buckets".to_string(), Json::Obj(buckets));
+                (n.clone(), Json::Obj(o))
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+}
+
+/// Named metric families behind one lock (see the module docs).
+#[derive(Default)]
+struct Families {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<Hist>>,
+}
+
+/// The crate's metric registry.
+pub struct Registry {
+    inner: OrderedRwLock<Families>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { inner: OrderedRwLock::new(&OBS_REGISTRY, Families::default()) }
+    }
+
+    /// Get-or-create the counter `name`. Resolve once, then update the
+    /// handle lock-free.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.inner.read().counters.get(name) {
+            return c.clone();
+        }
+        self.inner
+            .write()
+            .counters
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::new()))
+            .clone()
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.inner.read().gauges.get(name) {
+            return g.clone();
+        }
+        self.inner
+            .write()
+            .gauges
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::new()))
+            .clone()
+    }
+
+    /// Get-or-create the histogram `name`.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        if let Some(h) = self.inner.read().hists.get(name) {
+            return h.clone();
+        }
+        self.inner
+            .write()
+            .hists
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Hist::new()))
+            .clone()
+    }
+
+    /// Read every family out (sorted by name).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let fam = self.inner.read();
+        StatsSnapshot {
+            counters: fam.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+            gauges: fam.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect(),
+            hists: fam.hists.iter().map(|(n, h)| (n.clone(), h.snapshot())).collect(),
+        }
+    }
+}
+
+/// What [`DeltaRing::advance`] hands back for one STATS request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReply {
+    /// Cursor naming the snapshot just retained — pass it back for a
+    /// delta next time.
+    pub cursor: u64,
+    /// Whether `snap` is a delta against the requested cursor (`false`
+    /// = full snapshot: no cursor given, or it aged out of the ring).
+    pub delta: bool,
+    pub snap: StatsSnapshot,
+}
+
+struct RingInner {
+    next_cursor: u64,
+    kept: Vec<(u64, StatsSnapshot)>,
+}
+
+/// Retained snapshots keyed by cursor, for delta-since-cursor STATS
+/// replies (see the module docs).
+pub struct DeltaRing {
+    ring: OrderedMutex<RingInner>,
+}
+
+impl Default for DeltaRing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeltaRing {
+    pub fn new() -> Self {
+        // Cursor 0 is reserved for "no cursor / full snapshot".
+        Self { ring: OrderedMutex::new(&OBS_RING, RingInner { next_cursor: 1, kept: Vec::new() }) }
+    }
+
+    /// Retain `full` under a fresh cursor and answer the request:
+    /// a delta against `since` when that snapshot is still retained,
+    /// the full snapshot otherwise.
+    pub fn advance(&self, full: StatsSnapshot, since: u64) -> StatsReply {
+        let mut ring = self.ring.lock();
+        let base = (since != 0)
+            .then(|| ring.kept.iter().find(|(c, _)| *c == since))
+            .flatten();
+        let (delta, snap) = match base {
+            Some((_, base)) => (true, full.delta_since(base)),
+            None => (false, full.clone()),
+        };
+        let cursor = ring.next_cursor;
+        ring.next_cursor += 1;
+        ring.kept.push((cursor, full));
+        if ring.kept.len() > RING_KEEP {
+            let excess = ring.kept.len() - RING_KEEP;
+            ring.kept.drain(..excess);
+        }
+        StatsReply { cursor, delta, snap }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -----------------------------------------------------------------
+    // histogram core (ISSUE 9 satellite: boundary exactness, merge
+    // associativity, percentile-vs-oracle, snapshot/delta consistency)
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        for k in 1..63usize {
+            let edge = 1u64 << k;
+            assert_eq!(bucket_of(edge - 1), k, "2^{k} - 1 stays in bucket {k}");
+            assert_eq!(bucket_of(edge), k + 1, "2^{k} opens bucket {}", k + 1);
+        }
+        assert_eq!(bucket_of(u64::MAX), 63, "the tail bucket absorbs the top");
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(4), 15);
+        // Round-trip: every bucket's upper value maps back to it.
+        for k in 0..HIST_BUCKETS {
+            assert_eq!(bucket_of(bucket_upper(k)), k);
+        }
+    }
+
+    fn hist_of(values: &[u64]) -> HistSnapshot {
+        let h = Hist::new();
+        for &v in values {
+            h.record(v);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let a = hist_of(&[0, 1, 1, 9]);
+        let b = hist_of(&[2, 300, 4096]);
+        let c = hist_of(&[u64::MAX, 7, 7, 7, 100_000]);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "(a⊕b)⊕c == a⊕(b⊕c)");
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "a⊕b == b⊕a");
+        assert_eq!(ab_c.count, 12);
+        assert_eq!(ab_c.sum, a.sum + b.sum + c.sum);
+    }
+
+    #[test]
+    fn percentiles_match_a_sorted_vector_oracle_up_to_quantization() {
+        // A deterministic spread over many octaves (no wall-clock, no
+        // process randomness — a fixed LCG).
+        let mut x = 0x2545F4914F6CDD1Du64;
+        let mut values = Vec::new();
+        for i in 0..997u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            values.push((x >> 40) >> (i % 17)); // mixed magnitudes
+        }
+        let snap = hist_of(&values);
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for pct in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let rank = ((pct / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+            let exact = sorted[rank.min(sorted.len() - 1)];
+            // Same nearest-rank rule ⇒ the histogram must land in the
+            // exact answer's bucket and report that bucket's upper
+            // value — quantized, never a different rank.
+            assert_eq!(
+                snap.percentile(pct),
+                bucket_upper(bucket_of(exact)),
+                "p{pct}: exact {exact}"
+            );
+        }
+        assert_eq!(hist_of(&[]).percentile(99.0), 0, "empty histogram reports 0");
+        assert_eq!(snap.sum, values.iter().sum::<u64>(), "sum is exact, not quantized");
+    }
+
+    #[test]
+    fn snapshot_delta_consistency_under_concurrent_increments() {
+        let reg = Arc::new(Registry::new());
+        let ring = DeltaRing::new();
+        let total = 20_000u64;
+        let worker = {
+            let reg = reg.clone();
+            std::thread::Builder::new()
+                .name("thng-test-obs".into())
+                .spawn(move || {
+                    let ops = reg.counter("ops");
+                    let lat = reg.hist("lat_ns");
+                    for i in 0..total {
+                        ops.inc();
+                        lat.record(i % 1024);
+                    }
+                })
+                .expect("spawn")
+        };
+        // Chase the worker with a delta chain; counters only grow, so
+        // the deltas must telescope to the final totals exactly.
+        let mut acc_ops = 0u64;
+        let mut acc_lat = 0u64;
+        let mut cursor = 0u64;
+        let mut joined = false;
+        loop {
+            if worker.is_finished() && !joined {
+                worker.join().expect("worker");
+                joined = true;
+                // One more advance below observes the final state.
+            }
+            let reply = ring.advance(reg.snapshot(), cursor);
+            let ops = reply.snap.counter("ops").unwrap_or(0);
+            let lat = reply.snap.hist("lat_ns").map_or(0, |h| h.count);
+            if reply.delta {
+                acc_ops += ops;
+                acc_lat += lat;
+            } else {
+                acc_ops = ops;
+                acc_lat = lat;
+            }
+            if joined {
+                break;
+            }
+        }
+        assert_eq!(acc_ops, total, "counter deltas telescope to the final value");
+        assert_eq!(acc_lat, total, "histogram count deltas telescope too");
+        // And the final full snapshot agrees with the accumulation.
+        let full = ring.advance(reg.snapshot(), 0);
+        assert!(!full.delta);
+        assert_eq!(full.snap.counter("ops"), Some(total));
+        let h = full.snap.hist("lat_ns").expect("hist present");
+        assert_eq!(h.count, total);
+        assert_eq!(h.buckets.iter().sum::<u64>(), total, "buckets account for every record");
+    }
+
+    // -----------------------------------------------------------------
+    // registry + ring behavior
+
+    #[test]
+    fn handles_are_shared_and_snapshots_sorted() {
+        let reg = Registry::new();
+        let a = reg.counter("z.second");
+        let b = reg.counter("z.second");
+        a.add(2);
+        b.inc();
+        reg.counter("a.first").add(7);
+        reg.gauge("depth").set(5);
+        reg.gauge("depth").sub(9); // saturates at zero
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.counters,
+            vec![("a.first".to_string(), 7), ("z.second".to_string(), 3)],
+            "same name = same handle; names sort"
+        );
+        assert_eq!(snap.gauges, vec![("depth".to_string(), 0)]);
+        // Merged-in external counters keep the order sorted.
+        let mut snap = snap;
+        snap.push_counter("m.mid".into(), 1);
+        let names: Vec<&str> = snap.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a.first", "m.mid", "z.second"]);
+    }
+
+    #[test]
+    fn delta_ring_full_on_unknown_cursor_and_bounded_retention() {
+        let reg = Registry::new();
+        let c = reg.counter("n");
+        let ring = DeltaRing::new();
+        c.add(10);
+        let first = ring.advance(reg.snapshot(), 0);
+        assert!(!first.delta, "cursor 0 is always a full snapshot");
+        assert_eq!(first.snap.counter("n"), Some(10));
+        c.add(5);
+        let second = ring.advance(reg.snapshot(), first.cursor);
+        assert!(second.delta);
+        assert_eq!(second.snap.counter("n"), Some(5), "delta, not the absolute 15");
+        // A cursor from the future (or long evicted) degrades to full.
+        let bogus = ring.advance(reg.snapshot(), 9999);
+        assert!(!bogus.delta);
+        assert_eq!(bogus.snap.counter("n"), Some(15));
+        // Push the first cursor out of the bounded ring: full again.
+        for _ in 0..10 {
+            ring.advance(reg.snapshot(), 0);
+        }
+        let evicted = ring.advance(reg.snapshot(), first.cursor);
+        assert!(!evicted.delta, "evicted cursors degrade to a full snapshot");
+    }
+
+    #[test]
+    fn stats_snapshot_json_is_well_formed() {
+        let reg = Registry::new();
+        reg.counter("frames_in").add(3);
+        reg.gauge("outbox").set(2);
+        let h = reg.hist("submit_deliver_ns");
+        h.record(900);
+        h.record(1100);
+        let doc = reg.snapshot().to_json().to_string();
+        let back = crate::util::json::Json::parse(&doc).expect("parses");
+        assert_eq!(
+            back.get("counters").and_then(|c| c.get("frames_in")).and_then(|v| v.as_u64()),
+            Some(3)
+        );
+        let hist = back.get("hists").and_then(|h| h.get("submit_deliver_ns")).expect("hist");
+        assert_eq!(hist.get("count").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(hist.get("sum").and_then(|v| v.as_u64()), Some(2000));
+        // 900 → bucket 10, 1100 → bucket 11; sparse map carries both.
+        let buckets = hist.get("buckets").and_then(|b| b.as_obj()).expect("buckets");
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets.get("10").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(buckets.get("11").and_then(|v| v.as_u64()), Some(1));
+    }
+}

@@ -1,0 +1,313 @@
+//! Request-lifecycle tracing: bounded per-thread span rings dumping as
+//! Chrome trace-event JSON.
+//!
+//! Each instrumented thread owns one fixed-capacity ring of
+//! [`SpanEvent`]s; recording is one uncontended mutex acquisition on
+//! the thread's own ring (rank [`TRACE_RING`], the innermost lock in
+//! the crate — safe from any code path). When tracing is disabled (the
+//! default) a [`span`] is a single relaxed atomic load and nothing
+//! else: no clock read, no allocation, no lock. Rings never grow — a
+//! full ring overwrites its oldest events and counts the loss, so a
+//! long-running server can keep tracing armed without unbounded
+//! memory.
+//!
+//! The span taxonomy follows one FILL through the stack (DESIGN.md §9):
+//! `fill.read` (frame off the socket) → `fill.admit` (quota) →
+//! `fill.submit` (engine submission) → `claim` → `execute` → `shape` →
+//! `flush` (bytes onto the socket). Every event carries the client
+//! request id in `args.req`, so Chrome's flow view groups one
+//! lifecycle across the poll, worker, reactor, and shard threads.
+//!
+//! Timestamps are microseconds since a process-local anchor — strictly
+//! observational, never fed back into scheduling or generation, so the
+//! determinism fence (`dist`/`prng`/`coordinator/drain.rs`) stays
+//! clean: those files contain no tracing calls at all, and thng-check
+//! would flag any `Instant::now` that tried to move in.
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::check::lock_order::{TRACE_LIST, TRACE_RING};
+use crate::sync::OrderedMutex;
+use crate::util::json::{uint, Json};
+
+/// Span events retained per thread; the oldest are overwritten.
+const RING_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Arm or disarm recording, process-wide. Arming also fixes the
+/// timestamp anchor, so the first trace starts near t=0.
+pub fn set_enabled(on: bool) {
+    if on {
+        anchor();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is recording armed?
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    anchor().elapsed().as_micros() as u64
+}
+
+/// One completed span (or instantaneous event, `dur_us == 0`).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Client request id (0 when the event is not request-scoped).
+    pub req: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+struct RingBuf {
+    buf: Vec<SpanEvent>,
+    /// Next write position once `buf` reaches capacity.
+    next: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+}
+
+struct Ring {
+    thread: String,
+    events: OrderedMutex<RingBuf>,
+}
+
+impl Ring {
+    fn push(&self, ev: SpanEvent) {
+        let mut events = self.events.lock();
+        if events.buf.len() < RING_CAP {
+            events.buf.push(ev);
+        } else {
+            let at = events.next;
+            if let Some(slot) = events.buf.get_mut(at) {
+                *slot = ev;
+            }
+            events.next = (at + 1) % RING_CAP;
+            events.dropped += 1;
+        }
+    }
+
+    /// Oldest-first copy of the ring.
+    fn ordered(&self) -> (Vec<SpanEvent>, u64) {
+        let events = self.events.lock();
+        let mut out = Vec::with_capacity(events.buf.len());
+        out.extend_from_slice(&events.buf[events.next..]);
+        out.extend_from_slice(&events.buf[..events.next]);
+        (out, events.dropped)
+    }
+
+    fn clear(&self) {
+        let mut events = self.events.lock();
+        events.buf.clear();
+        events.next = 0;
+        events.dropped = 0;
+    }
+}
+
+struct GlobalList {
+    list: OrderedMutex<Vec<Arc<Ring>>>,
+}
+
+fn global() -> &'static GlobalList {
+    static LIST: OnceLock<GlobalList> = OnceLock::new();
+    LIST.get_or_init(|| GlobalList { list: OrderedMutex::new(&TRACE_LIST, Vec::new()) })
+}
+
+thread_local! {
+    static MY_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+fn record(ev: SpanEvent) {
+    MY_RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let thread = std::thread::current()
+                .name()
+                .unwrap_or("unnamed")
+                .to_string();
+            let ring = Arc::new(Ring {
+                thread,
+                events: OrderedMutex::new(
+                    &TRACE_RING,
+                    RingBuf { buf: Vec::new(), next: 0, dropped: 0 },
+                ),
+            });
+            global().list.lock().push(ring.clone());
+            ring
+        });
+        ring.push(ev);
+    });
+}
+
+/// A live span: records one [`SpanEvent`] with its measured duration
+/// when dropped. Inert (single atomic load, nothing captured) when
+/// tracing is disarmed at creation.
+pub struct Span {
+    name: &'static str,
+    req: u64,
+    start_us: u64,
+    armed: bool,
+}
+
+/// Open a span; the event is recorded when the returned guard drops.
+#[inline]
+pub fn span(name: &'static str, req: u64) -> Span {
+    if !is_enabled() {
+        return Span { name, req, start_us: 0, armed: false };
+    }
+    Span { name, req, start_us: now_us(), armed: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            let start_us = self.start_us;
+            let dur_us = now_us().saturating_sub(start_us);
+            record(SpanEvent { name: self.name, req: self.req, start_us, dur_us });
+        }
+    }
+}
+
+/// Record an instantaneous event (zero duration).
+#[inline]
+pub fn event(name: &'static str, req: u64) {
+    if is_enabled() {
+        let t = now_us();
+        record(SpanEvent { name, req, start_us: t, dur_us: 0 });
+    }
+}
+
+/// Dump every thread's ring as one Chrome trace-event JSON document
+/// (load it at `chrome://tracing` or in Perfetto). Complete "X" events
+/// plus one "M" metadata row per thread carrying its `thng-` name;
+/// `args.req` groups a request's lifecycle across threads.
+pub fn dump_json() -> String {
+    let rings: Vec<Arc<Ring>> = global().list.lock().clone();
+    let mut events: Vec<Json> = Vec::new();
+    let mut dropped_total = 0u64;
+    for (tid, ring) in rings.iter().enumerate() {
+        let tid = tid as u64 + 1;
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("name".to_string(), Json::Str("thread_name".into()));
+        meta.insert("ph".to_string(), Json::Str("M".into()));
+        meta.insert("pid".to_string(), uint(1));
+        meta.insert("tid".to_string(), uint(tid));
+        let mut args = std::collections::BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(ring.thread.clone()));
+        meta.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(meta));
+        let (evs, dropped) = ring.ordered();
+        dropped_total += dropped;
+        for ev in evs {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(ev.name.to_string()));
+            o.insert("cat".to_string(), Json::Str("thng".into()));
+            o.insert("ph".to_string(), Json::Str("X".into()));
+            o.insert("ts".to_string(), uint(ev.start_us));
+            o.insert("dur".to_string(), uint(ev.dur_us));
+            o.insert("pid".to_string(), uint(1));
+            o.insert("tid".to_string(), uint(tid));
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("req".to_string(), uint(ev.req));
+            o.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(o));
+        }
+    }
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".into()));
+    top.insert("droppedEvents".to_string(), uint(dropped_total));
+    Json::Obj(top).to_string()
+}
+
+/// Drop every retained event (rings stay registered). Test isolation
+/// and the `--stats-json` exporter's per-period dumps use this.
+pub fn clear() {
+    let rings: Vec<Arc<Ring>> = global().list.lock().clone();
+    for ring in rings {
+        ring.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test exercises the whole module: the global enable flag and
+    /// ring list are process-wide, so independent `#[test]`s would race
+    /// each other's clear()/set_enabled() calls.
+    #[test]
+    fn spans_record_dump_and_bound_when_enabled_only() {
+        // Disarmed: spans and events are inert.
+        set_enabled(false);
+        clear();
+        {
+            let _s = span("fill.read", 1);
+            event("noop", 1);
+        }
+        assert!(!dump_json().contains("\"fill.read\""), "disarmed spans record nothing");
+
+        // Armed: a span records on drop with its request id.
+        set_enabled(true);
+        {
+            let _s = span("fill.read", 42);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        event("fill.admit", 42);
+        let doc = dump_json();
+        let back = Json::parse(&doc).expect("chrome trace json parses");
+        let evs = back.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        let read = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("fill.read"))
+            .expect("span recorded");
+        assert_eq!(read.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert!(read.get("dur").and_then(|d| d.as_u64()).unwrap_or(0) >= 1_000, "{doc}");
+        assert_eq!(
+            read.get("args").and_then(|a| a.get("req")).and_then(|r| r.as_u64()),
+            Some(42)
+        );
+        assert!(
+            evs.iter()
+                .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name")),
+            "thread metadata row present"
+        );
+        assert!(
+            evs.iter()
+                .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("fill.admit")),
+            "instant event recorded"
+        );
+
+        // Bounded: over-filling the ring drops oldest, never grows.
+        clear();
+        for i in 0..(RING_CAP as u64 + 100) {
+            event("tick", i);
+        }
+        let back = Json::parse(&dump_json()).expect("parses");
+        let evs = back.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        let ticks: Vec<u64> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("tick"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("req")).and_then(|r| r.as_u64()))
+            .collect();
+        assert_eq!(ticks.len(), RING_CAP, "ring never grows past capacity");
+        assert_eq!(*ticks.first().expect("nonempty"), 100, "oldest 100 overwritten");
+        assert_eq!(*ticks.last().expect("nonempty"), RING_CAP as u64 + 99);
+        assert_eq!(back.get("droppedEvents").and_then(|d| d.as_u64()), Some(100));
+
+        set_enabled(false);
+        clear();
+    }
+}

@@ -40,6 +40,7 @@ use crate::coordinator::{
 };
 use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::obs::{StatsReply, StatsSnapshot};
 use crate::serve::protocol::{self, Frame};
 use crate::sync::{OrderedGuard, OrderedMutex, OrderedRwLock};
 
@@ -86,6 +87,11 @@ struct ReadHalf {
     /// Lease grants read while looking for something else:
     /// `req → (h, xs_origin, server row cursor)`.
     leases: HashMap<u64, (u64, [u32; 4], u64)>,
+    /// STATS replies read while looking for something else:
+    /// `req → (cursor, delta, snapshot)`.
+    stats: HashMap<u64, (u64, bool, StatsSnapshot)>,
+    /// TRACE dumps read while looking for something else.
+    traces: HashMap<u64, String>,
 }
 
 /// The socket's write side plus the request-id counter.
@@ -188,6 +194,8 @@ impl RemoteClient {
                 r: reader,
                 chunks: HashMap::new(),
                 leases: HashMap::new(),
+                stats: HashMap::new(),
+                traces: HashMap::new(),
             }),
             write: OrderedMutex::new(&CLIENT_WRITE, WriteHalf { w: writer, next_req: 0 }),
             info,
@@ -300,6 +308,12 @@ impl RemoteClient {
                 Some(Frame::Err { req: r, seq, last, error }) => {
                     stash_chunk(&mut rd, r, Chunk { seq, last, result: Err(error) });
                 }
+                Some(Frame::Stats { req: r, cursor, delta, snap }) => {
+                    rd.stats.insert(r, (cursor, delta, snap));
+                }
+                Some(Frame::Trace { req: r, json }) => {
+                    rd.traces.insert(r, json);
+                }
                 Some(other) => {
                     return Err(Error::Protocol(format!(
                         "unexpected {} frame",
@@ -308,6 +322,47 @@ impl RemoteClient {
                 }
                 None => return Err(Error::Protocol("server closed the connection".into())),
             }
+        }
+    }
+
+    /// One server-side stats snapshot (or delta) over the wire — the
+    /// STATS request/reply exchange. `cursor` 0 asks for a full
+    /// snapshot; passing a previous reply's cursor asks for the
+    /// counter-wise delta since it (the server degrades an evicted or
+    /// unknown cursor back to a full snapshot — check
+    /// [`StatsReply::delta`]).
+    pub fn stats(&self, cursor: u64) -> Result<StatsReply, Error> {
+        let req = {
+            let mut w = self.lock_write();
+            let req = w.alloc_req();
+            w.send(&Frame::StatsReq { req, cursor })?;
+            req
+        };
+        let mut rd = self.lock_read();
+        loop {
+            if let Some((cursor, delta, snap)) = rd.stats.remove(&req) {
+                return Ok(StatsReply { cursor, delta, snap });
+            }
+            read_misc(&mut rd)?;
+        }
+    }
+
+    /// The server's request-lifecycle trace buffer as Chrome
+    /// trace-event JSON (empty `traceEvents` unless the server runs
+    /// with tracing armed — `serve --trace`).
+    pub fn trace_dump(&self) -> Result<String, Error> {
+        let req = {
+            let mut w = self.lock_write();
+            let req = w.alloc_req();
+            w.send(&Frame::TraceReq { req })?;
+            req
+        };
+        let mut rd = self.lock_read();
+        loop {
+            if let Some(json) = rd.traces.remove(&req) {
+                return Ok(json);
+            }
+            read_misc(&mut rd)?;
         }
     }
 
@@ -385,6 +440,12 @@ impl RemoteClient {
                 Some(Frame::Leased { req: r, h, xs_origin, cursor }) => {
                     rd.leases.insert(r, (h, xs_origin, cursor));
                 }
+                Some(Frame::Stats { req: r, cursor, delta, snap }) => {
+                    rd.stats.insert(r, (cursor, delta, snap));
+                }
+                Some(Frame::Trace { req: r, json }) => {
+                    rd.traces.insert(r, json);
+                }
                 Some(other) => {
                     return Err(Error::Protocol(format!(
                         "unexpected {} frame",
@@ -416,8 +477,14 @@ impl RemoteClient {
                 Some(Frame::Err { req, error, .. }) if req == protocol::CONNECTION_REQ => {
                     return Err(error)
                 }
-                // Undrained fills and leases flush past us.
-                Some(Frame::Data { .. } | Frame::Err { .. } | Frame::Leased { .. }) => {}
+                // Undrained fills, leases, and stats flush past us.
+                Some(
+                    Frame::Data { .. }
+                    | Frame::Err { .. }
+                    | Frame::Leased { .. }
+                    | Frame::Stats { .. }
+                    | Frame::Trace { .. },
+                ) => {}
                 Some(other) => {
                     return Err(Error::Protocol(format!(
                         "unexpected {} frame before BYE_ACK",
@@ -443,6 +510,40 @@ impl RemoteClient {
 /// Park a reply chunk for its own harvester.
 fn stash_chunk(rd: &mut ReadHalf, req: u64, chunk: Chunk) {
     rd.chunks.entry(req).or_default().push_back(chunk);
+}
+
+/// Read one frame and stash it for its harvester — the shared read step
+/// of the non-fill request/reply exchanges (STATS, TRACE), which
+/// multiplex over the same socket as in-flight fills and leases.
+fn read_misc(rd: &mut ReadHalf) -> Result<(), Error> {
+    match protocol::read_frame(&mut rd.r)? {
+        Some(Frame::Leased { req, h, xs_origin, cursor }) => {
+            rd.leases.insert(req, (h, xs_origin, cursor));
+        }
+        Some(Frame::Err { req, error, .. }) if req == protocol::CONNECTION_REQ => {
+            return Err(error)
+        }
+        Some(Frame::Data { req, seq, last, values }) => {
+            stash_chunk(rd, req, Chunk { seq, last, result: Ok(values) });
+        }
+        Some(Frame::Err { req, seq, last, error }) => {
+            stash_chunk(rd, req, Chunk { seq, last, result: Err(error) });
+        }
+        Some(Frame::Stats { req, cursor, delta, snap }) => {
+            rd.stats.insert(req, (cursor, delta, snap));
+        }
+        Some(Frame::Trace { req, json }) => {
+            rd.traces.insert(req, json);
+        }
+        Some(other) => {
+            return Err(Error::Protocol(format!(
+                "unexpected {} frame",
+                protocol::frame_name(&other)
+            )))
+        }
+        None => return Err(Error::Protocol("server closed the connection".into())),
+    }
+    Ok(())
 }
 
 /// Validate the reply shape of a `repeat == 1` fill (exactly one chunk,

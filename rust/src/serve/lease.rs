@@ -112,17 +112,22 @@ impl LeaseTable {
 
     /// Record freshly generated values for a tracked key (no-op for
     /// untracked ones). `values.len()` is a whole number of rows.
-    pub(crate) fn append(&self, key: RetainKey, values: &[u32], width: u64) {
+    /// Returns the rows evicted from the front to stay within the ring
+    /// bound (the `serve.lease.evicted_rows` counter's feed).
+    pub(crate) fn append(&self, key: RetainKey, values: &[u32], width: u64) -> u64 {
         let mut inner = self.lock();
-        let Some(state) = inner.get_mut(&key) else { return };
+        let Some(state) = inner.get_mut(&key) else { return 0 };
         state.cursor_rows += values.len() as u64 / width.max(1);
         state.ring.extend(values.iter().copied());
+        let mut evicted = 0u64;
         while state.ring.len() > state.cap_values {
             // Evict whole rows from the front so replays stay row-aligned.
             for _ in 0..width {
                 state.ring.pop_front();
             }
+            evicted += 1;
         }
+        evicted
     }
 }
 
@@ -157,7 +162,8 @@ mod tests {
         let t = (ReqTarget::Stream(0), None);
         let table = LeaseTable::new(2); // retain 2 rows of width 1
         table.resume(t, 0, 1).expect("track");
-        table.append(t, &[10, 11, 12, 13], 1); // rows 0..4, ring keeps [12, 13]
+        // Rows 0..4, ring keeps [12, 13]: two rows evicted.
+        assert_eq!(table.append(t, &[10, 11, 12, 13], 1), 2);
         // Cursor ahead of the server is a client bug.
         let err = table.resume(t, 9, 1).expect_err("ahead");
         assert!(matches!(err, Error::InvalidConfig(_)));
@@ -177,7 +183,8 @@ mod tests {
         let t = (ReqTarget::Group(0), None);
         let table = LeaseTable::new(2); // 2 rows of width 3 = 6 values
         table.resume(t, 0, 3).expect("track");
-        table.append(t, &(0..9).collect::<Vec<u32>>(), 3); // 3 rows
+        // 3 rows into a 2-row ring: row 0 evicted whole.
+        assert_eq!(table.append(t, &(0..9).collect::<Vec<u32>>(), 3), 1);
         let (cursor, replay) = table.resume(t, 1, 3).expect("resume");
         assert_eq!(cursor, 3);
         // Rows 1 and 2 survive; row 0 was evicted whole.

@@ -74,6 +74,12 @@ pub struct LoadgenConfig {
     /// accounts for the spec's raw-draw amplification so every
     /// sub-request still fits the server's `max_fill`.
     pub dist: Option<DistSpec>,
+    /// After the run, pull the server's own STATS snapshot over one
+    /// extra connection into [`LoadgenReport::server_stats`], so the
+    /// CLI can print server-side submit→deliver percentiles next to
+    /// the client-side ones (any gap between the two is wire/client
+    /// overhead, not engine time).
+    pub stats: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -90,6 +96,7 @@ impl Default for LoadgenConfig {
             connect_backoff: Duration::from_millis(100),
             tags: Vec::new(),
             dist: None,
+            stats: false,
         }
     }
 }
@@ -114,6 +121,9 @@ pub struct LoadgenReport {
     /// fills are excluded so the percentiles describe served work,
     /// not time-to-fail-fast.
     pub fill_latencies_s: Vec<f64>,
+    /// The server's own STATS snapshot, pulled over one extra
+    /// connection after the run when [`LoadgenConfig::stats`] is set.
+    pub server_stats: Option<crate::obs::StatsSnapshot>,
 }
 
 impl LoadgenReport {
@@ -329,6 +339,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
         expired_chunks: 0,
         seconds,
         fill_latencies_s: Vec::new(),
+        server_stats: None,
     };
     for r in results {
         let c = r?;
@@ -337,6 +348,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, Error> {
         report.cancelled_chunks += c.cancelled;
         report.expired_chunks += c.expired;
         report.fill_latencies_s.extend(c.latencies_s);
+    }
+    if cfg.stats {
+        // One extra session, after the load has drained, so the
+        // snapshot covers the whole run and costs it nothing.
+        let probe = connect_retry(&cfg.addr, cfg.connect_attempts, cfg.connect_backoff)?;
+        report.server_stats = Some(probe.stats(0)?.snap);
+        probe.bye()?;
     }
     Ok(report)
 }

@@ -53,7 +53,18 @@
 //!   `loadgen` CLI command, the serve benchmark row, and the CI smoke
 //!   test — it reports per-fill latency percentiles, assigns QoS tags
 //!   round-robin, bounds its connect retries, and can run with
-//!   deadlines and a cancel storm.
+//!   deadlines and a cancel storm; with `stats` set it also pulls the
+//!   server's own STATS snapshot so server-side submit→deliver
+//!   percentiles print next to the client-side ones.
+//! * Observability rides the same socket ([`crate::obs`], protocol
+//!   v5): a STATS frame answers with the server's full metric
+//!   snapshot — counters, gauges, and log₂ latency histograms,
+//!   per-session and per-tenant-tag families included — or a delta
+//!   since a previous snapshot's cursor, and a TRACE frame dumps the
+//!   server's span rings as Chrome trace-event JSON. Both are served
+//!   inline by the worker pool like any other frame; assembly takes
+//!   locks strictly one at a time, and the hot serve paths touch only
+//!   pre-resolved lock-free counter handles.
 //!
 //! **No idle spin.** Every serve thread parks on a generation-counted
 //! condvar ([`server`]'s `Parker`) when it has nothing to do: the poll
@@ -88,6 +99,7 @@ mod sched;
 pub mod server;
 mod session;
 
+pub use crate::obs::{StatsReply, StatsSnapshot};
 pub use client::{Chunk, RemoteClient, RemoteSource, ServerInfo};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use protocol::{Frame, VERSION};

@@ -17,8 +17,21 @@
 //! | `DATA`    | s→c | req id, seq `u32`, last `u8`, count `u32`, values (`count × u32`) |
 //! | `ERR`     | s→c | req id, seq, last, error code `u16` + 2×`u64` + message str  |
 //! | `CANCEL`  | c→s | req id — abort the fill's not-yet-executed sub-requests      |
+//! | `STATS_REQ` | c→s | req id, cursor `u64` (0 = full snapshot)                   |
+//! | `STATS`   | s→c | req id, cursor, delta `u8`, counters, gauges, histograms     |
+//! | `TRACE_REQ` | c→s | req id                                                     |
+//! | `TRACE`   | s→c | req id, Chrome trace-event JSON str                          |
 //! | `BYE`     | c→s | (empty)                                                      |
 //! | `BYE_ACK` | s→c | (empty)                                                      |
+//!
+//! A STATS payload carries three `u32`-counted lists: counters and
+//! gauges as `(str name, u64 value)` pairs, histograms as `(str name,
+//! u64 count, u64 sum, u32 n_buckets, n × (u8 log2-index, u64 count))`
+//! — buckets are sparse (only nonzero ones cross the wire), so an idle
+//! histogram costs its name plus 21 bytes. The reply cursor names the
+//! snapshot the server just retained; echo it in the next STATS_REQ for
+//! a delta (`delta = 1`), send 0 (or an evicted cursor) for a full
+//! snapshot.
 //!
 //! A `dist` field is `u8 kind` (0 = raw fill) followed, for kind ≠ 0,
 //! by two `u64` carrying the [`DistSpec`] parameters as `f64` bits; the
@@ -38,14 +51,17 @@ use std::io::{Read, Write};
 use crate::coordinator::ReqTarget;
 use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::obs::{HistSnapshot, StatsSnapshot, HIST_BUCKETS};
 
 /// Protocol version spoken by this crate (negotiated in HELLO/WELCOME).
 /// v2 added the request-lifecycle surface: the FILL deadline field and
 /// the CANCEL frame. v3 added the multi-tenant surface: the FILL QoS
 /// tag, tracked LEASEs with resumption cursors, and the reserved-req-id
 /// rejection. v4 added distribution shaping: the FILL/LEASE dist field
-/// (DATA then carries shaped rows in the [`crate::dist`] encoding).
-pub const VERSION: u16 = 4;
+/// (DATA then carries shaped rows in the [`crate::dist`] encoding). v5
+/// added observability: STATS_REQ/STATS (snapshot + delta-since-cursor
+/// metric export) and TRACE_REQ/TRACE (Chrome trace-event dump).
+pub const VERSION: u16 = 5;
 
 /// Connection magic, first bytes of every HELLO.
 pub const MAGIC: [u8; 4] = *b"THNG";
@@ -75,6 +91,10 @@ const K_ERR: u8 = 7;
 const K_BYE: u8 = 8;
 const K_BYE_ACK: u8 = 9;
 const K_CANCEL: u8 = 10;
+const K_STATS_REQ: u8 = 11;
+const K_STATS: u8 = 12;
+const K_TRACE_REQ: u8 = 13;
+const K_TRACE: u8 = 14;
 
 /// One decoded wire frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -210,6 +230,43 @@ pub enum Frame {
         /// What went wrong.
         error: Error,
     },
+    /// Ask for the server's metric export (client → server). Answered
+    /// by exactly one STATS frame; interleaves freely with fills.
+    StatsReq {
+        /// Client-chosen request id, echoed in the reply.
+        req: u64,
+        /// Cursor from a previous STATS reply for a delta, or 0 for a
+        /// full snapshot.
+        cursor: u64,
+    },
+    /// The server's metric export (server → client).
+    Stats {
+        /// The STATS_REQ's request id.
+        req: u64,
+        /// Cursor naming the snapshot the server retained for this
+        /// reply — echo it next time for a delta.
+        cursor: u64,
+        /// Whether `snap` is a delta against the requested cursor
+        /// (counters and histogram buckets are differences; gauges are
+        /// always absolute levels).
+        delta: bool,
+        /// The metric families (sorted by name).
+        snap: StatsSnapshot,
+    },
+    /// Ask for the server's request-lifecycle trace dump (client →
+    /// server). Answered by exactly one TRACE frame; empty rings (or
+    /// tracing disabled) still answer, with an event-less document.
+    TraceReq {
+        /// Client-chosen request id, echoed in the reply.
+        req: u64,
+    },
+    /// The server's trace dump (server → client).
+    Trace {
+        /// The TRACE_REQ's request id.
+        req: u64,
+        /// Chrome trace-event JSON (load at `chrome://tracing`).
+        json: String,
+    },
     /// Graceful goodbye (client → server): the server flushes every
     /// in-flight reply, answers BYE_ACK, and closes.
     Bye,
@@ -228,6 +285,10 @@ pub(crate) fn frame_name(frame: &Frame) -> &'static str {
         Frame::Data { .. } => "DATA",
         Frame::Err { .. } => "ERR",
         Frame::Cancel { .. } => "CANCEL",
+        Frame::StatsReq { .. } => "STATS_REQ",
+        Frame::Stats { .. } => "STATS",
+        Frame::TraceReq { .. } => "TRACE_REQ",
+        Frame::Trace { .. } => "TRACE",
         Frame::Bye => "BYE",
         Frame::ByeAck => "BYE_ACK",
     }
@@ -300,6 +361,39 @@ fn put_error(buf: &mut Vec<u8>, e: &Error) {
     put_u64(buf, a);
     put_u64(buf, b);
     put_str(buf, msg);
+}
+
+/// Counters and gauges as counted `(name, value)` lists, histograms
+/// with sparse nonzero buckets (see the module docs for the layout).
+fn put_snapshot(buf: &mut Vec<u8>, snap: &StatsSnapshot) {
+    put_u32(buf, snap.counters.len() as u32);
+    for (name, v) in &snap.counters {
+        put_str(buf, name);
+        put_u64(buf, *v);
+    }
+    put_u32(buf, snap.gauges.len() as u32);
+    for (name, v) in &snap.gauges {
+        put_str(buf, name);
+        put_u64(buf, *v);
+    }
+    put_u32(buf, snap.hists.len() as u32);
+    for (name, h) in &snap.hists {
+        put_str(buf, name);
+        put_u64(buf, h.count);
+        put_u64(buf, h.sum);
+        let nonzero: Vec<(usize, u64)> = h
+            .buckets
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(_, c)| c > 0)
+            .collect();
+        put_u32(buf, nonzero.len() as u32);
+        for (k, c) in nonzero {
+            buf.push(k as u8);
+            put_u64(buf, c);
+        }
+    }
 }
 
 fn decode_error(code: u16, a: u64, b: u64, msg: String) -> Error {
@@ -396,6 +490,28 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), Error> {
             put_u32(&mut p, *seq);
             p.push(u8::from(*last));
             put_error(&mut p, error);
+        }
+        Frame::StatsReq { req, cursor } => {
+            p.push(K_STATS_REQ);
+            put_u64(&mut p, *req);
+            put_u64(&mut p, *cursor);
+        }
+        Frame::Stats { req, cursor, delta, snap } => {
+            p.push(K_STATS);
+            put_u64(&mut p, *req);
+            put_u64(&mut p, *cursor);
+            p.push(u8::from(*delta));
+            put_snapshot(&mut p, snap);
+        }
+        Frame::TraceReq { req } => {
+            p.push(K_TRACE_REQ);
+            put_u64(&mut p, *req);
+        }
+        Frame::Trace { req, json } => {
+            p.reserve(13 + json.len());
+            p.push(K_TRACE);
+            put_u64(&mut p, *req);
+            put_str(&mut p, json);
         }
         Frame::Bye => p.push(K_BYE),
         Frame::ByeAck => p.push(K_BYE_ACK),
@@ -512,6 +628,44 @@ impl<'a> Dec<'a> {
         }
     }
 
+    /// Decode a STATS payload's metric families. List lengths are
+    /// implicitly bounded by [`MAX_FRAME`] (every element costs bytes),
+    /// so a garbage count runs out of payload and fails typed.
+    fn snapshot(&mut self) -> Result<StatsSnapshot, Error> {
+        let n = self.u32()? as usize;
+        let mut counters = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let name = self.string()?;
+            counters.push((name, self.u64()?));
+        }
+        let n = self.u32()? as usize;
+        let mut gauges = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let name = self.string()?;
+            gauges.push((name, self.u64()?));
+        }
+        let n = self.u32()? as usize;
+        let mut hists = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let name = self.string()?;
+            let count = self.u64()?;
+            let sum = self.u64()?;
+            let mut h = HistSnapshot { buckets: [0; HIST_BUCKETS], count, sum };
+            let nb = self.u32()? as usize;
+            for _ in 0..nb {
+                let k = self.u8()? as usize;
+                let c = self.u64()?;
+                let slot = h
+                    .buckets
+                    .get_mut(k)
+                    .ok_or_else(|| Error::Protocol(format!("bucket index {k} out of range")))?;
+                *slot = c;
+            }
+            hists.push((name, h));
+        }
+        Ok(StatsSnapshot { counters, gauges, hists })
+    }
+
     fn finish(self) -> Result<(), Error> {
         if self.b.is_empty() {
             Ok(())
@@ -522,7 +676,8 @@ impl<'a> Dec<'a> {
 }
 
 /// Reject the reserved [`CONNECTION_REQ`] sentinel in client-chosen
-/// request ids (LEASE/FILL/CANCEL): letting it through would corrupt the
+/// request ids (LEASE/FILL/CANCEL/STATS_REQ/TRACE_REQ): letting it
+/// through would corrupt the
 /// server's reply routing — its DATA/ERR frames would be
 /// indistinguishable from connection-level errors.
 fn client_req(req: u64) -> Result<u64, Error> {
@@ -614,6 +769,15 @@ pub(crate) fn decode_frame(payload: &[u8]) -> Result<Frame, Error> {
             let msg = d.string()?;
             Frame::Err { req, seq, last, error: decode_error(code, a, b, msg) }
         }
+        K_STATS_REQ => Frame::StatsReq { req: client_req(d.u64()?)?, cursor: d.u64()? },
+        K_STATS => Frame::Stats {
+            req: d.u64()?,
+            cursor: d.u64()?,
+            delta: d.u8()? != 0,
+            snap: d.snapshot()?,
+        },
+        K_TRACE_REQ => Frame::TraceReq { req: client_req(d.u64()?)? },
+        K_TRACE => Frame::Trace { req: d.u64()?, json: d.string()? },
         K_BYE => Frame::Bye,
         K_BYE_ACK => Frame::ByeAck,
         k => return Err(Error::Protocol(format!("unknown frame kind {k}"))),
@@ -710,6 +874,34 @@ mod tests {
             });
         }
         roundtrip(Frame::Cancel { req: 9 });
+        roundtrip(Frame::StatsReq { req: 13, cursor: 0 });
+        roundtrip(Frame::StatsReq { req: 14, cursor: 77 });
+        roundtrip(Frame::Stats {
+            req: 13,
+            cursor: 78,
+            delta: true,
+            snap: StatsSnapshot::default(),
+        });
+        let hist = HistSnapshot {
+            buckets: std::array::from_fn(|k| u64::from(matches!(k, 10 | 11 | 63))),
+            count: 3,
+            sum: 900 + 1100 + u64::MAX / 2,
+        };
+        roundtrip(Frame::Stats {
+            req: 13,
+            cursor: 79,
+            delta: false,
+            snap: StatsSnapshot {
+                counters: vec![
+                    ("serve.frames_in".into(), 42),
+                    ("serve.rejects.quota".into(), u64::MAX),
+                ],
+                gauges: vec![("serve.outbox_depth".into(), 7)],
+                hists: vec![("serve.submit_deliver_ns".into(), hist)],
+            },
+        });
+        roundtrip(Frame::TraceReq { req: 15 });
+        roundtrip(Frame::Trace { req: 15, json: "{\"traceEvents\":[]}".into() });
         roundtrip(Frame::Data { req: 9, seq: 3, last: false, values: vec![] });
         roundtrip(Frame::Data {
             req: 9,
@@ -804,6 +996,8 @@ mod tests {
                 dist: None,
             },
             Frame::Cancel { req: CONNECTION_REQ },
+            Frame::StatsReq { req: CONNECTION_REQ, cursor: 0 },
+            Frame::TraceReq { req: CONNECTION_REQ },
         ] {
             let mut buf = Vec::new();
             write_frame(&mut buf, &frame).unwrap();
@@ -879,6 +1073,29 @@ mod tests {
         p.extend_from_slice(&0u64.to_le_bytes());
         p.extend_from_slice(&0u64.to_le_bytes());
         assert!(matches!(decode_frame(&p), Err(Error::Protocol(_))));
+    }
+
+    #[test]
+    fn stats_bucket_index_out_of_range_is_rejected() {
+        // A STATS histogram entry claiming log2 bucket 64 (only 0..=63
+        // exist) must fail typed instead of indexing out of bounds.
+        let mut p = vec![K_STATS];
+        p.extend_from_slice(&1u64.to_le_bytes()); // req
+        p.extend_from_slice(&2u64.to_le_bytes()); // cursor
+        p.push(0); // delta
+        p.extend_from_slice(&0u32.to_le_bytes()); // no counters
+        p.extend_from_slice(&0u32.to_le_bytes()); // no gauges
+        p.extend_from_slice(&1u32.to_le_bytes()); // one hist
+        p.extend_from_slice(&1u32.to_le_bytes()); // name "h"
+        p.push(b'h');
+        p.extend_from_slice(&1u64.to_le_bytes()); // count
+        p.extend_from_slice(&5u64.to_le_bytes()); // sum
+        p.extend_from_slice(&1u32.to_le_bytes()); // one bucket entry
+        p.push(64); // index out of range
+        p.extend_from_slice(&1u64.to_le_bytes());
+        let err = decode_frame(&p).expect_err("bucket 64 must fail");
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert!(format!("{err}").contains("bucket index 64"), "{err}");
     }
 
     #[test]

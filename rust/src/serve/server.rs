@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 
 use crate::check::lock_order::{CLOSED, PARK, ROUTES, SESSIONS, WORKQ};
 use crate::coordinator::{Completion, CompletionQueue, ReqTarget, StreamSource, Ticket};
+use crate::obs::{trace, Counter, DeltaRing, Gauge, Hist, Registry, StatsReply, StatsSnapshot};
 use crate::sync::{OrderedGuard, OrderedMutex};
 use crate::error::Error;
 use crate::serve::lease::{LeaseTable, RetainKey};
@@ -83,6 +84,16 @@ pub struct ServeConfig {
     /// (a LEASE with a resume cursor) so a reconnecting client can
     /// replay what a dropped connection lost. Default 2¹⁶.
     pub retain_rows: u64,
+    /// Periodically export the full stats snapshot as JSON to this path
+    /// (the `--stats-json` CLI flag). `None` (the default) spawns no
+    /// exporter thread.
+    pub stats_json: Option<std::path::PathBuf>,
+    /// Export period for [`stats_json`](Self::stats_json). Default 1 s.
+    pub stats_period: Duration,
+    /// Arm request-lifecycle tracing at startup (process-global — see
+    /// [`crate::obs::trace`]; dump with the wire TRACE frame or
+    /// `thng stats --trace`). Default off.
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +107,9 @@ impl Default for ServeConfig {
             quota: 0,
             qos_weights: Vec::new(),
             retain_rows: 1 << 16,
+            stats_json: None,
+            stats_period: Duration::from_secs(1),
+            trace: false,
         }
     }
 }
@@ -108,11 +122,21 @@ impl Default for ServeConfig {
 pub(crate) struct Parker {
     gen: OrderedMutex<u64>,
     cv: Condvar,
+    /// Times a thread actually blocked here (a pre-empted park — the
+    /// nudge landed between epoch and park — does not count) and nudges
+    /// issued. Pushed into STATS under `serve.parker.<name>.*`.
+    pub(crate) parks: Counter,
+    pub(crate) wakes: Counter,
 }
 
 impl Parker {
     pub(crate) fn new() -> Self {
-        Self { gen: OrderedMutex::new(&PARK, 0), cv: Condvar::new() }
+        Self {
+            gen: OrderedMutex::new(&PARK, 0),
+            cv: Condvar::new(),
+            parks: Counter::new(),
+            wakes: Counter::new(),
+        }
     }
 
     /// Snapshot the generation (take this *before* checking for work).
@@ -122,6 +146,7 @@ impl Parker {
 
     /// Wake every parked thread.
     pub(crate) fn nudge(&self) {
+        self.wakes.inc();
         *self.gen.lock() += 1;
         self.cv.notify_all();
     }
@@ -132,15 +157,82 @@ impl Parker {
         let mut gen = self.gen.lock();
         match timeout {
             None => {
+                if *gen == epoch {
+                    self.parks.inc();
+                }
                 while *gen == epoch {
                     gen = gen.wait(&self.cv);
                 }
             }
             Some(t) => {
                 if *gen == epoch {
+                    self.parks.inc();
                     let _ = gen.wait_timeout(&self.cv, t);
                 }
             }
+        }
+    }
+}
+
+/// Pre-resolved handles for the serve layer's metric families — looked
+/// up in the registry once at startup, recorded lock-free ever after
+/// (the hot paths never touch the registry map; see `obs::registry`).
+pub(crate) struct ServeStats {
+    pub(crate) frames_in: Arc<Counter>,
+    pub(crate) bytes_in: Arc<Counter>,
+    pub(crate) frames_out: Arc<Counter>,
+    pub(crate) bytes_out: Arc<Counter>,
+    /// Frames queued but not yet written, summed over sessions.
+    pub(crate) outbox_depth: Arc<Gauge>,
+    pub(crate) fills_admitted: Arc<Counter>,
+    /// FILLs rejected before admission (bad target, size, shape).
+    pub(crate) rejects_invalid: Arc<Counter>,
+    /// FILLs rejected by per-tenant admission control.
+    pub(crate) rejects_quota: Arc<Counter>,
+    /// Sub-requests delivered as DATA / total payload words.
+    pub(crate) chunks_ok: Arc<Counter>,
+    pub(crate) numbers_out: Arc<Counter>,
+    /// Sub-requests resolved as typed ERR chunks, by lifecycle class.
+    pub(crate) errs_lag: Arc<Counter>,
+    pub(crate) errs_expiry: Arc<Counter>,
+    pub(crate) errs_cancel: Arc<Counter>,
+    pub(crate) errs_other: Arc<Counter>,
+    /// LEASE resumes that installed a replay / retention rows evicted.
+    pub(crate) lease_replays: Arc<Counter>,
+    pub(crate) lease_evictions: Arc<Counter>,
+    /// Engine submit → completion routed, nanoseconds.
+    pub(crate) submit_deliver_ns: Arc<Hist>,
+    /// Completions harvested per reactor `wait_batch` call.
+    pub(crate) reactor_batch: Arc<Hist>,
+    /// Worker-pool utilization: frame batches claimed and fill visits
+    /// executed (against `serve.parker.worker.parks` for idle time).
+    pub(crate) worker_frame_batches: Arc<Counter>,
+    pub(crate) worker_visits: Arc<Counter>,
+}
+
+impl ServeStats {
+    fn new(reg: &Registry) -> Self {
+        Self {
+            frames_in: reg.counter("serve.frames_in"),
+            bytes_in: reg.counter("serve.bytes_in"),
+            frames_out: reg.counter("serve.frames_out"),
+            bytes_out: reg.counter("serve.bytes_out"),
+            outbox_depth: reg.gauge("serve.outbox_depth"),
+            fills_admitted: reg.counter("serve.fills_admitted"),
+            rejects_invalid: reg.counter("serve.rejects.invalid"),
+            rejects_quota: reg.counter("serve.rejects.quota"),
+            chunks_ok: reg.counter("serve.chunks_ok"),
+            numbers_out: reg.counter("serve.numbers_out"),
+            errs_lag: reg.counter("serve.errs.lag"),
+            errs_expiry: reg.counter("serve.errs.expiry"),
+            errs_cancel: reg.counter("serve.errs.cancel"),
+            errs_other: reg.counter("serve.errs.other"),
+            lease_replays: reg.counter("serve.lease.replays"),
+            lease_evictions: reg.counter("serve.lease.evicted_rows"),
+            submit_deliver_ns: reg.hist("serve.submit_deliver_ns"),
+            reactor_batch: reg.hist("serve.reactor_batch"),
+            worker_frame_batches: reg.counter("serve.worker.frame_batches"),
+            worker_visits: reg.counter("serve.worker.visits"),
         }
     }
 }
@@ -170,6 +262,9 @@ pub(crate) struct Route {
     /// Replayed values fronting this chunk: stitched before the fresh
     /// engine output so the client still sees one full-size chunk.
     pub(crate) prefix: Vec<u32>,
+    /// When the sub-request entered its engine — the start of the
+    /// submit→deliver latency histogram's interval.
+    pub(crate) submitted_at: Instant,
 }
 
 /// State shared by the accept, poll, worker, and reactor threads.
@@ -197,6 +292,14 @@ pub(crate) struct ServerShared {
     pub(crate) worker_parker: Parker,
     pub(crate) reactor_parker: Parker,
     accept_parker: Parker,
+    stats_parker: Parker,
+    /// The serve-layer metric registry (engine counters merge in at
+    /// snapshot assembly, per-tenant families resolve on demand).
+    pub(crate) registry: Arc<Registry>,
+    /// Pre-resolved hot-path metric handles over [`Self::registry`].
+    pub(crate) stats: Arc<ServeStats>,
+    /// Retained snapshots backing STATS delta-since-cursor replies.
+    stats_ring: DeltaRing,
     stop: AtomicBool,
     /// The accept thread exited: the session set can only shrink.
     accept_done: AtomicBool,
@@ -307,8 +410,23 @@ impl ServerShared {
             debug_assert!(false, "completion for an unrouted ticket");
             return;
         };
+        self.stats.submit_deliver_ns.record(rt.submitted_at.elapsed().as_nanos() as u64);
+        trace::event("deliver", rt.req);
+        match &c.result {
+            Ok(values) => {
+                self.stats.chunks_ok.inc();
+                self.stats.numbers_out.add(values.len() as u64);
+            }
+            Err(Error::LagWindowExceeded { .. }) => self.stats.errs_lag.inc(),
+            Err(Error::DeadlineExceeded) => self.stats.errs_expiry.inc(),
+            Err(Error::Cancelled) => self.stats.errs_cancel.inc(),
+            Err(_) => self.stats.errs_other.inc(),
+        }
         if let (Some(key), Ok(values)) = (rt.retain, &c.result) {
-            self.leases.append(key, values, rt.width);
+            let evicted = self.leases.append(key, values, rt.width);
+            if evicted > 0 {
+                self.stats.lease_evictions.add(evicted);
+            }
         }
         let result = match c.result {
             Ok(fresh) => {
@@ -338,6 +456,65 @@ impl ServerShared {
             &mut after,
         );
         self.apply(&rt.session, after);
+    }
+
+    /// Assemble the server-wide stats snapshot: the registry families,
+    /// parker and session tallies, and every engine's
+    /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) merged
+    /// in under `engine<i>.<counter>`. No two locks are ever held at
+    /// once (each is acquired and released in turn), so assembly is
+    /// safe from any serve thread — but callers must not hold the
+    /// session lock of the session they will answer on.
+    pub(crate) fn assemble_stats(&self) -> StatsSnapshot {
+        let sessions: Vec<Arc<Session>> = self.sessions.lock().values().cloned().collect();
+        let closed = *self.closed.lock();
+        let mut snap = self.registry.snapshot();
+        snap.push_counter(
+            "serve.sessions_opened".into(),
+            self.next_session.load(Ordering::Acquire),
+        );
+        snap.push_counter("serve.sessions_closed".into(), closed);
+        for (name, p) in [
+            ("poll", &self.poll_parker),
+            ("worker", &self.worker_parker),
+            ("reactor", &self.reactor_parker),
+            ("accept", &self.accept_parker),
+            ("stats", &self.stats_parker),
+        ] {
+            snap.push_counter(format!("serve.parker.{name}.parks"), p.parks.get());
+            snap.push_counter(format!("serve.parker.{name}.wakes"), p.wakes.get());
+        }
+        // Per-session frame/byte tallies (live sessions only — closed
+        // sessions fold into the serve.* totals above).
+        for sess in sessions {
+            let (fi, bi, fo, bo) = {
+                let st = sess.lock();
+                (st.frames_in, st.bytes_in, st.frames_out, st.bytes_out)
+            };
+            let id = sess.id;
+            snap.push_counter(format!("serve.session.{id}.frames_in"), fi);
+            snap.push_counter(format!("serve.session.{id}.bytes_in"), bi);
+            snap.push_counter(format!("serve.session.{id}.frames_out"), fo);
+            snap.push_counter(format!("serve.session.{id}.bytes_out"), bo);
+        }
+        for (i, slot) in self.engines.iter().enumerate() {
+            let m = slot.cq.source().metrics();
+            snap.push_counter(format!("engine{i}.tiles_executed"), m.tiles_executed);
+            snap.push_counter(format!("engine{i}.rows_generated"), m.rows_generated);
+            snap.push_counter(format!("engine{i}.numbers_delivered"), m.numbers_delivered);
+            snap.push_counter(format!("engine{i}.fetch_hits"), m.fetch_hits);
+            snap.push_counter(format!("engine{i}.fetch_misses"), m.fetch_misses);
+            snap.push_counter(format!("engine{i}.lag_rejections"), m.lag_rejections);
+            snap.push_counter(format!("engine{i}.backend_ns"), m.backend_ns);
+        }
+        snap
+    }
+
+    /// Answer one STATS request: retain the fresh snapshot in the delta
+    /// ring and return either a delta against `cursor` or the full
+    /// snapshot (see [`DeltaRing::advance`]).
+    pub(crate) fn stats_reply(&self, cursor: u64) -> StatsReply {
+        self.stats_ring.advance(self.assemble_stats(), cursor)
     }
 
     /// A session fully finished: deregister it and wake everyone whose
@@ -405,10 +582,12 @@ fn worker_main(shared: &Arc<ServerShared>) {
         loop {
             let next = shared.ready.lock().pop_front();
             if let Some(sess) = next {
+                shared.stats.worker_frame_batches.inc();
                 process_frames(shared, &sess);
                 continue;
             }
             if let Some((job, budget)) = shared.sched.pop() {
+                shared.stats.worker_visits.inc();
                 run_visit(shared, job, budget);
                 continue;
             }
@@ -438,6 +617,7 @@ fn reactor_main(shared: &Arc<ServerShared>, engine: usize) {
             match shared.engines[engine].cq.wait_batch(64) {
                 Ok(batch) if batch.is_empty() => break,
                 Ok(batch) => {
+                    shared.stats.reactor_batch.record(batch.len() as u64);
                     for c in batch {
                         shared.route_completion(engine, c);
                     }
@@ -480,7 +660,7 @@ fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
                     .checked_add(shared.cfg.handshake_timeout)
                     .unwrap_or_else(|| now + Duration::from_secs(86_400));
                 let id = shared.next_session.fetch_add(1, Ordering::AcqRel);
-                let sess = Arc::new(Session::new(id, stream, hs_deadline));
+                let sess = Arc::new(Session::new(id, stream, hs_deadline, shared.stats.clone()));
                 shared.sessions.lock().insert(id, sess.clone());
                 shared.pending.lock().push(sess);
                 shared.poll_parker.nudge();
@@ -496,6 +676,24 @@ fn accept_main(shared: &Arc<ServerShared>, listener: TcpListener) {
     shared.poll_parker.nudge();
     shared.worker_parker.nudge();
     shared.reactor_parker.nudge();
+}
+
+/// The stats exporter thread (`--stats-json`): write the full snapshot
+/// as pretty JSON every period. I/O is best-effort (a full disk must
+/// not take the server down); the final iteration after the stop flag
+/// captures the end-of-run totals even for short runs.
+fn stats_main(shared: &Arc<ServerShared>) {
+    let Some(path) = shared.cfg.stats_json.clone() else { return };
+    let period = shared.cfg.stats_period.max(Duration::from_millis(10));
+    loop {
+        let epoch = shared.stats_parker.epoch();
+        let doc = shared.assemble_stats().to_json().pretty();
+        let _ = std::fs::write(&path, doc);
+        if shared.stopping() {
+            break;
+        }
+        shared.stats_parker.park(epoch, Some(period));
+    }
 }
 
 /// A live serving endpoint: `start` binds, `shutdown` (or drop) closes
@@ -610,9 +808,18 @@ impl Server {
             .local_addr()
             .map_err(|e| Error::Protocol(format!("local_addr: {e}")))?;
         let n_engines = engines.len();
+        if cfg.trace {
+            trace::set_enabled(true);
+        }
+        let stats_enabled = cfg.stats_json.is_some();
+        let registry = Arc::new(Registry::new());
+        let stats = Arc::new(ServeStats::new(&registry));
         let shared = Arc::new(ServerShared {
             sched: Sched::new(cfg.quota, &cfg.qos_weights),
             leases: LeaseTable::new(cfg.retain_rows),
+            registry,
+            stats,
+            stats_ring: DeltaRing::new(),
             engine_kind,
             n_streams: stream_base,
             n_groups: group_base,
@@ -629,6 +836,7 @@ impl Server {
             worker_parker: Parker::new(),
             reactor_parker: Parker::new(),
             accept_parker: Parker::new(),
+            stats_parker: Parker::new(),
             stop: AtomicBool::new(false),
             accept_done: AtomicBool::new(false),
             next_session: AtomicU64::new(0),
@@ -676,6 +884,13 @@ impl Server {
                 Err(e) => spawn_err = Some(e),
             }
         }
+        if stats_enabled && spawn_err.is_none() {
+            let shared = shared.clone();
+            match spawn("thng-stats".into(), Box::new(move || stats_main(&shared))) {
+                Ok(h) => threads.push(h),
+                Err(e) => spawn_err = Some(e),
+            }
+        }
         let accept = if spawn_err.is_none() {
             let shared = shared.clone();
             match spawn("thng-accept".into(), Box::new(move || accept_main(&shared, listener)))
@@ -695,6 +910,7 @@ impl Server {
             shared.poll_parker.nudge();
             shared.worker_parker.nudge();
             shared.reactor_parker.nudge();
+            shared.stats_parker.nudge();
             for handle in threads {
                 let _ = handle.join();
             }
@@ -712,6 +928,13 @@ impl Server {
     /// Sessions served and fully closed since start.
     pub fn sessions_closed(&self) -> u64 {
         *self.shared.closed.lock()
+    }
+
+    /// A point-in-time stats snapshot: the serve-layer registry plus
+    /// every engine's counters merged in under `engine<i>.*` — the
+    /// in-process twin of the wire STATS frame.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.assemble_stats()
     }
 
     /// Block until `n` sessions (total since start) have closed — the
@@ -736,6 +959,7 @@ impl Server {
         self.shared.worker_parker.nudge();
         self.shared.reactor_parker.nudge();
         self.shared.accept_parker.nudge();
+        self.shared.stats_parker.nudge();
         // Unblock the accept loop with a throwaway loopback connection
         // (checked against `stop` before any session is created).
         let _ = TcpStream::connect(self.local_addr);

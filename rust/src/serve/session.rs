@@ -55,10 +55,11 @@ use crate::check::lock_order::SESSION;
 use crate::coordinator::{ReqTarget, Request, StreamReq, Ticket};
 use crate::dist::DistSpec;
 use crate::error::Error;
+use crate::obs::trace;
 use crate::serve::lease::RetainKey;
 use crate::serve::protocol::{self, Frame};
 use crate::serve::sched::FillJob;
-use crate::serve::server::{Route, ServerShared};
+use crate::serve::server::{Route, ServeStats, ServerShared};
 use crate::sync::{OrderedGuard, OrderedMutex};
 
 /// Connection lifecycle phase.
@@ -171,6 +172,14 @@ pub(crate) struct SessionState {
     /// Request ids a wire CANCEL named; their jobs convert remainders
     /// to `Cancelled` chunks at the next visit.
     pub(crate) cancelled: HashSet<u64>,
+    /// Pre-resolved serve-layer metric handles (shared, lock-free).
+    pub(crate) stats: Arc<ServeStats>,
+    /// Per-session traffic tallies (plain fields — only ever touched
+    /// under the session lock; STATS assembly reads them the same way).
+    pub(crate) frames_in: u64,
+    pub(crate) bytes_in: u64,
+    pub(crate) frames_out: u64,
+    pub(crate) bytes_out: u64,
 }
 
 /// One client connection: a socket plus the state machine above.
@@ -183,7 +192,12 @@ pub(crate) struct Session {
 }
 
 impl Session {
-    pub(crate) fn new(id: u64, stream: TcpStream, hs_deadline: Instant) -> Self {
+    pub(crate) fn new(
+        id: u64,
+        stream: TcpStream,
+        hs_deadline: Instant,
+        stats: Arc<ServeStats>,
+    ) -> Self {
         Self {
             id,
             stream,
@@ -209,6 +223,11 @@ impl Session {
                 jobs: 0,
                 replay: HashMap::new(),
                 cancelled: HashSet::new(),
+                stats,
+                frames_in: 0,
+                bytes_in: 0,
+                frames_out: 0,
+                bytes_out: 0,
             }),
         }
     }
@@ -262,6 +281,7 @@ fn push_out(
         return;
     }
     st.out.push_back(OutFrame { bytes, written: 0, counted, quota });
+    st.stats.outbox_depth.add(1);
     after.wrote = true;
 }
 
@@ -369,6 +389,7 @@ pub(crate) fn kill_session(st: &mut SessionState, after: &mut AfterLock) {
             after.quota.push((tag, 1));
         }
     }
+    st.stats.outbox_depth.sub(st.out.len() as u64);
     for frame in st.out.drain(..) {
         if let Some(tag) = frame.quota {
             after.quota.push((tag, 1));
@@ -531,6 +552,30 @@ pub(crate) fn process_frames(server: &Arc<ServerShared>, sess: &Arc<Session>) {
                 (_, Frame::Cancel { req }) => {
                     handle_cancel(sess, &mut after, req);
                 }
+                (_, Frame::StatsReq { req, cursor }) => {
+                    // Assembled *before* taking this session's lock:
+                    // assembly sweeps every live session's lock in turn,
+                    // this one included.
+                    let reply = server.stats_reply(cursor);
+                    let mut st = sess.lock();
+                    push_out(
+                        &mut st,
+                        &Frame::Stats {
+                            req,
+                            cursor: reply.cursor,
+                            delta: reply.delta,
+                            snap: reply.snap,
+                        },
+                        false,
+                        None,
+                        &mut after,
+                    );
+                }
+                (_, Frame::TraceReq { req }) => {
+                    let json = trace::dump_json();
+                    let mut st = sess.lock();
+                    push_out(&mut st, &Frame::Trace { req, json }, false, None, &mut after);
+                }
                 (_, Frame::Bye) => {
                     let mut st = sess.lock();
                     st.phase = Phase::Draining;
@@ -589,9 +634,11 @@ fn handle_fill(
     tag: u64,
     dist: Option<DistSpec>,
 ) {
+    let _admit = trace::span("fill.admit", req);
     let (engine, local) = match server.resolve(target) {
         Ok(pair) => pair,
         Err(e) => {
+            server.stats.rejects_invalid.inc();
             direct_err(sess, after, req, e);
             return;
         }
@@ -608,6 +655,7 @@ fn handle_fill(
     let in_bounds =
         |n: Option<u64>| matches!(n, Some(n) if n >= 1 && n <= server.cfg.max_fill);
     if !in_bounds(numbers) || !in_bounds(draws) || repeat == 0 {
+        server.stats.rejects_invalid.inc();
         direct_err(
             sess,
             after,
@@ -620,6 +668,8 @@ fn handle_fill(
         return;
     }
     if let Err(e) = server.sched.admit(tag, repeat) {
+        server.stats.rejects_quota.inc();
+        server.registry.counter(&format!("serve.tag.{tag}.rejects_quota")).inc();
         direct_err(sess, after, req, e);
         return;
     }
@@ -643,6 +693,10 @@ fn handle_fill(
         st.jobs += 1;
         replay = st.replay.remove(&key).unwrap_or_default();
     }
+    server.stats.fills_admitted.inc();
+    // Per-tenant admission family (resolved on demand: tags are a small
+    // administrative set, and admission is per-FILL, not per-word).
+    server.registry.counter(&format!("serve.tag.{tag}.fills")).inc();
     server.sched.push(FillJob {
         session: sess.clone(),
         req,
@@ -714,6 +768,9 @@ fn handle_lease(
         match server.leases.resume(key, client_cursor, width) {
             Ok((server_cursor, replay)) => {
                 cursor = server_cursor;
+                if !replay.is_empty() {
+                    server.stats.lease_replays.inc();
+                }
                 let mut st = sess.lock();
                 if !st.dead {
                     st.replay.insert(key, replay);
@@ -896,8 +953,10 @@ fn submit_slice(
     prefix: Vec<u32>,
     after: &mut AfterLock,
 ) -> bool {
+    let _span = trace::span("fill.submit", job.req);
     let prefix_rows = prefix.len() as u64 / job.width;
-    let deadline = job.limit.map(|l| l.saturating_duration_since(Instant::now()));
+    let now = Instant::now();
+    let deadline = job.limit.map(|l| l.saturating_duration_since(now));
     let mut batch = Vec::with_capacity(grant as usize);
     for i in 0..grant {
         // max_fill bounds `rows`, so the usize cast is lossless. Only
@@ -931,6 +990,7 @@ fn submit_slice(
                         retain: job.retain,
                         width: job.width,
                         prefix: prefix.take().unwrap_or_default(),
+                        submitted_at: now,
                     },
                 );
             }
@@ -1032,6 +1092,12 @@ pub(crate) fn poll_session(
                         // `done` was computed from the front frame.
                         let Some(f) = st.out.pop_front() else { break };
                         progress = true;
+                        st.stats.frames_out.inc();
+                        st.stats.bytes_out.add(f.bytes.len() as u64);
+                        st.stats.outbox_depth.sub(1);
+                        st.frames_out += 1;
+                        st.bytes_out += f.bytes.len() as u64;
+                        trace::event("flush", sess.id);
                         if f.counted {
                             st.in_flight -= 1;
                             freed_window = true;
@@ -1080,6 +1146,8 @@ pub(crate) fn poll_session(
                     }
                     Ok(n) => {
                         st.inbuf.extend_from_slice(&buf[..n]);
+                        st.stats.bytes_in.add(n as u64);
+                        st.bytes_in += n as u64;
                         progress = true;
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -1124,6 +1192,9 @@ pub(crate) fn poll_session(
                 let payload = st.inbuf[4..4 + len].to_vec();
                 st.inbuf.drain(..4 + len);
                 st.frames.push_back(payload);
+                st.stats.frames_in.inc();
+                st.frames_in += 1;
+                trace::event("fill.read", sess.id);
                 progress = true;
             }
             if !st.frames.is_empty() && !st.claimed && !st.enqueued {

@@ -10,17 +10,9 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::util::json::Json;
-
-fn json_num(v: f64) -> Json {
-    // Rust formats non-finite floats as `NaN`/`inf`, which is not valid
-    // JSON; serialize those as null so the document always parses.
-    if v.is_finite() {
-        Json::Num(v, format!("{v}"))
-    } else {
-        Json::Null
-    }
-}
+// The shared writer's float constructor (non-finite → `null`), under
+// the name this module has always used.
+use crate::util::json::{num as json_num, Json};
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]

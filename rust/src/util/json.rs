@@ -279,6 +279,26 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+/// A float as a JSON number. Rust formats non-finite floats as
+/// `NaN`/`inf`, which is not valid JSON; those serialize as `null` so
+/// every emitted document parses. The one constructor behind all of
+/// the crate's writers (bench trajectories, lint baselines, STATS
+/// exports) — shared escaping and non-finite handling by construction.
+pub fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v, format!("{v}"))
+    } else {
+        Json::Null
+    }
+}
+
+/// A `u64` as a JSON number, exact at full precision: the raw decimal
+/// text rides along so values beyond 2^53 survive a parse round-trip
+/// via [`Json::as_u64`] (counters are u64; f64 would silently round).
+pub fn uint(v: u64) -> Json {
+    Json::Num(v as f64, format!("{v}"))
+}
+
 /// Escape a string for JSON output.
 pub fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -294,6 +314,50 @@ pub fn escape(s: &str) -> String {
         }
     }
     out
+}
+
+impl Json {
+    /// Pretty form: two-space indentation, one member per line, a space
+    /// after each colon — the layout of the committed trajectory files
+    /// (`LINT.json`). Compact form is the `Display` impl.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent + 1);
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    out.push_str(&pad);
+                    e.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(if i > 0 { ",\n" } else { "\n" });
+                    out.push_str(&pad);
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\": ");
+                    v.pretty_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+            leaf => out.push_str(&leaf.to_string()),
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -387,5 +451,32 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_keeps_the_trajectory_layout() {
+        let doc = r#"{"deny":{"panic":0},"schema":1,"tags":[1,2]}"#;
+        let v = Json::parse(doc).unwrap();
+        let p = v.pretty();
+        assert_eq!(Json::parse(&p).unwrap(), v, "pretty text parses back equal");
+        assert!(p.contains("  \"deny\": {\n    \"panic\": 0\n  }"), "{p}");
+        assert!(p.ends_with("}\n"));
+        assert_eq!(Json::parse("{}").unwrap().pretty(), "{}\n");
+    }
+
+    #[test]
+    fn num_constructor_nulls_non_finite() {
+        assert_eq!(num(2.5).to_string(), "2.5");
+        assert_eq!(num(f64::NAN), Json::Null);
+        assert_eq!(num(f64::INFINITY), Json::Null);
+        assert_eq!(num(f64::NEG_INFINITY), Json::Null);
+    }
+
+    #[test]
+    fn uint_constructor_is_exact_at_full_precision() {
+        let v = uint(u64::MAX);
+        assert_eq!(v.to_string(), "18446744073709551615");
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.as_u64(), Some(u64::MAX));
     }
 }

@@ -7,7 +7,9 @@
 
 use std::path::Path;
 
-use thundering::check::{analyze_source, analyze_tree, regressions_vs_baseline, Lint, Report};
+use thundering::check::{
+    analyze_source, analyze_tree, baseline_drift, regressions_vs_baseline, Lint, Report,
+};
 
 /// Scan fixture text under a chosen relative path (lint scoping is
 /// path-based, so the same fixture can probe in- and out-of-scope).
@@ -114,17 +116,19 @@ fn live_tree_is_clean() {
     assert_eq!(report.deny_total(), 0);
 }
 
-/// The committed `LINT.json` is byte-identical to what the pass emits —
-/// regenerate with `cargo run --bin thng-check -- --write-baseline`
-/// whenever a pragma is added or retired.
+/// The committed `LINT.json` matches the tree: deny counts and the
+/// pragma trajectory exactly (drift), and the advisory slice-index
+/// census at or under its recorded ratchet ceiling (regressions). The
+/// ceiling is a ratchet, not an exact count — slack under it is fine;
+/// regenerate with `cargo run --bin thng-check -- --write-baseline
+/// LINT.json` whenever a pragma is added or retired, or to tighten the
+/// ceiling to the live census.
 #[test]
 fn committed_baseline_matches_the_tree() {
     let report = live_report();
     let committed = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/LINT.json"));
-    assert_eq!(
-        report.baseline_json(),
-        committed,
-        "LINT.json is stale — regenerate with `thng-check --write-baseline`"
-    );
-    assert!(regressions_vs_baseline(&report, committed).is_empty());
+    let drift = baseline_drift(&report, committed);
+    assert!(drift.is_empty(), "LINT.json is stale:\n{}", drift.join("\n"));
+    let regs = regressions_vs_baseline(&report, committed);
+    assert!(regs.is_empty(), "regressions vs LINT.json:\n{}", regs.join("\n"));
 }

@@ -1,0 +1,85 @@
+//! Cross-engine metrics parity (ISSUE 9 satellite).
+//!
+//! The consumer-side service counters — numbers delivered, fetch
+//! hits/misses, lag rejections — are accounted inside the shared drain
+//! core (`coordinator::drain`), so an identical fetch sequence must
+//! produce identical counts on the native and sharded engines. The
+//! producer-side counters (tiles executed, rows generated, backend
+//! time) are intentionally excluded: the sharded engine prefetches
+//! ahead of consumption, so those depend on worker timing, not on what
+//! clients observed.
+//!
+//! This pins the engine-agnostic hit/miss contract, including the
+//! block fast path: a streamed block counts one fetch miss per block
+//! on both engines (the gap this satellite closed — the fast path
+//! previously bypassed hit/miss accounting entirely).
+
+use thundering::{Engine, EngineBuilder, StreamSource};
+
+fn build(engine: Engine) -> Box<dyn StreamSource> {
+    EngineBuilder::new(8)
+        .engine(engine)
+        .group_width(4)
+        .rows_per_tile(8)
+        .lag_window(64)
+        .shards(2)
+        .build()
+        .expect("engine builds")
+}
+
+/// Drive one fixed fetch sequence — per-lane hits and misses, a lag
+/// rejection, a multi-tile block, and a batched fetch — and return the
+/// consumer-side counters.
+fn drive(source: &dyn StreamSource) -> (u64, u64, u64, u64) {
+    // Lane 0 of group 0 buffers 3 tiles (miss); lanes 1..4 then ride
+    // the buffer (hits).
+    let mut buf24 = vec![0u32; 24];
+    source.fetch(0, &mut buf24).expect("lane 0");
+    let mut buf8 = vec![0u32; 8];
+    source.fetch(1, &mut buf8).expect("lane 1 head");
+    source.fetch(2, &mut buf24).expect("lane 2");
+    source.fetch(3, &mut buf24).expect("lane 3");
+    let mut buf16 = vec![0u32; 16];
+    source.fetch(1, &mut buf16).expect("lane 1 tail");
+    // Group 0 now sits uniformly at row 24 with nothing buffered. A
+    // 72-row fetch would stretch the spread past the 64-row window.
+    let mut buf72 = vec![0u32; 72];
+    assert!(source.fetch(0, &mut buf72).is_err(), "lag rejection expected");
+    // Untouched group 1 takes the block fast path (2 whole tiles).
+    let block = source.fetch_block(1, 16).expect("group 1 block");
+    assert_eq!(block.len(), 16 * 4);
+    // Batched fetch: both groups are clean-boundary streamable now.
+    let many = source.fetch_many(8).expect("fetch_many");
+    assert_eq!(many.len(), 2);
+
+    let m = source.metrics();
+    (m.numbers_delivered, m.fetch_hits, m.fetch_misses, m.lag_rejections)
+}
+
+#[test]
+fn consumer_side_counters_are_engine_agnostic() {
+    let native = drive(&*build(Engine::Native));
+    let sharded = drive(&*build(Engine::Sharded));
+    assert_eq!(native, sharded, "(delivered, hits, misses, lag_rejections)");
+    // And pin the absolute expectation so the accounting itself (not
+    // just its parity) is under test: 5 per-lane fetches = 1 miss + 4
+    // hits; the 16-row block and each group's fetch_many block = 3
+    // more misses; 24+8+24+24+16 lane numbers + (16+8+8)×4 block
+    // numbers = 224 delivered; 1 lag rejection.
+    assert_eq!(native, (224, 4, 4, 1));
+}
+
+#[test]
+fn rejected_fetches_count_on_both_engines_without_consuming() {
+    for engine in [Engine::Native, Engine::Sharded] {
+        let source = build(engine);
+        let mut ok = vec![0u32; 8];
+        source.fetch(0, &mut ok).expect("within the window");
+        let mut too_big = vec![0u32; 80];
+        assert!(source.fetch(0, &mut too_big).is_err());
+        assert!(source.fetch_block(0, 80).is_err(), "skewed group, 80 > window 64");
+        let m = source.metrics();
+        assert_eq!(m.lag_rejections, 2, "{}", source.engine_kind());
+        assert_eq!(m.numbers_delivered, 8, "rejections consumed nothing");
+    }
+}

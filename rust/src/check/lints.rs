@@ -24,18 +24,23 @@ pub enum Lint {
     /// A raw `Mutex::new`/`RwLock::new` where the ranked facade is
     /// mandatory (`serve/`, `coordinator/`).
     UnrankedLock,
+    /// A condvar wait parked while a *second* ranked lock is held — the
+    /// wait releases only its own guard, so a notifier that needs the
+    /// other lock deadlocks against the sleeper.
+    WaitHeld,
     /// A malformed or unknown `thng:` pragma.
     Pragma,
 }
 
 /// Every lint, in report order.
-pub const ALL_LINTS: [Lint; 7] = [
+pub const ALL_LINTS: [Lint; 8] = [
     Lint::Panic,
     Lint::Index,
     Lint::LockOrder,
     Lint::ThreadName,
     Lint::Determinism,
     Lint::UnrankedLock,
+    Lint::WaitHeld,
     Lint::Pragma,
 ];
 
@@ -48,6 +53,7 @@ impl Lint {
             Lint::ThreadName => "thread-name",
             Lint::Determinism => "determinism",
             Lint::UnrankedLock => "unranked-lock",
+            Lint::WaitHeld => "wait-held",
             Lint::Pragma => "pragma",
         }
     }
@@ -445,6 +451,9 @@ struct HeldLock {
 
 const ACQ_MUTEX: &[&str] = &["lock", "lock_checked", "try_lock", "try_lock_checked"];
 const ACQ_RW: &[&str] = &["read", "write"];
+/// Condvar parking methods (facade [`crate::sync::OrderedGuard`] style:
+/// the *guard* is the receiver; it is re-armed and re-bound on return).
+const WAITS: &[&str] = &["wait", "wait_timeout", "wait_timeout_checked"];
 /// Wrapper methods that acquire a known lock regardless of receiver.
 static WRAPPERS: &[(&str, &str, &LockRank)] = &[
     ("serve/", "lock_routes", &crate::check::lock_order::ROUTES),
@@ -486,6 +495,37 @@ fn lock_order_lint(rel: &str, toks: &[Tok], mask: &[bool], out: &mut Vec<Finding
         }
         // Acquisition?
         let Some(m) = ident_of(t) else { continue };
+        // Held-across-wait audit: a condvar wait releases only the guard
+        // it is called on; every *other* tracked lock rides through the
+        // park, starving any notifier that needs it. Exempt the
+        // receiver's own binding — that guard is atomically released.
+        if WAITS.contains(&m)
+            && i > 0
+            && is_punct(&toks[i - 1], '.')
+            && i + 1 < n
+            && is_punct(&toks[i + 1], '(')
+        {
+            let recv = if i >= 2 { ident_of(&toks[i - 2]) } else { None };
+            let others: Vec<&str> = held
+                .iter()
+                .filter(|h| h.binding.as_deref() != recv)
+                .map(|h| h.rank.name)
+                .collect();
+            if !others.is_empty() {
+                push(
+                    out,
+                    Lint::WaitHeld,
+                    rel,
+                    t.line,
+                    format!(
+                        "`.{m}()` parks while `{}` is still held — the wait releases \
+                         only its own guard, so a notifier needing that lock deadlocks",
+                        others.join("`, `")
+                    ),
+                );
+            }
+            continue;
+        }
         let rank = if i > 0
             && is_punct(&toks[i - 1], '.')
             && i + 1 < n
@@ -740,6 +780,45 @@ mod tests {
         "#;
         let f = run("coordinator/sharded.rs", bad);
         assert_eq!(f.iter().filter(|f| f.lint == Lint::LockOrder).count(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn wait_held_flags_a_second_ranked_lock_across_the_park() {
+        let bad = r#"
+            fn f(server: &S, sess: &Session, cv: &Condvar) {
+                let routes = server.lock_routes();
+                let mut st = sess.lock();
+                st = st.wait(&cv);
+            }
+        "#;
+        let f = run("serve/session.rs", bad);
+        assert_eq!(f.iter().filter(|f| f.lint == Lint::WaitHeld).count(), 1, "{f:?}");
+        assert!(f.iter().any(|f| f.msg.contains("routes")), "{f:?}");
+
+        // The wait's own guard is exempt (atomically released), a
+        // dropped lock no longer counts, and the timeout variants are
+        // audited the same way.
+        let good = r#"
+            fn f(server: &S, sess: &Session, cv: &Condvar, timeout: Duration) {
+                let routes = server.lock_routes();
+                drop(routes);
+                let mut st = sess.lock();
+                st = st.wait(&cv);
+                st = st.wait_timeout(&cv, timeout);
+            }
+        "#;
+        let f = run("serve/session.rs", good);
+        assert!(f.iter().all(|f| f.lint != Lint::WaitHeld), "{f:?}");
+
+        let bad_timeout = r#"
+            fn f(server: &S, sess: &Session, cv: &Condvar, timeout: Duration) {
+                let routes = server.lock_routes();
+                let mut st = sess.lock();
+                st = st.wait_timeout_checked(&cv, timeout);
+            }
+        "#;
+        let f = run("serve/session.rs", bad_timeout);
+        assert_eq!(f.iter().filter(|f| f.lint == Lint::WaitHeld).count(), 1, "{f:?}");
     }
 
     #[test]

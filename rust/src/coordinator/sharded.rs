@@ -57,6 +57,7 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::registry::{StreamRegistry, StreamSpec};
 use crate::coordinator::source::StreamSource;
 use crate::error::Error;
+use crate::obs::trace;
 use crate::prng::ThunderingBatch;
 use crate::sync::OrderedMutex;
 
@@ -327,7 +328,11 @@ fn shard_main(shared: Arc<Shared>, shard: usize, mut groups: Vec<(usize, Thunder
                 shared.pool.lock().pop().unwrap_or_else(|| vec![0u32; rows * width]);
             debug_assert_eq!(buf.len(), rows * width);
             let t0 = Instant::now();
+            // Span keyed by group id: prefetch generation has no request
+            // — `stats --trace` shows worker generation time per group.
+            let _gen = trace::span("shard.prefetch", *g as u64);
             batch.fill_rows(rows, &mut buf);
+            drop(_gen);
             shared.metrics.add(&shared.metrics.backend_ns, t0.elapsed().as_nanos() as u64);
             shared.metrics.add(&shared.metrics.tiles_executed, 1);
             shared.metrics.add(&shared.metrics.rows_generated, rows as u64);
@@ -396,6 +401,9 @@ fn serve_completion_request(
             let req = claimed.req();
             let result = match groups.iter_mut().find(|(owned, _)| *owned == g) {
                 Some((_, batch)) => {
+                    // The worker side of `claim`: inline execution on the
+                    // owning shard, correlated to the submitted ticket.
+                    let _exec = trace::span("shard.execute", claimed.ticket_id());
                     let mut provider = OwnedTiles { shared, g, batch };
                     run_request(&mut drain, req, shared.width, &mut provider, &shared.metrics)
                 }

@@ -51,6 +51,7 @@ pub mod error;
 pub mod fpga;
 pub mod obs;
 pub mod prng;
+pub mod quality;
 pub mod report;
 pub mod runtime;
 pub mod serve;

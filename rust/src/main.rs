@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   generate     stream numbers from the coordinator to stdout/devnull
-//!   quality      run the MiniCrush battery on one generator
+//!   quality      run the MiniCrush battery on one generator, or (with
+//!                --addr) the cross-stream battery against a serve
+//!                endpoint, writing QUALITY.json
 //!   report       regenerate a paper table/figure (or `all`)
 //!   pi           Monte-Carlo pi estimation (native | sharded | pjrt)
 //!   bs           Monte-Carlo option pricing (native | sharded | pjrt)
@@ -41,7 +43,7 @@ const VALUE_OPTS: &[&str] = &[
     "threads", "rows", "n", "seed", "out", "group-width", "rows-per-tile", "addr",
     "connections", "sessions", "window", "chunk-rows", "numbers", "deadline-ms",
     "fills", "workers", "quota", "tags", "dist", "customers", "lambda", "mu",
-    "paths", "stats-json", "stats-period-ms", "cursor",
+    "paths", "stats-json", "stats-period-ms", "cursor", "profile",
 ];
 
 /// The `--engine/--artifacts/--group-width/--rows-per-tile/--seed`
@@ -102,7 +104,8 @@ fn usage() -> String {
      USAGE: thundering <command> [options]\n\n\
      COMMANDS:\n  \
      generate    --streams N --count N [--stream I] [--dist SPEC] [--engine native|sharded|pjrt] [--artifacts DIR] [--out hex|none]\n  \
-     quality     --gen NAME [--scale quick|standard|deep]\n  \
+     quality     --gen NAME [--scale quick|standard|deep]\n              \
+     | --addr HOST:PORT [--profile ci|crush] [--streams N] [--sessions N] [--out QUALITY.json] [--json]\n  \
      report      <table1..table7|fig5..fig9|all> [--quick] [--artifacts DIR]\n  \
      pi          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
      bs          --draws N [--engine pjrt|native|sharded] [--artifacts DIR] [--threads N]\n  \
@@ -160,7 +163,11 @@ fn audit_args(cmd: &str, args: &Args) -> Result<()> {
         "generate" => {
             (with_engine_opts(&["streams", "count", "stream", "out", "dist"]), &[], 0)
         }
-        "quality" => (vec!["gen", "scale"], &[], 0),
+        "quality" => (
+            vec!["gen", "scale", "addr", "profile", "streams", "sessions", "out"],
+            &["json"],
+            0,
+        ),
         "report" => (vec!["artifacts"], &["quick"], 1),
         "pi" | "bs" => (with_engine_opts(&["draws", "threads"]), &[], 0),
         "throughput" => {
@@ -287,10 +294,56 @@ fn generate_shaped(
 }
 
 fn cmd_quality(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("addr") {
+        return quality_remote(args, addr);
+    }
     let name = args.get_or("gen", "thundering");
     let scale = Scale::parse(args.get_or("scale", "quick"))
         .ok_or_else(|| anyhow::anyhow!("bad --scale"))?;
     print!("{}", report::quality_one(name, scale)?);
+    Ok(())
+}
+
+/// `quality --addr`: the cross-stream independence battery run as a
+/// serve-layer consumer (DESIGN.md §10) — lease `--streams` remote
+/// streams across `--sessions` concurrent connections, score every
+/// sampled pair, write the QUALITY.json trajectory document to `--out`,
+/// and exit non-zero if any test fails its gate.
+fn quality_remote(args: &Args, addr: &str) -> Result<()> {
+    let profile = thundering::quality::Profile::parse(args.get_or("profile", "ci"))
+        .ok_or_else(|| anyhow::anyhow!("bad --profile (ci|crush)"))?;
+    let mut cfg = thundering::quality::HarnessConfig::new(addr);
+    cfg.streams = args.get_usize("streams", 0)?;
+    cfg.sessions = args.get_usize("sessions", 8)?;
+    let report = thundering::quality::run_remote(&cfg, &profile)?;
+    let doc = report.to_json().pretty();
+    let out = args.get_or("out", "QUALITY.json");
+    std::fs::write(out, format!("{doc}\n"))?;
+    if args.flag("json") {
+        println!("{doc}");
+    } else {
+        for r in &report.results {
+            println!(
+                "  {:<16} p = {:<10.3e} [{}]  {}",
+                r.name,
+                r.p_value,
+                r.verdict(),
+                r.detail
+            );
+        }
+        println!(
+            "quality[{} engine, profile {}]: {} — {}/{} pairs scored ({} dropped by budget) -> {out}",
+            report.engine,
+            report.profile,
+            report.summary(),
+            report.pairs_scored,
+            report.pairs_total,
+            report.pairs_dropped(),
+        );
+    }
+    if !report.passed() {
+        bail!("cross-stream battery failed: {}", report.summary());
+    }
     Ok(())
 }
 

@@ -1,0 +1,429 @@
+//! The four cross-stream tests, scored over collected per-stream
+//! buffers (the harness fills those over the wire; the adversarial
+//! self-tests fill them locally — the math never knows the difference).
+//!
+//! Each test reuses a single-stream primitive from [`crate::stats`]
+//! where one fits: the correlation coefficients and their
+//! independence-null p-values come from [`crate::stats::corr`], the
+//! birthday machinery from [`crate::stats::birthday`] behind a
+//! round-robin [`BufferInterleave`] adapter, and the rank law /
+//! GF(2) elimination from [`crate::stats::rank`]. Every test reads its
+//! buffers from index 0 with its own cursors — tests share data, not
+//! state, so the battery is deterministic in the collected words alone.
+
+use std::collections::HashSet;
+
+use crate::error::Error;
+use crate::prng::{Prng32, SplitMix64};
+use crate::stats::special::{chi2_test, normal_two_sided};
+use crate::stats::{birthday, corr, rank, TestResult};
+
+/// Deterministic pair schedule over `n` streams: every adjacent pair
+/// `(i, i+1)` first (index-space coverage — exactly the neighboring
+/// leases a serve-layer bug would cross), then SplitMix64-picked
+/// distinct random pairs up to `budget`. Returns the schedule and the
+/// total pair count `C(n, 2)` so the caller can report how many pairs
+/// the budget dropped — dropped pairs are logged, never silent.
+pub fn pair_schedule(n: usize, budget: usize) -> (Vec<(usize, usize)>, u64) {
+    let total = n as u64 * (n as u64 - 1) / 2;
+    let cap = (budget as u64).min(total) as usize;
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(cap);
+    let mut seen: HashSet<(usize, usize)> = HashSet::with_capacity(cap);
+    for i in 0..n.saturating_sub(1) {
+        if pairs.len() >= cap {
+            break;
+        }
+        pairs.push((i, i + 1));
+        seen.insert((i, i + 1));
+    }
+    // Fixed seed: the schedule is part of the battery's definition — two
+    // runs over the same buffers score the same pairs.
+    let mut pick = SplitMix64::new(0x7468_6e67_7061_6972);
+    let mut misses = 0u32;
+    while pairs.len() < cap && misses < 1_000_000 {
+        let a = (pick.next_u32() as usize) % n;
+        let b = (pick.next_u32() as usize) % n;
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        if lo == hi || seen.contains(&(lo, hi)) {
+            misses += 1;
+            continue;
+        }
+        seen.insert((lo, hi));
+        pairs.push((lo, hi));
+    }
+    (pairs, total)
+}
+
+/// Šidák-fold the smallest of `k` per-comparison p-values into a
+/// family-wise p-value `1 − (1−p)^k`, in log space so an astronomically
+/// small minimum survives the fold instead of rounding through 1.
+fn sidak(p_min: f64, k: usize) -> f64 {
+    if k == 0 {
+        return 1.0;
+    }
+    let p = p_min.clamp(0.0, 1.0);
+    if p >= 1.0 {
+        return 1.0;
+    }
+    let v = -((k as f64) * (-p).ln_1p()).exp_m1();
+    v.clamp(0.0, 1.0 - 1e-9)
+}
+
+/// Pairwise cross-correlation: Pearson, Spearman, and Kendall over the
+/// first `n` words of every scheduled pair, each coefficient mapped to
+/// its independence-null p-value and the minimum Šidák-folded over all
+/// `3·pairs` comparisons. This is the Table 3 protocol turned into a
+/// gated test: the paper's motivating defect (same-seed truncated LCG
+/// streams at Pearson ≈ 0.999) lands here at p ≈ 0.
+pub fn cross_corr(streams: &[Vec<u32>], pairs: &[(usize, usize)], n: usize) -> TestResult {
+    let mut p_min = 1.0f64;
+    let mut worst = (0usize, 0usize, "pearson", 0.0f64);
+    for &(a, b) in pairs {
+        let x: Vec<f64> = streams[a].iter().take(n).map(|&v| v as f64).collect();
+        let y: Vec<f64> = streams[b].iter().take(n).map(|&v| v as f64).collect();
+        let rp = corr::pearson(&x, &y);
+        let rs = corr::spearman(&x, &y);
+        let rk = corr::kendall(&x, &y);
+        for (name, r, p) in [
+            ("pearson", rp, corr::fisher_p(rp, n)),
+            ("spearman", rs, corr::fisher_p(rs, n)),
+            ("kendall", rk, corr::kendall_p(rk, n)),
+        ] {
+            if p < p_min {
+                p_min = p;
+                worst = (a, b, name, r);
+            }
+        }
+    }
+    let comparisons = pairs.len() * 3;
+    TestResult::new("cross_corr", sidak(p_min, comparisons)).with_detail(format!(
+        "pairs={} n={} worst=({},{}) {}={:.4} p_min={:.3e}",
+        pairs.len(),
+        n,
+        worst.0,
+        worst.1,
+        worst.2,
+        worst.3,
+        p_min
+    ))
+}
+
+/// Round-robin interleave over collected buffers, presented as a
+/// [`Prng32`] so the single-stream birthday machinery applies verbatim
+/// to a *cross-stream* draw sequence. Per-stream cursors advance
+/// independently and never wrap: wrapping would re-serve earlier words
+/// and fabricate duplicate birthdays, turning the test into a false
+/// alarm — callers size their draw budget with
+/// [`BufferInterleave::available`] and an overdraw is a loud panic, not
+/// quietly recycled data.
+pub struct BufferInterleave<'a> {
+    streams: &'a [Vec<u32>],
+    cursors: Vec<usize>,
+    next: usize,
+}
+
+impl<'a> BufferInterleave<'a> {
+    pub fn new(streams: &'a [Vec<u32>]) -> Self {
+        assert!(!streams.is_empty());
+        Self { streams, cursors: vec![0; streams.len()], next: 0 }
+    }
+
+    /// Words still drawable before some stream runs dry. Round-robin
+    /// draws stay balanced, so `min remaining × streams` draws are safe
+    /// from a cursor-aligned state.
+    pub fn available(&self) -> usize {
+        self.streams
+            .iter()
+            .zip(&self.cursors)
+            .map(|(s, &c)| s.len().saturating_sub(c))
+            .min()
+            .unwrap_or(0)
+            .saturating_mul(self.streams.len())
+    }
+}
+
+impl Prng32 for BufferInterleave<'_> {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        let s = self.next;
+        self.next = (self.next + 1) % self.streams.len();
+        let c = self.cursors[s];
+        assert!(c < self.streams[s].len(), "BufferInterleave overdraw on stream {s}");
+        self.cursors[s] = c + 1;
+        self.streams[s][c]
+    }
+
+    fn name(&self) -> &'static str {
+        "buffer-interleave"
+    }
+}
+
+/// Birthday spacings over values drawn from *different* streams: each of
+/// the `m` birthdays in one experiment round-robins the stream set, so
+/// duplicate spacings measure cross-stream lattice structure — shared
+/// values or shifted copies collide here even when every stream passes
+/// the single-stream variant (which draws its `m` birthdays from one
+/// sequence and is blind to inter-stream coincidences). λ stays
+/// `m³/4·2^t` per experiment regardless of the stream count — the
+/// Poisson law only cares that the draws are jointly uniform.
+/// Repetitions are clamped to the collected data (the clamp is recorded
+/// in the detail — never silent).
+pub fn cross_birthday(
+    streams: &[Vec<u32>],
+    m: usize,
+    t: u32,
+    reps: usize,
+) -> Result<TestResult, Error> {
+    let mut il = BufferInterleave::new(streams);
+    let reps_eff = reps.min(il.available() / m.max(1));
+    if reps_eff == 0 {
+        return Err(Error::InvalidConfig(format!(
+            "cross_birthday needs m={m} interleaved words per repetition; only {} collected",
+            il.available()
+        )));
+    }
+    let mut r = birthday::birthday_spacings(&mut il, m, t, reps_eff);
+    r.name = "cross_birthday".into();
+    if reps_eff < reps {
+        r.detail.push_str(&format!(" (reps clamped from {reps} to fit collected data)"));
+    }
+    Ok(r)
+}
+
+/// Pack `k` bits (MSB-first within each word, matching
+/// [`crate::stats::bits::BitSource`]) into a GF(2) row.
+fn rank_row(words: &[u32], k: usize) -> Vec<u64> {
+    let mut row = vec![0u64; k.div_ceil(64)];
+    for i in 0..k {
+        if (words[i / 32] >> (31 - (i % 32))) & 1 == 1 {
+            row[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    row
+}
+
+/// Binary rank over matrices whose rows interleave the streams: row `j`
+/// of matrix `i` takes its `k` bits from stream `(i + j) mod N` (the
+/// base rotates so every stream serves every row position). Dependent
+/// streams contribute linearly dependent rows — two handles on the same
+/// stream cap every matrix at rank k/2 — and the deficiency histogram
+/// is χ²-scored against the random-matrix law exactly as the
+/// single-stream `matrix_rank` does. Matrix count is clamped to the
+/// collected data (recorded in the detail).
+pub fn cross_rank(streams: &[Vec<u32>], k: usize, nmat: usize) -> Result<TestResult, Error> {
+    let n = streams.len();
+    let wpr = k.div_ceil(32);
+    let per_stream_per_mat = k.div_ceil(n) * wpr;
+    let min_len = streams.iter().map(Vec::len).min().unwrap_or(0);
+    let nmat_eff = nmat.min(min_len / per_stream_per_mat.max(1));
+    if nmat_eff < 8 {
+        return Err(Error::InvalidConfig(format!(
+            "cross_rank needs {per_stream_per_mat} words per stream per matrix for ≥8 \
+             matrices; shortest stream has {min_len}"
+        )));
+    }
+    let mut cursors = vec![0usize; n];
+    let mut counts = [0f64; 4]; // deficiency d = 0, 1, 2, >=3
+    for mi in 0..nmat_eff {
+        let mut rows: Vec<Vec<u64>> = Vec::with_capacity(k);
+        for j in 0..k {
+            let s = (mi + j) % n;
+            let c = cursors[s];
+            rows.push(rank_row(&streams[s][c..c + wpr], k));
+            cursors[s] = c + wpr;
+        }
+        let r = rank::gf2_rank(&mut rows, k);
+        let d = (k - r).min(3);
+        counts[d] += 1.0;
+    }
+    let mut expected = [0f64; 4];
+    for (d, e) in expected.iter_mut().enumerate().take(3) {
+        *e = rank::rank_prob(k, d) * nmat_eff as f64;
+    }
+    expected[3] = (nmat_eff as f64 - expected[0] - expected[1] - expected[2]).max(0.0);
+    // Merge the tail bins (tiny expectations) into d=2, as matrix_rank does.
+    let obs = [counts[0], counts[1], counts[2] + counts[3]];
+    let exp = [expected[0], expected[1], expected[2] + expected[3]];
+    let (stat, p) = chi2_test(&obs, &exp);
+    let mut r = TestResult::new("cross_rank", p).with_detail(format!(
+        "chi2={stat:.2} k={k} nmat={nmat_eff} full={} d1={} d2+={}",
+        counts[0],
+        counts[1],
+        counts[2] + counts[3]
+    ));
+    if nmat_eff < nmat {
+        r.detail.push_str(&format!(" (nmat clamped from {nmat} to fit collected data)"));
+    }
+    Ok(r)
+}
+
+/// Cross-stream Hamming-weight dependency: for every scheduled pair,
+/// the centered weights (w − 16) of the two streams are
+/// cross-correlated at every lag in `−maxlag..=maxlag` (both
+/// directions — a shift-by-k copy only lights up on one side), each lag
+/// z-scored against the √m independence null, and the worst z
+/// Šidák-folded over all `pairs × (2·maxlag+1)` comparisons. This is
+/// [`crate::stats::hwd`]'s statistic pointed *across* sequences instead
+/// of along one.
+pub fn cross_hwd(
+    streams: &[Vec<u32>],
+    pairs: &[(usize, usize)],
+    n: usize,
+    maxlag: usize,
+) -> TestResult {
+    let centered =
+        |s: &[u32]| -> Vec<f64> { s.iter().take(n).map(|&v| v.count_ones() as f64 - 16.0).collect() };
+    let var_of = |w: &[f64]| (w.iter().map(|x| x * x).sum::<f64>() / w.len() as f64).max(1e-9);
+    let mut worst_z = 0.0f64;
+    let mut worst = (0usize, 0usize, 0isize);
+    for &(a, b) in pairs {
+        let wa = centered(&streams[a]);
+        let wb = centered(&streams[b]);
+        let denom = (var_of(&wa) * var_of(&wb)).sqrt();
+        for lag in 0..=maxlag {
+            let m = n - lag;
+            let fold = (denom * (m as f64).sqrt()).max(1e-12);
+            let c_ab: f64 = (0..m).map(|i| wa[i] * wb[i + lag]).sum();
+            let z = (c_ab / fold).abs();
+            if z > worst_z {
+                worst_z = z;
+                worst = (a, b, lag as isize);
+            }
+            if lag > 0 {
+                let c_ba: f64 = (0..m).map(|i| wa[i + lag] * wb[i]).sum();
+                let z = (c_ba / fold).abs();
+                if z > worst_z {
+                    worst_z = z;
+                    worst = (a, b, -(lag as isize));
+                }
+            }
+        }
+    }
+    let comparisons = pairs.len() * (2 * maxlag + 1);
+    TestResult::new("cross_hwd", sidak(normal_two_sided(worst_z), comparisons)).with_detail(
+        format!(
+            "pairs={} n={} maxlag={} worst=({},{}) lag={} z={:.3}",
+            pairs.len(),
+            n,
+            maxlag,
+            worst.0,
+            worst.1,
+            worst.2,
+            worst_z
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::ThunderingStream;
+    use crate::stats::Verdict;
+
+    fn collect(n_streams: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n_streams)
+            .map(|i| {
+                let mut g = ThunderingStream::new(42, i as u64);
+                (0..len).map(|_| g.next_u32()).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pair_schedule_covers_adjacent_then_random_distinct() {
+        let (pairs, total) = pair_schedule(16, 200);
+        assert_eq!(total, 120);
+        assert_eq!(pairs.len(), 120, "budget above C(n,2) scores every pair");
+        let distinct: HashSet<_> = pairs.iter().collect();
+        assert_eq!(distinct.len(), pairs.len());
+        for (i, &(a, b)) in pairs.iter().take(15).enumerate() {
+            assert_eq!((a, b), (i, i + 1), "adjacent pairs come first");
+        }
+        let (small, total) = pair_schedule(64, 10);
+        assert_eq!(total, 2016);
+        assert_eq!(small.len(), 10, "budget caps the schedule");
+        // Deterministic: the schedule is part of the battery definition.
+        assert_eq!(small, pair_schedule(64, 10).0);
+    }
+
+    #[test]
+    fn sidak_preserves_tiny_minima_and_folds_typical_ones() {
+        assert!(sidak(1e-300, 6144) > 0.0);
+        assert!(sidak(1e-300, 6144) < 1e-290);
+        assert_eq!(sidak(0.0, 100), 0.0);
+        assert!((sidak(0.5, 1) - 0.5).abs() < 1e-12);
+        assert!(sidak(0.5, 100) > 0.999);
+        assert_eq!(sidak(1.0, 7), 1.0);
+        assert_eq!(sidak(0.3, 0), 1.0);
+    }
+
+    #[test]
+    fn buffer_interleave_round_robins_and_bounds_draws() {
+        let bufs = vec![vec![1u32, 4], vec![2, 5], vec![3, 6]];
+        let mut il = BufferInterleave::new(&bufs);
+        assert_eq!(il.available(), 6);
+        let got: Vec<u32> = (0..6).map(|_| il.next_u32()).collect();
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(il.available(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overdraw")]
+    fn buffer_interleave_refuses_to_wrap() {
+        let bufs = vec![vec![1u32], vec![2]];
+        let mut il = BufferInterleave::new(&bufs);
+        il.next_u32();
+        il.next_u32();
+        il.next_u32(); // would wrap — fabricated duplicates, so: panic
+    }
+
+    #[test]
+    fn independent_streams_pass_every_test() {
+        let streams = collect(8, 4096);
+        let (pairs, _) = pair_schedule(8, 28);
+        let r = cross_corr(&streams, &pairs, 4096);
+        assert_eq!(r.verdict(), Verdict::Pass, "{r:?}");
+        let r = cross_birthday(&streams, 2048, 26, 8).unwrap();
+        assert_eq!(r.verdict(), Verdict::Pass, "{r:?}");
+        let r = cross_rank(&streams, 32, 128).unwrap();
+        assert_eq!(r.verdict(), Verdict::Pass, "{r:?}");
+        let r = cross_hwd(&streams, &pairs, 4096, 4);
+        assert_eq!(r.verdict(), Verdict::Pass, "{r:?}");
+    }
+
+    #[test]
+    fn duplicated_stream_fails_corr_birthday_and_rank() {
+        let one = collect(1, 4096).pop().unwrap();
+        let streams = vec![one.clone(), one];
+        let pairs = vec![(0usize, 1usize)];
+        let r = cross_corr(&streams, &pairs, 4096);
+        assert_eq!(r.verdict(), Verdict::Fail, "{r:?}");
+        let r = cross_birthday(&streams, 2048, 26, 4).unwrap();
+        assert_eq!(r.verdict(), Verdict::Fail, "{r:?}");
+        let r = cross_rank(&streams, 32, 128).unwrap();
+        assert_eq!(r.verdict(), Verdict::Fail, "{r:?}");
+        let r = cross_hwd(&streams, &pairs, 4096, 4);
+        assert_eq!(r.verdict(), Verdict::Fail, "{r:?}");
+    }
+
+    #[test]
+    fn shifted_copy_fails_hwd_at_the_shift_lag() {
+        let base = collect(1, 4200).pop().unwrap();
+        let shifted: Vec<u32> = base.iter().skip(3).copied().collect();
+        let streams = vec![base, shifted];
+        let pairs = vec![(0usize, 1usize)];
+        let r = cross_hwd(&streams, &pairs, 4096, 4);
+        assert_eq!(r.verdict(), Verdict::Fail, "{r:?}");
+        assert!(r.detail.contains("lag=3") || r.detail.contains("lag=-3"), "{r:?}");
+    }
+
+    #[test]
+    fn undersized_buffers_fail_typed_not_silently_truncated() {
+        let streams = collect(2, 64);
+        assert!(matches!(
+            cross_birthday(&streams, 4096, 28, 8),
+            Err(Error::InvalidConfig(_))
+        ));
+        assert!(matches!(cross_rank(&streams, 32, 256), Err(Error::InvalidConfig(_))));
+    }
+}

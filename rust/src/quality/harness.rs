@@ -1,0 +1,172 @@
+//! Loadgen-style collection client: lease remote streams over TCP
+//! through [`RemoteSource`] across many concurrent sessions and bring
+//! their words home for scoring. The collection path is deliberately
+//! the tenant path — every stream is fetched in chunks no larger than
+//! `min(max_fill, max_chunk)` words (2048 by default), so a `ci`-profile
+//! run always takes at least two FILL round-trips per stream and exercises wire
+//! chunking, the reorder stage, per-lease continuation, and (with
+//! resumption enabled, which it is) the lease-replay machinery. A
+//! serve-layer bug that crosses tile boundaries between sessions shows
+//! up as a battery failure, not a lucky pass over in-process buffers.
+
+use std::time::Duration;
+
+use crate::coordinator::StreamSource;
+use crate::error::Error;
+use crate::serve::{loadgen, RemoteSource};
+
+/// How to reach the server and how hard to lean on it.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub addr: String,
+    /// Streams to score (ids `0..streams`); `0` means every stream the
+    /// server reports in its HELLO.
+    pub streams: usize,
+    /// Concurrent scoring sessions; stream `s` is leased by session
+    /// `s % sessions`.
+    pub sessions: usize,
+    pub connect_attempts: u32,
+    pub connect_backoff: Duration,
+    /// Per-FILL deadline stamped on every request (None = no deadline).
+    pub deadline: Option<Duration>,
+    /// Upper bound on words per FILL (further capped by the server's
+    /// `max_fill`). The default of 2048 keeps every `ci`-profile stream
+    /// (4096 words) at >= 2 round-trips so the chunking path is always
+    /// exercised; tests shrink it to force deeper chunking.
+    pub max_chunk: usize,
+}
+
+impl HarnessConfig {
+    pub fn new(addr: &str) -> Self {
+        Self {
+            addr: addr.to_string(),
+            streams: 0,
+            sessions: 8,
+            connect_attempts: 100,
+            connect_backoff: Duration::from_millis(100),
+            deadline: Some(Duration::from_secs(30)),
+            max_chunk: 2048,
+        }
+    }
+}
+
+/// What came back from the wire: per-stream word buffers (index =
+/// stream id) plus the serving context the QUALITY.json report records.
+pub struct Collected {
+    pub streams: Vec<Vec<u32>>,
+    pub engine: String,
+    pub sessions: usize,
+}
+
+/// Lease `streams` remote streams across `sessions` concurrent
+/// connections and collect `samples_per_stream` words from each.
+///
+/// A short-lived probe connection (closed with a clean BYE before any
+/// scoring session dials in) reads the server HELLO for the engine
+/// kind, stream count, and `max_fill` — so a server counting closed
+/// sessions sees `sessions + 1` in total. Scoring sessions then fetch
+/// their streams chunk by chunk; chunks of one stream stay on one
+/// session, so the words concatenate into exactly the sequence a tenant
+/// holding that lease would read.
+pub fn collect_remote(cfg: &HarnessConfig, samples_per_stream: usize) -> Result<Collected, Error> {
+    let probe = loadgen::connect_retry(&cfg.addr, cfg.connect_attempts, cfg.connect_backoff)?;
+    let info = probe.info().clone();
+    probe.bye()?;
+
+    let total = info.n_streams as usize;
+    let n = if cfg.streams == 0 { total } else { cfg.streams };
+    if n < 2 {
+        return Err(Error::InvalidConfig(format!(
+            "cross-stream battery needs >= 2 streams; asked for {n} (server has {total})"
+        )));
+    }
+    if n > total {
+        return Err(Error::InvalidConfig(format!(
+            "asked for {n} streams but server only serves {total}"
+        )));
+    }
+    let sessions = cfg.sessions.clamp(1, n);
+    // Cap chunks below the profile sizes so every stream takes multiple
+    // FILLs — the chunking/reorder path is part of what we're testing.
+    let chunk = (info.max_fill as usize).min(cfg.max_chunk).max(1);
+
+    let mut parts: Vec<Result<Vec<(usize, Vec<u32>)>, Error>> = Vec::with_capacity(sessions);
+    std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(sessions);
+        for sess in 0..sessions {
+            let addr = cfg.addr.as_str();
+            let deadline = cfg.deadline;
+            let (attempts, backoff) = (cfg.connect_attempts, cfg.connect_backoff);
+            handles.push(sc.spawn(move || {
+                let mut src = RemoteSource::connect(addr)?.with_resumption(attempts, backoff);
+                if let Some(d) = deadline {
+                    src = src.with_default_deadline(d);
+                }
+                let mut mine: Vec<(usize, Vec<u32>)> = Vec::new();
+                let mut s = sess;
+                while s < n {
+                    let mut buf = vec![0u32; samples_per_stream];
+                    let mut off = 0;
+                    while off < samples_per_stream {
+                        let take = chunk.min(samples_per_stream - off);
+                        src.fetch(s as u64, &mut buf[off..off + take])?;
+                        off += take;
+                    }
+                    mine.push((s, buf));
+                    s += sessions;
+                }
+                Ok(mine)
+            }));
+        }
+        for h in handles {
+            parts.push(
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Backend("quality harness session panicked".into()))),
+            );
+        }
+    });
+
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for part in parts {
+        for (s, buf) in part? {
+            streams[s] = buf;
+        }
+    }
+    Ok(Collected { streams, engine: info.engine, sessions })
+}
+
+/// Collect over the wire and score: the whole battery as one call. The
+/// returned report carries the server's engine kind and the session
+/// count actually used.
+pub fn run_remote(
+    cfg: &HarnessConfig,
+    profile: &super::Profile,
+) -> Result<super::QualityReport, Error> {
+    profile.validate()?;
+    let collected = collect_remote(cfg, profile.samples_per_stream)?;
+    let mut report = super::run_battery(&collected.streams, profile)?;
+    report.engine = collected.engine;
+    report.sessions = collected.sessions;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_tenant_shaped() {
+        let cfg = HarnessConfig::new("127.0.0.1:7000");
+        assert_eq!(cfg.sessions, 8);
+        assert_eq!(cfg.streams, 0, "0 = every served stream");
+        assert!(cfg.deadline.is_some(), "FILLs carry deadlines by default");
+    }
+
+    #[test]
+    fn unreachable_server_is_a_typed_protocol_error() {
+        let mut cfg = HarnessConfig::new("127.0.0.1:1");
+        cfg.connect_attempts = 1;
+        cfg.connect_backoff = Duration::from_millis(1);
+        assert!(matches!(collect_remote(&cfg, 64), Err(Error::Protocol(_))));
+    }
+}

@@ -1,0 +1,355 @@
+//! Cross-stream independence battery, run as a serve-layer consumer.
+//!
+//! The paper's central quality claim (Sec. 5.2) is TestU01-grade
+//! independence *across* sequences via the decorrelator — a property
+//! the single-stream battery in [`crate::stats`] cannot see: every one
+//! of its tests scores one sequence at a time, so a decorrelation
+//! regression (or a serve-layer bug that crosses tile boundaries
+//! between sessions) ships silently past it. This module is the
+//! cross-stream counterpart: four tests ([`cross::cross_corr`],
+//! [`cross::cross_birthday`], [`cross::cross_rank`],
+//! [`cross::cross_hwd`]) scored over per-stream buffers that the
+//! [`harness`] collects over loopback TCP through
+//! [`crate::serve::RemoteSource`] — multiple concurrent sessions,
+//! chunked FILLs, the reorder stage, lease replay — so the battery
+//! exercises the decorrelator *and* the wire path exactly as a tenant
+//! would. Two [`Profile`]s bound the budget: seconds-scale `ci` and
+//! offline `crush`. Results land in QUALITY.json (see
+//! [`QualityReport::to_json`]) next to BENCH_parallel.json so
+//! decorrelation regressions are caught like perf regressions.
+
+pub mod cross;
+pub mod harness;
+
+use std::collections::BTreeMap;
+
+use crate::error::Error;
+use crate::stats::{TestResult, Verdict};
+use crate::util::json::{self, Json};
+
+pub use cross::{pair_schedule, BufferInterleave};
+pub use harness::{collect_remote, run_remote, Collected, HarnessConfig};
+
+/// Sample counts and pair budgets for one battery run. All fields are
+/// public so tests (and future profiles) can compose shrunken variants;
+/// [`Profile::validate`] keeps any composition internally consistent.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    /// Words collected (and required) per stream.
+    pub samples_per_stream: usize,
+    /// Max pairs scored by `cross_corr`/`cross_hwd`; pairs beyond the
+    /// budget are *reported* as dropped, never silently truncated.
+    pub pair_budget: usize,
+    /// Words per stream entering each correlation coefficient.
+    pub corr_n: usize,
+    /// Birthdays per experiment, log₂ day-space, and repetitions.
+    pub birthday_m: usize,
+    pub birthday_t: u32,
+    pub birthday_reps: usize,
+    /// Matrix dimension (bits) and matrix count for the interleaved rank test.
+    pub rank_k: usize,
+    pub rank_nmat: usize,
+    /// Words per stream and max lag for the Hamming-weight probe.
+    pub hwd_n: usize,
+    pub hwd_maxlag: usize,
+}
+
+impl Profile {
+    /// Seconds-scale profile for CI: 4096 words/stream, 2048 pairs.
+    pub fn ci() -> Self {
+        Self {
+            name: "ci".into(),
+            samples_per_stream: 4096,
+            pair_budget: 2048,
+            corr_n: 4096,
+            birthday_m: 4096,
+            birthday_t: 28,
+            birthday_reps: 8,
+            rank_k: 32,
+            rank_nmat: 256,
+            hwd_n: 4096,
+            hwd_maxlag: 8,
+        }
+    }
+
+    /// Offline big-crush-style profile: 64Ki words/stream, 8192 pairs.
+    pub fn crush() -> Self {
+        Self {
+            name: "crush".into(),
+            samples_per_stream: 65536,
+            pair_budget: 8192,
+            corr_n: 16384,
+            birthday_m: 8192,
+            birthday_t: 30,
+            birthday_reps: 16,
+            rank_k: 64,
+            rank_nmat: 512,
+            hwd_n: 16384,
+            hwd_maxlag: 16,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ci" => Some(Self::ci()),
+            "crush" => Some(Self::crush()),
+            _ => None,
+        }
+    }
+
+    /// Internal consistency: every per-test budget must fit inside
+    /// `samples_per_stream`, and each statistic's asymptotics must hold.
+    pub fn validate(&self) -> Result<(), Error> {
+        let fail = |why: String| Err(Error::InvalidConfig(format!("profile {}: {why}", self.name)));
+        if self.samples_per_stream < 64 {
+            return fail(format!("samples_per_stream {} < 64", self.samples_per_stream));
+        }
+        if self.corr_n < 8 || self.corr_n > self.samples_per_stream {
+            return fail(format!(
+                "corr_n {} outside 8..={}",
+                self.corr_n, self.samples_per_stream
+            ));
+        }
+        if self.hwd_n < 8 || self.hwd_n > self.samples_per_stream {
+            return fail(format!("hwd_n {} outside 8..={}", self.hwd_n, self.samples_per_stream));
+        }
+        if self.hwd_maxlag >= self.hwd_n {
+            return fail(format!("hwd_maxlag {} >= hwd_n {}", self.hwd_maxlag, self.hwd_n));
+        }
+        if self.pair_budget == 0 {
+            return fail("pair_budget is 0".into());
+        }
+        if self.birthday_m < 16 || self.birthday_reps == 0 {
+            return fail(format!(
+                "birthday m={} reps={} too small",
+                self.birthday_m, self.birthday_reps
+            ));
+        }
+        if !(8..=32).contains(&self.birthday_t) {
+            return fail(format!("birthday_t {} outside 8..=32", self.birthday_t));
+        }
+        if !(8..=64).contains(&self.rank_k) || self.rank_nmat < 8 {
+            return fail(format!(
+                "rank k={} nmat={} outside supported range",
+                self.rank_k, self.rank_nmat
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One battery run over one set of collected streams: what was scored,
+/// under which budget, and the per-test p-values. Serialized to
+/// QUALITY.json by [`QualityReport::to_json`]; CI gates on `passed`.
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    /// Engine kind that produced the words (`native`, `sharded`, …) —
+    /// `local` when the battery scored in-process buffers.
+    pub engine: String,
+    pub profile: String,
+    pub streams: usize,
+    /// Concurrent scoring sessions the harness used (1 for local runs).
+    pub sessions: usize,
+    pub samples_per_stream: usize,
+    /// `C(streams, 2)` — every pair the budget *could* have scored.
+    pub pairs_total: u64,
+    /// Pairs actually scored; `pairs_total − pairs_scored` were dropped
+    /// by the budget and are reported as such.
+    pub pairs_scored: usize,
+    pub results: Vec<TestResult>,
+}
+
+impl QualityReport {
+    pub fn failures(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Fail).count()
+    }
+
+    pub fn suspicious(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Suspicious).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    pub fn pairs_dropped(&self) -> u64 {
+        self.pairs_total.saturating_sub(self.pairs_scored as u64)
+    }
+
+    pub fn summary(&self) -> String {
+        match self.failures() {
+            0 => format!(
+                "Pass ({} tests, {} suspicious, {} streams x {} sessions)",
+                self.results.len(),
+                self.suspicious(),
+                self.streams,
+                self.sessions
+            ),
+            k => {
+                let names: Vec<&str> = self
+                    .results
+                    .iter()
+                    .filter(|r| r.verdict() == Verdict::Fail)
+                    .map(|r| r.name.as_str())
+                    .collect();
+                format!("{k} failures ({})", names.join(", "))
+            }
+        }
+    }
+
+    /// The QUALITY.json document. `schema: 1`; CI gates on `passed`
+    /// plus the per-test p-values being well-formed.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = BTreeMap::new();
+        pairs.insert("total".to_string(), json::uint(self.pairs_total));
+        pairs.insert("scored".to_string(), json::uint(self.pairs_scored as u64));
+        pairs.insert("dropped".to_string(), json::uint(self.pairs_dropped()));
+        let tests: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("p_value".to_string(), json::num(r.p_value));
+                o.insert("verdict".to_string(), Json::Str(r.verdict().to_string()));
+                o.insert("detail".to_string(), Json::Str(r.detail.clone()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("schema".to_string(), json::uint(1));
+        top.insert("engine".to_string(), Json::Str(self.engine.clone()));
+        top.insert("profile".to_string(), Json::Str(self.profile.clone()));
+        top.insert("streams".to_string(), json::uint(self.streams as u64));
+        top.insert("sessions".to_string(), json::uint(self.sessions as u64));
+        top.insert(
+            "samples_per_stream".to_string(),
+            json::uint(self.samples_per_stream as u64),
+        );
+        top.insert("pairs".to_string(), Json::Obj(pairs));
+        top.insert("tests".to_string(), Json::Arr(tests));
+        top.insert("failures".to_string(), json::uint(self.failures() as u64));
+        top.insert("suspicious".to_string(), json::uint(self.suspicious() as u64));
+        top.insert("passed".to_string(), Json::Bool(self.passed()));
+        Json::Obj(top)
+    }
+}
+
+/// Score collected per-stream buffers under a profile. Pure in the
+/// buffers: no generator state, no wall clock — two runs over the same
+/// words produce the same report. The returned report carries
+/// `engine: "local"` / `sessions: 1`; the harness overwrites both with
+/// what the server actually told it.
+pub fn run_battery(streams: &[Vec<u32>], profile: &Profile) -> Result<QualityReport, Error> {
+    profile.validate()?;
+    if streams.len() < 2 {
+        return Err(Error::InvalidConfig(format!(
+            "cross-stream battery needs >= 2 streams, got {}",
+            streams.len()
+        )));
+    }
+    let min_len = streams.iter().map(Vec::len).min().unwrap_or(0);
+    if min_len < profile.samples_per_stream {
+        return Err(Error::InvalidConfig(format!(
+            "profile {} needs {} words per stream; shortest collected stream has {min_len}",
+            profile.name, profile.samples_per_stream
+        )));
+    }
+    let (pairs, pairs_total) = pair_schedule(streams.len(), profile.pair_budget);
+    let results = vec![
+        cross::cross_corr(streams, &pairs, profile.corr_n),
+        cross::cross_birthday(streams, profile.birthday_m, profile.birthday_t, profile.birthday_reps)?,
+        cross::cross_rank(streams, profile.rank_k, profile.rank_nmat)?,
+        cross::cross_hwd(streams, &pairs, profile.hwd_n, profile.hwd_maxlag),
+    ];
+    Ok(QualityReport {
+        engine: "local".into(),
+        profile: profile.name.clone(),
+        streams: streams.len(),
+        sessions: 1,
+        samples_per_stream: profile.samples_per_stream,
+        pairs_total,
+        pairs_scored: pairs.len(),
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng32, ThunderingStream};
+
+    fn collect(n_streams: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n_streams)
+            .map(|i| {
+                let mut g = ThunderingStream::new(7, i as u64);
+                (0..len).map(|_| g.next_u32()).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn profiles_parse_and_validate() {
+        assert!(Profile::parse("ci").is_some());
+        assert!(Profile::parse("crush").is_some());
+        assert!(Profile::parse("huge").is_none());
+        Profile::ci().validate().unwrap();
+        Profile::crush().validate().unwrap();
+        let mut bad = Profile::ci();
+        bad.corr_n = bad.samples_per_stream + 1;
+        assert!(matches!(bad.validate(), Err(Error::InvalidConfig(_))));
+        let mut bad = Profile::ci();
+        bad.hwd_maxlag = bad.hwd_n;
+        assert!(matches!(bad.validate(), Err(Error::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn battery_passes_decorrelated_streams_and_reports_the_budget() {
+        let streams = collect(16, 4096);
+        let report = run_battery(&streams, &Profile::ci()).unwrap();
+        assert!(report.passed(), "{}", report.summary());
+        assert_eq!(report.results.len(), 4);
+        assert_eq!(report.pairs_total, 120);
+        assert_eq!(report.pairs_scored, 120, "budget above C(n,2) drops nothing");
+        assert_eq!(report.pairs_dropped(), 0);
+    }
+
+    #[test]
+    fn battery_rejects_undersized_input_with_typed_errors() {
+        let streams = collect(16, 64);
+        assert!(matches!(
+            run_battery(&streams, &Profile::ci()),
+            Err(Error::InvalidConfig(_))
+        ));
+        let one = collect(1, 4096);
+        assert!(matches!(run_battery(&one, &Profile::ci()), Err(Error::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn quality_json_schema_holds() {
+        let streams = collect(8, 4096);
+        let mut report = run_battery(&streams, &Profile::ci()).unwrap();
+        report.engine = "native".into();
+        report.sessions = 8;
+        let doc = report.to_json().pretty();
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("engine").and_then(Json::as_str), Some("native"));
+        assert_eq!(v.get("profile").and_then(Json::as_str), Some("ci"));
+        assert_eq!(v.get("streams").and_then(Json::as_u64), Some(8));
+        assert_eq!(v.get("sessions").and_then(Json::as_u64), Some(8));
+        let pairs = v.get("pairs").unwrap();
+        assert_eq!(pairs.get("total").and_then(Json::as_u64), Some(28));
+        assert_eq!(pairs.get("dropped").and_then(Json::as_u64), Some(0));
+        let tests = v.get("tests").and_then(Json::as_arr).unwrap();
+        assert_eq!(tests.len(), 4);
+        for t in tests {
+            let p = t.get("p_value").and_then(Json::as_f64).unwrap();
+            assert!((0.0..=1.0).contains(&p));
+            assert!(t.get("name").and_then(Json::as_str).is_some());
+            assert!(t.get("verdict").and_then(Json::as_str).is_some());
+        }
+        assert_eq!(v.get("passed"), Some(&Json::Bool(true)));
+    }
+}

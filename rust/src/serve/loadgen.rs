@@ -143,7 +143,11 @@ impl LoadgenReport {
 /// Dial with a bounded retry schedule: `attempts` tries, `backoff`
 /// apart. The final failure surfaces typed, naming the schedule, so a
 /// dead endpoint is a loud error — not an unbounded sleep loop.
-fn connect_retry(addr: &str, attempts: u32, backoff: Duration) -> Result<RemoteClient, Error> {
+pub(crate) fn connect_retry(
+    addr: &str,
+    attempts: u32,
+    backoff: Duration,
+) -> Result<RemoteClient, Error> {
     let attempts = attempts.max(1);
     let mut last = None;
     for i in 0..attempts {

@@ -1,6 +1,8 @@
 //! Pairwise inter-stream correlation — Pearson, Spearman rank, and Kendall
-//! rank coefficients (paper Sec. 5.2.2, Table 3).
+//! rank coefficients (paper Sec. 5.2.2, Table 3) — plus the matching
+//! independence-null p-values the cross-stream battery folds over pairs.
 
+use super::special::normal_two_sided;
 use crate::prng::Prng32;
 
 /// Pearson product-moment correlation of two equal-length samples.
@@ -128,6 +130,29 @@ fn merge_count(v: &mut [f64], buf: &mut [f64]) -> u64 {
     inv
 }
 
+/// Two-sided p-value for a Pearson (or Spearman) coefficient of `n`
+/// samples under the independence null, via the Fisher z-transform:
+/// `atanh(r)·√(n−3)` is asymptotically standard normal. `r = ±1`
+/// (e.g. two handles on the same stream) collapses to p = 0.
+pub fn fisher_p(r: f64, n: usize) -> f64 {
+    if n < 4 {
+        return 1.0;
+    }
+    let z = r.clamp(-1.0, 1.0).atanh() * ((n - 3) as f64).sqrt();
+    normal_two_sided(z)
+}
+
+/// Two-sided p-value for a Kendall tau of `n` samples under the
+/// independence null: `z = 3τ·√(n(n−1)) / √(2(2n+5))`.
+pub fn kendall_p(tau: f64, n: usize) -> f64 {
+    if n < 2 {
+        return 1.0;
+    }
+    let nf = n as f64;
+    let z = 3.0 * tau * (nf * (nf - 1.0)).sqrt() / (2.0 * (2.0 * nf + 5.0)).sqrt();
+    normal_two_sided(z)
+}
+
 /// All three coefficients for a pair of generators over `n` draws.
 pub fn correlations(a: &mut dyn Prng32, b: &mut dyn Prng32, n: usize) -> (f64, f64, f64) {
     let x: Vec<f64> = (0..n).map(|_| a.next_u32() as f64).collect();
@@ -227,6 +252,24 @@ mod tests {
         let mut b = crate::prng::ThunderingStream::new(42, 1);
         let (p, s, k) = correlations(&mut a, &mut b, 4096);
         assert!(p.abs() < 0.06 && s.abs() < 0.06 && k.abs() < 0.06, "{p} {s} {k}");
+    }
+
+    #[test]
+    fn p_values_match_the_null_and_the_extremes() {
+        // Perfect correlation is infinitely significant.
+        assert_eq!(fisher_p(1.0, 4096), 0.0);
+        assert_eq!(fisher_p(-1.0, 4096), 0.0);
+        assert!(kendall_p(1.0, 4096) < 1e-300);
+        // Zero coefficient is maximally unsurprising.
+        assert!((fisher_p(0.0, 4096) - 1.0).abs() < 1e-6);
+        assert!((kendall_p(0.0, 4096) - 1.0).abs() < 1e-6);
+        // A typical-null coefficient (|r| ≈ 1/√n) is unremarkable, a
+        // far-tail one is not.
+        assert!(fisher_p(1.0 / 64.0, 4096) > 0.3);
+        assert!(fisher_p(0.2, 4096) < 1e-10);
+        // Degenerate sample sizes return the benign p.
+        assert_eq!(fisher_p(0.9, 3), 1.0);
+        assert_eq!(kendall_p(0.9, 1), 1.0);
     }
 
     #[test]

@@ -1,0 +1,20 @@
+//! FAIL fixture (scanned as `serve/session.rs`): the condvar wait parks
+//! while `routes` (rank 10) is still held — the wait atomically
+//! releases only its own `session` guard, so a notifier that needs
+//! `routes` deadlocks against the sleeper.
+
+pub fn drain(server: &Server, sess: &Session, cv: &Condvar) {
+    let routes = server.lock_routes();
+    let mut st = sess.lock();
+    st = st.wait(&cv);
+    drop(st);
+    drop(routes);
+}
+
+pub fn drain_timeout(server: &Server, sess: &Session, cv: &Condvar, timeout: Duration) {
+    let routes = server.lock_routes();
+    let mut st = sess.lock();
+    st = st.wait_timeout_checked(&cv, timeout);
+    drop(st);
+    drop(routes);
+}

@@ -1,0 +1,19 @@
+//! PASS fixture (scanned as `serve/session.rs`): the sanctioned parking
+//! idioms — wait with only the wait's own guard held (atomically
+//! released), wait after the second lock is dropped, and the timeout
+//! variants under the same discipline.
+
+pub fn drain(sess: &Session, cv: &Condvar) {
+    let mut st = sess.lock();
+    st = st.wait(&cv);
+    drop(st);
+}
+
+pub fn drain_after_release(server: &Server, sess: &Session, cv: &Condvar, timeout: Duration) {
+    let routes = server.lock_routes();
+    drop(routes);
+    let mut st = sess.lock();
+    st = st.wait_timeout(&cv, timeout);
+    st = st.wait_timeout_checked(&cv, timeout);
+    drop(st);
+}

@@ -88,6 +88,18 @@ fn unranked_lock_fixture_fails_in_the_core_only() {
 }
 
 #[test]
+fn wait_held_fixture_fails_on_the_second_lock_only() {
+    let fail = scan("serve/session.rs", include_str!("check_fixtures/wait_held_fail.rs"));
+    assert_eq!(count(&fail, Lint::WaitHeld, false), 2, "{fail:?}");
+
+    let pass = scan("serve/session.rs", include_str!("check_fixtures/wait_held_pass.rs"));
+    assert_eq!(count(&pass, Lint::WaitHeld, false), 0, "{pass:?}");
+    // The fixtures park in declared order — the wait audit is the only
+    // thing separating them.
+    assert_eq!(count(&fail, Lint::LockOrder, false), 0, "{fail:?}");
+}
+
+#[test]
 fn pragma_fixture_fails_every_malformed_shape() {
     let f = scan("serve/any.rs", include_str!("check_fixtures/pragma_fail.rs"));
     assert_eq!(count(&f, Lint::Pragma, false), 3, "{f:?}");

@@ -1,0 +1,88 @@
+//! Adversarial self-test for the cross-stream battery (ISSUE 10): a
+//! battery that cannot *reject* known dependence is untrustworthy, so
+//! each deliberately dependent source here must FAIL the shipped `ci`
+//! profile — two handles on the same stream, a pair of same-seed
+//! un-decorrelated LCGs (the paper's Table 3 baseline defect), and a
+//! shift-by-k copy. The control (properly decorrelated ThundeRiNG
+//! streams) must pass the very same profile.
+
+use thundering::prng::thundering::{Ablation, AblatedStream};
+use thundering::prng::{Prng32, ThunderingStream};
+use thundering::quality::{run_battery, Profile};
+use thundering::stats::Verdict;
+
+fn drain(g: &mut dyn Prng32, len: usize) -> Vec<u32> {
+    (0..len).map(|_| g.next_u32()).collect()
+}
+
+fn failed_names(report: &thundering::quality::QualityReport) -> Vec<String> {
+    report
+        .results
+        .iter()
+        .filter(|r| r.verdict() == Verdict::Fail)
+        .map(|r| r.name.clone())
+        .collect()
+}
+
+#[test]
+fn control_decorrelated_streams_pass_the_ci_profile() {
+    let streams: Vec<Vec<u32>> = (0..8)
+        .map(|i| drain(&mut ThunderingStream::new(42, i as u64), 4096))
+        .collect();
+    let report = run_battery(&streams, &Profile::ci()).unwrap();
+    assert!(report.passed(), "control must pass: {}", report.summary());
+    assert_eq!(report.results.len(), 4);
+}
+
+#[test]
+fn two_handles_on_the_same_stream_fail() {
+    // The serve-layer bug this models: two leases that alias one stream.
+    let one = drain(&mut ThunderingStream::new(42, 7), 4096);
+    let streams = vec![one.clone(), one];
+    let report = run_battery(&streams, &Profile::ci()).unwrap();
+    assert!(!report.passed(), "identical streams must fail: {}", report.summary());
+    let failed = failed_names(&report);
+    for name in ["cross_corr", "cross_birthday", "cross_rank", "cross_hwd"] {
+        assert!(failed.iter().any(|f| f == name), "{name} should fail, got {failed:?}");
+    }
+}
+
+#[test]
+fn same_seed_undecorrelated_lcg_pair_fails() {
+    // Table 3's motivating defect: truncated same-root LCG streams whose
+    // leaf constants nearly agree in the top bits are ~perfectly
+    // correlated (this pair sits at Pearson ~0.999) — exactly what the
+    // decorrelator exists to fix, and exactly what the battery must see.
+    let a = drain(&mut AblatedStream::new(42, 0, Ablation::LcgBaseline), 4096);
+    let b = drain(&mut AblatedStream::new(42, 1292, Ablation::LcgBaseline), 4096);
+    let report = run_battery(&[a, b], &Profile::ci()).unwrap();
+    assert!(!report.passed(), "correlated LCG pair must fail: {}", report.summary());
+    let failed = failed_names(&report);
+    assert!(
+        failed.iter().any(|f| f == "cross_corr"),
+        "the correlation test should catch the LCG pair, got {failed:?}"
+    );
+}
+
+#[test]
+fn shift_by_k_copy_fails() {
+    let base = drain(&mut ThunderingStream::new(42, 3), 4200);
+    let shifted: Vec<u32> = base[3..3 + 4096].to_vec();
+    let report = run_battery(&[base[..4096].to_vec(), shifted], &Profile::ci()).unwrap();
+    assert!(!report.passed(), "shifted copy must fail: {}", report.summary());
+    let failed = failed_names(&report);
+    assert!(
+        failed.iter().any(|f| f == "cross_hwd"),
+        "the lagged HWD probe should catch the shift, got {failed:?}"
+    );
+}
+
+#[test]
+fn decorrelated_ablation_column_passes_where_the_baseline_fails() {
+    // The battery reproduces the paper's ablation story end to end: the
+    // same stream pair under the full pipeline is independent.
+    let a = drain(&mut AblatedStream::new(42, 0, Ablation::Full), 4096);
+    let b = drain(&mut AblatedStream::new(42, 1292, Ablation::Full), 4096);
+    let report = run_battery(&[a, b], &Profile::ci()).unwrap();
+    assert!(report.passed(), "full-pipeline pair must pass: {}", report.summary());
+}

@@ -1,0 +1,90 @@
+//! End-to-end quality-harness test (ISSUE 10): an in-process server per
+//! engine, scored by the real collection client — 256 remote streams
+//! across 8 concurrent TCP sessions, each stream fetched in multiple
+//! chunked FILLs — then the full cross-stream battery over the words
+//! that actually crossed the wire. A shrunken (but `validate`d) profile
+//! keeps the debug-build runtime in CI territory; the shipped `ci`
+//! profile runs against a release server in the CI quality job.
+
+use thundering::quality::{self, HarnessConfig, Profile};
+use thundering::serve::{ServeConfig, Server};
+use thundering::{Engine, EngineBuilder};
+
+/// `ci` with every budget shrunk ~4x — still four tests; the harness's
+/// chunk cap is shrunk alongside (256 words) so each 1024-word stream
+/// still takes 4 FILL round-trips through the wire chunking path.
+fn shrunken_profile() -> Profile {
+    let mut p = Profile::ci();
+    p.name = "ci-shrunk".into();
+    p.samples_per_stream = 1024;
+    p.pair_budget = 64;
+    p.corr_n = 1024;
+    p.birthday_m = 2048;
+    p.birthday_t = 26;
+    p.birthday_reps = 4;
+    p.rank_nmat = 128;
+    p.hwd_n = 1024;
+    p.hwd_maxlag = 4;
+    p.validate().expect("shrunken profile is internally consistent");
+    p
+}
+
+fn score_engine(engine: Engine, expect_kind: &str) {
+    let source = EngineBuilder::new(256)
+        .engine(engine)
+        .group_width(32)
+        .lag_window(u64::MAX / 2)
+        .build_arc()
+        .expect("engine builds");
+    let mut server =
+        Server::start(source, "127.0.0.1:0", ServeConfig::default()).expect("server starts");
+    let addr = server.local_addr().to_string();
+
+    let mut cfg = HarnessConfig::new(&addr);
+    cfg.streams = 256;
+    cfg.sessions = 8;
+    cfg.connect_attempts = 3;
+    cfg.max_chunk = 256; // 4 FILLs per stream: chunking + per-lease continuation
+    let report = quality::run_remote(&cfg, &shrunken_profile()).expect("harness scores");
+    server.shutdown();
+
+    assert!(report.passed(), "[{expect_kind}] battery failed: {}", report.summary());
+    assert_eq!(report.engine, expect_kind, "engine kind rides the HELLO into the report");
+    assert_eq!(report.streams, 256);
+    assert_eq!(report.sessions, 8);
+    assert_eq!(report.results.len(), 4);
+    assert_eq!(report.pairs_scored, 64, "budget-capped schedule");
+    assert_eq!(report.pairs_total, 256 * 255 / 2);
+    assert!(report.pairs_dropped() > 0, "dropped pairs are reported, not hidden");
+}
+
+#[test]
+fn remote_battery_passes_on_the_native_engine() {
+    score_engine(Engine::Native, "native");
+}
+
+#[test]
+fn remote_battery_passes_on_the_sharded_engine() {
+    score_engine(Engine::Sharded, "sharded");
+}
+
+#[test]
+fn harness_rejects_oversubscription_with_a_typed_error() {
+    let source = EngineBuilder::new(64)
+        .engine(Engine::Native)
+        .group_width(32)
+        .build_arc()
+        .expect("engine builds");
+    let mut server =
+        Server::start(source, "127.0.0.1:0", ServeConfig::default()).expect("server starts");
+    let addr = server.local_addr().to_string();
+
+    let mut cfg = HarnessConfig::new(&addr);
+    cfg.streams = 128; // server only has 64
+    let err = quality::collect_remote(&cfg, 64).unwrap_err();
+    server.shutdown();
+    assert!(
+        matches!(err, thundering::Error::InvalidConfig(_)),
+        "oversubscription is a config error, got {err:?}"
+    );
+}
